@@ -1,0 +1,54 @@
+//! Micro-intrusive Begin/End API demo: a "training script" talks to the
+//! GPOEO daemon over a Unix socket, exactly like the paper's two-call
+//! instrumentation (§2.2.2).
+//!
+//!     cargo run --release --example daemon_client
+
+use gpoeo::coordinator::daemon::Daemon;
+use gpoeo::sim::Spec;
+use std::io::{BufRead, BufReader, Write};
+use std::os::unix::net::UnixStream;
+use std::sync::Arc;
+
+fn main() -> anyhow::Result<()> {
+    let sock = std::env::temp_dir().join(format!("gpoeo-demo-{}.sock", std::process::id()));
+    let spec = Arc::new(Spec::load_default()?);
+    let daemon = Daemon::new(spec);
+    let sock_srv = sock.clone();
+    std::thread::spawn(move || {
+        let _ = daemon.serve(&sock_srv);
+    });
+    while !sock.exists() {
+        std::thread::sleep(std::time::Duration::from_millis(10));
+    }
+
+    // --- the "training script" side -----------------------------------
+    let stream = UnixStream::connect(&sock)?;
+    let mut w = stream.try_clone()?;
+    let mut r = BufReader::new(stream);
+    let mut line = String::new();
+
+    writeln!(w, "BEGIN AI_OBJ 300")?; // Begin API at the training region
+    r.read_line(&mut line)?;
+    print!("daemon: {line}");
+
+    for i in 0..8 {
+        line.clear();
+        writeln!(w, "STATUS")?;
+        r.read_line(&mut line)?;
+        let f: Vec<&str> = line.split_whitespace().collect();
+        if f.len() >= 6 {
+            println!(
+                "poll {i}: iter {:>4}  t={:>7}s  E={:>9}J  clocks=({}, {})",
+                f[1], f[2], f[3], f[4], f[5]
+            );
+        }
+    }
+
+    line.clear();
+    writeln!(w, "END")?; // End API
+    r.read_line(&mut line)?;
+    print!("daemon: {line}");
+    writeln!(w, "QUIT")?;
+    Ok(())
+}

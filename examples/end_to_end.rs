@@ -1,0 +1,46 @@
+//! End-to-end driver: the full GPOEO system on the paper's entire 71-app
+//! evaluation (AIBench + ThunderSVM/GBM + benchmarking-gnns), producing
+//! the headline metric of §1/§7 — recorded in EXPERIMENTS.md.
+//!
+//!     cargo run --release --example end_to_end [--quick]
+//!
+//! All three layers compose here: the L3 controller drives the simulated
+//! device; period detection runs the AOT-compiled Pallas periodogram via
+//! PJRT; gear prediction runs the AOT-compiled GBT ensembles via PJRT.
+
+use gpoeo::experiments::online;
+use gpoeo::model::Predictor;
+use gpoeo::sim::Spec;
+use std::sync::Arc;
+
+fn main() -> anyhow::Result<()> {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let spec = Arc::new(Spec::load_default()?);
+    let predictor = Arc::new(Predictor::load_best()?);
+    println!("prediction backend: {}", predictor.backend_name());
+
+    let t0 = std::time::Instant::now();
+    let medium = online::fig13(&spec, &predictor, quick);
+    print!("{}", medium.table.to_text());
+    medium.print_summary("paper: 14.7% / 4.6% / 6.8%");
+
+    let gnns = online::fig14(&spec, &predictor, quick);
+    print!("{}", gnns.table.to_text());
+    gnns.print_summary("paper: 16.6% / 5.2% / 7.8%");
+
+    let n = medium.n + gnns.n;
+    let saving = (medium.gpoeo_mean_saving * medium.n as f64
+        + gnns.gpoeo_mean_saving * gnns.n as f64)
+        / n as f64;
+    let slow = (medium.gpoeo_mean_slowdown * medium.n as f64
+        + gnns.gpoeo_mean_slowdown * gnns.n as f64)
+        / n as f64;
+    println!(
+        "\n=== HEADLINE: {} apps, mean energy saving {:.1}% (paper 16.2%), mean slowdown {:.1}% (paper 5.1%) ===",
+        n,
+        saving * 100.0,
+        slow * 100.0
+    );
+    println!("wall time: {:.1}s (simulating {} training runs)", t0.elapsed().as_secs_f64(), 3 * n);
+    Ok(())
+}

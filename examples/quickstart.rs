@@ -1,0 +1,45 @@
+//! Quickstart: attach GPOEO to one training workload and report the
+//! energy saving against the NVIDIA default scheduling strategy.
+//!
+//!     cargo run --release --example quickstart [APP]
+//!
+//! Requires `make artifacts` (AOT-compiled prediction models); without
+//! them the controller transparently falls back to native GBT inference.
+
+use gpoeo::coordinator::{run_policy, savings, DefaultPolicy, Gpoeo, GpoeoCfg};
+use gpoeo::model::Predictor;
+use gpoeo::sim::{find_app, Spec};
+use std::sync::Arc;
+
+fn main() -> anyhow::Result<()> {
+    let app_name = std::env::args().nth(1).unwrap_or_else(|| "AI_I2T".into());
+    let spec = Arc::new(Spec::load_default()?);
+    let app = find_app(&spec, &app_name)?;
+    let predictor = Arc::new(Predictor::load_best()?);
+    println!("prediction backend: {}", predictor.backend_name());
+
+    let n_iters = 400;
+    let base = run_policy(&spec, &app, &mut DefaultPolicy { ts: 0.025 }, n_iters);
+    let mut controller = Gpoeo::new(GpoeoCfg::default(), predictor);
+    let run = run_policy(&spec, &app, &mut controller, n_iters);
+    let s = savings(&base, &run);
+
+    println!(
+        "{app_name}: {} iterations  energy {:.0} J -> {:.0} J  time {:.0} s -> {:.0} s",
+        n_iters, base.energy_j, run.energy_j, base.time_s, run.time_s
+    );
+    println!(
+        "energy saving {:+.1}%  slowdown {:+.1}%  ED2P saving {:+.1}%",
+        s.energy_saving * 100.0,
+        s.slowdown * 100.0,
+        s.ed2p_saving * 100.0
+    );
+    println!(
+        "final clocks: SM {} MHz, mem {} MHz  (period detected {:.3} s, true {:.3} s)",
+        spec.gears.sm_mhz(run.final_sm_gear),
+        spec.gears.mem_mhz_of(run.final_mem_gear),
+        controller.stats.detected_period_s,
+        controller.stats.true_period_s,
+    );
+    Ok(())
+}

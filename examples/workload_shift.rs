@@ -1,0 +1,53 @@
+//! Adaptivity demo: the workload changes mid-run (a new training job
+//! takes the GPU). The controller's energy-characteristic monitor
+//! (Fig. 4 step ⑧) detects the fluctuation, resets to default clocks and
+//! re-optimizes for the new workload.
+//!
+//!     cargo run --release --example workload_shift
+
+use gpoeo::coordinator::{Gpoeo, GpoeoCfg, Policy};
+use gpoeo::model::Predictor;
+use gpoeo::sim::{find_app, SimGpu, Spec};
+use std::sync::Arc;
+
+fn main() -> anyhow::Result<()> {
+    let spec = Arc::new(Spec::load_default()?);
+    let predictor = Arc::new(Predictor::load_best()?);
+    let first = find_app(&spec, "SBM_GIN")?; // compute-bound GNN
+    let second = find_app(&spec, "CLB_MLP")?; // memory-bound MLP
+
+    let mut gpu = SimGpu::new(spec.clone(), first);
+    let mut ctl = Gpoeo::new(GpoeoCfg::default(), predictor);
+
+    // Phase 1: optimize the first workload.
+    while gpu.time_s() < 120.0 {
+        ctl.tick(&mut gpu);
+    }
+    println!(
+        "t=120s  app=SBM_GIN     SM {} MHz, mem {} MHz (reoptimizations: {})",
+        spec.gears.sm_mhz(gpu.sm_gear()),
+        spec.gears.mem_mhz_of(gpu.mem_gear()),
+        ctl.stats.reoptimizations
+    );
+    let gear_first = gpu.sm_gear();
+
+    // Phase 2: the workload changes under the controller's feet.
+    gpu.swap_app(second);
+    println!("t=120s  >>> workload swapped to CLB_MLP <<<");
+    while gpu.time_s() < 300.0 {
+        ctl.tick(&mut gpu);
+    }
+    println!(
+        "t=300s  app=CLB_MLP     SM {} MHz, mem {} MHz (reoptimizations: {})",
+        spec.gears.sm_mhz(gpu.sm_gear()),
+        spec.gears.mem_mhz_of(gpu.mem_gear()),
+        ctl.stats.reoptimizations
+    );
+    assert!(
+        ctl.stats.reoptimizations >= 1,
+        "monitor must trigger a re-optimization after the swap"
+    );
+    assert_ne!(gear_first, gpu.sm_gear(), "new workload, new operating point");
+    println!("monitor correctly re-optimized after the workload shift ✓");
+    Ok(())
+}

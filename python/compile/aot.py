@@ -1,0 +1,201 @@
+"""AOT pipeline: train the four GBT models, lower the L2 graphs to HLO
+text, and write every artifact the Rust runtime consumes.
+
+Run via ``make artifacts`` (idempotent — re-trains only when inputs are
+newer or ``--force`` is given):
+
+  artifacts/
+    periodogram_1024.hlo.txt   f32[1024] -> (f32[512],)
+    predictor_sm.hlo.txt       f32[16] -> (f32[99] eng, f32[99] time)
+    predictor_mem.hlo.txt      f32[16] -> (f32[5]  eng, f32[5]  time)
+    gbt_sm_eng.json / gbt_sm_time.json / gbt_mem_eng.json / gbt_mem_time.json
+    meta.json                  gear tables, feature names, val errors
+    crosscheck.json            Python-vs-Rust ground-truth pinning data
+
+HLO *text* is the interchange format (not serialized protos): jax >= 0.5
+emits 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
+parser reassigns ids. See /opt/xla-example/README.md.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+import numpy as np
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+from compile import gbt, simdata  # noqa: E402
+from compile.model import make_predictor, periodogram_1024  # noqa: E402
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (see module docstring)."""
+    from jax._src.lib import xla_client as xc
+
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    # print_large_constants: the default elides array literals as "{...}",
+    # which the 0.5.1 text parser silently reads back as zeros/NaN. Every
+    # baked tree tensor rides as a large constant, so this flag is load-
+    # bearing (rust/examples/probe_hlo.rs documents the failure mode).
+    return comp.as_hlo_text(print_large_constants=True)
+
+
+def train_models(spec: simdata.Spec, out_dir: str, force: bool) -> dict:
+    """Train (or load cached) eng/time models for SM and memory clocks."""
+    names = ["sm_eng", "sm_time", "mem_eng", "mem_time"]
+    paths = {n: os.path.join(out_dir, f"gbt_{n}.json") for n in names}
+    if not force and all(os.path.exists(p) for p in paths.values()):
+        models = {}
+        for n in names:
+            with open(paths[n]) as f:
+                models[n] = gbt.GbtModel.from_json(json.load(f))
+        print("gbt: loaded cached models")
+        return models
+
+    print("gbt: generating training data from the analytic ground truth ...")
+    t0 = time.time()
+    data = simdata.training_data(spec, noise_replicas=2)
+    print(f"gbt: data ready in {time.time() - t0:.1f}s "
+          f"(sm rows={len(data['sm_eng'][1])}, mem rows={len(data['mem_eng'][1])})")
+
+    # The paper tunes hyper-parameters by grid search (§4.3.3). The memory
+    # models are tiny, so they get the full grid; the SM models use a
+    # two-point grid to keep `make artifacts` fast.
+    grid_small = [
+        dict(n_trees=90, max_depth=5, lr=0.12, min_child=8),
+        dict(n_trees=60, max_depth=6, lr=0.15, min_child=8),
+    ]
+    grid_mem = grid_small + [
+        dict(n_trees=120, max_depth=4, lr=0.10, min_child=4),
+        dict(n_trees=60, max_depth=4, lr=0.20, min_child=4),
+    ]
+    models = {}
+    for n in names:
+        X, y = data[n]
+        grid = grid_mem if n.startswith("mem") else grid_small
+        t0 = time.time()
+        params, val_err = gbt.grid_search(X, y, grid)
+        m = gbt.train(X, y, meta={"target": n, "val_mae": val_err, "params": params}, **params)
+        m.save(paths[n])
+        print(f"gbt: {n}: params={params} val_mae={val_err:.4f} ({time.time() - t0:.1f}s)")
+        models[n] = m
+    return models
+
+
+def self_check(spec: simdata.Spec, models: dict) -> dict:
+    """Kernel-vs-ref and predictor-vs-model assertions, plus held-out
+    accuracy on the *test* suites (the paper's Figs. 9-12 preview)."""
+    import jax.numpy as jnp
+
+    from compile.kernels.ref import gbt_eval_ref, periodogram_ref
+
+    # Periodogram kernel vs oracle.
+    x = np.sin(np.arange(1024) * 0.37) + 0.2 * np.cos(np.arange(1024) * 1.1)
+    a = np.asarray(periodogram_1024(jnp.asarray(x, jnp.float32))[0])
+    b = np.asarray(periodogram_ref(jnp.asarray(x, jnp.float32)))
+    per_err = float(np.max(np.abs(a - b)) / np.max(b))
+    assert per_err < 1e-3, f"periodogram kernel mismatch: {per_err}"
+
+    # Predictor (pallas path) vs plain model on one app.
+    app = simdata.materialize_suite(spec, "aibench")[0]
+    sm_norms = np.array([simdata.gear_norm_sm(spec, g) for g in spec.sm_gears()])
+    pred = make_predictor(models["sm_eng"], models["sm_time"], sm_norms)
+    eng, tim = pred(jnp.asarray(app.features, jnp.float32))
+    X = np.concatenate([sm_norms[:, None], np.tile(app.features, (len(sm_norms), 1))], axis=1)
+    eng_np = models["sm_eng"].predict(X)
+    tim_np = models["sm_time"].predict(X)
+    assert float(np.max(np.abs(np.asarray(eng) - eng_np))) < 1e-4
+    assert float(np.max(np.abs(np.asarray(tim) - tim_np))) < 1e-4
+
+    # Held-out accuracy (mean APE, clean features) over the test suites.
+    errs = {"eng": [], "time": []}
+    for suite in ("aibench", "gnns", "classical"):
+        for app in simdata.materialize_suite(spec, suite):
+            Xq = np.concatenate(
+                [sm_norms[:, None], np.tile(app.features, (len(sm_norms), 1))], axis=1
+            )
+            pe = models["sm_eng"].predict(Xq)
+            pt = models["sm_time"].predict(Xq)
+            te = []
+            tt = []
+            for i, g in enumerate(spec.sm_gears()):
+                e, t = app.ratios_vs_default(spec, g, spec.default_mem_gear)
+                te.append(e)
+                tt.append(t)
+            errs["eng"].append(float(np.mean(np.abs(pe - te) / np.asarray(te))))
+            errs["time"].append(float(np.mean(np.abs(pt - tt) / np.asarray(tt))))
+    mape_eng = float(np.mean(errs["eng"]))
+    mape_time = float(np.mean(errs["time"]))
+    print(f"self-check: SM-model held-out MAPE eng={mape_eng:.3%} time={mape_time:.3%}")
+    return {
+        "periodogram_rel_err": per_err,
+        "sm_holdout_mape_eng": mape_eng,
+        "sm_holdout_mape_time": mape_time,
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default=None, help="artifact directory")
+    ap.add_argument("--force", action="store_true", help="retrain models")
+    args = ap.parse_args()
+
+    import jax
+    import jax.numpy as jnp
+
+    out_dir = args.out or os.path.join(simdata.repo_root(), "artifacts")
+    os.makedirs(out_dir, exist_ok=True)
+    spec = simdata.Spec.load()
+
+    models = train_models(spec, out_dir, args.force)
+    checks = self_check(spec, models)
+
+    # --- Lower the three modules to HLO text. ---------------------------
+    spec_1024 = jax.ShapeDtypeStruct((1024,), jnp.float32)
+    lowered = jax.jit(periodogram_1024).lower(spec_1024)
+    path = os.path.join(out_dir, "periodogram_1024.hlo.txt")
+    with open(path, "w") as f:
+        f.write(to_hlo_text(lowered))
+    print(f"wrote {path}")
+
+    feat_spec = jax.ShapeDtypeStruct((simdata.NUM_FEATURES,), jnp.float32)
+    sm_norms = np.array([simdata.gear_norm_sm(spec, g) for g in spec.sm_gears()])
+    mem_norms = np.array([simdata.gear_norm_mem(spec, m) for m in range(len(spec.mem_mhz))])
+    for name, (eng, tim, norms) in {
+        "predictor_sm": (models["sm_eng"], models["sm_time"], sm_norms),
+        "predictor_mem": (models["mem_eng"], models["mem_time"], mem_norms),
+    }.items():
+        predict = make_predictor(eng, tim, norms)
+        lowered = jax.jit(predict).lower(feat_spec)
+        path = os.path.join(out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(to_hlo_text(lowered))
+        print(f"wrote {path}")
+
+    # --- meta.json + crosscheck.json. ------------------------------------
+    meta = {
+        "feature_names": spec.feature_names,
+        "sm_gears": list(spec.sm_gears()),
+        "sm_gear_norms": sm_norms.tolist(),
+        "mem_gear_norms": mem_norms.tolist(),
+        "mem_mhz": spec.mem_mhz,
+        "checks": checks,
+        "models": {n: m.meta for n, m in models.items()},
+    }
+    with open(os.path.join(out_dir, "meta.json"), "w") as f:
+        json.dump(meta, f, indent=2)
+    with open(os.path.join(out_dir, "crosscheck.json"), "w") as f:
+        json.dump(simdata.crosscheck_payload(spec), f, indent=2)
+    print("wrote meta.json, crosscheck.json")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,254 @@
+"""Gradient-boosted regression trees, from scratch (numpy).
+
+The offline environment has no xgboost; this is the paper's §4.3.3 model
+family reimplemented: additive regression trees fit to squared loss with
+shrinkage, depth-limited, greedy histogram splits — plus the grid-search
+hyper-parameter tuning the paper describes.
+
+The trained ensemble serializes to a dense-array JSON that both the
+AOT-compiled Pallas kernel (``kernels/gbt_eval.py``) and the native Rust
+inference path (``rust/src/model/gbt.rs``) consume: per tree, arrays
+``feat`` (i32, -1 ⇒ leaf), ``thr`` (f32; leaf value when ``feat == -1``),
+``left``/``right`` (i32 child node ids; leaves self-loop).
+"""
+
+from __future__ import annotations
+
+import json
+import math
+
+import numpy as np
+
+
+class Tree:
+    """One regression tree in flattened-array form."""
+
+    __slots__ = ("feat", "thr", "left", "right")
+
+    def __init__(self):
+        self.feat: list[int] = []
+        self.thr: list[float] = []
+        self.left: list[int] = []
+        self.right: list[int] = []
+
+    def add_leaf(self, value: float) -> int:
+        i = len(self.feat)
+        self.feat.append(-1)
+        self.thr.append(float(value))
+        self.left.append(i)
+        self.right.append(i)
+        return i
+
+    def add_split(self, feature: int, threshold: float) -> int:
+        i = len(self.feat)
+        self.feat.append(int(feature))
+        self.thr.append(float(threshold))
+        self.left.append(-1)  # patched later
+        self.right.append(-1)
+        return i
+
+    def predict(self, X: np.ndarray) -> np.ndarray:
+        feat = np.asarray(self.feat)
+        thr = np.asarray(self.thr)
+        left = np.asarray(self.left)
+        right = np.asarray(self.right)
+        idx = np.zeros(len(X), dtype=np.int64)
+        # Descend max-depth times; leaves self-loop so extra steps are no-ops.
+        for _ in range(32):
+            f = feat[idx]
+            is_leaf = f < 0
+            go_left = X[np.arange(len(X)), np.maximum(f, 0)] <= thr[idx]
+            nxt = np.where(go_left, left[idx], right[idx])
+            idx = np.where(is_leaf, idx, nxt)
+            if np.all(feat[idx] < 0):
+                break
+        return thr[idx]
+
+
+class GbtModel:
+    """Trained ensemble: prediction = base + lr * Σ tree_k(x)."""
+
+    def __init__(self, base: float, lr: float, trees: list[Tree], meta: dict | None = None):
+        self.base = base
+        self.lr = lr
+        self.trees = trees
+        self.meta = meta or {}
+
+    def predict(self, X: np.ndarray) -> np.ndarray:
+        X = np.asarray(X, dtype=np.float64)
+        out = np.full(len(X), self.base)
+        for t in self.trees:
+            out += self.lr * t.predict(X)
+        return out
+
+    def to_json(self) -> dict:
+        return {
+            "base": self.base,
+            "lr": self.lr,
+            "meta": self.meta,
+            "trees": [
+                {"feat": t.feat, "thr": t.thr, "left": t.left, "right": t.right}
+                for t in self.trees
+            ],
+        }
+
+    def save(self, path: str) -> None:
+        with open(path, "w") as f:
+            json.dump(self.to_json(), f)
+
+    @classmethod
+    def from_json(cls, d: dict) -> "GbtModel":
+        trees = []
+        for td in d["trees"]:
+            t = Tree()
+            t.feat = list(td["feat"])
+            t.thr = [float(x) for x in td["thr"]]
+            t.left = list(td["left"])
+            t.right = list(td["right"])
+            trees.append(t)
+        return cls(d["base"], d["lr"], trees, d.get("meta"))
+
+    # Dense tensors for the Pallas kernel: [T, N] padded arrays.
+    def to_dense(self):
+        n = max(len(t.feat) for t in self.trees)
+        T = len(self.trees)
+        feat = np.full((T, n), -1, dtype=np.int32)
+        thr = np.zeros((T, n), dtype=np.float32)
+        left = np.zeros((T, n), dtype=np.int32)
+        right = np.zeros((T, n), dtype=np.int32)
+        for k, t in enumerate(self.trees):
+            m = len(t.feat)
+            feat[k, :m] = t.feat
+            thr[k, :m] = t.thr
+            left[k, :m] = t.left
+            right[k, :m] = t.right
+            # Padding nodes are self-looping zero leaves; point them at
+            # themselves to keep gathers in range.
+            for j in range(m, n):
+                left[k, j] = j
+                right[k, j] = j
+        return feat, thr, left, right
+
+
+def _best_split(Xb: np.ndarray, g: np.ndarray, node_rows: np.ndarray, n_bins: int,
+                min_child: int, lam: float):
+    """Greedy histogram split search on binned features.
+
+    Returns (gain, feature, bin) or None. Squared loss: gain derives from
+    sum/count statistics (variance reduction with L2 regularization lam).
+    """
+    nf = Xb.shape[1]
+    gsum = g[node_rows].sum()
+    cnt = len(node_rows)
+    best = None
+    parent_score = gsum * gsum / (cnt + lam)
+    for f in range(nf):
+        b = Xb[node_rows, f]
+        hist_sum = np.bincount(b, weights=g[node_rows], minlength=n_bins)
+        hist_cnt = np.bincount(b, minlength=n_bins)
+        cs = np.cumsum(hist_sum)[:-1]
+        cc = np.cumsum(hist_cnt)[:-1]
+        valid = (cc >= min_child) & ((cnt - cc) >= min_child)
+        if not valid.any():
+            continue
+        lscore = np.where(valid, cs * cs / (cc + lam), -np.inf)
+        rs = gsum - cs
+        rc = cnt - cc
+        rscore = np.where(valid, rs * rs / (rc + lam), -np.inf)
+        gains = lscore + rscore - parent_score
+        k = int(np.argmax(gains))
+        if gains[k] > 0 and (best is None or gains[k] > best[0]):
+            best = (float(gains[k]), f, k)
+    return best
+
+
+def _fit_tree(Xb, g, bin_edges, n_bins, max_depth, min_child, lam):
+    tree = Tree()
+    # Recursive growth with explicit stack: (node_rows, depth, parent, side).
+    root_rows = np.arange(len(Xb))
+    stack = [(root_rows, 0, None, None)]
+    while stack:
+        rows, depth, parent, side = stack.pop()
+        split = None
+        if depth < max_depth and len(rows) >= 2 * min_child:
+            split = _best_split(Xb, g, rows, n_bins, min_child, lam)
+        if split is None:
+            val = g[rows].sum() / (len(rows) + lam)
+            node = tree.add_leaf(val)
+        else:
+            _, f, b = split
+            thr = bin_edges[f][b]
+            node = tree.add_split(f, thr)
+            mask = Xb[rows, f] <= b
+            stack.append((rows[mask], depth + 1, node, "left"))
+            stack.append((rows[~mask], depth + 1, node, "right"))
+        if parent is not None:
+            if side == "left":
+                tree.left[parent] = node
+            else:
+                tree.right[parent] = node
+    return tree
+
+
+def bin_features(X: np.ndarray, n_bins: int = 128):
+    """Quantile-bin each feature; returns (binned int matrix, bin edges)."""
+    n, nf = X.shape
+    Xb = np.zeros((n, nf), dtype=np.int32)
+    edges = []
+    for f in range(nf):
+        # Exactly n_bins-1 edges per feature (duplicates allowed: a split
+        # on a duplicated edge simply yields zero gain), so bin indices are
+        # uniformly 0..n_bins-1 across features.
+        qs = np.quantile(X[:, f], np.linspace(0, 1, n_bins + 1)[1:-1])
+        Xb[:, f] = np.searchsorted(qs, X[:, f], side="left")
+        edges.append(qs)
+    return Xb, edges
+
+
+def train(
+    X: np.ndarray,
+    y: np.ndarray,
+    n_trees: int = 80,
+    max_depth: int = 5,
+    lr: float = 0.15,
+    min_child: int = 8,
+    lam: float = 1.0,
+    n_bins: int = 128,
+    meta: dict | None = None,
+) -> GbtModel:
+    """Fit a squared-loss GBT ensemble."""
+    X = np.asarray(X, dtype=np.float64)
+    y = np.asarray(y, dtype=np.float64)
+    Xb, edges = bin_features(X, n_bins)
+    base = float(y.mean())
+    pred = np.full(len(y), base)
+    trees: list[Tree] = []
+    for _ in range(n_trees):
+        resid = y - pred
+        t = _fit_tree(Xb, resid, edges, n_bins, max_depth, min_child, lam)
+        trees.append(t)
+        pred += lr * t.predict(X)
+    return GbtModel(base, lr, trees, meta)
+
+
+def grid_search(
+    X: np.ndarray,
+    y: np.ndarray,
+    param_grid: list[dict],
+    val_frac: float = 0.2,
+    seed: int = 1234,
+) -> tuple[dict, float]:
+    """The paper's hyper-parameter grid search (§4.3.3): hold out a
+    validation split, return (best params, val MAE)."""
+    rng = np.random.default_rng(seed)
+    n = len(y)
+    order = rng.permutation(n)
+    n_val = max(1, int(n * val_frac))
+    val, tr = order[:n_val], order[n_val:]
+    best = None
+    for params in param_grid:
+        m = train(X[tr], y[tr], **params)
+        err = float(np.abs(m.predict(X[val]) - y[val]).mean())
+        if best is None or err < best[1]:
+            best = (params, err)
+    return best

@@ -1,0 +1,84 @@
+"""L1 Pallas kernel: gradient-boosted-tree ensemble inference.
+
+Hardware adaptation (DESIGN.md §2): a GPU tree walk is warp-divergent;
+on a vector unit we instead evaluate ALL (tree, gear) lanes in lockstep
+as a fixed-depth chain of vectorized gathers/selects over dense node
+tensors. Leaves self-loop, so the chain length is just the max depth.
+
+Packing contract: the xla_extension-0.5.1 HLO text round-trip corrupts
+every pallas operand after the first (rust/examples/probe_hlo.rs), so the
+kernel takes ONE f32 vector: ``[X.ravel() | feat | thr | left | right]``.
+Node-id/feature-id tensors ride as f32 (exact below 2^24) and are cast
+back to i32 inside the kernel. The gear batch plus 60x127-node tree
+tensors total ~130 KiB — a single VMEM-resident block, no grid needed.
+
+``interpret=True``: the CPU PJRT plugin cannot execute Mosaic
+custom-calls; interpret-mode lowers to plain HLO (see /opt/xla-example).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+
+def _gbt_kernel(p_ref, out_ref, *, g: int, f: int, t: int, n: int,
+                base: float, lr: float, depth: int):
+    packed = p_ref[...]
+    xe = g * f
+    tn = t * n
+    Xv = packed[:xe]                                   # [G*F]
+    featv = packed[xe:xe + tn].astype(jnp.int32)       # [T*N]
+    thrv = packed[xe + tn:xe + 2 * tn]                 # [T*N]
+    leftv = packed[xe + 2 * tn:xe + 3 * tn].astype(jnp.int32)
+    rightv = packed[xe + 3 * tn:xe + 4 * tn].astype(jnp.int32)
+
+    # Flat-gather descent: 1-D `jnp.take` survives the text round-trip
+    # where multi-dimensional take_along_axis gathers do not.
+    rowbase = (jax.lax.iota(jnp.int32, t) * n)[:, None]  # [T, 1]
+    gcol = jax.lax.iota(jnp.int32, g)[None, :] * f       # [1, G]
+
+    idx = jnp.zeros((t, g), dtype=jnp.int32)
+    for _ in range(depth):
+        flat = rowbase + idx                             # [T, G]
+        fid = jnp.take(featv, flat)
+        th = jnp.take(thrv, flat)
+        xv = jnp.take(Xv, gcol + jnp.maximum(fid, 0))
+        nxt = jnp.where(xv <= th, jnp.take(leftv, flat), jnp.take(rightv, flat))
+        idx = jnp.where(fid < 0, idx, nxt).astype(jnp.int32)
+    leaves = jnp.take(thrv, rowbase + idx)               # [T, G]
+    out_ref[...] = (base + lr * jnp.sum(leaves, axis=0)).astype(jnp.float32)
+
+
+def pack_inputs(X, feat, thr, left, right) -> jnp.ndarray:
+    """Build the kernel's single packed operand."""
+    return jnp.concatenate(
+        [
+            jnp.asarray(X, jnp.float32).reshape(-1),
+            jnp.asarray(feat, jnp.float32).reshape(-1),
+            jnp.asarray(thr, jnp.float32).reshape(-1),
+            jnp.asarray(left, jnp.float32).reshape(-1),
+            jnp.asarray(right, jnp.float32).reshape(-1),
+        ]
+    )
+
+
+def gbt_eval(X, feat, thr, left, right, base: float, lr: float,
+             depth: int = 12) -> jnp.ndarray:
+    """Evaluate the ensemble for every row of X ([G, F] -> [G])."""
+    X = jnp.asarray(X, jnp.float32)
+    g, f = X.shape
+    t, n = np.shape(feat)
+    packed = pack_inputs(X, feat, thr, left, right)
+    kernel = functools.partial(
+        _gbt_kernel, g=g, f=f, t=t, n=n, base=float(base), lr=float(lr), depth=depth
+    )
+    return pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct((g,), jnp.float32),
+        interpret=True,
+    )(packed)

@@ -1,0 +1,56 @@
+"""L1 Pallas kernel: amplitude periodogram as a Fourier-basis matmul.
+
+Hardware adaptation (DESIGN.md §2): instead of a branchy butterfly FFT
+(GPU-style), the spectrum is computed as ``amp = |x · [cos | sin]|`` — a
+dense (N × Kb) contraction per grid step, which is the MXU-shaped
+formulation on TPU. BlockSpec tiles the frequency axis so each grid step
+holds one N×Kb basis panel in VMEM (N=1024, Kb=128 ⇒ 512 KiB f32 — well
+under the ~16 MiB VMEM budget, leaving room for double buffering).
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls; interpret-mode lowers to plain HLO (see /opt/xla-example).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _periodogram_kernel(x_ref, out_ref, *, n: int, kb: int):
+    """One frequency tile: amplitudes of bins [k0, k0+kb)."""
+    i = pl.program_id(0)
+    x = x_ref[...]  # [n] — the (already detrended) signal
+    # Bin indices for this tile; bin 0 of the output is spectral bin 1 (DC
+    # is excluded by construction).
+    ks = i * kb + jax.lax.iota(jnp.float32, kb) + 1.0
+    t = jax.lax.iota(jnp.float32, n)
+    ang = (2.0 * jnp.pi / n) * t[:, None] * ks[None, :]  # [n, kb]
+    re = x @ jnp.cos(ang)  # [kb] — MXU-shaped contraction
+    im = -(x @ jnp.sin(ang))
+    out_ref[...] = jnp.sqrt(re * re + im * im)
+
+
+def periodogram(x: jnp.ndarray, kb: int = 128) -> jnp.ndarray:
+    """Amplitude spectrum: bins 1..N/2 inclusive (N/2 values, DC excluded).
+
+    Input must have power-of-two length N >= 2*kb. The Rust side uses bins
+    0..N/2-2 of this array (its native periodogram stops before Nyquist).
+    """
+    n = x.shape[0]
+    assert n & (n - 1) == 0, "length must be a power of two"
+    half = n // 2
+    assert half % kb == 0, "n/2 must be divisible by the block size"
+    xc = (x - jnp.mean(x)).astype(jnp.float32)
+    kernel = functools.partial(_periodogram_kernel, n=n, kb=kb)
+    return pl.pallas_call(
+        kernel,
+        grid=(half // kb,),
+        in_specs=[pl.BlockSpec((n,), lambda i: (0,))],
+        out_specs=pl.BlockSpec((kb,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((half,), jnp.float32),
+        interpret=True,
+    )(xc)

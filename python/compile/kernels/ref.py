@@ -1,0 +1,63 @@
+"""Pure-jnp oracles for the Pallas kernels (the correctness contract).
+
+``test_kernels.py`` asserts kernel == ref across shapes/dtypes
+(hypothesis-driven), and ``aot.py``'s self-check runs both once more at
+artifact-build time.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def periodogram_ref(x: jnp.ndarray) -> jnp.ndarray:
+    """Amplitude spectrum of a real signal, bins 1..N/2 (DC excluded).
+
+    Matches the Rust native ``signal::fft::periodogram`` on a length-N
+    power-of-two input: mean-detrend, full DFT, amplitudes of bins
+    1..N/2 inclusive (i.e. N/2 values).
+    """
+    n = x.shape[0]
+    xc = x - jnp.mean(x)
+    k = jnp.arange(1, n // 2 + 1)
+    t = jnp.arange(n)
+    ang = 2.0 * jnp.pi * jnp.outer(t, k) / n
+    re = xc @ jnp.cos(ang)
+    im = -(xc @ jnp.sin(ang))
+    return jnp.sqrt(re * re + im * im)
+
+
+def gbt_eval_ref(X, feat, thr, left, right, base, lr, depth: int = 24):
+    """Reference tree-ensemble evaluation.
+
+    X: [G, F] float; feat/thr/left/right: [T, N] dense trees
+    (feat < 0 => leaf with value thr; leaves/padding self-loop).
+    Returns [G] predictions = base + lr * sum_t leaf_value_t.
+    """
+    X = jnp.asarray(X)
+    feat = jnp.asarray(feat)
+    thr = jnp.asarray(thr)
+    left = jnp.asarray(left)
+    right = jnp.asarray(right)
+    G = X.shape[0]
+    T = feat.shape[0]
+    idx = jnp.zeros((T, G), dtype=jnp.int32)
+    for _ in range(depth):
+        f = jnp.take_along_axis(feat, idx, axis=1)  # [T, G]
+        th = jnp.take_along_axis(thr, idx, axis=1)
+        xv = X[jnp.arange(G)[None, :], jnp.maximum(f, 0)]  # [T, G]
+        go_left = xv <= th
+        nxt = jnp.where(
+            go_left,
+            jnp.take_along_axis(left, idx, axis=1),
+            jnp.take_along_axis(right, idx, axis=1),
+        )
+        idx = jnp.where(f < 0, idx, nxt).astype(jnp.int32)
+    leaves = jnp.take_along_axis(thr, idx, axis=1)  # [T, G]
+    return base + lr * jnp.sum(leaves, axis=0)
+
+
+def gbt_eval_numpy(X, model) -> np.ndarray:
+    """Numpy-side oracle straight from a ``gbt.GbtModel`` (no dense form)."""
+    return model.predict(np.asarray(X, dtype=np.float64))

@@ -1,0 +1,51 @@
+"""L2: the jax compute graph that composes the L1 Pallas kernels.
+
+Two lowered modules (see aot.py):
+
+  * ``periodogram_1024``: f32[1024] trace -> f32[512] amplitude spectrum
+    (the spectral front-end of period detection, Algorithm 1 line 1).
+  * ``predictor_sm`` / ``predictor_mem``: f32[16] counter features ->
+    (f32[G] energy ratios, f32[G] time ratios) for every clock gear —
+    the four models of Equation (1)/(2), two per module. Tree tensors are
+    closed over as constants so they bake into the HLO.
+
+Python never runs at serving time: the Rust runtime executes the lowered
+artifacts via PJRT.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels.gbt_eval import gbt_eval
+from .kernels.periodogram import periodogram
+
+
+def periodogram_1024(x: jnp.ndarray) -> tuple[jnp.ndarray]:
+    """Spectral front-end; tuple-wrapped for the AOT text bridge."""
+    return (periodogram(x, kb=128),)
+
+
+def make_predictor(eng_model, time_model, gear_norms: np.ndarray):
+    """Build ``features[16] -> (eng_ratio[G], time_ratio[G])``.
+
+    ``eng_model``/``time_model`` are trained ``gbt.GbtModel``s whose dense
+    tensors are closed over (=> HLO constants). ``gear_norms`` is the
+    normalized-gear input column for every gear in the sweep.
+    """
+    ge = [jnp.asarray(a) for a in eng_model.to_dense()]
+    gt = [jnp.asarray(a) for a in time_model.to_dense()]
+    gears = jnp.asarray(gear_norms, jnp.float32)[:, None]  # [G, 1]
+    g = gears.shape[0]
+
+    def predict(features: jnp.ndarray):
+        X = jnp.concatenate(
+            [gears, jnp.broadcast_to(features[None, :].astype(jnp.float32), (g, features.shape[0]))],
+            axis=1,
+        )  # [G, 17]
+        eng = gbt_eval(X, *ge, base=eng_model.base, lr=eng_model.lr)
+        time = gbt_eval(X, *gt, base=time_model.base, lr=time_model.lr)
+        return eng, time
+
+    return predict

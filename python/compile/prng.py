@@ -1,0 +1,86 @@
+"""Bit-exact Python twin of ``rust/src/util/rng.rs`` (PCG64 XSL-RR 128/64).
+
+Every stochastic quantity in the synthetic-workload model flows through
+this generator so the Rust simulator and the Python training-data
+generator materialize *identical* applications. The cross-language pinning
+test is ``rust/tests/crosscheck.rs`` against ``artifacts/crosscheck.json``
+(written by ``aot.py``).
+
+Draw-order is part of the contract; see simdata.AppParams.
+"""
+
+from __future__ import annotations
+
+import math
+
+MASK64 = (1 << 64) - 1
+MASK128 = (1 << 128) - 1
+PCG_MULT = 0x2360_ED05_1FC6_5DA4_4385_DF64_9FBC_CFD
+
+
+def splitmix64(x: int) -> int:
+    """SplitMix64 — mirrors ``rng.rs::splitmix64``."""
+    x = (x + 0x9E3779B97F4A7C15) & MASK64
+    z = x
+    z = ((z ^ (z >> 30)) * 0xBF58476D1CE4E5B9) & MASK64
+    z = ((z ^ (z >> 27)) * 0x94D049BB133111EB) & MASK64
+    return (z ^ (z >> 31)) & MASK64
+
+
+def fnv1a64(data: bytes) -> int:
+    """FNV-1a 64-bit — mirrors ``rng.rs::fnv1a64``."""
+    h = 0xCBF29CE484222325
+    for b in data:
+        h ^= b
+        h = (h * 0x00000100000001B3) & MASK64
+    return h
+
+
+class Pcg64:
+    """PCG64 XSL-RR 128/64 with the same seeding scheme as the Rust twin."""
+
+    __slots__ = ("state", "inc")
+
+    def __init__(self, seed: int, stream: int):
+        init_state = (splitmix64(seed) << 64) | splitmix64(seed ^ 0x9E3779B97F4A7C15)
+        init_inc = ((splitmix64(stream) << 64) | (stream & MASK64)) | 1
+        self.state = 0
+        self.inc = init_inc & MASK128
+        self._step()
+        self.state = (self.state + init_state) & MASK128
+        self._step()
+
+    def _step(self) -> None:
+        self.state = (self.state * PCG_MULT + self.inc) & MASK128
+
+    def next_u64(self) -> int:
+        self._step()
+        xored = ((self.state >> 64) ^ self.state) & MASK64
+        rot = (self.state >> 122) & 63
+        return ((xored >> rot) | (xored << ((-rot) & 63))) & MASK64
+
+    def next_f64(self) -> float:
+        return (self.next_u64() >> 11) * (1.0 / 9007199254740992.0)
+
+    def uniform(self, lo: float, hi: float) -> float:
+        return lo + (hi - lo) * self.next_f64()
+
+    def below(self, n: int) -> int:
+        return (self.next_u64() * n) >> 64
+
+    def gauss(self) -> float:
+        """Box-Muller drawing exactly two uniforms (no cached spare)."""
+        u1 = max(self.next_f64(), 1e-300)
+        u2 = self.next_f64()
+        return math.sqrt(-2.0 * math.log(u1)) * math.cos(2.0 * math.pi * u2)
+
+    def normal(self, mean: float, std: float) -> float:
+        return mean + std * self.gauss()
+
+
+def app_rng(global_seed: int, suite_salt: int, app_name: str) -> Pcg64:
+    """Mirrors ``rng.rs::app_rng``."""
+    h = fnv1a64(app_name.encode("utf-8"))
+    seed = (global_seed ^ ((h * 0x9E3779B97F4A7C15) & MASK64)) & MASK64
+    stream = (suite_salt + h) & MASK64
+    return Pcg64(seed, stream)

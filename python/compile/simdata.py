@@ -1,0 +1,358 @@
+"""Python twin of the Rust simulator's analytic ground-truth model.
+
+Parses ``data/groundtruth.json`` (same single source of truth as
+``rust/src/sim/spec.rs``), materializes synthetic applications with the
+exact RNG draw order of ``rust/src/sim/app.rs``, and evaluates the
+analytic DVFS model (time / power / energy per clock configuration).
+
+Used at build time only:
+  * to generate the four GBT training sets (§4.3 of the paper), and
+  * to emit ``artifacts/crosscheck.json``, which pins this implementation
+    to the Rust one.
+"""
+
+from __future__ import annotations
+
+import json
+import math
+import os
+from dataclasses import dataclass, field
+
+from . import prng
+
+NUM_FEATURES = 16
+
+
+def repo_root() -> str:
+    return os.path.abspath(os.path.join(os.path.dirname(__file__), "..", ".."))
+
+
+def groundtruth_path() -> str:
+    env = os.environ.get("GPOEO_GROUNDTRUTH")
+    if env:
+        return env
+    return os.path.join(repo_root(), "data", "groundtruth.json")
+
+
+class Spec:
+    """Typed view of groundtruth.json (mirror of spec.rs)."""
+
+    def __init__(self, raw: dict):
+        self.raw = raw
+        self.global_seed = raw["global_seed"]
+        g = raw["gears"]
+        self.sm_gear_min = g["sm_gear_min"]
+        self.sm_gear_max = g["sm_gear_max"]
+        self.sm_mhz_base = g["sm_mhz_base"]
+        self.sm_mhz_step = g["sm_mhz_step"]
+        self.mem_mhz = g["mem_mhz"]
+        self.reference_sm_gear = g["reference_sm_gear"]
+        self.reference_mem_gear = g["reference_mem_gear"]
+        self.default_sm_gear = g["default_sm_gear"]
+        self.default_mem_gear = g["default_mem_gear"]
+        self.power = raw["power"]
+        self.time_model = raw["time_model"]
+        self.noise = raw["noise"]
+        self.coeff_maps = raw["coeff_maps"]
+        self.archetypes = raw["archetypes"]
+        self.suites = raw["suites"]
+        self.feature_names = raw["feature_names"]
+
+    @classmethod
+    def load(cls, path: str | None = None) -> "Spec":
+        with open(path or groundtruth_path()) as f:
+            return cls(json.load(f))
+
+    # --- gear helpers -----------------------------------------------------
+    def sm_mhz(self, gear: int) -> float:
+        return self.sm_mhz_base + self.sm_mhz_step * gear
+
+    def num_sm_gears(self) -> int:
+        return self.sm_gear_max - self.sm_gear_min + 1
+
+    def sm_gears(self):
+        return range(self.sm_gear_min, self.sm_gear_max + 1)
+
+    def voltage(self, f_mhz: float) -> float:
+        p = self.power
+        frac = max(0.0, (f_mhz - p["f_vknee_mhz"]) / (p["f_max_mhz"] - p["f_vknee_mhz"]))
+        return p["v_min"] + (p["v_max"] - p["v_min"]) * frac ** 1.4
+
+    def coeff(self, name: str, features: list[float]) -> float:
+        cm = self.coeff_maps[name]
+        v = cm["bias"] + sum(f * w for f, w in zip(features, cm["weights"]))
+        return min(max(v, cm["lo"]), cm["hi"])
+
+
+@dataclass
+class OpPoint:
+    t_iter_s: float
+    power_w: float
+    energy_j: float
+    util_sm: float
+    util_mem: float
+
+
+@dataclass
+class AppParams:
+    """Mirror of ``rust/src/sim/app.rs::AppParams`` (trace fields omitted —
+    Python never generates traces, only the analytic model)."""
+
+    name: str
+    suite: str
+    archetype: str
+    features: list[float]
+    t_base: float
+    wc: float
+    wm: float
+    wo: float
+    gamma: float
+    s_m: float
+    k_sm: float
+    k_mem: float
+    a_sm: float
+    a_mem: float
+    aperiodic: bool
+    trace_seed: int = 0
+    _default_cache: tuple | None = field(default=None, repr=False)
+
+    @classmethod
+    def materialize(cls, spec: Spec, suite: str, entry: dict) -> "AppParams":
+        """Draw-for-draw mirror of AppParams::materialize (rust)."""
+        name = entry["name"]
+        arch = spec.archetypes[entry["archetype"]]
+        salt = spec.suites[suite]["seed_salt"]
+        rng = prng.app_rng(spec.global_seed, salt, name)
+
+        features = []
+        for i in range(NUM_FEATURES):
+            v = arch["features_mean"][i] + arch["features_std"] * rng.gauss()
+            features.append(min(max(v, 0.01), 1.0))
+        if arch["period_s"][1] > 0.0:
+            t_base = rng.uniform(arch["period_s"][0], arch["period_s"][1])
+        else:
+            t_base = rng.uniform(0.4, 1.2)
+        h = spec.noise["hidden_coeff_std"]
+        h_wc = math.exp(rng.normal(0.0, h))
+        h_wm = math.exp(rng.normal(0.0, h))
+        h_ksm = math.exp(rng.normal(0.0, h))
+        h_kmem = math.exp(rng.normal(0.0, h))
+        h_gamma = rng.normal(0.0, h / 2.0)
+
+        # Phase-fraction jitter draws (trace-only in Rust, but they consume
+        # stream positions, so they must happen here too).
+        for _ in arch["phases"]:
+            rng.normal(0.0, 0.08)
+        rng.uniform(0.8, 1.25)  # micro_period jitter draw
+        trace_seed = rng.next_u64()
+
+        wc_raw = spec.coeff("w_compute", features) * h_wc
+        wm_raw = spec.coeff("w_memory", features) * h_wm
+        wo_raw = spec.coeff("w_other", features)
+        s = wc_raw + wm_raw + wo_raw
+        gm = spec.coeff_maps["gamma_sm"]
+        gamma = min(max(spec.coeff("gamma_sm", features) + h_gamma, gm["lo"]), gm["hi"])
+
+        return cls(
+            name=name,
+            suite=suite,
+            archetype=entry["archetype"],
+            features=features,
+            t_base=t_base,
+            wc=wc_raw / s,
+            wm=wm_raw / s,
+            wo=wo_raw / s,
+            gamma=gamma,
+            s_m=spec.coeff("mem_sens", features),
+            k_sm=spec.coeff("k_sm_power", features) * h_ksm,
+            k_mem=spec.coeff("k_mem_power", features) * h_kmem,
+            a_sm=spec.coeff("sm_activity", features),
+            a_mem=spec.coeff("mem_activity", features),
+            aperiodic=entry.get("aperiodic", arch.get("aperiodic", False)),
+            trace_seed=trace_seed,
+        )
+
+    # --- analytic model (mirror of app.rs) --------------------------------
+    def op_point(self, spec: Spec, sm_gear: int, mem_gear: int) -> OpPoint:
+        fs = spec.sm_mhz(sm_gear)
+        fm = spec.mem_mhz[mem_gear]
+        f_ref_s = spec.sm_mhz(spec.reference_sm_gear)
+        f_ref_m = spec.mem_mhz[spec.reference_mem_gear]
+        r_s = (f_ref_s / fs) ** self.gamma
+        r_m = (f_ref_m / fm) ** spec.time_model["mem_exponent"]
+        rme = (1.0 - self.s_m) + self.s_m * r_m
+        r = self.wo + self.wc * r_s + self.wm * rme
+        t_iter = self.t_base * r
+
+        util_sm = self.a_sm * (self.wc * r_s + 0.5 * self.wo) / (r * (self.wc + 0.5 * self.wo))
+        util_sm = min(max(util_sm, 0.02), 1.0)
+        util_mem = self.a_mem * (self.wm * rme + 0.4 * self.wo) / (r * (self.wm + 0.4 * self.wo))
+        util_mem = min(max(util_mem, 0.02), 1.0)
+
+        p = spec.power
+        v = spec.voltage(fs)
+        p_sm = p["c_sm_w_per_ghz_v2"] * self.k_sm * util_sm * v * v * (fs / 1000.0)
+        p_mem = (
+            (p["c_mem_static_w_per_ghz"] + p["c_mem_w_per_ghz"] * self.k_mem * util_mem)
+            * p["mem_v2_factor"][mem_gear]
+            * (fm / 1000.0)
+        )
+        power = p["p_idle_w"] + p_sm + p_mem
+        return OpPoint(t_iter, power, power * t_iter, util_sm, util_mem)
+
+    def default_sm_gear(self, spec: Spec) -> int:
+        mem = spec.default_mem_gear
+        for g in range(spec.default_sm_gear, spec.sm_gear_min - 1, -1):
+            if self.op_point(spec, g, mem).power_w <= spec.power["tdp_w"]:
+                return g
+        return spec.sm_gear_min
+
+    def default_op(self, spec: Spec) -> tuple[int, int, OpPoint]:
+        if self._default_cache is None:
+            sm = self.default_sm_gear(spec)
+            mem = spec.default_mem_gear
+            self._default_cache = (sm, mem, self.op_point(spec, sm, mem))
+        return self._default_cache
+
+    def ratios_vs_default(self, spec: Spec, sm_gear: int, mem_gear: int):
+        _, _, dflt = self.default_op(spec)
+        pt = self.op_point(spec, sm_gear, mem_gear)
+        return pt.energy_j / dflt.energy_j, pt.t_iter_s / dflt.t_iter_s
+
+
+def materialize_suite(spec: Spec, suite: str) -> list[AppParams]:
+    return [AppParams.materialize(spec, suite, e) for e in spec.suites[suite]["apps"]]
+
+
+def optimal_sm_gear(app: AppParams, spec: Spec, max_time_ratio: float = 1.05) -> int:
+    """Best SM gear under the paper's objective with memory at default —
+    used to collect the memory-model training data (§4.3.2)."""
+    best_g, best_e = spec.default_sm_gear, float("inf")
+    for g in spec.sm_gears():
+        e, t = app.ratios_vs_default(spec, g, spec.default_mem_gear)
+        score = e if t <= max_time_ratio else 10.0 + (t - max_time_ratio)
+        if score < best_e:
+            best_e, best_g = score, g
+    return best_g
+
+
+def gear_norm_sm(spec: Spec, gear: int) -> float:
+    """Normalized SM-gear model input (shared with meta.json / Rust)."""
+    return spec.sm_mhz(gear) / spec.power["f_max_mhz"]
+
+
+def gear_norm_mem(spec: Spec, gear: int) -> float:
+    return spec.mem_mhz[gear] / max(spec.mem_mhz)
+
+
+def training_data(spec: Spec, noise_replicas: int = 3, seed: int = 777):
+    """Build the paper's four training sets from the training suite.
+
+    Returns dict with keys sm_eng, sm_time, mem_eng, mem_time; each is
+    (X, y) with X rows = [gear_norm, f0..f15].
+
+    Per §4.3.2 the paper measures each point ten times and averages, so
+    targets are clean; inputs get `noise_replicas` jittered copies of the
+    feature vector (mimicking one-period online counter measurement) so
+    the models are robust to what they will see online.
+    """
+    import numpy as np
+
+    apps = materialize_suite(spec, "pytorch_train")
+    meas_std = spec.noise["counter_meas_std"]
+    rng = prng.Pcg64(seed, 42)
+
+    def feature_variants(app):
+        yield app.features
+        for _ in range(noise_replicas):
+            yield [
+                min(max(f * math.exp(rng.normal(0.0, meas_std)), 0.005), 1.05)
+                for f in app.features
+            ]
+
+    sm_X, sm_eng, sm_time = [], [], []
+    mem_X, mem_eng, mem_time = [], [], []
+    for app in apps:
+        sm_rows = []
+        for g in spec.sm_gears():
+            e, t = app.ratios_vs_default(spec, g, spec.default_mem_gear)
+            sm_rows.append((gear_norm_sm(spec, g), e, t))
+        g_opt = optimal_sm_gear(app, spec)
+        mem_rows = []
+        for m in range(len(spec.mem_mhz)):
+            e, t = app.ratios_vs_default(spec, g_opt, m)
+            mem_rows.append((gear_norm_mem(spec, m), e, t))
+        for feats in feature_variants(app):
+            for gn, e, t in sm_rows:
+                sm_X.append([gn] + list(feats))
+                sm_eng.append(e)
+                sm_time.append(t)
+            for gn, e, t in mem_rows:
+                mem_X.append([gn] + list(feats))
+                mem_eng.append(e)
+                mem_time.append(t)
+
+    sm_X = np.asarray(sm_X, dtype=np.float64)
+    mem_X = np.asarray(mem_X, dtype=np.float64)
+    return {
+        "sm_eng": (sm_X, np.asarray(sm_eng)),
+        "sm_time": (sm_X, np.asarray(sm_time)),
+        "mem_eng": (mem_X, np.asarray(mem_eng)),
+        "mem_time": (mem_X, np.asarray(mem_time)),
+    }
+
+
+def crosscheck_payload(spec: Spec) -> dict:
+    """Reference values for rust/tests/crosscheck.rs."""
+    picks = [
+        ("aibench", "AI_I2T"),
+        ("aibench", "AI_IGEN"),
+        ("gnns", "TSP_GatedGCN"),
+        ("gnns", "CLB_MLP"),
+        ("gnns", "CSL_GCN"),
+        ("classical", "TSVM"),
+        ("pytorch_train", "PTB_resnet50"),
+        ("pytorch_train", "PTB_mlp_tabular"),
+    ]
+    out = []
+    for suite, name in picks:
+        entry = next(e for e in spec.suites[suite]["apps"] if e["name"] == name)
+        app = AppParams.materialize(spec, suite, entry)
+        probes = []
+        for sm, mem in [
+            (spec.default_sm_gear, spec.default_mem_gear),
+            (spec.reference_sm_gear, spec.reference_mem_gear),
+            (60, 2),
+            (spec.sm_gear_min, 0),
+        ]:
+            op = app.op_point(spec, sm, mem)
+            e, t = app.ratios_vs_default(spec, sm, mem)
+            probes.append(
+                {
+                    "sm_gear": sm,
+                    "mem_gear": mem,
+                    "t_iter_s": op.t_iter_s,
+                    "power_w": op.power_w,
+                    "energy_ratio": e,
+                    "time_ratio": t,
+                }
+            )
+        out.append(
+            {
+                "suite": suite,
+                "name": name,
+                "features": app.features,
+                "t_base": app.t_base,
+                "wc": app.wc,
+                "wm": app.wm,
+                "wo": app.wo,
+                "gamma": app.gamma,
+                "s_m": app.s_m,
+                "k_sm": app.k_sm,
+                "k_mem": app.k_mem,
+                "trace_seed": str(app.trace_seed),
+                "default_sm_gear": app.default_sm_gear(spec),
+                "probes": probes,
+            }
+        )
+    return {"apps": out}

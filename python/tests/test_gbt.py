@@ -1,0 +1,72 @@
+"""GBT trainer unit tests: fit quality, serialization, grid search."""
+
+import sys, os
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+import numpy as np
+import pytest
+
+from compile import gbt
+
+
+def test_fits_linear_function():
+    rng = np.random.default_rng(0)
+    X = rng.uniform(0, 1, (2000, 4))
+    y = 3 * X[:, 0] - 2 * X[:, 1]
+    m = gbt.train(X, y, n_trees=80, max_depth=4, lr=0.2)
+    mae = np.abs(m.predict(X) - y).mean()
+    assert mae < 0.03, mae
+
+
+def test_generalizes_smooth_function():
+    rng = np.random.default_rng(1)
+    X = rng.uniform(0, 1, (4000, 3))
+    y = np.sin(5 * X[:, 0]) + X[:, 1] * X[:, 2]
+    m = gbt.train(X, y, n_trees=100, max_depth=5, lr=0.15)
+    Xt = rng.uniform(0.05, 0.95, (500, 3))
+    yt = np.sin(5 * Xt[:, 0]) + Xt[:, 1] * Xt[:, 2]
+    mae = np.abs(m.predict(Xt) - yt).mean()
+    assert mae < 0.05, mae
+
+
+def test_serialization_roundtrip():
+    rng = np.random.default_rng(2)
+    X = rng.uniform(0, 1, (500, 5))
+    y = X[:, 0] + X[:, 4]
+    m = gbt.train(X, y, n_trees=20, max_depth=3)
+    m2 = gbt.GbtModel.from_json(m.to_json())
+    np.testing.assert_allclose(m.predict(X), m2.predict(X))
+
+
+def test_dense_form_self_loops():
+    rng = np.random.default_rng(3)
+    X = rng.uniform(0, 1, (300, 3))
+    m = gbt.train(X, X[:, 0], n_trees=8, max_depth=4)
+    feat, thr, left, right = m.to_dense()
+    T, N = feat.shape
+    for t in range(T):
+        for j in range(N):
+            if feat[t, j] < 0:
+                assert left[t, j] == j and right[t, j] == j
+            else:
+                assert 0 <= left[t, j] < N and 0 <= right[t, j] < N
+
+
+def test_min_child_respected():
+    rng = np.random.default_rng(4)
+    X = rng.uniform(0, 1, (100, 2))
+    m = gbt.train(X, X[:, 0], n_trees=4, max_depth=8, min_child=30)
+    # With min_child=30 over 100 rows, trees can have at most ~3 leaves.
+    for t in m.trees:
+        leaves = sum(1 for f in t.feat if f < 0)
+        assert leaves <= 4
+
+
+def test_grid_search_returns_best():
+    rng = np.random.default_rng(5)
+    X = rng.uniform(0, 1, (800, 3))
+    y = 2 * X[:, 0]
+    grid = [dict(n_trees=2, max_depth=1, lr=0.05), dict(n_trees=60, max_depth=4, lr=0.2)]
+    params, err = gbt.grid_search(X, y, grid)
+    assert params["n_trees"] == 60
+    assert err < 0.05

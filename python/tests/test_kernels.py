@@ -1,0 +1,109 @@
+"""L1 kernel correctness: Pallas vs pure-jnp oracle (hypothesis sweeps)."""
+
+import sys
+import os
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import gbt
+from compile.kernels.gbt_eval import gbt_eval
+from compile.kernels.periodogram import periodogram
+from compile.kernels.ref import gbt_eval_ref, periodogram_ref
+
+
+# ---------------------------------------------------------------- periodogram
+
+@pytest.mark.parametrize("n,kb", [(256, 32), (512, 64), (1024, 128), (2048, 128)])
+def test_periodogram_matches_ref_sizes(n, kb):
+    rng = np.random.default_rng(n)
+    x = np.sin(np.arange(n) * 0.21) + 0.3 * rng.normal(size=n) + 2.0
+    a = np.asarray(periodogram(jnp.asarray(x, jnp.float32), kb=kb))
+    b = np.asarray(periodogram_ref(jnp.asarray(x, jnp.float32)))
+    assert a.shape == (n // 2,)
+    np.testing.assert_allclose(a, b, rtol=2e-3, atol=2e-3 * float(b.max()))
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    logn=st.integers(8, 11),
+    freq=st.floats(0.01, 2.5),
+    offset=st.floats(-10.0, 10.0),
+)
+def test_periodogram_hypothesis(seed, logn, freq, offset):
+    n = 1 << logn
+    rng = np.random.default_rng(seed)
+    x = np.sin(np.arange(n) * freq) + offset + 0.1 * rng.normal(size=n)
+    a = np.asarray(periodogram(jnp.asarray(x, jnp.float32), kb=min(128, n // 2)))
+    b = np.asarray(periodogram_ref(jnp.asarray(x, jnp.float32)))
+    np.testing.assert_allclose(a, b, rtol=5e-3, atol=5e-3 * float(b.max() + 1e-6))
+
+
+def test_periodogram_peak_location():
+    n = 1024
+    k_true = 37
+    x = np.cos(2 * np.pi * k_true * np.arange(n) / n)
+    a = np.asarray(periodogram(jnp.asarray(x, jnp.float32)))
+    # output bin i corresponds to spectral bin i+1
+    assert int(np.argmax(a)) == k_true - 1
+    assert a.max() == pytest.approx(n / 2, rel=1e-3)
+
+
+def test_periodogram_dc_invariance():
+    n = 512
+    x = np.sin(np.arange(n) * 0.3)
+    a0 = np.asarray(periodogram(jnp.asarray(x, jnp.float32), kb=64))
+    a1 = np.asarray(periodogram(jnp.asarray(x + 123.0, jnp.float32), kb=64))
+    np.testing.assert_allclose(a0, a1, atol=0.3)
+
+
+# ------------------------------------------------------------------- gbt_eval
+
+def _toy_model(seed=0, n_trees=30, depth=4):
+    rng = np.random.default_rng(seed)
+    X = rng.uniform(0, 1, (800, 7))
+    y = 2 * X[:, 0] - X[:, 3] ** 2 + np.sin(4 * X[:, 5])
+    return gbt.train(X, y, n_trees=n_trees, max_depth=depth)
+
+
+def test_gbt_kernel_matches_ref_and_model():
+    m = _toy_model()
+    rng = np.random.default_rng(1)
+    Xq = rng.uniform(0, 1, (99, 7)).astype(np.float32)
+    dense = m.to_dense()
+    a = np.asarray(gbt_eval(Xq, *dense, base=m.base, lr=m.lr))
+    b = np.asarray(gbt_eval_ref(Xq, *dense, m.base, m.lr))
+    c = m.predict(Xq.astype(np.float64))
+    np.testing.assert_allclose(a, b, atol=1e-5)
+    np.testing.assert_allclose(a, c, rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    n_trees=st.integers(1, 40),
+    depth=st.integers(1, 6),
+    g=st.integers(1, 128),
+)
+def test_gbt_kernel_hypothesis(seed, n_trees, depth, g):
+    m = _toy_model(seed=seed % 17, n_trees=n_trees, depth=depth)
+    rng = np.random.default_rng(seed)
+    Xq = rng.uniform(-0.5, 1.5, (g, 7)).astype(np.float32)  # includes OOD
+    dense = m.to_dense()
+    a = np.asarray(gbt_eval(Xq, *dense, base=m.base, lr=m.lr))
+    c = m.predict(Xq.astype(np.float64))
+    np.testing.assert_allclose(a, c, rtol=2e-4, atol=2e-4)
+
+
+def test_gbt_single_leaf_tree():
+    # Degenerate: constant target -> every tree is one leaf.
+    X = np.tile(np.linspace(0, 1, 50)[:, None], (1, 3))
+    y = np.full(50, 2.5)
+    m = gbt.train(X, y, n_trees=5, max_depth=3)
+    pred = np.asarray(gbt_eval(X[:4].astype(np.float32), *m.to_dense(), base=m.base, lr=m.lr))
+    np.testing.assert_allclose(pred, 2.5, atol=1e-5)

@@ -1,0 +1,74 @@
+"""L2 model shape tests + AOT artifact smoke checks."""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import gbt, simdata
+from compile.model import make_predictor, periodogram_1024
+
+ARTIFACTS = os.path.join(simdata.repo_root(), "artifacts")
+
+
+def test_periodogram_module_shapes():
+    out = periodogram_1024(jnp.zeros(1024, jnp.float32))
+    assert out[0].shape == (512,)
+
+
+def test_predictor_shapes_and_determinism():
+    rng = np.random.default_rng(0)
+    X = rng.uniform(0, 1, (400, 17))
+    m_e = gbt.train(X, X[:, 0] + 0.5, n_trees=10, max_depth=3)
+    m_t = gbt.train(X, 1.5 - X[:, 0], n_trees=10, max_depth=3)
+    norms = np.linspace(0.2, 1.0, 99)
+    pred = make_predictor(m_e, m_t, norms)
+    f = jnp.asarray(rng.uniform(0, 1, 16), jnp.float32)
+    e1, t1 = pred(f)
+    e2, t2 = pred(f)
+    assert e1.shape == (99,) and t1.shape == (99,)
+    np.testing.assert_array_equal(np.asarray(e1), np.asarray(e2))
+
+
+def test_predictor_lowers_to_stablehlo():
+    rng = np.random.default_rng(1)
+    X = rng.uniform(0, 1, (300, 17))
+    m = gbt.train(X, X[:, 0], n_trees=5, max_depth=3)
+    pred = make_predictor(m, m, np.linspace(0, 1, 5))
+    lowered = jax.jit(pred).lower(jax.ShapeDtypeStruct((16,), jnp.float32))
+    ir = str(lowered.compiler_ir("stablehlo"))
+    assert "func.func public @main" in ir
+
+
+@pytest.mark.skipif(
+    not os.path.exists(os.path.join(ARTIFACTS, "predictor_sm.hlo.txt")),
+    reason="run `make artifacts` first",
+)
+def test_artifacts_exist_and_are_hlo_text():
+    for name in ("periodogram_1024", "predictor_sm", "predictor_mem"):
+        path = os.path.join(ARTIFACTS, f"{name}.hlo.txt")
+        with open(path) as f:
+            head = f.read(4096)
+        assert "HloModule" in head, f"{name} is not HLO text"
+        assert "ENTRY" in open(path).read()
+
+
+@pytest.mark.skipif(
+    not os.path.exists(os.path.join(ARTIFACTS, "meta.json")),
+    reason="run `make artifacts` first",
+)
+def test_meta_quality_gates():
+    import json
+
+    with open(os.path.join(ARTIFACTS, "meta.json")) as f:
+        meta = json.load(f)
+    # The paper reports ~2-3% mean prediction error; gate at 5%.
+    assert meta["checks"]["sm_holdout_mape_eng"] < 0.05
+    assert meta["checks"]["sm_holdout_mape_time"] < 0.05
+    assert meta["checks"]["periodogram_rel_err"] < 1e-3
+    assert len(meta["sm_gears"]) == 99

@@ -1,0 +1,106 @@
+"""Ground-truth twin tests: RNG vectors, app materialization invariants,
+training-data shapes, and (when artifacts exist) crosscheck consistency."""
+
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+import numpy as np
+import pytest
+
+from compile import prng, simdata
+
+
+def test_fnv_vectors():
+    assert prng.fnv1a64(b"") == 0xCBF29CE484222325
+    assert prng.fnv1a64(b"a") == 0xAF63DC4C8601EC8C
+    assert prng.fnv1a64(b"foobar") == 0x85944171F73967E8
+
+
+def test_pcg_deterministic_and_uniform():
+    a = prng.Pcg64(42, 1)
+    b = prng.Pcg64(42, 1)
+    va = [a.next_u64() for _ in range(8)]
+    vb = [b.next_u64() for _ in range(8)]
+    assert va == vb
+    xs = [prng.Pcg64(7, 7).next_f64()]
+    r = prng.Pcg64(7, 7)
+    xs = [r.next_f64() for _ in range(5000)]
+    assert abs(np.mean(xs) - 0.5) < 0.02
+    assert all(0.0 <= x < 1.0 for x in xs)
+
+
+def test_gauss_moments():
+    r = prng.Pcg64(11, 3)
+    xs = [r.gauss() for _ in range(5000)]
+    assert abs(np.mean(xs)) < 0.05
+    assert abs(np.std(xs) - 1.0) < 0.05
+
+
+def test_suite_sizes():
+    spec = simdata.Spec.load()
+    assert len(spec.suites["aibench"]["apps"]) == 14
+    assert len(spec.suites["gnns"]["apps"]) == 55
+    assert len(spec.suites["classical"]["apps"]) == 2
+
+
+def test_app_invariants():
+    spec = simdata.Spec.load()
+    for suite in ("aibench", "gnns", "classical", "pytorch_train"):
+        for app in simdata.materialize_suite(spec, suite):
+            assert abs(app.wc + app.wm + app.wo - 1.0) < 1e-9
+            assert app.t_base > 0
+            (sm, mem, op) = app.default_op(spec)
+            assert op.power_w <= spec.power["tdp_w"] + 1e-9
+            e, t = app.ratios_vs_default(spec, sm, mem)
+            assert e == pytest.approx(1.0) and t == pytest.approx(1.0)
+
+
+def test_reference_point_identity():
+    spec = simdata.Spec.load()
+    app = simdata.materialize_suite(spec, "aibench")[0]
+    op = app.op_point(spec, spec.reference_sm_gear, spec.reference_mem_gear)
+    assert op.t_iter_s == pytest.approx(app.t_base)
+
+
+def test_training_data_shapes():
+    spec = simdata.Spec.load()
+    data = simdata.training_data(spec, noise_replicas=1)
+    n_apps = len(spec.suites["pytorch_train"]["apps"])
+    Xs, ys = data["sm_eng"]
+    assert Xs.shape == (n_apps * 99 * 2, 17)
+    Xm, ym = data["mem_eng"]
+    assert Xm.shape == (n_apps * 5 * 2, 17)
+    # Ratios are positive and centered near 1.
+    assert ys.min() > 0.2 and ys.max() < 3.0
+
+
+def test_crosscheck_payload_schema():
+    spec = simdata.Spec.load()
+    payload = simdata.crosscheck_payload(spec)
+    assert len(payload["apps"]) >= 6
+    for app in payload["apps"]:
+        assert len(app["features"]) == 16
+        assert len(app["probes"]) == 4
+
+
+ARTIFACTS = os.path.join(simdata.repo_root(), "artifacts")
+
+
+@pytest.mark.skipif(
+    not os.path.exists(os.path.join(ARTIFACTS, "crosscheck.json")),
+    reason="run `make artifacts` first",
+)
+def test_crosscheck_file_matches_live_model():
+    spec = simdata.Spec.load()
+    with open(os.path.join(ARTIFACTS, "crosscheck.json")) as f:
+        stored = json.load(f)
+    live = simdata.crosscheck_payload(spec)
+    for a, b in zip(stored["apps"], live["apps"]):
+        assert a["name"] == b["name"]
+        np.testing.assert_allclose(a["features"], b["features"], rtol=1e-12)
+        assert a["trace_seed"] == b["trace_seed"]
+        for pa, pb in zip(a["probes"], b["probes"]):
+            assert pa["power_w"] == pytest.approx(pb["power_w"], rel=1e-12)

@@ -1,0 +1,123 @@
+//! Benchmark harness (`cargo bench`). The offline crate set has no
+//! criterion, so this is a hand-rolled timing harness: per target, warm
+//! up, run for a fixed budget, report ns/op plus per-paper-experiment
+//! end-to-end timings. These are the L3 perf numbers tracked in
+//! EXPERIMENTS.md §Perf.
+
+use gpoeo::coordinator::{run_policy, DefaultPolicy, Gpoeo, GpoeoCfg};
+use gpoeo::model::{NativeModels, Predictor};
+use gpoeo::signal::{calc_period, online_detect, sequence_similarity_error, PeriodCfg, SimilarityCfg};
+use gpoeo::sim::{find_app, SimGpu, Spec};
+use std::sync::Arc;
+use std::time::Instant;
+
+fn bench(name: &str, budget_ms: u64, mut f: impl FnMut()) {
+    // Warmup.
+    for _ in 0..3 {
+        f();
+    }
+    let budget = std::time::Duration::from_millis(budget_ms);
+    let start = Instant::now();
+    let mut iters = 0u64;
+    while start.elapsed() < budget {
+        f();
+        iters += 1;
+    }
+    let per = start.elapsed().as_nanos() as f64 / iters as f64;
+    let (val, unit) = if per >= 1e9 {
+        (per / 1e9, "s ")
+    } else if per >= 1e6 {
+        (per / 1e6, "ms")
+    } else if per >= 1e3 {
+        (per / 1e3, "µs")
+    } else {
+        (per, "ns")
+    };
+    println!("{name:<44} {val:>9.2} {unit}/op   ({iters} iters)");
+}
+
+fn make_trace(spec: &Arc<Spec>, name: &str, dur_s: f64, ts: f64) -> Vec<f64> {
+    let app = find_app(spec, name).unwrap();
+    let mut gpu = SimGpu::new(spec.clone(), app);
+    let n = (dur_s / ts) as usize;
+    let (mut p, mut us, mut um) = (vec![], vec![], vec![]);
+    for _ in 0..n {
+        gpu.advance(ts);
+        let s = gpu.sample(ts);
+        p.push(s.power_w);
+        us.push(s.util_sm);
+        um.push(s.util_mem);
+    }
+    gpoeo::signal::composite_feature(&p, &us, &um)
+}
+
+fn main() {
+    let spec = Arc::new(Spec::load_default().unwrap());
+    println!("== gpoeo bench harness ==");
+
+    // --- L3 hot paths ---------------------------------------------------
+    let ts = 0.025;
+    let trace = make_trace(&spec, "AI_I2T", 14.0, ts);
+    bench("signal: periodogram (560 samples)", 600, || {
+        let _ = gpoeo::signal::periodogram(&trace, ts);
+    });
+    bench("signal: similarity err (1 candidate)", 600, || {
+        let _ = sequence_similarity_error(1.05, &trace, ts, &SimilarityCfg::default());
+    });
+    bench("signal: calc_period (Alg 1)", 1500, || {
+        let _ = calc_period(&trace, ts, &PeriodCfg::default());
+    });
+    bench("signal: online_detect (Alg 3)", 2500, || {
+        let _ = online_detect(&trace, ts, &PeriodCfg::default());
+    });
+
+    let app = find_app(&spec, "AI_I2T").unwrap();
+    bench("sim: op_point eval", 300, || {
+        let _ = std::hint::black_box(app.op_point(&spec, 80, 3));
+    });
+    let mut gpu = SimGpu::new(spec.clone(), app.clone());
+    bench("sim: advance+sample tick", 400, || {
+        gpu.advance(ts);
+        let _ = std::hint::black_box(gpu.sample(ts));
+    });
+
+    // --- model inference: native vs AOT/PJRT ----------------------------
+    if let Ok(native) = NativeModels::load_default() {
+        let native = Predictor::Native(native);
+        bench("predict_sm: native GBT (99 gears x 2 models)", 1000, || {
+            let _ = native.predict_sm(&spec, &app.features).unwrap();
+        });
+        if let Some(rt) = gpoeo::runtime::Runtime::try_default() {
+            let feats: Vec<f32> = app.features.iter().map(|&v| v as f32).collect();
+            bench("predict_sm: HLO/PJRT (99 gears x 2 models)", 1000, || {
+                let _ = rt.predict_sm(&feats).unwrap();
+            });
+            let sig: Vec<f32> = (0..1024).map(|i| (i as f32 * 0.13).sin()).collect();
+            bench("periodogram: HLO/PJRT (1024 -> 512)", 1000, || {
+                let _ = rt.periodogram_1024(&sig).unwrap();
+            });
+        }
+    } else {
+        println!("(artifacts missing: model benches skipped — run `make artifacts`)");
+    }
+
+    // --- end-to-end paper-experiment timings -----------------------------
+    if let Ok(p) = Predictor::load_best() {
+        let predictor = Arc::new(p);
+        for name in ["AI_I2T", "CLB_MLP", "TSVM"] {
+            let app = find_app(&spec, name).unwrap();
+            let t0 = Instant::now();
+            let base = run_policy(&spec, &app, &mut DefaultPolicy { ts }, 150);
+            let mut g = Gpoeo::new(GpoeoCfg::default(), predictor.clone());
+            let run = run_policy(&spec, &app, &mut g, 150);
+            let s = gpoeo::coordinator::savings(&base, &run);
+            println!(
+                "e2e: optimize {name:<12} 150 iters: {:>6.2}s wall ({:>7.1}s virtual, saving {:+.1}%)",
+                t0.elapsed().as_secs_f64(),
+                base.time_s + run.time_s,
+                s.energy_saving * 100.0
+            );
+        }
+    }
+    println!("== done ==");
+}

@@ -1,0 +1,30 @@
+use gpoeo::signal::*;
+use std::f64::consts::PI;
+
+fn signal(period_s: f64, ts: f64, dur_s: f64) -> Vec<f64> {
+    let n = (dur_s / ts) as usize;
+    (0..n).map(|i| {
+        let t = i as f64 * ts;
+        let ph = (t / period_s).fract();
+        let base = if ph < 0.10 { 0.4 } else if ph < 0.50 { 0.95 } else if ph < 0.85 { 1.05 } else { 0.6 };
+        let h = (i as u64).wrapping_mul(0x9e3779b97f4a7c15);
+        let noise = ((h >> 11) as f64 / (1u64 << 53) as f64) - 0.5;
+        base + 0.04 * noise
+    }).collect()
+}
+
+fn main() {
+    let ts = 0.025;
+    let p = 1.7;
+    let smp = signal(p, ts, 18.0);
+    match online_detect(&smp, ts, &PeriodCfg::default()) {
+        Some(d) => println!("est {:.4} err {:.4} next {:?}", d.estimate.t_iter, d.estimate.err, d.next_sampling_s),
+        None => println!("none"),
+    }
+    let (freqs, ampls) = periodogram(&smp, ts);
+    let cands = gpoeo::signal::peaks::candidate_periods_prominence(&freqs, &ampls, 0.65, 8, 8.9);
+    for c in cands.iter().take(5) { println!("cand {:.4} ampl {:.1}", c.period_s, c.amplitude); }
+    for mult in [0.5, 1.0, 2.0] {
+        println!("err({}x)={:.4}", mult, sequence_similarity_error(p*mult, &smp, ts, &Default::default()));
+    }
+}

@@ -1,0 +1,40 @@
+// Scratch diagnostics: dump spectrum candidates + similarity errors.
+use gpoeo::sim::{find_app, SimGpu, Spec};
+use gpoeo::signal::*;
+use std::sync::Arc;
+
+fn main() {
+    let name = std::env::args().nth(1).unwrap_or("AI_I2T".into());
+    let spec = Arc::new(Spec::load_default().unwrap());
+    let app = find_app(&spec, &name).unwrap();
+    let mut gpu = SimGpu::new(spec.clone(), app);
+    if let Some(g) = std::env::args().nth(2).and_then(|s| s.parse::<usize>().ok()) {
+        gpu.set_sm_gear(g);
+    }
+    let truth = gpu.true_period();
+    let ts = 0.025;
+    let n = ((12.0 * truth).max(8.0) / ts) as usize;
+    let (mut p, mut us, mut um) = (vec![], vec![], vec![]);
+    for _ in 0..n {
+        gpu.advance(ts);
+        let s = gpu.sample(ts);
+        p.push(s.power_w); us.push(s.util_sm); um.push(s.util_mem);
+    }
+    let feat = composite_feature(&p, &us, &um);
+    println!("app {name} truth {truth:.4} window {:.1}s", n as f64 * ts);
+    let (freqs, ampls) = periodogram(&feat, ts);
+    let cands = gpoeo::signal::peaks::candidate_periods_prominence(&freqs, &ampls, 0.65, 8, (n as f64 - 1.0) * ts / 2.0);
+    for c in &cands {
+        println!("  cand T={:.4} ampl={:.1}", c.period_s, c.amplitude);
+    }
+    match online_detect(&feat, ts, &PeriodCfg::default()) {
+        Some(d) => println!("  online: est {:.4} err {:.4} next {:?}", d.estimate.t_iter, d.estimate.err, d.next_sampling_s),
+        None => println!("  online: none"),
+    }
+    let cfg = SimilarityCfg::default();
+    for mult in [0.25, 0.5, 1.0, 2.0, 3.0] {
+        let t = truth * mult;
+        let e = sequence_similarity_error(t, &feat, ts, &cfg);
+        println!("  err({:.4} = {mult}x truth) = {:.4}", t, e);
+    }
+}

@@ -1,0 +1,23 @@
+// Diagnostics: run probe HLOs through the PJRT loader and print outputs.
+fn main() -> anyhow::Result<()> {
+    let client = xla::PjRtClient::cpu()?;
+    for name in std::env::args().skip(1) {
+        let path = format!("/tmp/{name}.hlo.txt");
+        let proto = xla::HloModuleProto::from_text_file(&path)?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client.compile(&comp)?;
+        let x: Vec<f32> = (0..16).map(|i| i as f32 / 4.0).collect();
+        let lit = xla::Literal::vec1(&x);
+        let result = exe.execute::<xla::Literal>(&[lit])?[0][0].to_literal_sync()?;
+        match result.to_tuple() {
+            Ok(parts) => {
+                for (i, p) in parts.iter().enumerate() {
+                    let v = p.to_vec::<f32>().unwrap_or_default();
+                    println!("{name}[{i}]: {:?}", &v[..4.min(v.len())]);
+                }
+            }
+            Err(e) => println!("{name}: tuple error {e}"),
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,13 @@
+// Probe a 2-output predictor module.
+fn main() -> anyhow::Result<()> {
+    let client = xla::PjRtClient::cpu()?;
+    let proto = xla::HloModuleProto::from_text_file("/tmp/p8_predictor.hlo.txt")?;
+    let comp = xla::XlaComputation::from_proto(&proto);
+    let exe = client.compile(&comp)?;
+    let x: Vec<f32> = (0..16).map(|i| i as f32 / 4.0).collect();
+    let result = exe.execute::<xla::Literal>(&[xla::Literal::vec1(&x)])?[0][0].to_literal_sync()?;
+    let (a, b) = result.to_tuple2()?;
+    println!("e[:4] = {:?}", &a.to_vec::<f32>()?[..4]);
+    println!("t[:4] = {:?}", &b.to_vec::<f32>()?[..4]);
+    Ok(())
+}

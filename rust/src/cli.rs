@@ -1,0 +1,187 @@
+//! CLI dispatch for the `gpoeo` binary.
+
+use crate::coordinator::oracle::{oracle_full, oracle_ordered};
+use crate::search::Objective;
+use crate::sim::{find_app, SimGpu, Spec};
+use crate::signal::{calc_period_fft_argmax, online_detect, composite_feature, PeriodCfg};
+use crate::util::cli::Args;
+use crate::util::table::{s, Cell, Table};
+use std::sync::Arc;
+
+pub fn dispatch(args: &Args) -> anyhow::Result<()> {
+    match args.subcommand.as_deref() {
+        Some("list") => cmd_list(),
+        Some("calibrate") => cmd_calibrate(args),
+        Some("detect") => cmd_detect(args),
+        Some("run") => crate::coordinator::cli_run(args),
+        Some("experiment") => crate::experiments::cli_experiment(args),
+        Some("daemon") => crate::coordinator::cli_daemon(args),
+        Some(other) => anyhow::bail!("unknown subcommand '{other}'; see --help"),
+        None => {
+            print_help();
+            Ok(())
+        }
+    }
+}
+
+fn print_help() {
+    println!(
+        "gpoeo — online GPU energy optimization (GPOEO, TPDS 2022 reproduction)
+
+USAGE: gpoeo <SUBCOMMAND> [OPTIONS]
+
+SUBCOMMANDS:
+  list                         list benchmark suites and applications
+  calibrate [--suite S]        ground-truth coefficients + oracle savings
+  detect --app A [--sm-gear G] period detection on a simulated trace
+  run --app A [--objective O]  GPOEO online optimization of one app
+  experiment <id>              regenerate a paper table/figure
+                               (fig1 fig2 fig3 fig5 fig6 fig7 fig8 fig9
+                                fig10 fig11 fig12 fig13 table3 fig14
+                                fig15 headline | all)
+  daemon [--socket PATH]       Begin/End API server (micro-intrusive mode)
+
+COMMON OPTIONS:
+  --artifacts DIR              AOT artifact directory (default: artifacts)
+  --format text|markdown|csv   table output format (default: text)"
+    );
+}
+
+fn cmd_list() -> anyhow::Result<()> {
+    let spec = Spec::load_default()?;
+    for (name, suite) in &spec.suites {
+        println!("suite {name} ({} apps, seed_salt {})", suite.apps.len(), suite.seed_salt);
+        for app in &suite.apps {
+            let arch = &spec.archetypes[&app.archetype];
+            let aperiodic = app.aperiodic.unwrap_or(arch.aperiodic);
+            println!(
+                "  {:<16} archetype={:<15}{}",
+                app.name,
+                app.archetype,
+                if aperiodic { " [aperiodic]" } else { "" }
+            );
+        }
+    }
+    Ok(())
+}
+
+/// Render a table in the requested format.
+pub fn print_table(t: &Table, args: &Args) {
+    match args.opt_or("format", "text") {
+        "markdown" => print!("{}", t.to_markdown()),
+        "csv" => print!("{}", t.to_csv()),
+        _ => print!("{}", t.to_text()),
+    }
+}
+
+fn cmd_calibrate(args: &Args) -> anyhow::Result<()> {
+    let spec = Spec::load_default()?;
+    let obj = Objective::paper_default();
+    let suites: Vec<String> = match args.opt("suite") {
+        Some(sname) => vec![sname.to_string()],
+        None => spec.suites.keys().cloned().collect(),
+    };
+
+    let mut t = Table::new(
+        "Ground-truth calibration (oracle under min-energy s.t. slowdown ≤5%)",
+        &[
+            "app", "arch", "wc", "wm", "s_m", "gamma", "dfltSM", "P@dflt", "orcSM", "orcMem",
+            "save", "slow", "ed2p", "ordSM", "ordMem",
+        ],
+    );
+    let mut savings = Vec::new();
+    for sname in &suites {
+        let suite = spec
+            .suites
+            .get(sname)
+            .ok_or_else(|| anyhow::anyhow!("unknown suite '{sname}'"))?;
+        for e in &suite.apps {
+            let app = find_app(&spec, &e.name)?;
+            let full = oracle_full(&app, &spec, obj);
+            let ord = oracle_ordered(&app, &spec, obj);
+            let (dflt_sm, _, dflt) = app.default_op(&spec);
+            savings.push(full.energy_saving);
+            t.rowf(&[
+                s(&app.name),
+                s(&app.archetype),
+                Cell::F(app.wc, 2),
+                Cell::F(app.wm, 2),
+                Cell::F(app.s_m, 2),
+                Cell::F(app.gamma, 2),
+                Cell::U(dflt_sm),
+                Cell::F(dflt.power_w, 0),
+                Cell::U(full.sm_gear),
+                Cell::F(spec.gears.mem_mhz_of(full.mem_gear), 0),
+                Cell::Pct(full.energy_saving),
+                Cell::Pct(full.slowdown),
+                Cell::Pct(full.ed2p_saving),
+                Cell::U(ord.sm_gear),
+                Cell::F(spec.gears.mem_mhz_of(ord.mem_gear), 0),
+            ]);
+        }
+    }
+    print_table(&t, args);
+    println!(
+        "\nmean oracle saving {:.1}%  min {:.1}%  max {:.1}%  (n={})",
+        crate::util::stats::mean(&savings) * 100.0,
+        savings.iter().cloned().fold(f64::INFINITY, f64::min) * 100.0,
+        savings.iter().cloned().fold(f64::NEG_INFINITY, f64::max) * 100.0,
+        savings.len()
+    );
+    Ok(())
+}
+
+fn cmd_detect(args: &Args) -> anyhow::Result<()> {
+    let spec = Arc::new(Spec::load_default()?);
+    let name = args
+        .opt("app")
+        .ok_or_else(|| anyhow::anyhow!("detect requires --app NAME"))?;
+    let app = find_app(&spec, name)?;
+    let sm = args.opt_usize("sm-gear", spec.gears.default_sm_gear)?;
+    let mem = args.opt_usize("mem-gear", spec.gears.default_mem_gear)?;
+    let ts = args.opt_f64("ts", 0.025)?;
+    let dur = args.opt_f64("duration", 0.0)?;
+
+    let mut gpu = SimGpu::new(spec.clone(), app);
+    gpu.set_sm_gear(sm);
+    gpu.set_mem_gear(mem);
+    let truth = gpu.true_period();
+    let duration = if dur > 0.0 { dur } else { (12.0 * truth).max(8.0) };
+
+    let n = (duration / ts) as usize;
+    let mut power = Vec::with_capacity(n);
+    let mut usm = Vec::with_capacity(n);
+    let mut umem = Vec::with_capacity(n);
+    for _ in 0..n {
+        gpu.advance(ts);
+        let smp = gpu.sample(ts);
+        power.push(smp.power_w);
+        usm.push(smp.util_sm);
+        umem.push(smp.util_mem);
+    }
+    let feat = composite_feature(&power, &usm, &umem);
+
+    println!("app {} (sm gear {sm}, mem gear {mem})", gpu.app.name);
+    println!("  true period    : {truth:.4} s  (aperiodic: {})", gpu.app.aperiodic);
+    match online_detect(&feat, ts, &PeriodCfg::default()) {
+        Some(d) => {
+            let err = (d.estimate.t_iter - truth).abs() / truth;
+            println!(
+                "  GPOEO detected : {:.4} s  err {:.2}%  self-err {:.3}  stable: {}",
+                d.estimate.t_iter,
+                err * 100.0,
+                d.estimate.err,
+                d.next_sampling_s.is_none()
+            );
+        }
+        None => println!("  GPOEO detected : (none)"),
+    }
+    match calc_period_fft_argmax(&feat, ts) {
+        Some(d) => {
+            let err = (d.t_iter - truth).abs() / truth;
+            println!("  ODPP  detected : {:.4} s  err {:.2}%", d.t_iter, err * 100.0);
+        }
+        None => println!("  ODPP  detected : (none)"),
+    }
+    Ok(())
+}

@@ -1,0 +1,522 @@
+//! The GPOEO online controller — the paper's system contribution (Fig. 4).
+//!
+//! Lifecycle per workload:
+//!
+//! 1. **Sampling** (③): sample power/util at `ts`, build the composite
+//!    `Feature_dect` channel, and run the online robust period detection
+//!    (Algorithms 1–3) until the iteration period stabilizes. Apps whose
+//!    traces never stabilize (or stabilize with a poor similarity score)
+//!    take the aperiodic path (§4.3.5) with a fixed measurement window.
+//! 2. **Measure** (④): one counter session of exactly one (dilated)
+//!    period — the micro-intrusive feature measurement of Algorithm 4 —
+//!    yielding the Table-2 feature vector plus the (power, IPS) baseline.
+//! 3. **Predict** (⑤⑥): the four GBT models (AOT-compiled HLO via PJRT,
+//!    or the native twin) score every SM/memory gear; the objective picks
+//!    the predicted optimum.
+//! 4. **Search** (⑦): golden-section local search around the prediction —
+//!    memory clock first (a wrong memory clock is catastrophic), then SM
+//!    clock. Each probe measures (power, IPS) for one period at the
+//!    candidate gear; ratios against the baseline feed the objective.
+//! 5. **Monitor** (⑧): watch the energy characteristic (windowed mean
+//!    power); on fluctuation beyond the threshold, reset to default
+//!    clocks and restart from step 1.
+
+use crate::model::Predictor;
+use crate::search::{local_search, Objective, SearchResult};
+use crate::signal::{composite_feature, online_detect_with, PeriodCfg};
+use crate::sim::SimGpu;
+use crate::util::stats::mean;
+use std::sync::Arc;
+
+/// Controller configuration (paper defaults).
+#[derive(Clone)]
+pub struct GpoeoCfg {
+    /// NVML sampling interval (seconds).
+    pub ts: f64,
+    pub objective: Objective,
+    pub period: PeriodCfg,
+    /// Initial `SmpDur_init` sampling window before the first detection.
+    pub initial_window_s: f64,
+    /// Give up on periodicity beyond this window (aperiodic path).
+    pub max_window_s: f64,
+    /// Detection rounds before falling back to the aperiodic path.
+    pub max_detect_rounds: usize,
+    /// Similarity self-error above which the app is treated as aperiodic.
+    pub aperiodic_err: f64,
+    /// Fixed measurement interval for aperiodic apps (§4.3.5).
+    pub aperiodic_window_s: f64,
+    /// Clock-settle time before a probe measurement.
+    pub settle_s: f64,
+    /// Monitor: relative power fluctuation that triggers re-optimization.
+    pub fluct_threshold: f64,
+    /// Monitor window, in multiples of the detected period.
+    pub monitor_window_mult: f64,
+    /// When false, the controller measures and searches but never sets
+    /// clocks — the overhead-accounting mode of Fig. 15.
+    pub actuate: bool,
+    /// Ablations: skip the memory- or SM-clock stage.
+    pub optimize_mem: bool,
+    pub optimize_sm: bool,
+    /// Ablation: apply the predicted gears directly (no local search).
+    pub skip_search: bool,
+    /// Ablation: ignore the model (local search starts from the default
+    /// gears — what a counter-free controller would have to do).
+    pub ignore_prediction: bool,
+}
+
+impl Default for GpoeoCfg {
+    fn default() -> Self {
+        GpoeoCfg {
+            ts: 0.025,
+            objective: Objective::paper_default(),
+            period: PeriodCfg::default(),
+            initial_window_s: 6.0,
+            max_window_s: 45.0,
+            max_detect_rounds: 6,
+            aperiodic_err: 0.35,
+            aperiodic_window_s: 2.5,
+            settle_s: 0.15,
+            fluct_threshold: 0.12,
+            monitor_window_mult: 3.0,
+            actuate: true,
+            optimize_mem: true,
+            optimize_sm: true,
+            skip_search: false,
+            ignore_prediction: false,
+        }
+    }
+}
+
+/// Optimization trace for Table 3 / diagnostics.
+#[derive(Debug, Clone, Default)]
+pub struct GpoeoStats {
+    pub detect_rounds: usize,
+    pub detected_period_s: f64,
+    pub detection_self_err: f64,
+    pub treated_aperiodic: bool,
+    pub predicted_sm_gear: usize,
+    pub searched_sm_gear: usize,
+    pub search_steps_sm: usize,
+    pub predicted_mem_gear: usize,
+    pub searched_mem_gear: usize,
+    pub search_steps_mem: usize,
+    pub reoptimizations: usize,
+    /// Ground-truth period at detection time (for error scoring).
+    pub true_period_s: f64,
+}
+
+enum Phase {
+    Sampling { until_s: f64 },
+    Monitor { window_end_s: f64, p_ref: f64 },
+}
+
+/// The online controller. Implements [`crate::coordinator::Policy`].
+pub struct Gpoeo {
+    pub cfg: GpoeoCfg,
+    pub stats: GpoeoStats,
+    predictor: Arc<Predictor>,
+    phase: Phase,
+    // Sampling rings for Feature_dect.
+    power: Vec<f64>,
+    util_sm: Vec<f64>,
+    util_mem: Vec<f64>,
+    window_start_s: f64,
+    // Monitor accumulator.
+    mon_acc: Vec<f64>,
+    period_s: f64,
+    aperiodic: bool,
+}
+
+impl Gpoeo {
+    pub fn new(cfg: GpoeoCfg, predictor: Arc<Predictor>) -> Gpoeo {
+        let until = cfg.initial_window_s;
+        Gpoeo {
+            cfg,
+            stats: GpoeoStats::default(),
+            predictor,
+            phase: Phase::Sampling { until_s: until },
+            power: Vec::new(),
+            util_sm: Vec::new(),
+            util_mem: Vec::new(),
+            window_start_s: 0.0,
+            mon_acc: Vec::new(),
+            period_s: 0.0,
+            aperiodic: false,
+        }
+    }
+
+    /// Spectrum front-end: the PJRT-compiled Pallas periodogram when the
+    /// HLO backend is loaded, else the native FFT. The trace window is
+    /// linearly resampled to the kernel's fixed 1024-point input.
+    fn spectrum(&self, smp: &[f64], ts: f64) -> (Vec<f64>, Vec<f64>) {
+        if let Predictor::Hlo(rt) = &*self.predictor {
+            if smp.len() >= 64 {
+                let n = 1024usize;
+                let dur = (smp.len() - 1) as f64 * ts;
+                let ts2 = dur / (n - 1) as f64;
+                let mut resampled = Vec::with_capacity(n);
+                for i in 0..n {
+                    let x = i as f64 * ts2 / ts;
+                    let j = (x.floor() as usize).min(smp.len() - 2);
+                    let frac = x - j as f64;
+                    resampled.push((smp[j] * (1.0 - frac) + smp[j + 1] * frac) as f32);
+                }
+                if let Ok(ampls) = rt.periodogram_1024(&resampled) {
+                    // Bin k of the output is spectral bin k+1; drop the
+                    // Nyquist bin to match the native periodogram exactly.
+                    let freqs: Vec<f64> =
+                        (1..n / 2).map(|k| k as f64 / (n as f64 * ts2)).collect();
+                    let ampls: Vec<f64> =
+                        ampls[..n / 2 - 1].iter().map(|&a| a as f64).collect();
+                    return (freqs, ampls);
+                }
+            }
+        }
+        crate::signal::periodogram(smp, ts)
+    }
+
+    // ------------------------------------------------------------------
+    // Synchronous measurement helpers (drive the gpu forward directly).
+    // ------------------------------------------------------------------
+
+    /// Measure (avg power, IPS) over `window_s` at the current clocks,
+    /// with a counter session active.
+    fn probe_measure(&mut self, gpu: &mut SimGpu, window_s: f64) -> (f64, f64) {
+        // Settle after a clock change.
+        gpu.advance(self.cfg.settle_s);
+        gpu.start_counter_session();
+        let e0 = gpu.energy_j();
+        let t0 = gpu.time_s();
+        let quarter = (window_s / 4.0).max(self.cfg.ts);
+        let mut ips_acc = 0.0;
+        for _ in 0..4 {
+            gpu.advance(quarter);
+            ips_acc += gpu.ips();
+        }
+        let e1 = gpu.energy_j();
+        let t1 = gpu.time_s();
+        gpu.stop_counter_session();
+        let p = (e1 - e0) / (t1 - t0);
+        (p, ips_acc / 4.0)
+    }
+
+    /// Average power over `window_s` without a counter session (used by
+    /// the monitor to establish the post-optimization reference).
+    fn plain_power(&mut self, gpu: &mut SimGpu, window_s: f64) -> f64 {
+        let n = (window_s / self.cfg.ts).ceil() as usize;
+        let mut acc = 0.0;
+        for _ in 0..n {
+            gpu.advance(self.cfg.ts);
+            acc += gpu.sample(self.cfg.ts).power_w as f64;
+        }
+        acc / n as f64
+    }
+
+    /// Steps 2–4 of the lifecycle, run synchronously once the period is
+    /// known: feature measurement, prediction, memory search, SM search.
+    fn measure_and_optimize(&mut self, gpu: &mut SimGpu) -> anyhow::Result<f64> {
+        let spec = gpu.spec.clone();
+        let tax = spec.profiling_tax.counter_time_mult;
+        let feat_window = self.period_s * tax;
+
+        // --- Algorithm 4 tail: one (dilated) period of counter profiling.
+        gpu.advance(self.cfg.settle_s);
+        gpu.start_counter_session();
+        gpu.advance(feat_window);
+        let features = gpu.read_counters();
+        gpu.stop_counter_session();
+
+        // --- Baseline (power, IPS) at the entry clocks: a longer window
+        // than search probes, because every downstream ratio divides by it
+        // (a 1% optimistic baseline biases every decision by 1%).
+        let (p_base, ips_base) = self.probe_measure(gpu, (2.0 * self.period_s).max(1.0));
+
+        // --- Predict the optimal gears (⑤⑥).
+        let pred_sm = self.predictor.predict_sm(&spec, &features)?;
+        let pred_mem = self.predictor.predict_mem(&spec, &features)?;
+        let (g_sm_pred, g_mem_pred) = if self.cfg.ignore_prediction {
+            (gpu.sm_gear(), gpu.mem_gear())
+        } else {
+            (
+                pred_sm.best(self.cfg.objective),
+                pred_mem.best(self.cfg.objective),
+            )
+        };
+        self.stats.predicted_sm_gear = g_sm_pred;
+        self.stats.predicted_mem_gear = g_mem_pred;
+
+        let probe_window = self.period_s.clamp(0.4, 4.0);
+        let entry_sm = gpu.sm_gear();
+        let entry_mem = gpu.mem_gear();
+
+        // Probe evaluation: energy/time ratios vs the measured baseline.
+        // time ratio = IPS_base / IPS_probe (fixed work per iteration);
+        // energy ratio = (P/IPS) / (P_base/IPS_base).
+        macro_rules! probe_score {
+            ($self:ident, $gpu:ident, $w:expr) => {{
+                let (p, ips) = $self.probe_measure($gpu, $w);
+                let t_ratio = ips_base / ips.max(1e-9);
+                let e_ratio = (p / ips.max(1e-9)) / (p_base / ips_base);
+                $self.cfg.objective.score(e_ratio, t_ratio)
+            }};
+        }
+
+        // --- Memory-clock local search first (⑦, §4.3.4).
+        let mem_best = if self.cfg.optimize_mem && self.cfg.skip_search {
+            if self.cfg.actuate {
+                gpu.set_mem_gear(g_mem_pred);
+            }
+            SearchResult {
+                best_gear: g_mem_pred,
+                steps: 0,
+                probes: vec![],
+            }
+        } else if self.cfg.optimize_mem {
+            let mut eval = |g: usize| -> f64 {
+                if self.cfg.actuate {
+                    gpu.set_mem_gear(g);
+                    probe_score!(self, gpu, probe_window)
+                } else {
+                    // Overhead mode: pay the measurement, use the model.
+                    let _ = self.probe_measure(gpu, probe_window);
+                    let i = pred_mem.gears.iter().position(|&x| x == g).unwrap();
+                    self.cfg
+                        .objective
+                        .score(pred_mem.energy_ratio[i], pred_mem.time_ratio[i])
+                }
+            };
+            let r = local_search(g_mem_pred, 0, spec.gears.num_mem_gears() - 1, &mut eval);
+            if self.cfg.actuate {
+                gpu.set_mem_gear(r.best_gear);
+            }
+            r
+        } else {
+            SearchResult {
+                best_gear: entry_mem,
+                steps: 0,
+                probes: vec![],
+            }
+        };
+        self.stats.searched_mem_gear = mem_best.best_gear;
+        self.stats.search_steps_mem = mem_best.steps;
+
+        // --- SM-clock local search on top of the chosen memory clock.
+        let sm_best = if self.cfg.optimize_sm && self.cfg.skip_search {
+            if self.cfg.actuate {
+                gpu.set_sm_gear(g_sm_pred);
+            }
+            SearchResult {
+                best_gear: g_sm_pred,
+                steps: 0,
+                probes: vec![],
+            }
+        } else if self.cfg.optimize_sm {
+            let mut eval = |g: usize| -> f64 {
+                if self.cfg.actuate {
+                    gpu.set_sm_gear(g);
+                    probe_score!(self, gpu, probe_window)
+                } else {
+                    let _ = self.probe_measure(gpu, probe_window);
+                    let i = pred_sm.gears.iter().position(|&x| x == g).unwrap();
+                    self.cfg
+                        .objective
+                        .score(pred_sm.energy_ratio[i], pred_sm.time_ratio[i])
+                }
+            };
+            let r = local_search(
+                g_sm_pred,
+                spec.gears.sm_gear_min,
+                spec.gears.sm_gear_max,
+                &mut eval,
+            );
+            if self.cfg.actuate {
+                gpu.set_sm_gear(r.best_gear);
+            }
+            r
+        } else {
+            SearchResult {
+                best_gear: entry_sm,
+                steps: 0,
+                probes: vec![],
+            }
+        };
+        self.stats.searched_sm_gear = sm_best.best_gear;
+        self.stats.search_steps_sm = sm_best.steps;
+
+        // --- Cap confirmation: the search selects the lowest gear that
+        // *measured* feasible, a one-sided (winner's-curse) estimator
+        // that systematically overshoots the slowdown cap. Re-verify the
+        // chosen gear with a longer window; climb back up until feasible.
+        if self.cfg.actuate && self.cfg.optimize_sm {
+            if let Objective::EnergyCapped { max_time_ratio } = self.cfg.objective {
+                let mut g = self.stats.searched_sm_gear;
+                for _ in 0..4 {
+                    gpu.set_sm_gear(g);
+                    let (_, ips) = self.probe_measure(gpu, (2.0 * probe_window).min(6.0));
+                    self.stats.search_steps_sm += 1;
+                    let t_ratio = ips_base / ips.max(1e-9);
+                    if t_ratio <= max_time_ratio || g >= entry_sm {
+                        break;
+                    }
+                    // Climb proportionally to the measured overshoot so a
+                    // deep miss (noisy aperiodic probes) recovers in a few
+                    // steps instead of crawling +2 at a time.
+                    let overshoot = (t_ratio - max_time_ratio) / max_time_ratio;
+                    let step = ((overshoot * 60.0).ceil() as usize).clamp(2, 12);
+                    g = (g + step).min(entry_sm);
+                }
+                gpu.set_sm_gear(g);
+                self.stats.searched_sm_gear = g;
+            }
+        }
+
+        // --- Establish the monitor reference at the final configuration.
+        let p_ref = self.plain_power(gpu, (self.period_s).clamp(0.5, 4.0));
+        Ok(p_ref)
+    }
+
+    fn restart_sampling(&mut self, gpu: &mut SimGpu) {
+        self.power.clear();
+        self.util_sm.clear();
+        self.util_mem.clear();
+        self.window_start_s = gpu.time_s();
+        self.stats.detect_rounds = 0;
+        self.aperiodic = false;
+        self.phase = Phase::Sampling {
+            until_s: gpu.time_s() + self.cfg.initial_window_s,
+        };
+    }
+
+    fn enter_monitor(&mut self, gpu: &mut SimGpu, p_ref: f64) {
+        // Aperiodic traces are random segment walks: short windows jump
+        // around the mean by construction, so monitor over a much longer
+        // horizon to avoid spurious re-optimizations.
+        let mult = if self.aperiodic {
+            4.0 * self.cfg.monitor_window_mult
+        } else {
+            self.cfg.monitor_window_mult
+        };
+        let w = self.period_s.max(0.5) * mult;
+        self.mon_acc.clear();
+        self.phase = Phase::Monitor {
+            window_end_s: gpu.time_s() + w,
+            p_ref,
+        };
+    }
+
+    fn finish_detection(&mut self, gpu: &mut SimGpu) {
+        self.stats.true_period_s = gpu.true_period();
+        match self.measure_and_optimize(gpu) {
+            Ok(p_ref) => self.enter_monitor(gpu, p_ref),
+            Err(e) => {
+                eprintln!("gpoeo: optimization failed ({e}); staying at default");
+                gpu.set_default_clocks();
+                self.enter_monitor(gpu, f64::NAN);
+            }
+        }
+    }
+}
+
+impl crate::coordinator::Policy for Gpoeo {
+    fn name(&self) -> &'static str {
+        "gpoeo"
+    }
+
+    fn tick(&mut self, gpu: &mut SimGpu) {
+        let ts = self.cfg.ts;
+        match self.phase {
+            Phase::Sampling { until_s } => {
+                gpu.advance(ts);
+                let s = gpu.sample(ts);
+                self.power.push(s.power_w);
+                self.util_sm.push(s.util_sm);
+                self.util_mem.push(s.util_mem);
+                if gpu.time_s() < until_s {
+                    return;
+                }
+                let window_s = gpu.time_s() - self.window_start_s;
+                let feat = composite_feature(&self.power, &self.util_sm, &self.util_mem);
+                let mut spectrum = {
+                    let this: &Gpoeo = self;
+                    // Safety: spectrum() only reads predictor state.
+                    move |s: &[f64], t: f64| this.spectrum(s, t)
+                };
+                let det = online_detect_with(&feat, ts, &self.cfg.period, &mut spectrum);
+                match det {
+                    Some(d) if d.next_sampling_s.is_none()
+                        && d.estimate.err <= self.cfg.aperiodic_err =>
+                    {
+                        self.period_s = d.estimate.t_iter;
+                        self.stats.detected_period_s = d.estimate.t_iter;
+                        self.stats.detection_self_err = d.estimate.err;
+                        self.stats.treated_aperiodic = false;
+                        self.finish_detection(gpu);
+                    }
+                    other => {
+                        self.stats.detect_rounds += 1;
+                        let give_up = self.stats.detect_rounds >= self.cfg.max_detect_rounds
+                            || window_s >= self.cfg.max_window_s
+                            || matches!(&other, Some(d) if d.next_sampling_s.is_none());
+                        if give_up {
+                            // Aperiodic path (§4.3.5): fixed interval.
+                            self.aperiodic = true;
+                            self.period_s = self.cfg.aperiodic_window_s;
+                            self.stats.treated_aperiodic = true;
+                            if let Some(d) = other {
+                                self.stats.detected_period_s = d.estimate.t_iter;
+                                self.stats.detection_self_err = d.estimate.err;
+                            }
+                            self.finish_detection(gpu);
+                        } else {
+                            let ext = other
+                                .and_then(|d| d.next_sampling_s)
+                                .unwrap_or(self.cfg.initial_window_s / 2.0)
+                                .clamp(0.5, 12.0);
+                            self.phase = Phase::Sampling {
+                                until_s: gpu.time_s() + ext,
+                            };
+                        }
+                    }
+                }
+            }
+            Phase::Monitor { window_end_s, p_ref } => {
+                gpu.advance(ts);
+                self.mon_acc.push(gpu.sample(ts).power_w);
+                if gpu.time_s() < window_end_s {
+                    return;
+                }
+                let p_now = mean(&self.mon_acc);
+                self.mon_acc.clear();
+                let fluct = if p_ref.is_finite() {
+                    (p_now - p_ref).abs() / p_ref
+                } else {
+                    1.0
+                };
+                let threshold = if self.aperiodic {
+                    2.0 * self.cfg.fluct_threshold
+                } else {
+                    self.cfg.fluct_threshold
+                };
+                if fluct > threshold {
+                    // Energy characteristic shifted: workload changed.
+                    self.stats.reoptimizations += 1;
+                    if self.cfg.actuate {
+                        gpu.set_default_clocks();
+                    }
+                    self.restart_sampling(gpu);
+                } else {
+                    let mult = if self.aperiodic {
+                        4.0 * self.cfg.monitor_window_mult
+                    } else {
+                        self.cfg.monitor_window_mult
+                    };
+                    let w = self.period_s.max(0.5) * mult;
+                    self.phase = Phase::Monitor {
+                        window_end_s: gpu.time_s() + w,
+                        p_ref,
+                    };
+                }
+            }
+        }
+    }
+}

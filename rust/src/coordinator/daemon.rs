@@ -1,0 +1,215 @@
+//! Begin/End daemon — the micro-intrusive API of §2.2.2/§4.2.
+//!
+//! The paper's deployment model: a training script links a two-call API
+//! (`Begin` at the start of the training region, `End` at the end); a
+//! separate optimizer process owns the GPU clocks. Here the daemon owns a
+//! simulated device per session and drives the GPOEO controller, so an
+//! external client can exercise the exact same contract over a Unix
+//! socket with a line protocol:
+//!
+//! ```text
+//! -> BEGIN <app-name> [iters]
+//! <- OK session started
+//! -> STATUS            (any time)
+//! <- STATUS <iter> <time_s> <energy_j> <sm_gear> <mem_gear>
+//! -> END
+//! <- RESULT <energy_j> <time_s> <iterations> <sm_gear> <mem_gear>
+//! ```
+//!
+//! One session at a time per connection; concurrent connections get their
+//! own simulated device (one GPU each — the paper's setting).
+
+use crate::coordinator::{Gpoeo, GpoeoCfg, Policy};
+use crate::model::Predictor;
+use crate::sim::{find_app, SimGpu, Spec};
+// NOTE: the xla PJRT client is not Send (Rc internals), so each
+// connection thread builds its own Predictor — HLO executables compile
+// once per connection, then serve every session on that connection.
+use std::io::{BufRead, BufReader, Write};
+use std::os::unix::net::{UnixListener, UnixStream};
+use std::path::Path;
+use std::sync::Arc;
+
+pub struct Daemon {
+    spec: Arc<Spec>,
+}
+
+struct Session {
+    gpu: SimGpu,
+    controller: Gpoeo,
+    target_iters: u64,
+}
+
+impl Session {
+    /// Advance the session by a chunk of virtual time.
+    fn step(&mut self) {
+        self.controller.tick(&mut self.gpu);
+    }
+
+    fn done(&self) -> bool {
+        self.gpu.iterations() >= self.target_iters
+    }
+}
+
+impl Daemon {
+    pub fn new(spec: Arc<Spec>) -> Daemon {
+        Daemon { spec }
+    }
+
+    /// Serve forever on a Unix socket (one thread per connection).
+    pub fn serve(&self, socket_path: &Path) -> anyhow::Result<()> {
+        let _ = std::fs::remove_file(socket_path);
+        let listener = UnixListener::bind(socket_path)?;
+        eprintln!("gpoeo daemon listening on {}", socket_path.display());
+        for stream in listener.incoming() {
+            let stream = stream?;
+            let spec = self.spec.clone();
+            std::thread::spawn(move || {
+                let predictor = match Predictor::load_best() {
+                    Ok(p) => Arc::new(p),
+                    Err(e) => {
+                        eprintln!("daemon: no predictor available: {e}");
+                        return;
+                    }
+                };
+                if let Err(e) = handle_connection(stream, spec, predictor) {
+                    eprintln!("daemon connection error: {e}");
+                }
+            });
+        }
+        Ok(())
+    }
+}
+
+fn handle_connection(
+    stream: UnixStream,
+    spec: Arc<Spec>,
+    predictor: Arc<Predictor>,
+) -> anyhow::Result<()> {
+    let mut writer = stream.try_clone()?;
+    let reader = BufReader::new(stream);
+    let mut session: Option<Session> = None;
+
+    for line in reader.lines() {
+        let line = line?;
+        let mut parts = line.split_whitespace();
+        match parts.next() {
+            Some("BEGIN") => {
+                let name = parts.next().unwrap_or("");
+                let iters: u64 = parts.next().and_then(|s| s.parse().ok()).unwrap_or(300);
+                match find_app(&spec, name) {
+                    Ok(app) => {
+                        let gpu = SimGpu::new(spec.clone(), app);
+                        let controller = Gpoeo::new(GpoeoCfg::default(), predictor.clone());
+                        session = Some(Session {
+                            gpu,
+                            controller,
+                            target_iters: iters,
+                        });
+                        writeln!(writer, "OK session started")?;
+                    }
+                    Err(e) => writeln!(writer, "ERR {e}")?,
+                }
+            }
+            Some("STATUS") => match session.as_mut() {
+                Some(s) => {
+                    // Drive a slice of virtual time per STATUS poll.
+                    for _ in 0..200 {
+                        if s.done() {
+                            break;
+                        }
+                        s.step();
+                    }
+                    writeln!(
+                        writer,
+                        "STATUS {} {:.3} {:.1} {} {}",
+                        s.gpu.iterations(),
+                        s.gpu.time_s(),
+                        s.gpu.true_energy_j(),
+                        s.gpu.sm_gear(),
+                        s.gpu.mem_gear()
+                    )?;
+                }
+                None => writeln!(writer, "ERR no session")?,
+            },
+            Some("END") => match session.take() {
+                Some(mut s) => {
+                    while !s.done() {
+                        s.step();
+                    }
+                    writeln!(
+                        writer,
+                        "RESULT {:.1} {:.3} {} {} {}",
+                        s.gpu.true_energy_j(),
+                        s.gpu.time_s(),
+                        s.gpu.iterations(),
+                        s.gpu.sm_gear(),
+                        s.gpu.mem_gear()
+                    )?;
+                }
+                None => writeln!(writer, "ERR no session")?,
+            },
+            Some("QUIT") | None => break,
+            Some(other) => writeln!(writer, "ERR unknown command '{other}'")?,
+        }
+        writer.flush()?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::BufRead;
+
+    #[test]
+    fn begin_status_end_roundtrip() {
+        if Predictor::load_best().is_err() {
+            eprintln!("skipping: artifacts missing");
+            return;
+        }
+        let spec = Arc::new(Spec::load_default().unwrap());
+        let daemon = Daemon::new(spec);
+        let dir = std::env::temp_dir().join(format!("gpoeo-test-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let sock = dir.join("d.sock");
+        let sock2 = sock.clone();
+        std::thread::spawn(move || {
+            let _ = daemon.serve(&sock2);
+        });
+        // Wait for the listener.
+        for _ in 0..100 {
+            if sock.exists() {
+                break;
+            }
+            std::thread::sleep(std::time::Duration::from_millis(10));
+        }
+        let stream = UnixStream::connect(&sock).unwrap();
+        let mut w = stream.try_clone().unwrap();
+        let mut r = BufReader::new(stream);
+        let mut line = String::new();
+
+        writeln!(w, "BEGIN AI_TS 40").unwrap();
+        r.read_line(&mut line).unwrap();
+        assert!(line.starts_with("OK"), "{line}");
+
+        line.clear();
+        writeln!(w, "STATUS").unwrap();
+        r.read_line(&mut line).unwrap();
+        assert!(line.starts_with("STATUS"), "{line}");
+
+        line.clear();
+        writeln!(w, "END").unwrap();
+        r.read_line(&mut line).unwrap();
+        assert!(line.starts_with("RESULT"), "{line}");
+        let parts: Vec<&str> = line.split_whitespace().collect();
+        let iters: u64 = parts[3].parse().unwrap();
+        assert!(iters >= 40);
+
+        line.clear();
+        writeln!(w, "BOGUS").unwrap();
+        r.read_line(&mut line).unwrap();
+        assert!(line.starts_with("ERR"));
+        writeln!(w, "QUIT").unwrap();
+    }
+}

@@ -1,0 +1,113 @@
+//! The GPOEO coordination layer: the online controller (Fig. 4 workflow),
+//! adaptive measurement (Algorithm 4), the aperiodic IPS path (§4.3.5),
+//! the ODPP baseline, the exhaustive oracle and the Begin/End daemon API.
+
+pub mod controller;
+pub mod daemon;
+pub mod odpp;
+pub mod oracle;
+pub mod runner;
+
+pub use controller::{Gpoeo, GpoeoCfg, GpoeoStats};
+pub use odpp::{Odpp, OdppCfg};
+pub use oracle::{oracle_full, oracle_ordered, OracleResult};
+pub use runner::{default_iters, run_policy, savings, DefaultPolicy, Policy, RunResult, Savings};
+
+use crate::model::Predictor;
+use crate::search::Objective;
+use crate::sim::{find_app, Spec};
+use crate::util::cli::Args;
+use std::sync::Arc;
+
+/// Parse `--objective` (energy-capped:X | edp | ed2p | energy).
+pub fn parse_objective(args: &Args) -> anyhow::Result<Objective> {
+    Ok(match args.opt_or("objective", "capped") {
+        "edp" => Objective::Edp,
+        "ed2p" => Objective::Ed2p,
+        "energy" => Objective::Energy,
+        "capped" => Objective::EnergyCapped {
+            max_time_ratio: 1.0 + args.opt_f64("slowdown-cap", 0.05)?,
+        },
+        other => anyhow::bail!("unknown objective '{other}'"),
+    })
+}
+
+/// `gpoeo run --app NAME [--policy gpoeo|odpp|default] [--iters N]`
+pub fn cli_run(args: &Args) -> anyhow::Result<()> {
+    let spec = Arc::new(Spec::load_default()?);
+    let name = args
+        .opt("app")
+        .ok_or_else(|| anyhow::anyhow!("run requires --app NAME"))?;
+    let app = find_app(&spec, name)?;
+    let objective = parse_objective(args)?;
+    let n_iters = args.opt_u64("iters", default_iters(&app))?;
+
+    // Baseline.
+    let mut dflt = DefaultPolicy { ts: 0.025 };
+    let base = run_policy(&spec, &app, &mut dflt, n_iters);
+
+    let policy_name = args.opt_or("policy", "gpoeo");
+    let (result, stats) = match policy_name {
+        "default" => (base.clone(), None),
+        "odpp" => {
+            let mut p = Odpp::new(OdppCfg {
+                objective,
+                ..OdppCfg::default()
+            });
+            (run_policy(&spec, &app, &mut p, n_iters), None)
+        }
+        "gpoeo" => {
+            let predictor = Arc::new(Predictor::load_best()?);
+            let mut p = Gpoeo::new(
+                GpoeoCfg {
+                    objective,
+                    ..GpoeoCfg::default()
+                },
+                predictor,
+            );
+            let r = run_policy(&spec, &app, &mut p, n_iters);
+            (r, Some(p.stats.clone()))
+        }
+        other => anyhow::bail!("unknown policy '{other}'"),
+    };
+
+    let s = savings(&base, &result);
+    println!("app {name} ({} iterations)", n_iters);
+    println!(
+        "  baseline : {:>10.1} J  {:>8.1} s  (sm gear {}, mem gear {})",
+        base.energy_j, base.time_s, base.final_sm_gear, base.final_mem_gear
+    );
+    println!(
+        "  {:<9}: {:>10.1} J  {:>8.1} s  (sm gear {}, mem gear {})",
+        policy_name, result.energy_j, result.time_s, result.final_sm_gear, result.final_mem_gear
+    );
+    println!(
+        "  energy saving {:+.1}%  slowdown {:+.1}%  ED²P saving {:+.1}%",
+        s.energy_saving * 100.0,
+        s.slowdown * 100.0,
+        s.ed2p_saving * 100.0
+    );
+    if let Some(st) = stats {
+        println!(
+            "  period {:.3}s (true {:.3}s, self-err {:.3}{})  pred sm {} -> search {} ({} steps)  pred mem {} -> search {} ({} steps)",
+            st.detected_period_s,
+            st.true_period_s,
+            st.detection_self_err,
+            if st.treated_aperiodic { ", aperiodic" } else { "" },
+            st.predicted_sm_gear,
+            st.searched_sm_gear,
+            st.search_steps_sm,
+            st.predicted_mem_gear,
+            st.searched_mem_gear,
+            st.search_steps_mem
+        );
+    }
+    Ok(())
+}
+
+/// `gpoeo daemon [--socket PATH]` — serve the Begin/End API.
+pub fn cli_daemon(args: &Args) -> anyhow::Result<()> {
+    let spec = Arc::new(Spec::load_default()?);
+    let sock = args.opt_or("socket", "/tmp/gpoeo.sock").to_string();
+    daemon::Daemon::new(spec).serve(std::path::Path::new(&sock))
+}

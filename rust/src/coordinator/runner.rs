@@ -1,0 +1,185 @@
+//! Policy abstraction and the measurement harness that scores a policy
+//! against the NVIDIA-default baseline on a fixed amount of work.
+
+use crate::sim::{AppParams, SimGpu, Spec};
+use std::sync::Arc;
+
+/// An online clock-management policy driven by sampling ticks. The policy
+/// owns the cadence: `tick` must advance the GPU by its sampling interval.
+pub trait Policy {
+    fn name(&self) -> &'static str;
+    fn tick(&mut self, gpu: &mut SimGpu);
+}
+
+/// The NVIDIA default scheduling strategy: no controller at all (the
+/// device boots power-capped-boosted and stays there).
+pub struct DefaultPolicy {
+    pub ts: f64,
+}
+
+impl Policy for DefaultPolicy {
+    fn name(&self) -> &'static str {
+        "nvidia-default"
+    }
+    fn tick(&mut self, gpu: &mut SimGpu) {
+        gpu.advance(self.ts);
+    }
+}
+
+/// Outcome of running one policy on one app for a fixed work amount.
+#[derive(Debug, Clone)]
+pub struct RunResult {
+    pub app: String,
+    pub policy: String,
+    pub energy_j: f64,
+    pub time_s: f64,
+    pub iterations: u64,
+    pub final_sm_gear: usize,
+    pub final_mem_gear: usize,
+}
+
+/// Run `policy` on `app` until `n_iters` iterations (work units) finish.
+pub fn run_policy(
+    spec: &Arc<Spec>,
+    app: &AppParams,
+    policy: &mut dyn Policy,
+    n_iters: u64,
+) -> RunResult {
+    let mut gpu = SimGpu::new(spec.clone(), app.clone());
+    // Hard stop at a generous virtual-time budget (errant policies).
+    let budget_s = 50.0 * n_iters as f64 * app.t_base + 3600.0;
+    while gpu.iterations() < n_iters && gpu.time_s() < budget_s {
+        policy.tick(&mut gpu);
+    }
+    RunResult {
+        app: app.name.clone(),
+        policy: policy.name().to_string(),
+        energy_j: gpu.true_energy_j(),
+        time_s: gpu.time_s(),
+        iterations: gpu.iterations(),
+        final_sm_gear: gpu.sm_gear(),
+        final_mem_gear: gpu.mem_gear(),
+    }
+}
+
+/// Savings of `run` relative to `base` (same app, same n_iters).
+#[derive(Debug, Clone, Copy)]
+pub struct Savings {
+    pub energy_saving: f64,
+    pub slowdown: f64,
+    pub ed2p_saving: f64,
+}
+
+pub fn savings(base: &RunResult, run: &RunResult) -> Savings {
+    // Normalize per work unit: policies overshoot the iteration target by
+    // different amounts (a probe window can span several iterations), so
+    // raw totals would compare different amounts of work.
+    let e = (run.energy_j / run.iterations as f64) / (base.energy_j / base.iterations as f64);
+    let t = (run.time_s / run.iterations as f64) / (base.time_s / base.iterations as f64);
+    Savings {
+        energy_saving: 1.0 - e,
+        slowdown: t - 1.0,
+        ed2p_saving: 1.0 - e * t * t,
+    }
+}
+
+/// Work-unit budget for one app: enough iterations that the optimization
+/// transient amortizes the way a real (hours-long) training run would,
+/// without making the 71-app sweeps slow.
+pub fn default_iters(app: &AppParams) -> u64 {
+    let by_time = (420.0 / app.t_base).ceil() as u64;
+    by_time.max(300)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::find_app;
+
+    #[test]
+    fn default_policy_runs_to_completion() {
+        let spec = Arc::new(Spec::load_default().unwrap());
+        let app = find_app(&spec, "AI_TS").unwrap();
+        let mut p = DefaultPolicy { ts: 0.025 };
+        let r = run_policy(&spec, &app, &mut p, 50);
+        assert!(r.iterations >= 50);
+        assert!(r.energy_j > 0.0 && r.time_s > 0.0);
+        let (sm, mem, _) = app.default_op(&spec);
+        assert_eq!(r.final_sm_gear, sm);
+        assert_eq!(r.final_mem_gear, mem);
+    }
+
+    #[test]
+    fn savings_math() {
+        let base = RunResult {
+            app: "x".into(),
+            policy: "a".into(),
+            energy_j: 1000.0,
+            time_s: 100.0,
+            iterations: 10,
+            final_sm_gear: 114,
+            final_mem_gear: 4,
+        };
+        let run = RunResult {
+            energy_j: 850.0,
+            time_s: 104.0,
+            ..base.clone()
+        }; // same iteration count => plain ratios
+        let s = savings(&base, &run);
+        assert!((s.energy_saving - 0.15).abs() < 1e-12);
+        assert!((s.slowdown - 0.04).abs() < 1e-12);
+    }
+
+    #[test]
+    fn fixed_work_is_comparable_across_clocks() {
+        // Same iteration count at different clocks => different time/energy.
+        let spec = Arc::new(Spec::load_default().unwrap());
+        let app = find_app(&spec, "SBM_GIN").unwrap();
+        struct Fixed {
+            ts: f64,
+            gear: usize,
+        }
+        impl Policy for Fixed {
+            fn name(&self) -> &'static str {
+                "fixed"
+            }
+            fn tick(&mut self, gpu: &mut SimGpu) {
+                gpu.set_sm_gear(self.gear);
+                gpu.advance(self.ts);
+            }
+        }
+        let mut hi = Fixed { ts: 0.05, gear: 114 };
+        let mut lo = Fixed { ts: 0.05, gear: 60 };
+        let rh = run_policy(&spec, &app, &mut hi, 40);
+        let rl = run_policy(&spec, &app, &mut lo, 40);
+        assert!(rl.time_s > rh.time_s);
+        assert!(rl.energy_j < rh.energy_j, "downclock must save energy here");
+    }
+
+    #[test]
+    fn aperiodic_fixed_work_scales_with_clock() {
+        let spec = Arc::new(Spec::load_default().unwrap());
+        let app = find_app(&spec, "TSVM").unwrap();
+        assert!(app.aperiodic);
+        struct Fixed {
+            gear: usize,
+        }
+        impl Policy for Fixed {
+            fn name(&self) -> &'static str {
+                "fixed"
+            }
+            fn tick(&mut self, gpu: &mut SimGpu) {
+                gpu.set_sm_gear(self.gear);
+                gpu.advance(0.05);
+            }
+        }
+        let rh = run_policy(&spec, &app, &mut Fixed { gear: 114 }, 60);
+        let rl = run_policy(&spec, &app, &mut Fixed { gear: 40 }, 60);
+        assert!(
+            rl.time_s > rh.time_s * 1.1,
+            "aperiodic work must slow down when downclocked ({} vs {})",
+            rl.time_s,
+            rh.time_s
+        );
+    }
+}

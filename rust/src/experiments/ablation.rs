@@ -1,0 +1,90 @@
+//! Ablation study over the controller's design choices (DESIGN.md §5):
+//! what each GPOEO ingredient buys. Variants, all under the paper's
+//! capped objective, on the AIBench suite:
+//!
+//! - **full**        the complete pipeline (predict + search, SM + mem)
+//! - **no-search**   apply the predicted gears directly (§4.3.4 ablated)
+//! - **no-model**    golden-section search from the default gears
+//!                   (counter-based prediction ablated — §2.2.4's claim)
+//! - **sm-only**     memory-clock stage disabled
+//! - **mem-only**    SM-clock stage disabled
+
+use crate::coordinator::{default_iters, run_policy, savings, DefaultPolicy, Gpoeo, GpoeoCfg};
+use crate::model::Predictor;
+use crate::sim::{make_suite, Spec};
+use crate::util::stats::mean;
+use crate::util::table::{s, Cell, Table};
+use std::sync::Arc;
+
+fn variant(name: &str) -> GpoeoCfg {
+    let mut cfg = GpoeoCfg::default();
+    match name {
+        "full" => {}
+        "no-search" => cfg.skip_search = true,
+        "no-model" => cfg.ignore_prediction = true,
+        "sm-only" => cfg.optimize_mem = false,
+        "mem-only" => cfg.optimize_sm = false,
+        _ => unreachable!(),
+    }
+    cfg
+}
+
+pub const VARIANTS: &[&str] = &["full", "no-search", "no-model", "sm-only", "mem-only"];
+
+pub fn run(spec: &Arc<Spec>, predictor: &Arc<Predictor>) -> (Table, Vec<(String, f64, f64, f64)>) {
+    let apps = make_suite(spec, "aibench").unwrap();
+    let mut t = Table::new(
+        "Ablation — contribution of each GPOEO ingredient (AIBench means)",
+        &["variant", "energy saving", "slowdown", "ED2P saving", "search steps"],
+    );
+    let mut rows = Vec::new();
+    for v in VARIANTS {
+        let (mut sv, mut sl, mut ed, mut steps) = (vec![], vec![], vec![], vec![]);
+        for app in &apps {
+            let n = default_iters(app) / 2;
+            let base = run_policy(spec, app, &mut DefaultPolicy { ts: 0.025 }, n);
+            let mut g = Gpoeo::new(variant(v), predictor.clone());
+            let r = run_policy(spec, app, &mut g, n);
+            let s = savings(&base, &r);
+            sv.push(s.energy_saving);
+            sl.push(s.slowdown);
+            ed.push(s.ed2p_saving);
+            steps.push((g.stats.search_steps_sm + g.stats.search_steps_mem) as f64);
+        }
+        t.rowf(&[
+            s(*v),
+            Cell::Pct(mean(&sv)),
+            Cell::Pct(mean(&sl)),
+            Cell::Pct(mean(&ed)),
+            Cell::F(mean(&steps), 1),
+        ]);
+        rows.push((v.to_string(), mean(&sv), mean(&sl), mean(&ed)));
+    }
+    (t, rows)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::NativeModels;
+
+    #[test]
+    fn search_and_model_both_matter() {
+        let Ok(native) = NativeModels::load_default() else {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        };
+        let spec = Arc::new(Spec::load_default().unwrap());
+        let predictor = Arc::new(Predictor::Native(native));
+        let (_, rows) = run(&spec, &predictor);
+        let get = |name: &str| rows.iter().find(|r| r.0 == name).unwrap().clone();
+        let full = get("full");
+        let sm_only = get("sm-only");
+        let mem_only = get("mem-only");
+        // The SM stage carries most of the energy; the full pipeline must
+        // beat either single stage on ED2P-or-energy.
+        assert!(full.1 > mem_only.1, "full beats mem-only on energy");
+        assert!(full.1 >= sm_only.1 - 0.02, "mem stage must not hurt");
+        assert!(sm_only.1 > mem_only.1, "SM stage dominates savings");
+    }
+}

@@ -1,0 +1,117 @@
+//! Shared machinery for the experiment harness: simulated-trace capture,
+//! period-detection scoring (GPOEO vs ODPP), and policy comparisons.
+
+use crate::coordinator::{
+    default_iters, run_policy, savings, DefaultPolicy, Gpoeo, GpoeoCfg, Odpp, OdppCfg, Savings,
+};
+use crate::model::Predictor;
+use crate::signal::{calc_period_fft_argmax, composite_feature, online_detect, PeriodCfg};
+use crate::sim::{AppParams, SimGpu, Spec};
+use std::sync::Arc;
+
+/// Sample a trace at the given clock config; returns the composite
+/// `Feature_dect` channel and the ground-truth period.
+pub fn capture_trace(
+    spec: &Arc<Spec>,
+    app: &AppParams,
+    sm_gear: usize,
+    mem_gear: usize,
+    ts: f64,
+    duration_s: f64,
+) -> (Vec<f64>, f64) {
+    let mut gpu = SimGpu::new(spec.clone(), app.clone());
+    gpu.set_sm_gear(sm_gear);
+    gpu.set_mem_gear(mem_gear);
+    let truth = gpu.true_period();
+    let n = (duration_s / ts).ceil() as usize;
+    let (mut p, mut us, mut um) = (
+        Vec::with_capacity(n),
+        Vec::with_capacity(n),
+        Vec::with_capacity(n),
+    );
+    for _ in 0..n {
+        gpu.advance(ts);
+        let s = gpu.sample(ts);
+        p.push(s.power_w);
+        us.push(s.util_sm);
+        um.push(s.util_mem);
+    }
+    (composite_feature(&p, &us, &um), truth)
+}
+
+/// Detection errors (GPOEO, ODPP) on one app at one clock config.
+/// Window is 12 true periods (min 8 s), matching the `detect` CLI.
+pub fn detection_errors(
+    spec: &Arc<Spec>,
+    app: &AppParams,
+    sm_gear: usize,
+    mem_gear: usize,
+) -> (f64, f64) {
+    let ts = 0.025;
+    let mut probe = SimGpu::new(spec.clone(), app.clone());
+    probe.set_sm_gear(sm_gear);
+    probe.set_mem_gear(mem_gear);
+    let truth = probe.true_period();
+    let dur = (12.0 * truth).clamp(8.0, 60.0);
+    let (feat, truth) = capture_trace(spec, app, sm_gear, mem_gear, ts, dur);
+
+    let gpoeo_err = online_detect(&feat, ts, &PeriodCfg::default())
+        .map(|d| (d.estimate.t_iter - truth).abs() / truth)
+        .unwrap_or(1.0);
+    let odpp_err = calc_period_fft_argmax(&feat, ts)
+        .map(|d| (d.t_iter - truth).abs() / truth)
+        .unwrap_or(1.0);
+    (gpoeo_err, odpp_err)
+}
+
+/// Full online-optimization comparison for one app: returns
+/// (gpoeo savings, odpp savings, gpoeo stats).
+pub fn compare_policies(
+    spec: &Arc<Spec>,
+    predictor: &Arc<Predictor>,
+    app: &AppParams,
+    iters: Option<u64>,
+) -> (Savings, Savings, crate::coordinator::GpoeoStats) {
+    let n = iters.unwrap_or_else(|| default_iters(app));
+    let base = run_policy(spec, app, &mut DefaultPolicy { ts: 0.025 }, n);
+
+    let mut g = Gpoeo::new(GpoeoCfg::default(), predictor.clone());
+    let rg = run_policy(spec, app, &mut g, n);
+
+    let mut o = Odpp::new(OdppCfg::default());
+    let ro = run_policy(spec, app, &mut o, n);
+
+    (savings(&base, &rg), savings(&base, &ro), g.stats.clone())
+}
+
+/// The 34 periodic apps used by the paper's period-detection study
+/// (Fig. 5): all periodic AIBench apps plus periodic GNN apps, trimmed
+/// to 34 in suite order.
+pub fn detection_study_apps(spec: &Spec) -> Vec<AppParams> {
+    let mut out = Vec::new();
+    for suite in ["aibench", "gnns"] {
+        for e in &spec.suites[suite].apps {
+            let app = crate::sim::make_app(spec, suite, &e.name).unwrap();
+            if !app.aperiodic {
+                out.push(app);
+            }
+            if out.len() == 34 {
+                return out;
+            }
+        }
+    }
+    out
+}
+
+/// SM gears swept in the sensitivity studies (Figs. 2/6/7/8).
+pub fn sweep_gears() -> Vec<usize> {
+    vec![40, 52, 64, 76, 88, 100, 114]
+}
+
+/// Fraction of entries ≤ threshold.
+pub fn frac_within(xs: &[f64], thr: f64) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().filter(|&&x| x <= thr).count() as f64 / xs.len() as f64
+}

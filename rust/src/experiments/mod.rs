@@ -1,0 +1,142 @@
+//! Experiment harness: one module per paper table/figure (DESIGN.md §5).
+//!
+//! `gpoeo experiment <id>` regenerates the corresponding artifact;
+//! `gpoeo experiment all` runs the full evaluation. `--quick` shortens
+//! the online runs (useful for smoke tests), `--save DIR` additionally
+//! writes each table as markdown.
+
+pub mod ablation;
+pub mod detection;
+pub mod helpers;
+pub mod motivation;
+pub mod online;
+pub mod prediction;
+
+use crate::model::Predictor;
+use crate::sim::Spec;
+use crate::util::cli::Args;
+use crate::util::table::Table;
+use std::sync::Arc;
+
+pub const EXPERIMENTS: &[&str] = &[
+    "fig1", "fig2", "fig3", "fig5", "fig6", "fig7", "fig8", "fig9", "fig10", "fig11", "fig12",
+    "fig13", "table3", "fig14", "fig15", "headline", "ablation",
+];
+
+fn emit(t: &Table, args: &Args) -> anyhow::Result<()> {
+    crate::cli::print_table(t, args);
+    if let Some(dir) = args.opt("save") {
+        std::fs::create_dir_all(dir)?;
+        // Slug from the title's leading "Fig N"/"Table N" segment.
+        let name: String = t
+            .title
+            .chars()
+            .take_while(|&c| c != '—')
+            .filter(|c| c.is_ascii_alphanumeric())
+            .flat_map(|c| c.to_lowercase())
+            .collect();
+        std::fs::write(format!("{dir}/{name}.md"), t.to_markdown())?;
+    }
+    println!();
+    Ok(())
+}
+
+pub fn cli_experiment(args: &Args) -> anyhow::Result<()> {
+    let id = args
+        .positional
+        .first()
+        .map(|s| s.as_str())
+        .ok_or_else(|| anyhow::anyhow!("usage: gpoeo experiment <id|all> [--quick] [--save DIR]"))?;
+    let spec = Arc::new(Spec::load_default()?);
+    let quick = args.has_flag("quick");
+
+    // The prediction/online experiments need the trained models; the
+    // detection/motivation ones run on the simulator alone.
+    let lazy_predictor = || -> anyhow::Result<Arc<Predictor>> {
+        Ok(Arc::new(Predictor::load_best()?))
+    };
+
+    let ids: Vec<&str> = if id == "all" {
+        EXPERIMENTS.to_vec()
+    } else {
+        vec![id]
+    };
+
+    for id in ids {
+        match id {
+            "fig1" => emit(&motivation::fig1(&spec), args)?,
+            "fig3" => emit(&motivation::fig3(&spec), args)?,
+            "fig2" => {
+                for t in detection::fig2(&spec) {
+                    emit(&t, args)?;
+                }
+            }
+            "fig5" => {
+                let (t, summary) = detection::fig5(&spec);
+                emit(&t, args)?;
+                summary.print();
+            }
+            "fig6" => emit(&detection::fig6(&spec), args)?,
+            "fig7" => emit(&detection::fig7(&spec), args)?,
+            "fig8" => emit(&detection::fig8(&spec), args)?,
+            "fig9" | "fig10" | "fig11" | "fig12" => {
+                let p = lazy_predictor()?;
+                let r = prediction::run(&spec, &p)?;
+                match id {
+                    "fig9" => emit(&r.fig9, args)?,
+                    "fig10" => emit(&r.fig10, args)?,
+                    "fig11" => emit(&r.fig11, args)?,
+                    _ => emit(&r.fig12, args)?,
+                }
+                r.print_summary();
+            }
+            "fig13" => {
+                let p = lazy_predictor()?;
+                let r = online::fig13(&spec, &p, quick);
+                emit(&r.table, args)?;
+                r.print_summary("paper: GPOEO 14.7% saving / 4.6% slowdown / 6.8% ED2P");
+            }
+            "fig14" => {
+                let p = lazy_predictor()?;
+                let r = online::fig14(&spec, &p, quick);
+                emit(&r.table, args)?;
+                r.print_summary("paper: GPOEO 16.6% / 5.2% / 7.8%; ODPP 6.1% / 5.6% / -4.5%");
+            }
+            "table3" => {
+                let p = lazy_predictor()?;
+                emit(&online::table3(&spec, &p), args)?;
+            }
+            "fig15" => {
+                let p = lazy_predictor()?;
+                let (t, eo, to) = online::fig15(&spec, &p);
+                emit(&t, args)?;
+                println!(
+                    "mean overhead: energy {:.1}%  time {:.1}%  (paper: all within 4%)",
+                    eo * 100.0,
+                    to * 100.0
+                );
+            }
+            "ablation" => {
+                let p = lazy_predictor()?;
+                let (t, _) = ablation::run(&spec, &p);
+                emit(&t, args)?;
+            }
+            "headline" => {
+                let p = lazy_predictor()?;
+                let h = online::headline(&spec, &p, quick);
+                println!(
+                    "headline over {} apps: mean energy saving {:.1}% (paper 16.2%), mean slowdown {:.1}% (paper 5.1%), mean ED2P saving {:.1}%",
+                    h.n,
+                    h.mean_saving * 100.0,
+                    h.mean_slowdown * 100.0,
+                    h.mean_ed2p * 100.0
+                );
+            }
+            other => anyhow::bail!(
+                "unknown experiment '{other}'; available: {} | all",
+                EXPERIMENTS.join(" ")
+            ),
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,262 @@
+//! Online-optimization experiments: Fig. 13 (AIBench + classical ML),
+//! Table 3 (per-app optimization trace), Fig. 14 (benchmarking-gnns),
+//! Fig. 15 (overhead) and the headline aggregate (§1/§7).
+
+use crate::coordinator::{
+    default_iters, oracle_ordered, run_policy, savings, DefaultPolicy, Gpoeo, GpoeoCfg,
+};
+use crate::experiments::helpers::compare_policies;
+use crate::model::Predictor;
+use crate::search::Objective;
+use crate::sim::{make_suite, AppParams, Spec};
+use crate::util::stats::mean;
+use crate::util::table::{s, Cell, Table};
+use std::sync::Arc;
+
+/// Apps of the "medium benchmark suite" (Fig. 13): AIBench + TSVM/TGBM.
+fn medium_suite(spec: &Spec) -> Vec<AppParams> {
+    let mut apps = make_suite(spec, "aibench").unwrap();
+    apps.extend(make_suite(spec, "classical").unwrap());
+    apps
+}
+
+pub struct OnlineReport {
+    pub table: Table,
+    pub gpoeo_mean_saving: f64,
+    pub gpoeo_mean_slowdown: f64,
+    pub gpoeo_mean_ed2p: f64,
+    pub odpp_mean_saving: f64,
+    pub odpp_mean_slowdown: f64,
+    pub odpp_mean_ed2p: f64,
+    pub gpoeo_meets_cap: usize,
+    pub odpp_meets_cap: usize,
+    pub gpoeo_wins_energy: usize,
+    /// Apps where GPOEO's (energy, time) outcome scores better under the
+    /// paper's capped objective than ODPP's.
+    pub gpoeo_wins_score: usize,
+    pub gpoeo_ed2p_positive: usize,
+    pub odpp_ed2p_positive: usize,
+    pub n: usize,
+}
+
+/// Run the full GPOEO-vs-ODPP-vs-default comparison over a set of apps.
+pub fn online_comparison(
+    spec: &Arc<Spec>,
+    predictor: &Arc<Predictor>,
+    apps: &[AppParams],
+    title: &str,
+    quick: bool,
+) -> OnlineReport {
+    let mut t = Table::new(
+        title,
+        &[
+            "app", "GPOEO save", "GPOEO slow", "GPOEO ed2p", "ODPP save", "ODPP slow",
+            "ODPP ed2p",
+        ],
+    );
+    let (mut gs, mut gl, mut ge) = (Vec::new(), Vec::new(), Vec::new());
+    let (mut os, mut ol, mut oe) = (Vec::new(), Vec::new(), Vec::new());
+    let obj = Objective::paper_default();
+    let mut score_wins = 0usize;
+    for app in apps {
+        let iters = if quick {
+            Some(default_iters(app) / 3)
+        } else {
+            None
+        };
+        let (g, o, _) = compare_policies(spec, predictor, app, iters);
+        gs.push(g.energy_saving);
+        gl.push(g.slowdown);
+        ge.push(g.ed2p_saving);
+        os.push(o.energy_saving);
+        ol.push(o.slowdown);
+        oe.push(o.ed2p_saving);
+        if obj.score(1.0 - g.energy_saving, 1.0 + g.slowdown)
+            < obj.score(1.0 - o.energy_saving, 1.0 + o.slowdown)
+        {
+            score_wins += 1;
+        }
+        t.rowf(&[
+            s(&app.name),
+            Cell::Pct(g.energy_saving),
+            Cell::Pct(g.slowdown),
+            Cell::Pct(g.ed2p_saving),
+            Cell::Pct(o.energy_saving),
+            Cell::Pct(o.slowdown),
+            Cell::Pct(o.ed2p_saving),
+        ]);
+    }
+    OnlineReport {
+        gpoeo_mean_saving: mean(&gs),
+        gpoeo_mean_slowdown: mean(&gl),
+        gpoeo_mean_ed2p: mean(&ge),
+        odpp_mean_saving: mean(&os),
+        odpp_mean_slowdown: mean(&ol),
+        odpp_mean_ed2p: mean(&oe),
+        gpoeo_meets_cap: gl.iter().filter(|&&x| x <= 0.05).count(),
+        odpp_meets_cap: ol.iter().filter(|&&x| x <= 0.05).count(),
+        gpoeo_wins_energy: gs.iter().zip(&os).filter(|(g, o)| g > o).count(),
+        gpoeo_wins_score: score_wins,
+        gpoeo_ed2p_positive: ge.iter().filter(|&&x| x > 0.0).count(),
+        odpp_ed2p_positive: oe.iter().filter(|&&x| x > 0.0).count(),
+        n: apps.len(),
+        table: t,
+    }
+}
+
+impl OnlineReport {
+    pub fn print_summary(&self, paper: &str) {
+        println!(
+            "GPOEO: saving {:.1}%  slowdown {:.1}%  ED2P {:.1}%  (cap met {}/{}, ED2P>0 on {})",
+            self.gpoeo_mean_saving * 100.0,
+            self.gpoeo_mean_slowdown * 100.0,
+            self.gpoeo_mean_ed2p * 100.0,
+            self.gpoeo_meets_cap,
+            self.n,
+            self.gpoeo_ed2p_positive
+        );
+        println!(
+            "ODPP : saving {:.1}%  slowdown {:.1}%  ED2P {:.1}%  (cap met {}/{}, ED2P>0 on {})",
+            self.odpp_mean_saving * 100.0,
+            self.odpp_mean_slowdown * 100.0,
+            self.odpp_mean_ed2p * 100.0,
+            self.odpp_meets_cap,
+            self.n,
+            self.odpp_ed2p_positive
+        );
+        println!(
+            "GPOEO beats ODPP on raw energy for {}/{} apps; on the capped objective for {}/{}.  [{paper}]",
+            self.gpoeo_wins_energy, self.n, self.gpoeo_wins_score, self.n
+        );
+    }
+}
+
+/// Fig. 13 — the medium suite.
+pub fn fig13(spec: &Arc<Spec>, predictor: &Arc<Predictor>, quick: bool) -> OnlineReport {
+    let apps = medium_suite(spec);
+    online_comparison(
+        spec,
+        predictor,
+        &apps,
+        "Fig 13 — online optimization, AIBench + classical ML (vs NVIDIA default)",
+        quick,
+    )
+}
+
+/// Fig. 14 — the 55-app benchmarking-gnns suite.
+pub fn fig14(spec: &Arc<Spec>, predictor: &Arc<Predictor>, quick: bool) -> OnlineReport {
+    let apps = make_suite(spec, "gnns").unwrap();
+    online_comparison(
+        spec,
+        predictor,
+        &apps,
+        "Fig 14 — online optimization, benchmarking-gnns (55 apps)",
+        quick,
+    )
+}
+
+/// Table 3 — per-app optimization trace on AIBench: oracle vs predicted
+/// vs searched gears, and search step counts.
+pub fn table3(spec: &Arc<Spec>, predictor: &Arc<Predictor>) -> Table {
+    let apps = make_suite(spec, "aibench").unwrap();
+    let obj = Objective::paper_default();
+    let mut t = Table::new(
+        "Table 3 — online optimization process for SM and memory clock (AIBench)",
+        &[
+            "app", "oracle SM", "pred err (gears)", "search err (gears)", "steps SM",
+            "oracle Mem", "pred Mem", "searched Mem", "steps Mem",
+        ],
+    );
+    for app in &apps {
+        let oracle = oracle_ordered(app, spec, obj);
+        let (_, _, stats) = compare_policies(spec, predictor, app, Some(default_iters(app) / 2));
+        t.rowf(&[
+            s(&app.name),
+            Cell::U(oracle.sm_gear),
+            Cell::I(stats.predicted_sm_gear as i64 - oracle.sm_gear as i64),
+            Cell::I(stats.searched_sm_gear as i64 - oracle.sm_gear as i64),
+            Cell::U(stats.search_steps_sm),
+            Cell::F(spec.gears.mem_mhz_of(oracle.mem_gear), 0),
+            Cell::F(spec.gears.mem_mhz_of(stats.predicted_mem_gear), 0),
+            Cell::F(spec.gears.mem_mhz_of(stats.searched_mem_gear), 0),
+            Cell::U(stats.search_steps_mem),
+        ]);
+    }
+    t
+}
+
+/// Fig. 15 — measurement overhead: the full GPOEO pipeline with clock
+/// actuation disabled, against the plain default run.
+pub fn fig15(spec: &Arc<Spec>, predictor: &Arc<Predictor>) -> (Table, f64, f64) {
+    let apps = make_suite(spec, "aibench").unwrap();
+    let mut t = Table::new(
+        "Fig 15 — GPOEO energy and time overhead on AIBench (no actuation)",
+        &["app", "energy overhead", "time overhead"],
+    );
+    let (mut eo, mut to) = (Vec::new(), Vec::new());
+    for app in &apps {
+        let n = default_iters(app);
+        let base = run_policy(spec, app, &mut DefaultPolicy { ts: 0.025 }, n);
+        let mut g = Gpoeo::new(
+            GpoeoCfg {
+                actuate: false,
+                ..GpoeoCfg::default()
+            },
+            predictor.clone(),
+        );
+        let r = run_policy(spec, app, &mut g, n);
+        let s = savings(&base, &r);
+        eo.push(-s.energy_saving); // overhead = negative saving
+        to.push(s.slowdown);
+        t.rowf(&[
+            s_cell(&app.name),
+            Cell::Pct(-s.energy_saving),
+            Cell::Pct(s.slowdown),
+        ]);
+    }
+    (t, mean(&eo), mean(&to))
+}
+
+fn s_cell(v: &str) -> Cell {
+    s(v)
+}
+
+/// Headline aggregate over all 71 evaluated apps (Figs. 13+14).
+pub struct Headline {
+    pub n: usize,
+    pub mean_saving: f64,
+    pub mean_slowdown: f64,
+    pub mean_ed2p: f64,
+}
+
+pub fn headline(spec: &Arc<Spec>, predictor: &Arc<Predictor>, quick: bool) -> Headline {
+    let mut apps = medium_suite(spec);
+    apps.extend(make_suite(spec, "gnns").unwrap());
+    let mut savings_all = Vec::new();
+    let mut slow_all = Vec::new();
+    let mut ed2p_all = Vec::new();
+    for app in &apps {
+        let iters = if quick {
+            Some(default_iters(app) / 3)
+        } else {
+            None
+        };
+        let (g, _, _) = {
+            // Only GPOEO needed for the headline number.
+            let n = iters.unwrap_or_else(|| default_iters(app));
+            let base = run_policy(spec, app, &mut DefaultPolicy { ts: 0.025 }, n);
+            let mut p = Gpoeo::new(GpoeoCfg::default(), predictor.clone());
+            let r = run_policy(spec, app, &mut p, n);
+            (savings(&base, &r), (), ())
+        };
+        savings_all.push(g.energy_saving);
+        slow_all.push(g.slowdown);
+        ed2p_all.push(g.ed2p_saving);
+    }
+    Headline {
+        n: apps.len(),
+        mean_saving: mean(&savings_all),
+        mean_slowdown: mean(&slow_all),
+        mean_ed2p: mean(&ed2p_all),
+    }
+}

@@ -1,0 +1,196 @@
+//! Prediction-accuracy experiments (Figs. 9–12): energy/time prediction
+//! errors of the four GBT models on the 55 benchmarking-gnns apps, with
+//! features measured online (one noisy counter period), grouped by clock
+//! range (9/11) and by dataset (10/12).
+
+use crate::model::Predictor;
+use crate::sim::{make_suite, AppParams, Spec};
+use crate::util::rng::Pcg64;
+use crate::util::stats::{mean, percentile};
+use crate::util::table::{s, Cell, Table};
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+/// One (app, gear) prediction-error record.
+struct Record {
+    dataset: String,
+    sm_mhz: f64,
+    mem_mhz: f64,
+    eng_ape: f64,
+    time_ape: f64,
+}
+
+fn dataset_of(app: &AppParams) -> String {
+    app.name.split('_').next().unwrap_or("?").to_string()
+}
+
+/// Collect prediction errors over the GNN suite (the paper's §5.3 setup:
+/// 55 apps × 99 SM gears × 2 objectives → 11,660 SM predictions;
+/// 55 × 5 × 2 → 550 memory predictions).
+fn collect(spec: &Spec, predictor: &Predictor) -> anyhow::Result<(Vec<Record>, Vec<Record>)> {
+    let mut sm_records = Vec::new();
+    let mut mem_records = Vec::new();
+    for app in make_suite(spec, "gnns")? {
+        // Features as measured online: one counter period of noise.
+        let mut rng = Pcg64::new(app.trace_seed ^ 0x00fe_a7, 0x5eed);
+        let feats = app.measured_features(spec, &mut rng);
+
+        let sm_pred = predictor.predict_sm(spec, &feats)?;
+        for (i, g) in spec.gears.sm_gears().enumerate() {
+            let (e, t) = app.ratios_vs_default(spec, g, spec.gears.default_mem_gear);
+            sm_records.push(Record {
+                dataset: dataset_of(&app),
+                sm_mhz: spec.gears.sm_mhz(g),
+                mem_mhz: 0.0,
+                eng_ape: (sm_pred.energy_ratio[i] - e).abs() / e,
+                time_ape: (sm_pred.time_ratio[i] - t).abs() / t,
+            });
+        }
+
+        // Memory models assume the optimal SM gear (§4.3.2).
+        let g_opt = crate::coordinator::oracle_ordered(
+            &app,
+            spec,
+            crate::search::Objective::paper_default(),
+        )
+        .sm_gear;
+        let mem_pred = predictor.predict_mem(spec, &feats)?;
+        for m in 0..spec.gears.num_mem_gears() {
+            let (e, t) = app.ratios_vs_default(spec, g_opt, m);
+            mem_records.push(Record {
+                dataset: dataset_of(&app),
+                sm_mhz: 0.0,
+                mem_mhz: spec.gears.mem_mhz_of(m),
+                eng_ape: (mem_pred.energy_ratio[m] - e).abs() / e,
+                time_ape: (mem_pred.time_ratio[m] - t).abs() / t,
+            });
+        }
+    }
+    Ok((sm_records, mem_records))
+}
+
+fn grouped_table(
+    title: &str,
+    records: &[Record],
+    group_of: impl Fn(&Record) -> String,
+) -> Table {
+    let mut groups: BTreeMap<String, (Vec<f64>, Vec<f64>)> = BTreeMap::new();
+    for r in records {
+        let e = groups.entry(group_of(r)).or_default();
+        e.0.push(r.eng_ape);
+        e.1.push(r.time_ape);
+    }
+    let mut t = Table::new(
+        title,
+        &[
+            "group", "n", "eng mean", "eng p50", "eng p90", "time mean", "time p50", "time p90",
+        ],
+    );
+    for (g, (es, ts)) in groups {
+        t.rowf(&[
+            s(g),
+            Cell::U(es.len()),
+            Cell::Pct(mean(&es)),
+            Cell::Pct(percentile(&es, 50.0)),
+            Cell::Pct(percentile(&es, 90.0)),
+            Cell::Pct(mean(&ts)),
+            Cell::Pct(percentile(&ts, 50.0)),
+            Cell::Pct(percentile(&ts, 90.0)),
+        ]);
+    }
+    t
+}
+
+/// Grouping for Fig. 9: ~150 MHz SM clock ranges.
+fn sm_range(mhz: f64) -> String {
+    let lo = ((mhz - 450.0) / 150.0).floor() as usize * 150 + 450;
+    format!("{:04}-{:04} MHz", lo, lo + 150)
+}
+
+pub struct PredictionReport {
+    pub fig9: Table,
+    pub fig10: Table,
+    pub fig11: Table,
+    pub fig12: Table,
+    pub sm_mean_eng: f64,
+    pub sm_mean_time: f64,
+    pub mem_mean_eng: f64,
+    pub mem_mean_time: f64,
+    pub sm_n: usize,
+    pub mem_n: usize,
+}
+
+pub fn run(spec: &Arc<Spec>, predictor: &Predictor) -> anyhow::Result<PredictionReport> {
+    let (sm, mem) = collect(spec, predictor)?;
+    let fig9 = grouped_table(
+        "Fig 9 — SM-model prediction errors by clock range (55 gnn apps)",
+        &sm,
+        |r| sm_range(r.sm_mhz),
+    );
+    let fig10 = grouped_table(
+        "Fig 10 — SM-model prediction errors by dataset",
+        &sm,
+        |r| r.dataset.clone(),
+    );
+    let fig11 = grouped_table(
+        "Fig 11 — memory-model prediction errors by memory clock",
+        &mem,
+        |r| format!("{:>5.0} MHz", r.mem_mhz),
+    );
+    let fig12 = grouped_table(
+        "Fig 12 — memory-model prediction errors by dataset",
+        &mem,
+        |r| r.dataset.clone(),
+    );
+    let report = PredictionReport {
+        sm_mean_eng: mean(&sm.iter().map(|r| r.eng_ape).collect::<Vec<_>>()),
+        sm_mean_time: mean(&sm.iter().map(|r| r.time_ape).collect::<Vec<_>>()),
+        mem_mean_eng: mean(&mem.iter().map(|r| r.eng_ape).collect::<Vec<_>>()),
+        mem_mean_time: mean(&mem.iter().map(|r| r.time_ape).collect::<Vec<_>>()),
+        sm_n: sm.len(),
+        mem_n: mem.len(),
+        fig9,
+        fig10,
+        fig11,
+        fig12,
+    };
+    Ok(report)
+}
+
+impl PredictionReport {
+    pub fn print_summary(&self) {
+        println!(
+            "SM models: {} predictions/objective — mean APE eng {:.2}% (paper 3.05%), time {:.2}% (paper 2.09%)",
+            self.sm_n,
+            self.sm_mean_eng * 100.0,
+            self.sm_mean_time * 100.0
+        );
+        println!(
+            "mem models: {} predictions/objective — mean APE eng {:.2}% (paper 2.72%), time {:.2}% (paper 2.31%)",
+            self.mem_n,
+            self.mem_mean_eng * 100.0,
+            self.mem_mean_time * 100.0
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{NativeModels, Predictor};
+
+    #[test]
+    fn prediction_errors_in_paper_ballpark() {
+        let Ok(native) = NativeModels::load_default() else {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        };
+        let spec = Arc::new(Spec::load_default().unwrap());
+        let r = run(&spec, &Predictor::Native(native)).unwrap();
+        assert_eq!(r.sm_n, 55 * 99);
+        assert_eq!(r.mem_n, 55 * 5);
+        // Paper: ~2-3% mean APE. Gate generously at 8%.
+        assert!(r.sm_mean_eng < 0.08, "sm eng APE {}", r.sm_mean_eng);
+        assert!(r.sm_mean_time < 0.08, "sm time APE {}", r.sm_mean_time);
+    }
+}

@@ -1,0 +1,30 @@
+//! # gpoeo — Dynamic GPU Energy Optimization for ML Training Workloads
+//!
+//! A full reproduction of **GPOEO** (Wang et al., IEEE TPDS 2022): an
+//! online GPU energy-optimization framework that detects training-
+//! iteration periods from power/utilization traces, profiles performance
+//! counters for a single period, predicts the energy/time impact of every
+//! SM and memory clock gear with gradient-boosted tree models, and golden-
+//! section-searches around the predicted optimum.
+//!
+//! Because the paper's testbed (RTX3080Ti + NVML + CUPTI) is hardware we
+//! do not have, the [`sim`] module provides a calibrated, deterministic
+//! simulation of it; the controller in `coordinator` is generic over
+//! that device surface. Prediction models are trained offline in Python
+//! (`python/compile/`), AOT-lowered to HLO, and executed at runtime by
+//! the PJRT CPU client in `runtime` — Python is never on the request
+//! path.
+//!
+//! Layer map (see DESIGN.md):
+//! - L3: `coordinator`, [`sim`], `signal`, `search`, `experiments`
+//! - L2/L1 artifacts: built by `make artifacts`, loaded by `runtime`
+
+pub mod cli;
+pub mod coordinator;
+pub mod experiments;
+pub mod model;
+pub mod search;
+pub mod runtime;
+pub mod signal;
+pub mod sim;
+pub mod util;

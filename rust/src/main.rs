@@ -1,0 +1,23 @@
+//! `gpoeo` — command-line entry point.
+//!
+//! Subcommands:
+//! - `list`                      list suites and applications
+//! - `calibrate [--suite S]`     ground-truth model coefficients + oracle
+//! - `detect --app A [...]`      run period detection on a simulated trace
+//! - `run --app A [...]`         GPOEO online optimization on one app
+//! - `experiment <id>`           regenerate a paper table/figure (fig1..fig15, table3, headline)
+//! - `daemon [--socket P]`       Begin/End API server (micro-intrusive mode)
+
+use gpoeo::util::cli::Args;
+
+fn main() {
+    let args = Args::from_env();
+    let code = match gpoeo::cli::dispatch(&args) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            2
+        }
+    };
+    std::process::exit(code);
+}

@@ -1,0 +1,178 @@
+//! Native gradient-boosted-tree inference — the Rust twin of the
+//! AOT-compiled predictor modules.
+//!
+//! Loads the dense-array JSON written by `python/compile/gbt.py`
+//! (`artifacts/gbt_*.json`). Used (a) as a cross-check oracle against the
+//! PJRT path in `rust/tests/runtime_crosscheck.rs` and (b) as the
+//! fallback predictor when `artifacts/` has no compiled HLO.
+
+use crate::util::json::Json;
+use std::path::Path;
+
+/// One flattened regression tree (leaves: `feat < 0`, value in `thr`,
+/// children self-loop).
+#[derive(Debug, Clone)]
+pub struct Tree {
+    pub feat: Vec<i32>,
+    pub thr: Vec<f64>,
+    pub left: Vec<u32>,
+    pub right: Vec<u32>,
+}
+
+impl Tree {
+    /// Evaluate one input row.
+    pub fn eval(&self, x: &[f64]) -> f64 {
+        let mut i = 0usize;
+        loop {
+            let f = self.feat[i];
+            if f < 0 {
+                return self.thr[i];
+            }
+            i = if x[f as usize] <= self.thr[i] {
+                self.left[i] as usize
+            } else {
+                self.right[i] as usize
+            };
+        }
+    }
+
+    /// Structural validation: children in range, leaves self-looping,
+    /// no split cycles within a bounded depth.
+    pub fn validate(&self) -> anyhow::Result<()> {
+        let n = self.feat.len();
+        anyhow::ensure!(n > 0, "empty tree");
+        anyhow::ensure!(
+            self.thr.len() == n && self.left.len() == n && self.right.len() == n,
+            "ragged tree arrays"
+        );
+        for i in 0..n {
+            anyhow::ensure!((self.left[i] as usize) < n, "left child out of range");
+            anyhow::ensure!((self.right[i] as usize) < n, "right child out of range");
+            if self.feat[i] < 0 {
+                anyhow::ensure!(
+                    self.left[i] as usize == i && self.right[i] as usize == i,
+                    "leaf must self-loop"
+                );
+            }
+        }
+        Ok(())
+    }
+}
+
+/// A trained ensemble: `base + lr · Σ trees`.
+#[derive(Debug, Clone)]
+pub struct GbtModel {
+    pub base: f64,
+    pub lr: f64,
+    pub trees: Vec<Tree>,
+}
+
+impl GbtModel {
+    pub fn predict(&self, x: &[f64]) -> f64 {
+        self.base + self.lr * self.trees.iter().map(|t| t.eval(x)).sum::<f64>()
+    }
+
+    pub fn from_json(j: &Json) -> anyhow::Result<GbtModel> {
+        let base = j.req_f64("base")?;
+        let lr = j.req_f64("lr")?;
+        let mut trees = Vec::new();
+        for t in j.req_arr("trees")? {
+            let feat: Vec<i32> = t
+                .req_f64_arr("feat")?
+                .into_iter()
+                .map(|v| v as i32)
+                .collect();
+            let thr = t.req_f64_arr("thr")?;
+            let left: Vec<u32> = t
+                .req_f64_arr("left")?
+                .into_iter()
+                .map(|v| v as u32)
+                .collect();
+            let right: Vec<u32> = t
+                .req_f64_arr("right")?
+                .into_iter()
+                .map(|v| v as u32)
+                .collect();
+            let tree = Tree {
+                feat,
+                thr,
+                left,
+                right,
+            };
+            tree.validate()?;
+            trees.push(tree);
+        }
+        anyhow::ensure!(!trees.is_empty(), "model has no trees");
+        Ok(GbtModel { base, lr, trees })
+    }
+
+    pub fn load(path: &Path) -> anyhow::Result<GbtModel> {
+        GbtModel::from_json(&Json::parse_file(path)?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy_tree() -> Tree {
+        // x[0] <= 0.5 ? 1.0 : (x[1] <= 0.2 ? 2.0 : 3.0)
+        Tree {
+            feat: vec![0, -1, 1, -1, -1],
+            thr: vec![0.5, 1.0, 0.2, 2.0, 3.0],
+            left: vec![1, 1, 3, 3, 4],
+            right: vec![2, 1, 4, 3, 4],
+        }
+    }
+
+    #[test]
+    fn tree_eval_follows_splits() {
+        let t = toy_tree();
+        assert_eq!(t.eval(&[0.3, 0.9]), 1.0);
+        assert_eq!(t.eval(&[0.7, 0.1]), 2.0);
+        assert_eq!(t.eval(&[0.7, 0.9]), 3.0);
+        // Boundary: <= goes left.
+        assert_eq!(t.eval(&[0.5, 0.0]), 1.0);
+    }
+
+    #[test]
+    fn model_combines_trees() {
+        let m = GbtModel {
+            base: 1.0,
+            lr: 0.5,
+            trees: vec![toy_tree(), toy_tree()],
+        };
+        assert_eq!(m.predict(&[0.3, 0.0]), 1.0 + 0.5 * 2.0);
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let src = r#"{
+            "base": 0.9, "lr": 0.1,
+            "trees": [{"feat": [0, -1, -1], "thr": [0.5, 1.0, 2.0],
+                       "left": [1, 1, 2], "right": [2, 1, 2]}]
+        }"#;
+        let m = GbtModel::from_json(&Json::parse(src).unwrap()).unwrap();
+        assert_eq!(m.trees.len(), 1);
+        assert!((m.predict(&[0.4]) - (0.9 + 0.1)).abs() < 1e-12);
+        assert!((m.predict(&[0.6]) - (0.9 + 0.2)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn validation_rejects_bad_trees() {
+        let bad = Tree {
+            feat: vec![0],
+            thr: vec![0.5],
+            left: vec![7],
+            right: vec![0],
+        };
+        assert!(bad.validate().is_err());
+        let bad_leaf = Tree {
+            feat: vec![-1],
+            thr: vec![1.0],
+            left: vec![0],
+            right: vec![0],
+        };
+        assert!(bad_leaf.validate().is_ok());
+    }
+}

@@ -1,0 +1,8 @@
+//! Prediction models (§4.3): native GBT inference and the unified
+//! predictor over HLO/native backends.
+
+pub mod gbt;
+pub mod predictor;
+
+pub use gbt::GbtModel;
+pub use predictor::{gear_norm_mem, gear_norm_sm, GearPredictions, NativeModels, Predictor};

@@ -1,0 +1,184 @@
+//! The four prediction models of Equation (1)/(2), behind one interface.
+//!
+//! Two backends:
+//! - **Hlo** — the AOT-compiled PJRT modules (production path; Pallas
+//!   kernels inside, Python nowhere).
+//! - **Native** — Rust GBT inference over the same trained trees
+//!   (`artifacts/gbt_*.json`). Twin/cross-check path and the fallback
+//!   when the compiled artifacts are absent.
+
+use crate::model::gbt::GbtModel;
+use crate::runtime::{default_artifacts_dir, Runtime};
+use crate::sim::Spec;
+
+/// Per-gear predictions relative to the NVIDIA default strategy.
+#[derive(Debug, Clone)]
+pub struct GearPredictions {
+    /// Gear id of row i (SM gear index or memory gear index).
+    pub gears: Vec<usize>,
+    pub energy_ratio: Vec<f64>,
+    pub time_ratio: Vec<f64>,
+}
+
+impl GearPredictions {
+    /// Best gear under an objective.
+    pub fn best(&self, obj: crate::search::Objective) -> usize {
+        let scores: Vec<f64> = self
+            .energy_ratio
+            .iter()
+            .zip(&self.time_ratio)
+            .map(|(&e, &t)| obj.score(e, t))
+            .collect();
+        self.gears[crate::util::stats::argmin(&scores).unwrap()]
+    }
+}
+
+/// Normalized SM-gear model input — must match `simdata.gear_norm_sm`.
+pub fn gear_norm_sm(spec: &Spec, gear: usize) -> f64 {
+    spec.gears.sm_mhz(gear) / spec.power.f_max_mhz
+}
+
+/// Normalized memory-gear model input — must match `simdata.gear_norm_mem`.
+pub fn gear_norm_mem(spec: &Spec, gear: usize) -> f64 {
+    let max = spec
+        .gears
+        .mem_mhz
+        .iter()
+        .cloned()
+        .fold(f64::NEG_INFINITY, f64::max);
+    spec.gears.mem_mhz_of(gear) / max
+}
+
+/// Native four-model bundle.
+pub struct NativeModels {
+    pub sm_eng: GbtModel,
+    pub sm_time: GbtModel,
+    pub mem_eng: GbtModel,
+    pub mem_time: GbtModel,
+}
+
+impl NativeModels {
+    pub fn load_default() -> anyhow::Result<NativeModels> {
+        let dir = default_artifacts_dir();
+        Ok(NativeModels {
+            sm_eng: GbtModel::load(&dir.join("gbt_sm_eng.json"))?,
+            sm_time: GbtModel::load(&dir.join("gbt_sm_time.json"))?,
+            mem_eng: GbtModel::load(&dir.join("gbt_mem_eng.json"))?,
+            mem_time: GbtModel::load(&dir.join("gbt_mem_time.json"))?,
+        })
+    }
+}
+
+/// Prediction backend.
+pub enum Predictor {
+    Hlo(Runtime),
+    Native(NativeModels),
+}
+
+impl Predictor {
+    /// Prefer the compiled HLO path; fall back to native trees.
+    pub fn load_best() -> anyhow::Result<Predictor> {
+        if let Some(rt) = Runtime::try_default() {
+            return Ok(Predictor::Hlo(rt));
+        }
+        Ok(Predictor::Native(NativeModels::load_default()?))
+    }
+
+    pub fn backend_name(&self) -> &'static str {
+        match self {
+            Predictor::Hlo(_) => "hlo-pjrt",
+            Predictor::Native(_) => "native-gbt",
+        }
+    }
+
+    /// SM-clock models: (energy, time) ratio per SM gear.
+    pub fn predict_sm(&self, spec: &Spec, features: &[f64]) -> anyhow::Result<GearPredictions> {
+        let gears: Vec<usize> = spec.gears.sm_gears().collect();
+        match self {
+            Predictor::Hlo(rt) => {
+                let f32s: Vec<f32> = features.iter().map(|&v| v as f32).collect();
+                let (e, t) = rt.predict_sm(&f32s)?;
+                Ok(GearPredictions {
+                    gears,
+                    energy_ratio: e.into_iter().map(|v| v as f64).collect(),
+                    time_ratio: t.into_iter().map(|v| v as f64).collect(),
+                })
+            }
+            Predictor::Native(m) => {
+                let mut x = Vec::with_capacity(1 + features.len());
+                let mut eng = Vec::with_capacity(gears.len());
+                let mut tim = Vec::with_capacity(gears.len());
+                for &g in &gears {
+                    x.clear();
+                    x.push(gear_norm_sm(spec, g));
+                    x.extend_from_slice(features);
+                    eng.push(m.sm_eng.predict(&x));
+                    tim.push(m.sm_time.predict(&x));
+                }
+                Ok(GearPredictions {
+                    gears,
+                    energy_ratio: eng,
+                    time_ratio: tim,
+                })
+            }
+        }
+    }
+
+    /// Memory-clock models: (energy, time) ratio per memory gear.
+    pub fn predict_mem(&self, spec: &Spec, features: &[f64]) -> anyhow::Result<GearPredictions> {
+        let gears: Vec<usize> = (0..spec.gears.num_mem_gears()).collect();
+        match self {
+            Predictor::Hlo(rt) => {
+                let f32s: Vec<f32> = features.iter().map(|&v| v as f32).collect();
+                let (e, t) = rt.predict_mem(&f32s)?;
+                Ok(GearPredictions {
+                    gears,
+                    energy_ratio: e.into_iter().map(|v| v as f64).collect(),
+                    time_ratio: t.into_iter().map(|v| v as f64).collect(),
+                })
+            }
+            Predictor::Native(m) => {
+                let mut eng = Vec::new();
+                let mut tim = Vec::new();
+                for &g in &gears {
+                    let mut x = vec![gear_norm_mem(spec, g)];
+                    x.extend_from_slice(features);
+                    eng.push(m.mem_eng.predict(&x));
+                    tim.push(m.mem_time.predict(&x));
+                }
+                Ok(GearPredictions {
+                    gears,
+                    energy_ratio: eng,
+                    time_ratio: tim,
+                })
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::search::Objective;
+
+    #[test]
+    fn gear_norms_match_contract() {
+        let spec = Spec::load_default().unwrap();
+        assert!((gear_norm_sm(&spec, 114) - 1.0).abs() < 1e-12);
+        assert!((gear_norm_sm(&spec, 16) - 450.0 / 1920.0).abs() < 1e-12);
+        assert!((gear_norm_mem(&spec, 4) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn best_gear_respects_objective() {
+        let p = GearPredictions {
+            gears: vec![10, 11, 12],
+            energy_ratio: vec![0.8, 0.7, 0.9],
+            time_ratio: vec![1.04, 1.20, 1.01],
+        };
+        // Min-energy-capped: gear 11 is infeasible, 10 beats 12 on energy.
+        assert_eq!(p.best(Objective::paper_default()), 10);
+        // Unconstrained energy: gear 11 wins.
+        assert_eq!(p.best(Objective::Energy), 11);
+    }
+}

@@ -1,0 +1,125 @@
+//! PJRT runtime: loads the AOT artifacts produced by `make artifacts`
+//! (`python/compile/aot.py`) and executes them on the CPU PJRT client
+//! from the L3 hot path. Python never runs here.
+//!
+//! Artifacts are HLO *text* — the interchange format that survives the
+//! jax≥0.5 / xla_extension 0.5.1 proto-id mismatch (see
+//! /opt/xla-example/README.md). `HloModuleProto::from_text_file`
+//! reassigns instruction ids during parsing.
+
+use crate::util::json::Json;
+use std::path::{Path, PathBuf};
+
+/// Locate the artifact directory: `$GPOEO_ARTIFACTS`, else `artifacts/`
+/// under the crate root, else `./artifacts`.
+pub fn default_artifacts_dir() -> PathBuf {
+    if let Ok(p) = std::env::var("GPOEO_ARTIFACTS") {
+        return PathBuf::from(p);
+    }
+    let candidates = [
+        concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts").to_string(),
+        "artifacts".to_string(),
+    ];
+    for c in &candidates {
+        let p = PathBuf::from(c);
+        if p.join("meta.json").exists() {
+            return p;
+        }
+    }
+    PathBuf::from("artifacts")
+}
+
+/// One compiled module.
+struct LoadedExe {
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl LoadedExe {
+    fn load(client: &xla::PjRtClient, path: &Path) -> anyhow::Result<LoadedExe> {
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .map_err(|e| anyhow::anyhow!("parsing {}: {e}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client
+            .compile(&comp)
+            .map_err(|e| anyhow::anyhow!("compiling {}: {e}", path.display()))?;
+        Ok(LoadedExe { exe })
+    }
+
+    fn run1(&self, input: &[f32]) -> anyhow::Result<Vec<f32>> {
+        let x = xla::Literal::vec1(input);
+        let result = self.exe.execute::<xla::Literal>(&[x])?[0][0].to_literal_sync()?;
+        let out = result.to_tuple1()?;
+        Ok(out.to_vec::<f32>()?)
+    }
+
+    fn run2(&self, input: &[f32]) -> anyhow::Result<(Vec<f32>, Vec<f32>)> {
+        let x = xla::Literal::vec1(input);
+        let result = self.exe.execute::<xla::Literal>(&[x])?[0][0].to_literal_sync()?;
+        let (a, b) = result.to_tuple2()?;
+        Ok((a.to_vec::<f32>()?, b.to_vec::<f32>()?))
+    }
+}
+
+/// The runtime: a PJRT CPU client plus the three compiled modules.
+pub struct Runtime {
+    _client: xla::PjRtClient,
+    periodogram: LoadedExe,
+    predictor_sm: LoadedExe,
+    predictor_mem: LoadedExe,
+    /// From meta.json — sanity metadata written at AOT time.
+    pub meta: Json,
+}
+
+impl Runtime {
+    /// Load all artifacts from `dir`. Fails if any artifact is missing —
+    /// callers that want graceful degradation use [`Runtime::try_default`]
+    /// and fall back to the native twin paths.
+    pub fn load(dir: &Path) -> anyhow::Result<Runtime> {
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow::anyhow!("creating PJRT CPU client: {e}"))?;
+        let periodogram = LoadedExe::load(&client, &dir.join("periodogram_1024.hlo.txt"))?;
+        let predictor_sm = LoadedExe::load(&client, &dir.join("predictor_sm.hlo.txt"))?;
+        let predictor_mem = LoadedExe::load(&client, &dir.join("predictor_mem.hlo.txt"))?;
+        let meta = Json::parse_file(&dir.join("meta.json"))?;
+        Ok(Runtime {
+            _client: client,
+            periodogram,
+            predictor_sm,
+            predictor_mem,
+            meta,
+        })
+    }
+
+    /// Load from the default artifact location; `None` if unavailable.
+    pub fn try_default() -> Option<Runtime> {
+        let dir = default_artifacts_dir();
+        match Runtime::load(&dir) {
+            Ok(r) => Some(r),
+            Err(e) => {
+                eprintln!(
+                    "runtime: artifacts unavailable ({e}); falling back to native paths"
+                );
+                None
+            }
+        }
+    }
+
+    /// Amplitude spectrum of a 1024-sample trace (bins 1..=512).
+    pub fn periodogram_1024(&self, x: &[f32]) -> anyhow::Result<Vec<f32>> {
+        anyhow::ensure!(x.len() == 1024, "periodogram_1024 expects 1024 samples");
+        self.periodogram.run1(x)
+    }
+
+    /// SM-clock models: features[16] → (energy ratios, time ratios) over
+    /// the 99 SM gears (gear 16 first).
+    pub fn predict_sm(&self, features: &[f32]) -> anyhow::Result<(Vec<f32>, Vec<f32>)> {
+        anyhow::ensure!(features.len() == 16, "predict_sm expects 16 features");
+        self.predictor_sm.run2(features)
+    }
+
+    /// Memory-clock models: features[16] → ratios over the 5 memory gears.
+    pub fn predict_mem(&self, features: &[f32]) -> anyhow::Result<(Vec<f32>, Vec<f32>)> {
+        anyhow::ensure!(features.len() == 16, "predict_mem expects 16 features");
+        self.predictor_mem.run2(features)
+    }
+}

@@ -1,0 +1,248 @@
+//! Golden-section local search over integer clock gears (§4.3.4).
+//!
+//! The paper's procedure: (1) bracket the predicted optimum by finding a
+//! worse gear on each side, (2) golden-section within the bracket,
+//! (3) fit the probed points with a parabola and let the convex fit pick
+//! the final gear, which absorbs noise in the per-probe energy/period
+//! measurements.
+
+use crate::util::stats::{argmin, parabola_argmin};
+use std::collections::BTreeMap;
+
+/// Result of a local search.
+#[derive(Debug, Clone)]
+pub struct SearchResult {
+    pub best_gear: usize,
+    /// Number of *new* measurements taken (the paper's "# of search steps").
+    pub steps: usize,
+    /// All probed (gear, score) pairs, in probe order.
+    pub probes: Vec<(usize, f64)>,
+}
+
+const GOLDEN: f64 = 0.618_033_988_749_894_8;
+
+/// Search for the gear minimizing `eval` around `predicted` in
+/// `[lo, hi]`. `eval` is called at most once per gear (results are
+/// memoized); each fresh call counts as one search step.
+pub fn local_search(
+    predicted: usize,
+    lo: usize,
+    hi: usize,
+    eval: &mut dyn FnMut(usize) -> f64,
+) -> SearchResult {
+    assert!(lo <= hi);
+    let predicted = predicted.clamp(lo, hi);
+    let mut cache: BTreeMap<usize, f64> = BTreeMap::new();
+    let mut steps = 0usize;
+    let mut probes: Vec<(usize, f64)> = Vec::new();
+
+    let mut probe = |g: usize, cache: &mut BTreeMap<usize, f64>,
+                     steps: &mut usize,
+                     probes: &mut Vec<(usize, f64)>|
+     -> f64 {
+        if let Some(&v) = cache.get(&g) {
+            return v;
+        }
+        let v = eval(g);
+        cache.insert(g, v);
+        *steps += 1;
+        probes.push((g, v));
+        v
+    };
+
+    let f0 = probe(predicted, &mut cache, &mut steps, &mut probes);
+
+    // --- Phase 1: bracket. Expand geometrically on each side until a
+    // worse point than the incumbent is seen (or the bound is hit).
+    let mut best = (predicted, f0);
+    let mut left = predicted;
+    let mut stride = 1usize;
+    while left > lo {
+        let g = left.saturating_sub(stride).max(lo);
+        let v = probe(g, &mut cache, &mut steps, &mut probes);
+        if v < best.1 {
+            best = (g, v);
+        }
+        left = g;
+        if v > best.1 || g == lo {
+            break;
+        }
+        stride *= 2;
+    }
+    let mut right = predicted;
+    stride = 1;
+    while right < hi {
+        let g = (right + stride).min(hi);
+        let v = probe(g, &mut cache, &mut steps, &mut probes);
+        if v < best.1 {
+            best = (g, v);
+        }
+        right = g;
+        if v > best.1 || g == hi {
+            break;
+        }
+        stride *= 2;
+    }
+
+    // --- Phase 2: golden-section on [a, b].
+    let (mut a, mut b) = (left as f64, right as f64);
+    while b - a > 2.0 {
+        let x1 = (b - GOLDEN * (b - a)).round() as usize;
+        let x2 = (a + GOLDEN * (b - a)).round() as usize;
+        let (x1, x2) = if x1 >= x2 {
+            ((a as usize + 1).min(hi), (b as usize).saturating_sub(1).max(lo))
+        } else {
+            (x1, x2)
+        };
+        if x1 >= x2 {
+            break;
+        }
+        let f1 = probe(x1, &mut cache, &mut steps, &mut probes);
+        let f2 = probe(x2, &mut cache, &mut steps, &mut probes);
+        if f1 < best.1 {
+            best = (x1, f1);
+        }
+        if f2 < best.1 {
+            best = (x2, f2);
+        }
+        if f1 <= f2 {
+            b = x2 as f64;
+        } else {
+            a = x1 as f64;
+        }
+    }
+
+    // --- Phase 3: convex fit over the feasible probes near the incumbent.
+    // Infeasible probes carry the +10 offset (see Objective::score) and
+    // would wreck the parabola, so only fit scores in the feasible band.
+    let fit_pts: Vec<(usize, f64)> = cache
+        .iter()
+        .filter(|(_, &v)| v < 9.0)
+        .map(|(&g, &v)| (g, v))
+        .collect();
+    if fit_pts.len() >= 4 {
+        let xs: Vec<f64> = fit_pts.iter().map(|(g, _)| *g as f64).collect();
+        let ys: Vec<f64> = fit_pts.iter().map(|(_, v)| *v).collect();
+        let vertex = parabola_argmin(&xs, &ys, lo as f64, hi as f64).round() as usize;
+        let v = probe(vertex, &mut cache, &mut steps, &mut probes);
+        if v < best.1 {
+            best = (vertex, v);
+        }
+    }
+
+    SearchResult {
+        best_gear: best.0,
+        steps,
+        probes,
+    }
+}
+
+/// Exhaustive argmin over a gear range — used by the oracle and for small
+/// gear sets (memory clock has only 5 gears, where golden-section would
+/// just be a sweep anyway).
+pub fn sweep(lo: usize, hi: usize, eval: &mut dyn FnMut(usize) -> f64) -> SearchResult {
+    let scores: Vec<f64> = (lo..=hi).map(|g| eval(g)).collect();
+    let k = argmin(&scores).unwrap();
+    SearchResult {
+        best_gear: lo + k,
+        steps: scores.len(),
+        probes: scores.iter().enumerate().map(|(i, &v)| (lo + i, v)).collect(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn finds_exact_minimum_of_convex_function() {
+        let f = |g: usize| ((g as f64) - 73.0).powi(2) * 0.001 + 0.8;
+        for start in [20usize, 50, 73, 90, 114] {
+            let mut eval = |g: usize| f(g);
+            let r = local_search(start, 16, 114, &mut eval);
+            assert!(
+                (r.best_gear as i64 - 73).abs() <= 1,
+                "start {start} -> {}",
+                r.best_gear
+            );
+        }
+    }
+
+    #[test]
+    fn step_count_is_modest_near_prediction() {
+        // Prediction within a few gears of the optimum -> few steps (the
+        // paper's Table 3 reports 3-9 steps).
+        let f = |g: usize| ((g as f64) - 94.0).powi(2) * 0.0005 + 0.7;
+        let mut eval = |g: usize| f(g);
+        let r = local_search(92, 16, 114, &mut eval);
+        assert_eq!(r.best_gear, 94);
+        assert!(r.steps <= 12, "steps {}", r.steps);
+    }
+
+    #[test]
+    fn noisy_convex_function_lands_close() {
+        // Deterministic pseudo-noise, ~1% of range.
+        let f = |g: usize| {
+            let x = g as f64;
+            let noise = ((g * 2654435761) % 1000) as f64 / 1000.0 - 0.5;
+            (x - 60.0).powi(2) * 0.0004 + 0.8 + 0.004 * noise
+        };
+        let mut eval = |g: usize| f(g);
+        let r = local_search(50, 16, 114, &mut eval);
+        assert!(
+            (r.best_gear as i64 - 60).abs() <= 4,
+            "got {}",
+            r.best_gear
+        );
+    }
+
+    #[test]
+    fn respects_bounds() {
+        // Minimum at the boundary.
+        let mut eval = |g: usize| -(g as f64);
+        let r = local_search(20, 16, 114, &mut eval);
+        assert_eq!(r.best_gear, 114);
+        let mut eval2 = |g: usize| g as f64;
+        let r2 = local_search(100, 16, 114, &mut eval2);
+        assert_eq!(r2.best_gear, 16);
+    }
+
+    #[test]
+    fn memoizes_probes() {
+        let mut calls = 0usize;
+        let mut eval = |g: usize| {
+            calls += 1;
+            ((g as f64) - 40.0).powi(2)
+        };
+        let r = local_search(40, 16, 114, &mut eval);
+        assert_eq!(r.steps, calls);
+        // Each probe is unique.
+        let mut gears: Vec<usize> = r.probes.iter().map(|(g, _)| *g).collect();
+        gears.sort_unstable();
+        gears.dedup();
+        assert_eq!(gears.len(), r.probes.len());
+    }
+
+    #[test]
+    fn sweep_finds_min() {
+        let mut eval = |g: usize| (g as f64 - 2.0).abs();
+        let r = sweep(0, 4, &mut eval);
+        assert_eq!(r.best_gear, 2);
+        assert_eq!(r.steps, 5);
+    }
+
+    #[test]
+    fn infeasible_band_excluded_from_fit() {
+        // Scores: feasible convex valley around 70, infeasible below 40.
+        let f = |g: usize| {
+            if g < 40 {
+                10.0 + (40 - g) as f64 * 0.01
+            } else {
+                (g as f64 - 70.0).powi(2) * 0.001 + 0.6
+            }
+        };
+        let mut eval = |g: usize| f(g);
+        let r = local_search(45, 16, 114, &mut eval);
+        assert!((r.best_gear as i64 - 70).abs() <= 2, "got {}", r.best_gear);
+    }
+}

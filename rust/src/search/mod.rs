@@ -1,0 +1,9 @@
+//! Online local search (§4.3.4): objective functions over (energy, time)
+//! ratios and a golden-section search over clock gears with a convex-fit
+//! finish to absorb measurement noise.
+
+pub mod golden;
+pub mod objective;
+
+pub use golden::{local_search, SearchResult};
+pub use objective::Objective;

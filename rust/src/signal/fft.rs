@@ -1,0 +1,189 @@
+//! Radix-2 iterative Cooley–Tukey FFT and the amplitude periodogram used
+//! by period detection (§4.1.1).
+//!
+//! This is the *native* spectral path; the AOT-compiled Pallas kernel
+//! (`artifacts/periodogram_1024.hlo.txt`, executed via `runtime`) is the
+//! hot-path twin. `rust/tests/runtime_crosscheck.rs` pins the two to each
+//! other.
+
+use std::f64::consts::PI;
+
+/// In-place iterative radix-2 FFT over interleaved complex (re, im) pairs.
+/// `n` (pair count) must be a power of two.
+pub fn fft_inplace(re: &mut [f64], im: &mut [f64]) {
+    let n = re.len();
+    assert_eq!(n, im.len());
+    assert!(n.is_power_of_two(), "fft length must be a power of two");
+    if n <= 1 {
+        return;
+    }
+
+    // Bit-reversal permutation.
+    let bits = n.trailing_zeros();
+    for i in 0..n {
+        let j = (i as u32).reverse_bits() >> (32 - bits);
+        let j = j as usize;
+        if j > i {
+            re.swap(i, j);
+            im.swap(i, j);
+        }
+    }
+
+    // Butterflies.
+    let mut len = 2;
+    while len <= n {
+        let ang = -2.0 * PI / len as f64;
+        let (wr, wi) = (ang.cos(), ang.sin());
+        let mut i = 0;
+        while i < n {
+            let (mut cr, mut ci) = (1.0f64, 0.0f64);
+            for k in 0..len / 2 {
+                let (ur, ui) = (re[i + k], im[i + k]);
+                let (vr, vi) = (
+                    re[i + k + len / 2] * cr - im[i + k + len / 2] * ci,
+                    re[i + k + len / 2] * ci + im[i + k + len / 2] * cr,
+                );
+                re[i + k] = ur + vr;
+                im[i + k] = ui + vi;
+                re[i + k + len / 2] = ur - vr;
+                im[i + k + len / 2] = ui - vi;
+                let ncr = cr * wr - ci * wi;
+                ci = cr * wi + ci * wr;
+                cr = ncr;
+            }
+            i += len;
+        }
+        len <<= 1;
+    }
+}
+
+/// Next power of two ≥ n.
+pub fn next_pow2(n: usize) -> usize {
+    n.next_power_of_two()
+}
+
+/// Reusable FFT scratch buffers — keeps the rolling-detection hot loop
+/// allocation-free (see EXPERIMENTS.md §Perf).
+#[derive(Debug, Default, Clone)]
+pub struct FftScratch {
+    re: Vec<f64>,
+    im: Vec<f64>,
+}
+
+/// One-sided amplitude spectrum of a real signal sampled at interval `ts`.
+///
+/// The signal is mean-detrended and zero-padded to the next power of two.
+/// Returns (frequencies Hz, amplitudes) for bins 1..n/2 (DC excluded —
+/// period detection never wants the zero-frequency bin).
+pub fn periodogram(samples: &[f64], ts: f64) -> (Vec<f64>, Vec<f64>) {
+    let mut scratch = FftScratch::default();
+    periodogram_with(samples, ts, &mut scratch)
+}
+
+/// `periodogram` with caller-provided scratch buffers.
+pub fn periodogram_with(
+    samples: &[f64],
+    ts: f64,
+    scratch: &mut FftScratch,
+) -> (Vec<f64>, Vec<f64>) {
+    let n = samples.len();
+    if n < 4 {
+        return (Vec::new(), Vec::new());
+    }
+    let m = next_pow2(n);
+    let mean = samples.iter().sum::<f64>() / n as f64;
+
+    scratch.re.clear();
+    scratch.re.extend(samples.iter().map(|s| s - mean));
+    scratch.re.resize(m, 0.0);
+    scratch.im.clear();
+    scratch.im.resize(m, 0.0);
+
+    fft_inplace(&mut scratch.re, &mut scratch.im);
+
+    // Frequency resolution is based on the padded length (standard DFT
+    // bin spacing); the true signal duration governs what is resolvable.
+    let df = 1.0 / (m as f64 * ts);
+    let half = m / 2;
+    let mut freqs = Vec::with_capacity(half - 1);
+    let mut ampls = Vec::with_capacity(half - 1);
+    for k in 1..half {
+        freqs.push(k as f64 * df);
+        ampls.push((scratch.re[k].powi(2) + scratch.im[k].powi(2)).sqrt());
+    }
+    (freqs, ampls)
+}
+
+/// The spectral front-end signature used by period detection so the
+/// PJRT-compiled periodogram can be swapped in for the native FFT.
+pub type SpectrumFn<'a> = &'a mut dyn FnMut(&[f64], f64) -> (Vec<f64>, Vec<f64>);
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fft_of_impulse_is_flat() {
+        let n = 16;
+        let mut re = vec![0.0; n];
+        let mut im = vec![0.0; n];
+        re[0] = 1.0;
+        fft_inplace(&mut re, &mut im);
+        for k in 0..n {
+            let mag = (re[k] * re[k] + im[k] * im[k]).sqrt();
+            assert!((mag - 1.0).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn fft_matches_naive_dft() {
+        let n = 64;
+        let sig: Vec<f64> = (0..n)
+            .map(|i| (i as f64 * 0.37).sin() + 0.5 * (i as f64 * 1.1).cos())
+            .collect();
+        let mut re = sig.clone();
+        let mut im = vec![0.0; n];
+        fft_inplace(&mut re, &mut im);
+        for k in 0..n {
+            let (mut dr, mut di) = (0.0, 0.0);
+            for (t, x) in sig.iter().enumerate() {
+                let ang = -2.0 * PI * k as f64 * t as f64 / n as f64;
+                dr += x * ang.cos();
+                di += x * ang.sin();
+            }
+            assert!((re[k] - dr).abs() < 1e-8, "k={k} re {} vs {}", re[k], dr);
+            assert!((im[k] - di).abs() < 1e-8, "k={k} im {} vs {}", im[k], di);
+        }
+    }
+
+    #[test]
+    fn periodogram_finds_dominant_frequency() {
+        let ts = 0.02;
+        let f0 = 1.25; // Hz
+        let sig: Vec<f64> = (0..1000)
+            .map(|i| 3.0 + 2.0 * (2.0 * PI * f0 * i as f64 * ts).sin())
+            .collect();
+        let (freqs, ampls) = periodogram(&sig, ts);
+        let k = crate::util::stats::argmax(&ampls).unwrap();
+        assert!((freqs[k] - f0).abs() < 0.05, "peak at {}", freqs[k]);
+    }
+
+    #[test]
+    fn periodogram_excludes_dc() {
+        // Pure offset has no non-DC content.
+        let sig = vec![5.0; 256];
+        let (_, ampls) = periodogram(&sig, 0.01);
+        assert!(ampls.iter().all(|a| a.abs() < 1e-9));
+    }
+
+    #[test]
+    fn scratch_reuse_is_equivalent() {
+        let sig: Vec<f64> = (0..300).map(|i| (i as f64 * 0.21).sin()).collect();
+        let mut scratch = FftScratch::default();
+        let a = periodogram(&sig, 0.05);
+        let b = periodogram_with(&sig, 0.05, &mut scratch);
+        let c = periodogram_with(&sig, 0.05, &mut scratch);
+        assert_eq!(a.1, b.1);
+        assert_eq!(b.1, c.1);
+    }
+}

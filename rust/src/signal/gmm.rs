@@ -1,0 +1,180 @@
+//! One-dimensional Gaussian-mixture clustering (EM), the grouping step of
+//! the feature-sequence-similarity algorithm (Algorithm 2, line 8).
+//!
+//! The paper clusters each sub-curve's samples into `NumG` amplitude
+//! groups so that group-mean comparisons cancel high-frequency
+//! interference. Initialization is deterministic (quantile-spread means)
+//! so the whole detection pipeline stays reproducible.
+
+/// Result of clustering: per-sample hard assignment plus the model.
+#[derive(Debug, Clone)]
+pub struct GmmResult {
+    pub assignments: Vec<usize>,
+    pub means: Vec<f64>,
+    pub vars: Vec<f64>,
+    pub weights: Vec<f64>,
+    pub iterations: usize,
+}
+
+/// Fit a 1-D GMM with `k` components via EM with deterministic quantile
+/// initialization. Returns hard assignments by maximum responsibility.
+pub fn cluster_1d(xs: &[f64], k: usize, max_iter: usize) -> GmmResult {
+    assert!(k >= 1);
+    let n = xs.len();
+    if n == 0 {
+        return GmmResult {
+            assignments: Vec::new(),
+            means: vec![0.0; k],
+            vars: vec![1.0; k],
+            weights: vec![1.0 / k as f64; k],
+            iterations: 0,
+        };
+    }
+
+    // Deterministic init: means at spread quantiles, shared variance.
+    let mut sorted = xs.to_vec();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let mut means: Vec<f64> = (0..k)
+        .map(|j| {
+            let q = (j as f64 + 0.5) / k as f64;
+            sorted[((q * (n - 1) as f64).round() as usize).min(n - 1)]
+        })
+        .collect();
+    let global_mean = xs.iter().sum::<f64>() / n as f64;
+    let global_var = (xs.iter().map(|x| (x - global_mean).powi(2)).sum::<f64>() / n as f64)
+        .max(1e-12);
+    let mut vars = vec![global_var; k];
+    let mut weights = vec![1.0 / k as f64; k];
+
+    let mut resp = vec![0.0f64; n * k];
+    let mut iterations = 0;
+    let mut prev_ll = f64::NEG_INFINITY;
+
+    for it in 0..max_iter {
+        iterations = it + 1;
+
+        // E-step: responsibilities (log-space for stability).
+        let mut ll = 0.0;
+        for i in 0..n {
+            let mut logp = [0.0f64; 16];
+            assert!(k <= 16, "k too large");
+            let mut maxlp = f64::NEG_INFINITY;
+            for j in 0..k {
+                let v = vars[j].max(1e-12);
+                let d = xs[i] - means[j];
+                let lp = weights[j].max(1e-300).ln()
+                    - 0.5 * (2.0 * std::f64::consts::PI * v).ln()
+                    - 0.5 * d * d / v;
+                logp[j] = lp;
+                maxlp = maxlp.max(lp);
+            }
+            let mut z = 0.0;
+            for j in 0..k {
+                z += (logp[j] - maxlp).exp();
+            }
+            ll += maxlp + z.ln();
+            for j in 0..k {
+                resp[i * k + j] = (logp[j] - maxlp).exp() / z;
+            }
+        }
+
+        // M-step.
+        for j in 0..k {
+            let nj: f64 = (0..n).map(|i| resp[i * k + j]).sum();
+            let nj_safe = nj.max(1e-9);
+            let mu = (0..n).map(|i| resp[i * k + j] * xs[i]).sum::<f64>() / nj_safe;
+            let var = (0..n)
+                .map(|i| resp[i * k + j] * (xs[i] - mu).powi(2))
+                .sum::<f64>()
+                / nj_safe;
+            means[j] = mu;
+            vars[j] = var.max(global_var * 1e-6).max(1e-12);
+            weights[j] = nj / n as f64;
+        }
+
+        if (ll - prev_ll).abs() < 1e-8 * (1.0 + ll.abs()) {
+            break;
+        }
+        prev_ll = ll;
+    }
+
+    let assignments = (0..n)
+        .map(|i| {
+            let row = &resp[i * k..(i + 1) * k];
+            crate::util::stats::argmax(row).unwrap_or(0)
+        })
+        .collect();
+
+    GmmResult {
+        assignments,
+        means,
+        vars,
+        weights,
+        iterations,
+    }
+}
+
+/// Group sample *indices* by cluster (Algorithm 2's `GaGrp` sets).
+/// Empty groups are dropped.
+pub fn group_indices(assignments: &[usize], k: usize) -> Vec<Vec<usize>> {
+    let mut groups = vec![Vec::new(); k];
+    for (i, &a) in assignments.iter().enumerate() {
+        groups[a].push(i);
+    }
+    groups.retain(|g| !g.is_empty());
+    groups
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn separates_two_clear_clusters() {
+        let mut xs = Vec::new();
+        for i in 0..50 {
+            xs.push(1.0 + 0.01 * (i % 7) as f64);
+        }
+        for i in 0..50 {
+            xs.push(10.0 + 0.01 * (i % 5) as f64);
+        }
+        let r = cluster_1d(&xs, 2, 100);
+        // All low samples in one group, all high in the other.
+        let g0 = r.assignments[0];
+        assert!(r.assignments[..50].iter().all(|&a| a == g0));
+        assert!(r.assignments[50..].iter().all(|&a| a != g0));
+    }
+
+    #[test]
+    fn deterministic() {
+        let xs: Vec<f64> = (0..200).map(|i| ((i * 37) % 101) as f64 / 10.0).collect();
+        let a = cluster_1d(&xs, 4, 60);
+        let b = cluster_1d(&xs, 4, 60);
+        assert_eq!(a.assignments, b.assignments);
+    }
+
+    #[test]
+    fn handles_constant_signal() {
+        let xs = vec![2.5; 64];
+        let r = cluster_1d(&xs, 3, 50);
+        assert_eq!(r.assignments.len(), 64);
+        // No NaNs anywhere.
+        assert!(r.means.iter().all(|m| m.is_finite()));
+        assert!(r.vars.iter().all(|v| v.is_finite() && *v > 0.0));
+    }
+
+    #[test]
+    fn group_indices_partition() {
+        let assignments = vec![0, 1, 0, 2, 1, 0];
+        let g = group_indices(&assignments, 3);
+        let total: usize = g.iter().map(|v| v.len()).sum();
+        assert_eq!(total, 6);
+        assert_eq!(g[0], vec![0, 2, 5]);
+    }
+
+    #[test]
+    fn empty_input() {
+        let r = cluster_1d(&[], 3, 10);
+        assert!(r.assignments.is_empty());
+    }
+}

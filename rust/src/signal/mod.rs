@@ -1,0 +1,17 @@
+//! Robust period detection (paper §4.1): FFT periodogram, peak
+//! extraction, 1-D GMM clustering, feature-sequence similarity
+//! (Algorithm 2), period calculation (Algorithm 1) and the online
+//! rolling framework (Algorithm 3).
+
+pub mod fft;
+pub mod gmm;
+pub mod online;
+pub mod peaks;
+pub mod period;
+pub mod similarity;
+
+pub use fft::{periodogram, FftScratch};
+pub use online::{composite_feature, online_detect, online_detect_with, OnlineDetection};
+pub use peaks::{candidate_periods, find_peaks, Peak};
+pub use period::{calc_period, calc_period_fft_argmax, calc_period_with, PeriodCfg, PeriodEstimate};
+pub use similarity::{sequence_similarity_error, SimilarityCfg};

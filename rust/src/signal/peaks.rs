@@ -1,0 +1,176 @@
+//! Amplitude-peak extraction from a spectrum (Algorithm 1, lines 3–5):
+//! local maxima, filtered to those within `c_peak` of the global maximum,
+//! become candidate periods.
+
+/// A detected spectral peak.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Peak {
+    pub index: usize,
+    pub freq_hz: f64,
+    pub period_s: f64,
+    pub amplitude: f64,
+}
+
+/// Find strict local maxima (plateau-tolerant: the first sample of a
+/// plateau wins) in the amplitude spectrum.
+pub fn find_peaks(freqs: &[f64], ampls: &[f64]) -> Vec<Peak> {
+    let n = ampls.len();
+    let mut peaks = Vec::new();
+    for i in 0..n {
+        let left = if i == 0 { f64::NEG_INFINITY } else { ampls[i - 1] };
+        let right = if i + 1 == n { f64::NEG_INFINITY } else { ampls[i + 1] };
+        if ampls[i] > left && ampls[i] >= right && ampls[i] > 0.0 {
+            peaks.push(Peak {
+                index: i,
+                freq_hz: freqs[i],
+                period_s: 1.0 / freqs[i],
+                amplitude: ampls[i],
+            });
+        }
+    }
+    peaks
+}
+
+/// Candidate periods: peaks with amplitude ≥ `c_peak · max`, sorted by
+/// amplitude descending and capped at `max_candidates`. Periods longer
+/// than `max_period` (unverifiable: fewer than two sub-curves fit in the
+/// sampling window) are dropped.
+pub fn candidate_periods(
+    peaks: &[Peak],
+    c_peak: f64,
+    max_candidates: usize,
+    max_period: f64,
+) -> Vec<Peak> {
+    let max_ampl = peaks
+        .iter()
+        .map(|p| p.amplitude)
+        .fold(f64::NEG_INFINITY, f64::max);
+    if !max_ampl.is_finite() {
+        return Vec::new();
+    }
+    let mut cands: Vec<Peak> = peaks
+        .iter()
+        .copied()
+        .filter(|p| p.amplitude >= c_peak * max_ampl && p.period_s <= max_period)
+        .collect();
+    cands.sort_by(|a, b| b.amplitude.partial_cmp(&a.amplitude).unwrap());
+    cands.truncate(max_candidates);
+    cands
+}
+
+/// Prominence-scored candidates: each peak's amplitude is normalized by
+/// the local spectral background (median over a neighborhood of bins).
+/// A jitter-broadened micro-oscillation raises its own background, so it
+/// scores low; a coherent iteration period is a sharp line over a quiet
+/// background and scores high. This is what keeps GPOEO's candidate set
+/// useful on TSP-style traces where the raw arg-max (ODPP) locks onto
+/// the micro period (§2.2.3).
+pub fn candidate_periods_prominence(
+    freqs: &[f64],
+    ampls: &[f64],
+    c_peak: f64,
+    max_candidates: usize,
+    max_period: f64,
+) -> Vec<Peak> {
+    let n = ampls.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let peaks = find_peaks(freqs, ampls);
+    let mut scored: Vec<(f64, Peak)> = peaks
+        .iter()
+        .filter(|p| p.period_s <= max_period)
+        .map(|p| {
+            let k = p.index;
+            let w = (k / 3).clamp(4, 48);
+            let lo = k.saturating_sub(w);
+            let hi = (k + w + 1).min(n);
+            let mut window: Vec<f64> = ampls[lo..hi].to_vec();
+            window.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            let med = window[window.len() / 2].max(1e-12);
+            (p.amplitude / med, *p)
+        })
+        .collect();
+    let max_score = scored.iter().map(|(s, _)| *s).fold(f64::NEG_INFINITY, f64::max);
+    if !max_score.is_finite() {
+        return Vec::new();
+    }
+    // Union of the two criteria: absolute amplitude (the paper's c_peak
+    // cut) OR local prominence. Sharp-but-spurious lines admitted by the
+    // prominence side are cheap: the similarity stage rejects anything
+    // whose sub-curves don't actually repeat, and sub-Nyquist periods are
+    // unevaluable by construction.
+    let max_ampl = scored
+        .iter()
+        .map(|(_, p)| p.amplitude)
+        .fold(f64::NEG_INFINITY, f64::max);
+    scored.retain(|(s, p)| *s >= c_peak * max_score || p.amplitude >= c_peak * max_ampl);
+    // Rank by amplitude so the cap keeps the spectrally dominant set, with
+    // prominence deciding admission.
+    scored.sort_by(|a, b| b.1.amplitude.partial_cmp(&a.1.amplitude).unwrap());
+    scored.truncate(max_candidates);
+    scored.into_iter().map(|(_, p)| p).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn finds_interior_peaks() {
+        let freqs: Vec<f64> = (1..=9).map(|i| i as f64).collect();
+        let ampls = vec![0.1, 1.0, 0.1, 0.5, 0.2, 0.9, 0.3, 0.05, 0.2];
+        let peaks = find_peaks(&freqs, &ampls);
+        let idx: Vec<usize> = peaks.iter().map(|p| p.index).collect();
+        assert_eq!(idx, vec![1, 3, 5, 8]);
+    }
+
+    #[test]
+    fn candidates_filter_and_sort() {
+        let freqs: Vec<f64> = (1..=9).map(|i| i as f64).collect();
+        let ampls = vec![0.1, 1.0, 0.1, 0.5, 0.2, 0.9, 0.3, 0.05, 0.2];
+        let peaks = find_peaks(&freqs, &ampls);
+        let c = candidate_periods(&peaks, 0.6, 8, 10.0);
+        assert_eq!(c.len(), 2);
+        assert_eq!(c[0].index, 1); // strongest first
+        assert_eq!(c[1].index, 5);
+    }
+
+    #[test]
+    fn max_period_cap_applies() {
+        let freqs = vec![0.01, 0.5, 1.0]; // periods 100s, 2s, 1s
+        let ampls = vec![1.0, 0.2, 0.9]; // peaks at index 0 and 2
+        let peaks = find_peaks(&freqs, &ampls);
+        assert_eq!(peaks.len(), 2);
+        let c = candidate_periods(&peaks, 0.5, 8, 10.0);
+        assert_eq!(c.len(), 1, "100s period exceeds the cap");
+        assert_eq!(c[0].period_s, 1.0);
+    }
+
+    #[test]
+    fn prominence_prefers_sharp_line_over_broad_bump() {
+        // Broad bump: large amplitude spread over many bins around k=40.
+        // Sharp line: single-bin spike at k=150 with lower absolute height.
+        let n = 256;
+        let freqs: Vec<f64> = (0..n).map(|i| (i + 1) as f64 * 0.05).collect();
+        let mut ampls = vec![1.0; n];
+        for k in 20..60 {
+            let d = (k as f64 - 40.0) / 10.0;
+            ampls[k] += 30.0 * (-d * d).exp();
+        }
+        ampls[150] = 12.0;
+        let c = candidate_periods_prominence(&freqs, &ampls, 0.6, 4, 1e9);
+        assert!(!c.is_empty());
+        assert!(
+            c.iter().any(|p| p.index == 150),
+            "sharp line must be admitted despite the broad bump's height"
+        );
+    }
+
+    #[test]
+    fn empty_input_no_panic() {
+        assert!(find_peaks(&[], &[]).is_empty());
+        assert!(candidate_periods(&[], 0.6, 8, 10.0).is_empty());
+        assert!(candidate_periods_prominence(&[], &[], 0.6, 8, 10.0).is_empty());
+    }
+}

@@ -1,0 +1,226 @@
+//! Feature-sequence similarity (Algorithm 2): score how well a candidate
+//! period explains the sampled trace.
+//!
+//! The trace is cut into sub-curves of one candidate period each. For
+//! every adjacent pair, the first sub-curve's samples are GMM-clustered
+//! into amplitude groups; the *same sample indices* are then compared
+//! across the pair via group-mean relative amplitudes and SMAPE. Averaging
+//! within groups cancels the high-frequency interference that defeats
+//! pointwise Euclidean distance (§4.1.2).
+
+use crate::signal::gmm::{cluster_1d, group_indices};
+use crate::util::stats::{mean, weighted_mean};
+
+/// Tuning knobs for Algorithm 2 (paper defaults in `Default`).
+#[derive(Debug, Clone)]
+pub struct SimilarityCfg {
+    /// Number of GMM amplitude groups per sub-curve.
+    pub num_groups: usize,
+    /// EM iteration cap.
+    pub gmm_max_iter: usize,
+}
+
+impl Default for SimilarityCfg {
+    fn default() -> Self {
+        SimilarityCfg {
+            num_groups: 4,
+            // EM on ~30 one-dimensional samples converges in a handful of
+            // iterations; 22 is indistinguishable from 40 on every app in
+            // the suite and nearly halves Algorithm 2's cost (§Perf).
+            gmm_max_iter: 22,
+        }
+    }
+}
+
+/// Error returned when a candidate period cannot be evaluated (fewer than
+/// two full sub-curves fit in the window). Treated as "infinitely bad".
+pub const UNEVALUABLE: f64 = f64::INFINITY;
+
+/// Algorithm 2: similarity error of candidate period `t_iter` against the
+/// sample sequence `smp` taken at interval `ts`. Lower is better; 0 means
+/// adjacent sub-curves are identical under the grouping.
+pub fn sequence_similarity_error(
+    t_iter: f64,
+    smp: &[f64],
+    ts: f64,
+    cfg: &SimilarityCfg,
+) -> f64 {
+    let n = smp.len();
+    if t_iter <= 0.0 || n < 8 {
+        return UNEVALUABLE;
+    }
+    let num_s = (t_iter / ts).floor() as usize; // samples per sub-curve
+    // A sub-curve needs enough samples for amplitude grouping to mean
+    // anything; below ~8 the GMM degenerates and scores are luck. This
+    // also floors the detectable period at 8·ts, rejecting sub-Nyquist
+    // micro-oscillation periods outright.
+    if num_s < 8 {
+        return UNEVALUABLE;
+    }
+    // Sub-curve i starts at the sample nearest i·T (NOT i·num_s: integer
+    // window lengths accumulate sub-sample drift across windows, which
+    // systematically penalizes true periods that are not integer multiples
+    // of the sampling interval while sparing their k-fold multiples).
+    let start_of = |i: usize| -> usize { (i as f64 * t_iter / ts).round() as usize };
+    let num_t = {
+        let mut k = 0usize;
+        while start_of(k + 1) + num_s <= n + 1 && start_of(k) + num_s <= n {
+            k += 1;
+        }
+        k
+    };
+    if num_t < 2 {
+        return UNEVALUABLE;
+    }
+
+    // Score a pair of sub-curves given the leading curve's grouping —
+    // the GMM is the expensive part, so each leading sub-curve is
+    // clustered once and reused for both its lag-1 and lag-2 comparisons
+    // (EXPERIMENTS.md §Perf).
+    let pair_err = |groups: &[Vec<usize>], i: usize, lag: usize| -> Option<f64> {
+        let s_prev = start_of(i);
+        let s_back = start_of(i + lag);
+        if s_prev + num_s > n || s_back + num_s > n {
+            return None;
+        }
+        let prev = &smp[s_prev..s_prev + num_s];
+        let back = &smp[s_back..s_back + num_s];
+        let mean_prev = mean(prev);
+        let mean_back = mean(back);
+        if groups.is_empty() {
+            return None;
+        }
+        // Group-relative amplitudes. Plain SMAPE of (rel_prev, rel_back)
+        // blows up when a group's relative mean is near zero (SMAPE(≈0,≈0)
+        // = 2), which systematically inflates the error of short windows
+        // and biases selection toward k-fold multiples of the period.
+        // Normalize group differences by the overall amplitude scale of
+        // the grouping instead.
+        let mut diffs = Vec::with_capacity(groups.len());
+        let mut scales = Vec::with_capacity(groups.len());
+        let mut weights = Vec::with_capacity(groups.len());
+        for g in groups {
+            let gp: Vec<f64> = g.iter().map(|&j| prev[j]).collect();
+            let gb: Vec<f64> = g.iter().map(|&j| back[j]).collect();
+            let rel_prev = mean(&gp) - mean_prev;
+            let rel_back = mean(&gb) - mean_back;
+            diffs.push((rel_prev - rel_back).abs());
+            scales.push(rel_prev.abs().max(rel_back.abs()));
+            weights.push(g.len() as f64);
+        }
+        let scale = weighted_mean(&scales, &weights).max(1e-12);
+        let rel_errs: Vec<f64> = diffs.iter().map(|d| d / scale).collect();
+        Some(weighted_mean(&rel_errs, &weights).min(2.0))
+    };
+
+    // Adjacent pairs (the paper's Algorithm 2) plus lag-2 pairs: a false
+    // short period can luck into similar *adjacent* windows when they fall
+    // inside the same long phase of the true iteration, but windows two
+    // candidate-periods apart then land in different phases and expose it.
+    let mut errs = Vec::with_capacity(2 * num_t);
+    for i in 0..num_t - 1 {
+        let s_prev = start_of(i);
+        if s_prev + num_s > n {
+            break;
+        }
+        let prev = &smp[s_prev..s_prev + num_s];
+        let k = cfg.num_groups.min(prev.len());
+        let gmm = cluster_1d(prev, k, cfg.gmm_max_iter);
+        let groups = group_indices(&gmm.assignments, k);
+        if let Some(e) = pair_err(&groups, i, 1) {
+            errs.push(e);
+        }
+        if i + 2 < num_t {
+            if let Some(e) = pair_err(&groups, i, 2) {
+                errs.push(e);
+            }
+        }
+    }
+
+    if errs.is_empty() {
+        return UNEVALUABLE;
+    }
+    // Lightly trimmed mean: drop the worst ~12% of pair scores so a single
+    // abnormal (eval/checkpoint) iteration does not poison an otherwise
+    // clean period hypothesis.
+    errs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let keep = ((errs.len() as f64 * 0.88).ceil() as usize).max(1);
+    mean(&errs[..keep])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::f64::consts::PI;
+
+    /// Asymmetric periodic signal with additive high-frequency noise.
+    fn make_signal(period_samples: usize, cycles: usize, hf_amp: f64) -> Vec<f64> {
+        let n = period_samples * cycles;
+        (0..n)
+            .map(|i| {
+                let ph = (i % period_samples) as f64 / period_samples as f64;
+                // Sawtooth + plateau: clearly asymmetric within a period.
+                let base = if ph < 0.3 {
+                    1.0 + ph * 3.0
+                } else if ph < 0.7 {
+                    2.5
+                } else {
+                    0.8
+                };
+                base + hf_amp * (2.0 * PI * 11.7 * i as f64 / period_samples as f64).sin()
+            })
+            .collect()
+    }
+
+    #[test]
+    fn true_period_scores_better_than_wrong_ones() {
+        let p = 50;
+        let smp = make_signal(p, 8, 0.15);
+        let ts = 0.02;
+        let cfg = SimilarityCfg::default();
+        let e_true = sequence_similarity_error(p as f64 * ts, &smp, ts, &cfg);
+        let e_half = sequence_similarity_error(p as f64 * ts / 2.0, &smp, ts, &cfg);
+        let e_off = sequence_similarity_error(p as f64 * ts * 1.37, &smp, ts, &cfg);
+        assert!(e_true < e_half, "true {e_true} vs half {e_half}");
+        assert!(e_true < e_off, "true {e_true} vs off {e_off}");
+    }
+
+    #[test]
+    fn robust_to_high_frequency_interference() {
+        let p = 64;
+        let ts = 0.02;
+        let cfg = SimilarityCfg::default();
+        let clean = make_signal(p, 6, 0.0);
+        let noisy = make_signal(p, 6, 0.4);
+        let e_clean = sequence_similarity_error(p as f64 * ts, &clean, ts, &cfg);
+        let e_noisy = sequence_similarity_error(p as f64 * ts, &noisy, ts, &cfg);
+        // Group averaging keeps the true-period error low despite the HF ride.
+        assert!(e_clean < 0.05, "clean {e_clean}");
+        assert!(e_noisy < 0.35, "noisy {e_noisy}");
+    }
+
+    #[test]
+    fn unevaluable_cases() {
+        let smp = vec![1.0; 100];
+        let cfg = SimilarityCfg::default();
+        // Period longer than half the window: only one sub-curve fits.
+        assert_eq!(
+            sequence_similarity_error(60.0 * 0.02, &smp, 0.02, &cfg),
+            UNEVALUABLE
+        );
+        // Period shorter than 8 samples.
+        assert_eq!(
+            sequence_similarity_error(0.14, &smp, 0.02, &cfg),
+            UNEVALUABLE
+        );
+        assert_eq!(sequence_similarity_error(-1.0, &smp, 0.02, &cfg), UNEVALUABLE);
+    }
+
+    #[test]
+    fn perfect_repetition_scores_near_zero() {
+        let p = 40;
+        let smp = make_signal(p, 10, 0.0);
+        let e = sequence_similarity_error(p as f64 * 0.02, &smp, 0.02, &SimilarityCfg::default());
+        assert!(e < 1e-6, "e={e}");
+    }
+}

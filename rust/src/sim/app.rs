@@ -1,0 +1,391 @@
+//! Synthetic application materialization and the analytic DVFS model.
+//!
+//! Each benchmark app is generated deterministically from
+//! (global_seed, suite salt, app name) — see `util::rng::app_rng`. The
+//! generation *order of RNG draws* is part of the cross-language contract
+//! with `python/compile/simdata.py`; do not reorder draws without updating
+//! the Python twin and `artifacts/crosscheck.json`.
+//!
+//! The analytic model maps (SM gear, mem gear) → (iteration time, average
+//! power, energy). It is the "real hardware" the online controller probes,
+//! and — with per-app hidden coefficient noise removed — the ground truth
+//! the offline GBT models are trained on.
+
+use crate::sim::spec::{PhaseSpec, Spec, NUM_FEATURES};
+use crate::util::rng::{app_rng, Pcg64};
+
+/// A fully materialized synthetic application.
+#[derive(Debug, Clone)]
+pub struct AppParams {
+    pub name: String,
+    pub suite: String,
+    pub archetype: String,
+    /// True performance-counter signature (Table 2), each in (0, 1].
+    pub features: Vec<f64>,
+    /// Iteration period at the reference clock config, seconds. For
+    /// aperiodic apps this is the mean phase-segment length instead.
+    pub t_base: f64,
+    /// Normalized time-decomposition weights: compute / memory / other.
+    pub wc: f64,
+    pub wm: f64,
+    pub wo: f64,
+    /// SM-clock scaling exponent for the compute term.
+    pub gamma: f64,
+    /// Fraction of the memory term that scales with DRAM clock.
+    pub s_m: f64,
+    /// Power-model coefficients.
+    pub k_sm: f64,
+    pub k_mem: f64,
+    pub a_sm: f64,
+    pub a_mem: f64,
+    /// Trace-shape parameters.
+    pub phases: Vec<PhaseSpec>,
+    pub trace_noise: f64,
+    pub micro_amp: f64,
+    pub micro_period_s: f64,
+    pub micro_jitter: f64,
+    pub abnormal_every: usize,
+    pub abnormal_scale: f64,
+    pub aperiodic: bool,
+    /// Seed for the per-run trace noise stream.
+    pub trace_seed: u64,
+}
+
+/// Metrics of one app at one clock configuration (noise-free ground truth).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct OpPoint {
+    pub t_iter_s: f64,
+    pub power_w: f64,
+    pub energy_j: f64,
+    pub util_sm: f64,
+    pub util_mem: f64,
+}
+
+impl AppParams {
+    /// Materialize an app. `overrides` come from the suite entry.
+    pub fn materialize(
+        spec: &Spec,
+        suite: &str,
+        name: &str,
+        archetype_name: &str,
+        abnormal_every: Option<usize>,
+        abnormal_scale: Option<f64>,
+        aperiodic: Option<bool>,
+    ) -> AppParams {
+        let arch = &spec.archetypes[archetype_name];
+        let salt = spec.suites[suite].seed_salt;
+        let mut rng = app_rng(spec.global_seed, salt, name);
+
+        // Draw order is the cross-language contract — see module docs.
+        let mut features = Vec::with_capacity(NUM_FEATURES);
+        for i in 0..NUM_FEATURES {
+            let v = arch.features_mean[i] + arch.features_std * rng.gauss();
+            features.push(v.clamp(0.01, 1.0));
+        }
+        let t_base = if arch.period_s.1 > 0.0 {
+            rng.uniform(arch.period_s.0, arch.period_s.1)
+        } else {
+            // Aperiodic archetypes draw the mean segment length instead;
+            // the draw still happens so the stream stays aligned.
+            rng.uniform(0.4, 1.2)
+        };
+        let h = spec.noise.hidden_coeff_std;
+        let h_wc = rng.normal(0.0, h).exp();
+        let h_wm = rng.normal(0.0, h).exp();
+        let h_ksm = rng.normal(0.0, h).exp();
+        let h_kmem = rng.normal(0.0, h).exp();
+        let h_gamma = rng.normal(0.0, h / 2.0);
+
+        let mut phases: Vec<PhaseSpec> = arch.phases.clone();
+        for ph in &mut phases {
+            ph.frac *= rng.normal(0.0, 0.08).exp();
+        }
+        let fsum: f64 = phases.iter().map(|p| p.frac).sum();
+        for ph in &mut phases {
+            ph.frac /= fsum;
+        }
+        let micro_period_s = arch.micro_period_s * rng.uniform(0.8, 1.25);
+        let trace_seed = rng.next_u64();
+
+        let cm = &spec.coeff_maps;
+        let wc_raw = cm.w_compute.eval(&features) * h_wc;
+        let wm_raw = cm.w_memory.eval(&features) * h_wm;
+        let wo_raw = cm.w_other.eval(&features);
+        let s = wc_raw + wm_raw + wo_raw;
+        let gamma =
+            (cm.gamma_sm.eval(&features) + h_gamma).clamp(cm.gamma_sm.lo, cm.gamma_sm.hi);
+        let s_m = cm.mem_sens.eval(&features);
+        let k_sm = cm.k_sm_power.eval(&features) * h_ksm;
+        let k_mem = cm.k_mem_power.eval(&features) * h_kmem;
+        let a_sm = cm.sm_activity.eval(&features);
+        let a_mem = cm.mem_activity.eval(&features);
+
+        AppParams {
+            name: name.to_string(),
+            suite: suite.to_string(),
+            archetype: archetype_name.to_string(),
+            features,
+            t_base,
+            wc: wc_raw / s,
+            wm: wm_raw / s,
+            wo: wo_raw / s,
+            gamma,
+            s_m,
+            k_sm,
+            k_mem,
+            a_sm,
+            a_mem,
+            phases,
+            trace_noise: arch.trace_noise,
+            micro_amp: arch.micro_amp,
+            micro_period_s,
+            micro_jitter: arch.micro_jitter,
+            abnormal_every: abnormal_every.unwrap_or(arch.abnormal_every),
+            abnormal_scale: abnormal_scale.unwrap_or(arch.abnormal_scale),
+            aperiodic: aperiodic.unwrap_or(arch.aperiodic),
+            trace_seed,
+        }
+    }
+
+    /// Relative iteration-time factor R = t/t_base at a clock config.
+    pub fn time_factor(&self, spec: &Spec, sm_gear: usize, mem_gear: usize) -> f64 {
+        let fs = spec.gears.sm_mhz(sm_gear);
+        let fm = spec.gears.mem_mhz_of(mem_gear);
+        let f_ref_s = spec.gears.sm_mhz(spec.gears.reference_sm_gear);
+        let f_ref_m = spec.gears.mem_mhz_of(spec.gears.reference_mem_gear);
+        let r_s = (f_ref_s / fs).powf(self.gamma);
+        let r_m = (f_ref_m / fm).powf(spec.time_model.mem_exponent);
+        let rme = (1.0 - self.s_m) + self.s_m * r_m;
+        self.wo + self.wc * r_s + self.wm * rme
+    }
+
+    /// Noise-free operating point at a clock configuration.
+    pub fn op_point(&self, spec: &Spec, sm_gear: usize, mem_gear: usize) -> OpPoint {
+        let fs = spec.gears.sm_mhz(sm_gear);
+        let fm = spec.gears.mem_mhz_of(mem_gear);
+        let f_ref_s = spec.gears.sm_mhz(spec.gears.reference_sm_gear);
+        let f_ref_m = spec.gears.mem_mhz_of(spec.gears.reference_mem_gear);
+        let r_s = (f_ref_s / fs).powf(self.gamma);
+        let r_m = (f_ref_m / fm).powf(spec.time_model.mem_exponent);
+        let rme = (1.0 - self.s_m) + self.s_m * r_m;
+        let r = self.wo + self.wc * r_s + self.wm * rme;
+        let t_iter = self.t_base * r;
+
+        // Busy-fraction utilization: downclocking the bottleneck unit
+        // raises its utilization; the other unit's utilization falls.
+        let util_sm = (self.a_sm * (self.wc * r_s + 0.5 * self.wo)
+            / (r * (self.wc + 0.5 * self.wo)))
+            .clamp(0.02, 1.0);
+        let util_mem = (self.a_mem * (self.wm * rme + 0.4 * self.wo)
+            / (r * (self.wm + 0.4 * self.wo)))
+            .clamp(0.02, 1.0);
+
+        let p = &spec.power;
+        let v = p.voltage(fs);
+        let p_sm = p.c_sm * self.k_sm * util_sm * v * v * (fs / 1000.0);
+        let p_mem = (p.c_mem_static + p.c_mem * self.k_mem * util_mem)
+            * p.mem_v2_factor[mem_gear]
+            * (fm / 1000.0);
+        let power = p.p_idle_w + p_sm + p_mem;
+
+        OpPoint {
+            t_iter_s: t_iter,
+            power_w: power,
+            energy_j: power * t_iter,
+            util_sm,
+            util_mem,
+        }
+    }
+
+    /// The SM gear the NVIDIA default scheduling strategy settles on for
+    /// this app: power-capped boost — the highest gear whose average
+    /// power stays under the TDP (at the default memory clock). Hot
+    /// compute workloads are therefore already throttled by the default
+    /// strategy and have little energy-saving headroom (the paper's
+    /// AI_I2IC/AI_T2T cases), while low-power workloads boost to the top
+    /// gear wastefully.
+    pub fn default_sm_gear(&self, spec: &Spec) -> usize {
+        let mem = spec.gears.default_mem_gear;
+        for g in (spec.gears.sm_gear_min..=spec.gears.default_sm_gear).rev() {
+            if self.op_point(spec, g, mem).power_w <= spec.power.tdp_w {
+                return g;
+            }
+        }
+        spec.gears.sm_gear_min
+    }
+
+    /// Operating point under the NVIDIA default scheduling strategy.
+    pub fn default_op(&self, spec: &Spec) -> (usize, usize, OpPoint) {
+        let sm = self.default_sm_gear(spec);
+        let mem = spec.gears.default_mem_gear;
+        (sm, mem, self.op_point(spec, sm, mem))
+    }
+
+    /// Energy and time ratios relative to the NVIDIA-default config —
+    /// the quantities the paper's four prediction models are trained on.
+    pub fn ratios_vs_default(&self, spec: &Spec, sm_gear: usize, mem_gear: usize) -> (f64, f64) {
+        let (_, _, dflt) = self.default_op(spec);
+        let pt = self.op_point(spec, sm_gear, mem_gear);
+        (pt.energy_j / dflt.energy_j, pt.t_iter_s / dflt.t_iter_s)
+    }
+
+    /// Measured counter features: truth + one-period measurement noise.
+    /// `rng` is the measurement stream (not the materialization stream).
+    pub fn measured_features(&self, spec: &Spec, rng: &mut Pcg64) -> Vec<f64> {
+        self.features
+            .iter()
+            .map(|f| {
+                (f * rng.normal(0.0, spec.noise.counter_meas_std).exp()).clamp(0.005, 1.05)
+            })
+            .collect()
+    }
+
+    /// Instructions-per-second proxy for the aperiodic path (§4.3.5):
+    /// work-rate is inversely proportional to the time factor.
+    pub fn ips(&self, spec: &Spec, sm_gear: usize, mem_gear: usize) -> f64 {
+        1.0 / (self.time_factor(spec, sm_gear, mem_gear) * self.t_base)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::spec::Spec;
+
+    fn spec() -> Spec {
+        Spec::load_default().unwrap()
+    }
+
+    fn app(spec: &Spec, suite: &str, name: &str) -> AppParams {
+        let e = spec.suites[suite]
+            .apps
+            .iter()
+            .find(|a| a.name == name)
+            .unwrap()
+            .clone();
+        AppParams::materialize(
+            spec,
+            suite,
+            &e.name,
+            &e.archetype,
+            e.abnormal_every,
+            e.abnormal_scale,
+            e.aperiodic,
+        )
+    }
+
+    #[test]
+    fn materialization_is_deterministic() {
+        let s = spec();
+        let a = app(&s, "aibench", "AI_I2T");
+        let b = app(&s, "aibench", "AI_I2T");
+        assert_eq!(a.features, b.features);
+        assert_eq!(a.t_base, b.t_base);
+        assert_eq!(a.trace_seed, b.trace_seed);
+    }
+
+    #[test]
+    fn weights_normalized_and_positive() {
+        let s = spec();
+        for suite in ["aibench", "gnns", "pytorch_train", "classical"] {
+            for e in &s.suites[suite].apps {
+                let a = app(&s, suite, &e.name);
+                assert!((a.wc + a.wm + a.wo - 1.0).abs() < 1e-9, "{}", a.name);
+                assert!(a.wc > 0.0 && a.wm > 0.0 && a.wo > 0.0, "{}", a.name);
+                assert!(a.t_base > 0.0);
+                assert!((0.55..=1.0).contains(&a.gamma));
+            }
+        }
+    }
+
+    #[test]
+    fn reference_point_is_t_base() {
+        let s = spec();
+        let a = app(&s, "aibench", "AI_FE");
+        let r = a.time_factor(&s, s.gears.reference_sm_gear, s.gears.reference_mem_gear);
+        assert!((r - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn time_monotone_in_sm_clock() {
+        let s = spec();
+        let a = app(&s, "aibench", "AI_OBJ");
+        let mut prev = f64::INFINITY;
+        for g in s.gears.sm_gears() {
+            let t = a.op_point(&s, g, 3).t_iter_s;
+            assert!(t <= prev + 1e-12, "time must not increase with clock");
+            prev = t;
+        }
+    }
+
+    #[test]
+    fn power_monotone_in_sm_clock_at_fixed_mem() {
+        let s = spec();
+        let a = app(&s, "aibench", "AI_I2T");
+        // Power should broadly rise with SM clock (V^2 f dominates util drift).
+        let lo = a.op_point(&s, 30, 3).power_w;
+        let hi = a.op_point(&s, 114, 3).power_w;
+        assert!(hi > lo * 1.3, "lo={lo} hi={hi}");
+    }
+
+    #[test]
+    fn energy_is_convexish_with_interior_min_for_some_app() {
+        let s = spec();
+        // At least one AIBench app should have an interior-optimum SM gear
+        // (that is the whole premise of the paper).
+        let mut found_interior = false;
+        for e in &s.suites["aibench"].apps {
+            let a = app(&s, "aibench", &e.name);
+            let e_of: Vec<f64> = s.gears.sm_gears().map(|g| a.op_point(&s, g, 4).energy_j).collect();
+            let i = crate::util::stats::argmin(&e_of).unwrap();
+            if i > 0 && i < e_of.len() - 1 {
+                found_interior = true;
+            }
+        }
+        assert!(found_interior);
+    }
+
+    #[test]
+    fn ratios_vs_default_identity() {
+        let s = spec();
+        let a = app(&s, "gnns", "SBM_GIN");
+        let (sm, mem, _) = a.default_op(&s);
+        let (e, t) = a.ratios_vs_default(&s, sm, mem);
+        assert!((e - 1.0).abs() < 1e-12 && (t - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn default_gear_is_power_capped() {
+        let s = spec();
+        for e in &s.suites["aibench"].apps {
+            let a = app(&s, "aibench", &e.name);
+            let (sm, mem, op) = a.default_op(&s);
+            assert!(op.power_w <= s.power.tdp_w + 1e-9, "{} {}W", a.name, op.power_w);
+            if sm < s.gears.default_sm_gear {
+                // One gear higher must exceed the TDP (tightness).
+                let above = a.op_point(&s, sm + 1, mem);
+                assert!(above.power_w > s.power.tdp_w, "{}", a.name);
+            }
+        }
+    }
+
+    #[test]
+    fn measured_features_are_noisy_but_close() {
+        let s = spec();
+        let a = app(&s, "aibench", "AI_TS");
+        let mut rng = crate::util::rng::Pcg64::new(9, 9);
+        let m = a.measured_features(&s, &mut rng);
+        assert_eq!(m.len(), NUM_FEATURES);
+        for (t, m) in a.features.iter().zip(&m) {
+            assert!(((m / t) - 1.0).abs() < 0.2, "truth {t} meas {m}");
+        }
+    }
+
+    #[test]
+    fn aperiodic_flag_propagates() {
+        let s = spec();
+        assert!(app(&s, "classical", "TSVM").aperiodic);
+        assert!(app(&s, "gnns", "CSL_GCN").aperiodic);
+        assert!(!app(&s, "gnns", "SBM_GCN").aperiodic);
+    }
+}

@@ -1,0 +1,372 @@
+//! `SimGpu` — the simulated GPU device.
+//!
+//! Exposes the same surface the paper's framework uses on real hardware:
+//!
+//! - **NVML-like**: set SM / memory clock gears; sample instantaneous
+//!   power and SM/memory utilization; read accumulated energy.
+//! - **CUPTI-like**: start/stop a performance-counter profiling session
+//!   and collect the Table-2 feature vector. While a session is active the
+//!   device pays the profiling tax (iterations slow down, power rises) —
+//!   the overhead that motivates the paper's "profile one period only".
+//!
+//! Time is virtual: `advance(dt)` moves the simulation clock, accumulates
+//! energy and progresses the workload trace. The controller is driven by
+//! ticks, so experiments over 71 apps × hundreds of iterations run in
+//! milliseconds of wall time.
+
+use crate::sim::app::AppParams;
+use crate::sim::spec::Spec;
+use crate::sim::trace::{Instant, TraceState};
+use crate::util::rng::Pcg64;
+use std::sync::Arc;
+
+#[derive(Debug, Clone)]
+pub struct SimGpu {
+    pub spec: Arc<Spec>,
+    pub app: AppParams,
+    sm_gear: usize,
+    mem_gear: usize,
+    profiling: bool,
+    /// Virtual time since run start, seconds.
+    vtime_s: f64,
+    /// Total accumulated energy, joules.
+    energy_j: f64,
+    trace: TraceState,
+    meas_rng: Pcg64,
+    /// Counts of control actions, for overhead accounting / debugging.
+    pub clock_sets: u64,
+    pub counter_sessions: u64,
+}
+
+impl SimGpu {
+    /// Create a device running `app` at the NVIDIA-default configuration.
+    pub fn new(spec: Arc<Spec>, app: AppParams) -> SimGpu {
+        let meas_rng = Pcg64::new(app.trace_seed ^ 0x5eed_0bad, 0xf00d);
+        let trace = TraceState::new(&app);
+        // Boot under the NVIDIA default scheduling strategy (power-capped
+        // boost), exactly like a real training job before GPOEO attaches.
+        let (sm, mem, _) = app.default_op(&spec);
+        SimGpu {
+            spec,
+            app,
+            sm_gear: sm,
+            mem_gear: mem,
+            profiling: false,
+            vtime_s: 0.0,
+            energy_j: 0.0,
+            trace,
+            meas_rng,
+            clock_sets: 0,
+            counter_sessions: 0,
+        }
+    }
+
+    // ------------------------------------------------------- NVML-like --
+
+    /// Set the SM clock gear (clamped to the valid range).
+    pub fn set_sm_gear(&mut self, gear: usize) {
+        let g = gear.clamp(self.spec.gears.sm_gear_min, self.spec.gears.sm_gear_max);
+        if g != self.sm_gear {
+            self.sm_gear = g;
+            self.clock_sets += 1;
+        }
+    }
+
+    /// Set the memory clock gear.
+    pub fn set_mem_gear(&mut self, gear: usize) {
+        let g = gear.min(self.spec.gears.num_mem_gears() - 1);
+        if g != self.mem_gear {
+            self.mem_gear = g;
+            self.clock_sets += 1;
+        }
+    }
+
+    /// Reset to the NVIDIA default scheduling configuration (power-capped
+    /// boost for this app).
+    pub fn set_default_clocks(&mut self) {
+        let (sm, mem, _) = self.app.default_op(&self.spec);
+        self.set_sm_gear(sm);
+        self.set_mem_gear(mem);
+    }
+
+    pub fn sm_gear(&self) -> usize {
+        self.sm_gear
+    }
+
+    pub fn mem_gear(&self) -> usize {
+        self.mem_gear
+    }
+
+    /// Instantaneous (power, SM util, mem util) with measurement noise —
+    /// the NVML sampling channel used for period detection.
+    pub fn sample(&mut self, dt_since_last: f64) -> Instant {
+        let inst = self.trace.sample(
+            &self.app,
+            &self.spec,
+            self.sm_gear,
+            self.mem_gear,
+            dt_since_last,
+        );
+        let pmul = if self.profiling {
+            self.spec.profiling_tax.counter_power_mult
+        } else {
+            1.0
+        };
+        let noise = self
+            .meas_rng
+            .normal(0.0, self.spec.noise.power_meas_std);
+        Instant {
+            power_w: inst.power_w * pmul * (1.0 + noise),
+            util_sm: inst.util_sm,
+            util_mem: inst.util_mem,
+        }
+    }
+
+    /// Accumulated energy counter (joules), with meter noise — mirrors
+    /// `nvmlDeviceGetTotalEnergyConsumption`.
+    pub fn energy_j(&mut self) -> f64 {
+        let noise = self
+            .meas_rng
+            .normal(0.0, self.spec.noise.energy_meas_std / 10.0);
+        self.energy_j * (1.0 + noise)
+    }
+
+    /// Noise-free totals, for experiment bookkeeping (not visible to the
+    /// controller, which must use `energy_j()`/`time_s()`).
+    pub fn true_energy_j(&self) -> f64 {
+        self.energy_j
+    }
+
+    pub fn time_s(&self) -> f64 {
+        self.vtime_s
+    }
+
+    pub fn iterations(&self) -> u64 {
+        self.trace.iterations
+    }
+
+    /// Instructions-per-second proxy (aperiodic path, §4.3.5).
+    pub fn ips(&mut self) -> f64 {
+        let speed = if self.profiling {
+            1.0 / self.spec.profiling_tax.counter_time_mult
+        } else {
+            1.0
+        };
+        let noise = self.meas_rng.normal(0.0, 0.01);
+        self.app.ips(&self.spec, self.sm_gear, self.mem_gear) * speed * (1.0 + noise)
+    }
+
+    // ------------------------------------------------------ CUPTI-like --
+
+    /// Begin a performance-counter session. While active, the workload
+    /// pays `profiling_tax` (slower iterations, higher power).
+    pub fn start_counter_session(&mut self) {
+        if !self.profiling {
+            self.profiling = true;
+            self.counter_sessions += 1;
+        }
+    }
+
+    pub fn stop_counter_session(&mut self) {
+        self.profiling = false;
+    }
+
+    pub fn profiling_active(&self) -> bool {
+        self.profiling
+    }
+
+    /// Collect the Table-2 feature vector measured over the session window.
+    /// Requires an active session (panics otherwise — programming error).
+    pub fn read_counters(&mut self) -> Vec<f64> {
+        assert!(
+            self.profiling,
+            "read_counters() requires an active counter session"
+        );
+        self.app.measured_features(&self.spec, &mut self.meas_rng)
+    }
+
+    /// Replace the running workload mid-flight (a new training job takes
+    /// the GPU, or the current job changes phase) — the scenario that
+    /// exercises the controller's fluctuation monitor (Fig. 4 step ⑧).
+    pub fn swap_app(&mut self, app: AppParams) {
+        self.trace = TraceState::new(&app);
+        self.app = app;
+    }
+
+    // ------------------------------------------------------- simulation --
+
+    /// Advance virtual time by `dt` seconds: progress the workload and
+    /// integrate energy at the current operating point.
+    pub fn advance(&mut self, dt: f64) {
+        let (speed, pmul) = if self.profiling {
+            (
+                1.0 / self.spec.profiling_tax.counter_time_mult,
+                self.spec.profiling_tax.counter_power_mult,
+            )
+        } else {
+            (1.0, 1.0)
+        };
+        let op = self.app.op_point(&self.spec, self.sm_gear, self.mem_gear);
+        self.energy_j += op.power_w * pmul * dt;
+        self.trace
+            .advance(&self.app, &self.spec, self.sm_gear, self.mem_gear, dt, speed);
+        self.vtime_s += dt;
+    }
+
+    /// Run until `n` further iterations complete (convenience for tests
+    /// and the oracle; steps in `tick` increments).
+    pub fn run_iterations(&mut self, n: u64, tick: f64) {
+        let target = self.trace.iterations + n;
+        // Guard: cap at a generous virtual-time budget to avoid hangs.
+        let budget = self.vtime_s + 1e5;
+        while self.trace.iterations < target && self.vtime_s < budget {
+            self.advance(tick);
+        }
+    }
+
+    /// Ground-truth current iteration period (virtual seconds), including
+    /// the profiling dilation if a session is active.
+    pub fn true_period(&self) -> f64 {
+        let speed = if self.profiling {
+            1.0 / self.spec.profiling_tax.counter_time_mult
+        } else {
+            1.0
+        };
+        TraceState::true_period(&self.app, &self.spec, self.sm_gear, self.mem_gear, speed)
+    }
+}
+
+/// Materialize one app from a suite by name.
+pub fn make_app(spec: &Spec, suite: &str, name: &str) -> anyhow::Result<AppParams> {
+    let s = spec
+        .suites
+        .get(suite)
+        .ok_or_else(|| anyhow::anyhow!("unknown suite '{suite}'"))?;
+    let e = s
+        .apps
+        .iter()
+        .find(|a| a.name == name)
+        .ok_or_else(|| anyhow::anyhow!("unknown app '{name}' in suite '{suite}'"))?;
+    Ok(AppParams::materialize(
+        spec,
+        suite,
+        &e.name,
+        &e.archetype,
+        e.abnormal_every,
+        e.abnormal_scale,
+        e.aperiodic,
+    ))
+}
+
+/// Materialize every app in a suite, in spec order.
+pub fn make_suite(spec: &Spec, suite: &str) -> anyhow::Result<Vec<AppParams>> {
+    let s = spec
+        .suites
+        .get(suite)
+        .ok_or_else(|| anyhow::anyhow!("unknown suite '{suite}'"))?;
+    s.apps
+        .iter()
+        .map(|e| make_app(spec, suite, &e.name))
+        .collect()
+}
+
+/// Find an app by name across all suites (for the CLI).
+pub fn find_app(spec: &Spec, name: &str) -> anyhow::Result<AppParams> {
+    for suite in spec.suites.keys() {
+        if spec.suites[suite].apps.iter().any(|a| a.name == name) {
+            return make_app(spec, suite, name);
+        }
+    }
+    anyhow::bail!("app '{name}' not found in any suite")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn gpu(name: &str) -> SimGpu {
+        let spec = Arc::new(Spec::load_default().unwrap());
+        let app = find_app(&spec, name).unwrap();
+        SimGpu::new(spec, app)
+    }
+
+    #[test]
+    fn energy_integrates_power() {
+        let mut g = gpu("AI_I2T");
+        let op = g.app.op_point(&g.spec, g.sm_gear(), g.mem_gear());
+        for _ in 0..1000 {
+            g.advance(0.01);
+        }
+        let expect = op.power_w * 10.0;
+        assert!((g.true_energy_j() - expect).abs() / expect < 1e-9);
+    }
+
+    #[test]
+    fn profiling_costs_energy_and_time() {
+        let mut a = gpu("AI_FE");
+        let mut b = gpu("AI_FE");
+        b.start_counter_session();
+        for _ in 0..6000 {
+            a.advance(0.01);
+            b.advance(0.01);
+        }
+        assert!(b.true_energy_j() > a.true_energy_j() * 1.05);
+        assert!(b.iterations() < a.iterations());
+    }
+
+    #[test]
+    fn gear_setting_clamps_and_counts() {
+        let mut g = gpu("AI_TS");
+        g.set_sm_gear(5);
+        assert_eq!(g.sm_gear(), 16);
+        g.set_sm_gear(500);
+        assert_eq!(g.sm_gear(), 114);
+        g.set_mem_gear(99);
+        assert_eq!(g.mem_gear(), 4);
+        assert!(g.clock_sets >= 2);
+    }
+
+    #[test]
+    fn downclock_reduces_power_increases_period() {
+        let mut g = gpu("SBM_GIN");
+        let p_hi = g.app.op_point(&g.spec, 114, 4);
+        g.set_sm_gear(60);
+        let p_lo = g.app.op_point(&g.spec, 60, 4);
+        assert!(p_lo.power_w < p_hi.power_w);
+        assert!(p_lo.t_iter_s > p_hi.t_iter_s);
+    }
+
+    #[test]
+    #[should_panic]
+    fn counters_require_session() {
+        let mut g = gpu("AI_OBJ");
+        let _ = g.read_counters();
+    }
+
+    #[test]
+    fn counters_noisy_copy_of_truth() {
+        let mut g = gpu("AI_OBJ");
+        g.start_counter_session();
+        let m = g.read_counters();
+        g.stop_counter_session();
+        for (t, m) in g.app.features.clone().iter().zip(&m) {
+            assert!((m / t - 1.0).abs() < 0.15);
+        }
+    }
+
+    #[test]
+    fn run_iterations_terminates() {
+        let mut g = gpu("CLB_MLP");
+        g.run_iterations(5, 0.01);
+        assert!(g.iterations() >= 5);
+    }
+
+    #[test]
+    fn suite_materialization_counts() {
+        let spec = Spec::load_default().unwrap();
+        assert_eq!(make_suite(&spec, "aibench").unwrap().len(), 14);
+        assert_eq!(make_suite(&spec, "gnns").unwrap().len(), 55);
+        assert!(find_app(&spec, "TSVM").unwrap().aperiodic);
+        assert!(find_app(&spec, "NOPE").is_err());
+    }
+}

@@ -1,0 +1,13 @@
+//! Simulated GPU testbed: the hardware substrate the paper ran on real
+//! silicon (RTX3080Ti + NVML + CUPTI), rebuilt as a deterministic
+//! discrete-event model. See DESIGN.md §1 for the substitution rationale.
+
+pub mod app;
+pub mod gpu;
+pub mod spec;
+pub mod trace;
+
+pub use app::{AppParams, OpPoint};
+pub use gpu::{find_app, make_app, make_suite, SimGpu};
+pub use spec::{Spec, NUM_FEATURES};
+pub use trace::{Instant, TraceState};

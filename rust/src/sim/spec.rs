@@ -1,0 +1,477 @@
+//! Typed view of `data/groundtruth.json` — the single source of truth for
+//! the simulated testbed, shared with `python/compile/simdata.py`.
+//!
+//! Everything the simulator and the Python training-data generator need
+//! (gear tables, power-model constants, coefficient maps, archetype and
+//! suite definitions) is parsed here once into plain structs.
+
+use crate::util::json::Json;
+use crate::util::stats::coeff_map;
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// Number of performance-counter features (Table 2 of the paper).
+pub const NUM_FEATURES: usize = 16;
+
+#[derive(Debug, Clone)]
+pub struct GearSpec {
+    pub sm_gear_min: usize,
+    pub sm_gear_max: usize,
+    pub sm_mhz_base: f64,
+    pub sm_mhz_step: f64,
+    pub mem_mhz: Vec<f64>,
+    pub reference_sm_gear: usize,
+    pub reference_mem_gear: usize,
+    pub default_sm_gear: usize,
+    pub default_mem_gear: usize,
+}
+
+impl GearSpec {
+    /// SM clock in MHz for a gear index (paper: f = 210 + 15·gear).
+    pub fn sm_mhz(&self, gear: usize) -> f64 {
+        self.sm_mhz_base + self.sm_mhz_step * gear as f64
+    }
+
+    /// Memory clock in MHz for a gear index.
+    pub fn mem_mhz_of(&self, gear: usize) -> f64 {
+        self.mem_mhz[gear]
+    }
+
+    /// Number of SM gears in the optimization range (paper: 99).
+    pub fn num_sm_gears(&self) -> usize {
+        self.sm_gear_max - self.sm_gear_min + 1
+    }
+
+    pub fn num_mem_gears(&self) -> usize {
+        self.mem_mhz.len()
+    }
+
+    /// Iterate over valid SM gear indices.
+    pub fn sm_gears(&self) -> impl Iterator<Item = usize> + '_ {
+        self.sm_gear_min..=self.sm_gear_max
+    }
+
+    pub fn clamp_sm(&self, gear: i64) -> usize {
+        gear.clamp(self.sm_gear_min as i64, self.sm_gear_max as i64) as usize
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct PowerSpec {
+    pub p_idle_w: f64,
+    pub v_min: f64,
+    pub v_max: f64,
+    pub f_vknee_mhz: f64,
+    pub f_max_mhz: f64,
+    pub c_sm: f64,
+    pub c_mem: f64,
+    pub c_mem_static: f64,
+    pub mem_v2_factor: Vec<f64>,
+    pub thermal_tau_s: f64,
+    /// Board power limit. The NVIDIA default scheduling strategy is
+    /// modeled as power-capped boost: the highest SM gear whose average
+    /// power stays under the TDP.
+    pub tdp_w: f64,
+}
+
+impl PowerSpec {
+    /// SM voltage curve: flat below the knee, superlinear rise to v_max.
+    /// The exponent 1.4 models the boost-region inefficiency that makes
+    /// downclocking from the top gears profitable.
+    pub fn voltage(&self, f_mhz: f64) -> f64 {
+        let frac = ((f_mhz - self.f_vknee_mhz) / (self.f_max_mhz - self.f_vknee_mhz)).max(0.0);
+        self.v_min + (self.v_max - self.v_min) * frac.powf(1.4)
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct NoiseSpec {
+    pub hidden_coeff_std: f64,
+    pub counter_meas_std: f64,
+    pub power_meas_std: f64,
+    pub iter_jitter_std: f64,
+    pub energy_meas_std: f64,
+}
+
+#[derive(Debug, Clone)]
+pub struct ProfilingTax {
+    pub counter_time_mult: f64,
+    pub counter_power_mult: f64,
+    pub nvml_time_mult: f64,
+}
+
+/// One clamped-linear coefficient map (see groundtruth.json "coeff_maps").
+#[derive(Debug, Clone)]
+pub struct CoeffMap {
+    pub bias: f64,
+    pub weights: Vec<f64>,
+    pub lo: f64,
+    pub hi: f64,
+}
+
+impl CoeffMap {
+    pub fn eval(&self, features: &[f64]) -> f64 {
+        coeff_map(features, &self.weights, self.bias, self.lo, self.hi)
+    }
+
+    fn parse(j: &Json, name: &str) -> anyhow::Result<CoeffMap> {
+        let weights = j.req_f64_arr("weights")?;
+        anyhow::ensure!(
+            weights.len() == NUM_FEATURES,
+            "coeff map '{name}' has {} weights, expected {NUM_FEATURES}",
+            weights.len()
+        );
+        Ok(CoeffMap {
+            bias: j.req_f64("bias")?,
+            weights,
+            lo: j.req_f64("lo")?,
+            hi: j.req_f64("hi")?,
+        })
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct CoeffMaps {
+    pub w_compute: CoeffMap,
+    pub w_memory: CoeffMap,
+    pub w_other: CoeffMap,
+    pub gamma_sm: CoeffMap,
+    pub mem_sens: CoeffMap,
+    pub k_sm_power: CoeffMap,
+    pub k_mem_power: CoeffMap,
+    pub sm_activity: CoeffMap,
+    pub mem_activity: CoeffMap,
+}
+
+/// One phase of the per-iteration trace shape.
+#[derive(Debug, Clone)]
+pub struct PhaseSpec {
+    pub frac: f64,
+    pub cw: f64,
+    pub mw: f64,
+    pub pw: f64,
+}
+
+/// Generative archetype for a family of workloads.
+#[derive(Debug, Clone)]
+pub struct Archetype {
+    pub name: String,
+    pub features_mean: Vec<f64>,
+    pub features_std: f64,
+    pub period_s: (f64, f64),
+    pub trace_noise: f64,
+    pub micro_amp: f64,
+    pub micro_period_s: f64,
+    pub micro_jitter: f64,
+    pub abnormal_every: usize,
+    pub abnormal_scale: f64,
+    pub aperiodic: bool,
+    pub phases: Vec<PhaseSpec>,
+}
+
+/// One application entry in a suite (name + archetype + overrides).
+#[derive(Debug, Clone)]
+pub struct AppEntry {
+    pub name: String,
+    pub archetype: String,
+    pub abnormal_every: Option<usize>,
+    pub abnormal_scale: Option<f64>,
+    pub aperiodic: Option<bool>,
+}
+
+#[derive(Debug, Clone)]
+pub struct SuiteSpec {
+    pub name: String,
+    pub seed_salt: u64,
+    pub apps: Vec<AppEntry>,
+}
+
+#[derive(Debug, Clone)]
+pub struct TimeModelSpec {
+    pub mem_exponent: f64,
+    pub min_frac: f64,
+}
+
+/// The full ground-truth specification.
+#[derive(Debug, Clone)]
+pub struct Spec {
+    pub global_seed: u64,
+    pub gears: GearSpec,
+    pub power: PowerSpec,
+    pub time_model: TimeModelSpec,
+    pub noise: NoiseSpec,
+    pub profiling_tax: ProfilingTax,
+    pub feature_names: Vec<String>,
+    pub coeff_maps: CoeffMaps,
+    pub archetypes: BTreeMap<String, Archetype>,
+    pub suites: BTreeMap<String, SuiteSpec>,
+}
+
+/// Locate `data/groundtruth.json` relative to the crate root. Honors the
+/// `GPOEO_GROUNDTRUTH` env var so installed binaries can point elsewhere.
+pub fn default_spec_path() -> PathBuf {
+    if let Ok(p) = std::env::var("GPOEO_GROUNDTRUTH") {
+        return PathBuf::from(p);
+    }
+    // CARGO_MANIFEST_DIR works for `cargo run/test`; fall back to cwd.
+    let candidates = [
+        concat!(env!("CARGO_MANIFEST_DIR"), "/data/groundtruth.json").to_string(),
+        "data/groundtruth.json".to_string(),
+    ];
+    for c in &candidates {
+        let p = PathBuf::from(c);
+        if p.exists() {
+            return p;
+        }
+    }
+    PathBuf::from("data/groundtruth.json")
+}
+
+impl Spec {
+    /// Load the default ground-truth spec (panics only in tests via expect).
+    pub fn load_default() -> anyhow::Result<Spec> {
+        Spec::load(&default_spec_path())
+    }
+
+    pub fn load(path: &Path) -> anyhow::Result<Spec> {
+        let j = Json::parse_file(path)?;
+        Spec::from_json(&j)
+    }
+
+    pub fn from_json(j: &Json) -> anyhow::Result<Spec> {
+        let g = j.get("gears");
+        let gears = GearSpec {
+            sm_gear_min: g.req_f64("sm_gear_min")? as usize,
+            sm_gear_max: g.req_f64("sm_gear_max")? as usize,
+            sm_mhz_base: g.req_f64("sm_mhz_base")?,
+            sm_mhz_step: g.req_f64("sm_mhz_step")?,
+            mem_mhz: g.req_f64_arr("mem_mhz")?,
+            reference_sm_gear: g.req_f64("reference_sm_gear")? as usize,
+            reference_mem_gear: g.req_f64("reference_mem_gear")? as usize,
+            default_sm_gear: g.req_f64("default_sm_gear")? as usize,
+            default_mem_gear: g.req_f64("default_mem_gear")? as usize,
+        };
+
+        let p = j.get("power");
+        let power = PowerSpec {
+            p_idle_w: p.req_f64("p_idle_w")?,
+            v_min: p.req_f64("v_min")?,
+            v_max: p.req_f64("v_max")?,
+            f_vknee_mhz: p.req_f64("f_vknee_mhz")?,
+            f_max_mhz: p.req_f64("f_max_mhz")?,
+            c_sm: p.req_f64("c_sm_w_per_ghz_v2")?,
+            c_mem: p.req_f64("c_mem_w_per_ghz")?,
+            c_mem_static: p.req_f64("c_mem_static_w_per_ghz")?,
+            mem_v2_factor: p.req_f64_arr("mem_v2_factor")?,
+            thermal_tau_s: p.req_f64("thermal_tau_s")?,
+            tdp_w: p.req_f64("tdp_w")?,
+        };
+        anyhow::ensure!(
+            power.mem_v2_factor.len() == gears.mem_mhz.len(),
+            "mem_v2_factor length must match mem_mhz"
+        );
+
+        let t = j.get("time_model");
+        let time_model = TimeModelSpec {
+            mem_exponent: t.req_f64("mem_exponent")?,
+            min_frac: t.req_f64("min_frac")?,
+        };
+
+        let n = j.get("noise");
+        let noise = NoiseSpec {
+            hidden_coeff_std: n.req_f64("hidden_coeff_std")?,
+            counter_meas_std: n.req_f64("counter_meas_std")?,
+            power_meas_std: n.req_f64("power_meas_std")?,
+            iter_jitter_std: n.req_f64("iter_jitter_std")?,
+            energy_meas_std: n.req_f64("energy_meas_std")?,
+        };
+
+        let tax = j.get("profiling_tax");
+        let profiling_tax = ProfilingTax {
+            counter_time_mult: tax.req_f64("counter_time_mult")?,
+            counter_power_mult: tax.req_f64("counter_power_mult")?,
+            nvml_time_mult: tax.req_f64("nvml_time_mult")?,
+        };
+
+        let feature_names: Vec<String> = j
+            .req_arr("feature_names")?
+            .iter()
+            .map(|v| v.as_str().unwrap_or("").to_string())
+            .collect();
+        anyhow::ensure!(
+            feature_names.len() == NUM_FEATURES,
+            "expected {NUM_FEATURES} feature names"
+        );
+
+        let cm = j.get("coeff_maps");
+        let coeff_maps = CoeffMaps {
+            w_compute: CoeffMap::parse(cm.get("w_compute"), "w_compute")?,
+            w_memory: CoeffMap::parse(cm.get("w_memory"), "w_memory")?,
+            w_other: CoeffMap::parse(cm.get("w_other"), "w_other")?,
+            gamma_sm: CoeffMap::parse(cm.get("gamma_sm"), "gamma_sm")?,
+            mem_sens: CoeffMap::parse(cm.get("mem_sens"), "mem_sens")?,
+            k_sm_power: CoeffMap::parse(cm.get("k_sm_power"), "k_sm_power")?,
+            k_mem_power: CoeffMap::parse(cm.get("k_mem_power"), "k_mem_power")?,
+            sm_activity: CoeffMap::parse(cm.get("sm_activity"), "sm_activity")?,
+            mem_activity: CoeffMap::parse(cm.get("mem_activity"), "mem_activity")?,
+        };
+
+        let mut archetypes = BTreeMap::new();
+        let aobj = j
+            .get("archetypes")
+            .as_obj()
+            .ok_or_else(|| anyhow::anyhow!("missing 'archetypes'"))?;
+        for (name, a) in aobj {
+            let period = a.req_f64_arr("period_s")?;
+            let mut phases = Vec::new();
+            for ph in a.req_arr("phases")? {
+                phases.push(PhaseSpec {
+                    frac: ph.req_f64("frac")?,
+                    cw: ph.req_f64("cw")?,
+                    mw: ph.req_f64("mw")?,
+                    pw: ph.req_f64("pw")?,
+                });
+            }
+            // Normalize phase fractions defensively.
+            let fsum: f64 = phases.iter().map(|p| p.frac).sum();
+            for ph in &mut phases {
+                ph.frac /= fsum;
+            }
+            let fm = a.req_f64_arr("features_mean")?;
+            anyhow::ensure!(
+                fm.len() == NUM_FEATURES,
+                "archetype '{name}' features_mean length"
+            );
+            archetypes.insert(
+                name.clone(),
+                Archetype {
+                    name: name.clone(),
+                    features_mean: fm,
+                    features_std: a.req_f64("features_std")?,
+                    period_s: (period[0], period[1]),
+                    trace_noise: a.req_f64("trace_noise")?,
+                    micro_amp: a.req_f64("micro_amp")?,
+                    micro_period_s: a.req_f64("micro_period_s")?,
+                    micro_jitter: a.req_f64("micro_jitter")?,
+                    abnormal_every: a.req_f64("abnormal_every")? as usize,
+                    abnormal_scale: a.req_f64("abnormal_scale")?,
+                    aperiodic: a.opt_bool("aperiodic", false),
+                    phases,
+                },
+            );
+        }
+
+        let mut suites = BTreeMap::new();
+        let sobj = j
+            .get("suites")
+            .as_obj()
+            .ok_or_else(|| anyhow::anyhow!("missing 'suites'"))?;
+        for (name, s) in sobj {
+            let mut apps = Vec::new();
+            for e in s.req_arr("apps")? {
+                let archetype = e.req_str("archetype")?.to_string();
+                anyhow::ensure!(
+                    archetypes.contains_key(&archetype),
+                    "suite '{name}' app references unknown archetype '{archetype}'"
+                );
+                apps.push(AppEntry {
+                    name: e.req_str("name")?.to_string(),
+                    archetype,
+                    abnormal_every: e.get("abnormal_every").as_usize(),
+                    abnormal_scale: e.get("abnormal_scale").as_f64(),
+                    aperiodic: e.get("aperiodic").as_bool(),
+                });
+            }
+            suites.insert(
+                name.clone(),
+                SuiteSpec {
+                    name: name.clone(),
+                    seed_salt: s.req_f64("seed_salt")? as u64,
+                    apps,
+                },
+            );
+        }
+
+        Ok(Spec {
+            global_seed: j.req_f64("global_seed")? as u64,
+            gears,
+            power,
+            time_model,
+            noise,
+            profiling_tax,
+            feature_names,
+            coeff_maps,
+            archetypes,
+            suites,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn loads_groundtruth() {
+        let spec = Spec::load_default().expect("groundtruth.json must parse");
+        assert_eq!(spec.gears.num_sm_gears(), 99);
+        assert_eq!(spec.gears.num_mem_gears(), 5);
+        assert_eq!(spec.gears.sm_mhz(16), 450.0);
+        assert_eq!(spec.gears.sm_mhz(114), 1920.0);
+        assert_eq!(spec.gears.sm_mhz(106), 1800.0);
+        assert_eq!(spec.gears.mem_mhz_of(3), 9251.0);
+        assert_eq!(spec.feature_names.len(), NUM_FEATURES);
+        assert!(spec.archetypes.contains_key("cnn"));
+    }
+
+    #[test]
+    fn suite_sizes_match_paper() {
+        let spec = Spec::load_default().unwrap();
+        assert_eq!(spec.suites["aibench"].apps.len(), 14);
+        assert_eq!(spec.suites["classical"].apps.len(), 2);
+        assert_eq!(spec.suites["gnns"].apps.len(), 55, "paper evaluates 55 gnn apps");
+        assert!(spec.suites["pytorch_train"].apps.len() >= 40);
+    }
+
+    #[test]
+    fn voltage_curve_monotone_with_knee() {
+        let spec = Spec::load_default().unwrap();
+        let p = &spec.power;
+        assert_eq!(p.voltage(400.0), p.v_min);
+        assert_eq!(p.voltage(960.0), p.v_min);
+        assert!((p.voltage(1920.0) - p.v_max).abs() < 1e-12);
+        let mut prev = 0.0;
+        for mhz in (450..=1920).step_by(15) {
+            let v = p.voltage(mhz as f64);
+            assert!(v >= prev);
+            prev = v;
+        }
+    }
+
+    #[test]
+    fn phase_fracs_normalized() {
+        let spec = Spec::load_default().unwrap();
+        for a in spec.archetypes.values() {
+            let s: f64 = a.phases.iter().map(|p| p.frac).sum();
+            assert!((s - 1.0).abs() < 1e-9, "archetype {} fracs {s}", a.name);
+        }
+    }
+
+    #[test]
+    fn aperiodic_flags() {
+        let spec = Spec::load_default().unwrap();
+        let gnns = &spec.suites["gnns"];
+        let aperiodic: Vec<&str> = gnns
+            .apps
+            .iter()
+            .filter(|a| {
+                a.aperiodic
+                    .unwrap_or(spec.archetypes[&a.archetype].aperiodic)
+            })
+            .map(|a| a.name.as_str())
+            .collect();
+        // Paper: CSL and TU datasets are aperiodic.
+        assert!(aperiodic.iter().all(|n| n.starts_with("CSL") || n.starts_with("TU")));
+        assert!(aperiodic.len() >= 10);
+    }
+}

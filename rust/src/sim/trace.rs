@@ -1,0 +1,369 @@
+//! Instantaneous trace synthesis: turns an `AppParams` + clock config into
+//! the (power, SM-util, mem-util) time series the online controller
+//! observes through the NVML-like sampling API.
+//!
+//! The trace is what period detection sees, so it carries the full
+//! repertoire of real-GPU nastiness the paper discusses: per-iteration
+//! phase structure (data-load / forward / backward / optimizer), jittered
+//! micro-oscillations that dominate the spectrum for TSP-style apps,
+//! near-symmetric halves that put the 2nd harmonic above the fundamental,
+//! abnormal (eval/checkpoint) iterations, measurement noise, and a
+//! thermal-inertia EMA on power. Aperiodic apps emit a random segment walk.
+
+use crate::sim::app::AppParams;
+use crate::sim::spec::Spec;
+use crate::util::rng::Pcg64;
+
+/// Evolving trace state. Time is *virtual* seconds; callers advance it
+/// monotonically via `advance` and read instantaneous values via `sample`.
+#[derive(Debug, Clone)]
+pub struct TraceState {
+    /// Progress within the current iteration, in [0, 1).
+    progress: f64,
+    /// Completed iterations since trace start.
+    pub iterations: u64,
+    /// Duration multiplier of the current iteration (jitter × abnormal).
+    iter_mult: f64,
+    /// Micro-oscillation phase (radians), advanced with jittered rate.
+    micro_phase: f64,
+    /// Thermal EMA state for the power channel.
+    power_ema: f64,
+    ema_init: bool,
+    /// Aperiodic mode: remaining time in current segment + its level idx.
+    seg_remaining: f64,
+    seg_phase: usize,
+    rng: Pcg64,
+}
+
+/// Instantaneous observable values (noise-free; the NVML layer adds
+/// measurement noise).
+#[derive(Debug, Clone, Copy)]
+pub struct Instant {
+    pub power_w: f64,
+    pub util_sm: f64,
+    pub util_mem: f64,
+}
+
+impl TraceState {
+    pub fn new(app: &AppParams) -> TraceState {
+        let mut rng = Pcg64::new(app.trace_seed, 0x7ace);
+        let seg_phase = if app.aperiodic {
+            rng.below(app.phases.len() as u64) as usize
+        } else {
+            0
+        };
+        let seg_remaining = if app.aperiodic {
+            // Exponential segment lengths with mean t_base.
+            -app.t_base * (1.0 - rng.next_f64()).ln()
+        } else {
+            0.0
+        };
+        let mut st = TraceState {
+            progress: 0.0,
+            iterations: 0,
+            iter_mult: 1.0,
+            micro_phase: 0.0,
+            power_ema: 0.0,
+            ema_init: false,
+            seg_remaining,
+            seg_phase,
+            rng,
+        };
+        st.iter_mult = st.draw_iter_mult(app);
+        st
+    }
+
+    fn draw_iter_mult(&mut self, app: &AppParams) -> f64 {
+        let jitter = self.rng.normal(0.0, 0.02).exp();
+        let abnormal = app.abnormal_every > 0
+            && (self.iterations + 1) % app.abnormal_every as u64 == 0;
+        if abnormal {
+            jitter * app.abnormal_scale
+        } else {
+            jitter
+        }
+    }
+
+    /// Per-phase relative durations at the given clock config, normalized
+    /// to sum to 1. Phases with more compute weight stretch when the SM
+    /// clock drops; memory-weighted phases stretch with the mem clock.
+    fn phase_durations(&self, app: &AppParams, spec: &Spec, sm: usize, mem: usize) -> Vec<f64> {
+        let f_ref_s = spec.gears.sm_mhz(spec.gears.reference_sm_gear);
+        let f_ref_m = spec.gears.mem_mhz_of(spec.gears.reference_mem_gear);
+        let r_s = (f_ref_s / spec.gears.sm_mhz(sm)).powf(app.gamma);
+        let r_m = (f_ref_m / spec.gears.mem_mhz_of(mem)).powf(spec.time_model.mem_exponent);
+        let rme = (1.0 - app.s_m) + app.s_m * r_m;
+        let mut durs: Vec<f64> = app
+            .phases
+            .iter()
+            .map(|p| {
+                let rest = (1.0 - p.cw - p.mw).max(0.0);
+                p.frac * (p.cw * r_s + p.mw * rme + rest)
+            })
+            .collect();
+        let s: f64 = durs.iter().sum();
+        for d in &mut durs {
+            *d /= s;
+        }
+        durs
+    }
+
+    fn phase_at_progress(&self, durs: &[f64], p: f64) -> usize {
+        let mut acc = 0.0;
+        for (i, d) in durs.iter().enumerate() {
+            acc += d;
+            if p < acc {
+                return i;
+            }
+        }
+        durs.len() - 1
+    }
+
+    /// Advance virtual time by `dt` seconds. `speed` is the app-progress
+    /// rate multiplier (< 1 while counter profiling inflates iteration
+    /// time). Returns the number of iterations completed during this step.
+    pub fn advance(
+        &mut self,
+        app: &AppParams,
+        spec: &Spec,
+        sm: usize,
+        mem: usize,
+        dt: f64,
+        speed: f64,
+    ) -> u64 {
+        // Micro-oscillation phase advances in wall time with jittered rate.
+        if app.micro_period_s > 0.0 {
+            let g = self.rng.gauss();
+            let rate = 2.0 * std::f64::consts::PI / app.micro_period_s
+                * (1.0 + app.micro_jitter * g).max(0.05);
+            self.micro_phase += rate * dt;
+        }
+
+        if app.aperiodic {
+            // Segments are *work units*: progress scales with the clock
+            // config (and profiling dilation) exactly like iterations do,
+            // so a fixed segment count is a fixed amount of work.
+            let mut remaining = dt * speed / app.time_factor(spec, sm, mem);
+            let mut iters = 0;
+            while remaining > 0.0 {
+                if self.seg_remaining <= remaining {
+                    remaining -= self.seg_remaining;
+                    self.seg_phase = self.rng.below(app.phases.len() as u64) as usize;
+                    self.seg_remaining = -app.t_base * (1.0 - self.rng.next_f64()).ln();
+                    // Count "work units" as pseudo-iterations for run length
+                    // bookkeeping (aperiodic apps run on wall-time budgets).
+                    self.iterations += 1;
+                    iters += 1;
+                } else {
+                    self.seg_remaining -= remaining;
+                    remaining = 0.0;
+                }
+            }
+            return iters;
+        }
+
+        let t_iter = app.t_base * app.time_factor(spec, sm, mem);
+        let mut iters = 0;
+        let mut remaining = dt * speed; // app-progress seconds
+        while remaining > 0.0 {
+            let cur_dur = t_iter * self.iter_mult;
+            let left = (1.0 - self.progress) * cur_dur;
+            if left <= remaining {
+                remaining -= left;
+                self.progress = 0.0;
+                self.iterations += 1;
+                iters += 1;
+                self.iter_mult = self.draw_iter_mult(app);
+            } else {
+                self.progress += remaining / cur_dur;
+                remaining = 0.0;
+            }
+        }
+        iters
+    }
+
+    /// Instantaneous observables at the current trace position. `p_avg`
+    /// and utils are the analytic averages for the active config; the
+    /// trace modulates them by the phase structure so that the
+    /// time-weighted mean stays ≈ the analytic value.
+    pub fn sample(
+        &mut self,
+        app: &AppParams,
+        spec: &Spec,
+        sm: usize,
+        mem: usize,
+        dt_since_last: f64,
+    ) -> Instant {
+        let op = app.op_point(spec, sm, mem);
+        let p_dyn = op.power_w - spec.power.p_idle_w;
+
+        let (phase_idx, weight_norm) = if app.aperiodic {
+            (self.seg_phase, {
+                // normalize pw over phases with equal occupancy
+                let s: f64 =
+                    app.phases.iter().map(|p| p.pw).sum::<f64>() / app.phases.len() as f64;
+                s
+            })
+        } else {
+            let durs = self.phase_durations(app, spec, sm, mem);
+            let idx = self.phase_at_progress(&durs, self.progress);
+            let wsum: f64 = durs
+                .iter()
+                .zip(&app.phases)
+                .map(|(d, p)| d * p.pw)
+                .sum();
+            (idx, wsum)
+        };
+        let ph = &app.phases[phase_idx];
+
+        // Scale so the duration-weighted mean of phase powers equals p_dyn.
+        let p_phase = p_dyn * ph.pw / weight_norm.max(1e-9);
+
+        // Micro-oscillation rides on the dynamic power.
+        let micro = if app.micro_amp > 0.0 {
+            app.micro_amp * p_dyn * self.micro_phase.sin()
+        } else {
+            0.0
+        };
+
+        // Multiplicative trace noise on the dynamic component.
+        let noise = self.rng.normal(0.0, app.trace_noise);
+        let p_raw = spec.power.p_idle_w + (p_phase + micro) * (1.0 + noise).max(0.0);
+
+        // Thermal inertia: first-order EMA toward the raw value.
+        if !self.ema_init {
+            self.power_ema = p_raw;
+            self.ema_init = true;
+        } else {
+            let alpha = 1.0 - (-dt_since_last / spec.power.thermal_tau_s).exp();
+            self.power_ema += alpha * (p_raw - self.power_ema);
+        }
+
+        // Utilization channels follow the phase weights (cosmetic but
+        // phase-correlated, which is what Feature_dect needs).
+        let cw_mean: f64 = app.phases.iter().map(|p| p.frac * p.cw).sum();
+        let mw_mean: f64 = app.phases.iter().map(|p| p.frac * p.mw).sum();
+        // Utilization is sampled instantaneously by NVML (no thermal
+        // filtering), so the micro-oscillation rides it at full strength —
+        // this is the high-frequency interference of §2.2.3.
+        let micro_u = if app.micro_amp > 0.0 {
+            app.micro_amp * self.micro_phase.sin()
+        } else {
+            0.0
+        };
+        let util_sm = (op.util_sm * ph.cw / cw_mean.max(1e-9)
+            * (1.0 + 0.5 * noise + micro_u))
+            .clamp(0.0, 1.0);
+        let util_mem = (op.util_mem * ph.mw / mw_mean.max(1e-9)
+            * (1.0 + 0.5 * noise + micro_u))
+            .clamp(0.0, 1.0);
+
+        Instant {
+            power_w: self.power_ema,
+            util_sm,
+            util_mem,
+        }
+    }
+
+    /// Ground-truth iteration period under the current config and speed —
+    /// what a perfect detector would report. Used by experiment harnesses
+    /// to score detection error.
+    pub fn true_period(
+        app: &AppParams,
+        spec: &Spec,
+        sm: usize,
+        mem: usize,
+        speed: f64,
+    ) -> f64 {
+        app.t_base * app.time_factor(spec, sm, mem) / speed
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::spec::Spec;
+
+    fn setup(name: &str) -> (Spec, AppParams) {
+        let spec = Spec::load_default().unwrap();
+        let suite = if name.starts_with("AI_") {
+            "aibench"
+        } else if name == "TSVM" || name == "TGBM" {
+            "classical"
+        } else {
+            "gnns"
+        };
+        let e = spec.suites[suite].apps.iter().find(|a| a.name == name).unwrap().clone();
+        let app = AppParams::materialize(
+            &spec, suite, &e.name, &e.archetype, e.abnormal_every, e.abnormal_scale, e.aperiodic,
+        );
+        (spec, app)
+    }
+
+    #[test]
+    fn iterations_advance_at_expected_rate() {
+        let (spec, app) = setup("AI_I2T");
+        let mut st = TraceState::new(&app);
+        let t_iter = app.t_base * app.time_factor(&spec, 114, 4);
+        let total = 40.0 * t_iter;
+        let mut t = 0.0;
+        while t < total {
+            st.advance(&app, &spec, 114, 4, 0.01, 1.0);
+            t += 0.01;
+        }
+        let it = st.iterations as f64;
+        assert!((it - 40.0).abs() <= 3.0, "iterations {it}");
+    }
+
+    #[test]
+    fn profiling_speed_slows_iterations() {
+        let (spec, app) = setup("AI_TS");
+        let mut fast = TraceState::new(&app);
+        let mut slow = TraceState::new(&app);
+        for _ in 0..4000 {
+            fast.advance(&app, &spec, 106, 3, 0.005, 1.0);
+            slow.advance(&app, &spec, 106, 3, 0.005, 1.0 / 1.11);
+        }
+        assert!(slow.iterations < fast.iterations);
+        let ratio = fast.iterations as f64 / slow.iterations.max(1) as f64;
+        assert!((ratio - 1.11).abs() < 0.08, "ratio {ratio}");
+    }
+
+    #[test]
+    fn trace_mean_power_matches_analytic() {
+        let (spec, app) = setup("AI_OBJ");
+        let mut st = TraceState::new(&app);
+        let op = app.op_point(&spec, 114, 4);
+        let dt = 0.02;
+        let mut acc = 0.0;
+        let n = 8000;
+        for _ in 0..n {
+            st.advance(&app, &spec, 114, 4, dt, 1.0);
+            acc += st.sample(&app, &spec, 114, 4, dt).power_w;
+        }
+        let mean = acc / n as f64;
+        let rel = (mean - op.power_w).abs() / op.power_w;
+        assert!(rel < 0.05, "trace mean {mean} vs analytic {}", op.power_w);
+    }
+
+    #[test]
+    fn aperiodic_trace_counts_segments() {
+        let (spec, app) = setup("TSVM");
+        assert!(app.aperiodic);
+        let mut st = TraceState::new(&app);
+        for _ in 0..5000 {
+            st.advance(&app, &spec, 114, 4, 0.01, 1.0);
+            let s = st.sample(&app, &spec, 114, 4, 0.01);
+            assert!(s.power_w > 0.0 && s.util_sm <= 1.0);
+        }
+        assert!(st.iterations > 5, "segments {}", st.iterations);
+    }
+
+    #[test]
+    fn true_period_scales_with_clock() {
+        let (spec, app) = setup("SBM_GIN");
+        let p_hi = TraceState::true_period(&app, &spec, 114, 4, 1.0);
+        let p_lo = TraceState::true_period(&app, &spec, 40, 4, 1.0);
+        assert!(p_lo > p_hi, "downclock lengthens the period");
+    }
+}

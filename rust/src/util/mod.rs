@@ -1,0 +1,9 @@
+//! Self-built substrates the offline crate set forces us to own:
+//! JSON ser/de, a PCG64 RNG, statistics helpers, CLI parsing and table
+//! rendering.
+
+pub mod cli;
+pub mod json;
+pub mod rng;
+pub mod stats;
+pub mod table;

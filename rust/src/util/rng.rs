@@ -1,0 +1,189 @@
+//! Deterministic PCG64 (XSL-RR 128/64) random number generator.
+//!
+//! The offline crate set has no `rand`, and we need bit-exact agreement
+//! with the Python training-data generator (`python/compile/prng.py`) so
+//! the cross-language pinning test (`rust/tests/crosscheck.rs`) can assert
+//! that both sides materialize identical synthetic applications.
+//!
+//! Every stochastic quantity in the simulator flows through this RNG; the
+//! simulation path never touches wall-clock or OS entropy.
+
+/// PCG64 XSL-RR 128/64. Reference: O'Neill, "PCG: A Family of Simple Fast
+/// Space-Efficient Statistically Good Algorithms for RNG" (2014).
+#[derive(Debug, Clone)]
+pub struct Pcg64 {
+    state: u128,
+    inc: u128,
+}
+
+const PCG_MULT: u128 = 0x2360_ed05_1fc6_5da4_4385_df64_9fbc_cfd;
+
+impl Pcg64 {
+    /// Seed from a 64-bit seed and a stream id. Mirrors `prng.py::Pcg64`.
+    pub fn new(seed: u64, stream: u64) -> Self {
+        let init_state = (splitmix64(seed) as u128) << 64 | splitmix64(seed ^ 0x9e37_79b9_7f4a_7c15) as u128;
+        let init_inc = ((splitmix64(stream) as u128) << 64 | stream as u128) | 1;
+        let mut rng = Pcg64 {
+            state: 0,
+            inc: init_inc,
+        };
+        rng.step();
+        rng.state = rng.state.wrapping_add(init_state);
+        rng.step();
+        rng
+    }
+
+    fn step(&mut self) {
+        self.state = self
+            .state
+            .wrapping_mul(PCG_MULT)
+            .wrapping_add(self.inc);
+    }
+
+    /// Next raw 64-bit output (XSL-RR output function).
+    pub fn next_u64(&mut self) -> u64 {
+        self.step();
+        let xored = ((self.state >> 64) as u64) ^ (self.state as u64);
+        let rot = (self.state >> 122) as u32;
+        xored.rotate_right(rot)
+    }
+
+    /// Uniform f64 in [0, 1) with 53 bits of precision.
+    pub fn next_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / 9007199254740992.0)
+    }
+
+    /// Uniform f64 in [lo, hi).
+    pub fn uniform(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * self.next_f64()
+    }
+
+    /// Uniform integer in [0, n). Uses the simple multiply-shift reduction;
+    /// modulo bias is irrelevant at our n << 2^64 scales, and the Python
+    /// twin does the identical computation so the streams stay in lockstep.
+    pub fn below(&mut self, n: u64) -> u64 {
+        ((self.next_u64() as u128 * n as u128) >> 64) as u64
+    }
+
+    /// Standard normal via Box-Muller. Draws exactly two uniforms per call
+    /// (no cached spare) to keep the stream position language-independent.
+    pub fn gauss(&mut self) -> f64 {
+        let u1 = (self.next_f64()).max(1e-300);
+        let u2 = self.next_f64();
+        (-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos()
+    }
+
+    /// Normal with mean/std.
+    pub fn normal(&mut self, mean: f64, std: f64) -> f64 {
+        mean + std * self.gauss()
+    }
+
+    /// Fork a derived RNG for a named sub-stream (per-app, per-trace, ...).
+    pub fn fork(&mut self, label: &str) -> Pcg64 {
+        let h = fnv1a64(label.as_bytes());
+        Pcg64::new(self.next_u64() ^ h, h)
+    }
+}
+
+/// SplitMix64 — used to expand seeds into initial PCG state.
+pub fn splitmix64(mut x: u64) -> u64 {
+    x = x.wrapping_add(0x9e37_79b9_7f4a_7c15);
+    let mut z = x;
+    z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+    z ^ (z >> 31)
+}
+
+/// FNV-1a 64-bit hash — stable cross-language string hashing for stream
+/// derivation (suite salts, app names).
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// RNG stream for one synthetic application: mixes the global seed, the
+/// suite salt and the app name. Must match `prng.py::app_rng`.
+pub fn app_rng(global_seed: u64, suite_salt: u64, app_name: &str) -> Pcg64 {
+    let h = fnv1a64(app_name.as_bytes());
+    Pcg64::new(
+        global_seed ^ h.wrapping_mul(0x9e37_79b9_7f4a_7c15),
+        suite_salt.wrapping_add(h),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_and_stream_separated() {
+        let mut a = Pcg64::new(42, 1);
+        let mut b = Pcg64::new(42, 1);
+        let mut c = Pcg64::new(42, 2);
+        let va: Vec<u64> = (0..8).map(|_| a.next_u64()).collect();
+        let vb: Vec<u64> = (0..8).map(|_| b.next_u64()).collect();
+        let vc: Vec<u64> = (0..8).map(|_| c.next_u64()).collect();
+        assert_eq!(va, vb);
+        assert_ne!(va, vc);
+    }
+
+    #[test]
+    fn uniform_range_and_moments() {
+        let mut r = Pcg64::new(7, 7);
+        let n = 20000;
+        let mut sum = 0.0;
+        let mut sumsq = 0.0;
+        for _ in 0..n {
+            let x = r.next_f64();
+            assert!((0.0..1.0).contains(&x));
+            sum += x;
+            sumsq += x * x;
+        }
+        let mean = sum / n as f64;
+        let var = sumsq / n as f64 - mean * mean;
+        assert!((mean - 0.5).abs() < 0.01, "mean {mean}");
+        assert!((var - 1.0 / 12.0).abs() < 0.005, "var {var}");
+    }
+
+    #[test]
+    fn gauss_moments() {
+        let mut r = Pcg64::new(11, 3);
+        let n = 20000;
+        let xs: Vec<f64> = (0..n).map(|_| r.gauss()).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        assert!(mean.abs() < 0.03, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.05, "var {var}");
+    }
+
+    #[test]
+    fn below_is_in_range_and_roughly_uniform() {
+        let mut r = Pcg64::new(5, 5);
+        let mut counts = [0usize; 10];
+        for _ in 0..10000 {
+            counts[r.below(10) as usize] += 1;
+        }
+        for c in counts {
+            assert!((700..1300).contains(&c), "bucket {c}");
+        }
+    }
+
+    #[test]
+    fn fnv_known_vectors() {
+        // Standard FNV-1a test vectors.
+        assert_eq!(fnv1a64(b""), 0xcbf29ce484222325);
+        assert_eq!(fnv1a64(b"a"), 0xaf63dc4c8601ec8c);
+        assert_eq!(fnv1a64(b"foobar"), 0x85944171f73967e8);
+    }
+
+    #[test]
+    fn app_rng_differs_per_app() {
+        let mut a = app_rng(1, 2, "AI_I2T");
+        let mut b = app_rng(1, 2, "AI_FE");
+        assert_ne!(a.next_u64(), b.next_u64());
+    }
+}

@@ -1,0 +1,244 @@
+//! Statistics helpers used across period detection, model evaluation and
+//! the experiment harness: moments, percentiles, SMAPE/MAPE, weighted
+//! averages, least-squares line/parabola fits.
+
+/// Arithmetic mean; 0.0 for the empty slice.
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+/// Population standard deviation.
+pub fn std(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    (xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / xs.len() as f64).sqrt()
+}
+
+/// Weighted mean; falls back to unweighted when weights sum to ~0.
+pub fn weighted_mean(xs: &[f64], ws: &[f64]) -> f64 {
+    assert_eq!(xs.len(), ws.len());
+    let wsum: f64 = ws.iter().sum();
+    if wsum.abs() < 1e-12 {
+        return mean(xs);
+    }
+    xs.iter().zip(ws).map(|(x, w)| x * w).sum::<f64>() / wsum
+}
+
+/// Linear-interpolated percentile, p in [0, 100].
+pub fn percentile(xs: &[f64], p: f64) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let rank = (p / 100.0) * (v.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    if lo == hi {
+        v[lo]
+    } else {
+        v[lo] + (rank - lo as f64) * (v[hi] - v[lo])
+    }
+}
+
+/// Symmetric mean absolute percentage error of two scalars, in [0, 2].
+/// This is the pairwise SMAPE used by Algorithm 2 (group amplitudes).
+pub fn smape(a: f64, b: f64) -> f64 {
+    let denom = (a.abs() + b.abs()) / 2.0;
+    if denom < 1e-12 {
+        return 0.0;
+    }
+    (a - b).abs() / denom
+}
+
+/// Mean absolute percentage error of predictions vs truth (fractions).
+pub fn mape(pred: &[f64], truth: &[f64]) -> f64 {
+    assert_eq!(pred.len(), truth.len());
+    if pred.is_empty() {
+        return 0.0;
+    }
+    pred.iter()
+        .zip(truth)
+        .map(|(p, t)| ((p - t) / t).abs())
+        .sum::<f64>()
+        / pred.len() as f64
+}
+
+/// Absolute percentage error of a single prediction.
+pub fn ape(pred: f64, truth: f64) -> f64 {
+    ((pred - truth) / truth).abs()
+}
+
+/// Index of the minimum value (first on ties); None for empty input.
+pub fn argmin(xs: &[f64]) -> Option<usize> {
+    xs.iter()
+        .enumerate()
+        .min_by(|(_, a), (_, b)| a.partial_cmp(b).unwrap())
+        .map(|(i, _)| i)
+}
+
+/// Index of the maximum value (first on ties); None for empty input.
+pub fn argmax(xs: &[f64]) -> Option<usize> {
+    xs.iter()
+        .enumerate()
+        .max_by(|(_, a), (_, b)| a.partial_cmp(b).unwrap())
+        .map(|(i, _)| i)
+}
+
+/// Least-squares line fit `y = a + b x`; returns (a, b).
+pub fn fit_line(xs: &[f64], ys: &[f64]) -> (f64, f64) {
+    assert_eq!(xs.len(), ys.len());
+    let n = xs.len() as f64;
+    if xs.len() < 2 {
+        return (ys.first().copied().unwrap_or(0.0), 0.0);
+    }
+    let sx: f64 = xs.iter().sum();
+    let sy: f64 = ys.iter().sum();
+    let sxx: f64 = xs.iter().map(|x| x * x).sum();
+    let sxy: f64 = xs.iter().zip(ys).map(|(x, y)| x * y).sum();
+    let denom = n * sxx - sx * sx;
+    if denom.abs() < 1e-12 {
+        return (sy / n, 0.0);
+    }
+    let b = (n * sxy - sx * sy) / denom;
+    let a = (sy - b * sx) / n;
+    (a, b)
+}
+
+/// Least-squares parabola fit `y = c0 + c1 x + c2 x²` via 3×3 normal
+/// equations. Used by the online local search (§4.3.4) to smooth noisy
+/// energy measurements into a convex objective before picking the optimum.
+/// Returns (c0, c1, c2).
+pub fn fit_parabola(xs: &[f64], ys: &[f64]) -> (f64, f64, f64) {
+    assert_eq!(xs.len(), ys.len());
+    if xs.len() < 3 {
+        let (a, b) = fit_line(xs, ys);
+        return (a, b, 0.0);
+    }
+    // Normalize x for conditioning.
+    let mx = mean(xs);
+    let sx = std(xs).max(1e-9);
+    let xn: Vec<f64> = xs.iter().map(|x| (x - mx) / sx).collect();
+
+    let n = xn.len() as f64;
+    let s1: f64 = xn.iter().sum();
+    let s2: f64 = xn.iter().map(|x| x.powi(2)).sum();
+    let s3: f64 = xn.iter().map(|x| x.powi(3)).sum();
+    let s4: f64 = xn.iter().map(|x| x.powi(4)).sum();
+    let t0: f64 = ys.iter().sum();
+    let t1: f64 = xn.iter().zip(ys).map(|(x, y)| x * y).sum();
+    let t2: f64 = xn.iter().zip(ys).map(|(x, y)| x * x * y).sum();
+
+    // Solve [n s1 s2; s1 s2 s3; s2 s3 s4] c = [t0 t1 t2] by Cramer.
+    let det = n * (s2 * s4 - s3 * s3) - s1 * (s1 * s4 - s3 * s2) + s2 * (s1 * s3 - s2 * s2);
+    if det.abs() < 1e-12 {
+        let (a, b) = fit_line(xs, ys);
+        return (a, b, 0.0);
+    }
+    let d0 = t0 * (s2 * s4 - s3 * s3) - s1 * (t1 * s4 - s3 * t2) + s2 * (t1 * s3 - s2 * t2);
+    let d1 = n * (t1 * s4 - t2 * s3) - t0 * (s1 * s4 - s3 * s2) + s2 * (s1 * t2 - s2 * t1);
+    let d2 = n * (s2 * t2 - s3 * t1) - s1 * (s1 * t2 - s3 * t0) + t0 * (s1 * s3 - s2 * s2);
+    let (a0, a1, a2) = (d0 / det, d1 / det, d2 / det);
+
+    // De-normalize: y = a0 + a1*(x-mx)/sx + a2*((x-mx)/sx)^2.
+    let c2 = a2 / (sx * sx);
+    let c1 = a1 / sx - 2.0 * a2 * mx / (sx * sx);
+    let c0 = a0 - a1 * mx / sx + a2 * mx * mx / (sx * sx);
+    (c0, c1, c2)
+}
+
+/// Vertex (minimizer) of the fitted parabola, clamped to [lo, hi]. If the
+/// fit is non-convex (c2 <= 0), falls back to the measured argmin.
+pub fn parabola_argmin(xs: &[f64], ys: &[f64], lo: f64, hi: f64) -> f64 {
+    let (_, c1, c2) = fit_parabola(xs, ys);
+    if c2 > 1e-12 {
+        (-c1 / (2.0 * c2)).clamp(lo, hi)
+    } else {
+        xs[argmin(ys).unwrap_or(0)].clamp(lo, hi)
+    }
+}
+
+/// Dot product plus bias, clamped — the shared "coefficient map" shape
+/// from data/groundtruth.json (mirrored by simdata.py).
+pub fn coeff_map(features: &[f64], weights: &[f64], bias: f64, lo: f64, hi: f64) -> f64 {
+    assert_eq!(features.len(), weights.len());
+    let v = bias + features.iter().zip(weights).map(|(f, w)| f * w).sum::<f64>();
+    v.clamp(lo, hi)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn basic_moments() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert!((mean(&xs) - 2.5).abs() < 1e-12);
+        assert!((std(&xs) - (1.25f64).sqrt()).abs() < 1e-12);
+        assert_eq!(mean(&[]), 0.0);
+    }
+
+    #[test]
+    fn percentile_interpolates() {
+        let xs = [10.0, 20.0, 30.0, 40.0];
+        assert_eq!(percentile(&xs, 0.0), 10.0);
+        assert_eq!(percentile(&xs, 100.0), 40.0);
+        assert!((percentile(&xs, 50.0) - 25.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn smape_props() {
+        assert_eq!(smape(0.0, 0.0), 0.0);
+        assert!((smape(1.0, 1.0)).abs() < 1e-12);
+        assert!((smape(1.0, 3.0) - 1.0).abs() < 1e-12); // |1-3| / 2
+        assert!((smape(1.0, -1.0) - 2.0).abs() < 1e-12); // max
+        assert_eq!(smape(2.0, 5.0), smape(5.0, 2.0)); // symmetric
+    }
+
+    #[test]
+    fn line_fit_exact() {
+        let xs = [0.0, 1.0, 2.0, 3.0];
+        let ys: Vec<f64> = xs.iter().map(|x| 2.0 + 0.5 * x).collect();
+        let (a, b) = fit_line(&xs, &ys);
+        assert!((a - 2.0).abs() < 1e-9 && (b - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn parabola_fit_exact() {
+        let xs = [50.0, 60.0, 70.0, 80.0, 95.0];
+        let ys: Vec<f64> = xs.iter().map(|x| 3.0 - 0.4 * x + 0.01 * x * x).collect();
+        let (c0, c1, c2) = fit_parabola(&xs, &ys);
+        assert!((c0 - 3.0).abs() < 1e-6, "c0={c0}");
+        assert!((c1 + 0.4).abs() < 1e-7, "c1={c1}");
+        assert!((c2 - 0.01).abs() < 1e-9, "c2={c2}");
+        let xm = parabola_argmin(&xs, &ys, 40.0, 120.0);
+        assert!((xm - 20.0_f64.max(40.0)).abs() < 1e-6); // vertex at 20, clamped to 40
+    }
+
+    #[test]
+    fn parabola_nonconvex_falls_back() {
+        let xs = [1.0, 2.0, 3.0];
+        let ys = [1.0, 5.0, 2.0]; // concave-ish
+        let xm = parabola_argmin(&xs, &ys, 1.0, 3.0);
+        assert!(xs.contains(&xm));
+    }
+
+    #[test]
+    fn weighted_mean_matches_manual() {
+        let xs = [1.0, 3.0];
+        let ws = [1.0, 3.0];
+        assert!((weighted_mean(&xs, &ws) - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn argminmax() {
+        assert_eq!(argmin(&[3.0, 1.0, 2.0]), Some(1));
+        assert_eq!(argmax(&[3.0, 1.0, 2.0]), Some(0));
+        assert_eq!(argmin(&[]), None);
+    }
+}

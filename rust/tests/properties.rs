@@ -1,0 +1,192 @@
+//! Property-based tests over randomized inputs (seeded PCG64 — the
+//! offline crate set has no proptest, so this is a minimal deterministic
+//! property harness: N random cases per property, failures print the
+//! case seed).
+
+use gpoeo::search::{local_search, Objective};
+use gpoeo::sim::{make_app, Spec, TraceState};
+use gpoeo::util::json::Json;
+use gpoeo::util::rng::Pcg64;
+use gpoeo::util::stats;
+
+fn for_cases(n: usize, seed: u64, mut f: impl FnMut(&mut Pcg64, usize)) {
+    for i in 0..n {
+        let mut rng = Pcg64::new(seed ^ (i as u64).wrapping_mul(0x9e3779b97f4a7c15), i as u64);
+        f(&mut rng, i);
+    }
+}
+
+#[test]
+fn prop_apps_have_sane_physics() {
+    let spec = Spec::load_default().unwrap();
+    // Every app in every suite at random clock configs: time decreases
+    // with SM clock, power increases, energy positive, utilization in
+    // range. This sweeps the entire generative model.
+    let mut all: Vec<(String, String)> = Vec::new();
+    for (sname, s) in &spec.suites {
+        for a in &s.apps {
+            all.push((sname.clone(), a.name.clone()));
+        }
+    }
+    for_cases(120, 0xbeef, |rng, i| {
+        let (suite, name) = &all[(rng.below(all.len() as u64)) as usize];
+        let app = make_app(&spec, suite, name).unwrap();
+        let mem = rng.below(5) as usize;
+        let g1 = spec.gears.sm_gear_min + rng.below(98) as usize;
+        let g2 = (g1 + 1 + rng.below(8) as usize).min(spec.gears.sm_gear_max);
+        let p1 = app.op_point(&spec, g1, mem);
+        let p2 = app.op_point(&spec, g2, mem);
+        assert!(p2.t_iter_s <= p1.t_iter_s + 1e-12, "case {i}: time not monotone");
+        assert!(p2.power_w >= p1.power_w - 1e-9, "case {i}: power not monotone");
+        for p in [&p1, &p2] {
+            assert!(p.energy_j > 0.0 && p.power_w > 0.0);
+            assert!((0.0..=1.0).contains(&p.util_sm));
+            assert!((0.0..=1.0).contains(&p.util_mem));
+        }
+    });
+}
+
+#[test]
+fn prop_oracle_dominates_random_configs() {
+    let spec = Spec::load_default().unwrap();
+    let obj = Objective::paper_default();
+    for_cases(40, 0xcafe, |rng, i| {
+        let suite = ["aibench", "gnns"][rng.below(2) as usize];
+        let apps = &spec.suites[suite].apps;
+        let name = &apps[rng.below(apps.len() as u64) as usize].name;
+        let app = make_app(&spec, suite, name).unwrap();
+        let orc = gpoeo::coordinator::oracle_full(&app, &spec, obj);
+        let orc_score = obj.score(orc.energy_ratio, orc.time_ratio);
+        // No random config may beat the oracle under the objective.
+        for _ in 0..20 {
+            let g = spec.gears.sm_gear_min + rng.below(99) as usize;
+            let m = rng.below(5) as usize;
+            let (e, t) = app.ratios_vs_default(&spec, g, m);
+            assert!(
+                obj.score(e, t) >= orc_score - 1e-9,
+                "case {i}: config ({g},{m}) beats the oracle"
+            );
+        }
+    });
+}
+
+#[test]
+fn prop_golden_section_finds_noisy_quadratic_minimum() {
+    for_cases(60, 0xdead, |rng, i| {
+        let opt = 20.0 + rng.next_f64() * 90.0; // true optimum
+        let curv = 2e-4 + rng.next_f64() * 2e-3;
+        let noise = rng.next_f64() * 0.002;
+        let mut local = Pcg64::new(rng.next_u64(), 3);
+        let mut eval = |g: usize| {
+            (g as f64 - opt).powi(2) * curv + 0.8 + noise * local.gauss()
+        };
+        let start = 16 + rng.below(99) as usize;
+        let r = local_search(start, 16, 114, &mut eval);
+        let err = (r.best_gear as f64 - opt).abs();
+        // Tolerance scales with noise/curvature (flat valleys are wide).
+        let tol = 3.0 + (noise / curv).sqrt();
+        assert!(err <= tol, "case {i}: start {start}, opt {opt:.1}, got {} (tol {tol:.1})", r.best_gear);
+    });
+}
+
+#[test]
+fn prop_json_roundtrip_random_values() {
+    fn random_json(rng: &mut Pcg64, depth: usize) -> Json {
+        match if depth == 0 { rng.below(4) } else { rng.below(6) } {
+            0 => Json::Null,
+            1 => Json::Bool(rng.below(2) == 1),
+            2 => Json::Num((rng.next_f64() * 2e6).round() / 1e3 - 1000.0),
+            3 => {
+                let n = rng.below(12) as usize;
+                Json::Str((0..n).map(|_| (b'a' + rng.below(26) as u8) as char).collect())
+            }
+            4 => Json::Arr((0..rng.below(5)).map(|_| random_json(rng, depth - 1)).collect()),
+            _ => Json::Obj(
+                (0..rng.below(5))
+                    .map(|k| (format!("k{k}"), random_json(rng, depth - 1)))
+                    .collect(),
+            ),
+        }
+    }
+    for_cases(200, 0xf00d, |rng, i| {
+        let v = random_json(rng, 3);
+        let compact = Json::parse(&v.to_string()).unwrap();
+        let pretty = Json::parse(&v.to_pretty()).unwrap();
+        assert_eq!(compact, v, "case {i} compact");
+        assert_eq!(pretty, v, "case {i} pretty");
+    });
+}
+
+#[test]
+fn prop_periodogram_finds_random_tone() {
+    for_cases(60, 0xaaaa, |rng, i| {
+        let ts = 0.02 + rng.next_f64() * 0.03;
+        let n = 512;
+        // Keep the tone within resolvable, sub-Nyquist range.
+        let f0 = 0.5 / (n as f64 * ts) * (8.0 + rng.below(100) as f64);
+        if f0 >= 0.45 / ts {
+            return;
+        }
+        let amp = 0.5 + rng.next_f64();
+        let mut noise = Pcg64::new(rng.next_u64(), 5);
+        let sig: Vec<f64> = (0..n)
+            .map(|k| amp * (2.0 * std::f64::consts::PI * f0 * k as f64 * ts).sin()
+                + 0.05 * noise.gauss())
+            .collect();
+        let (freqs, ampls) = gpoeo::signal::periodogram(&sig, ts);
+        let k = stats::argmax(&ampls).unwrap();
+        let rel = (freqs[k] - f0).abs() / f0;
+        assert!(rel < 0.08, "case {i}: f0 {f0:.4} got {:.4}", freqs[k]);
+    });
+}
+
+#[test]
+fn prop_trace_energy_conservation() {
+    // Average sampled power over a long window must track analytic power
+    // for random apps and clock configs (the sampler is the controller's
+    // only window into the device — it must not be biased).
+    let spec = Spec::load_default().unwrap();
+    let spec = std::sync::Arc::new(spec);
+    for_cases(12, 0xbb, |rng, i| {
+        let suites = ["aibench", "gnns", "pytorch_train"];
+        let suite = suites[rng.below(3) as usize];
+        let apps = &spec.suites[suite].apps;
+        let name = apps[rng.below(apps.len() as u64) as usize].name.clone();
+        let app = make_app(&spec, suite, &name).unwrap();
+        if app.aperiodic {
+            return;
+        }
+        let sm = 40 + rng.below(70) as usize;
+        let mem = 2 + rng.below(3) as usize;
+        let op = app.op_point(&spec, sm, mem);
+        let mut st = TraceState::new(&app);
+        let ts = 0.02;
+        let mut acc = 0.0;
+        let n = 6000;
+        for _ in 0..n {
+            st.advance(&app, &spec, sm, mem, ts, 1.0);
+            acc += st.sample(&app, &spec, sm, mem, ts).power_w;
+        }
+        let mean_p = acc / n as f64;
+        let rel = (mean_p - op.power_w).abs() / op.power_w;
+        assert!(rel < 0.06, "case {i}: {name} sampled {mean_p:.1} vs analytic {:.1}", op.power_w);
+    });
+}
+
+#[test]
+fn prop_objective_scores_are_consistent() {
+    for_cases(300, 0xcc, |rng, _| {
+        let e = 0.3 + rng.next_f64() * 1.4;
+        let t = 0.8 + rng.next_f64() * 0.8;
+        let obj = Objective::paper_default();
+        let s = obj.score(e, t);
+        if obj.is_feasible(t) {
+            assert!(s < 9.0);
+            assert_eq!(s, e);
+        } else {
+            assert!(s >= 10.0);
+        }
+        // ED2P and EDP agree at t=1.
+        assert!((Objective::Ed2p.score(e, 1.0) - Objective::Edp.score(e, 1.0)).abs() < 1e-12);
+    });
+}

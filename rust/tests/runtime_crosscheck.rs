@@ -1,0 +1,113 @@
+//! HLO-vs-native twin checks: the PJRT-compiled artifacts must agree with
+//! the in-process Rust implementations (FFT periodogram, GBT inference).
+//! Skipped when `make artifacts` has not run.
+
+use gpoeo::model::{gear_norm_sm, NativeModels, Predictor};
+use gpoeo::runtime::Runtime;
+use gpoeo::sim::{make_suite, Spec};
+
+fn runtime() -> Option<Runtime> {
+    let dir = gpoeo::runtime::default_artifacts_dir();
+    if !dir.join("meta.json").exists() {
+        eprintln!("skipping: run `make artifacts` first");
+        return None;
+    }
+    Some(Runtime::load(&dir).expect("artifacts present but unloadable"))
+}
+
+#[test]
+fn hlo_periodogram_matches_native_fft() {
+    let Some(rt) = runtime() else { return };
+    // A structured signal resembling a composite trace.
+    let n = 1024;
+    let x: Vec<f32> = (0..n)
+        .map(|i| {
+            let t = i as f64 * 0.025;
+            let ph = (t / 1.7).fract();
+            let base = if ph < 0.4 { 0.9 } else { 0.4 };
+            (base + 0.05 * (t * 31.0).sin()) as f32
+        })
+        .collect();
+    let hlo = rt.periodogram_1024(&x).unwrap();
+    let x64: Vec<f64> = x.iter().map(|&v| v as f64).collect();
+    let (_, native) = gpoeo::signal::periodogram(&x64, 0.025);
+    // Native stops at bin n/2 - 1; HLO emits n/2 bins.
+    assert_eq!(hlo.len(), 512);
+    assert_eq!(native.len(), 511);
+    let max = native.iter().cloned().fold(0.0f64, f64::max);
+    for (k, (&h, &nv)) in hlo.iter().zip(&native).enumerate() {
+        assert!(
+            (h as f64 - nv).abs() < 2e-3 * max + 1e-3,
+            "bin {k}: hlo {h} native {nv}"
+        );
+    }
+}
+
+#[test]
+fn hlo_predictor_matches_native_gbt() {
+    let Some(rt) = runtime() else { return };
+    let spec = Spec::load_default().unwrap();
+    let native = NativeModels::load_default().unwrap();
+    for app in make_suite(&spec, "aibench").unwrap().iter().take(6) {
+        let f32s: Vec<f32> = app.features.iter().map(|&v| v as f32).collect();
+        let (he, ht) = rt.predict_sm(&f32s).unwrap();
+        for (i, g) in spec.gears.sm_gears().enumerate() {
+            let mut x = vec![gear_norm_sm(&spec, g)];
+            x.extend_from_slice(&app.features);
+            let ne = native.sm_eng.predict(&x);
+            let nt = native.sm_time.predict(&x);
+            assert!(
+                (he[i] as f64 - ne).abs() < 1e-4,
+                "{} gear {g}: hlo {} native {ne}",
+                app.name,
+                he[i]
+            );
+            assert!((ht[i] as f64 - nt).abs() < 1e-4, "{} gear {g}", app.name);
+        }
+        let (me, mt) = rt.predict_mem(&f32s).unwrap();
+        assert_eq!(me.len(), 5);
+        assert_eq!(mt.len(), 5);
+    }
+}
+
+#[test]
+fn predictor_backends_agree_end_to_end() {
+    let Some(_) = runtime() else { return };
+    let spec = Spec::load_default().unwrap();
+    let hlo = Predictor::load_best().unwrap();
+    assert_eq!(hlo.backend_name(), "hlo-pjrt");
+    let native = Predictor::Native(NativeModels::load_default().unwrap());
+    let app = &make_suite(&spec, "gnns").unwrap()[0];
+    let a = hlo.predict_sm(&spec, &app.features).unwrap();
+    let b = native.predict_sm(&spec, &app.features).unwrap();
+    for i in 0..a.gears.len() {
+        assert!((a.energy_ratio[i] - b.energy_ratio[i]).abs() < 1e-4);
+        assert!((a.time_ratio[i] - b.time_ratio[i]).abs() < 1e-4);
+    }
+    // And both should pick the same gear under the paper objective.
+    let obj = gpoeo::search::Objective::paper_default();
+    assert_eq!(a.best(obj), b.best(obj));
+}
+
+#[test]
+fn hlo_prediction_accuracy_vs_ground_truth() {
+    let Some(rt) = runtime() else { return };
+    let spec = Spec::load_default().unwrap();
+    // Mean APE across the aibench suite must be in the paper's ballpark.
+    let mut errs_e = Vec::new();
+    let mut errs_t = Vec::new();
+    for app in make_suite(&spec, "aibench").unwrap() {
+        let f32s: Vec<f32> = app.features.iter().map(|&v| v as f32).collect();
+        let (he, ht) = rt.predict_sm(&f32s).unwrap();
+        for (i, g) in spec.gears.sm_gears().enumerate() {
+            let (e, t) = app.ratios_vs_default(&spec, g, spec.gears.default_mem_gear);
+            errs_e.push(((he[i] as f64) - e).abs() / e);
+            errs_t.push(((ht[i] as f64) - t).abs() / t);
+        }
+    }
+    let me = gpoeo::util::stats::mean(&errs_e);
+    let mt = gpoeo::util::stats::mean(&errs_t);
+    // Paper: 3.05% / 2.09%. Gate at 6% to absorb simulator noise.
+    assert!(me < 0.06, "energy MAPE {me}");
+    assert!(mt < 0.06, "time MAPE {mt}");
+}
