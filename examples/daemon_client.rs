@@ -13,7 +13,7 @@ use std::sync::Arc;
 fn main() -> anyhow::Result<()> {
     let sock = std::env::temp_dir().join(format!("gpoeo-demo-{}.sock", std::process::id()));
     let spec = Arc::new(Spec::load_default()?);
-    let daemon = Daemon::new(spec);
+    let daemon = Daemon::new(spec, 2);
     let sock_srv = sock.clone();
     std::thread::spawn(move || {
         let _ = daemon.serve(&sock_srv);

@@ -6,7 +6,7 @@
 //! Requires `make artifacts` (AOT-compiled prediction models); without
 //! them the controller transparently falls back to native GBT inference.
 
-use gpoeo::coordinator::{run_policy, savings, DefaultPolicy, Gpoeo, GpoeoCfg};
+use gpoeo::coordinator::{run_sim, savings, DefaultPolicy, Gpoeo, GpoeoCfg};
 use gpoeo::model::Predictor;
 use gpoeo::sim::{find_app, Spec};
 use std::sync::Arc;
@@ -19,9 +19,9 @@ fn main() -> anyhow::Result<()> {
     println!("prediction backend: {}", predictor.backend_name());
 
     let n_iters = 400;
-    let base = run_policy(&spec, &app, &mut DefaultPolicy { ts: 0.025 }, n_iters);
+    let base = run_sim(&spec, &app, &mut DefaultPolicy { ts: 0.025 }, n_iters);
     let mut controller = Gpoeo::new(GpoeoCfg::default(), predictor);
-    let run = run_policy(&spec, &app, &mut controller, n_iters);
+    let run = run_sim(&spec, &app, &mut controller, n_iters);
     let s = savings(&base, &run);
 
     println!(

@@ -4,7 +4,7 @@
 //! end-to-end timings. These are the L3 perf numbers tracked in
 //! EXPERIMENTS.md §Perf.
 
-use gpoeo::coordinator::{run_policy, DefaultPolicy, Gpoeo, GpoeoCfg};
+use gpoeo::coordinator::{run_sim, DefaultPolicy, Gpoeo, GpoeoCfg};
 use gpoeo::model::{NativeModels, Predictor};
 use gpoeo::signal::{calc_period, online_detect, sequence_similarity_error, PeriodCfg, SimilarityCfg};
 use gpoeo::sim::{find_app, SimGpu, Spec};
@@ -107,9 +107,9 @@ fn main() {
         for name in ["AI_I2T", "CLB_MLP", "TSVM"] {
             let app = find_app(&spec, name).unwrap();
             let t0 = Instant::now();
-            let base = run_policy(&spec, &app, &mut DefaultPolicy { ts }, 150);
+            let base = run_sim(&spec, &app, &mut DefaultPolicy { ts }, 150);
             let mut g = Gpoeo::new(GpoeoCfg::default(), predictor.clone());
-            let run = run_policy(&spec, &app, &mut g, 150);
+            let run = run_sim(&spec, &app, &mut g, 150);
             let s = gpoeo::coordinator::savings(&base, &run);
             println!(
                 "e2e: optimize {name:<12} 150 iters: {:>6.2}s wall ({:>7.1}s virtual, saving {:+.1}%)",

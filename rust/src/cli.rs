@@ -1,8 +1,9 @@
 //! CLI dispatch for the `gpoeo` binary.
 
 use crate::coordinator::oracle::{oracle_full, oracle_ordered};
+use crate::device::sim_device;
 use crate::search::Objective;
-use crate::sim::{find_app, SimGpu, Spec};
+use crate::sim::{find_app, Spec};
 use crate::signal::{calc_period_fft_argmax, online_detect, composite_feature, PeriodCfg};
 use crate::util::cli::Args;
 use crate::util::table::{s, Cell, Table};
@@ -14,6 +15,7 @@ pub fn dispatch(args: &Args) -> anyhow::Result<()> {
         Some("calibrate") => cmd_calibrate(args),
         Some("detect") => cmd_detect(args),
         Some("run") => crate::coordinator::cli_run(args),
+        Some("sweep") => crate::coordinator::cli_sweep(args),
         Some("experiment") => crate::experiments::cli_experiment(args),
         Some("daemon") => crate::coordinator::cli_daemon(args),
         Some(other) => anyhow::bail!("unknown subcommand '{other}'; see --help"),
@@ -35,11 +37,17 @@ SUBCOMMANDS:
   calibrate [--suite S]        ground-truth coefficients + oracle savings
   detect --app A [--sm-gear G] period detection on a simulated trace
   run --app A [--objective O]  GPOEO online optimization of one app
+  sweep [--parallel N]         all-app sweep on a worker fleet; records
+                               per-app savings + wall clock in
+                               BENCH_sweep.json
+                               (--suite S | --apps A,B  --policy P
+                                --iters N --quick --bench PATH)
   experiment <id>              regenerate a paper table/figure
                                (fig1 fig2 fig3 fig5 fig6 fig7 fig8 fig9
                                 fig10 fig11 fig12 fig13 table3 fig14
                                 fig15 headline | all)
-  daemon [--socket PATH]       Begin/End API server (micro-intrusive mode)
+  daemon [--socket PATH]       Begin/End API server (micro-intrusive
+                               mode; --workers N fleet threads)
 
 COMMON OPTIONS:
   --artifacts DIR              AOT artifact directory (default: artifacts)
@@ -142,7 +150,7 @@ fn cmd_detect(args: &Args) -> anyhow::Result<()> {
     let ts = args.opt_f64("ts", 0.025)?;
     let dur = args.opt_f64("duration", 0.0)?;
 
-    let mut gpu = SimGpu::new(spec.clone(), app);
+    let mut gpu = sim_device(&spec, &app);
     gpu.set_sm_gear(sm);
     gpu.set_mem_gear(mem);
     let truth = gpu.true_period();

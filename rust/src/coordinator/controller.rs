@@ -21,10 +21,10 @@
 //!    power); on fluctuation beyond the threshold, reset to default
 //!    clocks and restart from step 1.
 
+use crate::device::Device;
 use crate::model::Predictor;
 use crate::search::{local_search, Objective, SearchResult};
 use crate::signal::{composite_feature, online_detect_with, PeriodCfg};
-use crate::sim::SimGpu;
 use crate::util::stats::mean;
 use std::sync::Arc;
 
@@ -181,7 +181,7 @@ impl Gpoeo {
 
     /// Measure (avg power, IPS) over `window_s` at the current clocks,
     /// with a counter session active.
-    fn probe_measure(&mut self, gpu: &mut SimGpu, window_s: f64) -> (f64, f64) {
+    fn probe_measure(&mut self, gpu: &mut dyn Device, window_s: f64) -> (f64, f64) {
         // Settle after a clock change.
         gpu.advance(self.cfg.settle_s);
         gpu.start_counter_session();
@@ -202,7 +202,7 @@ impl Gpoeo {
 
     /// Average power over `window_s` without a counter session (used by
     /// the monitor to establish the post-optimization reference).
-    fn plain_power(&mut self, gpu: &mut SimGpu, window_s: f64) -> f64 {
+    fn plain_power(&mut self, gpu: &mut dyn Device, window_s: f64) -> f64 {
         let n = (window_s / self.cfg.ts).ceil() as usize;
         let mut acc = 0.0;
         for _ in 0..n {
@@ -214,8 +214,8 @@ impl Gpoeo {
 
     /// Steps 2–4 of the lifecycle, run synchronously once the period is
     /// known: feature measurement, prediction, memory search, SM search.
-    fn measure_and_optimize(&mut self, gpu: &mut SimGpu) -> anyhow::Result<f64> {
-        let spec = gpu.spec.clone();
+    fn measure_and_optimize(&mut self, gpu: &mut dyn Device) -> anyhow::Result<f64> {
+        let spec = gpu.spec().clone();
         let tax = spec.profiling_tax.counter_time_mult;
         let feat_window = self.period_s * tax;
 
@@ -375,7 +375,7 @@ impl Gpoeo {
         Ok(p_ref)
     }
 
-    fn restart_sampling(&mut self, gpu: &mut SimGpu) {
+    fn restart_sampling(&mut self, gpu: &mut dyn Device) {
         self.power.clear();
         self.util_sm.clear();
         self.util_mem.clear();
@@ -387,7 +387,7 @@ impl Gpoeo {
         };
     }
 
-    fn enter_monitor(&mut self, gpu: &mut SimGpu, p_ref: f64) {
+    fn enter_monitor(&mut self, gpu: &mut dyn Device, p_ref: f64) {
         // Aperiodic traces are random segment walks: short windows jump
         // around the mean by construction, so monitor over a much longer
         // horizon to avoid spurious re-optimizations.
@@ -404,7 +404,7 @@ impl Gpoeo {
         };
     }
 
-    fn finish_detection(&mut self, gpu: &mut SimGpu) {
+    fn finish_detection(&mut self, gpu: &mut dyn Device) {
         self.stats.true_period_s = gpu.true_period();
         match self.measure_and_optimize(gpu) {
             Ok(p_ref) => self.enter_monitor(gpu, p_ref),
@@ -422,7 +422,7 @@ impl crate::coordinator::Policy for Gpoeo {
         "gpoeo"
     }
 
-    fn tick(&mut self, gpu: &mut SimGpu) {
+    fn tick(&mut self, gpu: &mut dyn Device) {
         let ts = self.cfg.ts;
         match self.phase {
             Phase::Sampling { until_s } => {

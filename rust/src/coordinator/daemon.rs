@@ -16,63 +16,47 @@
 //! <- RESULT <energy_j> <time_s> <iterations> <sm_gear> <mem_gear>
 //! ```
 //!
-//! One session at a time per connection; concurrent connections get their
-//! own simulated device (one GPU each — the paper's setting).
+//! One session at a time per connection. Sessions from all connections
+//! are served by a shared [`Fleet`]: each fleet worker owns one
+//! [`Predictor`](crate::model::Predictor) (the PJRT HLO executables
+//! compile once per worker, not once per connection), and concurrent
+//! clients are spread across the pool. Every failure path answers with
+//! an `ERR <reason>` line — a client never hangs on a silent close.
 
-use crate::coordinator::{Gpoeo, GpoeoCfg, Policy};
-use crate::model::Predictor;
-use crate::sim::{find_app, SimGpu, Spec};
-// NOTE: the xla PJRT client is not Send (Rc internals), so each
-// connection thread builds its own Predictor — HLO executables compile
-// once per connection, then serve every session on that connection.
+use crate::coordinator::{Fleet, GpoeoCfg, SessionHandle};
+use crate::sim::{find_app, Spec};
 use std::io::{BufRead, BufReader, Write};
 use std::os::unix::net::{UnixListener, UnixStream};
 use std::path::Path;
 use std::sync::Arc;
 
 pub struct Daemon {
-    spec: Arc<Spec>,
-}
-
-struct Session {
-    gpu: SimGpu,
-    controller: Gpoeo,
-    target_iters: u64,
-}
-
-impl Session {
-    /// Advance the session by a chunk of virtual time.
-    fn step(&mut self) {
-        self.controller.tick(&mut self.gpu);
-    }
-
-    fn done(&self) -> bool {
-        self.gpu.iterations() >= self.target_iters
-    }
+    fleet: Arc<Fleet>,
 }
 
 impl Daemon {
-    pub fn new(spec: Arc<Spec>) -> Daemon {
-        Daemon { spec }
+    /// Build a daemon backed by a fleet of `workers` threads.
+    pub fn new(spec: Arc<Spec>, workers: usize) -> Daemon {
+        Daemon {
+            fleet: Arc::new(Fleet::new(spec, workers)),
+        }
     }
 
-    /// Serve forever on a Unix socket (one thread per connection).
+    /// Serve forever on a Unix socket (one lightweight thread per
+    /// connection; the heavy lifting happens on the fleet workers).
     pub fn serve(&self, socket_path: &Path) -> anyhow::Result<()> {
         let _ = std::fs::remove_file(socket_path);
         let listener = UnixListener::bind(socket_path)?;
-        eprintln!("gpoeo daemon listening on {}", socket_path.display());
+        eprintln!(
+            "gpoeo daemon listening on {} ({} fleet workers)",
+            socket_path.display(),
+            self.fleet.num_workers()
+        );
         for stream in listener.incoming() {
             let stream = stream?;
-            let spec = self.spec.clone();
+            let fleet = self.fleet.clone();
             std::thread::spawn(move || {
-                let predictor = match Predictor::load_best() {
-                    Ok(p) => Arc::new(p),
-                    Err(e) => {
-                        eprintln!("daemon: no predictor available: {e}");
-                        return;
-                    }
-                };
-                if let Err(e) = handle_connection(stream, spec, predictor) {
+                if let Err(e) = handle_connection(stream, fleet) {
                     eprintln!("daemon connection error: {e}");
                 }
             });
@@ -81,72 +65,61 @@ impl Daemon {
     }
 }
 
-fn handle_connection(
-    stream: UnixStream,
-    spec: Arc<Spec>,
-    predictor: Arc<Predictor>,
-) -> anyhow::Result<()> {
+fn handle_connection(stream: UnixStream, fleet: Arc<Fleet>) -> anyhow::Result<()> {
     let mut writer = stream.try_clone()?;
     let reader = BufReader::new(stream);
-    let mut session: Option<Session> = None;
+    // The connection's active session, if any. Dropped (aborted) if the
+    // client disconnects without END.
+    let mut session: Option<SessionHandle> = None;
 
     for line in reader.lines() {
         let line = line?;
         let mut parts = line.split_whitespace();
         match parts.next() {
             Some("BEGIN") => {
-                let name = parts.next().unwrap_or("");
-                let iters: u64 = parts.next().and_then(|s| s.parse().ok()).unwrap_or(300);
-                match find_app(&spec, name) {
-                    Ok(app) => {
-                        let gpu = SimGpu::new(spec.clone(), app);
-                        let controller = Gpoeo::new(GpoeoCfg::default(), predictor.clone());
-                        session = Some(Session {
-                            gpu,
-                            controller,
-                            target_iters: iters,
-                        });
-                        writeln!(writer, "OK session started")?;
+                if session.is_some() {
+                    writeln!(writer, "ERR session already active (END it first)")?;
+                } else {
+                    let name = parts.next().unwrap_or("");
+                    let iters: u64 = parts.next().and_then(|s| s.parse().ok()).unwrap_or(300);
+                    let started = find_app(fleet.spec(), name)
+                        .and_then(|app| fleet.begin(app, GpoeoCfg::default(), iters));
+                    match started {
+                        Ok(h) => {
+                            session = Some(h);
+                            writeln!(writer, "OK session started")?;
+                        }
+                        Err(e) => writeln!(writer, "ERR {e}")?,
                     }
+                }
+            }
+            Some("STATUS") => {
+                let status = match session.as_ref() {
+                    // Drive a slice of virtual time per STATUS poll.
+                    Some(h) => h.step(200),
+                    None => Err(anyhow::anyhow!("no session")),
+                };
+                match status {
+                    Ok(st) => writeln!(
+                        writer,
+                        "STATUS {} {:.3} {:.1} {} {}",
+                        st.iterations, st.time_s, st.energy_j, st.sm_gear, st.mem_gear
+                    )?,
                     Err(e) => writeln!(writer, "ERR {e}")?,
                 }
             }
-            Some("STATUS") => match session.as_mut() {
-                Some(s) => {
-                    // Drive a slice of virtual time per STATUS poll.
-                    for _ in 0..200 {
-                        if s.done() {
-                            break;
-                        }
-                        s.step();
-                    }
-                    writeln!(
-                        writer,
-                        "STATUS {} {:.3} {:.1} {} {}",
-                        s.gpu.iterations(),
-                        s.gpu.time_s(),
-                        s.gpu.true_energy_j(),
-                        s.gpu.sm_gear(),
-                        s.gpu.mem_gear()
-                    )?;
-                }
-                None => writeln!(writer, "ERR no session")?,
-            },
             Some("END") => match session.take() {
-                Some(mut s) => {
-                    while !s.done() {
-                        s.step();
-                    }
-                    writeln!(
+                // end() blocks this connection until the run finishes,
+                // but the fleet worker drives it in slices, so other
+                // connections' sessions keep being served meanwhile.
+                Some(h) => match h.end() {
+                    Ok(st) => writeln!(
                         writer,
                         "RESULT {:.1} {:.3} {} {} {}",
-                        s.gpu.true_energy_j(),
-                        s.gpu.time_s(),
-                        s.gpu.iterations(),
-                        s.gpu.sm_gear(),
-                        s.gpu.mem_gear()
-                    )?;
-                }
+                        st.energy_j, st.time_s, st.iterations, st.sm_gear, st.mem_gear
+                    )?,
+                    Err(e) => writeln!(writer, "ERR {e}")?,
+                },
                 None => writeln!(writer, "ERR no session")?,
             },
             Some("QUIT") | None => break,
@@ -160,7 +133,51 @@ fn handle_connection(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::model::Predictor;
     use std::io::BufRead;
+
+    /// Start a daemon on a fresh socket; returns the socket path.
+    fn spawn_daemon(tag: &str, workers: usize) -> std::path::PathBuf {
+        let spec = Arc::new(Spec::load_default().unwrap());
+        let daemon = Daemon::new(spec, workers);
+        let dir = std::env::temp_dir().join(format!("gpoeo-test-{}-{tag}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let sock = dir.join("d.sock");
+        let sock2 = sock.clone();
+        std::thread::spawn(move || {
+            let _ = daemon.serve(&sock2);
+        });
+        for _ in 0..100 {
+            if sock.exists() {
+                break;
+            }
+            std::thread::sleep(std::time::Duration::from_millis(10));
+        }
+        sock
+    }
+
+    struct Client {
+        w: UnixStream,
+        r: BufReader<UnixStream>,
+    }
+
+    impl Client {
+        fn connect(sock: &Path) -> Client {
+            let stream = UnixStream::connect(sock).unwrap();
+            let w = stream.try_clone().unwrap();
+            Client {
+                w,
+                r: BufReader::new(stream),
+            }
+        }
+
+        fn roundtrip(&mut self, cmd: &str) -> String {
+            writeln!(self.w, "{cmd}").unwrap();
+            let mut line = String::new();
+            self.r.read_line(&mut line).unwrap();
+            line
+        }
+    }
 
     #[test]
     fn begin_status_end_roundtrip() {
@@ -168,48 +185,85 @@ mod tests {
             eprintln!("skipping: artifacts missing");
             return;
         }
-        let spec = Arc::new(Spec::load_default().unwrap());
-        let daemon = Daemon::new(spec);
-        let dir = std::env::temp_dir().join(format!("gpoeo-test-{}", std::process::id()));
-        std::fs::create_dir_all(&dir).unwrap();
-        let sock = dir.join("d.sock");
-        let sock2 = sock.clone();
-        std::thread::spawn(move || {
-            let _ = daemon.serve(&sock2);
-        });
-        // Wait for the listener.
-        for _ in 0..100 {
-            if sock.exists() {
-                break;
-            }
-            std::thread::sleep(std::time::Duration::from_millis(10));
-        }
-        let stream = UnixStream::connect(&sock).unwrap();
-        let mut w = stream.try_clone().unwrap();
-        let mut r = BufReader::new(stream);
-        let mut line = String::new();
+        let sock = spawn_daemon("roundtrip", 2);
+        let mut c = Client::connect(&sock);
 
-        writeln!(w, "BEGIN AI_TS 40").unwrap();
-        r.read_line(&mut line).unwrap();
+        let line = c.roundtrip("BEGIN AI_TS 40");
         assert!(line.starts_with("OK"), "{line}");
 
-        line.clear();
-        writeln!(w, "STATUS").unwrap();
-        r.read_line(&mut line).unwrap();
+        let line = c.roundtrip("STATUS");
         assert!(line.starts_with("STATUS"), "{line}");
 
-        line.clear();
-        writeln!(w, "END").unwrap();
-        r.read_line(&mut line).unwrap();
+        let line = c.roundtrip("END");
         assert!(line.starts_with("RESULT"), "{line}");
         let parts: Vec<&str> = line.split_whitespace().collect();
         let iters: u64 = parts[3].parse().unwrap();
         assert!(iters >= 40);
 
-        line.clear();
-        writeln!(w, "BOGUS").unwrap();
-        r.read_line(&mut line).unwrap();
+        let line = c.roundtrip("BOGUS");
         assert!(line.starts_with("ERR"));
-        writeln!(w, "QUIT").unwrap();
+        writeln!(c.w, "QUIT").unwrap();
+    }
+
+    #[test]
+    fn protocol_error_paths_always_answer() {
+        // None of these paths needs model artifacts: the daemon must
+        // answer ERR (never close silently) regardless.
+        let sock = spawn_daemon("errors", 1);
+        let mut c = Client::connect(&sock);
+
+        let line = c.roundtrip("STATUS");
+        assert!(line.starts_with("ERR no session"), "{line}");
+
+        let line = c.roundtrip("END");
+        assert!(line.starts_with("ERR no session"), "{line}");
+
+        let line = c.roundtrip("BEGIN NOT_AN_APP 10");
+        assert!(line.starts_with("ERR"), "{line}");
+        // Unknown app or missing predictor — either way a reason arrives.
+        assert!(line.trim().len() > "ERR".len(), "reason required: {line}");
+
+        let line = c.roundtrip("BEGIN");
+        assert!(line.starts_with("ERR"), "{line}");
+
+        writeln!(c.w, "QUIT").unwrap();
+    }
+
+    #[test]
+    fn double_begin_is_rejected() {
+        if Predictor::load_best().is_err() {
+            eprintln!("skipping: artifacts missing");
+            return;
+        }
+        let sock = spawn_daemon("double", 1);
+        let mut c = Client::connect(&sock);
+
+        let line = c.roundtrip("BEGIN AI_TS 30");
+        assert!(line.starts_with("OK"), "{line}");
+        let line = c.roundtrip("BEGIN AI_FE 30");
+        assert!(line.starts_with("ERR session already active"), "{line}");
+        // The original session is untouched and still ENDs normally.
+        let line = c.roundtrip("END");
+        assert!(line.starts_with("RESULT"), "{line}");
+        writeln!(c.w, "QUIT").unwrap();
+    }
+
+    #[test]
+    fn concurrent_connections_share_the_fleet() {
+        if Predictor::load_best().is_err() {
+            eprintln!("skipping: artifacts missing");
+            return;
+        }
+        let sock = spawn_daemon("concurrent", 2);
+        let mut clients: Vec<Client> = (0..3).map(|_| Client::connect(&sock)).collect();
+        for (c, app) in clients.iter_mut().zip(["AI_TS", "AI_FE", "AI_OBJ"]) {
+            let line = c.roundtrip(&format!("BEGIN {app} 30"));
+            assert!(line.starts_with("OK"), "{app}: {line}");
+        }
+        for c in &mut clients {
+            let line = c.roundtrip("END");
+            assert!(line.starts_with("RESULT"), "{line}");
+            writeln!(c.w, "QUIT").unwrap();
+        }
     }
 }

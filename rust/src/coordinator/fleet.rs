@@ -1,0 +1,693 @@
+//! Parallel fleet engine: many (app × policy) sessions across a worker
+//! pool (DESIGN.md §6).
+//!
+//! The paper evaluates GPOEO one training job at a time; a production
+//! optimizer service faces a *fleet* — 71-app sweeps, many concurrent
+//! Begin/End clients. Two constraints shape the design:
+//!
+//! - The PJRT client inside [`Predictor::Hlo`] is not `Send` (`Rc`
+//!   internals), so a predictor can never migrate between threads.
+//!   Each worker thread therefore builds **one** predictor, on first
+//!   use, and serves every job and session routed to it — the HLO
+//!   executables compile at most once per worker, not once per
+//!   connection (the old daemon recompiled them for every client).
+//! - Simulated devices are deterministic given (spec, app): a session's
+//!   outcome is independent of which worker runs it or what else runs
+//!   concurrently, so a parallel sweep is bit-identical to a serial one
+//!   and results can be returned in deterministic (submission) order.
+//!
+//! Two modes of use:
+//! - [`Fleet::run_jobs`] — batch: run a vector of [`SweepJob`]s to
+//!   completion, results in submission order (`gpoeo sweep --parallel`).
+//! - [`Fleet::begin`] / [`SessionHandle`] — interactive: long-lived
+//!   sessions pinned to a worker, driven incrementally (the daemon's
+//!   Begin/Status/End protocol).
+
+use crate::coordinator::{
+    run_budget_s, run_sim, savings, DefaultPolicy, Gpoeo, GpoeoCfg, GpoeoStats, Odpp, OdppCfg,
+    Policy, RunResult, Savings,
+};
+use crate::device::{boxed_sim_device, Device};
+use crate::model::Predictor;
+use crate::sim::{AppParams, Spec};
+use std::cell::OnceCell;
+use std::collections::{HashMap, VecDeque};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+/// Which policy a sweep job runs (built inside the worker, where the
+/// worker's predictor lives).
+#[derive(Clone)]
+pub enum PolicySpec {
+    /// NVIDIA default scheduling (the baseline itself).
+    Default,
+    /// The GPOEO online controller.
+    Gpoeo(GpoeoCfg),
+    /// The ODPP baseline.
+    Odpp(OdppCfg),
+}
+
+impl PolicySpec {
+    pub fn label(&self) -> &'static str {
+        match self {
+            PolicySpec::Default => "default",
+            PolicySpec::Gpoeo(_) => "gpoeo",
+            PolicySpec::Odpp(_) => "odpp",
+        }
+    }
+}
+
+/// One unit of sweep work: run `policy` on `app` for `n_iters` work
+/// units, scored against a fresh NVIDIA-default baseline.
+#[derive(Clone)]
+pub struct SweepJob {
+    pub app: AppParams,
+    pub policy: PolicySpec,
+    pub n_iters: u64,
+}
+
+/// Outcome of one [`SweepJob`].
+pub struct JobOutcome {
+    pub base: RunResult,
+    pub run: RunResult,
+    pub savings: Savings,
+    pub stats: Option<GpoeoStats>,
+}
+
+/// Telemetry snapshot of an interactive session.
+#[derive(Debug, Clone, Copy)]
+pub struct SessionStatus {
+    pub iterations: u64,
+    pub time_s: f64,
+    pub energy_j: f64,
+    pub sm_gear: usize,
+    pub mem_gear: usize,
+    pub done: bool,
+}
+
+/// Session parameters shipped to a worker by [`Fleet::begin`].
+struct BeginReq {
+    app: AppParams,
+    cfg: GpoeoCfg,
+    target_iters: u64,
+}
+
+// Large payloads are boxed so the enum stays small for the frequent
+// Step/End/Drop traffic.
+enum Cmd {
+    Job {
+        /// Index of the worker the job was sent to (echoed back so the
+        /// dispatcher knows which worker freed up).
+        worker: usize,
+        idx: usize,
+        job: Box<SweepJob>,
+        reply: Sender<(usize, usize, anyhow::Result<JobOutcome>)>,
+    },
+    Begin {
+        id: u64,
+        req: Box<BeginReq>,
+        reply: Sender<anyhow::Result<()>>,
+    },
+    Step {
+        id: u64,
+        max_ticks: u64,
+        reply: Sender<anyhow::Result<SessionStatus>>,
+    },
+    End {
+        id: u64,
+        /// Errant-policy virtual-time cap, computed on the first slice
+        /// and carried through the re-enqueued slices.
+        budget_s: Option<f64>,
+        reply: Sender<anyhow::Result<SessionStatus>>,
+    },
+    Drop {
+        id: u64,
+    },
+    /// Exit the worker loop even if session handles still hold sender
+    /// clones (see `Fleet::drop`).
+    Shutdown,
+}
+
+struct WorkerHandle {
+    tx: Option<Sender<Cmd>>,
+    /// Interactive sessions currently pinned to this worker (for
+    /// least-loaded placement).
+    active: Arc<AtomicUsize>,
+    join: Option<JoinHandle<()>>,
+}
+
+impl WorkerHandle {
+    fn send(&self, cmd: Cmd) -> anyhow::Result<()> {
+        self.tx
+            .as_ref()
+            .expect("fleet worker already shut down")
+            .send(cmd)
+            .map_err(|_| anyhow::anyhow!("fleet worker thread is gone"))
+    }
+}
+
+/// A pool of worker threads, each owning one predictor, serving sweep
+/// jobs and interactive sessions.
+pub struct Fleet {
+    spec: Arc<Spec>,
+    workers: Vec<WorkerHandle>,
+    next_session: AtomicU64,
+}
+
+impl Fleet {
+    /// Spawn `workers` threads (at least one). Each worker builds its
+    /// own [`Predictor`] on first use — an ODPP- or default-only
+    /// workload never pays the HLO compile, and a failed load only
+    /// surfaces when a job or session actually needs prediction.
+    pub fn new(spec: Arc<Spec>, workers: usize) -> Fleet {
+        let n = workers.max(1);
+        let workers = (0..n)
+            .map(|i| {
+                let (tx, rx) = channel();
+                let spec = spec.clone();
+                // The worker keeps a sender to its own queue so a long
+                // END can re-enqueue itself in slices (see worker_loop).
+                let self_tx = tx.clone();
+                let join = std::thread::Builder::new()
+                    .name(format!("fleet-worker-{i}"))
+                    .spawn(move || worker_loop(spec, rx, self_tx))
+                    .expect("failed to spawn fleet worker");
+                WorkerHandle {
+                    tx: Some(tx),
+                    active: Arc::new(AtomicUsize::new(0)),
+                    join: Some(join),
+                }
+            })
+            .collect();
+        Fleet {
+            spec,
+            workers,
+            next_session: AtomicU64::new(1),
+        }
+    }
+
+    pub fn spec(&self) -> &Arc<Spec> {
+        &self.spec
+    }
+
+    pub fn num_workers(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Run a batch of jobs across the pool. Blocks until every job
+    /// finishes; results come back in submission order, and (for the
+    /// deterministic simulator) are identical to a serial run.
+    ///
+    /// Dispatch is completion-driven — one outstanding job per worker,
+    /// each completion pulls the next job from the shared queue — so the
+    /// wall-clock tracks total-work / workers even when job costs are
+    /// wildly uneven (they are: `default_iters` varies per app).
+    pub fn run_jobs(&self, jobs: Vec<SweepJob>) -> Vec<anyhow::Result<JobOutcome>> {
+        let n = jobs.len();
+        let mut out: Vec<Option<anyhow::Result<JobOutcome>>> = (0..n).map(|_| None).collect();
+        let (tx, rx) = channel();
+        let mut queue: VecDeque<(usize, SweepJob)> = jobs.into_iter().enumerate().collect();
+        let mut inflight = 0usize;
+        let mut per_worker: Vec<usize> = vec![0; self.workers.len()];
+
+        for (wi, w) in self.workers.iter().enumerate() {
+            if feed_worker(w, wi, &mut queue, &tx, &mut out) {
+                inflight += 1;
+                per_worker[wi] += 1;
+            }
+        }
+        while inflight > 0 {
+            match rx.recv_timeout(std::time::Duration::from_millis(500)) {
+                Ok((wi, idx, outcome)) => {
+                    inflight -= 1;
+                    per_worker[wi] -= 1;
+                    out[idx] = Some(outcome);
+                    if feed_worker(&self.workers[wi], wi, &mut queue, &tx, &mut out) {
+                        inflight += 1;
+                        per_worker[wi] += 1;
+                    }
+                }
+                Err(RecvTimeoutError::Timeout) => {
+                    // Our own `tx` clone keeps the channel open, so a
+                    // worker dying mid-job never disconnects it — detect
+                    // that case explicitly instead of blocking forever.
+                    let stalled = per_worker.iter().enumerate().all(|(wi, &c)| {
+                        c == 0
+                            || self.workers[wi]
+                                .join
+                                .as_ref()
+                                .map_or(true, |j| j.is_finished())
+                    });
+                    if stalled {
+                        break;
+                    }
+                }
+                Err(RecvTimeoutError::Disconnected) => break,
+            }
+        }
+        out.into_iter()
+            .map(|o| o.unwrap_or_else(|| Err(anyhow::anyhow!("fleet worker died mid-job"))))
+            .collect()
+    }
+
+    /// Start an interactive GPOEO session on the least-loaded worker.
+    /// Fails if that worker has no predictor (`no predictor: ...`).
+    pub fn begin(
+        &self,
+        app: AppParams,
+        cfg: GpoeoCfg,
+        target_iters: u64,
+    ) -> anyhow::Result<SessionHandle> {
+        let w = self
+            .workers
+            .iter()
+            .min_by_key(|w| w.active.load(Ordering::SeqCst))
+            .expect("fleet has at least one worker");
+        let id = self.next_session.fetch_add(1, Ordering::SeqCst);
+        let (reply, rx) = channel();
+        w.send(Cmd::Begin {
+            id,
+            req: Box::new(BeginReq {
+                app,
+                cfg,
+                target_iters,
+            }),
+            reply,
+        })?;
+        rx.recv()
+            .map_err(|_| anyhow::anyhow!("fleet worker thread is gone"))??;
+        w.active.fetch_add(1, Ordering::SeqCst);
+        Ok(SessionHandle {
+            id,
+            tx: w.tx.as_ref().expect("worker is live").clone(),
+            active: w.active.clone(),
+            open: true,
+        })
+    }
+}
+
+impl Drop for Fleet {
+    fn drop(&mut self) {
+        // An explicit Shutdown (processed after any already-queued
+        // commands) rather than just hanging up: outstanding
+        // SessionHandles hold sender clones, so channel disconnection
+        // alone would leave the worker loops — and this join — blocked
+        // forever. After shutdown, surviving handles get an error from
+        // their next call instead of an answer.
+        for w in &mut self.workers {
+            if let Some(tx) = &w.tx {
+                let _ = tx.send(Cmd::Shutdown);
+            }
+            w.tx.take();
+        }
+        for w in &mut self.workers {
+            if let Some(j) = w.join.take() {
+                let _ = j.join();
+            }
+        }
+    }
+}
+
+/// Handle to an interactive session pinned to one fleet worker. Dropping
+/// the handle without [`end`](SessionHandle::end) aborts the session.
+pub struct SessionHandle {
+    id: u64,
+    tx: Sender<Cmd>,
+    active: Arc<AtomicUsize>,
+    open: bool,
+}
+
+impl SessionHandle {
+    fn roundtrip(
+        &self,
+        make: impl FnOnce(Sender<anyhow::Result<SessionStatus>>) -> Cmd,
+    ) -> anyhow::Result<SessionStatus> {
+        let (reply, rx) = channel();
+        self.tx
+            .send(make(reply))
+            .map_err(|_| anyhow::anyhow!("fleet worker thread is gone"))?;
+        rx.recv()
+            .map_err(|_| anyhow::anyhow!("fleet worker thread is gone"))?
+    }
+
+    /// Advance the session by at most `max_ticks` controller ticks
+    /// (stops early once the iteration target is reached).
+    pub fn step(&self, max_ticks: u64) -> anyhow::Result<SessionStatus> {
+        let id = self.id;
+        self.roundtrip(|reply| Cmd::Step {
+            id,
+            max_ticks,
+            reply,
+        })
+    }
+
+    /// Drive the session to its iteration target and release it.
+    pub fn end(mut self) -> anyhow::Result<SessionStatus> {
+        self.open = false;
+        let id = self.id;
+        let r = self.roundtrip(|reply| Cmd::End {
+            id,
+            budget_s: None,
+            reply,
+        });
+        // Only decrement once the run has actually finished — a worker
+        // mid-END must keep looking loaded to least-loaded placement.
+        self.active.fetch_sub(1, Ordering::SeqCst);
+        r
+    }
+}
+
+impl Drop for SessionHandle {
+    fn drop(&mut self) {
+        if self.open {
+            let _ = self.tx.send(Cmd::Drop { id: self.id });
+            self.active.fetch_sub(1, Ordering::SeqCst);
+        }
+    }
+}
+
+/// Hand `w` the next queued job, if any. Returns true when a job went
+/// out; on a dead worker the job is recorded as failed and no retry is
+/// attempted (the remaining queue drains through the other workers).
+fn feed_worker(
+    w: &WorkerHandle,
+    wi: usize,
+    queue: &mut VecDeque<(usize, SweepJob)>,
+    reply: &Sender<(usize, usize, anyhow::Result<JobOutcome>)>,
+    out: &mut [Option<anyhow::Result<JobOutcome>>],
+) -> bool {
+    let Some((idx, job)) = queue.pop_front() else {
+        return false;
+    };
+    match w.send(Cmd::Job {
+        worker: wi,
+        idx,
+        job: Box::new(job),
+        reply: reply.clone(),
+    }) {
+        Ok(()) => true,
+        Err(e) => {
+            out[idx] = Some(Err(e));
+            false
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Worker side.
+// ---------------------------------------------------------------------
+
+/// Ticks per END slice: enough to make real progress per hand-off
+/// (hundreds of virtual seconds), small enough that other sessions'
+/// queued commands interleave with sub-second latency.
+const END_SLICE_TICKS: u64 = 20_000;
+
+struct WorkerSession {
+    dev: Box<dyn Device>,
+    controller: Gpoeo,
+    target_iters: u64,
+}
+
+impl WorkerSession {
+    fn done(&self) -> bool {
+        self.dev.iterations() >= self.target_iters
+    }
+
+    fn step(&mut self, max_ticks: u64) {
+        for _ in 0..max_ticks {
+            if self.done() {
+                break;
+            }
+            self.controller.tick(self.dev.as_mut());
+        }
+    }
+
+    /// One bounded slice of the run; true once the session is finished
+    /// (target reached, or the errant-policy budget exhausted).
+    fn slice(&mut self, max_ticks: u64, budget_s: f64) -> bool {
+        for _ in 0..max_ticks {
+            if self.done() || self.dev.time_s() >= budget_s {
+                break;
+            }
+            self.controller.tick(self.dev.as_mut());
+        }
+        self.done() || self.dev.time_s() >= budget_s
+    }
+
+    fn status(&self) -> SessionStatus {
+        SessionStatus {
+            iterations: self.dev.iterations(),
+            time_s: self.dev.time_s(),
+            energy_j: self.dev.true_energy_j(),
+            sm_gear: self.dev.sm_gear(),
+            mem_gear: self.dev.mem_gear(),
+            done: self.done(),
+        }
+    }
+}
+
+fn load_predictor() -> Result<Arc<Predictor>, String> {
+    Predictor::load_best()
+        .map(Arc::new)
+        .map_err(|e| format!("{e:#}"))
+}
+
+fn worker_loop(spec: Arc<Spec>, rx: Receiver<Cmd>, self_tx: Sender<Cmd>) {
+    // One predictor per worker thread — compiled on first use (never,
+    // for an ODPP/default-only workload), then reused by every job and
+    // session this worker runs. Built here (not in the Fleet) because
+    // the PJRT client must not cross threads.
+    let predictor: OnceCell<Result<Arc<Predictor>, String>> = OnceCell::new();
+    let mut sessions: HashMap<u64, WorkerSession> = HashMap::new();
+
+    for cmd in rx {
+        match cmd {
+            Cmd::Job {
+                worker,
+                idx,
+                job,
+                reply,
+            } => {
+                let _ = reply.send((worker, idx, run_job(&spec, &predictor, &job)));
+            }
+            Cmd::Begin { id, req, reply } => {
+                let r = match predictor.get_or_init(load_predictor) {
+                    Ok(p) => {
+                        sessions.insert(
+                            id,
+                            WorkerSession {
+                                dev: boxed_sim_device(&spec, &req.app),
+                                controller: Gpoeo::new(req.cfg, p.clone()),
+                                target_iters: req.target_iters,
+                            },
+                        );
+                        Ok(())
+                    }
+                    Err(e) => Err(anyhow::anyhow!("no predictor: {e}")),
+                };
+                let _ = reply.send(r);
+            }
+            Cmd::Step {
+                id,
+                max_ticks,
+                reply,
+            } => {
+                let r = match sessions.get_mut(&id) {
+                    Some(s) => {
+                        s.step(max_ticks);
+                        Ok(s.status())
+                    }
+                    None => Err(anyhow::anyhow!("no such session")),
+                };
+                let _ = reply.send(r);
+            }
+            Cmd::End {
+                id,
+                budget_s,
+                reply,
+            } => {
+                // Drive one slice, then re-enqueue behind whatever other
+                // commands arrived meanwhile — a long END never
+                // head-of-line blocks the worker's other sessions.
+                let (finished, budget) = match sessions.get_mut(&id) {
+                    Some(s) => {
+                        let b = budget_s.unwrap_or_else(|| {
+                            run_budget_s(s.dev.time_s(), s.target_iters, s.dev.nominal_iter_s())
+                        });
+                        (s.slice(END_SLICE_TICKS, b).then(|| s.status()), b)
+                    }
+                    None => {
+                        let _ = reply.send(Err(anyhow::anyhow!("no such session")));
+                        continue;
+                    }
+                };
+                match finished {
+                    Some(st) => {
+                        sessions.remove(&id);
+                        let _ = reply.send(Ok(st));
+                    }
+                    None => {
+                        let requeued = self_tx.send(Cmd::End {
+                            id,
+                            budget_s: Some(budget),
+                            reply,
+                        });
+                        if requeued.is_err() {
+                            // Shutting down mid-run: release the session;
+                            // the client's end() observes the hangup.
+                            sessions.remove(&id);
+                        }
+                    }
+                }
+            }
+            Cmd::Drop { id } => {
+                sessions.remove(&id);
+            }
+            Cmd::Shutdown => break,
+        }
+    }
+}
+
+fn run_job(
+    spec: &Arc<Spec>,
+    predictor: &OnceCell<Result<Arc<Predictor>, String>>,
+    job: &SweepJob,
+) -> anyhow::Result<JobOutcome> {
+    let base = run_sim(spec, &job.app, &mut DefaultPolicy { ts: 0.025 }, job.n_iters);
+    let (run, stats) = match &job.policy {
+        PolicySpec::Default => (base.clone(), None),
+        PolicySpec::Odpp(cfg) => {
+            let mut p = Odpp::new(cfg.clone());
+            (run_sim(spec, &job.app, &mut p, job.n_iters), None)
+        }
+        PolicySpec::Gpoeo(cfg) => {
+            let p = predictor
+                .get_or_init(load_predictor)
+                .as_ref()
+                .map_err(|e| anyhow::anyhow!("no predictor: {e}"))?;
+            let mut g = Gpoeo::new(cfg.clone(), p.clone());
+            let r = run_sim(spec, &job.app, &mut g, job.n_iters);
+            (r, Some(g.stats.clone()))
+        }
+    };
+    let sv = savings(&base, &run);
+    Ok(JobOutcome {
+        base,
+        run,
+        savings: sv,
+        stats,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::make_suite;
+
+    fn test_jobs(spec: &Arc<Spec>, policy: PolicySpec, n: usize) -> Vec<SweepJob> {
+        make_suite(spec, "aibench")
+            .unwrap()
+            .into_iter()
+            .take(n)
+            .map(|app| SweepJob {
+                app,
+                policy: policy.clone(),
+                n_iters: 40,
+            })
+            .collect()
+    }
+
+    fn assert_same_outcomes(a: &[anyhow::Result<JobOutcome>], b: &[anyhow::Result<JobOutcome>]) {
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(b) {
+            let (x, y) = (x.as_ref().unwrap(), y.as_ref().unwrap());
+            // The simulator is deterministic: parallel placement must not
+            // change a single bit of any result.
+            assert_eq!(x.run.app, y.run.app);
+            assert_eq!(x.run.iterations, y.run.iterations);
+            assert_eq!(x.run.energy_j, y.run.energy_j);
+            assert_eq!(x.run.time_s, y.run.time_s);
+            assert_eq!(x.run.final_sm_gear, y.run.final_sm_gear);
+            assert_eq!(x.run.final_mem_gear, y.run.final_mem_gear);
+            assert_eq!(x.base.energy_j, y.base.energy_j);
+            assert_eq!(x.savings.energy_saving, y.savings.energy_saving);
+        }
+    }
+
+    #[test]
+    fn parallel_sweep_matches_serial_and_preserves_order() {
+        // ODPP needs no model artifacts, so this always runs.
+        let spec = Arc::new(Spec::load_default().unwrap());
+        let jobs = test_jobs(&spec, PolicySpec::Odpp(OdppCfg::default()), 6);
+        let expect_order: Vec<String> = jobs.iter().map(|j| j.app.name.clone()).collect();
+
+        let serial = Fleet::new(spec.clone(), 1).run_jobs(jobs.clone());
+        let parallel = Fleet::new(spec.clone(), 3).run_jobs(jobs);
+
+        let got_order: Vec<String> = parallel
+            .iter()
+            .map(|r| r.as_ref().unwrap().run.app.clone())
+            .collect();
+        assert_eq!(got_order, expect_order, "submission order must be kept");
+        assert_same_outcomes(&serial, &parallel);
+    }
+
+    #[test]
+    fn gpoeo_parallel_sweep_matches_serial() {
+        if Predictor::load_best().is_err() {
+            eprintln!("skipping: artifacts missing (run `make artifacts`)");
+            return;
+        }
+        let spec = Arc::new(Spec::load_default().unwrap());
+        let jobs = test_jobs(&spec, PolicySpec::Gpoeo(GpoeoCfg::default()), 4);
+        let serial = Fleet::new(spec.clone(), 1).run_jobs(jobs.clone());
+        let parallel = Fleet::new(spec.clone(), 4).run_jobs(jobs);
+        assert_same_outcomes(&serial, &parallel);
+    }
+
+    #[test]
+    fn interactive_sessions_spread_and_complete() {
+        if Predictor::load_best().is_err() {
+            eprintln!("skipping: artifacts missing (run `make artifacts`)");
+            return;
+        }
+        let spec = Arc::new(Spec::load_default().unwrap());
+        let fleet = Fleet::new(spec.clone(), 2);
+        let apps = make_suite(&spec, "aibench").unwrap();
+        // Three sessions on two workers: placement must still serve all.
+        let handles: Vec<SessionHandle> = apps
+            .iter()
+            .take(3)
+            .map(|a| fleet.begin(a.clone(), GpoeoCfg::default(), 30).unwrap())
+            .collect();
+        for h in &handles {
+            let st = h.step(50).unwrap();
+            assert!(st.time_s > 0.0);
+        }
+        for (h, app) in handles.into_iter().zip(&apps) {
+            let fin = h.end().unwrap();
+            assert!(fin.done, "{}: session must reach its target", app.name);
+            assert!(fin.iterations >= 30);
+            assert!(fin.energy_j > 0.0);
+        }
+    }
+
+    #[test]
+    fn dropping_a_session_releases_it_without_killing_the_worker() {
+        if Predictor::load_best().is_err() {
+            eprintln!("skipping: artifacts missing (run `make artifacts`)");
+            return;
+        }
+        let spec = Arc::new(Spec::load_default().unwrap());
+        let fleet = Fleet::new(spec.clone(), 1);
+        let app = crate::sim::find_app(&spec, "AI_TS").unwrap();
+        let h = fleet.begin(app.clone(), GpoeoCfg::default(), 20).unwrap();
+        let h2 = fleet.begin(app, GpoeoCfg::default(), 20).unwrap();
+        drop(h);
+        // The worker is still alive and still serves the other session.
+        assert!(h2.step(10).is_ok());
+        assert!(h2.end().unwrap().done);
+    }
+}

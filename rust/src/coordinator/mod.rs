@@ -1,22 +1,32 @@
 //! The GPOEO coordination layer: the online controller (Fig. 4 workflow),
 //! adaptive measurement (Algorithm 4), the aperiodic IPS path (§4.3.5),
-//! the ODPP baseline, the exhaustive oracle and the Begin/End daemon API.
+//! the ODPP baseline, the exhaustive oracle, the parallel fleet engine
+//! and the Begin/End daemon API. Everything here drives devices through
+//! [`crate::device::Device`] — nothing below this line names the
+//! concrete simulator.
 
 pub mod controller;
 pub mod daemon;
+pub mod fleet;
 pub mod odpp;
 pub mod oracle;
 pub mod runner;
 
 pub use controller::{Gpoeo, GpoeoCfg, GpoeoStats};
+pub use fleet::{Fleet, JobOutcome, PolicySpec, SessionHandle, SessionStatus, SweepJob};
 pub use odpp::{Odpp, OdppCfg};
 pub use oracle::{oracle_full, oracle_ordered, OracleResult};
-pub use runner::{default_iters, run_policy, savings, DefaultPolicy, Policy, RunResult, Savings};
+pub use runner::{
+    default_iters, run_budget_s, run_policy, run_sim, savings, DefaultPolicy, Policy, RunResult,
+    Savings,
+};
 
 use crate::model::Predictor;
 use crate::search::Objective;
-use crate::sim::{find_app, Spec};
+use crate::sim::{find_app, make_suite, AppParams, Spec};
 use crate::util::cli::Args;
+use crate::util::json::Json;
+use crate::util::table::{s, Cell, Table};
 use std::sync::Arc;
 
 /// Parse `--objective` (energy-capped:X | edp | ed2p | energy).
@@ -44,7 +54,7 @@ pub fn cli_run(args: &Args) -> anyhow::Result<()> {
 
     // Baseline.
     let mut dflt = DefaultPolicy { ts: 0.025 };
-    let base = run_policy(&spec, &app, &mut dflt, n_iters);
+    let base = run_sim(&spec, &app, &mut dflt, n_iters);
 
     let policy_name = args.opt_or("policy", "gpoeo");
     let (result, stats) = match policy_name {
@@ -54,7 +64,7 @@ pub fn cli_run(args: &Args) -> anyhow::Result<()> {
                 objective,
                 ..OdppCfg::default()
             });
-            (run_policy(&spec, &app, &mut p, n_iters), None)
+            (run_sim(&spec, &app, &mut p, n_iters), None)
         }
         "gpoeo" => {
             let predictor = Arc::new(Predictor::load_best()?);
@@ -65,7 +75,7 @@ pub fn cli_run(args: &Args) -> anyhow::Result<()> {
                 },
                 predictor,
             );
-            let r = run_policy(&spec, &app, &mut p, n_iters);
+            let r = run_sim(&spec, &app, &mut p, n_iters);
             (r, Some(p.stats.clone()))
         }
         other => anyhow::bail!("unknown policy '{other}'"),
@@ -105,9 +115,199 @@ pub fn cli_run(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
-/// `gpoeo daemon [--socket PATH]` — serve the Begin/End API.
+/// `gpoeo sweep [--suite S|--apps A,B] [--policy P] [--parallel N]
+///              [--iters N] [--quick] [--bench PATH]`
+///
+/// Runs the (app × policy) sweep on a [`Fleet`] of `--parallel` workers
+/// and appends a machine-readable record (per-app savings + wall-clock)
+/// to `BENCH_sweep.json`, so the serial-vs-parallel trajectory is kept
+/// across runs.
+pub fn cli_sweep(args: &Args) -> anyhow::Result<()> {
+    let spec = Arc::new(Spec::load_default()?);
+    let objective = parse_objective(args)?;
+    let workers = args.opt_usize("parallel", 1)?.max(1);
+    let quick = args.has_flag("quick");
+
+    let apps: Vec<AppParams> = match args.opt("apps") {
+        Some(list) => list
+            .split(',')
+            .map(|n| find_app(&spec, n.trim()))
+            .collect::<anyhow::Result<_>>()?,
+        None => {
+            let suites: Vec<String> = match args.opt("suite") {
+                Some(sname) => vec![sname.to_string()],
+                None => spec.suites.keys().cloned().collect(),
+            };
+            let mut v = Vec::new();
+            for sname in &suites {
+                v.extend(make_suite(&spec, sname)?);
+            }
+            v
+        }
+    };
+
+    let policy_name = args.opt_or("policy", "gpoeo").to_string();
+    let policy = match policy_name.as_str() {
+        "gpoeo" => PolicySpec::Gpoeo(GpoeoCfg {
+            objective,
+            ..GpoeoCfg::default()
+        }),
+        "odpp" => PolicySpec::Odpp(OdppCfg {
+            objective,
+            ..OdppCfg::default()
+        }),
+        "default" => PolicySpec::Default,
+        other => anyhow::bail!("unknown policy '{other}'"),
+    };
+
+    let fixed_iters = args.opt_u64("iters", 0)?;
+    let jobs: Vec<SweepJob> = apps
+        .iter()
+        .map(|app| {
+            let n_iters = if fixed_iters > 0 {
+                fixed_iters
+            } else if quick {
+                (default_iters(app) / 3).max(60)
+            } else {
+                default_iters(app)
+            };
+            SweepJob {
+                app: app.clone(),
+                policy: policy.clone(),
+                n_iters,
+            }
+        })
+        .collect();
+    let n_jobs = jobs.len();
+
+    let fleet = Fleet::new(spec.clone(), workers);
+    let t0 = std::time::Instant::now();
+    let outcomes = fleet.run_jobs(jobs);
+    let wall_s = t0.elapsed().as_secs_f64();
+
+    let mut t = Table::new(
+        &format!("Sweep — {policy_name} vs NVIDIA default ({n_jobs} apps, {workers} workers)"),
+        &["app", "energy saving", "slowdown", "ED2P saving", "iters"],
+    );
+    let mut rows = Vec::new();
+    let (mut sv, mut sl, mut ed) = (Vec::new(), Vec::new(), Vec::new());
+    let mut failures = 0usize;
+    for (app, outcome) in apps.iter().zip(outcomes) {
+        match outcome {
+            Ok(o) => {
+                t.rowf(&[
+                    s(&app.name),
+                    Cell::Pct(o.savings.energy_saving),
+                    Cell::Pct(o.savings.slowdown),
+                    Cell::Pct(o.savings.ed2p_saving),
+                    Cell::U(o.run.iterations as usize),
+                ]);
+                sv.push(o.savings.energy_saving);
+                sl.push(o.savings.slowdown);
+                ed.push(o.savings.ed2p_saving);
+                rows.push((app.name.clone(), o));
+            }
+            Err(e) => {
+                failures += 1;
+                eprintln!("sweep: {} failed: {e}", app.name);
+            }
+        }
+    }
+    crate::cli::print_table(&t, args);
+    println!(
+        "\nmean: saving {:.1}%  slowdown {:.1}%  ED2P {:.1}%  ({} apps, {} failed)",
+        crate::util::stats::mean(&sv) * 100.0,
+        crate::util::stats::mean(&sl) * 100.0,
+        crate::util::stats::mean(&ed) * 100.0,
+        rows.len(),
+        failures
+    );
+    println!("wall clock: {wall_s:.2}s with {workers} worker(s)");
+
+    let bench_path = args.opt_or("bench", "BENCH_sweep.json");
+    write_bench(bench_path, &policy_name, workers, wall_s, &rows)?;
+    println!("bench record appended to {bench_path}");
+    if failures > 0 {
+        anyhow::bail!("{failures}/{n_jobs} sweep jobs failed");
+    }
+    Ok(())
+}
+
+/// Append one sweep record to the bench file. The file keeps every run
+/// (`runs`: wall-clock per worker count — the serial-vs-parallel
+/// trajectory) and the latest per-app results (`per_app`). A results
+/// digest ties each run to the exact per-app numbers it produced, so
+/// "parallel == serial" is checkable from the file alone.
+fn write_bench(
+    path: &str,
+    policy: &str,
+    workers: usize,
+    wall_s: f64,
+    rows: &[(String, JobOutcome)],
+) -> anyhow::Result<()> {
+    let per_app: Vec<Json> = rows
+        .iter()
+        .map(|(name, o)| {
+            Json::obj(vec![
+                ("app", Json::Str(name.clone())),
+                ("energy_saving", Json::Num(o.savings.energy_saving)),
+                ("slowdown", Json::Num(o.savings.slowdown)),
+                ("ed2p_saving", Json::Num(o.savings.ed2p_saving)),
+                ("energy_j", Json::Num(o.run.energy_j)),
+                ("time_s", Json::Num(o.run.time_s)),
+                ("iterations", Json::Num(o.run.iterations as f64)),
+                ("final_sm_gear", Json::Num(o.run.final_sm_gear as f64)),
+                ("final_mem_gear", Json::Num(o.run.final_mem_gear as f64)),
+            ])
+        })
+        .collect();
+
+    // FNV-1a over the canonical row serialization: two runs with equal
+    // digests produced bit-identical per-app results.
+    let mut digest: u64 = 0xcbf2_9ce4_8422_2325;
+    for r in &per_app {
+        for b in r.to_string().bytes() {
+            digest ^= b as u64;
+            digest = digest.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+    }
+
+    let unix_s = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_secs() as f64)
+        .unwrap_or(0.0);
+    let run = Json::obj(vec![
+        ("policy", Json::Str(policy.to_string())),
+        ("workers", Json::Num(workers as f64)),
+        ("apps", Json::Num(rows.len() as f64)),
+        ("wall_clock_s", Json::Num(wall_s)),
+        ("results_digest", Json::Str(format!("{digest:016x}"))),
+        ("unix_time_s", Json::Num(unix_s)),
+    ]);
+
+    let mut runs: Vec<Json> = std::fs::read_to_string(path)
+        .ok()
+        .and_then(|text| Json::parse(&text).ok())
+        .and_then(|j| j.get("runs").as_arr().map(|a| a.to_vec()))
+        .unwrap_or_default();
+    runs.push(run);
+
+    let doc = Json::obj(vec![
+        ("runs", Json::Arr(runs)),
+        ("per_app", Json::Arr(per_app)),
+    ]);
+    std::fs::write(path, doc.to_pretty())?;
+    Ok(())
+}
+
+/// `gpoeo daemon [--socket PATH] [--workers N]` — serve the Begin/End
+/// API on a shared fleet.
 pub fn cli_daemon(args: &Args) -> anyhow::Result<()> {
     let spec = Arc::new(Spec::load_default()?);
     let sock = args.opt_or("socket", "/tmp/gpoeo.sock").to_string();
-    daemon::Daemon::new(spec).serve(std::path::Path::new(&sock))
+    let default_workers = std::thread::available_parallelism()
+        .map(|n| n.get().min(4))
+        .unwrap_or(2);
+    let workers = args.opt_usize("workers", default_workers)?;
+    daemon::Daemon::new(spec, workers).serve(std::path::Path::new(&sock))
 }

@@ -14,9 +14,9 @@
 //! which is its one advantage (the paper notes it meets the slowdown cap
 //! on more GNN apps purely because its measurement is cheaper).
 
+use crate::device::Device;
 use crate::search::Objective;
 use crate::signal::calc_period_fft_argmax;
-use crate::sim::SimGpu;
 
 #[derive(Clone)]
 pub struct OdppCfg {
@@ -74,7 +74,7 @@ impl Odpp {
     }
 
     /// FFT-arg-max period over a freshly sampled window (ODPP's detector).
-    fn detect_period(&mut self, gpu: &mut SimGpu, window_s: f64) -> f64 {
+    fn detect_period(&mut self, gpu: &mut dyn Device, window_s: f64) -> f64 {
         let n = (window_s / self.cfg.ts).ceil() as usize;
         let mut power = Vec::with_capacity(n);
         for _ in 0..n {
@@ -87,7 +87,7 @@ impl Odpp {
     }
 
     /// Probe one configuration: (avg power, detected period).
-    fn probe(&mut self, gpu: &mut SimGpu) -> (f64, f64) {
+    fn probe(&mut self, gpu: &mut dyn Device) -> (f64, f64) {
         gpu.advance(0.15); // settle
         let e0 = gpu.energy_j();
         let t0 = gpu.time_s();
@@ -112,7 +112,7 @@ impl Odpp {
         *ys.last().unwrap()
     }
 
-    fn optimize(&mut self, gpu: &mut SimGpu) {
+    fn optimize(&mut self, gpu: &mut dyn Device) {
         // Baseline at default clocks.
         let (p_base, t_base) = self.probe(gpu);
         self.detected_period_s = t_base;
@@ -142,7 +142,7 @@ impl Odpp {
         let es: Vec<f64> = idx.iter().map(|&i| e_ratio[i]).collect();
         let tsr: Vec<f64> = idx.iter().map(|&i| t_ratio[i]).collect();
 
-        let spec = gpu.spec.clone();
+        let spec = gpu.spec().clone();
         // Only interpolate inside the probed range — extrapolating the
         // flat tail below the lowest probe would let a single optimistic
         // probe send the GPU to the floor gear.
@@ -183,7 +183,7 @@ impl crate::coordinator::Policy for Odpp {
         "odpp"
     }
 
-    fn tick(&mut self, gpu: &mut SimGpu) {
+    fn tick(&mut self, gpu: &mut dyn Device) {
         match self.phase {
             Phase::Sampling => {
                 // Initial window, then the whole optimization runs

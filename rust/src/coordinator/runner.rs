@@ -1,14 +1,20 @@
 //! Policy abstraction and the measurement harness that scores a policy
 //! against the NVIDIA-default baseline on a fixed amount of work.
+//!
+//! Policies are written against [`Device`] (DESIGN.md §4): the same
+//! controller code drives the simulator today and would drive an
+//! NVML-backed device unchanged.
 
-use crate::sim::{AppParams, SimGpu, Spec};
+use crate::device::{sim_device, Device};
+use crate::sim::{AppParams, Spec};
 use std::sync::Arc;
 
 /// An online clock-management policy driven by sampling ticks. The policy
-/// owns the cadence: `tick` must advance the GPU by its sampling interval.
+/// owns the cadence: `tick` must advance the device by its sampling
+/// interval.
 pub trait Policy {
     fn name(&self) -> &'static str;
-    fn tick(&mut self, gpu: &mut SimGpu);
+    fn tick(&mut self, dev: &mut dyn Device);
 }
 
 /// The NVIDIA default scheduling strategy: no controller at all (the
@@ -21,8 +27,8 @@ impl Policy for DefaultPolicy {
     fn name(&self) -> &'static str {
         "nvidia-default"
     }
-    fn tick(&mut self, gpu: &mut SimGpu) {
-        gpu.advance(self.ts);
+    fn tick(&mut self, dev: &mut dyn Device) {
+        dev.advance(self.ts);
     }
 }
 
@@ -38,28 +44,42 @@ pub struct RunResult {
     pub final_mem_gear: usize,
 }
 
-/// Run `policy` on `app` until `n_iters` iterations (work units) finish.
-pub fn run_policy(
+/// Virtual-time budget for driving `n_iters` work units starting at
+/// `now_s`: generous for any sane policy, finite for errant ones. The
+/// single source of truth for every drive loop (here and in the fleet).
+pub fn run_budget_s(now_s: f64, n_iters: u64, nominal_iter_s: f64) -> f64 {
+    now_s + 50.0 * n_iters as f64 * nominal_iter_s + 3600.0
+}
+
+/// Run `policy` on an already-attached device until `n_iters` iterations
+/// (work units) finish.
+pub fn run_policy(dev: &mut dyn Device, policy: &mut dyn Policy, n_iters: u64) -> RunResult {
+    // Hard stop at a generous virtual-time budget (errant policies).
+    let budget_s = run_budget_s(dev.time_s(), n_iters, dev.nominal_iter_s());
+    while dev.iterations() < n_iters && dev.time_s() < budget_s {
+        policy.tick(dev);
+    }
+    RunResult {
+        app: dev.workload().to_string(),
+        policy: policy.name().to_string(),
+        energy_j: dev.true_energy_j(),
+        time_s: dev.time_s(),
+        iterations: dev.iterations(),
+        final_sm_gear: dev.sm_gear(),
+        final_mem_gear: dev.mem_gear(),
+    }
+}
+
+/// Run `policy` on `app` on a fresh simulated device — the standard
+/// entry point for experiments and sweeps.
+pub fn run_sim(
     spec: &Arc<Spec>,
     app: &AppParams,
     policy: &mut dyn Policy,
     n_iters: u64,
 ) -> RunResult {
-    let mut gpu = SimGpu::new(spec.clone(), app.clone());
-    // Hard stop at a generous virtual-time budget (errant policies).
-    let budget_s = 50.0 * n_iters as f64 * app.t_base + 3600.0;
-    while gpu.iterations() < n_iters && gpu.time_s() < budget_s {
-        policy.tick(&mut gpu);
-    }
-    RunResult {
-        app: app.name.clone(),
-        policy: policy.name().to_string(),
-        energy_j: gpu.true_energy_j(),
-        time_s: gpu.time_s(),
-        iterations: gpu.iterations(),
-        final_sm_gear: gpu.sm_gear(),
-        final_mem_gear: gpu.mem_gear(),
-    }
+    let mut dev = sim_device(spec, app);
+    run_policy(&mut dev, policy, n_iters)
 }
 
 /// Savings of `run` relative to `base` (same app, same n_iters).
@@ -101,7 +121,7 @@ mod tests {
         let spec = Arc::new(Spec::load_default().unwrap());
         let app = find_app(&spec, "AI_TS").unwrap();
         let mut p = DefaultPolicy { ts: 0.025 };
-        let r = run_policy(&spec, &app, &mut p, 50);
+        let r = run_sim(&spec, &app, &mut p, 50);
         assert!(r.iterations >= 50);
         assert!(r.energy_j > 0.0 && r.time_s > 0.0);
         let (sm, mem, _) = app.default_op(&spec);
@@ -143,15 +163,15 @@ mod tests {
             fn name(&self) -> &'static str {
                 "fixed"
             }
-            fn tick(&mut self, gpu: &mut SimGpu) {
-                gpu.set_sm_gear(self.gear);
-                gpu.advance(self.ts);
+            fn tick(&mut self, dev: &mut dyn Device) {
+                dev.set_sm_gear(self.gear);
+                dev.advance(self.ts);
             }
         }
         let mut hi = Fixed { ts: 0.05, gear: 114 };
         let mut lo = Fixed { ts: 0.05, gear: 60 };
-        let rh = run_policy(&spec, &app, &mut hi, 40);
-        let rl = run_policy(&spec, &app, &mut lo, 40);
+        let rh = run_sim(&spec, &app, &mut hi, 40);
+        let rl = run_sim(&spec, &app, &mut lo, 40);
         assert!(rl.time_s > rh.time_s);
         assert!(rl.energy_j < rh.energy_j, "downclock must save energy here");
     }
@@ -168,13 +188,13 @@ mod tests {
             fn name(&self) -> &'static str {
                 "fixed"
             }
-            fn tick(&mut self, gpu: &mut SimGpu) {
-                gpu.set_sm_gear(self.gear);
-                gpu.advance(0.05);
+            fn tick(&mut self, dev: &mut dyn Device) {
+                dev.set_sm_gear(self.gear);
+                dev.advance(0.05);
             }
         }
-        let rh = run_policy(&spec, &app, &mut Fixed { gear: 114 }, 60);
-        let rl = run_policy(&spec, &app, &mut Fixed { gear: 40 }, 60);
+        let rh = run_sim(&spec, &app, &mut Fixed { gear: 114 }, 60);
+        let rl = run_sim(&spec, &app, &mut Fixed { gear: 40 }, 60);
         assert!(
             rl.time_s > rh.time_s * 1.1,
             "aperiodic work must slow down when downclocked ({} vs {})",

@@ -1,0 +1,168 @@
+//! The device abstraction layer (DESIGN.md §4).
+//!
+//! The paper's deployment model (§2.2.2) is a standalone optimizer
+//! process that owns the GPU clocks; training scripts only call
+//! Begin/End. The controller therefore never cares *what* it is driving
+//! — it needs exactly the NVML/CUPTI surface: set clock gears, sample
+//! power/utilization, open a performance-counter session, read the
+//! accumulated energy meter. [`Device`] captures that surface so the
+//! whole coordinator stack ([`crate::coordinator::Policy`],
+//! [`crate::coordinator::run_policy`], the GPOEO and ODPP controllers,
+//! the daemon and the fleet engine) is written against `&mut dyn Device`.
+//!
+//! Implementations:
+//! - [`crate::sim::SimGpu`] — the calibrated discrete-event simulator
+//!   (the only backend in this repo; see DESIGN.md §1 for why).
+//! - A future `NvmlDevice` would map `set_sm_gear` to
+//!   `nvmlDeviceSetGpuLockedClocks`, `sample` to the NVML power/util
+//!   queries, the counter session to CUPTI, and `advance(dt)` to a real
+//!   `sleep(dt)` — the controller owns the sampling cadence either way.
+
+mod sim;
+
+use crate::sim::{AppParams, Instant, SimGpu, Spec};
+use std::sync::Arc;
+
+/// The clock/telemetry surface the controller drives.
+///
+/// Time is device-owned: `advance(dt)` moves the device forward by `dt`
+/// seconds (virtual time on the simulator, wall time on real hardware).
+/// All telemetry (`sample`, `energy_j`, `ips`, `read_counters`) is what
+/// the controller is allowed to see — noisy, meter-grade readings. The
+/// `true_*` methods are noise-free ground truth for experiment
+/// bookkeeping only; a policy must never base decisions on them.
+pub trait Device {
+    /// The hardware spec (gear tables, power model, noise model).
+    fn spec(&self) -> &Arc<Spec>;
+
+    /// Name of the workload currently occupying the device.
+    fn workload(&self) -> &str;
+
+    /// Expected iteration period at the reference clocks, seconds — used
+    /// only to size virtual-time budgets, never for control decisions.
+    fn nominal_iter_s(&self) -> f64;
+
+    // ------------------------------------------------------- NVML-like --
+
+    /// Set the SM clock gear (clamped to the valid range).
+    fn set_sm_gear(&mut self, gear: usize);
+
+    /// Set the memory clock gear (clamped to the valid range).
+    fn set_mem_gear(&mut self, gear: usize);
+
+    /// Reset to the NVIDIA default scheduling configuration.
+    fn set_default_clocks(&mut self);
+
+    fn sm_gear(&self) -> usize;
+
+    fn mem_gear(&self) -> usize;
+
+    /// Instantaneous (power, SM util, mem util) with measurement noise —
+    /// the sampling channel used for period detection.
+    fn sample(&mut self, dt_since_last: f64) -> Instant;
+
+    /// Accumulated energy counter (joules), with meter noise — mirrors
+    /// `nvmlDeviceGetTotalEnergyConsumption`.
+    fn energy_j(&mut self) -> f64;
+
+    /// Instructions-per-second proxy (aperiodic path, §4.3.5).
+    fn ips(&mut self) -> f64;
+
+    // ------------------------------------------------------ CUPTI-like --
+
+    /// Begin a performance-counter session. While active, the workload
+    /// pays the profiling tax (slower iterations, higher power).
+    fn start_counter_session(&mut self);
+
+    fn stop_counter_session(&mut self);
+
+    fn profiling_active(&self) -> bool;
+
+    /// Collect the Table-2 feature vector measured over the session
+    /// window. Requires an active session.
+    fn read_counters(&mut self) -> Vec<f64>;
+
+    // ---------------------------------------------------------- clock --
+
+    /// Move the device forward by `dt` seconds.
+    fn advance(&mut self, dt: f64);
+
+    /// Completed workload iterations since attach.
+    fn iterations(&self) -> u64;
+
+    /// Seconds since attach.
+    fn time_s(&self) -> f64;
+
+    // --------------------------------------- experiment bookkeeping --
+
+    /// Noise-free total energy (joules). Policies must use `energy_j()`.
+    fn true_energy_j(&self) -> f64;
+
+    /// Ground-truth current iteration period (seconds), including the
+    /// profiling dilation if a counter session is active.
+    fn true_period(&self) -> f64;
+}
+
+/// A simulated device running `app`, booted at the NVIDIA default
+/// configuration — the standard way every harness obtains a device.
+pub fn sim_device(spec: &Arc<Spec>, app: &AppParams) -> SimGpu {
+    SimGpu::new(spec.clone(), app.clone())
+}
+
+/// [`sim_device`], boxed as a trait object (for owners that must not
+/// name the concrete simulator type, e.g. fleet sessions).
+pub fn boxed_sim_device(spec: &Arc<Spec>, app: &AppParams) -> Box<dyn Device> {
+    Box::new(sim_device(spec, app))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::find_app;
+
+    #[test]
+    fn sim_device_honors_the_trait_surface() {
+        let spec = Arc::new(Spec::load_default().unwrap());
+        let app = find_app(&spec, "AI_TS").unwrap();
+        let mut dev = boxed_sim_device(&spec, &app);
+        assert_eq!(dev.workload(), "AI_TS");
+        assert!(dev.nominal_iter_s() > 0.0);
+        assert_eq!(dev.iterations(), 0);
+
+        // Drive it blind through the trait: clocks, time, energy, counters.
+        dev.set_sm_gear(60);
+        assert_eq!(dev.sm_gear(), 60);
+        dev.advance(1.0);
+        assert!(dev.time_s() >= 1.0);
+        assert!(dev.true_energy_j() > 0.0);
+        let s = dev.sample(0.025);
+        assert!(s.power_w > 0.0);
+
+        assert!(!dev.profiling_active());
+        dev.start_counter_session();
+        assert!(dev.profiling_active());
+        let feats = dev.read_counters();
+        assert!(!feats.is_empty());
+        dev.stop_counter_session();
+
+        dev.set_default_clocks();
+        let (sm, mem, _) = app.default_op(dev.spec());
+        assert_eq!(dev.sm_gear(), sm);
+        assert_eq!(dev.mem_gear(), mem);
+    }
+
+    #[test]
+    fn trait_and_inherent_views_agree() {
+        let spec = Arc::new(Spec::load_default().unwrap());
+        let app = find_app(&spec, "SBM_GIN").unwrap();
+        let mut a = sim_device(&spec, &app);
+        let mut b = boxed_sim_device(&spec, &app);
+        for _ in 0..200 {
+            a.advance(0.05);
+            b.advance(0.05);
+        }
+        assert_eq!(a.true_energy_j(), b.true_energy_j());
+        assert_eq!(a.iterations(), b.iterations());
+        assert_eq!(a.true_period(), b.true_period());
+    }
+}

@@ -1,0 +1,92 @@
+//! [`Device`] implementation for the simulated GPU.
+//!
+//! Pure delegation to [`SimGpu`]'s inherent methods — the simulator was
+//! built to mirror the NVML/CUPTI surface (see `sim/gpu.rs`), so the
+//! trait impl adds no behavior, only the seam that lets everything above
+//! it stay backend-agnostic.
+
+use super::Device;
+use crate::sim::{Instant, SimGpu, Spec};
+use std::sync::Arc;
+
+impl Device for SimGpu {
+    fn spec(&self) -> &Arc<Spec> {
+        &self.spec
+    }
+
+    fn workload(&self) -> &str {
+        &self.app.name
+    }
+
+    fn nominal_iter_s(&self) -> f64 {
+        self.app.t_base
+    }
+
+    fn set_sm_gear(&mut self, gear: usize) {
+        SimGpu::set_sm_gear(self, gear);
+    }
+
+    fn set_mem_gear(&mut self, gear: usize) {
+        SimGpu::set_mem_gear(self, gear);
+    }
+
+    fn set_default_clocks(&mut self) {
+        SimGpu::set_default_clocks(self);
+    }
+
+    fn sm_gear(&self) -> usize {
+        SimGpu::sm_gear(self)
+    }
+
+    fn mem_gear(&self) -> usize {
+        SimGpu::mem_gear(self)
+    }
+
+    fn sample(&mut self, dt_since_last: f64) -> Instant {
+        SimGpu::sample(self, dt_since_last)
+    }
+
+    fn energy_j(&mut self) -> f64 {
+        SimGpu::energy_j(self)
+    }
+
+    fn ips(&mut self) -> f64 {
+        SimGpu::ips(self)
+    }
+
+    fn start_counter_session(&mut self) {
+        SimGpu::start_counter_session(self);
+    }
+
+    fn stop_counter_session(&mut self) {
+        SimGpu::stop_counter_session(self);
+    }
+
+    fn profiling_active(&self) -> bool {
+        SimGpu::profiling_active(self)
+    }
+
+    fn read_counters(&mut self) -> Vec<f64> {
+        SimGpu::read_counters(self)
+    }
+
+    fn advance(&mut self, dt: f64) {
+        SimGpu::advance(self, dt);
+    }
+
+    fn iterations(&self) -> u64 {
+        SimGpu::iterations(self)
+    }
+
+    fn time_s(&self) -> f64 {
+        SimGpu::time_s(self)
+    }
+
+    fn true_energy_j(&self) -> f64 {
+        SimGpu::true_energy_j(self)
+    }
+
+    fn true_period(&self) -> f64 {
+        SimGpu::true_period(self)
+    }
+}

@@ -9,7 +9,7 @@
 //! - **sm-only**     memory-clock stage disabled
 //! - **mem-only**    SM-clock stage disabled
 
-use crate::coordinator::{default_iters, run_policy, savings, DefaultPolicy, Gpoeo, GpoeoCfg};
+use crate::coordinator::{default_iters, run_sim, savings, DefaultPolicy, Gpoeo, GpoeoCfg};
 use crate::model::Predictor;
 use crate::sim::{make_suite, Spec};
 use crate::util::stats::mean;
@@ -42,9 +42,9 @@ pub fn run(spec: &Arc<Spec>, predictor: &Arc<Predictor>) -> (Table, Vec<(String,
         let (mut sv, mut sl, mut ed, mut steps) = (vec![], vec![], vec![], vec![]);
         for app in &apps {
             let n = default_iters(app) / 2;
-            let base = run_policy(spec, app, &mut DefaultPolicy { ts: 0.025 }, n);
+            let base = run_sim(spec, app, &mut DefaultPolicy { ts: 0.025 }, n);
             let mut g = Gpoeo::new(variant(v), predictor.clone());
-            let r = run_policy(spec, app, &mut g, n);
+            let r = run_sim(spec, app, &mut g, n);
             let s = savings(&base, &r);
             sv.push(s.energy_saving);
             sl.push(s.slowdown);

@@ -2,11 +2,12 @@
 //! period-detection scoring (GPOEO vs ODPP), and policy comparisons.
 
 use crate::coordinator::{
-    default_iters, run_policy, savings, DefaultPolicy, Gpoeo, GpoeoCfg, Odpp, OdppCfg, Savings,
+    default_iters, run_sim, savings, DefaultPolicy, Gpoeo, GpoeoCfg, Odpp, OdppCfg, Savings,
 };
+use crate::device::sim_device;
 use crate::model::Predictor;
 use crate::signal::{calc_period_fft_argmax, composite_feature, online_detect, PeriodCfg};
-use crate::sim::{AppParams, SimGpu, Spec};
+use crate::sim::{AppParams, Spec};
 use std::sync::Arc;
 
 /// Sample a trace at the given clock config; returns the composite
@@ -19,7 +20,7 @@ pub fn capture_trace(
     ts: f64,
     duration_s: f64,
 ) -> (Vec<f64>, f64) {
-    let mut gpu = SimGpu::new(spec.clone(), app.clone());
+    let mut gpu = sim_device(spec, app);
     gpu.set_sm_gear(sm_gear);
     gpu.set_mem_gear(mem_gear);
     let truth = gpu.true_period();
@@ -48,7 +49,7 @@ pub fn detection_errors(
     mem_gear: usize,
 ) -> (f64, f64) {
     let ts = 0.025;
-    let mut probe = SimGpu::new(spec.clone(), app.clone());
+    let mut probe = sim_device(spec, app);
     probe.set_sm_gear(sm_gear);
     probe.set_mem_gear(mem_gear);
     let truth = probe.true_period();
@@ -73,13 +74,13 @@ pub fn compare_policies(
     iters: Option<u64>,
 ) -> (Savings, Savings, crate::coordinator::GpoeoStats) {
     let n = iters.unwrap_or_else(|| default_iters(app));
-    let base = run_policy(spec, app, &mut DefaultPolicy { ts: 0.025 }, n);
+    let base = run_sim(spec, app, &mut DefaultPolicy { ts: 0.025 }, n);
 
     let mut g = Gpoeo::new(GpoeoCfg::default(), predictor.clone());
-    let rg = run_policy(spec, app, &mut g, n);
+    let rg = run_sim(spec, app, &mut g, n);
 
     let mut o = Odpp::new(OdppCfg::default());
-    let ro = run_policy(spec, app, &mut o, n);
+    let ro = run_sim(spec, app, &mut o, n);
 
     (savings(&base, &rg), savings(&base, &ro), g.stats.clone())
 }

@@ -3,7 +3,7 @@
 //! Fig. 15 (overhead) and the headline aggregate (§1/§7).
 
 use crate::coordinator::{
-    default_iters, oracle_ordered, run_policy, savings, DefaultPolicy, Gpoeo, GpoeoCfg,
+    default_iters, oracle_ordered, run_sim, savings, DefaultPolicy, Gpoeo, GpoeoCfg,
 };
 use crate::experiments::helpers::compare_policies;
 use crate::model::Predictor;
@@ -196,7 +196,7 @@ pub fn fig15(spec: &Arc<Spec>, predictor: &Arc<Predictor>) -> (Table, f64, f64) 
     let (mut eo, mut to) = (Vec::new(), Vec::new());
     for app in &apps {
         let n = default_iters(app);
-        let base = run_policy(spec, app, &mut DefaultPolicy { ts: 0.025 }, n);
+        let base = run_sim(spec, app, &mut DefaultPolicy { ts: 0.025 }, n);
         let mut g = Gpoeo::new(
             GpoeoCfg {
                 actuate: false,
@@ -204,7 +204,7 @@ pub fn fig15(spec: &Arc<Spec>, predictor: &Arc<Predictor>) -> (Table, f64, f64) 
             },
             predictor.clone(),
         );
-        let r = run_policy(spec, app, &mut g, n);
+        let r = run_sim(spec, app, &mut g, n);
         let s = savings(&base, &r);
         eo.push(-s.energy_saving); // overhead = negative saving
         to.push(s.slowdown);
@@ -244,9 +244,9 @@ pub fn headline(spec: &Arc<Spec>, predictor: &Arc<Predictor>, quick: bool) -> He
         let (g, _, _) = {
             // Only GPOEO needed for the headline number.
             let n = iters.unwrap_or_else(|| default_iters(app));
-            let base = run_policy(spec, app, &mut DefaultPolicy { ts: 0.025 }, n);
+            let base = run_sim(spec, app, &mut DefaultPolicy { ts: 0.025 }, n);
             let mut p = Gpoeo::new(GpoeoCfg::default(), predictor.clone());
-            let r = run_policy(spec, app, &mut p, n);
+            let r = run_sim(spec, app, &mut p, n);
             (savings(&base, &r), (), ())
         };
         savings_all.push(g.energy_saving);

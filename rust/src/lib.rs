@@ -9,18 +9,23 @@
 //!
 //! Because the paper's testbed (RTX3080Ti + NVML + CUPTI) is hardware we
 //! do not have, the [`sim`] module provides a calibrated, deterministic
-//! simulation of it; the controller in `coordinator` is generic over
-//! that device surface. Prediction models are trained offline in Python
+//! simulation of it, surfaced to the controller through the [`device`]
+//! abstraction — the entire `coordinator` stack is written against
+//! `dyn Device`, so an NVML-backed device slots in without touching the
+//! control logic. Prediction models are trained offline in Python
 //! (`python/compile/`), AOT-lowered to HLO, and executed at runtime by
 //! the PJRT CPU client in `runtime` — Python is never on the request
 //! path.
 //!
 //! Layer map (see DESIGN.md):
-//! - L3: `coordinator`, [`sim`], `signal`, `search`, `experiments`
+//! - L3: `coordinator` (controller, fleet, daemon), `signal`, `search`,
+//!   `experiments` — all device-agnostic via [`device`]
+//! - Device backends: [`sim`] today; NVML tomorrow
 //! - L2/L1 artifacts: built by `make artifacts`, loaded by `runtime`
 
 pub mod cli;
 pub mod coordinator;
+pub mod device;
 pub mod experiments;
 pub mod model;
 pub mod search;

@@ -5,8 +5,9 @@
 //! - `calibrate [--suite S]`     ground-truth model coefficients + oracle
 //! - `detect --app A [...]`      run period detection on a simulated trace
 //! - `run --app A [...]`         GPOEO online optimization on one app
+//! - `sweep [--parallel N]`      all-app sweep on a worker fleet (BENCH_sweep.json)
 //! - `experiment <id>`           regenerate a paper table/figure (fig1..fig15, table3, headline)
-//! - `daemon [--socket P]`       Begin/End API server (micro-intrusive mode)
+//! - `daemon [--socket P]`       Begin/End API server (micro-intrusive mode, fleet-backed)
 
 use gpoeo::util::cli::Args;
 

@@ -3,7 +3,7 @@
 //! artifacts; `make artifacts` first.
 
 use gpoeo::coordinator::{
-    run_policy, savings, DefaultPolicy, Gpoeo, GpoeoCfg, Odpp, OdppCfg, Policy,
+    run_sim, savings, DefaultPolicy, Gpoeo, GpoeoCfg, Odpp, OdppCfg, Policy,
 };
 use gpoeo::model::{NativeModels, Predictor};
 use gpoeo::sim::{find_app, SimGpu, Spec};
@@ -34,9 +34,9 @@ fn gpoeo_saves_energy_on_representative_apps() {
         } else {
             gpoeo::coordinator::default_iters(&app) / 2
         };
-        let base = run_policy(&spec, &app, &mut DefaultPolicy { ts: 0.025 }, n);
+        let base = run_sim(&spec, &app, &mut DefaultPolicy { ts: 0.025 }, n);
         let mut g = Gpoeo::new(GpoeoCfg::default(), p.clone());
-        let run = run_policy(&spec, &app, &mut g, n);
+        let run = run_sim(&spec, &app, &mut g, n);
         let s = savings(&base, &run);
         assert!(
             s.energy_saving > 0.04,
@@ -67,7 +67,7 @@ fn steady_state_respects_the_cap() {
         let app = find_app(&spec, name).unwrap();
         let n = gpoeo::coordinator::default_iters(&app) / 2;
         let mut g = Gpoeo::new(GpoeoCfg::default(), p.clone());
-        let run = run_policy(&spec, &app, &mut g, n);
+        let run = run_sim(&spec, &app, &mut g, n);
         let (_, t_ratio) = app.ratios_vs_default(&spec, run.final_sm_gear, run.final_mem_gear);
         if t_ratio > 1.065 {
             eprintln!("{name}: steady-state ratio {t_ratio:.3}");
@@ -108,9 +108,9 @@ fn odpp_struggles_on_aperiodic_apps() {
     let spec = Arc::new(Spec::load_default().unwrap());
     let app = find_app(&spec, "TGBM").unwrap();
     let n = gpoeo::coordinator::default_iters(&app) / 2;
-    let base = run_policy(&spec, &app, &mut DefaultPolicy { ts: 0.025 }, n);
+    let base = run_sim(&spec, &app, &mut DefaultPolicy { ts: 0.025 }, n);
     let mut o = Odpp::new(OdppCfg::default());
-    let run = run_policy(&spec, &app, &mut o, n);
+    let run = run_sim(&spec, &app, &mut o, n);
     let s = savings(&base, &run);
     // Either the cap is blown or the objective score is poor — it must
     // not quietly match GPOEO's constrained result.
