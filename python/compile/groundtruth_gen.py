@@ -1,0 +1,427 @@
+"""Generator for ``data/groundtruth.json`` — the simulated-testbed spec.
+
+The seed tree referenced ``data/groundtruth.json`` from both sides of the
+cross-language contract (``rust/src/sim/spec.rs`` and ``simdata.py``) but
+never shipped the file itself, so tier-1 could not run.  This script
+regenerates it from first principles: an RTX3080Ti-like gear/power model
+(99 SM gears at 210+15·g MHz, 5 memory gears, TDP 350 W), the Table-2
+feature maps that drive the per-app analytic DVFS model, and the four
+benchmark suites the paper evaluates (AIBench 14 + classical 2 +
+benchmarking-gnns 55 = the 71 evaluation apps, plus a ``pytorch_train``
+training corpus for the GBT models).
+
+Calibration targets (checked by ``python/tests/test_groundtruth.py``,
+which ports the Rust test-suite assertions):
+
+* power strictly monotone in SM clock for every app at every mem gear;
+* NVIDIA-default boost capped by TDP for hot apps, gear 114 for cool ones;
+* an interior energy-optimal SM gear for typical apps (the paper premise);
+* mean oracle saving under the 5% slowdown cap ≈ 16% over the 71 apps;
+* aperiodic CSL/TU/classical apps with modest capped headroom.
+
+Run:  python -m compile.groundtruth_gen   (from ``python/``)
+"""
+
+from __future__ import annotations
+
+import json
+import os
+
+NUM_FEATURES = 16
+
+# Table-2-style counter features, each normalized to (0, 1].
+FEATURE_NAMES = [
+    "sm_active",
+    "sm_occupancy",
+    "tensor_active",
+    "fp32_active",
+    "dram_read",
+    "dram_write",
+    "l2_hit_rate",
+    "l1_hit_rate",
+    "mem_busy",
+    "issue_stall",
+    "warp_eligible",
+    "branch_efficiency",
+    "shmem_util",
+    "tex_util",
+    "pcie_util",
+    "achieved_ipc",
+]
+
+
+def _w(**kv: float) -> list[float]:
+    """Sparse weight vector over FEATURE_NAMES."""
+    v = [0.0] * NUM_FEATURES
+    for name, val in kv.items():
+        v[FEATURE_NAMES.index(name)] = val
+    return v
+
+
+def coeff_maps() -> dict:
+    return {
+        # Time decomposition: compute / memory / other raw weights
+        # (normalized per app after hidden-coefficient jitter).
+        "w_compute": {
+            "bias": 0.08,
+            "weights": _w(sm_active=0.35, tensor_active=0.18, fp32_active=0.20, achieved_ipc=0.15),
+            "lo": 0.15,
+            "hi": 0.95,
+        },
+        "w_memory": {
+            "bias": 0.04,
+            "weights": _w(dram_read=0.22, dram_write=0.15, mem_busy=0.30, issue_stall=0.10),
+            "lo": 0.05,
+            "hi": 0.90,
+        },
+        "w_other": {
+            "bias": 0.10,
+            "weights": _w(pcie_util=0.30),
+            "lo": 0.05,
+            "hi": 0.40,
+        },
+        # SM-clock scaling exponent of the compute term.
+        "gamma_sm": {
+            "bias": 0.30,
+            "weights": _w(sm_active=0.25, achieved_ipc=0.30, fp32_active=0.15),
+            "lo": 0.55,
+            "hi": 1.00,
+        },
+        # Fraction of the memory term that scales with DRAM clock.
+        "mem_sens": {
+            "bias": 0.05,
+            "weights": _w(mem_busy=0.60, dram_read=0.25, l2_hit_rate=-0.15),
+            "lo": 0.05,
+            "hi": 0.90,
+        },
+        # Power-model coefficients.
+        "k_sm_power": {
+            "bias": 0.40,
+            "weights": _w(sm_active=0.45, tensor_active=0.20, fp32_active=0.15),
+            "lo": 0.45,
+            "hi": 1.50,
+        },
+        "k_mem_power": {
+            "bias": 0.35,
+            "weights": _w(dram_read=0.45, mem_busy=0.35, dram_write=0.20),
+            "lo": 0.30,
+            "hi": 1.40,
+        },
+        # Busy-fraction ceilings for the utilization channels.
+        "sm_activity": {
+            "bias": 0.45,
+            "weights": _w(sm_active=0.50),
+            "lo": 0.30,
+            "hi": 0.98,
+        },
+        "mem_activity": {
+            "bias": 0.25,
+            "weights": _w(mem_busy=0.50, dram_read=0.20),
+            "lo": 0.15,
+            "hi": 0.95,
+        },
+    }
+
+
+# ---------------------------------------------------------------------------
+# Archetypes: features_mean drives the analytic model through the maps
+# above; the phase/micro parameters drive the synthetic trace shape.
+# Phases are (frac, cw, mw, pw): duration fraction at reference clocks,
+# compute weight, memory weight, relative power level.
+# ---------------------------------------------------------------------------
+
+def archetypes() -> dict:
+    def phases(*rows):
+        return [{"frac": f, "cw": c, "mw": m, "pw": p} for (f, c, m, p) in rows]
+
+    common = dict(abnormal_every=0, abnormal_scale=1.0)
+    return {
+        # Vision CNN training: data-load / forward / backward / optimizer.
+        "cnn": dict(
+            features_mean=[0.85, 0.60, 0.55, 0.70, 0.45, 0.35, 0.60, 0.75,
+                           0.50, 0.35, 0.60, 0.90, 0.45, 0.50, 0.15, 0.60],
+            features_std=0.06,
+            period_s=[0.45, 1.60],
+            trace_noise=0.05,
+            micro_amp=0.06,
+            micro_period_s=0.09,
+            micro_jitter=0.10,
+            phases=phases((0.12, 0.10, 0.30, 0.45), (0.30, 0.90, 0.50, 1.10),
+                          (0.42, 0.95, 0.60, 1.22), (0.16, 0.35, 0.75, 0.62)),
+            aperiodic=False,
+            **common,
+        ),
+        # Attention/transformer training: long periods, hot tensor cores.
+        "transformer": dict(
+            features_mean=[0.80, 0.65, 0.72, 0.58, 0.50, 0.45, 0.55, 0.70,
+                           0.55, 0.40, 0.55, 0.92, 0.35, 0.08, 0.10, 0.66],
+            features_std=0.05,
+            period_s=[1.20, 3.20],
+            trace_noise=0.05,
+            micro_amp=0.05,
+            micro_period_s=0.12,
+            micro_jitter=0.12,
+            phases=phases((0.08, 0.15, 0.35, 0.50), (0.36, 0.92, 0.45, 1.12),
+                          (0.40, 0.96, 0.55, 1.20), (0.16, 0.40, 0.70, 0.66)),
+            aperiodic=False,
+            **common,
+        ),
+        # Recurrent / sequence models: lower occupancy, kernel-launch bound.
+        "rnn": dict(
+            features_mean=[0.60, 0.45, 0.28, 0.55, 0.40, 0.30, 0.50, 0.60,
+                           0.45, 0.50, 0.40, 0.85, 0.30, 0.05, 0.12, 0.45],
+            features_std=0.06,
+            period_s=[0.60, 2.00],
+            trace_noise=0.07,
+            micro_amp=0.10,
+            micro_period_s=0.07,
+            micro_jitter=0.18,
+            phases=phases((0.15, 0.20, 0.30, 0.55), (0.45, 0.80, 0.45, 1.08),
+                          (0.28, 0.88, 0.55, 1.18), (0.12, 0.30, 0.65, 0.62)),
+            aperiodic=False,
+            **common,
+        ),
+        # Generative models: two near-symmetric halves (G/D step) — the
+        # 2nd-harmonic ambiguity case of §2.2.3.
+        "gan": dict(
+            features_mean=[0.80, 0.55, 0.50, 0.65, 0.50, 0.40, 0.55, 0.70,
+                           0.55, 0.40, 0.55, 0.88, 0.40, 0.45, 0.18, 0.55],
+            features_std=0.06,
+            period_s=[0.80, 2.40],
+            trace_noise=0.06,
+            micro_amp=0.05,
+            micro_period_s=0.10,
+            micro_jitter=0.12,
+            phases=phases((0.46, 0.92, 0.50, 1.14), (0.08, 0.25, 0.40, 0.55),
+                          (0.38, 0.90, 0.55, 1.10), (0.08, 0.30, 0.60, 0.58)),
+            aperiodic=False,
+            **common,
+        ),
+        # Dense-graph GNNs (SBM node classification, COLLAB link pred.).
+        "gnn_dense": dict(
+            features_mean=[0.75, 0.50, 0.35, 0.60, 0.55, 0.45, 0.45, 0.60,
+                           0.60, 0.45, 0.50, 0.80, 0.35, 0.05, 0.20, 0.50],
+            features_std=0.07,
+            period_s=[0.50, 1.80],
+            trace_noise=0.07,
+            micro_amp=0.08,
+            micro_period_s=0.08,
+            micro_jitter=0.15,
+            phases=phases((0.14, 0.15, 0.45, 0.50), (0.34, 0.85, 0.60, 1.12),
+                          (0.36, 0.90, 0.65, 1.18), (0.16, 0.35, 0.70, 0.60)),
+            aperiodic=False,
+            **common,
+        ),
+        # Sparse/molecular GNNs: memory-bound, stall-heavy.
+        "gnn_sparse": dict(
+            features_mean=[0.55, 0.40, 0.18, 0.45, 0.62, 0.50, 0.35, 0.50,
+                           0.72, 0.60, 0.35, 0.75, 0.25, 0.05, 0.25, 0.35],
+            features_std=0.07,
+            period_s=[0.40, 1.40],
+            trace_noise=0.08,
+            micro_amp=0.09,
+            micro_period_s=0.06,
+            micro_jitter=0.20,
+            phases=phases((0.16, 0.10, 0.55, 0.52), (0.36, 0.70, 0.75, 1.10),
+                          (0.32, 0.75, 0.80, 1.16), (0.16, 0.30, 0.70, 0.62)),
+            aperiodic=False,
+            **common,
+        ),
+        # TSP-style GNNs: jittered micro-oscillations dominate the
+        # spectrum (the paper's hardest periodic-detection case).
+        "gnn_micro": dict(
+            features_mean=[0.65, 0.45, 0.25, 0.50, 0.52, 0.42, 0.40, 0.55,
+                           0.62, 0.50, 0.45, 0.78, 0.30, 0.05, 0.30, 0.42],
+            features_std=0.06,
+            period_s=[0.90, 2.60],
+            trace_noise=0.06,
+            micro_amp=0.22,
+            micro_period_s=0.05,
+            micro_jitter=0.25,
+            phases=phases((0.12, 0.15, 0.45, 0.52), (0.40, 0.80, 0.65, 1.10),
+                          (0.32, 0.85, 0.70, 1.16), (0.16, 0.30, 0.65, 0.60)),
+            aperiodic=False,
+            **common,
+        ),
+        # Small MLPs / tabular heads: short shallow periods.
+        "mlp": dict(
+            features_mean=[0.50, 0.35, 0.12, 0.50, 0.35, 0.30, 0.55, 0.65,
+                           0.40, 0.30, 0.45, 0.95, 0.15, 0.02, 0.30, 0.50],
+            features_std=0.06,
+            period_s=[0.20, 0.70],
+            trace_noise=0.06,
+            micro_amp=0.07,
+            micro_period_s=0.05,
+            micro_jitter=0.15,
+            phases=phases((0.18, 0.15, 0.35, 0.55), (0.40, 0.75, 0.45, 1.10),
+                          (0.26, 0.82, 0.50, 1.16), (0.16, 0.25, 0.55, 0.60)),
+            aperiodic=False,
+            **common,
+        ),
+        # Aperiodic workloads (classical ML, CSL/TU graph datasets):
+        # random segment walks with no usable period. High-ish compute
+        # sensitivity → modest capped headroom (§5.4's hard cases).
+        "aperiodic": dict(
+            features_mean=[0.70, 0.40, 0.10, 0.75, 0.18, 0.14, 0.65, 0.70,
+                           0.18, 0.25, 0.50, 0.90, 0.20, 0.02, 0.20, 0.78],
+            features_std=0.07,
+            period_s=[0.0, 0.0],
+            trace_noise=0.10,
+            micro_amp=0.12,
+            micro_period_s=0.06,
+            micro_jitter=0.30,
+            phases=phases((0.25, 0.30, 0.35, 0.60), (0.25, 0.85, 0.45, 1.12),
+                          (0.25, 0.90, 0.50, 1.20), (0.25, 0.45, 0.55, 0.75)),
+            aperiodic=True,
+            **common,
+        ),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Suites.
+# ---------------------------------------------------------------------------
+
+GNN_MODELS = ["GCN", "GAT", "GraphSage", "GatedGCN", "GIN", "MoNet", "MLP", "3WLGNN", "RingGNN"]
+
+
+def suites() -> dict:
+    def app(name, arch, **over):
+        d = {"name": name, "archetype": arch}
+        d.update(over)
+        return d
+
+    # AIBench component benchmarks (paper Table 1: 14 tasks). Eval/
+    # checkpoint every N iterations gives the abnormal-iteration spikes.
+    aibench = [
+        app("AI_IC", "cnn", abnormal_every=50, abnormal_scale=2.6),
+        app("AI_IGEN", "gan"),
+        app("AI_T2T", "transformer", abnormal_every=40, abnormal_scale=2.2),
+        app("AI_I2T", "cnn", abnormal_every=60, abnormal_scale=2.4),
+        app("AI_I2IC", "gan", abnormal_every=45, abnormal_scale=2.0),
+        app("AI_S2T", "rnn"),
+        app("AI_FE", "cnn", abnormal_every=35, abnormal_scale=2.8),
+        app("AI_3DFR", "cnn"),
+        app("AI_OBJ", "cnn", abnormal_every=55, abnormal_scale=2.2),
+        app("AI_VP", "rnn", abnormal_every=30, abnormal_scale=1.8),
+        app("AI_ICMP", "transformer"),
+        app("AI_3DOR", "gan", abnormal_every=40, abnormal_scale=2.0),
+        app("AI_TS", "rnn", abnormal_every=25, abnormal_scale=2.0),
+        app("AI_L2R", "mlp"),
+    ]
+
+    classical = [app("TSVM", "aperiodic"), app("TGBM", "aperiodic")]
+
+    # benchmarking-gnns: 5 periodic dataset families × 9 models + the
+    # aperiodic CSL / TU families (paper: CSL and TU are non-periodical).
+    gnns = []
+    for ds, arch in [
+        ("SBM", "gnn_dense"),
+        ("SP", "gnn_sparse"),
+        ("TSP", "gnn_micro"),
+        ("MLC", "gnn_sparse"),
+        ("CLB", "gnn_dense"),
+    ]:
+        for m in GNN_MODELS:
+            gnns.append(app(f"{ds}_{m}", arch))
+    for m in ["GCN", "GIN", "MLP", "GatedGCN", "RingGNN"]:
+        gnns.append(app(f"CSL_{m}", "aperiodic"))
+    for m in ["GCN", "GIN", "MLP", "GAT", "GatedGCN"]:
+        gnns.append(app(f"TU_{m}", "aperiodic"))
+
+    # Training corpus for the offline GBT models (disjoint from the
+    # evaluation suites; §4.3.2 trains on a separate workload set).
+    pt_archs = ["cnn", "transformer", "rnn", "gan", "gnn_dense", "gnn_sparse", "gnn_micro", "mlp"]
+    pt_names = [
+        "resnet50", "resnet18", "vgg16", "mobilenet_v2", "efficientnet_b0",
+        "densenet121", "inception_v3", "bert_base", "bert_large", "gpt2_small",
+        "t5_small", "roberta_base", "lstm_lm", "gru_seq2seq", "tacotron",
+        "wavernn", "dcgan", "stylegan_lite", "pix2pix", "cyclegan",
+        "vae_celeba", "unet_seg", "deeplab_v3", "fasterrcnn_fpn", "ssd300",
+        "yolo_v3", "pointnet", "graphsage_ppi", "gcn_cora", "gat_citeseer",
+        "gin_molhiv", "mpnn_qm9", "schnet_md17", "dlrm_tiny", "ncf_ml20m",
+        "xdeepfm", "mlp_tabular", "wide_deep", "ft_transformer", "tabnet",
+        "albert_tiny", "distilbert", "segformer_b0", "swin_tiny",
+    ]
+    pytorch_train = [
+        app(f"PTB_{n}", pt_archs[i % len(pt_archs)]) for i, n in enumerate(pt_names)
+    ]
+
+    return {
+        "aibench": {"seed_salt": 1101, "apps": aibench},
+        "classical": {"seed_salt": 2202, "apps": classical},
+        "gnns": {"seed_salt": 3303, "apps": gnns},
+        "pytorch_train": {"seed_salt": 4404, "apps": pytorch_train},
+    }
+
+
+def build() -> dict:
+    return {
+        "global_seed": 20220116,
+        "gears": {
+            # Paper §3.1: 99 SM gears, f = 210 + 15·gear MHz, 450..1920.
+            "sm_gear_min": 16,
+            "sm_gear_max": 114,
+            "sm_mhz_base": 210.0,
+            "sm_mhz_step": 15.0,
+            # RTX3080Ti memory P-states (MHz).
+            "mem_mhz": [405.0, 810.0, 5001.0, 9251.0, 9501.0],
+            "reference_sm_gear": 114,
+            "reference_mem_gear": 4,
+            "default_sm_gear": 114,
+            "default_mem_gear": 4,
+        },
+        "power": {
+            "p_idle_w": 36.0,
+            # SM voltage curve: flat at v_min below the knee, superlinear
+            # rise to v_max at f_max (boost-region inefficiency).
+            "v_min": 0.712,
+            "v_max": 1.081,
+            "f_vknee_mhz": 960.0,
+            "f_max_mhz": 1920.0,
+            "c_sm_w_per_ghz_v2": 124.0,
+            "c_mem_w_per_ghz": 9.2,
+            "c_mem_static_w_per_ghz": 2.3,
+            # Per-mem-gear V² proxy: lower P-states run at lower rail
+            # voltage, so W/GHz shrinks with the gear index.
+            "mem_v2_factor": [0.60, 0.64, 0.72, 0.88, 1.00],
+            "thermal_tau_s": 0.65,
+            "tdp_w": 350.0,
+        },
+        "time_model": {
+            # DRAM-clock sensitivity exponent of the memory term.
+            "mem_exponent": 0.85,
+            # Floor on any single time-decomposition fraction.
+            "min_frac": 0.05,
+        },
+        "noise": {
+            "hidden_coeff_std": 0.12,
+            "counter_meas_std": 0.035,
+            "power_meas_std": 0.012,
+            "iter_jitter_std": 0.02,
+            "energy_meas_std": 0.004,
+        },
+        "profiling_tax": {
+            "counter_time_mult": 1.11,
+            "counter_power_mult": 1.08,
+            "nvml_time_mult": 1.005,
+        },
+        "feature_names": FEATURE_NAMES,
+        "coeff_maps": coeff_maps(),
+        "archetypes": archetypes(),
+        "suites": suites(),
+    }
+
+
+def main() -> None:
+    root = os.path.abspath(os.path.join(os.path.dirname(__file__), "..", ".."))
+    out = os.path.join(root, "data", "groundtruth.json")
+    os.makedirs(os.path.dirname(out), exist_ok=True)
+    with open(out, "w") as f:
+        json.dump(build(), f, indent=1)
+        f.write("\n")
+    print(f"wrote {out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -2,6 +2,7 @@
 
 use crate::coordinator::oracle::{oracle_full, oracle_ordered};
 use crate::device::sim_device;
+use crate::policy::PolicyRegistry;
 use crate::search::Objective;
 use crate::sim::{find_app, Spec};
 use crate::signal::{calc_period_fft_argmax, online_detect, composite_feature, PeriodCfg};
@@ -12,6 +13,7 @@ use std::sync::Arc;
 pub fn dispatch(args: &Args) -> anyhow::Result<()> {
     match args.subcommand.as_deref() {
         Some("list") => cmd_list(),
+        Some("policies") => cmd_policies(args),
         Some("calibrate") => cmd_calibrate(args),
         Some("detect") => cmd_detect(args),
         Some("run") => crate::coordinator::cli_run(args),
@@ -34,9 +36,12 @@ USAGE: gpoeo <SUBCOMMAND> [OPTIONS]
 
 SUBCOMMANDS:
   list                         list benchmark suites and applications
+  policies                     list registered policies (descriptions +
+                               default configs) — valid --policy values
   calibrate [--suite S]        ground-truth coefficients + oracle savings
   detect --app A [--sm-gear G] period detection on a simulated trace
-  run --app A [--objective O]  GPOEO online optimization of one app
+  run --app A [--policy P]     online optimization of one app under any
+                               registered policy (--objective O)
   sweep [--parallel N]         all-app sweep on a worker fleet; records
                                per-app savings + wall clock in
                                BENCH_sweep.json
@@ -45,9 +50,10 @@ SUBCOMMANDS:
   experiment <id>              regenerate a paper table/figure
                                (fig1 fig2 fig3 fig5 fig6 fig7 fig8 fig9
                                 fig10 fig11 fig12 fig13 table3 fig14
-                                fig15 headline | all)
+                                fig15 headline policies | all)
   daemon [--socket PATH]       Begin/End API server (micro-intrusive
-                               mode; --workers N fleet threads)
+                               mode; --workers N fleet threads;
+                               per-connection POLICY <name> selection)
 
 COMMON OPTIONS:
   --artifacts DIR              AOT artifact directory (default: artifacts)
@@ -70,6 +76,20 @@ fn cmd_list() -> anyhow::Result<()> {
             );
         }
     }
+    Ok(())
+}
+
+/// `gpoeo policies` — the registry, so discoverable names replace
+/// tribal knowledge about what `--policy` accepts.
+fn cmd_policies(args: &Args) -> anyhow::Result<()> {
+    let mut t = Table::new(
+        "Registered policies (gpoeo run/sweep --policy NAME; daemon: POLICY NAME)",
+        &["name", "description", "default config"],
+    );
+    for b in PolicyRegistry::global().iter() {
+        t.rowf(&[s(b.name()), s(b.describe()), s(b.default_config())]);
+    }
+    print_table(&t, args);
     Ok(())
 }
 

@@ -422,6 +422,10 @@ impl crate::coordinator::Policy for Gpoeo {
         "gpoeo"
     }
 
+    fn gpoeo_stats(&self) -> Option<GpoeoStats> {
+        Some(self.stats.clone())
+    }
+
     fn tick(&mut self, gpu: &mut dyn Device) {
         let ts = self.cfg.ts;
         match self.phase {

@@ -8,6 +8,8 @@
 //! socket with a line protocol:
 //!
 //! ```text
+//! -> POLICY <name>     (optional, before BEGIN; default: gpoeo)
+//! <- OK policy <name>
 //! -> BEGIN <app-name> [iters]
 //! <- OK session started
 //! -> STATUS            (any time)
@@ -16,14 +18,18 @@
 //! <- RESULT <energy_j> <time_s> <iterations> <sm_gear> <mem_gear>
 //! ```
 //!
-//! One session at a time per connection. Sessions from all connections
-//! are served by a shared [`Fleet`]: each fleet worker owns one
-//! [`Predictor`](crate::model::Predictor) (the PJRT HLO executables
-//! compile once per worker, not once per connection), and concurrent
-//! clients are spread across the pool. Every failure path answers with
-//! an `ERR <reason>` line — a client never hangs on a silent close.
+//! One session at a time per connection. `POLICY` selects any policy
+//! registered in [`crate::policy::PolicyRegistry`] for the *next*
+//! session; an unregistered name answers `ERR unknown policy ...`.
+//! Sessions from all connections are served by a shared [`Fleet`]: each
+//! fleet worker owns one [`Predictor`](crate::model::Predictor) (the
+//! PJRT HLO executables compile once per worker, not once per
+//! connection), and concurrent clients are spread across the pool.
+//! Every failure path answers with an `ERR <reason>` line — a client
+//! never hangs on a silent close.
 
-use crate::coordinator::{Fleet, GpoeoCfg, SessionHandle};
+use crate::coordinator::{Fleet, SessionHandle};
+use crate::policy::{PolicyRegistry, PolicySpec};
 use crate::sim::{find_app, Spec};
 use std::io::{BufRead, BufReader, Write};
 use std::os::unix::net::{UnixListener, UnixStream};
@@ -71,11 +77,40 @@ fn handle_connection(stream: UnixStream, fleet: Arc<Fleet>) -> anyhow::Result<()
     // The connection's active session, if any. Dropped (aborted) if the
     // client disconnects without END.
     let mut session: Option<SessionHandle> = None;
+    // The policy the next BEGIN will run (selected via POLICY).
+    let mut policy = PolicySpec::registered("gpoeo");
 
     for line in reader.lines() {
         let line = line?;
         let mut parts = line.split_whitespace();
         match parts.next() {
+            Some("POLICY") => {
+                if session.is_some() {
+                    writeln!(writer, "ERR session already active (END it first)")?;
+                } else {
+                    match parts.next() {
+                        None => writeln!(
+                            writer,
+                            "ERR POLICY requires a name (see `gpoeo policies`)"
+                        )?,
+                        // Reject trailing tokens instead of silently
+                        // ignoring them — a client sending `POLICY bandit
+                        // bandit-algo=exp3` must not quietly run defaults
+                        // (policy options are a CLI affair: run/sweep).
+                        Some(_) if line.split_whitespace().count() > 2 => writeln!(
+                            writer,
+                            "ERR POLICY takes a single name (options only via gpoeo run/sweep)"
+                        )?,
+                        Some(name) => match PolicyRegistry::global().get(name) {
+                            Ok(_) => {
+                                policy = PolicySpec::registered(name);
+                                writeln!(writer, "OK policy {name}")?;
+                            }
+                            Err(e) => writeln!(writer, "ERR {e}")?,
+                        },
+                    }
+                }
+            }
             Some("BEGIN") => {
                 if session.is_some() {
                     writeln!(writer, "ERR session already active (END it first)")?;
@@ -83,7 +118,7 @@ fn handle_connection(stream: UnixStream, fleet: Arc<Fleet>) -> anyhow::Result<()
                     let name = parts.next().unwrap_or("");
                     let iters: u64 = parts.next().and_then(|s| s.parse().ok()).unwrap_or(300);
                     let started = find_app(fleet.spec(), name)
-                        .and_then(|app| fleet.begin(app, GpoeoCfg::default(), iters));
+                        .and_then(|app| fleet.begin(app, policy.clone(), iters));
                     match started {
                         Ok(h) => {
                             session = Some(h);
@@ -226,6 +261,55 @@ mod tests {
         let line = c.roundtrip("BEGIN");
         assert!(line.starts_with("ERR"), "{line}");
 
+        writeln!(c.w, "QUIT").unwrap();
+    }
+
+    #[test]
+    fn policy_selection_before_begin() {
+        // `bandit` needs no model artifacts, so the full POLICY→BEGIN→END
+        // cycle runs everywhere (including CI without `make artifacts`).
+        let sock = spawn_daemon("policy", 1);
+        let mut c = Client::connect(&sock);
+
+        let line = c.roundtrip("POLICY NOT_A_POLICY");
+        assert!(line.starts_with("ERR unknown policy"), "{line}");
+
+        let line = c.roundtrip("POLICY");
+        assert!(line.starts_with("ERR POLICY requires a name"), "{line}");
+
+        let line = c.roundtrip("POLICY bandit bandit-algo=exp3");
+        assert!(line.starts_with("ERR POLICY takes a single name"), "{line}");
+
+        let line = c.roundtrip("POLICY bandit");
+        assert!(line.starts_with("OK policy bandit"), "{line}");
+
+        let line = c.roundtrip("BEGIN AI_TS 30");
+        assert!(line.starts_with("OK"), "{line}");
+
+        // Mid-session re-selection is rejected; the session is untouched.
+        let line = c.roundtrip("POLICY odpp");
+        assert!(line.starts_with("ERR session already active"), "{line}");
+
+        let line = c.roundtrip("END");
+        assert!(line.starts_with("RESULT"), "{line}");
+        let iters: u64 = line.split_whitespace().nth(3).unwrap().parse().unwrap();
+        assert!(iters >= 30);
+        writeln!(c.w, "QUIT").unwrap();
+    }
+
+    #[test]
+    fn policy_survives_across_sessions_per_connection() {
+        // The POLICY selection applies to every subsequent BEGIN on the
+        // same connection until changed (odpp is artifact-free too).
+        let sock = spawn_daemon("policy2", 1);
+        let mut c = Client::connect(&sock);
+        assert!(c.roundtrip("POLICY powercap").starts_with("OK"));
+        for _ in 0..2 {
+            let line = c.roundtrip("BEGIN AI_FE 20");
+            assert!(line.starts_with("OK"), "{line}");
+            let line = c.roundtrip("END");
+            assert!(line.starts_with("RESULT"), "{line}");
+        }
         writeln!(c.w, "QUIT").unwrap();
     }
 

@@ -23,12 +23,10 @@
 //!   sessions pinned to a worker, driven incrementally (the daemon's
 //!   Begin/Status/End protocol).
 
-use crate::coordinator::{
-    run_budget_s, run_sim, savings, DefaultPolicy, Gpoeo, GpoeoCfg, GpoeoStats, Odpp, OdppCfg,
-    Policy, RunResult, Savings,
-};
+use crate::coordinator::{run_budget_s, run_sim, savings, GpoeoStats, Policy, RunResult, Savings};
 use crate::device::{boxed_sim_device, Device};
 use crate::model::Predictor;
+use crate::policy::{PolicyCtx, PolicyRegistry, PolicySpec};
 use crate::sim::{AppParams, Spec};
 use std::cell::OnceCell;
 use std::collections::{HashMap, VecDeque};
@@ -37,30 +35,10 @@ use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
 use std::sync::Arc;
 use std::thread::JoinHandle;
 
-/// Which policy a sweep job runs (built inside the worker, where the
-/// worker's predictor lives).
-#[derive(Clone)]
-pub enum PolicySpec {
-    /// NVIDIA default scheduling (the baseline itself).
-    Default,
-    /// The GPOEO online controller.
-    Gpoeo(GpoeoCfg),
-    /// The ODPP baseline.
-    Odpp(OdppCfg),
-}
-
-impl PolicySpec {
-    pub fn label(&self) -> &'static str {
-        match self {
-            PolicySpec::Default => "default",
-            PolicySpec::Gpoeo(_) => "gpoeo",
-            PolicySpec::Odpp(_) => "odpp",
-        }
-    }
-}
-
 /// One unit of sweep work: run `policy` on `app` for `n_iters` work
-/// units, scored against a fresh NVIDIA-default baseline.
+/// units, scored against a fresh NVIDIA-default baseline. The policy is
+/// a registry [`PolicySpec`] — it crosses to the worker as (name,
+/// config) and is built there, next to the worker's predictor.
 #[derive(Clone)]
 pub struct SweepJob {
     pub app: AppParams,
@@ -90,7 +68,7 @@ pub struct SessionStatus {
 /// Session parameters shipped to a worker by [`Fleet::begin`].
 struct BeginReq {
     app: AppParams,
-    cfg: GpoeoCfg,
+    policy: PolicySpec,
     target_iters: u64,
 }
 
@@ -252,12 +230,14 @@ impl Fleet {
             .collect()
     }
 
-    /// Start an interactive GPOEO session on the least-loaded worker.
-    /// Fails if that worker has no predictor (`no predictor: ...`).
+    /// Start an interactive session on the least-loaded worker, driving
+    /// any registered policy. Fails on an unknown policy name, or when
+    /// the policy needs a predictor the worker cannot load
+    /// (`no predictor: ...`).
     pub fn begin(
         &self,
         app: AppParams,
-        cfg: GpoeoCfg,
+        policy: PolicySpec,
         target_iters: u64,
     ) -> anyhow::Result<SessionHandle> {
         let w = self
@@ -271,7 +251,7 @@ impl Fleet {
             id,
             req: Box::new(BeginReq {
                 app,
-                cfg,
+                policy,
                 target_iters,
             }),
             reply,
@@ -406,7 +386,7 @@ const END_SLICE_TICKS: u64 = 20_000;
 
 struct WorkerSession {
     dev: Box<dyn Device>,
-    controller: Gpoeo,
+    policy: Box<dyn Policy>,
     target_iters: u64,
 }
 
@@ -420,7 +400,7 @@ impl WorkerSession {
             if self.done() {
                 break;
             }
-            self.controller.tick(self.dev.as_mut());
+            self.policy.tick(self.dev.as_mut());
         }
     }
 
@@ -431,7 +411,7 @@ impl WorkerSession {
             if self.done() || self.dev.time_s() >= budget_s {
                 break;
             }
-            self.controller.tick(self.dev.as_mut());
+            self.policy.tick(self.dev.as_mut());
         }
         self.done() || self.dev.time_s() >= budget_s
     }
@@ -473,20 +453,31 @@ fn worker_loop(spec: Arc<Spec>, rx: Receiver<Cmd>, self_tx: Sender<Cmd>) {
                 let _ = reply.send((worker, idx, run_job(&spec, &predictor, &job)));
             }
             Cmd::Begin { id, req, reply } => {
-                let r = match predictor.get_or_init(load_predictor) {
-                    Ok(p) => {
+                // Build the policy here, on the worker thread: a policy
+                // that needs the predictor gets this worker's copy; a
+                // model-free one never triggers the load at all.
+                let provider = || {
+                    predictor
+                        .get_or_init(load_predictor)
+                        .clone()
+                        .map_err(|e| anyhow::anyhow!("no predictor: {e}"))
+                };
+                let ctx = PolicyCtx {
+                    spec: &spec,
+                    predictor: &provider,
+                };
+                let r = PolicyRegistry::global()
+                    .build_spec(&req.policy, &ctx)
+                    .map(|policy| {
                         sessions.insert(
                             id,
                             WorkerSession {
                                 dev: boxed_sim_device(&spec, &req.app),
-                                controller: Gpoeo::new(req.cfg, p.clone()),
+                                policy,
                                 target_iters: req.target_iters,
                             },
                         );
-                        Ok(())
-                    }
-                    Err(e) => Err(anyhow::anyhow!("no predictor: {e}")),
-                };
+                    });
                 let _ = reply.send(r);
             }
             Cmd::Step {
@@ -555,23 +546,28 @@ fn run_job(
     predictor: &OnceCell<Result<Arc<Predictor>, String>>,
     job: &SweepJob,
 ) -> anyhow::Result<JobOutcome> {
-    let base = run_sim(spec, &job.app, &mut DefaultPolicy { ts: 0.025 }, job.n_iters);
-    let (run, stats) = match &job.policy {
-        PolicySpec::Default => (base.clone(), None),
-        PolicySpec::Odpp(cfg) => {
-            let mut p = Odpp::new(cfg.clone());
-            (run_sim(spec, &job.app, &mut p, job.n_iters), None)
-        }
-        PolicySpec::Gpoeo(cfg) => {
-            let p = predictor
-                .get_or_init(load_predictor)
-                .as_ref()
-                .map_err(|e| anyhow::anyhow!("no predictor: {e}"))?;
-            let mut g = Gpoeo::new(cfg.clone(), p.clone());
-            let r = run_sim(spec, &job.app, &mut g, job.n_iters);
-            (r, Some(g.stats.clone()))
-        }
+    let provider = || {
+        predictor
+            .get_or_init(load_predictor)
+            .clone()
+            .map_err(|e| anyhow::anyhow!("no predictor: {e}"))
     };
+    let ctx = PolicyCtx {
+        spec,
+        predictor: &provider,
+    };
+    let reg = PolicyRegistry::global();
+
+    // The baseline is itself a registered policy; running it fresh (even
+    // for `default` jobs) keeps this loop free of name matching, and the
+    // deterministic simulator makes the re-run bit-identical anyway.
+    let mut base_policy = reg.build("default", &ctx, &job.policy.cfg)?;
+    let base = run_sim(spec, &job.app, base_policy.as_mut(), job.n_iters);
+
+    let mut policy = reg.build_spec(&job.policy, &ctx)?;
+    let run = run_sim(spec, &job.app, policy.as_mut(), job.n_iters);
+    let stats = policy.gpoeo_stats();
+
     let sv = savings(&base, &run);
     Ok(JobOutcome {
         base,
@@ -620,7 +616,7 @@ mod tests {
     fn parallel_sweep_matches_serial_and_preserves_order() {
         // ODPP needs no model artifacts, so this always runs.
         let spec = Arc::new(Spec::load_default().unwrap());
-        let jobs = test_jobs(&spec, PolicySpec::Odpp(OdppCfg::default()), 6);
+        let jobs = test_jobs(&spec, PolicySpec::registered("odpp"), 6);
         let expect_order: Vec<String> = jobs.iter().map(|j| j.app.name.clone()).collect();
 
         let serial = Fleet::new(spec.clone(), 1).run_jobs(jobs.clone());
@@ -641,10 +637,34 @@ mod tests {
             return;
         }
         let spec = Arc::new(Spec::load_default().unwrap());
-        let jobs = test_jobs(&spec, PolicySpec::Gpoeo(GpoeoCfg::default()), 4);
+        let jobs = test_jobs(&spec, PolicySpec::registered("gpoeo"), 4);
         let serial = Fleet::new(spec.clone(), 1).run_jobs(jobs.clone());
         let parallel = Fleet::new(spec.clone(), 4).run_jobs(jobs);
         assert_same_outcomes(&serial, &parallel);
+    }
+
+    #[test]
+    fn registered_policies_parallel_sweep_matches_serial() {
+        // The new model-free families through the fleet: no artifacts
+        // needed, so the registry dispatch path is always exercised.
+        let spec = Arc::new(Spec::load_default().unwrap());
+        for name in ["bandit", "powercap"] {
+            let jobs = test_jobs(&spec, PolicySpec::registered(name), 4);
+            let serial = Fleet::new(spec.clone(), 1).run_jobs(jobs.clone());
+            let parallel = Fleet::new(spec.clone(), 2).run_jobs(jobs);
+            assert_same_outcomes(&serial, &parallel);
+        }
+    }
+
+    #[test]
+    fn unknown_policy_fails_the_job_not_the_fleet() {
+        let spec = Arc::new(Spec::load_default().unwrap());
+        let mut jobs = test_jobs(&spec, PolicySpec::registered("odpp"), 2);
+        jobs[0].policy = PolicySpec::registered("warpdrive");
+        let out = Fleet::new(spec, 2).run_jobs(jobs);
+        let err = out[0].as_ref().unwrap_err().to_string();
+        assert!(err.starts_with("unknown policy"), "{err}");
+        assert!(out[1].is_ok(), "the healthy job must still complete");
     }
 
     #[test]
@@ -660,7 +680,7 @@ mod tests {
         let handles: Vec<SessionHandle> = apps
             .iter()
             .take(3)
-            .map(|a| fleet.begin(a.clone(), GpoeoCfg::default(), 30).unwrap())
+            .map(|a| fleet.begin(a.clone(), PolicySpec::registered("gpoeo"), 30).unwrap())
             .collect();
         for h in &handles {
             let st = h.step(50).unwrap();
@@ -675,6 +695,28 @@ mod tests {
     }
 
     #[test]
+    fn model_free_interactive_session_runs_without_artifacts() {
+        // `bandit` needs no predictor: Begin must succeed on a worker
+        // that could never load one, and the unknown-name path must
+        // answer with the registry error.
+        let spec = Arc::new(Spec::load_default().unwrap());
+        let fleet = Fleet::new(spec.clone(), 1);
+        let app = crate::sim::find_app(&spec, "AI_TS").unwrap();
+        let h = fleet
+            .begin(app.clone(), PolicySpec::registered("bandit"), 25)
+            .unwrap();
+        assert!(h.step(50).unwrap().time_s > 0.0);
+        let fin = h.end().unwrap();
+        assert!(fin.done && fin.iterations >= 25);
+
+        let err = fleet
+            .begin(app, PolicySpec::registered("warpdrive"), 10)
+            .unwrap_err()
+            .to_string();
+        assert!(err.starts_with("unknown policy"), "{err}");
+    }
+
+    #[test]
     fn dropping_a_session_releases_it_without_killing_the_worker() {
         if Predictor::load_best().is_err() {
             eprintln!("skipping: artifacts missing (run `make artifacts`)");
@@ -683,8 +725,10 @@ mod tests {
         let spec = Arc::new(Spec::load_default().unwrap());
         let fleet = Fleet::new(spec.clone(), 1);
         let app = crate::sim::find_app(&spec, "AI_TS").unwrap();
-        let h = fleet.begin(app.clone(), GpoeoCfg::default(), 20).unwrap();
-        let h2 = fleet.begin(app, GpoeoCfg::default(), 20).unwrap();
+        let h = fleet
+            .begin(app.clone(), PolicySpec::registered("gpoeo"), 20)
+            .unwrap();
+        let h2 = fleet.begin(app, PolicySpec::registered("gpoeo"), 20).unwrap();
         drop(h);
         // The worker is still alive and still serves the other session.
         assert!(h2.step(10).is_ok());

@@ -3,7 +3,9 @@
 //! the ODPP baseline, the exhaustive oracle, the parallel fleet engine
 //! and the Begin/End daemon API. Everything here drives devices through
 //! [`crate::device::Device`] — nothing below this line names the
-//! concrete simulator.
+//! concrete simulator — and constructs policies exclusively through
+//! [`crate::policy::PolicyRegistry`], so adding an optimizer never
+//! touches this module.
 
 pub mod controller;
 pub mod daemon;
@@ -13,15 +15,19 @@ pub mod oracle;
 pub mod runner;
 
 pub use controller::{Gpoeo, GpoeoCfg, GpoeoStats};
-pub use fleet::{Fleet, JobOutcome, PolicySpec, SessionHandle, SessionStatus, SweepJob};
+pub use fleet::{Fleet, JobOutcome, SessionHandle, SessionStatus, SweepJob};
 pub use odpp::{Odpp, OdppCfg};
 pub use oracle::{oracle_full, oracle_ordered, OracleResult};
 pub use runner::{
     default_iters, run_budget_s, run_policy, run_sim, savings, DefaultPolicy, Policy, RunResult,
     Savings,
 };
+// Re-exported for continuity: the policy-selection type moved into the
+// policy subsystem when construction was centralized there.
+pub use crate::policy::PolicySpec;
 
 use crate::model::Predictor;
+use crate::policy::{PolicyConfig, PolicyCtx, PolicyRegistry};
 use crate::search::Objective;
 use crate::sim::{find_app, make_suite, AppParams, Spec};
 use crate::util::cli::Args;
@@ -42,44 +48,33 @@ pub fn parse_objective(args: &Args) -> anyhow::Result<Objective> {
     })
 }
 
-/// `gpoeo run --app NAME [--policy gpoeo|odpp|default] [--iters N]`
+/// `gpoeo run --app NAME [--policy NAME] [--iters N]` — any registered
+/// policy (see `gpoeo policies`).
 pub fn cli_run(args: &Args) -> anyhow::Result<()> {
     let spec = Arc::new(Spec::load_default()?);
     let name = args
         .opt("app")
         .ok_or_else(|| anyhow::anyhow!("run requires --app NAME"))?;
     let app = find_app(&spec, name)?;
-    let objective = parse_objective(args)?;
+    let cfg = PolicyConfig::from_args(args)?;
     let n_iters = args.opt_u64("iters", default_iters(&app))?;
 
-    // Baseline.
-    let mut dflt = DefaultPolicy { ts: 0.025 };
-    let base = run_sim(&spec, &app, &mut dflt, n_iters);
-
+    let reg = PolicyRegistry::global();
     let policy_name = args.opt_or("policy", "gpoeo");
-    let (result, stats) = match policy_name {
-        "default" => (base.clone(), None),
-        "odpp" => {
-            let mut p = Odpp::new(OdppCfg {
-                objective,
-                ..OdppCfg::default()
-            });
-            (run_sim(&spec, &app, &mut p, n_iters), None)
-        }
-        "gpoeo" => {
-            let predictor = Arc::new(Predictor::load_best()?);
-            let mut p = Gpoeo::new(
-                GpoeoCfg {
-                    objective,
-                    ..GpoeoCfg::default()
-                },
-                predictor,
-            );
-            let r = run_sim(&spec, &app, &mut p, n_iters);
-            (r, Some(p.stats.clone()))
-        }
-        other => anyhow::bail!("unknown policy '{other}'"),
+    reg.get(policy_name)?; // fail fast, before the baseline run
+    let load = || Predictor::load_best().map(Arc::new);
+    let ctx = PolicyCtx {
+        spec: &spec,
+        predictor: &load,
     };
+
+    // Baseline: the registry's `default` policy is the baseline itself.
+    let mut dflt = reg.build("default", &ctx, &cfg)?;
+    let base = run_sim(&spec, &app, dflt.as_mut(), n_iters);
+
+    let mut policy = reg.build(policy_name, &ctx, &cfg)?;
+    let result = run_sim(&spec, &app, policy.as_mut(), n_iters);
+    let stats = policy.gpoeo_stats();
 
     let s = savings(&base, &result);
     println!("app {name} ({} iterations)", n_iters);
@@ -124,7 +119,6 @@ pub fn cli_run(args: &Args) -> anyhow::Result<()> {
 /// across runs.
 pub fn cli_sweep(args: &Args) -> anyhow::Result<()> {
     let spec = Arc::new(Spec::load_default()?);
-    let objective = parse_objective(args)?;
     let workers = args.opt_usize("parallel", 1)?.max(1);
     let quick = args.has_flag("quick");
 
@@ -147,18 +141,8 @@ pub fn cli_sweep(args: &Args) -> anyhow::Result<()> {
     };
 
     let policy_name = args.opt_or("policy", "gpoeo").to_string();
-    let policy = match policy_name.as_str() {
-        "gpoeo" => PolicySpec::Gpoeo(GpoeoCfg {
-            objective,
-            ..GpoeoCfg::default()
-        }),
-        "odpp" => PolicySpec::Odpp(OdppCfg {
-            objective,
-            ..OdppCfg::default()
-        }),
-        "default" => PolicySpec::Default,
-        other => anyhow::bail!("unknown policy '{other}'"),
-    };
+    PolicyRegistry::global().get(&policy_name)?; // fail fast on unknown names
+    let policy = PolicySpec::new(&policy_name, PolicyConfig::from_args(args)?);
 
     let fixed_iters = args.opt_u64("iters", 0)?;
     let jobs: Vec<SweepJob> = apps
@@ -285,11 +269,7 @@ fn write_bench(
         ("unix_time_s", Json::Num(unix_s)),
     ]);
 
-    let mut runs: Vec<Json> = std::fs::read_to_string(path)
-        .ok()
-        .and_then(|text| Json::parse(&text).ok())
-        .and_then(|j| j.get("runs").as_arr().map(|a| a.to_vec()))
-        .unwrap_or_default();
+    let mut runs = Json::bench_runs(path);
     runs.push(run);
 
     let doc = Json::obj(vec![

@@ -5,6 +5,7 @@
 //! controller code drives the simulator today and would drive an
 //! NVML-backed device unchanged.
 
+use crate::coordinator::GpoeoStats;
 use crate::device::{sim_device, Device};
 use crate::sim::{AppParams, Spec};
 use std::sync::Arc;
@@ -12,9 +13,20 @@ use std::sync::Arc;
 /// An online clock-management policy driven by sampling ticks. The policy
 /// owns the cadence: `tick` must advance the device by its sampling
 /// interval.
+///
+/// Policies are constructed by name through
+/// [`crate::policy::PolicyRegistry`] — nothing outside `policy/` matches
+/// on policy-name strings.
 pub trait Policy {
     fn name(&self) -> &'static str;
     fn tick(&mut self, dev: &mut dyn Device);
+
+    /// The GPOEO optimization trace, when this policy is the GPOEO
+    /// controller — the reporting hook the fleet and CLI use on boxed
+    /// policies. Everything else reports `None`.
+    fn gpoeo_stats(&self) -> Option<GpoeoStats> {
+        None
+    }
 }
 
 /// The NVIDIA default scheduling strategy: no controller at all (the
@@ -25,7 +37,9 @@ pub struct DefaultPolicy {
 
 impl Policy for DefaultPolicy {
     fn name(&self) -> &'static str {
-        "nvidia-default"
+        // Matches the registry key, so `RunResult::policy` strings and
+        // `--policy` values line up.
+        "default"
     }
     fn tick(&mut self, dev: &mut dyn Device) {
         dev.advance(self.ts);

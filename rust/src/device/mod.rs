@@ -57,6 +57,17 @@ pub trait Device {
 
     fn mem_gear(&self) -> usize;
 
+    /// Set the board power limit in watts (`f64::INFINITY` = uncapped) —
+    /// mirrors `nvmlDeviceSetPowerManagementLimit`. The device throttles
+    /// its *effective* SM clock down to the highest gear at or below the
+    /// requested one whose steady power fits under the limit; the
+    /// requested gear (`sm_gear()`) is preserved and restored when the
+    /// limit is lifted.
+    fn set_power_limit_w(&mut self, limit_w: f64);
+
+    /// Current board power limit (`f64::INFINITY` when uncapped).
+    fn power_limit_w(&self) -> f64;
+
     /// Instantaneous (power, SM util, mem util) with measurement noise —
     /// the sampling channel used for period detection.
     fn sample(&mut self, dt_since_last: f64) -> Instant;
@@ -137,6 +148,13 @@ mod tests {
         assert!(dev.true_energy_j() > 0.0);
         let s = dev.sample(0.025);
         assert!(s.power_w > 0.0);
+
+        // Power-limit surface: capping throttles, lifting restores.
+        assert_eq!(dev.power_limit_w(), f64::INFINITY);
+        dev.set_power_limit_w(180.0);
+        assert_eq!(dev.power_limit_w(), 180.0);
+        dev.set_power_limit_w(f64::INFINITY);
+        assert_eq!(dev.power_limit_w(), f64::INFINITY);
 
         assert!(!dev.profiling_active());
         dev.start_counter_session();

@@ -42,6 +42,14 @@ impl Device for SimGpu {
         SimGpu::mem_gear(self)
     }
 
+    fn set_power_limit_w(&mut self, limit_w: f64) {
+        SimGpu::set_power_limit_w(self, limit_w);
+    }
+
+    fn power_limit_w(&self) -> f64 {
+        SimGpu::power_limit_w(self)
+    }
+
     fn sample(&mut self, dt_since_last: f64) -> Instant {
         SimGpu::sample(self, dt_since_last)
     }

@@ -10,6 +10,7 @@ pub mod detection;
 pub mod helpers;
 pub mod motivation;
 pub mod online;
+pub mod policies;
 pub mod prediction;
 
 use crate::model::Predictor;
@@ -20,7 +21,7 @@ use std::sync::Arc;
 
 pub const EXPERIMENTS: &[&str] = &[
     "fig1", "fig2", "fig3", "fig5", "fig6", "fig7", "fig8", "fig9", "fig10", "fig11", "fig12",
-    "fig13", "table3", "fig14", "fig15", "headline", "ablation",
+    "fig13", "table3", "fig14", "fig15", "headline", "ablation", "policies",
 ];
 
 fn emit(t: &Table, args: &Args) -> anyhow::Result<()> {
@@ -120,6 +121,14 @@ pub fn cli_experiment(args: &Args) -> anyhow::Result<()> {
                 let p = lazy_predictor()?;
                 let (t, _) = ablation::run(&spec, &p);
                 emit(&t, args)?;
+            }
+            "policies" => {
+                // Dispatches through the registry + fleet; policies whose
+                // models are unavailable show up as failure counts rather
+                // than aborting the whole study.
+                let r = policies::head_to_head(&spec, args, quick)?;
+                emit(&r.table, args)?;
+                r.print_summary();
             }
             "headline" => {
                 let p = lazy_predictor()?;

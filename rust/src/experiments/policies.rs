@@ -1,0 +1,193 @@
+//! `gpoeo experiment policies` — the four-way head-to-head the policy
+//! subsystem exists for: GPOEO (model-based) vs ODPP (baseline) vs the
+//! switching-aware bandit vs the power-cap ladder, across the paper's 71
+//! evaluation apps, all dispatched through one [`Fleet`] so every worker
+//! compiles its predictor at most once for the whole comparison.
+//!
+//! Per policy the table reports mean energy saving / slowdown / ED²P
+//! saving over the NVIDIA-default baseline plus the wall clock the fleet
+//! spent; the same record is appended to `BENCH_policies.json` so the
+//! cross-policy trajectory accumulates across runs (same pattern as
+//! `BENCH_sweep.json`).
+
+use crate::coordinator::{default_iters, Fleet, SweepJob};
+use crate::policy::{PolicyConfig, PolicyRegistry, PolicySpec};
+use crate::sim::{make_suite, AppParams, Spec};
+use crate::util::cli::Args;
+use crate::util::json::Json;
+use crate::util::stats::mean;
+use crate::util::table::{s, Cell, Table};
+use std::sync::Arc;
+
+/// The contenders, in report order. All names resolve through the
+/// registry — adding a policy there is all it takes to extend the study.
+pub const CONTENDERS: &[&str] = &["gpoeo", "odpp", "bandit", "powercap"];
+
+/// Aggregate row for one policy.
+pub struct PolicyRow {
+    pub policy: String,
+    pub apps: usize,
+    pub failures: usize,
+    pub mean_saving: f64,
+    pub mean_slowdown: f64,
+    pub mean_ed2p: f64,
+    pub wall_s: f64,
+}
+
+pub struct HeadToHead {
+    pub table: Table,
+    pub rows: Vec<PolicyRow>,
+}
+
+impl HeadToHead {
+    pub fn print_summary(&self) {
+        for r in &self.rows {
+            println!(
+                "{:<9} saving {:>5.1}%  slowdown {:>5.1}%  ED2P {:>5.1}%  ({} apps, {} failed, {:.2}s wall)",
+                r.policy,
+                r.mean_saving * 100.0,
+                r.mean_slowdown * 100.0,
+                r.mean_ed2p * 100.0,
+                r.apps,
+                r.failures,
+                r.wall_s
+            );
+        }
+        println!("paper reference: GPOEO 16.2% saving / 5.1% slowdown over the 71 workloads");
+    }
+}
+
+/// The paper's 71 evaluation apps (AIBench 14 + classical 2 + gnns 55).
+fn evaluation_apps(spec: &Arc<Spec>) -> anyhow::Result<Vec<AppParams>> {
+    let mut apps = Vec::new();
+    for suite in ["aibench", "classical", "gnns"] {
+        apps.extend(make_suite(spec, suite)?);
+    }
+    Ok(apps)
+}
+
+pub fn head_to_head(spec: &Arc<Spec>, args: &Args, quick: bool) -> anyhow::Result<HeadToHead> {
+    let default_workers = std::thread::available_parallelism()
+        .map(|n| n.get().min(4))
+        .unwrap_or(2);
+    let workers = args.opt_usize("parallel", default_workers)?.max(1);
+    let cfg = PolicyConfig::from_args(args)?;
+    let reg = PolicyRegistry::global();
+    for name in CONTENDERS {
+        reg.get(name)?; // fail fast before any simulation
+    }
+
+    let apps = evaluation_apps(spec)?;
+    let fleet = Fleet::new(spec.clone(), workers);
+    let mut rows = Vec::new();
+    for &name in CONTENDERS {
+        let jobs: Vec<SweepJob> = apps
+            .iter()
+            .map(|app| {
+                let n = if quick {
+                    (default_iters(app) / 3).max(60)
+                } else {
+                    default_iters(app)
+                };
+                SweepJob {
+                    app: app.clone(),
+                    policy: PolicySpec::new(name, cfg.clone()),
+                    n_iters: n,
+                }
+            })
+            .collect();
+        let t0 = std::time::Instant::now();
+        let outcomes = fleet.run_jobs(jobs);
+        let wall_s = t0.elapsed().as_secs_f64();
+
+        let (mut sv, mut sl, mut ed) = (Vec::new(), Vec::new(), Vec::new());
+        let mut failures = 0usize;
+        for (app, outcome) in apps.iter().zip(outcomes) {
+            match outcome {
+                Ok(o) => {
+                    sv.push(o.savings.energy_saving);
+                    sl.push(o.savings.slowdown);
+                    ed.push(o.savings.ed2p_saving);
+                }
+                Err(e) => {
+                    failures += 1;
+                    // One representative notice per policy is enough;
+                    // gpoeo without artifacts fails on every app.
+                    if failures == 1 {
+                        eprintln!("experiment policies: {name} on {}: {e}", app.name);
+                    }
+                }
+            }
+        }
+        rows.push(PolicyRow {
+            policy: name.to_string(),
+            apps: sv.len(),
+            failures,
+            mean_saving: mean(&sv),
+            mean_slowdown: mean(&sl),
+            mean_ed2p: mean(&ed),
+            wall_s,
+        });
+    }
+
+    let mut table = Table::new(
+        &format!(
+            "Policy head-to-head — {} apps, {} workers{}",
+            apps.len(),
+            workers,
+            if quick { ", --quick" } else { "" }
+        ),
+        &["policy", "mean saving", "mean slowdown", "mean ED2P", "apps", "failed", "wall s"],
+    );
+    for r in &rows {
+        table.rowf(&[
+            s(&r.policy),
+            Cell::Pct(r.mean_saving),
+            Cell::Pct(r.mean_slowdown),
+            Cell::Pct(r.mean_ed2p),
+            Cell::U(r.apps),
+            Cell::U(r.failures),
+            Cell::F(r.wall_s, 2),
+        ]);
+    }
+
+    let bench_path = args.opt_or("bench", "BENCH_policies.json");
+    write_bench(bench_path, workers, quick, &rows)?;
+    println!("bench record appended to {bench_path}");
+
+    Ok(HeadToHead { table, rows })
+}
+
+/// Append one head-to-head record to the bench file (`runs[]` keeps the
+/// full history, like BENCH_sweep.json).
+fn write_bench(path: &str, workers: usize, quick: bool, rows: &[PolicyRow]) -> anyhow::Result<()> {
+    let policies: Vec<Json> = rows
+        .iter()
+        .map(|r| {
+            Json::obj(vec![
+                ("policy", Json::Str(r.policy.clone())),
+                ("apps", Json::Num(r.apps as f64)),
+                ("failures", Json::Num(r.failures as f64)),
+                ("mean_saving", Json::Num(r.mean_saving)),
+                ("mean_slowdown", Json::Num(r.mean_slowdown)),
+                ("mean_ed2p", Json::Num(r.mean_ed2p)),
+                ("wall_clock_s", Json::Num(r.wall_s)),
+            ])
+        })
+        .collect();
+    let unix_s = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_secs() as f64)
+        .unwrap_or(0.0);
+    let run = Json::obj(vec![
+        ("unix_time_s", Json::Num(unix_s)),
+        ("workers", Json::Num(workers as f64)),
+        ("quick", Json::Bool(quick)),
+        ("policies", Json::Arr(policies)),
+    ]);
+
+    let mut runs = Json::bench_runs(path);
+    runs.push(run);
+    std::fs::write(path, Json::obj(vec![("runs", Json::Arr(runs))]).to_pretty())?;
+    Ok(())
+}

@@ -18,7 +18,8 @@
 //! path.
 //!
 //! Layer map (see DESIGN.md):
-//! - L3: `coordinator` (controller, fleet, daemon), `signal`, `search`,
+//! - L3: `coordinator` (controller, fleet, daemon), `policy` (registry
+//!   + the bandit/power-cap families), `signal`, `search`,
 //!   `experiments` — all device-agnostic via [`device`]
 //! - Device backends: [`sim`] today; NVML tomorrow
 //! - L2/L1 artifacts: built by `make artifacts`, loaded by `runtime`
@@ -28,6 +29,7 @@ pub mod coordinator;
 pub mod device;
 pub mod experiments;
 pub mod model;
+pub mod policy;
 pub mod search;
 pub mod runtime;
 pub mod signal;

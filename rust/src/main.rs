@@ -2,12 +2,15 @@
 //!
 //! Subcommands:
 //! - `list`                      list suites and applications
+//! - `policies`                  list the registered policy families
 //! - `calibrate [--suite S]`     ground-truth model coefficients + oracle
 //! - `detect --app A [...]`      run period detection on a simulated trace
-//! - `run --app A [...]`         GPOEO online optimization on one app
+//! - `run --app A [--policy P]`  online optimization on one app (any registered policy)
 //! - `sweep [--parallel N]`      all-app sweep on a worker fleet (BENCH_sweep.json)
-//! - `experiment <id>`           regenerate a paper table/figure (fig1..fig15, table3, headline)
-//! - `daemon [--socket P]`       Begin/End API server (micro-intrusive mode, fleet-backed)
+//! - `experiment <id>`           regenerate a paper table/figure (fig1..fig15, table3,
+//!                               headline, policies)
+//! - `daemon [--socket P]`       Begin/End API server (micro-intrusive mode, fleet-backed,
+//!                               per-connection POLICY selection)
 
 use gpoeo::util::cli::Args;
 

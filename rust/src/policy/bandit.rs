@@ -1,0 +1,450 @@
+//! Switching-aware multi-armed bandit over a pruned SM-gear ladder.
+//!
+//! Xu et al. (2024) show that when gear changes are costly, online
+//! energy optimization is better framed as a bandit with an explicit
+//! switching-cost term than as model-based search: the learner only
+//! needs the *noisy meters* (energy counter + IPS proxy), no performance
+//! counters, no trained models, no period detection. That makes this
+//! family the model-free counterpoint to GPOEO in `gpoeo experiment
+//! policies`:
+//!
+//! - **Arms** are SM gears pruned to a ladder (`bandit-stride` apart,
+//!   from the floor gear up to the entry gear — the NVIDIA-default boost
+//!   point). Pruning keeps the pull budget proportional to the run
+//!   length instead of the 99-gear space; the memory clock is left at
+//!   the entry gear (a wrong memory clock is catastrophic, §4.3.4).
+//! - **Rewards** come from one decision period per pull: average power
+//!   from the noisy energy-meter delta and work rate from the noisy IPS
+//!   proxy, turned into (energy, time) ratios against a baseline
+//!   measured at the entry clocks, scored by the configured objective.
+//! - **Switching cost** is charged onto the observed loss whenever a
+//!   pull changes gears, and (for UCB) onto the selection index of every
+//!   non-current arm, so the learner settles instead of thrashing.
+//!
+//! Two algorithms share the harness: UCB1 (`bandit-algo=ucb`, default)
+//! and EXP3 (`bandit-algo=exp3`, adversarial-style updates). Both are
+//! deterministic given the device's noise stream — EXP3's sampling runs
+//! on a fixed-seed PCG64 — so fleet sweeps stay bit-reproducible.
+
+use super::{MeterWindow, PolicyBuilder, PolicyConfig, PolicyCtx};
+use crate::coordinator::Policy;
+use crate::device::Device;
+use crate::search::Objective;
+use crate::util::rng::Pcg64;
+
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum BanditAlgo {
+    Ucb,
+    Exp3,
+}
+
+#[derive(Clone)]
+pub struct BanditCfg {
+    pub objective: Objective,
+    /// NVML sampling interval (seconds) — one tick advances this far.
+    pub ts: f64,
+    pub algo: BanditAlgo,
+    /// Decision-period length per pull, seconds (0 = auto: ~3 nominal
+    /// iterations, clamped to [1, 6] s).
+    pub period_s: f64,
+    /// Gear distance between neighboring arms.
+    pub stride: usize,
+    /// Loss charged when a pull switches gears.
+    pub switch_cost: f64,
+    /// UCB exploration weight.
+    pub explore: f64,
+    /// EXP3 exploration/learning rate γ.
+    pub exp3_gamma: f64,
+    /// Decision periods spent measuring the baseline before pulling.
+    pub baseline_periods: usize,
+}
+
+impl Default for BanditCfg {
+    fn default() -> Self {
+        BanditCfg {
+            objective: Objective::paper_default(),
+            ts: 0.025,
+            algo: BanditAlgo::Ucb,
+            period_s: 0.0,
+            stride: 8,
+            switch_cost: 0.02,
+            explore: 0.18,
+            exp3_gamma: 0.15,
+            baseline_periods: 2,
+        }
+    }
+}
+
+impl BanditCfg {
+    pub fn from_config(cfg: &PolicyConfig) -> anyhow::Result<BanditCfg> {
+        let d = BanditCfg::default();
+        let algo = match cfg.opt("bandit-algo").unwrap_or("ucb") {
+            "ucb" => BanditAlgo::Ucb,
+            "exp3" => BanditAlgo::Exp3,
+            other => anyhow::bail!("--bandit-algo expects ucb|exp3, got '{other}'"),
+        };
+        Ok(BanditCfg {
+            objective: cfg.objective,
+            ts: cfg.opt_f64("ts", d.ts)?,
+            algo,
+            period_s: cfg.opt_f64("bandit-period", d.period_s)?,
+            stride: cfg.opt_usize("bandit-stride", d.stride)?.max(1),
+            switch_cost: cfg.opt_f64("switch-cost", d.switch_cost)?,
+            explore: cfg.opt_f64("bandit-explore", d.explore)?,
+            exp3_gamma: cfg.opt_f64("exp3-gamma", d.exp3_gamma)?.clamp(0.01, 1.0),
+            baseline_periods: cfg.opt_usize("bandit-baseline", d.baseline_periods)?.max(1),
+        })
+    }
+}
+
+/// Losses above this are treated as "maximally bad" when mapping to
+/// EXP3's [0, 1] reward scale (infeasible configs score 10+).
+const LOSS_CLIP: f64 = 2.0;
+
+enum Phase {
+    /// Waiting for the first tick (arms depend on the entry gear).
+    Boot,
+    /// Accumulating the baseline at the entry clocks.
+    Baseline { done: usize },
+    /// One arm pulled, measuring its decision period. `prob` is the
+    /// probability the selector played this arm with (1.0 for UCB) —
+    /// EXP3's importance weighting needs the true value.
+    Pull {
+        arm: usize,
+        switched: bool,
+        prob: f64,
+    },
+}
+
+/// The switching-aware bandit policy. Implements
+/// [`crate::coordinator::Policy`]; registered as `bandit`.
+pub struct Bandit {
+    pub cfg: BanditCfg,
+    phase: Phase,
+    window: Option<MeterWindow>,
+    period_s: f64,
+    /// Pruned SM-gear arms, ascending; `arms[current]` is live.
+    arms: Vec<usize>,
+    current: usize,
+    /// Per-arm pull count and mean observed loss (UCB state).
+    pulls: Vec<u64>,
+    mean_loss: Vec<f64>,
+    total_pulls: u64,
+    /// EXP3 log-weights (kept in log space for numeric safety).
+    log_w: Vec<f64>,
+    /// Baseline power/IPS at the entry clocks.
+    p_base: f64,
+    ips_base: f64,
+    base_acc: (f64, f64),
+    rng: Pcg64,
+    /// Total switch events (telemetry; exercised by tests).
+    pub switches: u64,
+}
+
+impl Bandit {
+    pub fn new(cfg: BanditCfg) -> Bandit {
+        Bandit {
+            cfg,
+            phase: Phase::Boot,
+            window: None,
+            period_s: 0.0,
+            arms: Vec::new(),
+            current: 0,
+            pulls: Vec::new(),
+            mean_loss: Vec::new(),
+            total_pulls: 0,
+            log_w: Vec::new(),
+            p_base: 0.0,
+            ips_base: 0.0,
+            base_acc: (0.0, 0.0),
+            // Fixed seed: selection must be reproducible run-to-run so
+            // parallel fleet sweeps stay bit-identical to serial ones.
+            rng: Pcg64::new(0xbad_d17 ^ 0x5eed, 0x0b5e55),
+            switches: 0,
+        }
+    }
+
+    fn boot(&mut self, dev: &mut dyn Device) {
+        let spec = dev.spec().clone();
+        let entry = dev.sm_gear();
+        let floor = spec.gears.sm_gear_min;
+        // Ladder from the floor gear up in `stride` steps; the entry
+        // gear (the "do nothing" arm) is always the top rung, so both
+        // ends of the range are reachable whatever the stride.
+        let mut arms: Vec<usize> = (floor..=entry).step_by(self.cfg.stride).collect();
+        if arms.last() != Some(&entry) {
+            arms.push(entry);
+        }
+        let n = arms.len();
+        self.current = n - 1; // entry gear
+        self.arms = arms;
+        self.pulls = vec![0; n];
+        self.mean_loss = vec![0.0; n];
+        self.log_w = vec![0.0; n];
+        self.period_s = if self.cfg.period_s > 0.0 {
+            self.cfg.period_s
+        } else {
+            (3.0 * dev.nominal_iter_s()).clamp(1.0, 6.0)
+        };
+        self.phase = Phase::Baseline { done: 0 };
+    }
+
+    /// Open a measurement window of one decision period.
+    fn open_window(&mut self, dev: &mut dyn Device) {
+        self.window = Some(MeterWindow::open(dev, self.period_s));
+    }
+
+    /// Close the window: (average power, IPS), both meter-noisy.
+    fn close_window(&mut self, dev: &mut dyn Device) -> Option<(f64, f64)> {
+        self.window.take()?.close(dev)
+    }
+
+    /// Loss of one pull from measured (power, IPS) against the baseline.
+    fn loss_of(&self, p: f64, ips: f64, switched: bool) -> f64 {
+        let t_ratio = self.ips_base / ips.max(1e-9);
+        let e_ratio = (p / ips.max(1e-9)) / (self.p_base / self.ips_base);
+        let mut loss = self.cfg.objective.score(e_ratio, t_ratio);
+        if switched {
+            loss += self.cfg.switch_cost;
+        }
+        loss
+    }
+
+    /// Pick the next arm and the probability it was played with (1.0
+    /// for the deterministic UCB). UCB: argmin of (mean loss −
+    /// exploration bonus + switching penalty for non-current arms);
+    /// every arm is primed once first, nearest-to-entry first. EXP3:
+    /// sample from the exponential-weights distribution mixed with
+    /// uniform exploration.
+    fn select(&mut self) -> (usize, f64) {
+        let n = self.arms.len();
+        match self.cfg.algo {
+            BanditAlgo::Ucb => {
+                // Prime unpulled arms from the top of the ladder down —
+                // high gears are the safe (feasible) end.
+                if let Some(i) = (0..n).rev().find(|&i| self.pulls[i] == 0) {
+                    return (i, 1.0);
+                }
+                let t = (self.total_pulls as f64).max(2.0);
+                let mut best = self.current;
+                let mut best_idx = f64::INFINITY;
+                for i in 0..n {
+                    let bonus = self.cfg.explore * (t.ln() / self.pulls[i] as f64).sqrt();
+                    let mut idx = self.mean_loss[i] - bonus;
+                    if i != self.current {
+                        idx += self.cfg.switch_cost;
+                    }
+                    if idx < best_idx {
+                        best_idx = idx;
+                        best = i;
+                    }
+                }
+                (best, 1.0)
+            }
+            BanditAlgo::Exp3 => {
+                let g = self.cfg.exp3_gamma;
+                let max = self.log_w.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+                let ws: Vec<f64> = self.log_w.iter().map(|&l| (l - max).exp()).collect();
+                let wsum: f64 = ws.iter().sum();
+                let probs: Vec<f64> = ws
+                    .iter()
+                    .map(|&w| (1.0 - g) * w / wsum + g / n as f64)
+                    .collect();
+                let mut u = self.rng.next_f64();
+                for (i, &p) in probs.iter().enumerate() {
+                    if u < p {
+                        return (i, p);
+                    }
+                    u -= p;
+                }
+                (n - 1, probs[n - 1])
+            }
+        }
+    }
+
+    /// Account one observed pull. `prob` is the probability the selector
+    /// played this arm with — the unbiased EXP3 importance weight.
+    fn update(&mut self, arm: usize, loss: f64, prob: f64) {
+        self.total_pulls += 1;
+        self.pulls[arm] += 1;
+        let k = self.pulls[arm] as f64;
+        self.mean_loss[arm] += (loss - self.mean_loss[arm]) / k;
+        if self.cfg.algo == BanditAlgo::Exp3 {
+            let n = self.arms.len() as f64;
+            let g = self.cfg.exp3_gamma;
+            // Reward in [0,1], importance-weighted by the true play
+            // probability (floored defensively; the γ/K exploration term
+            // already bounds it from below).
+            let reward = (1.0 - loss.min(LOSS_CLIP) / LOSS_CLIP).clamp(0.0, 1.0);
+            let p = prob.max(g / (2.0 * n));
+            self.log_w[arm] += g * (reward / p) / n;
+            // Keep log-weights bounded.
+            let max = self.log_w.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+            if max > 40.0 {
+                for l in &mut self.log_w {
+                    *l -= max - 40.0;
+                }
+            }
+        }
+    }
+
+    fn start_pull(&mut self, dev: &mut dyn Device) {
+        let (next, prob) = self.select();
+        let switched = next != self.current;
+        if switched {
+            self.switches += 1;
+            dev.set_sm_gear(self.arms[next]);
+        }
+        self.current = next;
+        self.phase = Phase::Pull {
+            arm: next,
+            switched,
+            prob,
+        };
+        self.open_window(dev);
+    }
+}
+
+impl Policy for Bandit {
+    fn name(&self) -> &'static str {
+        "bandit"
+    }
+
+    fn tick(&mut self, dev: &mut dyn Device) {
+        if matches!(self.phase, Phase::Boot) {
+            self.boot(dev);
+            self.open_window(dev);
+        }
+        dev.advance(self.cfg.ts);
+        let done = self
+            .window
+            .as_ref()
+            .map(|w| w.done(dev.time_s()))
+            .unwrap_or(true);
+        if !done {
+            return;
+        }
+        match self.phase {
+            Phase::Boot => unreachable!("boot handled above"),
+            Phase::Baseline { done } => {
+                if let Some((p, ips)) = self.close_window(dev) {
+                    self.base_acc.0 += p;
+                    self.base_acc.1 += ips;
+                    let done = done + 1;
+                    if done >= self.cfg.baseline_periods {
+                        self.p_base = self.base_acc.0 / done as f64;
+                        self.ips_base = self.base_acc.1 / done as f64;
+                        self.start_pull(dev);
+                    } else {
+                        self.phase = Phase::Baseline { done };
+                        self.open_window(dev);
+                    }
+                } else {
+                    // Meter glitch: re-measure the same baseline window.
+                    self.open_window(dev);
+                }
+            }
+            Phase::Pull {
+                arm,
+                switched,
+                prob,
+            } => {
+                if let Some((p, ips)) = self.close_window(dev) {
+                    let loss = self.loss_of(p, ips, switched);
+                    self.update(arm, loss, prob);
+                    self.start_pull(dev);
+                } else {
+                    self.open_window(dev);
+                }
+            }
+        }
+    }
+}
+
+pub struct BanditBuilder;
+
+impl PolicyBuilder for BanditBuilder {
+    fn name(&self) -> &'static str {
+        "bandit"
+    }
+
+    fn describe(&self) -> &'static str {
+        "switching-aware UCB/EXP3 bandit over a pruned SM-gear ladder (model-free: noisy energy meter + IPS only)"
+    }
+
+    fn default_config(&self) -> String {
+        let c = BanditCfg::default();
+        format!(
+            "bandit-algo=ucb bandit-stride={} switch-cost={} bandit-explore={} bandit-period=auto",
+            c.stride, c.switch_cost, c.explore
+        )
+    }
+
+    fn build(&self, _ctx: &PolicyCtx, cfg: &PolicyConfig) -> anyhow::Result<Box<dyn Policy>> {
+        Ok(Box::new(Bandit::new(BanditCfg::from_config(cfg)?)))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::{run_sim, savings, DefaultPolicy};
+    use crate::sim::{find_app, Spec};
+    use std::sync::Arc;
+
+    #[test]
+    fn cfg_parses_and_rejects() {
+        let mut pc = PolicyConfig::default();
+        pc.opts.insert("bandit-algo".into(), "exp3".into());
+        pc.opts.insert("bandit-stride".into(), "12".into());
+        let c = BanditCfg::from_config(&pc).unwrap();
+        assert_eq!(c.algo, BanditAlgo::Exp3);
+        assert_eq!(c.stride, 12);
+        pc.opts.insert("bandit-algo".into(), "thompson".into());
+        assert!(BanditCfg::from_config(&pc).is_err());
+    }
+
+    #[test]
+    fn bandit_completes_and_is_deterministic() {
+        let spec = Arc::new(Spec::load_default().unwrap());
+        let app = find_app(&spec, "SBM_GIN").unwrap();
+        let r1 = run_sim(&spec, &app, &mut Bandit::new(BanditCfg::default()), 120);
+        let r2 = run_sim(&spec, &app, &mut Bandit::new(BanditCfg::default()), 120);
+        assert!(r1.iterations >= 120);
+        assert_eq!(r1.energy_j, r2.energy_j, "bandit must be reproducible");
+        assert_eq!(r1.time_s, r2.time_s);
+    }
+
+    #[test]
+    fn bandit_saves_energy_within_the_envelope() {
+        // Long-horizon run: the bandit should end below baseline energy
+        // per work unit without catastrophic slowdown. Model-free, so no
+        // artifacts are required — this exercises the whole loop in CI.
+        let spec = Arc::new(Spec::load_default().unwrap());
+        let app = find_app(&spec, "CLB_MLP").unwrap();
+        let n = crate::coordinator::default_iters(&app);
+        let base = run_sim(&spec, &app, &mut DefaultPolicy { ts: 0.025 }, n);
+        let mut b = Bandit::new(BanditCfg::default());
+        let run = run_sim(&spec, &app, &mut b, n);
+        let s = savings(&base, &run);
+        assert!(b.switches > 0, "bandit never explored");
+        assert!(
+            s.energy_saving > -0.02,
+            "bandit must not burn extra energy: {:.3}",
+            s.energy_saving
+        );
+        assert!(s.slowdown < 0.25, "slowdown {:.3}", s.slowdown);
+    }
+
+    #[test]
+    fn exp3_variant_completes() {
+        let spec = Arc::new(Spec::load_default().unwrap());
+        let app = find_app(&spec, "AI_TS").unwrap();
+        let cfg = BanditCfg {
+            algo: BanditAlgo::Exp3,
+            ..BanditCfg::default()
+        };
+        let r = run_sim(&spec, &app, &mut Bandit::new(cfg), 80);
+        assert!(r.iterations >= 80);
+    }
+}

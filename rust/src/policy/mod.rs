@@ -1,0 +1,369 @@
+//! The policy subsystem (DESIGN.md §8).
+//!
+//! Every online clock-management policy is constructed through the
+//! [`PolicyRegistry`] — the single place that maps policy *names* to
+//! builders. The CLI (`run`/`sweep`), the fleet workers, the daemon's
+//! `POLICY` command and the `experiment policies` head-to-head all
+//! resolve names here; nothing outside this module matches on
+//! policy-name strings.
+//!
+//! Registered families:
+//!
+//! | name       | description                                            |
+//! |------------|--------------------------------------------------------|
+//! | `default`  | NVIDIA default scheduling (no controller; the baseline)|
+//! | `gpoeo`    | the paper's online controller (needs trained models)   |
+//! | `odpp`     | the ODPP baseline                                      |
+//! | `bandit`   | switching-aware UCB/EXP3 over a pruned gear ladder     |
+//! | `powercap` | Zeus-style power-cap ladder over `Device` power limits |
+//!
+//! Construction is split in two so non-`Send` predictors stay worker-
+//! local: a [`PolicySpec`] (name + [`PolicyConfig`]) is `Send + Clone`
+//! and crosses threads freely; [`PolicyRegistry::build_spec`] turns it
+//! into a live `Box<dyn Policy>` *on the thread that will drive it*,
+//! pulling the thread's predictor through [`PolicyCtx`] only if the
+//! policy actually needs one (the bandit and power-cap families are
+//! model-free).
+
+pub mod bandit;
+pub mod powercap;
+
+pub use bandit::{Bandit, BanditAlgo, BanditCfg};
+pub use powercap::{PowerCap, PowerCapCfg};
+
+use crate::coordinator::{DefaultPolicy, Gpoeo, GpoeoCfg, Odpp, OdppCfg, Policy};
+use crate::device::Device;
+use crate::model::Predictor;
+use crate::search::Objective;
+use crate::sim::Spec;
+use crate::util::cli::Args;
+use std::collections::BTreeMap;
+use std::sync::{Arc, OnceLock};
+
+/// Thread-crossing policy configuration: the objective plus free-form
+/// `key=value` options (the CLI forwards all `--key value` options, so
+/// each builder picks up its own knobs and ignores the rest).
+#[derive(Clone)]
+pub struct PolicyConfig {
+    pub objective: Objective,
+    pub opts: BTreeMap<String, String>,
+}
+
+impl Default for PolicyConfig {
+    fn default() -> Self {
+        PolicyConfig {
+            objective: Objective::paper_default(),
+            opts: BTreeMap::new(),
+        }
+    }
+}
+
+impl PolicyConfig {
+    pub fn new(objective: Objective) -> PolicyConfig {
+        PolicyConfig {
+            objective,
+            opts: BTreeMap::new(),
+        }
+    }
+
+    /// Build from CLI arguments: the objective from `--objective`/
+    /// `--slowdown-cap`, and every other option forwarded verbatim.
+    pub fn from_args(args: &Args) -> anyhow::Result<PolicyConfig> {
+        Ok(PolicyConfig {
+            objective: crate::coordinator::parse_objective(args)?,
+            opts: args.options.clone(),
+        })
+    }
+
+    pub fn opt(&self, key: &str) -> Option<&str> {
+        self.opts.get(key).map(|s| s.as_str())
+    }
+
+    pub fn opt_f64(&self, key: &str, default: f64) -> anyhow::Result<f64> {
+        match self.opt(key) {
+            None => Ok(default),
+            Some(s) => s
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--{key} expects a number, got '{s}'")),
+        }
+    }
+
+    pub fn opt_usize(&self, key: &str, default: usize) -> anyhow::Result<usize> {
+        match self.opt(key) {
+            None => Ok(default),
+            Some(s) => s
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--{key} expects an integer, got '{s}'")),
+        }
+    }
+}
+
+/// A named policy selection that can cross threads (fleet jobs, daemon
+/// sessions). Built into a live policy worker-side via
+/// [`PolicyRegistry::build_spec`].
+#[derive(Clone)]
+pub struct PolicySpec {
+    pub name: String,
+    pub cfg: PolicyConfig,
+}
+
+impl PolicySpec {
+    pub fn new(name: &str, cfg: PolicyConfig) -> PolicySpec {
+        PolicySpec {
+            name: name.to_string(),
+            cfg,
+        }
+    }
+
+    /// Selection by name with the default (paper) configuration.
+    pub fn registered(name: &str) -> PolicySpec {
+        PolicySpec::new(name, PolicyConfig::default())
+    }
+}
+
+/// One measurement window over the device's noisy meters, shared by the
+/// model-free policies: average power from the energy-counter delta over
+/// the window plus the IPS proxy at close. `close` reports `None` on a
+/// meter glitch (non-finite or non-positive readings) — callers re-open
+/// and re-measure.
+pub(crate) struct MeterWindow {
+    end_s: f64,
+    e0: f64,
+    t0: f64,
+}
+
+impl MeterWindow {
+    pub(crate) fn open(dev: &mut dyn Device, dur_s: f64) -> MeterWindow {
+        MeterWindow {
+            end_s: dev.time_s() + dur_s,
+            e0: dev.energy_j(),
+            t0: dev.time_s(),
+        }
+    }
+
+    pub(crate) fn done(&self, now_s: f64) -> bool {
+        now_s >= self.end_s
+    }
+
+    /// (average power, IPS), both meter-noisy; `None` on a glitch.
+    pub(crate) fn close(self, dev: &mut dyn Device) -> Option<(f64, f64)> {
+        let p = (dev.energy_j() - self.e0) / (dev.time_s() - self.t0).max(1e-9);
+        let ips = dev.ips();
+        (p > 0.0 && ips > 0.0 && p.is_finite() && ips.is_finite()).then_some((p, ips))
+    }
+}
+
+/// Thread-local construction context. `predictor` is a lazy provider —
+/// typically a closure over a fleet worker's `OnceCell` — invoked only
+/// by builders whose policy needs the trained models, so model-free
+/// policies never pay (or fail on) predictor loading.
+pub struct PolicyCtx<'a> {
+    pub spec: &'a Arc<Spec>,
+    pub predictor: &'a dyn Fn() -> anyhow::Result<Arc<Predictor>>,
+}
+
+/// One registered policy family: metadata plus the builder.
+pub trait PolicyBuilder: Send + Sync {
+    /// Registry key (`--policy <name>`, daemon `POLICY <name>`).
+    fn name(&self) -> &'static str;
+
+    /// One-line description for `gpoeo policies`.
+    fn describe(&self) -> &'static str;
+
+    /// One-line default-configuration summary (knob names double as the
+    /// CLI options each builder understands).
+    fn default_config(&self) -> String;
+
+    fn build(&self, ctx: &PolicyCtx, cfg: &PolicyConfig) -> anyhow::Result<Box<dyn Policy>>;
+}
+
+/// Name → builder table. Use [`PolicyRegistry::global`] for the standard
+/// registry; `standard()` builds a fresh one (tests).
+pub struct PolicyRegistry {
+    builders: Vec<Box<dyn PolicyBuilder>>,
+}
+
+impl PolicyRegistry {
+    /// The standard registry with every built-in policy family.
+    pub fn standard() -> PolicyRegistry {
+        PolicyRegistry {
+            builders: vec![
+                Box::new(DefaultBuilder),
+                Box::new(GpoeoBuilder),
+                Box::new(OdppBuilder),
+                Box::new(bandit::BanditBuilder),
+                Box::new(powercap::PowerCapBuilder),
+            ],
+        }
+    }
+
+    /// Process-wide standard registry.
+    pub fn global() -> &'static PolicyRegistry {
+        static REG: OnceLock<PolicyRegistry> = OnceLock::new();
+        REG.get_or_init(PolicyRegistry::standard)
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = &dyn PolicyBuilder> {
+        self.builders.iter().map(|b| b.as_ref())
+    }
+
+    pub fn names(&self) -> Vec<&'static str> {
+        self.builders.iter().map(|b| b.name()).collect()
+    }
+
+    /// Look a builder up by name. The error text starts with
+    /// `unknown policy` — the daemon protocol relies on that prefix.
+    pub fn get(&self, name: &str) -> anyhow::Result<&dyn PolicyBuilder> {
+        self.builders
+            .iter()
+            .map(|b| b.as_ref())
+            .find(|b| b.name() == name)
+            .ok_or_else(|| {
+                anyhow::anyhow!(
+                    "unknown policy '{name}' (registered: {})",
+                    self.names().join(" ")
+                )
+            })
+    }
+
+    /// Build a policy by name.
+    pub fn build(
+        &self,
+        name: &str,
+        ctx: &PolicyCtx,
+        cfg: &PolicyConfig,
+    ) -> anyhow::Result<Box<dyn Policy>> {
+        self.get(name)?.build(ctx, cfg)
+    }
+
+    /// Build from a thread-crossing [`PolicySpec`].
+    pub fn build_spec(
+        &self,
+        spec: &PolicySpec,
+        ctx: &PolicyCtx,
+    ) -> anyhow::Result<Box<dyn Policy>> {
+        self.build(&spec.name, ctx, &spec.cfg)
+    }
+}
+
+// ---------------------------------------------------------------------
+// Builders for the pre-existing policy families. The bandit and
+// power-cap builders live next to their policies.
+// ---------------------------------------------------------------------
+
+struct DefaultBuilder;
+
+impl PolicyBuilder for DefaultBuilder {
+    fn name(&self) -> &'static str {
+        "default"
+    }
+
+    fn describe(&self) -> &'static str {
+        "NVIDIA default scheduling strategy (no controller; the baseline itself)"
+    }
+
+    fn default_config(&self) -> String {
+        "ts=0.025".to_string()
+    }
+
+    fn build(&self, _ctx: &PolicyCtx, cfg: &PolicyConfig) -> anyhow::Result<Box<dyn Policy>> {
+        Ok(Box::new(DefaultPolicy {
+            ts: cfg.opt_f64("ts", 0.025)?,
+        }))
+    }
+}
+
+struct GpoeoBuilder;
+
+impl PolicyBuilder for GpoeoBuilder {
+    fn name(&self) -> &'static str {
+        "gpoeo"
+    }
+
+    fn describe(&self) -> &'static str {
+        "the paper's online controller: period detection + counter profiling + GBT prediction + golden-section search"
+    }
+
+    fn default_config(&self) -> String {
+        let c = GpoeoCfg::default();
+        format!(
+            "ts={} initial-window={} slowdown-cap=0.05 (needs trained model artifacts)",
+            c.ts, c.initial_window_s
+        )
+    }
+
+    fn build(&self, ctx: &PolicyCtx, cfg: &PolicyConfig) -> anyhow::Result<Box<dyn Policy>> {
+        let predictor = (ctx.predictor)()?;
+        let mut c = GpoeoCfg {
+            objective: cfg.objective,
+            ..GpoeoCfg::default()
+        };
+        c.ts = cfg.opt_f64("ts", c.ts)?;
+        c.initial_window_s = cfg.opt_f64("initial-window", c.initial_window_s)?;
+        Ok(Box::new(Gpoeo::new(c, predictor)))
+    }
+}
+
+struct OdppBuilder;
+
+impl PolicyBuilder for OdppBuilder {
+    fn name(&self) -> &'static str {
+        "odpp"
+    }
+
+    fn describe(&self) -> &'static str {
+        "ODPP baseline: FFT-argmax period detection + piecewise-linear clock models (counter-free)"
+    }
+
+    fn default_config(&self) -> String {
+        let c = OdppCfg::default();
+        format!("ts={} window={} probe={}", c.ts, c.window_s, c.probe_s)
+    }
+
+    fn build(&self, _ctx: &PolicyCtx, cfg: &PolicyConfig) -> anyhow::Result<Box<dyn Policy>> {
+        let mut c = OdppCfg {
+            objective: cfg.objective,
+            ..OdppCfg::default()
+        };
+        c.ts = cfg.opt_f64("ts", c.ts)?;
+        c.window_s = cfg.opt_f64("window", c.window_s)?;
+        Ok(Box::new(Odpp::new(c)))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_names_are_unique_and_complete() {
+        let reg = PolicyRegistry::standard();
+        let names = reg.names();
+        for expect in ["default", "gpoeo", "odpp", "bandit", "powercap"] {
+            assert!(names.contains(&expect), "missing {expect}");
+        }
+        let mut dedup = names.clone();
+        dedup.sort_unstable();
+        dedup.dedup();
+        assert_eq!(dedup.len(), names.len(), "duplicate registry names");
+    }
+
+    #[test]
+    fn unknown_name_error_has_the_protocol_prefix() {
+        let err = PolicyRegistry::global().get("warpdrive").unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.starts_with("unknown policy"), "{msg}");
+        assert!(msg.contains("bandit"), "must list registered names: {msg}");
+    }
+
+    #[test]
+    fn config_opts_parse_and_reject() {
+        let mut cfg = PolicyConfig::default();
+        cfg.opts.insert("switch-cost".into(), "0.5".into());
+        cfg.opts.insert("bad".into(), "zzz".into());
+        assert_eq!(cfg.opt_f64("switch-cost", 0.0).unwrap(), 0.5);
+        assert_eq!(cfg.opt_f64("absent", 1.5).unwrap(), 1.5);
+        assert!(cfg.opt_f64("bad", 0.0).is_err());
+        assert!(cfg.opt_usize("bad", 0).is_err());
+    }
+}

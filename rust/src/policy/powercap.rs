@@ -1,0 +1,286 @@
+//! Power-cap ladder policy — the Zeus-style alternative to clock gears.
+//!
+//! Zeus (You et al., 2022) trades energy against time by searching over
+//! *power limits* instead of clock pairs: the driver's power manager
+//! does the gear bookkeeping, the optimizer just walks a one-dimensional
+//! ladder of caps. This policy reproduces that control surface on top of
+//! the [`Device::set_power_limit_w`] extension (the simulator throttles
+//! its effective SM clock under the cap, like real power management):
+//!
+//! 1. **Baseline** — one dwell window at the entry clocks, uncapped:
+//!    average power from the noisy energy meter, work rate from the IPS
+//!    proxy.
+//! 2. **Descend** — step the cap down from just under the baseline power
+//!    in `cap-step` watt decrements, one dwell window per rung, scoring
+//!    each rung's (energy, time) ratios under the configured objective.
+//!    Stop after `cap-patience` consecutive worsening rungs or at the
+//!    `cap-floor` fraction of baseline power (the ladder is near-unimodal
+//!    — patience absorbs meter noise).
+//! 3. **Hold** — pin the best-scoring cap (possibly "uncapped" when no
+//!    rung beat the baseline) and keep monitoring nothing: like ODPP,
+//!    the policy is counter-free and needs no trained models.
+
+use super::{MeterWindow, PolicyBuilder, PolicyConfig, PolicyCtx};
+use crate::coordinator::Policy;
+use crate::device::Device;
+use crate::search::Objective;
+
+#[derive(Clone)]
+pub struct PowerCapCfg {
+    pub objective: Objective,
+    /// NVML sampling interval (seconds).
+    pub ts: f64,
+    /// Dwell per ladder rung, seconds (0 = auto: ~2 nominal iterations,
+    /// clamped to [1.5, 8] s).
+    pub dwell_s: f64,
+    /// Ladder decrement, watts.
+    pub step_w: f64,
+    /// Lowest cap as a fraction of the measured baseline power.
+    pub floor_frac: f64,
+    /// Consecutive worsening rungs tolerated before settling.
+    pub patience: usize,
+}
+
+impl Default for PowerCapCfg {
+    fn default() -> Self {
+        PowerCapCfg {
+            objective: Objective::paper_default(),
+            ts: 0.025,
+            dwell_s: 0.0,
+            step_w: 15.0,
+            floor_frac: 0.45,
+            patience: 2,
+        }
+    }
+}
+
+impl PowerCapCfg {
+    pub fn from_config(cfg: &PolicyConfig) -> anyhow::Result<PowerCapCfg> {
+        let d = PowerCapCfg::default();
+        Ok(PowerCapCfg {
+            objective: cfg.objective,
+            ts: cfg.opt_f64("ts", d.ts)?,
+            dwell_s: cfg.opt_f64("cap-dwell", d.dwell_s)?,
+            step_w: cfg.opt_f64("cap-step", d.step_w)?.max(1.0),
+            floor_frac: cfg.opt_f64("cap-floor", d.floor_frac)?.clamp(0.1, 0.95),
+            patience: cfg.opt_usize("cap-patience", d.patience)?.max(1),
+        })
+    }
+}
+
+enum Phase {
+    Boot,
+    Baseline,
+    Descend { worse_streak: usize },
+    Hold,
+}
+
+/// The power-cap ladder policy. Implements
+/// [`crate::coordinator::Policy`]; registered as `powercap`.
+pub struct PowerCap {
+    pub cfg: PowerCapCfg,
+    phase: Phase,
+    window: Option<MeterWindow>,
+    dwell_s: f64,
+    p_base: f64,
+    ips_base: f64,
+    /// Cap currently being measured (watts).
+    cap_w: f64,
+    /// Best (score, cap) seen; `f64::INFINITY` cap = stay uncapped.
+    best: (f64, f64),
+    /// Final cap once settled (telemetry; exercised by tests).
+    pub chosen_cap_w: f64,
+    /// Rungs measured (telemetry).
+    pub rungs: usize,
+}
+
+impl PowerCap {
+    pub fn new(cfg: PowerCapCfg) -> PowerCap {
+        PowerCap {
+            cfg,
+            phase: Phase::Boot,
+            window: None,
+            dwell_s: 0.0,
+            p_base: 0.0,
+            ips_base: 0.0,
+            cap_w: 0.0,
+            best: (f64::INFINITY, f64::INFINITY),
+            chosen_cap_w: f64::INFINITY,
+            rungs: 0,
+        }
+    }
+
+    fn open_window(&mut self, dev: &mut dyn Device) {
+        self.window = Some(MeterWindow::open(dev, self.dwell_s));
+    }
+
+    fn close_window(&mut self, dev: &mut dyn Device) -> Option<(f64, f64)> {
+        self.window.take()?.close(dev)
+    }
+
+    fn score_of(&self, p: f64, ips: f64) -> f64 {
+        let t_ratio = self.ips_base / ips.max(1e-9);
+        let e_ratio = (p / ips.max(1e-9)) / (self.p_base / self.ips_base);
+        self.cfg.objective.score(e_ratio, t_ratio)
+    }
+
+    fn settle(&mut self, dev: &mut dyn Device) {
+        self.chosen_cap_w = self.best.1;
+        dev.set_power_limit_w(self.chosen_cap_w);
+        self.phase = Phase::Hold;
+    }
+}
+
+impl Policy for PowerCap {
+    fn name(&self) -> &'static str {
+        "powercap"
+    }
+
+    fn tick(&mut self, dev: &mut dyn Device) {
+        if matches!(self.phase, Phase::Boot) {
+            self.dwell_s = if self.cfg.dwell_s > 0.0 {
+                self.cfg.dwell_s
+            } else {
+                (2.0 * dev.nominal_iter_s()).clamp(1.5, 8.0)
+            };
+            self.phase = Phase::Baseline;
+            self.open_window(dev);
+        }
+        dev.advance(self.cfg.ts);
+        if matches!(self.phase, Phase::Hold) {
+            return;
+        }
+        let done = self
+            .window
+            .as_ref()
+            .map(|w| w.done(dev.time_s()))
+            .unwrap_or(true);
+        if !done {
+            return;
+        }
+        match self.phase {
+            Phase::Boot | Phase::Hold => unreachable!("handled above"),
+            Phase::Baseline => {
+                let Some((p, ips)) = self.close_window(dev) else {
+                    self.open_window(dev);
+                    return;
+                };
+                self.p_base = p;
+                self.ips_base = ips;
+                // The baseline itself scores objective(1, 1) = 1 with an
+                // "uncapped" cap — the rung every real cap must beat.
+                self.best = (self.cfg.objective.score(1.0, 1.0), f64::INFINITY);
+                self.cap_w = p - self.cfg.step_w;
+                if self.cap_w <= p * self.cfg.floor_frac {
+                    self.settle(dev);
+                    return;
+                }
+                dev.set_power_limit_w(self.cap_w);
+                self.phase = Phase::Descend { worse_streak: 0 };
+                self.open_window(dev);
+            }
+            Phase::Descend { worse_streak } => {
+                let Some((p, ips)) = self.close_window(dev) else {
+                    self.open_window(dev);
+                    return;
+                };
+                self.rungs += 1;
+                let score = self.score_of(p, ips);
+                let streak = if score < self.best.0 {
+                    self.best = (score, self.cap_w);
+                    0
+                } else {
+                    worse_streak + 1
+                };
+                let next = self.cap_w - self.cfg.step_w;
+                if streak >= self.cfg.patience || next <= self.p_base * self.cfg.floor_frac {
+                    self.settle(dev);
+                    return;
+                }
+                self.cap_w = next;
+                dev.set_power_limit_w(self.cap_w);
+                self.phase = Phase::Descend {
+                    worse_streak: streak,
+                };
+                self.open_window(dev);
+            }
+        }
+    }
+}
+
+pub struct PowerCapBuilder;
+
+impl PolicyBuilder for PowerCapBuilder {
+    fn name(&self) -> &'static str {
+        "powercap"
+    }
+
+    fn describe(&self) -> &'static str {
+        "Zeus-style power-cap ladder descent over Device::set_power_limit_w (counter- and model-free)"
+    }
+
+    fn default_config(&self) -> String {
+        let c = PowerCapCfg::default();
+        format!(
+            "cap-step={} cap-floor={} cap-patience={} cap-dwell=auto",
+            c.step_w, c.floor_frac, c.patience
+        )
+    }
+
+    fn build(&self, _ctx: &PolicyCtx, cfg: &PolicyConfig) -> anyhow::Result<Box<dyn Policy>> {
+        Ok(Box::new(PowerCap::new(PowerCapCfg::from_config(cfg)?)))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::{run_sim, savings, DefaultPolicy};
+    use crate::sim::{find_app, Spec};
+    use std::sync::Arc;
+
+    #[test]
+    fn powercap_descends_settles_and_saves() {
+        let spec = Arc::new(Spec::load_default().unwrap());
+        let app = find_app(&spec, "AI_I2T").unwrap();
+        let n = crate::coordinator::default_iters(&app);
+        let base = run_sim(&spec, &app, &mut DefaultPolicy { ts: 0.025 }, n);
+        let mut p = PowerCap::new(PowerCapCfg::default());
+        let run = run_sim(&spec, &app, &mut p, n);
+        assert!(run.iterations >= n);
+        assert!(p.rungs > 0, "never measured a rung");
+        assert!(
+            p.chosen_cap_w.is_finite(),
+            "a capped rung should beat the uncapped baseline here"
+        );
+        let s = savings(&base, &run);
+        assert!(
+            s.energy_saving > 0.0,
+            "power capping must save energy on AI_I2T: {:.3}",
+            s.energy_saving
+        );
+    }
+
+    #[test]
+    fn powercap_is_deterministic() {
+        let spec = Arc::new(Spec::load_default().unwrap());
+        let app = find_app(&spec, "SBM_GIN").unwrap();
+        let a = run_sim(&spec, &app, &mut PowerCap::new(PowerCapCfg::default()), 100);
+        let b = run_sim(&spec, &app, &mut PowerCap::new(PowerCapCfg::default()), 100);
+        assert!(a.iterations >= 100);
+        assert_eq!(a.energy_j, b.energy_j);
+        assert_eq!(a.time_s, b.time_s);
+    }
+
+    #[test]
+    fn cfg_knobs_parse() {
+        let mut pc = PolicyConfig::default();
+        pc.opts.insert("cap-step".into(), "25".into());
+        pc.opts.insert("cap-floor".into(), "0.6".into());
+        let c = PowerCapCfg::from_config(&pc).unwrap();
+        assert_eq!(c.step_w, 25.0);
+        assert_eq!(c.floor_frac, 0.6);
+        pc.opts.insert("cap-step".into(), "fast".into());
+        assert!(PowerCapCfg::from_config(&pc).is_err());
+    }
+}

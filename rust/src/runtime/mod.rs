@@ -6,6 +6,12 @@
 //! jax≥0.5 / xla_extension 0.5.1 proto-id mismatch (see
 //! /opt/xla-example/README.md). `HloModuleProto::from_text_file`
 //! reassigns instruction ids during parsing.
+//!
+//! The whole backend sits behind the `pjrt` cargo feature: the `xla`
+//! bindings crate only exists in the offline seed environment. Without
+//! the feature, [`Runtime`] is a stub whose loaders fail cleanly, so
+//! `model::Predictor` degrades to the native GBT twin and the
+//! controller's periodogram falls back to the native FFT.
 
 use crate::util::json::Json;
 use std::path::{Path, PathBuf};
@@ -30,10 +36,12 @@ pub fn default_artifacts_dir() -> PathBuf {
 }
 
 /// One compiled module.
+#[cfg(feature = "pjrt")]
 struct LoadedExe {
     exe: xla::PjRtLoadedExecutable,
 }
 
+#[cfg(feature = "pjrt")]
 impl LoadedExe {
     fn load(client: &xla::PjRtClient, path: &Path) -> anyhow::Result<LoadedExe> {
         let proto = xla::HloModuleProto::from_text_file(path)
@@ -61,6 +69,7 @@ impl LoadedExe {
 }
 
 /// The runtime: a PJRT CPU client plus the three compiled modules.
+#[cfg(feature = "pjrt")]
 pub struct Runtime {
     _client: xla::PjRtClient,
     periodogram: LoadedExe,
@@ -70,6 +79,7 @@ pub struct Runtime {
     pub meta: Json,
 }
 
+#[cfg(feature = "pjrt")]
 impl Runtime {
     /// Load all artifacts from `dir`. Fails if any artifact is missing —
     /// callers that want graceful degradation use [`Runtime::try_default`]
@@ -121,5 +131,38 @@ impl Runtime {
     pub fn predict_mem(&self, features: &[f32]) -> anyhow::Result<(Vec<f32>, Vec<f32>)> {
         anyhow::ensure!(features.len() == 16, "predict_mem expects 16 features");
         self.predictor_mem.run2(features)
+    }
+}
+
+/// Stub runtime for builds without the `pjrt` feature: the type exists
+/// (so `Predictor::Hlo` and call sites compile unchanged) but can never
+/// be constructed — `load` reports the backend as unavailable and the
+/// callers take their native fallbacks.
+#[cfg(not(feature = "pjrt"))]
+pub struct Runtime {
+    /// Mirrors the real field so downstream metadata probes compile.
+    pub meta: Json,
+}
+
+#[cfg(not(feature = "pjrt"))]
+impl Runtime {
+    pub fn load(_dir: &Path) -> anyhow::Result<Runtime> {
+        anyhow::bail!("PJRT runtime unavailable: built without the `pjrt` feature")
+    }
+
+    pub fn try_default() -> Option<Runtime> {
+        None
+    }
+
+    pub fn periodogram_1024(&self, _x: &[f32]) -> anyhow::Result<Vec<f32>> {
+        anyhow::bail!("PJRT runtime unavailable: built without the `pjrt` feature")
+    }
+
+    pub fn predict_sm(&self, _features: &[f32]) -> anyhow::Result<(Vec<f32>, Vec<f32>)> {
+        anyhow::bail!("PJRT runtime unavailable: built without the `pjrt` feature")
+    }
+
+    pub fn predict_mem(&self, _features: &[f32]) -> anyhow::Result<(Vec<f32>, Vec<f32>)> {
+        anyhow::bail!("PJRT runtime unavailable: built without the `pjrt` feature")
     }
 }

@@ -26,6 +26,13 @@ pub struct SimGpu {
     pub app: AppParams,
     sm_gear: usize,
     mem_gear: usize,
+    /// Board power limit, watts (`f64::INFINITY` = uncapped).
+    power_limit_w: f64,
+    /// Highest gear ≤ `sm_gear` whose steady power fits the limit —
+    /// recomputed on every clock/limit change, used by every
+    /// time/power/trace path so the cap behaves like real power
+    /// management (clocks throttle, the requested gear is remembered).
+    eff_sm_gear: usize,
     profiling: bool,
     /// Virtual time since run start, seconds.
     vtime_s: f64,
@@ -51,6 +58,8 @@ impl SimGpu {
             app,
             sm_gear: sm,
             mem_gear: mem,
+            power_limit_w: f64::INFINITY,
+            eff_sm_gear: sm,
             profiling: false,
             vtime_s: 0.0,
             energy_j: 0.0,
@@ -70,6 +79,7 @@ impl SimGpu {
             self.sm_gear = g;
             self.clock_sets += 1;
         }
+        self.recompute_throttle();
     }
 
     /// Set the memory clock gear.
@@ -79,6 +89,45 @@ impl SimGpu {
             self.mem_gear = g;
             self.clock_sets += 1;
         }
+        self.recompute_throttle();
+    }
+
+    /// Set the board power limit (watts). `f64::INFINITY` (or NaN, or
+    /// any non-positive value) lifts the cap. The effective SM clock
+    /// throttles immediately; the requested gear is kept and restored
+    /// when the limit allows.
+    pub fn set_power_limit_w(&mut self, limit_w: f64) {
+        self.power_limit_w = if limit_w.is_nan() || limit_w <= 0.0 {
+            f64::INFINITY
+        } else {
+            limit_w
+        };
+        self.recompute_throttle();
+    }
+
+    /// Current board power limit (`f64::INFINITY` when uncapped).
+    pub fn power_limit_w(&self) -> f64 {
+        self.power_limit_w
+    }
+
+    /// The SM gear the hardware actually runs at: the requested gear,
+    /// throttled down until steady power fits under the power limit (or
+    /// the floor gear is reached — at the floor the limit may still be
+    /// exceeded, like real silicon at its minimum voltage/clock).
+    pub fn effective_sm_gear(&self) -> usize {
+        self.eff_sm_gear
+    }
+
+    fn recompute_throttle(&mut self) {
+        let mut g = self.sm_gear;
+        if self.power_limit_w.is_finite() {
+            while g > self.spec.gears.sm_gear_min
+                && self.app.op_point(&self.spec, g, self.mem_gear).power_w > self.power_limit_w
+            {
+                g -= 1;
+            }
+        }
+        self.eff_sm_gear = g;
     }
 
     /// Reset to the NVIDIA default scheduling configuration (power-capped
@@ -103,7 +152,7 @@ impl SimGpu {
         let inst = self.trace.sample(
             &self.app,
             &self.spec,
-            self.sm_gear,
+            self.eff_sm_gear,
             self.mem_gear,
             dt_since_last,
         );
@@ -153,7 +202,7 @@ impl SimGpu {
             1.0
         };
         let noise = self.meas_rng.normal(0.0, 0.01);
-        self.app.ips(&self.spec, self.sm_gear, self.mem_gear) * speed * (1.0 + noise)
+        self.app.ips(&self.spec, self.eff_sm_gear, self.mem_gear) * speed * (1.0 + noise)
     }
 
     // ------------------------------------------------------ CUPTI-like --
@@ -191,6 +240,9 @@ impl SimGpu {
     pub fn swap_app(&mut self, app: AppParams) {
         self.trace = TraceState::new(&app);
         self.app = app;
+        // A new workload draws different power at the same clocks, so the
+        // throttle point moves.
+        self.recompute_throttle();
     }
 
     // ------------------------------------------------------- simulation --
@@ -206,10 +258,10 @@ impl SimGpu {
         } else {
             (1.0, 1.0)
         };
-        let op = self.app.op_point(&self.spec, self.sm_gear, self.mem_gear);
+        let op = self.app.op_point(&self.spec, self.eff_sm_gear, self.mem_gear);
         self.energy_j += op.power_w * pmul * dt;
         self.trace
-            .advance(&self.app, &self.spec, self.sm_gear, self.mem_gear, dt, speed);
+            .advance(&self.app, &self.spec, self.eff_sm_gear, self.mem_gear, dt, speed);
         self.vtime_s += dt;
     }
 
@@ -232,7 +284,7 @@ impl SimGpu {
         } else {
             1.0
         };
-        TraceState::true_period(&self.app, &self.spec, self.sm_gear, self.mem_gear, speed)
+        TraceState::true_period(&self.app, &self.spec, self.eff_sm_gear, self.mem_gear, speed)
     }
 }
 
@@ -352,6 +404,75 @@ mod tests {
         for (t, m) in g.app.features.clone().iter().zip(&m) {
             assert!((m / t - 1.0).abs() < 0.15);
         }
+    }
+
+    #[test]
+    fn power_cap_throttles_under_the_limit() {
+        // Property: under any finite cap, the effective operating point
+        // never draws more than the limit (unless already at the floor
+        // gear), and is never throttled further than necessary.
+        for name in ["AI_I2T", "SBM_GIN", "AI_TS", "TSVM"] {
+            let mut g = gpu(name);
+            for cap in [320.0, 260.0, 200.0, 140.0, 90.0] {
+                g.set_power_limit_w(cap);
+                for gear in [114usize, 96, 70, 40, 16] {
+                    g.set_sm_gear(gear);
+                    let eff = g.effective_sm_gear();
+                    assert!(eff <= g.sm_gear());
+                    let op = g.app.op_point(&g.spec, eff, g.mem_gear());
+                    assert!(
+                        op.power_w <= cap + 1e-9 || eff == g.spec.gears.sm_gear_min,
+                        "{name} cap {cap}: eff gear {eff} draws {:.1} W",
+                        op.power_w
+                    );
+                    if eff < g.sm_gear() {
+                        let above = g.app.op_point(&g.spec, eff + 1, g.mem_gear());
+                        assert!(above.power_w > cap, "{name}: throttled too deep");
+                    }
+                }
+            }
+            // Lifting the cap restores the requested gear.
+            g.set_sm_gear(114);
+            g.set_power_limit_w(f64::INFINITY);
+            assert_eq!(g.effective_sm_gear(), 114);
+        }
+    }
+
+    #[test]
+    fn uncapped_behavior_is_bit_identical() {
+        // Setting an infinite limit must not change a single bit of the
+        // trajectory relative to a device that never touched the API.
+        let mut a = gpu("AI_FE");
+        let mut b = gpu("AI_FE");
+        b.set_power_limit_w(f64::INFINITY);
+        for _ in 0..2000 {
+            a.advance(0.01);
+            b.advance(0.01);
+            let (sa, sb) = (a.sample(0.01), b.sample(0.01));
+            assert_eq!(sa.power_w, sb.power_w);
+        }
+        assert_eq!(a.true_energy_j(), b.true_energy_j());
+        assert_eq!(a.iterations(), b.iterations());
+        assert_eq!(a.true_period(), b.true_period());
+    }
+
+    #[test]
+    fn capping_saves_energy_and_slows_iterations() {
+        let mut free = gpu("AI_I2T");
+        let mut capped = gpu("AI_I2T");
+        let (_, _, dflt) = free.app.default_op(&free.spec);
+        let cap = dflt.power_w * 0.7;
+        capped.set_power_limit_w(cap);
+        assert!(capped.effective_sm_gear() < capped.sm_gear());
+        for _ in 0..6000 {
+            free.advance(0.01);
+            capped.advance(0.01);
+        }
+        assert!(capped.true_energy_j() < free.true_energy_j());
+        assert!(capped.iterations() <= free.iterations());
+        // The integral form of the cap: E ≤ limit × time.
+        assert!(capped.true_energy_j() <= cap * capped.time_s() + 1e-6);
+        assert!(capped.true_period() > free.true_period());
     }
 
     #[test]

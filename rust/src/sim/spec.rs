@@ -213,10 +213,14 @@ pub fn default_spec_path() -> PathBuf {
     if let Ok(p) = std::env::var("GPOEO_GROUNDTRUTH") {
         return PathBuf::from(p);
     }
-    // CARGO_MANIFEST_DIR works for `cargo run/test`; fall back to cwd.
+    // CARGO_MANIFEST_DIR works for `cargo run/test`; the file itself
+    // lives at the repo root (shared with python/compile/simdata.py),
+    // one level above the crate. Fall back to cwd-relative paths.
     let candidates = [
+        concat!(env!("CARGO_MANIFEST_DIR"), "/../data/groundtruth.json").to_string(),
         concat!(env!("CARGO_MANIFEST_DIR"), "/data/groundtruth.json").to_string(),
         "data/groundtruth.json".to_string(),
+        "../data/groundtruth.json".to_string(),
     ];
     for c in &candidates {
         let p = PathBuf::from(c);

@@ -244,6 +244,18 @@ impl Json {
             .map_err(|e| anyhow::anyhow!("reading {}: {e}", path.display()))?;
         Json::parse(&text).map_err(|e| anyhow::anyhow!("parsing {}: {e}", path.display()))
     }
+
+    /// The `runs` array of an accumulating bench file (BENCH_sweep.json,
+    /// BENCH_policies.json, ...): every writer appends a record per run
+    /// and rewrites the file. Missing or unparsable files start a fresh
+    /// history — bench records are an append-only log, never load-bearing.
+    pub fn bench_runs(path: &str) -> Vec<Json> {
+        std::fs::read_to_string(path)
+            .ok()
+            .and_then(|text| Json::parse(&text).ok())
+            .and_then(|j| j.get("runs").as_arr().map(|a| a.to_vec()))
+            .unwrap_or_default()
+    }
 }
 
 fn newline_indent(out: &mut String, indent: Option<usize>, depth: usize) {

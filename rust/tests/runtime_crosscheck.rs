@@ -7,6 +7,10 @@ use gpoeo::runtime::Runtime;
 use gpoeo::sim::{make_suite, Spec};
 
 fn runtime() -> Option<Runtime> {
+    if cfg!(not(feature = "pjrt")) {
+        eprintln!("skipping: built without the pjrt feature");
+        return None;
+    }
     let dir = gpoeo::runtime::default_artifacts_dir();
     if !dir.join("meta.json").exists() {
         eprintln!("skipping: run `make artifacts` first");

@@ -1,0 +1,161 @@
+//! Minimal offline stand-in for the `anyhow` crate.
+//!
+//! The build environment has no crates.io access (the same constraint
+//! that led to the hand-rolled JSON/CLI/bench modules in the main
+//! crate), so the one external dependency is vendored as this path
+//! crate. It covers exactly the surface `gpoeo` uses:
+//!
+//! - [`Result`] / [`Error`] with `?`-conversion from any
+//!   `std::error::Error + Send + Sync` type,
+//! - [`anyhow!`], [`bail!`], [`ensure!`] with format-string messages,
+//! - `Display`/`Debug` (including the `{e:#}` alternate form).
+//!
+//! Like the real crate, [`Error`] deliberately does **not** implement
+//! `std::error::Error` — that is what keeps the blanket `From`
+//! conversion coherent.
+
+use std::fmt;
+
+/// Boxed dynamic error with display-first semantics.
+pub struct Error {
+    inner: Box<dyn std::error::Error + Send + Sync + 'static>,
+}
+
+impl Error {
+    /// Build an error from any displayable message.
+    pub fn msg<M>(message: M) -> Error
+    where
+        M: fmt::Display + fmt::Debug + Send + Sync + 'static,
+    {
+        Error {
+            inner: Box::new(MessageError(message)),
+        }
+    }
+
+    /// The underlying error trait object.
+    pub fn as_dyn(&self) -> &(dyn std::error::Error + Send + Sync + 'static) {
+        &*self.inner
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        // `{:#}` in real anyhow prints the whole cause chain; the shim
+        // carries a single cause, so both forms print the same thing.
+        write!(f, "{}", self.inner)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.inner)?;
+        let mut src = self.inner.source();
+        while let Some(s) = src {
+            write!(f, "\n\nCaused by:\n    {s}")?;
+            src = s.source();
+        }
+        Ok(())
+    }
+}
+
+impl<E> From<E> for Error
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn from(e: E) -> Error {
+        Error { inner: Box::new(e) }
+    }
+}
+
+struct MessageError<M>(M);
+
+impl<M: fmt::Display> fmt::Display for MessageError<M> {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        fmt::Display::fmt(&self.0, f)
+    }
+}
+
+impl<M: fmt::Debug> fmt::Debug for MessageError<M> {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        fmt::Debug::fmt(&self.0, f)
+    }
+}
+
+impl<M: fmt::Display + fmt::Debug> std::error::Error for MessageError<M> {}
+
+/// `Result` defaulted to [`Error`].
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Construct an [`Error`] from a format string (or a displayable value).
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg(format!("{}", $err))
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+}
+
+/// Return early with a formatted [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with a formatted [`Error`] unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !$cond {
+            return Err($crate::anyhow!(concat!("condition failed: ", stringify!($cond))));
+        }
+    };
+    ($cond:expr, $($arg:tt)*) => {
+        if !$cond {
+            return Err($crate::anyhow!($($arg)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fails(flag: bool) -> Result<u32> {
+        ensure!(!flag, "flag was {flag}");
+        Ok(7)
+    }
+
+    #[test]
+    fn macros_and_conversions() {
+        let e = anyhow!("x = {}", 42);
+        assert_eq!(e.to_string(), "x = 42");
+        assert_eq!(format!("{e:#}"), "x = 42");
+
+        let io: Result<()> = Err(std::io::Error::new(std::io::ErrorKind::Other, "boom").into());
+        assert!(io.unwrap_err().to_string().contains("boom"));
+
+        assert_eq!(fails(false).unwrap(), 7);
+        assert!(fails(true).is_err());
+
+        fn bails() -> Result<()> {
+            bail!("nope {}", 1);
+        }
+        assert_eq!(bails().unwrap_err().to_string(), "nope 1");
+    }
+
+    #[test]
+    fn question_mark_on_std_errors() {
+        fn parse(s: &str) -> Result<i64> {
+            Ok(s.parse::<i64>()?)
+        }
+        assert_eq!(parse("12").unwrap(), 12);
+        assert!(parse("nope").is_err());
+    }
+}
