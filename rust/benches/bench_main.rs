@@ -6,7 +6,10 @@
 
 use gpoeo::coordinator::{run_sim, DefaultPolicy, Gpoeo, GpoeoCfg};
 use gpoeo::model::{NativeModels, Predictor};
-use gpoeo::signal::{calc_period, online_detect, sequence_similarity_error, PeriodCfg, SimilarityCfg};
+use gpoeo::signal::{
+    calc_period, composite_feature, online_detect, sequence_similarity_error, PeriodCfg,
+    SimilarityCfg, StreamCfg, StreamingDetector,
+};
 use gpoeo::sim::{find_app, SimGpu, Spec};
 use std::sync::Arc;
 use std::time::Instant;
@@ -69,6 +72,49 @@ fn main() {
     });
     bench("signal: online_detect (Alg 3)", 2500, || {
         let _ = online_detect(&trace, ts, &PeriodCfg::default());
+    });
+
+    // Streaming vs batch over one full online session at a 2 Hz poll
+    // cadence — the per-session cost the daemon pays per fleet worker.
+    let app_s = find_app(&spec, "AI_I2T").unwrap();
+    let mut gpu_s = SimGpu::new(spec.clone(), app_s);
+    let n_s = (14.0 / ts) as usize;
+    let (mut cp, mut cs, mut cm) = (Vec::new(), Vec::new(), Vec::new());
+    for _ in 0..n_s {
+        gpu_s.advance(ts);
+        let s = gpu_s.sample(ts);
+        cp.push(s.power_w);
+        cs.push(s.util_sm);
+        cm.push(s.util_mem);
+    }
+    let stride = (0.5 / ts).round() as usize;
+    bench("signal: batch session (14 s, 2 Hz polls)", 3000, || {
+        let (mut p, mut us, mut um) = (Vec::new(), Vec::new(), Vec::new());
+        for i in 0..n_s {
+            p.push(cp[i]);
+            us.push(cs[i]);
+            um.push(cm[i]);
+            if (i + 1) % stride == 0 {
+                let feat = composite_feature(&p, &us, &um);
+                let _ = online_detect(&feat, ts, &PeriodCfg::default());
+            }
+        }
+    });
+    bench("signal: streaming session (14 s, 2 Hz polls)", 3000, || {
+        let mut det = StreamingDetector::new(
+            ts,
+            PeriodCfg::default(),
+            StreamCfg {
+                retain_horizon_mult: Some(2.0),
+                ..StreamCfg::default()
+            },
+        );
+        for i in 0..n_s {
+            det.push(cp[i], cs[i], cm[i]);
+            if (i + 1) % stride == 0 {
+                let _ = det.poll();
+            }
+        }
     });
 
     let app = find_app(&spec, "AI_I2T").unwrap();

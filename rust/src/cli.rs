@@ -50,7 +50,11 @@ SUBCOMMANDS:
   experiment <id>              regenerate a paper table/figure
                                (fig1 fig2 fig3 fig5 fig6 fig7 fig8 fig9
                                 fig10 fig11 fig12 fig13 table3 fig14
-                                fig15 headline policies | all)
+                                fig15 headline policies detect-bench |
+                                all); detect-bench appends streaming-vs-
+                                batch detection cost to
+                                BENCH_detection.json (--poll-s F
+                                --min-speedup X fails below X×)
   daemon [--socket PATH]       Begin/End API server (micro-intrusive
                                mode; --workers N fleet threads;
                                per-connection POLICY <name> selection)

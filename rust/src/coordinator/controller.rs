@@ -24,7 +24,7 @@
 use crate::device::Device;
 use crate::model::Predictor;
 use crate::search::{local_search, Objective, SearchResult};
-use crate::signal::{composite_feature, online_detect_with, PeriodCfg};
+use crate::signal::{PeriodCfg, StreamCfg, StreamingDetector};
 use crate::util::stats::mean;
 use std::sync::Arc;
 
@@ -116,10 +116,12 @@ pub struct Gpoeo {
     pub stats: GpoeoStats,
     predictor: Arc<Predictor>,
     phase: Phase,
-    // Sampling rings for Feature_dect.
-    power: Vec<f64>,
-    util_sm: Vec<f64>,
-    util_mem: Vec<f64>,
+    /// Streaming Feature_dect engine: the controller pushes every
+    /// sampling tick and asks for an Algorithm-3 verdict at its own
+    /// schedule deadlines (grow-only retention — `retain_horizon_mult:
+    /// None` — so verdicts are bit-compatible with the historic
+    /// re-slice-the-Vecs implementation).
+    det: StreamingDetector,
     window_start_s: f64,
     // Monitor accumulator.
     mon_acc: Vec<f64>,
@@ -130,51 +132,85 @@ pub struct Gpoeo {
 impl Gpoeo {
     pub fn new(cfg: GpoeoCfg, predictor: Arc<Predictor>) -> Gpoeo {
         let until = cfg.initial_window_s;
+        let stream = StreamCfg {
+            initial_window_s: cfg.initial_window_s,
+            none_ext_s: cfg.initial_window_s / 2.0,
+            // The retention cap must cover the controller's own schedule
+            // (give-up window + the longest single extension) or push()
+            // would silently trim mid-detection for non-default configs.
+            max_retain_s: (cfg.max_window_s + 15.0).max(60.0),
+            ..StreamCfg::default()
+        };
+        let det = StreamingDetector::new(cfg.ts, cfg.period.clone(), stream);
         Gpoeo {
             cfg,
             stats: GpoeoStats::default(),
             predictor,
             phase: Phase::Sampling { until_s: until },
-            power: Vec::new(),
-            util_sm: Vec::new(),
-            util_mem: Vec::new(),
+            det,
             window_start_s: 0.0,
             mon_acc: Vec::new(),
             period_s: 0.0,
             aperiodic: false,
         }
     }
+}
 
-    /// Spectrum front-end: the PJRT-compiled Pallas periodogram when the
-    /// HLO backend is loaded, else the native FFT. The trace window is
-    /// linearly resampled to the kernel's fixed 1024-point input.
-    fn spectrum(&self, smp: &[f64], ts: f64) -> (Vec<f64>, Vec<f64>) {
-        if let Predictor::Hlo(rt) = &*self.predictor {
-            if smp.len() >= 64 {
-                let n = 1024usize;
-                let dur = (smp.len() - 1) as f64 * ts;
-                let ts2 = dur / (n - 1) as f64;
-                let mut resampled = Vec::with_capacity(n);
-                for i in 0..n {
-                    let x = i as f64 * ts2 / ts;
-                    let j = (x.floor() as usize).min(smp.len() - 2);
-                    let frac = x - j as f64;
-                    resampled.push((smp[j] * (1.0 - frac) + smp[j + 1] * frac) as f32);
-                }
-                if let Ok(ampls) = rt.periodogram_1024(&resampled) {
-                    // Bin k of the output is spectral bin k+1; drop the
-                    // Nyquist bin to match the native periodogram exactly.
-                    let freqs: Vec<f64> =
-                        (1..n / 2).map(|k| k as f64 / (n as f64 * ts2)).collect();
-                    let ampls: Vec<f64> =
-                        ampls[..n / 2 - 1].iter().map(|&a| a as f64).collect();
-                    return (freqs, ampls);
-                }
+/// Spectrum front-end: the PJRT-compiled Pallas periodogram when the
+/// HLO backend is loaded, else the native FFT. The trace window is
+/// linearly resampled to the kernel's fixed 1024-point input.
+fn spectrum_for(predictor: &Predictor, smp: &[f64], ts: f64) -> (Vec<f64>, Vec<f64>) {
+    if let Predictor::Hlo(rt) = predictor {
+        if smp.len() >= 64 {
+            let n = 1024usize;
+            let dur = (smp.len() - 1) as f64 * ts;
+            let ts2 = dur / (n - 1) as f64;
+            let mut resampled = Vec::with_capacity(n);
+            for i in 0..n {
+                let x = i as f64 * ts2 / ts;
+                let j = (x.floor() as usize).min(smp.len() - 2);
+                let frac = x - j as f64;
+                resampled.push((smp[j] * (1.0 - frac) + smp[j + 1] * frac) as f32);
+            }
+            if let Ok(ampls) = rt.periodogram_1024(&resampled) {
+                // Bin k of the output is spectral bin k+1; drop the
+                // Nyquist bin to match the native periodogram exactly.
+                let freqs: Vec<f64> = (1..n / 2).map(|k| k as f64 / (n as f64 * ts2)).collect();
+                let ampls: Vec<f64> = ampls[..n / 2 - 1].iter().map(|&a| a as f64).collect();
+                return (freqs, ampls);
             }
         }
-        crate::signal::periodogram(smp, ts)
     }
+    crate::signal::periodogram(smp, ts)
+}
 
+/// Index of gear `g` in a predicted gear table, clamped to the nearest
+/// table entry when the predictor or the search hands back a gear the
+/// (possibly pruned) table does not contain. A production fleet worker
+/// must degrade here, not panic mid-session; the clamp is logged once
+/// per search stage.
+fn nearest_gear_index(gears: &[usize], g: usize, warned: &mut bool, which: &str) -> usize {
+    assert!(!gears.is_empty(), "empty predicted gear table");
+    if let Some(i) = gears.iter().position(|&x| x == g) {
+        return i;
+    }
+    let mut best = 0usize;
+    for (i, &x) in gears.iter().enumerate() {
+        if x.abs_diff(g) < gears[best].abs_diff(g) {
+            best = i;
+        }
+    }
+    if !*warned {
+        eprintln!(
+            "gpoeo: {which} gear {g} outside the predicted table; using nearest gear {}",
+            gears[best]
+        );
+        *warned = true;
+    }
+    best
+}
+
+impl Gpoeo {
     // ------------------------------------------------------------------
     // Synchronous measurement helpers (drive the gpu forward directly).
     // ------------------------------------------------------------------
@@ -272,6 +308,7 @@ impl Gpoeo {
                 probes: vec![],
             }
         } else if self.cfg.optimize_mem {
+            let mut warned = false;
             let mut eval = |g: usize| -> f64 {
                 if self.cfg.actuate {
                     gpu.set_mem_gear(g);
@@ -279,7 +316,7 @@ impl Gpoeo {
                 } else {
                     // Overhead mode: pay the measurement, use the model.
                     let _ = self.probe_measure(gpu, probe_window);
-                    let i = pred_mem.gears.iter().position(|&x| x == g).unwrap();
+                    let i = nearest_gear_index(&pred_mem.gears, g, &mut warned, "mem");
                     self.cfg
                         .objective
                         .score(pred_mem.energy_ratio[i], pred_mem.time_ratio[i])
@@ -311,13 +348,14 @@ impl Gpoeo {
                 probes: vec![],
             }
         } else if self.cfg.optimize_sm {
+            let mut warned = false;
             let mut eval = |g: usize| -> f64 {
                 if self.cfg.actuate {
                     gpu.set_sm_gear(g);
                     probe_score!(self, gpu, probe_window)
                 } else {
                     let _ = self.probe_measure(gpu, probe_window);
-                    let i = pred_sm.gears.iter().position(|&x| x == g).unwrap();
+                    let i = nearest_gear_index(&pred_sm.gears, g, &mut warned, "sm");
                     self.cfg
                         .objective
                         .score(pred_sm.energy_ratio[i], pred_sm.time_ratio[i])
@@ -376,9 +414,7 @@ impl Gpoeo {
     }
 
     fn restart_sampling(&mut self, gpu: &mut dyn Device) {
-        self.power.clear();
-        self.util_sm.clear();
-        self.util_mem.clear();
+        self.det.reset();
         self.window_start_s = gpu.time_s();
         self.stats.detect_rounds = 0;
         self.aperiodic = false;
@@ -432,20 +468,14 @@ impl crate::coordinator::Policy for Gpoeo {
             Phase::Sampling { until_s } => {
                 gpu.advance(ts);
                 let s = gpu.sample(ts);
-                self.power.push(s.power_w);
-                self.util_sm.push(s.util_sm);
-                self.util_mem.push(s.util_mem);
+                self.det.push(s.power_w, s.util_sm, s.util_mem);
                 if gpu.time_s() < until_s {
                     return;
                 }
                 let window_s = gpu.time_s() - self.window_start_s;
-                let feat = composite_feature(&self.power, &self.util_sm, &self.util_mem);
-                let mut spectrum = {
-                    let this: &Gpoeo = self;
-                    // Safety: spectrum() only reads predictor state.
-                    move |s: &[f64], t: f64| this.spectrum(s, t)
-                };
-                let det = online_detect_with(&feat, ts, &self.cfg.period, &mut spectrum);
+                let pred = self.predictor.clone();
+                let mut spectrum = move |smp: &[f64], t: f64| spectrum_for(&pred, smp, t);
+                let det = self.det.evaluate_with(&mut spectrum).detection;
                 match det {
                     Some(d) if d.next_sampling_s.is_none()
                         && d.estimate.err <= self.cfg.aperiodic_err =>
@@ -522,5 +552,28 @@ impl crate::coordinator::Policy for Gpoeo {
                 }
             }
         }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn nearest_gear_index_clamps_out_of_table_gears() {
+        let gears = vec![40usize, 60, 80, 100];
+        let mut warned = false;
+        // Exact hits never warn.
+        assert_eq!(nearest_gear_index(&gears, 80, &mut warned, "sm"), 2);
+        assert!(!warned);
+        // Above the table: clamp to the top entry (and warn once).
+        assert_eq!(nearest_gear_index(&gears, 114, &mut warned, "sm"), 3);
+        assert!(warned);
+        // Below the table: clamp to the bottom entry.
+        let mut warned = false;
+        assert_eq!(nearest_gear_index(&gears, 10, &mut warned, "sm"), 0);
+        // Between entries: nearest wins; exact ties keep the first.
+        assert_eq!(nearest_gear_index(&gears, 73, &mut warned, "sm"), 2);
+        assert_eq!(nearest_gear_index(&gears, 70, &mut warned, "sm"), 1);
     }
 }

@@ -20,7 +20,10 @@
 //!
 //! One session at a time per connection. `POLICY` selects any policy
 //! registered in [`crate::policy::PolicyRegistry`] for the *next*
-//! session; an unregistered name answers `ERR unknown policy ...`.
+//! session; an unregistered name answers `ERR unknown policy ...`. A
+//! malformed `BEGIN` iteration count (non-numeric, zero, overflow)
+//! answers `ERR bad iteration count ...` instead of silently running
+//! the default.
 //! Sessions from all connections are served by a shared [`Fleet`]: each
 //! fleet worker owns one [`Predictor`](crate::model::Predictor) (the
 //! PJRT HLO executables compile once per worker, not once per
@@ -71,6 +74,25 @@ impl Daemon {
     }
 }
 
+/// The optional iteration-count argument of `BEGIN <app> [iters]`:
+/// absent means the default, anything present must parse as a positive
+/// `u64`. Non-numeric, zero, negative and overflowing counts all answer
+/// `ERR bad iteration count ...` — the old behavior silently ran 300
+/// iterations, so a client typo'ing `BEGIN app 1e6` got a result for a
+/// workload it never asked for.
+fn parse_iters(tok: Option<&str>) -> Result<u64, String> {
+    match tok {
+        None => Ok(300),
+        Some(t) => match t.parse::<u64>() {
+            Ok(0) => Err(format!("bad iteration count '{t}' (must be positive)")),
+            Ok(n) => Ok(n),
+            Err(_) => Err(format!(
+                "bad iteration count '{t}' (expected a positive integer)"
+            )),
+        },
+    }
+}
+
 fn handle_connection(stream: UnixStream, fleet: Arc<Fleet>) -> anyhow::Result<()> {
     let mut writer = stream.try_clone()?;
     let reader = BufReader::new(stream);
@@ -116,15 +138,19 @@ fn handle_connection(stream: UnixStream, fleet: Arc<Fleet>) -> anyhow::Result<()
                     writeln!(writer, "ERR session already active (END it first)")?;
                 } else {
                     let name = parts.next().unwrap_or("");
-                    let iters: u64 = parts.next().and_then(|s| s.parse().ok()).unwrap_or(300);
-                    let started = find_app(fleet.spec(), name)
-                        .and_then(|app| fleet.begin(app, policy.clone(), iters));
-                    match started {
-                        Ok(h) => {
-                            session = Some(h);
-                            writeln!(writer, "OK session started")?;
+                    match parse_iters(parts.next()) {
+                        Err(msg) => writeln!(writer, "ERR {msg}")?,
+                        Ok(iters) => {
+                            let started = find_app(fleet.spec(), name)
+                                .and_then(|app| fleet.begin(app, policy.clone(), iters));
+                            match started {
+                                Ok(h) => {
+                                    session = Some(h);
+                                    writeln!(writer, "OK session started")?;
+                                }
+                                Err(e) => writeln!(writer, "ERR {e}")?,
+                            }
                         }
-                        Err(e) => writeln!(writer, "ERR {e}")?,
                     }
                 }
             }
@@ -261,6 +287,44 @@ mod tests {
         let line = c.roundtrip("BEGIN");
         assert!(line.starts_with("ERR"), "{line}");
 
+        writeln!(c.w, "QUIT").unwrap();
+    }
+
+    #[test]
+    fn parse_iters_contract() {
+        assert_eq!(parse_iters(None), Ok(300));
+        assert_eq!(parse_iters(Some("42")), Ok(42));
+        for bad in ["abc", "0", "-5", "12.5", "1e6", "18446744073709551616", ""] {
+            let r = parse_iters(Some(bad));
+            assert!(
+                matches!(&r, Err(msg) if msg.starts_with("bad iteration count")),
+                "{bad:?} -> {r:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn begin_rejects_bad_iteration_counts() {
+        // None of these needs model artifacts: the count is validated
+        // before the app lookup or any fleet work.
+        let sock = spawn_daemon("iters", 1);
+        let mut c = Client::connect(&sock);
+        for cmd in [
+            "BEGIN AI_TS abc",
+            "BEGIN AI_TS 0",
+            "BEGIN AI_TS -5",
+            "BEGIN AI_TS 12.5",
+            "BEGIN AI_TS 18446744073709551616",
+        ] {
+            let line = c.roundtrip(cmd);
+            assert!(line.starts_with("ERR bad iteration count"), "{cmd}: {line}");
+        }
+        // The connection stays healthy: a clean BEGIN still works
+        // (artifact-free policy, so this runs everywhere).
+        assert!(c.roundtrip("POLICY powercap").starts_with("OK"));
+        let line = c.roundtrip("BEGIN AI_TS 20");
+        assert!(line.starts_with("OK"), "{line}");
+        assert!(c.roundtrip("END").starts_with("RESULT"));
         writeln!(c.w, "QUIT").unwrap();
     }
 

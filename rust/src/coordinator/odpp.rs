@@ -81,6 +81,13 @@ impl Odpp {
             gpu.advance(self.cfg.ts);
             power.push(gpu.sample(self.cfg.ts).power_w);
         }
+        // A NaN reading would poison the detrended spectrum wholesale —
+        // and dropping samples in place would compress the time axis and
+        // bias the period low. Treat a poisoned window as "no detection"
+        // and take the same fallback as an empty spectrum.
+        if power.iter().any(|x| !x.is_finite()) {
+            return window_s / 4.0;
+        }
         calc_period_fft_argmax(&power, self.cfg.ts)
             .map(|e| e.t_iter)
             .unwrap_or(window_s / 4.0)
@@ -116,6 +123,12 @@ impl Odpp {
         // Baseline at default clocks.
         let (p_base, t_base) = self.probe(gpu);
         self.detected_period_s = t_base;
+        // A non-finite or degenerate baseline (a NaN energy reading while
+        // probing) leaves nothing to normalize against: stay at the
+        // default clocks rather than poison every ratio downstream.
+        if !p_base.is_finite() || !t_base.is_finite() || p_base <= 0.0 || t_base <= 0.0 {
+            return;
+        }
         // Probe windows scale with the detected period (~4-5 periods).
         // The FFT-bin quantization of the arg-max detector then rounds
         // time ratios to ~±25% — the instability that drives ODPP's
@@ -130,35 +143,46 @@ impl Odpp {
         for &g in &probes {
             gpu.set_sm_gear(g);
             let (p, per) = self.probe(gpu);
+            // A NaN measurement drops this probe, not the worker thread
+            // (regression: nan_measurements_do_not_panic_the_worker).
+            if !p.is_finite() || !per.is_finite() {
+                continue;
+            }
             let tr = per / t_base; // period-derived time ratio (fragile!)
             xs.push(g as f64);
             t_ratio.push(tr);
             e_ratio.push((p * per) / (p_base * t_base));
         }
-        // Ascending x for interpolation.
-        let mut idx: Vec<usize> = (0..xs.len()).collect();
-        idx.sort_by(|&a, &b| xs[a].partial_cmp(&xs[b]).unwrap());
-        let xs_s: Vec<f64> = idx.iter().map(|&i| xs[i]).collect();
-        let es: Vec<f64> = idx.iter().map(|&i| e_ratio[i]).collect();
-        let tsr: Vec<f64> = idx.iter().map(|&i| t_ratio[i]).collect();
-
         let spec = gpu.spec().clone();
-        // Only interpolate inside the probed range — extrapolating the
-        // flat tail below the lowest probe would let a single optimistic
-        // probe send the GPU to the floor gear.
-        let g_lo = xs_s[0] as usize;
-        let g_hi = *xs_s.last().unwrap() as usize;
-        let mut best = (f64::INFINITY, spec.gears.default_sm_gear);
-        for g in g_lo..=g_hi {
-            let e = Self::pw_linear(&xs_s, &es, g as f64);
-            let t = Self::pw_linear(&xs_s, &tsr, g as f64);
-            let s = self.cfg.objective.score(e, t);
-            if s < best.0 {
-                best = (s, g);
+        if xs.len() >= 2 {
+            // Ascending x for interpolation.
+            let mut idx: Vec<usize> = (0..xs.len()).collect();
+            idx.sort_by(|&a, &b| xs[a].total_cmp(&xs[b]));
+            let xs_s: Vec<f64> = idx.iter().map(|&i| xs[i]).collect();
+            let es: Vec<f64> = idx.iter().map(|&i| e_ratio[i]).collect();
+            let tsr: Vec<f64> = idx.iter().map(|&i| t_ratio[i]).collect();
+
+            // Only interpolate inside the probed range — extrapolating the
+            // flat tail below the lowest probe would let a single optimistic
+            // probe send the GPU to the floor gear.
+            let g_lo = xs_s[0] as usize;
+            let g_hi = *xs_s.last().unwrap() as usize;
+            let mut best = (f64::INFINITY, spec.gears.default_sm_gear);
+            for g in g_lo..=g_hi {
+                let e = Self::pw_linear(&xs_s, &es, g as f64);
+                let t = Self::pw_linear(&xs_s, &tsr, g as f64);
+                let s = self.cfg.objective.score(e, t);
+                if s < best.0 {
+                    best = (s, g);
+                }
             }
+            gpu.set_sm_gear(best.1);
+            self.chosen_sm = best.1;
+        } else {
+            // Fewer than two usable probes: no model to fit.
+            gpu.set_sm_gear(spec.gears.default_sm_gear);
+            self.chosen_sm = spec.gears.default_sm_gear;
         }
-        gpu.set_sm_gear(best.1);
-        self.chosen_sm = best.1;
 
         // --- Memory stage: same treatment over the probed mem gears.
         let mem_probes = self.cfg.mem_probes.clone();
@@ -166,6 +190,9 @@ impl Odpp {
         for &m in &mem_probes {
             gpu.set_mem_gear(m);
             let (p, per) = self.probe(gpu);
+            if !p.is_finite() || !per.is_finite() {
+                continue;
+            }
             let e = (p * per) / (p_base * t_base);
             let t = per / t_base;
             let s = self.cfg.objective.score(e, t);
@@ -200,5 +227,146 @@ impl crate::coordinator::Policy for Odpp {
                 gpu.advance(self.cfg.ts);
             }
         }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::run_policy;
+    use crate::device::sim_device;
+    use crate::sim::{find_app, Instant, SimGpu, Spec};
+    use std::sync::Arc;
+
+    /// Device wrapper that poisons a slice of telemetry with NaN — the
+    /// NVML glitch a long-lived fleet worker must survive. Clocks, time
+    /// and the workload itself are untouched.
+    struct NanGlitch {
+        inner: SimGpu,
+        from_s: f64,
+        to_s: f64,
+    }
+
+    impl NanGlitch {
+        fn glitching(&self) -> bool {
+            (self.from_s..self.to_s).contains(&self.inner.time_s())
+        }
+    }
+
+    impl Device for NanGlitch {
+        fn spec(&self) -> &Arc<Spec> {
+            self.inner.spec()
+        }
+        fn workload(&self) -> &str {
+            self.inner.workload()
+        }
+        fn nominal_iter_s(&self) -> f64 {
+            self.inner.nominal_iter_s()
+        }
+        fn set_sm_gear(&mut self, gear: usize) {
+            self.inner.set_sm_gear(gear)
+        }
+        fn set_mem_gear(&mut self, gear: usize) {
+            self.inner.set_mem_gear(gear)
+        }
+        fn set_default_clocks(&mut self) {
+            self.inner.set_default_clocks()
+        }
+        fn sm_gear(&self) -> usize {
+            self.inner.sm_gear()
+        }
+        fn mem_gear(&self) -> usize {
+            self.inner.mem_gear()
+        }
+        fn set_power_limit_w(&mut self, limit_w: f64) {
+            self.inner.set_power_limit_w(limit_w)
+        }
+        fn power_limit_w(&self) -> f64 {
+            self.inner.power_limit_w()
+        }
+        fn sample(&mut self, dt_since_last: f64) -> Instant {
+            let mut s = self.inner.sample(dt_since_last);
+            if self.glitching() {
+                s.power_w = f64::NAN;
+            }
+            s
+        }
+        fn energy_j(&mut self) -> f64 {
+            if self.glitching() {
+                f64::NAN
+            } else {
+                self.inner.energy_j()
+            }
+        }
+        fn ips(&mut self) -> f64 {
+            self.inner.ips()
+        }
+        fn start_counter_session(&mut self) {
+            self.inner.start_counter_session()
+        }
+        fn stop_counter_session(&mut self) {
+            self.inner.stop_counter_session()
+        }
+        fn profiling_active(&self) -> bool {
+            self.inner.profiling_active()
+        }
+        fn read_counters(&mut self) -> Vec<f64> {
+            self.inner.read_counters()
+        }
+        fn advance(&mut self, dt: f64) {
+            self.inner.advance(dt)
+        }
+        fn iterations(&self) -> u64 {
+            self.inner.iterations()
+        }
+        fn time_s(&self) -> f64 {
+            self.inner.time_s()
+        }
+        fn true_energy_j(&self) -> f64 {
+            self.inner.true_energy_j()
+        }
+        fn true_period(&self) -> f64 {
+            self.inner.true_period()
+        }
+    }
+
+    /// A NaN slice anywhere in the optimization transient must degrade
+    /// (skipped probes, default gears), never panic the worker thread.
+    /// Two placements: one that poisons the baseline probe, one that
+    /// poisons a mid-search probe (the `partial_cmp` panic of old).
+    #[test]
+    fn nan_measurements_do_not_panic_the_worker() {
+        let spec = Arc::new(Spec::load_default().unwrap());
+        let app = find_app(&spec, "AI_TS").unwrap();
+        for (from_s, to_s) in [(8.0, 30.0), (13.0, 16.0)] {
+            let mut dev = NanGlitch {
+                inner: sim_device(&spec, &app),
+                from_s,
+                to_s,
+            };
+            let mut o = Odpp::new(OdppCfg::default());
+            let r = run_policy(&mut dev, &mut o, 60);
+            assert!(r.iterations >= 60, "run must complete: {r:?}");
+            assert!(dev.sm_gear() <= spec.gears.sm_gear_max);
+        }
+    }
+
+    /// With clean telemetry the NaN guards must be inert: the optimizer
+    /// still leaves the default configuration for something it chose.
+    #[test]
+    fn clean_run_still_optimizes() {
+        let spec = Arc::new(Spec::load_default().unwrap());
+        let app = find_app(&spec, "AI_TS").unwrap();
+        let mut dev = sim_device(&spec, &app);
+        let mut o = Odpp::new(OdppCfg::default());
+        let r = run_policy(&mut dev, &mut o, 60);
+        assert!(r.iterations >= 60);
+        let probed_range: Vec<usize> = o.cfg.sm_probes.clone();
+        assert!(
+            o.chosen_sm >= *probed_range.iter().min().unwrap()
+                && o.chosen_sm <= *probed_range.iter().max().unwrap(),
+            "chosen SM gear {} outside the probed range",
+            o.chosen_sm
+        );
     }
 }

@@ -1,8 +1,18 @@
 //! Period-detection experiments: Fig. 2 (motivating errors under clock
-//! sweep), Fig. 5 (34-app study), Figs. 6/7/8 (per-app clock sweeps).
+//! sweep), Fig. 5 (34-app study), Figs. 6/7/8 (per-app clock sweeps),
+//! and the post-paper `detect-bench` (streaming vs batch detection cost
+//! over the 71 evaluation apps, appended to `BENCH_detection.json`).
 
-use crate::experiments::helpers::{detection_errors, detection_study_apps, frac_within, sweep_gears};
-use crate::sim::{find_app, Spec};
+use crate::device::sim_device;
+use crate::experiments::helpers::{
+    capture_channels, detection_errors, detection_study_apps, frac_within, sweep_gears,
+};
+use crate::signal::{
+    composite_feature, online_detect, OnlineDetection, PeriodCfg, StreamCfg, StreamingDetector,
+};
+use crate::sim::{find_app, make_suite, AppParams, Spec};
+use crate::util::cli::Args;
+use crate::util::json::Json;
 use crate::util::stats::mean;
 use crate::util::table::{s, Cell, Table};
 use std::sync::Arc;
@@ -107,6 +117,278 @@ pub fn fig7(spec: &Arc<Spec>) -> Table {
 
 pub fn fig8(spec: &Arc<Spec>) -> Table {
     clock_sweep_table(spec, "TSP_GatedGCN", "Fig 8 — period detection error vs SM clock (TSP_GatedGCN)")
+}
+
+// ---------------------------------------------------------------------
+// detect-bench: the streaming-engine cost study.
+// ---------------------------------------------------------------------
+
+/// Per-app outcome of one detect-bench session pair.
+pub struct DetectBenchRow {
+    pub app: String,
+    pub aperiodic: bool,
+    pub true_period_s: f64,
+    pub batch_wall_s: f64,
+    pub batch_evals: usize,
+    pub batch_detected_s: f64,
+    pub stream_wall_s: f64,
+    pub stream_evals: usize,
+    pub stream_detected_s: f64,
+    pub cache_hits: u64,
+    pub cache_misses: u64,
+    pub retained_max: usize,
+}
+
+pub struct DetectBench {
+    pub table: Table,
+    pub rows: Vec<DetectBenchRow>,
+    pub batch_wall_s: f64,
+    pub stream_wall_s: f64,
+    pub speedup: f64,
+}
+
+impl DetectBench {
+    pub fn print_summary(&self) {
+        println!(
+            "detection wall-clock over {} apps: batch {:.3}s  streaming {:.3}s  speedup {:.1}x",
+            self.rows.len(),
+            self.batch_wall_s,
+            self.stream_wall_s,
+            self.speedup
+        );
+        let (h, m) = self
+            .rows
+            .iter()
+            .fold((0u64, 0u64), |(h, m), r| (h + r.cache_hits, m + r.cache_misses));
+        println!(
+            "streaming evaluations {}  batch evaluations {}  sub-window cache hit rate {:.0}%",
+            self.rows.iter().map(|r| r.stream_evals).sum::<usize>(),
+            self.rows.iter().map(|r| r.batch_evals).sum::<usize>(),
+            100.0 * h as f64 / (h + m).max(1) as f64
+        );
+    }
+}
+
+/// Relative detected-vs-true error; -1 when no detection or no usable
+/// ground truth (aperiodic apps).
+fn rel_err(detected_s: f64, truth: f64, aperiodic: bool) -> f64 {
+    if aperiodic || !detected_s.is_finite() || !truth.is_finite() || truth <= 0.0 {
+        -1.0
+    } else {
+        (detected_s - truth).abs() / truth
+    }
+}
+
+/// `gpoeo experiment detect-bench [--quick] [--poll-s F] [--bench PATH]`
+///
+/// For every app in the three suites, replays the same online session
+/// twice against the same captured trace:
+///
+/// - **batch**: the pre-detector consumer pattern — accumulate the
+///   channels and recompute `composite_feature` + `online_detect` over
+///   the *entire* window at every poll (no standing verdict to answer
+///   from, so every poll pays O(window));
+/// - **streaming**: push each tick into a [`StreamingDetector`]
+///   (advancing start line on) and poll at the same cadence; the
+///   detector re-evaluates only when Algorithm 3's requested extension
+///   has arrived, over its bounded retained window.
+///
+/// Wall-clock, evaluation counts, cache hit rates and detected-vs-true
+/// periods are tabulated and appended to `BENCH_detection.json`.
+pub fn detect_bench(spec: &Arc<Spec>, args: &Args, quick: bool) -> anyhow::Result<DetectBench> {
+    let ts = 0.025;
+    let poll_s = args.opt_f64("poll-s", 0.5)?;
+    let poll_stride = ((poll_s / ts).round() as usize).max(1);
+    let cfg = PeriodCfg::default();
+
+    let mut apps: Vec<AppParams> = Vec::new();
+    for suite in ["aibench", "classical", "gnns"] {
+        apps.extend(make_suite(spec, suite)?);
+    }
+
+    let mut rows = Vec::new();
+    for app in &apps {
+        let (sm, mem, _) = app.default_op(spec);
+        let mut probe = sim_device(spec, app);
+        probe.set_sm_gear(sm);
+        probe.set_mem_gear(mem);
+        let truth = probe.true_period();
+        let dur = if quick {
+            (8.0 * truth).clamp(8.0, 16.0)
+        } else {
+            (12.0 * truth).clamp(10.0, 40.0)
+        };
+        let (p, us, um, truth) = capture_channels(spec, app, sm, mem, ts, dur);
+
+        // --- Streaming pass.
+        let t0 = std::time::Instant::now();
+        let mut det = StreamingDetector::new(
+            ts,
+            cfg.clone(),
+            StreamCfg {
+                retain_horizon_mult: Some(2.0),
+                ..StreamCfg::default()
+            },
+        );
+        let mut s_last: Option<OnlineDetection> = None;
+        let mut retained_max = 0usize;
+        for i in 0..p.len() {
+            det.push(p[i], us[i], um[i]);
+            if (i + 1) % poll_stride == 0 {
+                if let Some(v) = det.poll() {
+                    s_last = v.detection;
+                    retained_max = retained_max.max(det.retained_len());
+                }
+            }
+        }
+        let stream_wall_s = t0.elapsed().as_secs_f64();
+        let (cache_hits, cache_misses) = det.cache_stats();
+
+        // --- Batch pass: identical polls, no detector state.
+        let t1 = std::time::Instant::now();
+        let mut b_last: Option<OnlineDetection> = None;
+        let mut b_evals = 0usize;
+        let (mut bp, mut bus, mut bum) = (Vec::new(), Vec::new(), Vec::new());
+        for i in 0..p.len() {
+            bp.push(p[i]);
+            bus.push(us[i]);
+            bum.push(um[i]);
+            if (i + 1) % poll_stride == 0 {
+                let feat = composite_feature(&bp, &bus, &bum);
+                b_last = online_detect(&feat, ts, &cfg);
+                b_evals += 1;
+            }
+        }
+        let batch_wall_s = t1.elapsed().as_secs_f64();
+
+        rows.push(DetectBenchRow {
+            app: app.name.clone(),
+            aperiodic: app.aperiodic,
+            true_period_s: truth,
+            batch_wall_s,
+            batch_evals: b_evals,
+            batch_detected_s: b_last.map_or(f64::NAN, |d| d.estimate.t_iter),
+            stream_wall_s,
+            stream_evals: det.rounds(),
+            stream_detected_s: s_last.map_or(f64::NAN, |d| d.estimate.t_iter),
+            cache_hits,
+            cache_misses,
+            retained_max,
+        });
+    }
+
+    let batch_total: f64 = rows.iter().map(|r| r.batch_wall_s).sum();
+    let stream_total: f64 = rows.iter().map(|r| r.stream_wall_s).sum();
+    let speedup = batch_total / stream_total.max(1e-12);
+
+    let mut table = Table::new(
+        &format!(
+            "Detect-bench — streaming vs batch detection, {} apps, poll every {poll_s}s{}",
+            rows.len(),
+            if quick { ", --quick" } else { "" }
+        ),
+        &[
+            "app", "true T", "stream ms", "batch ms", "speedup", "evals s/b", "cache hit%",
+            "stream err", "batch err",
+        ],
+    );
+    for r in &rows {
+        let hitrate = 100.0 * r.cache_hits as f64 / (r.cache_hits + r.cache_misses).max(1) as f64;
+        let fmt_err = |e: f64| {
+            if e < 0.0 {
+                "-".to_string()
+            } else {
+                format!("{:.1}%", e * 100.0)
+            }
+        };
+        table.rowf(&[
+            s(&r.app),
+            Cell::F(r.true_period_s, 3),
+            Cell::F(r.stream_wall_s * 1e3, 1),
+            Cell::F(r.batch_wall_s * 1e3, 1),
+            Cell::F(r.batch_wall_s / r.stream_wall_s.max(1e-12), 1),
+            s(&format!("{}/{}", r.stream_evals, r.batch_evals)),
+            Cell::F(hitrate, 0),
+            s(&fmt_err(rel_err(r.stream_detected_s, r.true_period_s, r.aperiodic))),
+            s(&fmt_err(rel_err(r.batch_detected_s, r.true_period_s, r.aperiodic))),
+        ]);
+    }
+
+    let bench_path = args.opt_or("bench", "BENCH_detection.json");
+    write_bench(bench_path, quick, poll_s, batch_total, stream_total, speedup, &rows)?;
+    println!("bench record appended to {bench_path}");
+
+    Ok(DetectBench {
+        table,
+        rows,
+        batch_wall_s: batch_total,
+        stream_wall_s: stream_total,
+        speedup,
+    })
+}
+
+/// Append one detect-bench record (`runs[]` keeps the history; `per_app`
+/// holds the latest per-app numbers — the `BENCH_sweep.json` pattern).
+fn write_bench(
+    path: &str,
+    quick: bool,
+    poll_s: f64,
+    batch_total: f64,
+    stream_total: f64,
+    speedup: f64,
+    rows: &[DetectBenchRow],
+) -> anyhow::Result<()> {
+    let num = |x: f64| Json::Num(if x.is_finite() { x } else { -1.0 });
+    let per_app: Vec<Json> = rows
+        .iter()
+        .map(|r| {
+            Json::obj(vec![
+                ("app", Json::Str(r.app.clone())),
+                ("aperiodic", Json::Bool(r.aperiodic)),
+                ("true_period_s", num(r.true_period_s)),
+                ("batch_wall_s", num(r.batch_wall_s)),
+                ("batch_evals", Json::Num(r.batch_evals as f64)),
+                ("batch_detected_s", num(r.batch_detected_s)),
+                (
+                    "batch_err",
+                    num(rel_err(r.batch_detected_s, r.true_period_s, r.aperiodic)),
+                ),
+                ("stream_wall_s", num(r.stream_wall_s)),
+                ("stream_evals", Json::Num(r.stream_evals as f64)),
+                ("stream_detected_s", num(r.stream_detected_s)),
+                (
+                    "stream_err",
+                    num(rel_err(r.stream_detected_s, r.true_period_s, r.aperiodic)),
+                ),
+                ("cache_hits", Json::Num(r.cache_hits as f64)),
+                ("cache_misses", Json::Num(r.cache_misses as f64)),
+                ("retained_max", Json::Num(r.retained_max as f64)),
+            ])
+        })
+        .collect();
+
+    let unix_s = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_secs() as f64)
+        .unwrap_or(0.0);
+    let run = Json::obj(vec![
+        ("unix_time_s", Json::Num(unix_s)),
+        ("quick", Json::Bool(quick)),
+        ("poll_s", Json::Num(poll_s)),
+        ("apps", Json::Num(rows.len() as f64)),
+        ("batch_wall_s", num(batch_total)),
+        ("stream_wall_s", num(stream_total)),
+        ("speedup", num(speedup)),
+    ]);
+
+    let mut runs = Json::bench_runs(path);
+    runs.push(run);
+    let doc = Json::obj(vec![
+        ("runs", Json::Arr(runs)),
+        ("per_app", Json::Arr(per_app)),
+    ]);
+    std::fs::write(path, doc.to_pretty())?;
+    Ok(())
 }
 
 #[cfg(test)]

@@ -10,16 +10,19 @@ use crate::signal::{calc_period_fft_argmax, composite_feature, online_detect, Pe
 use crate::sim::{AppParams, Spec};
 use std::sync::Arc;
 
-/// Sample a trace at the given clock config; returns the composite
-/// `Feature_dect` channel and the ground-truth period.
-pub fn capture_trace(
+/// Sample the three raw `Feature_dect` channels (power, SM util, mem
+/// util) at the given clock config; returns the channels and the
+/// ground-truth period. This is what streaming consumers push tick by
+/// tick — the composite blend happens detector-side, over whatever
+/// window is retained at evaluation time.
+pub fn capture_channels(
     spec: &Arc<Spec>,
     app: &AppParams,
     sm_gear: usize,
     mem_gear: usize,
     ts: f64,
     duration_s: f64,
-) -> (Vec<f64>, f64) {
+) -> (Vec<f64>, Vec<f64>, Vec<f64>, f64) {
     let mut gpu = sim_device(spec, app);
     gpu.set_sm_gear(sm_gear);
     gpu.set_mem_gear(mem_gear);
@@ -37,6 +40,20 @@ pub fn capture_trace(
         us.push(s.util_sm);
         um.push(s.util_mem);
     }
+    (p, us, um, truth)
+}
+
+/// Sample a trace at the given clock config; returns the composite
+/// `Feature_dect` channel and the ground-truth period.
+pub fn capture_trace(
+    spec: &Arc<Spec>,
+    app: &AppParams,
+    sm_gear: usize,
+    mem_gear: usize,
+    ts: f64,
+    duration_s: f64,
+) -> (Vec<f64>, f64) {
+    let (p, us, um, truth) = capture_channels(spec, app, sm_gear, mem_gear, ts, duration_s);
     (composite_feature(&p, &us, &um), truth)
 }
 

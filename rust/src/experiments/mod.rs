@@ -21,7 +21,7 @@ use std::sync::Arc;
 
 pub const EXPERIMENTS: &[&str] = &[
     "fig1", "fig2", "fig3", "fig5", "fig6", "fig7", "fig8", "fig9", "fig10", "fig11", "fig12",
-    "fig13", "table3", "fig14", "fig15", "headline", "ablation", "policies",
+    "fig13", "table3", "fig14", "fig15", "headline", "ablation", "policies", "detect-bench",
 ];
 
 fn emit(t: &Table, args: &Args) -> anyhow::Result<()> {
@@ -129,6 +129,20 @@ pub fn cli_experiment(args: &Args) -> anyhow::Result<()> {
                 let r = policies::head_to_head(&spec, args, quick)?;
                 emit(&r.table, args)?;
                 r.print_summary();
+            }
+            "detect-bench" => {
+                // Model-free: runs on the simulator + signal stack alone,
+                // so it can gate CI without AOT artifacts.
+                let r = detection::detect_bench(&spec, args, quick)?;
+                emit(&r.table, args)?;
+                r.print_summary();
+                let min = args.opt_f64("min-speedup", 0.0)?;
+                if min > 0.0 && r.speedup < min {
+                    anyhow::bail!(
+                        "detect-bench: streaming speedup {:.2}x below the required {min}x",
+                        r.speedup
+                    );
+                }
             }
             "headline" => {
                 let p = lazy_predictor()?;

@@ -33,7 +33,7 @@ pub fn cluster_1d(xs: &[f64], k: usize, max_iter: usize) -> GmmResult {
 
     // Deterministic init: means at spread quantiles, shared variance.
     let mut sorted = xs.to_vec();
-    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    sorted.sort_by(|a, b| a.total_cmp(b));
     let mut means: Vec<f64> = (0..k)
         .map(|j| {
             let q = (j as f64 + 0.5) / k as f64;

@@ -1,7 +1,9 @@
 //! Robust period detection (paper §4.1): FFT periodogram, peak
 //! extraction, 1-D GMM clustering, feature-sequence similarity
 //! (Algorithm 2), period calculation (Algorithm 1) and the online
-//! rolling framework (Algorithm 3).
+//! rolling framework (Algorithm 3) — both as the stateless batch
+//! wrapper [`online_detect_with`] and as the incremental
+//! [`StreamingDetector`] long-lived consumers hold (DESIGN.md §2).
 
 pub mod fft;
 pub mod gmm;
@@ -9,9 +11,17 @@ pub mod online;
 pub mod peaks;
 pub mod period;
 pub mod similarity;
+pub mod streaming;
 
 pub use fft::{periodogram, FftScratch};
-pub use online::{composite_feature, online_detect, online_detect_with, OnlineDetection};
+pub use online::{
+    composite_feature, composite_feature_into, online_detect, online_detect_with,
+    rolling_start_index, OnlineDetection,
+};
 pub use peaks::{candidate_periods, find_peaks, Peak};
-pub use period::{calc_period, calc_period_fft_argmax, calc_period_with, PeriodCfg, PeriodEstimate};
+pub use period::{
+    calc_period, calc_period_fft_argmax, calc_period_scratch, calc_period_with, PeriodCfg,
+    PeriodEstimate, PeriodScratch,
+};
 pub use similarity::{sequence_similarity_error, SimilarityCfg};
+pub use streaming::{detections_bit_equal, StreamCfg, StreamVerdict, StreamingDetector};

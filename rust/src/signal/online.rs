@@ -6,7 +6,7 @@
 //! a returned `next_sampling_s == None` means the period is stable and
 //! feature measurement (§4.2) can proceed.
 
-use crate::signal::period::{calc_period_with, PeriodCfg, PeriodEstimate};
+use crate::signal::period::{calc_period_scratch, PeriodCfg, PeriodEstimate, PeriodScratch};
 use crate::util::stats::{argmin, mean};
 
 /// Outcome of one Algorithm-3 evaluation.
@@ -18,16 +18,34 @@ pub struct OnlineDetection {
     pub next_sampling_s: Option<f64>,
 }
 
-/// Algorithm 3 with a pluggable spectral front-end.
-pub fn online_detect_with(
-    smp: &[f64],
+/// First sample index at or after the advancing start line `t_start`.
+///
+/// The previous derivation (`floor + 1` for any positive `t_start`) is
+/// identical whenever the line falls strictly between sample ticks, but
+/// when it landed *exactly on* a tick it skipped that perfectly valid
+/// sample — reaching one step further into the stale past than the
+/// window boundary allows. A single `ceil` includes the on-line sample
+/// and never admits one from before the line.
+pub fn rolling_start_index(t_start: f64, ts: f64) -> usize {
+    (t_start / ts).ceil() as usize
+}
+
+/// The Algorithm-3 evaluation loop over a pluggable per-window
+/// estimator: `eval_window(istart)` must return the Algorithm-1 estimate
+/// over `smp[istart..]` of the `n`-sample window. Shared verbatim by the
+/// batch wrapper [`online_detect_with`] and the caching
+/// [`crate::signal::StreamingDetector`], so the two paths cannot drift —
+/// the streaming engine's memoization only ever short-circuits calls the
+/// batch path would answer identically.
+pub(crate) fn online_detect_loop(
+    n: usize,
     ts: f64,
     cfg: &PeriodCfg,
-    spectrum: &mut dyn FnMut(&[f64], f64) -> (Vec<f64>, Vec<f64>),
+    eval_window: &mut dyn FnMut(usize) -> Option<PeriodEstimate>,
 ) -> Option<OnlineDetection> {
     // Line 1: initial estimate over the whole window.
-    let init = calc_period_with(smp, ts, cfg, spectrum)?;
-    let smp_dur = (smp.len() - 1) as f64 * ts;
+    let init = eval_window(0)?;
+    let smp_dur = (n - 1) as f64 * ts;
 
     // Lines 2–6: window shorter than c_measure periods — ask for more.
     if smp_dur < cfg.c_measure * init.t_iter {
@@ -47,11 +65,11 @@ pub fn online_detect_with(
     // refinement resolution is too coarse and their scatter would keep a
     // perfectly stable workload "unstable" forever.
     while (smp_dur - t_start) / init.t_iter >= cfg.c_measure.max(3.0) {
-        let istart = (t_start / ts).floor() as usize + if t_start > 0.0 { 1 } else { 0 };
-        if istart + 16 >= smp.len() {
+        let istart = rolling_start_index(t_start, ts);
+        if istart + 16 >= n {
             break;
         }
-        if let Some(est) = calc_period_with(&smp[istart..], ts, cfg, spectrum) {
+        if let Some(est) = eval_window(istart) {
             periods.push(est.t_iter);
             errs.push(est.err);
         }
@@ -91,6 +109,24 @@ pub fn online_detect_with(
     })
 }
 
+/// Algorithm 3 with a pluggable spectral front-end — the batch
+/// compatibility wrapper over [`online_detect_loop`]: one fresh,
+/// stateless evaluation of the full window. Long-lived consumers should
+/// hold a [`crate::signal::StreamingDetector`] instead and push samples
+/// as they arrive.
+pub fn online_detect_with(
+    smp: &[f64],
+    ts: f64,
+    cfg: &PeriodCfg,
+    spectrum: &mut dyn FnMut(&[f64], f64) -> (Vec<f64>, Vec<f64>),
+) -> Option<OnlineDetection> {
+    let mut scratch = PeriodScratch::default();
+    let mut eval = |istart: usize| {
+        calc_period_scratch(&smp[istart..], ts, cfg, &mut *spectrum, &mut scratch)
+    };
+    online_detect_loop(smp.len(), ts, cfg, &mut eval)
+}
+
 /// Algorithm 3 with the native FFT front-end.
 pub fn online_detect(smp: &[f64], ts: f64, cfg: &PeriodCfg) -> Option<OnlineDetection> {
     let mut scratch = crate::signal::fft::FftScratch::default();
@@ -105,6 +141,21 @@ pub fn online_detect(smp: &[f64], ts: f64, cfg: &PeriodCfg) -> Option<OnlineDete
 /// the blend shows the most pronounced periodicity (§4.2). Channels are
 /// variance-normalized before blending so no single unit dominates.
 pub fn composite_feature(power: &[f64], util_sm: &[f64], util_mem: &[f64]) -> Vec<f64> {
+    let mut out = Vec::new();
+    composite_feature_into(&mut out, power, util_sm, util_mem);
+    out
+}
+
+/// [`composite_feature`] into a caller-provided buffer — the streaming
+/// detector's allocation-free path. There is exactly one copy of the
+/// blend arithmetic, so the streaming/batch bit-identity contract cannot
+/// drift when the blend is tuned.
+pub fn composite_feature_into(
+    out: &mut Vec<f64>,
+    power: &[f64],
+    util_sm: &[f64],
+    util_mem: &[f64],
+) {
     assert_eq!(power.len(), util_sm.len());
     assert_eq!(power.len(), util_mem.len());
     let norm = |xs: &[f64]| -> (f64, f64) {
@@ -115,11 +166,13 @@ pub fn composite_feature(power: &[f64], util_sm: &[f64], util_mem: &[f64]) -> Ve
     let (mp, sp) = norm(power);
     let (ms, ss) = norm(util_sm);
     let (mm, sm) = norm(util_mem);
-    (0..power.len())
-        .map(|i| {
-            (power[i] - mp) / sp + 0.5 * (util_sm[i] - ms) / ss + 0.5 * (util_mem[i] - mm) / sm
-        })
-        .collect()
+    out.clear();
+    out.reserve(power.len());
+    for i in 0..power.len() {
+        out.push(
+            (power[i] - mp) / sp + 0.5 * (util_sm[i] - ms) / ss + 0.5 * (util_mem[i] - mm) / sm,
+        );
+    }
 }
 
 #[cfg(test)]
@@ -241,6 +294,31 @@ mod tests {
         assert!(det.next_sampling_s.is_none(), "recent window is stable");
         let rel = (det.estimate.t_iter - 2.0).abs() / 2.0;
         assert!(rel < 0.06, "should report the NEW period, rel {rel}");
+    }
+
+    #[test]
+    fn start_index_on_exact_tick_keeps_the_boundary_sample() {
+        // t_start exactly on a sample tick: 0.5 / 0.25 == 2.0 exactly in
+        // binary floating point. The old `floor + 1` derivation skipped
+        // sample 2 even though it sits ON the start line; `ceil` keeps it.
+        assert_eq!(rolling_start_index(0.5, 0.25), 2);
+        // Strictly between ticks: identical to the old derivation.
+        assert_eq!(rolling_start_index(0.51, 0.25), 3);
+        assert_eq!(rolling_start_index(0.74, 0.25), 3);
+        // At the origin nothing is excluded.
+        assert_eq!(rolling_start_index(0.0, 0.25), 0);
+    }
+
+    #[test]
+    fn nan_samples_never_panic_detection() {
+        // A single poisoned NVML reading must degrade ("no detection" or
+        // a high-error estimate), never panic the detection thread.
+        let ts = 0.025;
+        let mut smp = signal(1.5, ts, 12.0);
+        smp[120] = f64::NAN;
+        let _ = online_detect(&smp, ts, &PeriodCfg::default());
+        let all_nan = vec![f64::NAN; 400];
+        assert!(online_detect(&all_nan, ts, &PeriodCfg::default()).is_none());
     }
 
     #[test]

@@ -53,7 +53,7 @@ pub fn candidate_periods(
         .copied()
         .filter(|p| p.amplitude >= c_peak * max_ampl && p.period_s <= max_period)
         .collect();
-    cands.sort_by(|a, b| b.amplitude.partial_cmp(&a.amplitude).unwrap());
+    cands.sort_by(|a, b| b.amplitude.total_cmp(&a.amplitude));
     cands.truncate(max_candidates);
     cands
 }
@@ -86,7 +86,7 @@ pub fn candidate_periods_prominence(
             let lo = k.saturating_sub(w);
             let hi = (k + w + 1).min(n);
             let mut window: Vec<f64> = ampls[lo..hi].to_vec();
-            window.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            window.sort_by(|a, b| a.total_cmp(b));
             let med = window[window.len() / 2].max(1e-12);
             (p.amplitude / med, *p)
         })
@@ -107,7 +107,7 @@ pub fn candidate_periods_prominence(
     scored.retain(|(s, p)| *s >= c_peak * max_score || p.amplitude >= c_peak * max_ampl);
     // Rank by amplitude so the cap keeps the spectrally dominant set, with
     // prominence deciding admission.
-    scored.sort_by(|a, b| b.1.amplitude.partial_cmp(&a.1.amplitude).unwrap());
+    scored.sort_by(|a, b| b.1.amplitude.total_cmp(&a.1.amplitude));
     scored.truncate(max_candidates);
     scored.into_iter().map(|(_, p)| p).collect()
 }

@@ -49,6 +49,17 @@ pub struct PeriodEstimate {
     pub err: f64,
 }
 
+/// Reusable buffers for [`calc_period_scratch`]: the moving-average
+/// filtered copy of the window is the one O(n) allocation Algorithm 1
+/// used to make per call, which the rolling hot loop (Algorithm 3 runs
+/// Algorithm 1 once per sub-window per evaluation) pays dozens of times
+/// per detector tick. Owning the buffer caller-side makes the hot path
+/// allocation-free without changing a single arithmetic operation.
+#[derive(Debug, Default)]
+pub struct PeriodScratch {
+    smooth: Vec<f64>,
+}
+
 /// Algorithm 1 with the native FFT front-end.
 pub fn calc_period(smp: &[f64], ts: f64, cfg: &PeriodCfg) -> Option<PeriodEstimate> {
     let mut scratch = FftScratch::default();
@@ -64,6 +75,20 @@ pub fn calc_period_with(
     ts: f64,
     cfg: &PeriodCfg,
     spectrum: &mut dyn FnMut(&[f64], f64) -> (Vec<f64>, Vec<f64>),
+) -> Option<PeriodEstimate> {
+    let mut scratch = PeriodScratch::default();
+    calc_period_scratch(smp, ts, cfg, spectrum, &mut scratch)
+}
+
+/// [`calc_period_with`] with caller-provided scratch buffers — the
+/// allocation-free variant the streaming detector drives. Results are
+/// bit-identical to the allocating path.
+pub fn calc_period_scratch(
+    smp: &[f64],
+    ts: f64,
+    cfg: &PeriodCfg,
+    spectrum: &mut dyn FnMut(&[f64], f64) -> (Vec<f64>, Vec<f64>),
+    scratch: &mut PeriodScratch,
 ) -> Option<PeriodEstimate> {
     if smp.len() < 16 {
         return None;
@@ -85,21 +110,21 @@ pub fn calc_period_with(
     // iteration phase structure intact. The FFT above runs on the RAW
     // signal — candidate extraction must see the same spectrum ODPP does.
     let w = ((0.15 / ts).round() as usize).clamp(1, smp.len() / 16);
-    let smp_s: Vec<f64> = if w <= 1 {
-        smp.to_vec()
+    let smp: &[f64] = if w <= 1 {
+        smp
     } else {
-        let mut out = Vec::with_capacity(smp.len());
+        scratch.smooth.clear();
+        scratch.smooth.reserve(smp.len());
         let mut acc = 0.0;
         for (i, &x) in smp.iter().enumerate() {
             acc += x;
             if i >= w {
                 acc -= smp[i - w];
             }
-            out.push(acc / w.min(i + 1) as f64);
+            scratch.smooth.push(acc / w.min(i + 1) as f64);
         }
-        out
+        &scratch.smooth
     };
-    let smp = &smp_s[..];
 
     // Harmonic completion: when the waveform's 2nd/3rd harmonic dominates
     // the spectrum (near-symmetric fwd/bwd iterations), the fundamental
@@ -115,7 +140,7 @@ pub fn calc_period_with(
             }
         }
     }
-    periods.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    periods.sort_by(|a, b| a.total_cmp(b));
     periods.dedup_by(|a, b| (*a - *b).abs() / *b < 0.05);
 
     // Lines 6–10: score each candidate with Algorithm 2.
@@ -201,7 +226,9 @@ pub fn calc_period_fft_argmax(smp: &[f64], ts: f64) -> Option<PeriodEstimate> {
     }
     let (freqs, ampls) = crate::signal::fft::periodogram(smp, ts);
     let k = crate::util::stats::argmax(&ampls)?;
-    if ampls[k] <= 0.0 {
+    // NaN-poisoned spectra (a bad NVML reading anywhere in the window)
+    // must degrade to "no detection", not report a garbage period.
+    if ampls[k].is_nan() || ampls[k] <= 0.0 {
         return None;
     }
     Some(PeriodEstimate {

@@ -110,7 +110,15 @@ pub fn sequence_similarity_error(
         }
         let scale = weighted_mean(&scales, &weights).max(1e-12);
         let rel_errs: Vec<f64> = diffs.iter().map(|d| d / scale).collect();
-        Some(weighted_mean(&rel_errs, &weights).min(2.0))
+        let e = weighted_mean(&rel_errs, &weights);
+        // A poisoned pair (non-finite samples in a sub-curve) is excluded
+        // outright. The guard must sit *before* the clamp: `f64::min`
+        // ignores NaN, so `NaN.min(2.0)` would silently count the pair as
+        // worst-case evidence against the period hypothesis.
+        if !e.is_finite() {
+            return None;
+        }
+        Some(e.min(2.0))
     };
 
     // Adjacent pairs (the paper's Algorithm 2) plus lag-2 pairs: a false
@@ -143,7 +151,7 @@ pub fn sequence_similarity_error(
     // Lightly trimmed mean: drop the worst ~12% of pair scores so a single
     // abnormal (eval/checkpoint) iteration does not poison an otherwise
     // clean period hypothesis.
-    errs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    errs.sort_by(|a, b| a.total_cmp(b));
     let keep = ((errs.len() as f64 * 0.88).ceil() as usize).max(1);
     mean(&errs[..keep])
 }

@@ -1,0 +1,569 @@
+//! Streaming detection engine: the online robust period detection
+//! (Algorithm 3) as a long-lived, push-based detector instead of a
+//! function consumers re-run over ever-growing sample `Vec`s.
+//!
+//! The batch wrapper ([`online_detect_with`]) recomputes everything from
+//! scratch on every call: a consumer that wants a fresh verdict per poll
+//! pays O(window) per poll and O(session²) over a session. The detector
+//! owns the whole per-session state instead:
+//!
+//! - a **bounded sample window** of the three `Feature_dect` channels
+//!   (power / SM util / mem util), trimmed behind the paper's advancing
+//!   start line (outdated samples are *dropped*, not just skipped) and
+//!   hard-capped at `max_retain_s` — detector memory is O(1) in session
+//!   length;
+//! - the **evaluation schedule**: Algorithm 3's own contract is "sample
+//!   `d` more seconds, then call again", so [`StreamingDetector::poll`]
+//!   answers from the standing verdict until the requested extension has
+//!   actually arrived, and only then re-evaluates. Consumers stop
+//!   reimplementing deadline bookkeeping (and naive ones stop paying for
+//!   evaluations the algorithm itself declares void);
+//! - **reusable scratch** (FFT buffers, the Algorithm-1 moving-average
+//!   copy) and a **per-sub-window estimate cache** keyed by
+//!   `(istart, len)`, so repeated window evaluations inside one tick are
+//!   answered once.
+//!
+//! Every evaluation runs the exact [`online_detect_loop`] the batch
+//! wrapper runs, over the retained window — the results are
+//! bit-identical to `online_detect_with` on the same samples, which
+//! `rust/tests/detection_streaming.rs` enforces across all 71 apps.
+
+use crate::signal::fft::{periodogram_with, FftScratch};
+use crate::signal::online::{composite_feature_into, online_detect_loop, OnlineDetection};
+use crate::signal::period::{calc_period_scratch, PeriodCfg, PeriodEstimate, PeriodScratch};
+use std::collections::HashMap;
+
+/// Per-sub-window Algorithm-1 results, keyed by `(istart, len)` relative
+/// to the current feature window.
+type EstimateCache = HashMap<(usize, usize), Option<PeriodEstimate>>;
+
+/// Cadence and retention knobs of the streaming engine. The defaults
+/// mirror the GPOEO controller's sampling schedule (§4.3.1).
+#[derive(Debug, Clone)]
+pub struct StreamCfg {
+    /// The first evaluation is due after this much signal (SmpDur_init).
+    pub initial_window_s: f64,
+    /// Clamp on the extension Algorithm 3 may request between
+    /// evaluations.
+    pub min_ext_s: f64,
+    pub max_ext_s: f64,
+    /// Extension used when an evaluation yields no detection at all
+    /// (window too short / no spectral candidates).
+    pub none_ext_s: f64,
+    /// Advancing start line (§4.1.3): with `Some(m)`, samples older than
+    /// `m × (2 + c_eval·step) × T̂` behind the window end are dropped
+    /// before the next evaluation — the paper's progressive exclusion of
+    /// outdated samples, made literal. `None` retains the whole window
+    /// (up to `max_retain_s`), which is bit-compatible with the historic
+    /// grow-only controller behavior.
+    pub retain_horizon_mult: Option<f64>,
+    /// Hard cap on retained signal, seconds — bounds detector memory
+    /// regardless of session length or estimate quality.
+    pub max_retain_s: f64,
+}
+
+impl Default for StreamCfg {
+    fn default() -> Self {
+        StreamCfg {
+            initial_window_s: 6.0,
+            min_ext_s: 0.5,
+            max_ext_s: 12.0,
+            none_ext_s: 3.0,
+            retain_horizon_mult: None,
+            max_retain_s: 60.0,
+        }
+    }
+}
+
+/// One evaluation the detector actually performed.
+#[derive(Debug, Clone, Copy)]
+pub struct StreamVerdict {
+    /// The Algorithm-3 outcome over the retained window (`None`: the
+    /// window was unusable — too short or no spectral candidates).
+    pub detection: Option<OnlineDetection>,
+    /// Retained-window duration at evaluation time, seconds.
+    pub window_s: f64,
+    /// 1-based evaluation ordinal since construction/reset.
+    pub round: usize,
+}
+
+/// Bit-level equality of two detection outcomes (NaN-safe: raw f64 bit
+/// patterns) — the contract the property suite enforces between the
+/// streaming and batch paths.
+pub fn detections_bit_equal(a: Option<OnlineDetection>, b: Option<OnlineDetection>) -> bool {
+    match (a, b) {
+        (None, None) => true,
+        (Some(x), Some(y)) => {
+            x.estimate.t_iter.to_bits() == y.estimate.t_iter.to_bits()
+                && x.estimate.err.to_bits() == y.estimate.err.to_bits()
+                && match (x.next_sampling_s, y.next_sampling_s) {
+                    (None, None) => true,
+                    (Some(p), Some(q)) => p.to_bits() == q.to_bits(),
+                    _ => false,
+                }
+        }
+        _ => false,
+    }
+}
+
+/// The streaming Algorithm-3 engine. See the module docs for the
+/// contract; see [`StreamCfg`] for the knobs.
+pub struct StreamingDetector {
+    ts: f64,
+    cfg: PeriodCfg,
+    stream: StreamCfg,
+    // Retained Feature_dect channels (the window the next evaluation
+    // sees). `origin` is the absolute index of element 0 in the full
+    // pushed stream.
+    power: Vec<f64>,
+    util_sm: Vec<f64>,
+    util_mem: Vec<f64>,
+    origin: usize,
+    /// Total samples pushed since construction/reset.
+    pushed: usize,
+    // Composite blend of the retained window, rebuilt lazily: the
+    // variance normalization is window-global, so any push or trim
+    // invalidates it (and the estimate cache with it).
+    feat: Vec<f64>,
+    feature_dirty: bool,
+    scratch: PeriodScratch,
+    fft: FftScratch,
+    cache: EstimateCache,
+    cache_hits: u64,
+    cache_misses: u64,
+    rounds: usize,
+    last: Option<StreamVerdict>,
+    /// Absolute pushed-sample count at which the next evaluation is due;
+    /// `usize::MAX` once the period is stable.
+    next_eval_at: usize,
+    max_retained: usize,
+}
+
+impl StreamingDetector {
+    pub fn new(ts: f64, cfg: PeriodCfg, stream: StreamCfg) -> StreamingDetector {
+        let first_due = ((stream.initial_window_s / ts).ceil() as usize).max(1);
+        let max_retained = ((stream.max_retain_s / ts).ceil() as usize).max(32);
+        StreamingDetector {
+            ts,
+            cfg,
+            stream,
+            power: Vec::new(),
+            util_sm: Vec::new(),
+            util_mem: Vec::new(),
+            origin: 0,
+            pushed: 0,
+            feat: Vec::new(),
+            feature_dirty: true,
+            scratch: PeriodScratch::default(),
+            fft: FftScratch::default(),
+            cache: EstimateCache::new(),
+            cache_hits: 0,
+            cache_misses: 0,
+            rounds: 0,
+            last: None,
+            next_eval_at: first_due,
+            max_retained,
+        }
+    }
+
+    /// Push one NVML sampling tick (the three Feature_dect channels).
+    pub fn push(&mut self, power_w: f64, util_sm: f64, util_mem: f64) {
+        self.power.push(power_w);
+        self.util_sm.push(util_sm);
+        self.util_mem.push(util_mem);
+        self.pushed += 1;
+        self.feature_dirty = true;
+        if !self.cache.is_empty() {
+            // The composite blend renormalizes over the new window: every
+            // cached sub-window estimate is stale.
+            self.cache.clear();
+        }
+        if self.power.len() > self.max_retained {
+            let excess = self.power.len() - self.max_retained;
+            self.drop_front(excess);
+        }
+    }
+
+    /// Gated evaluation with the native FFT front-end: answers `None`
+    /// (keep sampling — the standing verdict is [`Self::last`]) until the
+    /// extension Algorithm 3 requested has arrived, then re-evaluates.
+    pub fn poll(&mut self) -> Option<StreamVerdict> {
+        if self.pushed < self.next_eval_at {
+            return None;
+        }
+        Some(self.evaluate())
+    }
+
+    /// [`Self::poll`] with a pluggable spectral front-end.
+    pub fn poll_with(
+        &mut self,
+        spectrum: &mut dyn FnMut(&[f64], f64) -> (Vec<f64>, Vec<f64>),
+    ) -> Option<StreamVerdict> {
+        if self.pushed < self.next_eval_at {
+            return None;
+        }
+        Some(self.evaluate_with(spectrum))
+    }
+
+    /// Unconditional evaluation with the native FFT front-end.
+    pub fn evaluate(&mut self) -> StreamVerdict {
+        self.apply_start_line();
+        self.ensure_feature();
+        let fft = &mut self.fft;
+        let mut spectrum =
+            |s: &[f64], t: f64| -> (Vec<f64>, Vec<f64>) { periodogram_with(s, t, &mut *fft) };
+        let det = Self::detect(
+            &self.feat,
+            self.ts,
+            &self.cfg,
+            &mut self.scratch,
+            &mut self.cache,
+            &mut self.cache_hits,
+            &mut self.cache_misses,
+            &mut spectrum,
+        );
+        self.finish_evaluation(det)
+    }
+
+    /// Unconditional evaluation with a pluggable spectral front-end.
+    /// Callers must inject the same front-end for the detector's whole
+    /// lifetime — the estimate cache is keyed by window, not by spectrum.
+    pub fn evaluate_with(
+        &mut self,
+        spectrum: &mut dyn FnMut(&[f64], f64) -> (Vec<f64>, Vec<f64>),
+    ) -> StreamVerdict {
+        self.apply_start_line();
+        self.ensure_feature();
+        let det = Self::detect(
+            &self.feat,
+            self.ts,
+            &self.cfg,
+            &mut self.scratch,
+            &mut self.cache,
+            &mut self.cache_hits,
+            &mut self.cache_misses,
+            spectrum,
+        );
+        self.finish_evaluation(det)
+    }
+
+    /// Forget everything and restart the detection phase (workload
+    /// change). Cache hit/miss counters are cumulative across resets.
+    pub fn reset(&mut self) {
+        self.power.clear();
+        self.util_sm.clear();
+        self.util_mem.clear();
+        self.feat.clear();
+        self.cache.clear();
+        self.origin = 0;
+        self.pushed = 0;
+        self.rounds = 0;
+        self.feature_dirty = true;
+        self.last = None;
+        self.next_eval_at = ((self.stream.initial_window_s / self.ts).ceil() as usize).max(1);
+    }
+
+    // ------------------------------------------------------ accessors --
+
+    /// The last verdict, whether or not this poll re-evaluated.
+    pub fn last(&self) -> Option<StreamVerdict> {
+        self.last
+    }
+
+    /// Total signal pushed since construction/reset, seconds.
+    pub fn pushed_s(&self) -> f64 {
+        self.pushed as f64 * self.ts
+    }
+
+    /// Retained-window duration, seconds.
+    pub fn retained_s(&self) -> f64 {
+        self.power.len() as f64 * self.ts
+    }
+
+    /// Retained sample count (per channel).
+    pub fn retained_len(&self) -> usize {
+        self.power.len()
+    }
+
+    /// Absolute index of the first retained sample (> 0 once the start
+    /// line has advanced past dropped history).
+    pub fn origin(&self) -> usize {
+        self.origin
+    }
+
+    /// Evaluations performed since construction/reset.
+    pub fn rounds(&self) -> usize {
+        self.rounds
+    }
+
+    /// Cumulative sub-window estimate cache (hits, misses).
+    pub fn cache_stats(&self) -> (u64, u64) {
+        (self.cache_hits, self.cache_misses)
+    }
+
+    /// The retained raw channels `(power, util_sm, util_mem)` — what the
+    /// next evaluation will blend and detect over. The property suite
+    /// feeds these to the batch wrapper to prove bit-identity.
+    pub fn channels(&self) -> (&[f64], &[f64], &[f64]) {
+        (&self.power, &self.util_sm, &self.util_mem)
+    }
+
+    // ------------------------------------------------------- internals --
+
+    /// Drop retained history behind the advancing start line: no future
+    /// rolling window of Algorithm 3 reaches further back than
+    /// `(2 + c_eval·step) × T̂` behind the window end, so (with margin
+    /// `retain_horizon_mult`) older samples can never influence a verdict
+    /// again. Runs *before* an evaluation so the verdict and the retained
+    /// window always correspond.
+    fn apply_start_line(&mut self) {
+        let Some(mult) = self.stream.retain_horizon_mult else {
+            return;
+        };
+        let Some(StreamVerdict {
+            detection: Some(d), ..
+        }) = self.last
+        else {
+            return;
+        };
+        let horizon_s = ((2.0 + self.cfg.c_eval * self.cfg.step) * d.estimate.t_iter * mult)
+            .max(self.stream.initial_window_s);
+        let keep = ((horizon_s / self.ts).ceil() as usize).max(32);
+        if self.power.len() > keep {
+            let excess = self.power.len() - keep;
+            self.drop_front(excess);
+        }
+    }
+
+    fn drop_front(&mut self, k: usize) {
+        let k = k.min(self.power.len());
+        if k == 0 {
+            return;
+        }
+        self.power.drain(..k);
+        self.util_sm.drain(..k);
+        self.util_mem.drain(..k);
+        self.origin += k;
+        self.feature_dirty = true;
+        self.cache.clear();
+    }
+
+    /// Rebuild the composite `Feature_dect` blend of the retained window
+    /// into the reusable buffer (the one copy of the blend arithmetic
+    /// lives in [`composite_feature_into`]).
+    fn ensure_feature(&mut self) {
+        if !self.feature_dirty {
+            return;
+        }
+        composite_feature_into(&mut self.feat, &self.power, &self.util_sm, &self.util_mem);
+        self.feature_dirty = false;
+    }
+
+    /// One Algorithm-3 evaluation over the blended window: the shared
+    /// [`online_detect_loop`] with a memoizing per-sub-window estimator.
+    #[allow(clippy::too_many_arguments)]
+    fn detect(
+        feat: &[f64],
+        ts: f64,
+        cfg: &PeriodCfg,
+        scratch: &mut PeriodScratch,
+        cache: &mut EstimateCache,
+        hits: &mut u64,
+        misses: &mut u64,
+        spectrum: &mut dyn FnMut(&[f64], f64) -> (Vec<f64>, Vec<f64>),
+    ) -> Option<OnlineDetection> {
+        let n = feat.len();
+        let mut eval = |istart: usize| -> Option<PeriodEstimate> {
+            let key = (istart, n - istart);
+            if let Some(&est) = cache.get(&key) {
+                *hits += 1;
+                return est;
+            }
+            *misses += 1;
+            let est = calc_period_scratch(&feat[istart..], ts, cfg, &mut *spectrum, &mut *scratch);
+            cache.insert(key, est);
+            est
+        };
+        online_detect_loop(n, ts, cfg, &mut eval)
+    }
+
+    /// Record the verdict and schedule the next evaluation per the
+    /// Algorithm-3 contract.
+    fn finish_evaluation(&mut self, det: Option<OnlineDetection>) -> StreamVerdict {
+        self.rounds += 1;
+        let verdict = StreamVerdict {
+            detection: det,
+            window_s: self.retained_s(),
+            round: self.rounds,
+        };
+        self.next_eval_at = match det.and_then(|d| d.next_sampling_s) {
+            Some(ext) => {
+                let ext = ext.clamp(self.stream.min_ext_s, self.stream.max_ext_s);
+                self.pushed + ((ext / self.ts).ceil() as usize).max(1)
+            }
+            None => match det {
+                // Stable: Algorithm 3 is done; the consumer moves on (or
+                // resets on a workload change).
+                Some(_) => usize::MAX,
+                // No detection at all: extend by the fallback window.
+                None => {
+                    self.pushed + ((self.stream.none_ext_s / self.ts).ceil() as usize).max(1)
+                }
+            },
+        };
+        self.last = Some(verdict);
+        verdict
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::signal::{composite_feature, online_detect};
+
+    /// Phase-structured waveform matching the online.rs test harness.
+    fn signal(period_s: f64, ts: f64, dur_s: f64) -> Vec<f64> {
+        let n = (dur_s / ts) as usize;
+        (0..n)
+            .map(|i| {
+                let t = i as f64 * ts;
+                let ph = (t / period_s).fract();
+                let base = if ph < 0.10 {
+                    0.4
+                } else if ph < 0.50 {
+                    0.95
+                } else if ph < 0.85 {
+                    1.05
+                } else {
+                    0.6
+                };
+                let h = (i as u64).wrapping_mul(0x9e3779b97f4a7c15);
+                let noise = ((h >> 11) as f64 / (1u64 << 53) as f64) - 0.5;
+                base + 0.04 * noise
+            })
+            .collect()
+    }
+
+    fn push_as_channels(det: &mut StreamingDetector, sig: &[f64]) {
+        for &x in sig {
+            det.push(200.0 + 40.0 * x, 0.6 + 0.2 * x, 0.4 + 0.1 * x);
+        }
+    }
+
+    #[test]
+    fn evaluate_matches_batch_wrapper_bitwise() {
+        let ts = 0.025;
+        let sig = signal(1.7, ts, 18.0);
+        let mut det = StreamingDetector::new(ts, PeriodCfg::default(), StreamCfg::default());
+        push_as_channels(&mut det, &sig);
+        let (p, us, um) = det.channels();
+        let feat = composite_feature(p, us, um);
+        let batch = online_detect(&feat, ts, &PeriodCfg::default());
+        let v = det.evaluate();
+        assert!(
+            detections_bit_equal(v.detection, batch),
+            "streaming {v:?} vs batch {batch:?}"
+        );
+        assert!(v.detection.is_some());
+    }
+
+    #[test]
+    fn poll_gates_on_the_extension_schedule() {
+        let ts = 0.025;
+        let sig = signal(1.7, ts, 24.0);
+        let mut det = StreamingDetector::new(ts, PeriodCfg::default(), StreamCfg::default());
+        let mut evals = Vec::new();
+        for (i, &x) in sig.iter().enumerate() {
+            det.push(200.0 + 40.0 * x, 0.6 + 0.2 * x, 0.4 + 0.1 * x);
+            if let Some(v) = det.poll() {
+                evals.push((i, v));
+            }
+        }
+        // First evaluation exactly when the initial window fills (same
+        // ceil derivation as the detector, so FP rounding cancels).
+        let first_due = (6.0 / ts).ceil() as usize;
+        assert_eq!(evals.first().map(|(i, _)| i + 1), Some(first_due));
+        // The contract gates evaluations to a handful per session — a
+        // poll-per-tick consumer must not trigger one per tick.
+        assert!(
+            evals.len() < sig.len() / 20,
+            "{} evaluations for {} ticks",
+            evals.len(),
+            sig.len()
+        );
+        // A stable signal converges, after which polls stop evaluating.
+        let last = evals.last().unwrap().1;
+        assert!(last.detection.is_some());
+        assert!(last.detection.unwrap().next_sampling_s.is_none());
+        assert_eq!(det.last().unwrap().round, evals.len());
+    }
+
+    #[test]
+    fn repeated_evaluate_is_answered_from_the_cache() {
+        let ts = 0.025;
+        let sig = signal(1.3, ts, 14.0);
+        let mut det = StreamingDetector::new(ts, PeriodCfg::default(), StreamCfg::default());
+        push_as_channels(&mut det, &sig);
+        let v1 = det.evaluate();
+        let (_, misses1) = det.cache_stats();
+        let v2 = det.evaluate();
+        let (hits2, misses2) = det.cache_stats();
+        assert!(detections_bit_equal(v1.detection, v2.detection));
+        assert_eq!(
+            misses1, misses2,
+            "no new samples: second evaluation must be all cache hits"
+        );
+        assert!(hits2 > 0);
+    }
+
+    #[test]
+    fn retention_is_bounded() {
+        let ts = 0.025;
+        let cfg = StreamCfg {
+            max_retain_s: 2.0,
+            ..StreamCfg::default()
+        };
+        let mut det = StreamingDetector::new(ts, PeriodCfg::default(), cfg);
+        let sig = signal(0.9, ts, 100.0);
+        push_as_channels(&mut det, &sig);
+        assert!(det.retained_len() <= (2.0 / ts).ceil() as usize);
+        assert!(det.origin() > 0);
+        assert!((det.pushed_s() - 100.0).abs() < 0.1);
+    }
+
+    #[test]
+    fn start_line_trims_and_stays_bitwise_consistent() {
+        let ts = 0.025;
+        let cfg = StreamCfg {
+            retain_horizon_mult: Some(1.0),
+            ..StreamCfg::default()
+        };
+        let mut det = StreamingDetector::new(ts, PeriodCfg::default(), cfg);
+        push_as_channels(&mut det, &signal(1.7, ts, 18.0));
+        let _ = det.evaluate();
+        push_as_channels(&mut det, &signal(1.7, ts, 2.0));
+        let v = det.evaluate();
+        assert!(
+            det.origin() > 0,
+            "advancing start line must have dropped stale history"
+        );
+        // The verdict corresponds to the post-trim retained window.
+        let (p, us, um) = det.channels();
+        let feat = composite_feature(p, us, um);
+        let batch = online_detect(&feat, ts, &PeriodCfg::default());
+        assert!(detections_bit_equal(v.detection, batch));
+    }
+
+    #[test]
+    fn reset_restarts_the_phase() {
+        let ts = 0.025;
+        let mut det = StreamingDetector::new(ts, PeriodCfg::default(), StreamCfg::default());
+        push_as_channels(&mut det, &signal(1.1, ts, 8.0));
+        let _ = det.evaluate();
+        det.reset();
+        assert_eq!(det.retained_len(), 0);
+        assert_eq!(det.rounds(), 0);
+        assert!(det.last().is_none());
+        assert!(det.poll().is_none(), "fresh phase: nothing due yet");
+    }
+}

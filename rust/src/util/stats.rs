@@ -35,7 +35,7 @@ pub fn percentile(xs: &[f64], p: f64) -> f64 {
         return 0.0;
     }
     let mut v = xs.to_vec();
-    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    v.sort_by(|a, b| a.total_cmp(b));
     let rank = (p / 100.0) * (v.len() - 1) as f64;
     let lo = rank.floor() as usize;
     let hi = rank.ceil() as usize;
@@ -75,18 +75,22 @@ pub fn ape(pred: f64, truth: f64) -> f64 {
 }
 
 /// Index of the minimum value (first on ties); None for empty input.
+/// Total order, so a NaN entry (sorted past +inf) can never panic a
+/// worker thread — it simply never wins.
 pub fn argmin(xs: &[f64]) -> Option<usize> {
     xs.iter()
         .enumerate()
-        .min_by(|(_, a), (_, b)| a.partial_cmp(b).unwrap())
+        .min_by(|(_, a), (_, b)| a.total_cmp(b))
         .map(|(i, _)| i)
 }
 
 /// Index of the maximum value (first on ties); None for empty input.
+/// Total order (see [`argmin`]); note a NaN entry *does* win a max —
+/// callers that can see NaN must check the winner.
 pub fn argmax(xs: &[f64]) -> Option<usize> {
     xs.iter()
         .enumerate()
-        .max_by(|(_, a), (_, b)| a.partial_cmp(b).unwrap())
+        .max_by(|(_, a), (_, b)| a.total_cmp(b))
         .map(|(i, _)| i)
 }
 

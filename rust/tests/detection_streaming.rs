@@ -1,0 +1,127 @@
+//! Property: the streaming detection engine and the batch
+//! `online_detect` wrapper are *bit-identical* — for every app in all
+//! three benchmark suites (the aperiodic ones included), every
+//! evaluation the [`StreamingDetector`] performs over a session must
+//! equal, to the last mantissa bit, a fresh batch detection over the
+//! detector's retained window. This is what licenses the streaming
+//! engine's caches, scratch reuse and retention trimming: none of them
+//! may ever change a verdict.
+
+use gpoeo::experiments::helpers::capture_channels;
+use gpoeo::signal::{
+    composite_feature, detections_bit_equal, online_detect, PeriodCfg, StreamCfg,
+    StreamingDetector,
+};
+use gpoeo::sim::{make_suite, AppParams, Spec};
+use std::sync::Arc;
+
+/// Drive one streaming session over pre-captured channels, checking
+/// every evaluation against an independent batch recomputation.
+/// Returns the number of evaluations performed.
+fn check_session(
+    app_name: &str,
+    ts: f64,
+    channels: &(Vec<f64>, Vec<f64>, Vec<f64>),
+    stream_cfg: StreamCfg,
+    poll_stride: usize,
+) -> usize {
+    let cfg = PeriodCfg::default();
+    let trim = stream_cfg.retain_horizon_mult;
+    let mut det = StreamingDetector::new(ts, cfg.clone(), stream_cfg);
+    let (p, us, um) = channels;
+    let mut evals = 0usize;
+    for i in 0..p.len() {
+        det.push(p[i], us[i], um[i]);
+        if (i + 1) % poll_stride != 0 {
+            continue;
+        }
+        let Some(v) = det.poll() else { continue };
+        evals += 1;
+        // Independent batch path over the samples the detector retains:
+        // fresh blend, fresh scratch, no cache.
+        let (rp, rus, rum) = det.channels();
+        let feat = composite_feature(rp, rus, rum);
+        let batch = online_detect(&feat, ts, &cfg);
+        assert!(
+            detections_bit_equal(v.detection, batch),
+            "{app_name} (trim {trim:?}, tick {i}): streaming {:?} != batch {:?}",
+            v.detection,
+            batch
+        );
+    }
+    evals
+}
+
+#[test]
+fn streaming_matches_batch_bitwise_on_all_apps() {
+    let spec = Arc::new(Spec::load_default().unwrap());
+    let ts = 0.025;
+    let mut apps: Vec<AppParams> = Vec::new();
+    for suite in ["aibench", "classical", "gnns"] {
+        apps.extend(make_suite(&spec, suite).unwrap());
+    }
+    assert!(apps.len() >= 71, "expected the full evaluation set");
+
+    let mut total_evals = 0usize;
+    for (k, app) in apps.iter().enumerate() {
+        let (sm, mem, _) = app.default_op(&spec);
+        // Short uniform sessions keep the full-suite sweep affordable in
+        // debug builds; a deeper pass below covers long sessions.
+        let channels = {
+            let (p, us, um, _) = capture_channels(&spec, app, sm, mem, ts, 8.5);
+            (p, us, um)
+        };
+        // Alternate retention modes across the suite so both the
+        // grow-only and the advancing-start-line paths see every app
+        // class without doubling the runtime.
+        let trim = if k % 2 == 0 { None } else { Some(2.0) };
+        total_evals += check_session(
+            &app.name,
+            ts,
+            &channels,
+            StreamCfg {
+                retain_horizon_mult: trim,
+                ..StreamCfg::default()
+            },
+            10,
+        );
+    }
+    assert!(
+        total_evals >= apps.len(),
+        "sessions must actually evaluate ({total_evals} evaluations)"
+    );
+}
+
+#[test]
+fn streaming_matches_batch_on_long_sessions() {
+    // Deep sessions (many extension rounds, start-line trimming active,
+    // tight retention) on one representative per behavioral class,
+    // including the aperiodic apps that never stabilize.
+    let spec = Arc::new(Spec::load_default().unwrap());
+    let ts = 0.025;
+    // One periodic, one aperiodic, one micro-period trap — kept small so
+    // the debug-build suite stays fast; the full-suite test above covers
+    // breadth.
+    for name in ["AI_I2T", "TSVM", "TSP_GatedGCN"] {
+        let app = gpoeo::sim::find_app(&spec, name).unwrap();
+        let (sm, mem, _) = app.default_op(&spec);
+        let channels = {
+            let (p, us, um, _) = capture_channels(&spec, &app, sm, mem, ts, 20.0);
+            (p, us, um)
+        };
+        for trim in [None, Some(1.0)] {
+            let evals = check_session(
+                name,
+                ts,
+                &channels,
+                StreamCfg {
+                    retain_horizon_mult: trim,
+                    max_retain_s: 15.0,
+                    ..StreamCfg::default()
+                },
+                4,
+            );
+            assert!(evals >= 1, "{name}: long session never evaluated");
+        }
+    }
+}
