@@ -130,7 +130,7 @@ fn main() {
     // --- model inference: native vs AOT/PJRT ----------------------------
     if let Ok(native) = NativeModels::load_default() {
         let native = Predictor::Native(native);
-        bench("predict_sm: native GBT (99 gears x 2 models)", 1000, || {
+        bench("predict_sm: native arena (99 gears x 2 models)", 1000, || {
             let _ = native.predict_sm(&spec, &app.features).unwrap();
         });
         if let Some(rt) = gpoeo::runtime::Runtime::try_default() {

@@ -1,0 +1,88 @@
+//! Prediction-path benchmarks (`cargo bench --bench bench_predict`):
+//! arena vs legacy native GBT inference, single-shot and fleet-shaped.
+//! Runs on the trained artifacts when present, else on the
+//! deterministic synthetic bundle (same tree shape), so the relative
+//! numbers are always available. Same hand-rolled harness as
+//! bench_main (the offline crate set has no criterion).
+
+use gpoeo::model::{NativeModels, Predictor};
+use gpoeo::sim::{make_suite, Spec};
+use gpoeo::util::rng::Pcg64;
+use std::sync::Arc;
+use std::time::Instant;
+
+fn bench(name: &str, budget_ms: u64, mut f: impl FnMut()) {
+    for _ in 0..3 {
+        f();
+    }
+    let budget = std::time::Duration::from_millis(budget_ms);
+    let start = Instant::now();
+    let mut iters = 0u64;
+    while start.elapsed() < budget {
+        f();
+        iters += 1;
+    }
+    let per = start.elapsed().as_nanos() as f64 / iters as f64;
+    let (val, unit) = if per >= 1e9 {
+        (per / 1e9, "s ")
+    } else if per >= 1e6 {
+        (per / 1e6, "ms")
+    } else if per >= 1e3 {
+        (per / 1e3, "µs")
+    } else {
+        (per, "ns")
+    };
+    println!("{name:<52} {val:>9.2} {unit}/op   ({iters} iters)");
+}
+
+fn main() {
+    let spec = Arc::new(Spec::load_default().unwrap());
+    let (models, backend) = NativeModels::load_default_or_synthetic().unwrap();
+    let predictor = Predictor::Native(models.clone());
+    println!("== gpoeo predict bench ({backend}) ==");
+
+    // One app's measured features — the single-shot shape every
+    // iteration-shift pays (§4.3.3: predict all gears, then search).
+    let apps = make_suite(&spec, "aibench").unwrap();
+    let app = &apps[0];
+    let mut rng = Pcg64::new(app.trace_seed ^ 0x00fe_a7, 0x5eed);
+    let feats = app.measured_features(&spec, &mut rng);
+
+    bench("predict_sm: arena (99 gears x 2 models)", 1200, || {
+        std::hint::black_box(predictor.predict_sm(&spec, &feats).unwrap());
+    });
+    bench("predict_sm: legacy walk (99 gears x 2 models)", 1200, || {
+        std::hint::black_box(models.legacy_predict_sm(&spec, &feats));
+    });
+    bench("predict_mem: arena (5 gears x 2 models)", 600, || {
+        std::hint::black_box(predictor.predict_mem(&spec, &feats).unwrap());
+    });
+    bench("predict_mem: legacy walk (5 gears x 2 models)", 600, || {
+        std::hint::black_box(models.legacy_predict_mem(&spec, &feats));
+    });
+
+    // Fleet-shaped: one full prediction step (SM + mem) for all 71
+    // evaluation apps back to back — the oracle/sweep/fleet pattern
+    // where per-prediction cost multiplies by apps × policies.
+    let all = gpoeo::experiments::helpers::evaluation_apps(&spec).unwrap();
+    let featsets: Vec<Vec<f64>> = all
+        .iter()
+        .map(|a| {
+            let mut rng = Pcg64::new(a.trace_seed ^ 0x00fe_a7, 0x5eed);
+            a.measured_features(&spec, &mut rng)
+        })
+        .collect();
+    bench("fleet: 71 apps x (sm+mem), arena", 3000, || {
+        for f in &featsets {
+            std::hint::black_box(predictor.predict_sm(&spec, f).unwrap());
+            std::hint::black_box(predictor.predict_mem(&spec, f).unwrap());
+        }
+    });
+    bench("fleet: 71 apps x (sm+mem), legacy walk", 3000, || {
+        for f in &featsets {
+            std::hint::black_box(models.legacy_predict_sm(&spec, f));
+            std::hint::black_box(models.legacy_predict_mem(&spec, f));
+        }
+    });
+    println!("== done ==");
+}

@@ -50,11 +50,16 @@ SUBCOMMANDS:
   experiment <id>              regenerate a paper table/figure
                                (fig1 fig2 fig3 fig5 fig6 fig7 fig8 fig9
                                 fig10 fig11 fig12 fig13 table3 fig14
-                                fig15 headline policies detect-bench |
-                                all); detect-bench appends streaming-vs-
-                                batch detection cost to
-                                BENCH_detection.json (--poll-s F
-                                --min-speedup X fails below X×)
+                                fig15 headline policies detect-bench
+                                predict-bench | all); detect-bench
+                                appends streaming-vs-batch detection
+                                cost to BENCH_detection.json (--poll-s F
+                                --min-speedup X fails below X×);
+                                predict-bench appends arena-vs-legacy
+                                all-gears prediction cost to
+                                BENCH_predict.json (--reps N
+                                --min-speedup X, fails on any
+                                arena↔legacy divergence)
   daemon [--socket PATH]       Begin/End API server (micro-intrusive
                                mode; --workers N fleet threads;
                                per-connection POLICY <name> selection)

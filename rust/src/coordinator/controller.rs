@@ -274,8 +274,8 @@ impl Gpoeo {
             (gpu.sm_gear(), gpu.mem_gear())
         } else {
             (
-                pred_sm.best(self.cfg.objective),
-                pred_mem.best(self.cfg.objective),
+                pred_sm.best(self.cfg.objective)?,
+                pred_mem.best(self.cfg.objective)?,
             )
         };
         self.stats.predicted_sm_gear = g_sm_pred;

@@ -5,12 +5,13 @@
 
 use crate::device::sim_device;
 use crate::experiments::helpers::{
-    capture_channels, detection_errors, detection_study_apps, frac_within, sweep_gears,
+    capture_channels, detection_errors, detection_study_apps, evaluation_apps, frac_within,
+    sweep_gears,
 };
 use crate::signal::{
     composite_feature, online_detect, OnlineDetection, PeriodCfg, StreamCfg, StreamingDetector,
 };
-use crate::sim::{find_app, make_suite, AppParams, Spec};
+use crate::sim::{find_app, Spec};
 use crate::util::cli::Args;
 use crate::util::json::Json;
 use crate::util::stats::mean;
@@ -201,10 +202,7 @@ pub fn detect_bench(spec: &Arc<Spec>, args: &Args, quick: bool) -> anyhow::Resul
     let poll_stride = ((poll_s / ts).round() as usize).max(1);
     let cfg = PeriodCfg::default();
 
-    let mut apps: Vec<AppParams> = Vec::new();
-    for suite in ["aibench", "classical", "gnns"] {
-        apps.extend(make_suite(spec, suite)?);
-    }
+    let apps = evaluation_apps(spec)?;
 
     let mut rows = Vec::new();
     for app in &apps {

@@ -102,6 +102,17 @@ pub fn compare_policies(
     (savings(&base, &rg), savings(&base, &ro), g.stats.clone())
 }
 
+/// The paper's 71 evaluation apps (AIBench 14 + classical 2 + gnns 55)
+/// — the suite every cross-app study (policies, detect-bench,
+/// predict-bench, the bit-identity tests) iterates.
+pub fn evaluation_apps(spec: &Spec) -> anyhow::Result<Vec<AppParams>> {
+    let mut apps = Vec::new();
+    for suite in ["aibench", "classical", "gnns"] {
+        apps.extend(crate::sim::make_suite(spec, suite)?);
+    }
+    Ok(apps)
+}
+
 /// The 34 periodic apps used by the paper's period-detection study
 /// (Fig. 5): all periodic AIBench apps plus periodic GNN apps, trimmed
 /// to 34 in suite order.

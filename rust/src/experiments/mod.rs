@@ -22,6 +22,7 @@ use std::sync::Arc;
 pub const EXPERIMENTS: &[&str] = &[
     "fig1", "fig2", "fig3", "fig5", "fig6", "fig7", "fig8", "fig9", "fig10", "fig11", "fig12",
     "fig13", "table3", "fig14", "fig15", "headline", "ablation", "policies", "detect-bench",
+    "predict-bench",
 ];
 
 fn emit(t: &Table, args: &Args) -> anyhow::Result<()> {
@@ -140,6 +141,26 @@ pub fn cli_experiment(args: &Args) -> anyhow::Result<()> {
                 if min > 0.0 && r.speedup < min {
                     anyhow::bail!(
                         "detect-bench: streaming speedup {:.2}x below the required {min}x",
+                        r.speedup
+                    );
+                }
+            }
+            "predict-bench" => {
+                // Model-shape-only: falls back to a synthetic bundle
+                // when the trained artifacts are absent, so it can gate
+                // CI like detect-bench does.
+                let r = prediction::predict_bench(&spec, args, quick)?;
+                emit(&r.table, args)?;
+                r.print_summary();
+                anyhow::ensure!(
+                    r.max_abs_diff == 0.0,
+                    "predict-bench: arena and legacy predictions diverge (max |diff| = {:e})",
+                    r.max_abs_diff
+                );
+                let min = args.opt_f64("min-speedup", 0.0)?;
+                if min > 0.0 && r.speedup < min {
+                    anyhow::bail!(
+                        "predict-bench: arena speedup {:.2}x below the required {min}x",
                         r.speedup
                     );
                 }

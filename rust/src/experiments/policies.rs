@@ -12,7 +12,8 @@
 
 use crate::coordinator::{default_iters, Fleet, SweepJob};
 use crate::policy::{PolicyConfig, PolicyRegistry, PolicySpec};
-use crate::sim::{make_suite, AppParams, Spec};
+use crate::experiments::helpers::evaluation_apps;
+use crate::sim::Spec;
 use crate::util::cli::Args;
 use crate::util::json::Json;
 use crate::util::stats::mean;
@@ -55,15 +56,6 @@ impl HeadToHead {
         }
         println!("paper reference: GPOEO 16.2% saving / 5.1% slowdown over the 71 workloads");
     }
-}
-
-/// The paper's 71 evaluation apps (AIBench 14 + classical 2 + gnns 55).
-fn evaluation_apps(spec: &Arc<Spec>) -> anyhow::Result<Vec<AppParams>> {
-    let mut apps = Vec::new();
-    for suite in ["aibench", "classical", "gnns"] {
-        apps.extend(make_suite(spec, suite)?);
-    }
-    Ok(apps)
 }
 
 pub fn head_to_head(spec: &Arc<Spec>, args: &Args, quick: bool) -> anyhow::Result<HeadToHead> {

@@ -1,10 +1,14 @@
 //! Prediction-accuracy experiments (Figs. 9–12): energy/time prediction
 //! errors of the four GBT models on the 55 benchmarking-gnns apps, with
 //! features measured online (one noisy counter period), grouped by clock
-//! range (9/11) and by dataset (10/12).
+//! range (9/11) and by dataset (10/12) — plus the post-paper
+//! `predict-bench` (arena vs legacy all-gears prediction cost over the
+//! 71 evaluation apps, appended to `BENCH_predict.json`).
 
-use crate::model::Predictor;
+use crate::model::{NativeModels, Predictor};
 use crate::sim::{make_suite, AppParams, Spec};
+use crate::util::cli::Args;
+use crate::util::json::Json;
 use crate::util::rng::Pcg64;
 use crate::util::stats::{mean, percentile};
 use crate::util::table::{s, Cell, Table};
@@ -172,6 +176,228 @@ impl PredictionReport {
             self.mem_mean_time * 100.0
         );
     }
+}
+
+// ---------------------------------------------------------------------
+// predict-bench: the arena-vs-legacy prediction cost study.
+// ---------------------------------------------------------------------
+
+/// Per-app outcome of one predict-bench pairing.
+pub struct PredictBenchRow {
+    pub app: String,
+    pub arena_wall_s: f64,
+    pub legacy_wall_s: f64,
+    /// Max |arena − legacy| across both stages and both outputs; the
+    /// bit-identity contract makes this exactly 0.0.
+    pub max_abs_diff: f64,
+}
+
+pub struct PredictBench {
+    pub table: Table,
+    pub rows: Vec<PredictBenchRow>,
+    pub backend: &'static str,
+    pub reps: usize,
+    pub arena_wall_s: f64,
+    pub legacy_wall_s: f64,
+    pub speedup: f64,
+    pub rows_per_s_arena: f64,
+    pub rows_per_s_legacy: f64,
+    pub max_abs_diff: f64,
+}
+
+impl PredictBench {
+    pub fn print_summary(&self) {
+        println!(
+            "all-gears prediction over {} apps ({} reps, {}): legacy {:.3}s  arena {:.3}s  speedup {:.1}x",
+            self.rows.len(),
+            self.reps,
+            self.backend,
+            self.legacy_wall_s,
+            self.arena_wall_s,
+            self.speedup
+        );
+        println!(
+            "gear rows/sec: arena {:.0}  legacy {:.0}  max |arena - legacy| = {:e}",
+            self.rows_per_s_arena, self.rows_per_s_legacy, self.max_abs_diff
+        );
+    }
+}
+
+/// `gpoeo experiment predict-bench [--quick] [--reps N] [--bench PATH]`
+///
+/// For every evaluation app, measures one optimization step's model
+/// cost — `predict_sm` + `predict_mem` over all ~99 SM + 5 memory
+/// gears — on both native inference paths:
+///
+/// - **legacy**: the pre-arena walk (feature vector rebuilt per gear,
+///   `Vec`-of-`Vec` trees chased node by node);
+/// - **arena**: one feature matrix per call, SoA node pools, tree-major
+///   batched traversal ([`crate::model::GbtArena`]).
+///
+/// Outputs are compared (max-abs-diff; 0.0 by the bit-identity
+/// contract) and wall-clock, rows/sec and speedup are tabulated and
+/// appended to `BENCH_predict.json`. Runs on the trained artifacts when
+/// present, else on a deterministic synthetic bundle of the same shape
+/// — so the CI gate (`--min-speedup`) needs no `make artifacts`.
+pub fn predict_bench(spec: &Arc<Spec>, args: &Args, quick: bool) -> anyhow::Result<PredictBench> {
+    let (models, backend) = NativeModels::load_default_or_synthetic()?;
+    if backend == "native-synthetic" {
+        println!("(artifacts missing: benchmarking the synthetic model bundle)");
+    }
+    let predictor = Predictor::Native(models.clone());
+
+    let mut apps = crate::experiments::helpers::evaluation_apps(spec)?;
+    if quick {
+        apps = apps.into_iter().step_by(6).collect();
+    }
+    let reps = args.opt_f64("reps", if quick { 40.0 } else { 150.0 })? as usize;
+    anyhow::ensure!(reps > 0, "--reps must be positive");
+
+    let sm_rows = spec.gears.sm_gears().count();
+    let mem_rows = spec.gears.num_mem_gears();
+    let mut rows = Vec::new();
+    for app in &apps {
+        // Features as measured online (the Figs. 9–12 recipe).
+        let mut rng = Pcg64::new(app.trace_seed ^ 0x00fe_a7, 0x5eed);
+        let feats = app.measured_features(spec, &mut rng);
+
+        // Correctness first: one paired evaluation, max-abs-diff.
+        let sm_a = predictor.predict_sm(spec, &feats)?;
+        let mem_a = predictor.predict_mem(spec, &feats)?;
+        let sm_l = models.legacy_predict_sm(spec, &feats);
+        let mem_l = models.legacy_predict_mem(spec, &feats);
+        // Bit-compare, not float-compare: `f64::max` quietly drops a
+        // NaN difference, which would let a NaN-producing regression
+        // sail through the `max_abs_diff == 0.0` CI gate.
+        let mut diff = 0.0f64;
+        let mut note = |got: f64, want: f64| {
+            if got.to_bits() != want.to_bits() {
+                let d = (got - want).abs();
+                diff = diff.max(if d.is_nan() { f64::INFINITY } else { d });
+            }
+        };
+        for (a, l) in [(&sm_a, &sm_l), (&mem_a, &mem_l)] {
+            for i in 0..a.gears.len() {
+                note(a.energy_ratio[i], l.energy_ratio[i]);
+                note(a.time_ratio[i], l.time_ratio[i]);
+            }
+        }
+
+        // Timed passes (one unmeasured warmup each).
+        let _ = std::hint::black_box(predictor.predict_sm(spec, &feats)?);
+        let t0 = std::time::Instant::now();
+        for _ in 0..reps {
+            std::hint::black_box(predictor.predict_sm(spec, &feats)?);
+            std::hint::black_box(predictor.predict_mem(spec, &feats)?);
+        }
+        let arena_wall_s = t0.elapsed().as_secs_f64();
+
+        let _ = std::hint::black_box(models.legacy_predict_sm(spec, &feats));
+        let t1 = std::time::Instant::now();
+        for _ in 0..reps {
+            std::hint::black_box(models.legacy_predict_sm(spec, &feats));
+            std::hint::black_box(models.legacy_predict_mem(spec, &feats));
+        }
+        let legacy_wall_s = t1.elapsed().as_secs_f64();
+
+        rows.push(PredictBenchRow {
+            app: app.name.clone(),
+            arena_wall_s,
+            legacy_wall_s,
+            max_abs_diff: diff,
+        });
+    }
+
+    let arena_total: f64 = rows.iter().map(|r| r.arena_wall_s).sum();
+    let legacy_total: f64 = rows.iter().map(|r| r.legacy_wall_s).sum();
+    let speedup = legacy_total / arena_total.max(1e-12);
+    let gear_rows = (rows.len() * reps * (sm_rows + mem_rows)) as f64;
+    let max_abs_diff = rows.iter().map(|r| r.max_abs_diff).fold(0.0, f64::max);
+
+    let mut table = Table::new(
+        &format!(
+            "Predict-bench — arena vs legacy all-gears prediction, {} apps x {reps} reps, {backend}{}",
+            rows.len(),
+            if quick { ", --quick" } else { "" }
+        ),
+        &["app", "arena ms", "legacy ms", "speedup", "max |diff|"],
+    );
+    for r in &rows {
+        table.rowf(&[
+            s(&r.app),
+            Cell::F(r.arena_wall_s * 1e3, 2),
+            Cell::F(r.legacy_wall_s * 1e3, 2),
+            Cell::F(r.legacy_wall_s / r.arena_wall_s.max(1e-12), 1),
+            s(&format!("{:e}", r.max_abs_diff)),
+        ]);
+    }
+
+    let report = PredictBench {
+        table,
+        backend,
+        reps,
+        arena_wall_s: arena_total,
+        legacy_wall_s: legacy_total,
+        speedup,
+        rows_per_s_arena: gear_rows / arena_total.max(1e-12),
+        rows_per_s_legacy: gear_rows / legacy_total.max(1e-12),
+        max_abs_diff,
+        rows,
+    };
+    let bench_path = args.opt_or("bench", "BENCH_predict.json");
+    write_predict_bench(bench_path, quick, &report)?;
+    println!("bench record appended to {bench_path}");
+    Ok(report)
+}
+
+/// Append one predict-bench record (`runs[]` keeps the history;
+/// `per_app` holds the latest per-app numbers — the
+/// `BENCH_detection.json` pattern).
+fn write_predict_bench(path: &str, quick: bool, r: &PredictBench) -> anyhow::Result<()> {
+    let num = |x: f64| Json::Num(if x.is_finite() { x } else { -1.0 });
+    let per_app: Vec<Json> = r
+        .rows
+        .iter()
+        .map(|row| {
+            Json::obj(vec![
+                ("app", Json::Str(row.app.clone())),
+                ("arena_wall_s", num(row.arena_wall_s)),
+                ("legacy_wall_s", num(row.legacy_wall_s)),
+                (
+                    "speedup",
+                    num(row.legacy_wall_s / row.arena_wall_s.max(1e-12)),
+                ),
+                ("max_abs_diff", num(row.max_abs_diff)),
+            ])
+        })
+        .collect();
+
+    let unix_s = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_secs() as f64)
+        .unwrap_or(0.0);
+    let run = Json::obj(vec![
+        ("unix_time_s", Json::Num(unix_s)),
+        ("quick", Json::Bool(quick)),
+        ("backend", Json::Str(r.backend.to_string())),
+        ("apps", Json::Num(r.rows.len() as f64)),
+        ("reps", Json::Num(r.reps as f64)),
+        ("legacy_wall_s", num(r.legacy_wall_s)),
+        ("arena_wall_s", num(r.arena_wall_s)),
+        ("speedup", num(r.speedup)),
+        ("rows_per_s_arena", num(r.rows_per_s_arena)),
+        ("rows_per_s_legacy", num(r.rows_per_s_legacy)),
+        ("max_abs_diff", num(r.max_abs_diff)),
+    ]);
+
+    let mut runs = Json::bench_runs(path);
+    runs.push(run);
+    let doc = Json::obj(vec![
+        ("runs", Json::Arr(runs)),
+        ("per_app", Json::Arr(per_app)),
+    ]);
+    std::fs::write(path, doc.to_pretty())?;
+    Ok(())
 }
 
 #[cfg(test)]

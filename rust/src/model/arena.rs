@@ -1,0 +1,272 @@
+//! Arena-flattened GBT inference — the batched all-gears hot path.
+//!
+//! The legacy walk (`gbt::Tree::eval`) chases pointers through one
+//! `Vec` quadruple per tree: for a four-model bundle that is ~4 × 100
+//! trees × 4 allocations scattered across the heap, re-walked once per
+//! gear row with a freshly rebuilt feature vector each time
+//! (`clear/push/extend` per gear). This module flattens the whole
+//! bundle into single SoA node pools (`feat`/`thr`/`left`/`right` as
+//! one array each, children as **absolute** u32 indices, per-tree root
+//! offsets) and evaluates **all gear rows in one call**: the feature
+//! matrix is built once per prediction, and traversal iterates
+//! tree-major so one tree's nodes stay cache-hot across the ~99 rows.
+//!
+//! **Bit-identity contract**: per row, leaf values are accumulated in
+//! tree-index order within each model and finished as `base + lr · Σ`,
+//! the exact float-op sequence of `GbtModel::predict`. The legacy walk
+//! stays in the tree as the test oracle (`rust/tests/model_arena.rs`
+//! asserts bit-identity on random ensembles and on all 71 apps).
+
+use crate::model::gbt::GbtModel;
+
+/// Which of the four bundled models to evaluate.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ArenaModelId {
+    SmEnergy = 0,
+    SmTime = 1,
+    MemEnergy = 2,
+    MemTime = 3,
+}
+
+/// Per-model slice of the shared pools: `[tree_start, tree_end)` into
+/// `GbtArena::roots`, plus the ensemble combination constants.
+#[derive(Debug, Clone)]
+struct ModelMeta {
+    base: f64,
+    lr: f64,
+    tree_start: usize,
+    tree_end: usize,
+}
+
+/// Row-major feature matrix for one batched prediction: column 0 is the
+/// per-row gear norm, columns 1.. are the shared Table-2 features —
+/// built once per `predict_*` call instead of once per gear.
+pub struct FeatureMatrix {
+    data: Vec<f64>,
+    rows: usize,
+    cols: usize,
+}
+
+impl FeatureMatrix {
+    /// One row per gear norm; every row shares the same trailing
+    /// feature block.
+    pub fn build(gear_norms: &[f64], shared: &[f64]) -> FeatureMatrix {
+        let cols = 1 + shared.len();
+        let mut data = Vec::with_capacity(gear_norms.len() * cols);
+        for &g in gear_norms {
+            data.push(g);
+            data.extend_from_slice(shared);
+        }
+        FeatureMatrix {
+            data,
+            rows: gear_norms.len(),
+            cols,
+        }
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    /// Iterate rows as slices (contiguous, stride `cols`).
+    pub fn iter_rows(&self) -> impl Iterator<Item = &[f64]> {
+        self.data.chunks_exact(self.cols.max(1))
+    }
+}
+
+/// The four-model bundle, flattened into contiguous SoA node pools.
+#[derive(Debug, Clone)]
+pub struct GbtArena {
+    feat: Vec<i32>,
+    thr: Vec<f64>,
+    left: Vec<u32>,
+    right: Vec<u32>,
+    /// Absolute root node index of every tree, all models concatenated.
+    roots: Vec<u32>,
+    meta: [ModelMeta; 4],
+    /// Highest feature index referenced + 1 — the minimum row width a
+    /// `FeatureMatrix` must provide.
+    n_features: usize,
+}
+
+impl GbtArena {
+    /// Flatten `(sm_eng, sm_time, mem_eng, mem_time)` — every tree is
+    /// re-validated (range, leaf self-loops, split acyclicity) before
+    /// its nodes enter the pools, so a malformed model can never put an
+    /// unterminating walk on the hot path.
+    pub fn from_models(
+        sm_eng: &GbtModel,
+        sm_time: &GbtModel,
+        mem_eng: &GbtModel,
+        mem_time: &GbtModel,
+    ) -> anyhow::Result<GbtArena> {
+        let mut arena = GbtArena {
+            feat: Vec::new(),
+            thr: Vec::new(),
+            left: Vec::new(),
+            right: Vec::new(),
+            roots: Vec::new(),
+            meta: std::array::from_fn(|_| ModelMeta {
+                base: 0.0,
+                lr: 0.0,
+                tree_start: 0,
+                tree_end: 0,
+            }),
+            n_features: 0,
+        };
+        for (slot, m) in [sm_eng, sm_time, mem_eng, mem_time].into_iter().enumerate() {
+            let tree_start = arena.roots.len();
+            for t in &m.trees {
+                t.validate()?;
+                let off = arena.feat.len();
+                anyhow::ensure!(
+                    off + t.feat.len() <= u32::MAX as usize,
+                    "arena node pool exceeds u32 addressing"
+                );
+                arena.roots.push(off as u32);
+                arena.feat.extend_from_slice(&t.feat);
+                arena.thr.extend_from_slice(&t.thr);
+                // Children become absolute pool indices.
+                arena.left.extend(t.left.iter().map(|&c| c + off as u32));
+                arena.right.extend(t.right.iter().map(|&c| c + off as u32));
+                for &f in &t.feat {
+                    if f >= 0 {
+                        arena.n_features = arena.n_features.max(f as usize + 1);
+                    }
+                }
+            }
+            arena.meta[slot] = ModelMeta {
+                base: m.base,
+                lr: m.lr,
+                tree_start,
+                tree_end: arena.roots.len(),
+            };
+        }
+        Ok(arena)
+    }
+
+    /// Total nodes across the bundle (diagnostics).
+    pub fn node_count(&self) -> usize {
+        self.feat.len()
+    }
+
+    /// Minimum feature-matrix width this bundle indexes into.
+    pub fn n_features(&self) -> usize {
+        self.n_features
+    }
+
+    /// Evaluate one model over every row of `m`, tree-major, writing
+    /// into `out` (`out.len() == m.rows()`). Accumulation order per row
+    /// is tree-index order — bit-identical to `GbtModel::predict`.
+    pub fn eval_into(&self, id: ArenaModelId, m: &FeatureMatrix, out: &mut [f64]) {
+        assert_eq!(out.len(), m.rows(), "output/rows mismatch");
+        assert!(
+            m.cols() >= self.n_features,
+            "feature matrix has {} columns, bundle indexes {}",
+            m.cols(),
+            self.n_features
+        );
+        out.fill(0.0);
+        let meta = &self.meta[id as usize];
+        for &root in &self.roots[meta.tree_start..meta.tree_end] {
+            for (acc, x) in out.iter_mut().zip(m.iter_rows()) {
+                let mut i = root as usize;
+                loop {
+                    let f = self.feat[i];
+                    if f < 0 {
+                        *acc += self.thr[i];
+                        break;
+                    }
+                    i = if x[f as usize] <= self.thr[i] {
+                        self.left[i] as usize
+                    } else {
+                        self.right[i] as usize
+                    };
+                }
+            }
+        }
+        for acc in out.iter_mut() {
+            *acc = meta.base + meta.lr * *acc;
+        }
+    }
+
+    /// Batched (energy, time) prediction sharing one feature matrix —
+    /// the shape every consumer wants: both models of a stage in a
+    /// single call over all gear rows.
+    pub fn predict_pair(
+        &self,
+        eng: ArenaModelId,
+        time: ArenaModelId,
+        m: &FeatureMatrix,
+    ) -> (Vec<f64>, Vec<f64>) {
+        let mut e = vec![0.0; m.rows()];
+        let mut t = vec![0.0; m.rows()];
+        self.eval_into(eng, m, &mut e);
+        self.eval_into(time, m, &mut t);
+        (e, t)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    fn bundle(seed: u64) -> [GbtModel; 4] {
+        std::array::from_fn(|i| GbtModel::random_ensemble(seed ^ (i as u64 + 1), 17, 24))
+    }
+
+    #[test]
+    fn matrix_layout() {
+        let m = FeatureMatrix::build(&[0.25, 0.5], &[1.0, 2.0, 3.0]);
+        assert_eq!((m.rows(), m.cols()), (2, 4));
+        let rows: Vec<&[f64]> = m.iter_rows().collect();
+        assert_eq!(rows[0], &[0.25, 1.0, 2.0, 3.0]);
+        assert_eq!(rows[1], &[0.5, 1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn arena_matches_legacy_walk_bitwise() {
+        let [a, b, c, d] = bundle(0x1234);
+        let arena = GbtArena::from_models(&a, &b, &c, &d).unwrap();
+        let mut rng = Pcg64::new(0xfeed, 3);
+        let shared: Vec<f64> = (0..16).map(|_| rng.uniform(0.0, 1.05)).collect();
+        let norms: Vec<f64> = (0..99).map(|i| 0.2 + 0.8 * i as f64 / 98.0).collect();
+        let m = FeatureMatrix::build(&norms, &shared);
+        for (id, model) in [
+            (ArenaModelId::SmEnergy, &a),
+            (ArenaModelId::SmTime, &b),
+            (ArenaModelId::MemEnergy, &c),
+            (ArenaModelId::MemTime, &d),
+        ] {
+            let mut out = vec![0.0; m.rows()];
+            arena.eval_into(id, &m, &mut out);
+            for (row, got) in m.iter_rows().zip(&out) {
+                let want = model.predict(row);
+                assert_eq!(want.to_bits(), got.to_bits(), "model {id:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn rejects_malformed_model() {
+        let [a, b, c, mut d] = bundle(0x77);
+        // Corrupt one tree into a split self-loop.
+        d.trees[0].feat[0] = 0;
+        d.trees[0].left[0] = 0;
+        d.trees[0].right[0] = 0;
+        assert!(GbtArena::from_models(&a, &b, &c, &d).is_err());
+    }
+
+    #[test]
+    fn n_features_tracks_max_index() {
+        let [a, b, c, d] = bundle(0x9);
+        let arena = GbtArena::from_models(&a, &b, &c, &d).unwrap();
+        assert!(arena.n_features() <= 17);
+        assert!(arena.node_count() > 0);
+    }
+}

@@ -7,6 +7,7 @@
 //! fallback predictor when `artifacts/` has no compiled HLO.
 
 use crate::util::json::Json;
+use crate::util::rng::Pcg64;
 use std::path::Path;
 
 /// One flattened regression tree (leaves: `feat < 0`, value in `thr`,
@@ -37,7 +38,9 @@ impl Tree {
     }
 
     /// Structural validation: children in range, leaves self-looping,
-    /// no split cycles within a bounded depth.
+    /// no split cycles — the split edges must form a DAG, so every
+    /// `eval` walk terminates within `n` hops. Leaves' self-loops are
+    /// terminal by construction and exempt.
     pub fn validate(&self) -> anyhow::Result<()> {
         let n = self.feat.len();
         anyhow::ensure!(n > 0, "empty tree");
@@ -55,7 +58,79 @@ impl Tree {
                 );
             }
         }
+        // Cycle check over the split graph (iterative 3-color DFS; a
+        // gray→gray edge is a cycle that would hang `eval` forever).
+        const WHITE: u8 = 0;
+        const GRAY: u8 = 1;
+        const BLACK: u8 = 2;
+        let mut color = vec![WHITE; n];
+        let mut stack: Vec<(usize, u8)> = Vec::new();
+        for start in 0..n {
+            if color[start] != WHITE {
+                continue;
+            }
+            stack.push((start, 0));
+            while let Some((i, phase)) = stack.pop() {
+                if phase == 0 {
+                    if color[i] == BLACK {
+                        continue; // reached again via a shared subtree
+                    }
+                    color[i] = GRAY;
+                    if self.feat[i] < 0 {
+                        color[i] = BLACK; // leaf: terminal
+                        continue;
+                    }
+                } else if phase == 2 {
+                    color[i] = BLACK;
+                    continue;
+                }
+                stack.push((i, phase + 1));
+                let c = (if phase == 0 { self.left[i] } else { self.right[i] }) as usize;
+                match color[c] {
+                    GRAY => anyhow::bail!("split cycle through node {c}"),
+                    WHITE => stack.push((c, 0)),
+                    _ => {}
+                }
+            }
+        }
         Ok(())
+    }
+
+    /// Deterministic random valid tree (property tests, synthetic
+    /// benchmark models). Nodes are appended depth-first, so children
+    /// always have larger indices; leaves self-loop; `feat` indices are
+    /// drawn from `[0, n_features)` and thresholds/leaf values from the
+    /// normalized feature range the trained models see.
+    pub fn random(rng: &mut Pcg64, n_features: usize, max_depth: usize) -> Tree {
+        assert!(n_features > 0);
+        let mut t = Tree {
+            feat: Vec::new(),
+            thr: Vec::new(),
+            left: Vec::new(),
+            right: Vec::new(),
+        };
+        fn grow(t: &mut Tree, rng: &mut Pcg64, n_features: usize, depth: usize) -> u32 {
+            let i = t.feat.len() as u32;
+            let split = depth > 0 && rng.next_f64() < 0.85;
+            if split {
+                t.feat.push(rng.below(n_features as u64) as i32);
+                t.thr.push(rng.uniform(0.0, 1.05));
+                t.left.push(0); // patched below
+                t.right.push(0);
+                let l = grow(t, rng, n_features, depth - 1);
+                let r = grow(t, rng, n_features, depth - 1);
+                t.left[i as usize] = l;
+                t.right[i as usize] = r;
+            } else {
+                t.feat.push(-1);
+                t.thr.push(rng.uniform(-0.5, 0.5));
+                t.left.push(i);
+                t.right.push(i);
+            }
+            i
+        }
+        grow(&mut t, rng, n_features, max_depth);
+        t
     }
 }
 
@@ -75,21 +150,42 @@ impl GbtModel {
     pub fn from_json(j: &Json) -> anyhow::Result<GbtModel> {
         let base = j.req_f64("base")?;
         let lr = j.req_f64("lr")?;
+        // Index arrays must hold exact integers in range: an `as` cast
+        // would silently zero NaN and saturate garbage floats into
+        // plausible-looking (and cycle-prone) node ids before
+        // `validate` ever sees them.
+        fn req_index_arr(t: &Json, key: &str, min: i64, max: i64) -> anyhow::Result<Vec<i64>> {
+            t.req_f64_arr(key)?
+                .into_iter()
+                .enumerate()
+                .map(|(i, v)| {
+                    anyhow::ensure!(
+                        v.is_finite() && v.fract() == 0.0,
+                        "'{key}'[{i}] = {v} is not an integral index"
+                    );
+                    let n = v as i64;
+                    anyhow::ensure!(
+                        (min..=max).contains(&n),
+                        "'{key}'[{i}] = {n} outside [{min}, {max}]"
+                    );
+                    Ok(n)
+                })
+                .collect()
+        }
         let mut trees = Vec::new();
         for t in j.req_arr("trees")? {
-            let feat: Vec<i32> = t
-                .req_f64_arr("feat")?
+            // Leaves are written as feat = -1 (python/compile/gbt.py);
+            // any other negative value is a writer bug, not a leaf.
+            let feat: Vec<i32> = req_index_arr(t, "feat", -1, i32::MAX as i64)?
                 .into_iter()
                 .map(|v| v as i32)
                 .collect();
             let thr = t.req_f64_arr("thr")?;
-            let left: Vec<u32> = t
-                .req_f64_arr("left")?
+            let left: Vec<u32> = req_index_arr(t, "left", 0, u32::MAX as i64)?
                 .into_iter()
                 .map(|v| v as u32)
                 .collect();
-            let right: Vec<u32> = t
-                .req_f64_arr("right")?
+            let right: Vec<u32> = req_index_arr(t, "right", 0, u32::MAX as i64)?
                 .into_iter()
                 .map(|v| v as u32)
                 .collect();
@@ -104,6 +200,25 @@ impl GbtModel {
         }
         anyhow::ensure!(!trees.is_empty(), "model has no trees");
         Ok(GbtModel { base, lr, trees })
+    }
+
+    /// Deterministic synthetic ensemble with the shape of the trained
+    /// artifacts (~100 trees, depth ≤ 7, 17 inputs = gear norm +
+    /// 16 Table-2 features). Lets the prediction benchmarks and the
+    /// arena bit-identity tests run on machines without `make
+    /// artifacts` (CI), where only the *relative* cost and the exact
+    /// agreement of the two inference paths matter — not the trained
+    /// weights.
+    pub fn random_ensemble(seed: u64, n_features: usize, n_trees: usize) -> GbtModel {
+        let mut rng = Pcg64::new(seed, 0x6b7);
+        let trees = (0..n_trees)
+            .map(|_| Tree::random(&mut rng, n_features, 7))
+            .collect();
+        GbtModel {
+            base: 1.0,
+            lr: 0.05,
+            trees,
+        }
     }
 
     pub fn load(path: &Path) -> anyhow::Result<GbtModel> {
@@ -156,6 +271,84 @@ mod tests {
         assert_eq!(m.trees.len(), 1);
         assert!((m.predict(&[0.4]) - (0.9 + 0.1)).abs() < 1e-12);
         assert!((m.predict(&[0.6]) - (0.9 + 0.2)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn validation_rejects_split_cycles() {
+        // A split node pointing back at itself used to pass validation
+        // and hang `eval` forever.
+        let self_loop = Tree {
+            feat: vec![0],
+            thr: vec![0.5],
+            left: vec![0],
+            right: vec![0],
+        };
+        assert!(self_loop.validate().unwrap_err().to_string().contains("cycle"));
+        // Two splits pointing at each other, with reachable leaves so
+        // every per-node check passes.
+        let mutual = Tree {
+            feat: vec![0, 1, -1, -1],
+            thr: vec![0.5, 0.5, 1.0, 2.0],
+            left: vec![1, 0, 2, 3],
+            right: vec![2, 3, 2, 3],
+        };
+        assert!(mutual.validate().unwrap_err().to_string().contains("cycle"));
+        // A diamond (shared subtree) is acyclic and stays legal.
+        let diamond = Tree {
+            feat: vec![0, 1, -1, -1],
+            thr: vec![0.5, 0.25, 1.0, 2.0],
+            left: vec![1, 2, 2, 3],
+            right: vec![3, 3, 2, 3],
+        };
+        assert!(diamond.validate().is_ok());
+    }
+
+    #[test]
+    fn from_json_rejects_non_integral_indices() {
+        let make = |feat: &str, left: &str, right: &str| {
+            format!(
+                r#"{{"base": 0.0, "lr": 1.0,
+                     "trees": [{{"feat": {feat}, "thr": [0.5, 1.0, 2.0],
+                                 "left": {left}, "right": {right}}}]}}"#
+            )
+        };
+        let ok = make("[0, -1, -1]", "[1, 1, 2]", "[2, 1, 2]");
+        assert!(GbtModel::from_json(&Json::parse(&ok).unwrap()).is_ok());
+        for (feat, left, right, what) in [
+            ("[0.5, -1, -1]", "[1, 1, 2]", "[2, 1, 2]", "fractional feat"),
+            ("[0, -1, -1]", "[1.25, 1, 2]", "[2, 1, 2]", "fractional left"),
+            ("[0, -1, -1]", "[1, 1, 2]", "[2e12, 1, 2]", "right > u32"),
+            ("[-3, -1, -1]", "[1, 1, 2]", "[2, 1, 2]", "feat < -1"),
+            ("[0, -1, -1]", "[-1, 1, 2]", "[2, 1, 2]", "negative left"),
+        ] {
+            let j = Json::parse(&make(feat, left, right)).unwrap();
+            assert!(GbtModel::from_json(&j).is_err(), "accepted {what}");
+        }
+        // NaN can't appear in JSON text, but a programmatic document can
+        // carry it; `v as u32` used to quietly turn it into node 0.
+        let mut j = Json::parse(&ok).unwrap();
+        if let Json::Obj(o) = &mut j {
+            if let Some(Json::Arr(trees)) = o.get_mut("trees") {
+                if let Json::Obj(t) = &mut trees[0] {
+                    t.insert(
+                        "left".into(),
+                        Json::Arr(vec![Json::Num(f64::NAN), Json::Num(1.0), Json::Num(2.0)]),
+                    );
+                }
+            }
+        }
+        assert!(GbtModel::from_json(&j).is_err(), "accepted NaN left");
+    }
+
+    #[test]
+    fn random_trees_validate_and_eval() {
+        let mut rng = crate::util::rng::Pcg64::new(0xa11e, 7);
+        for _ in 0..50 {
+            let t = Tree::random(&mut rng, 17, 7);
+            t.validate().unwrap();
+            let x: Vec<f64> = (0..17).map(|_| rng.uniform(0.0, 1.05)).collect();
+            assert!(t.eval(&x).is_finite());
+        }
     }
 
     #[test]

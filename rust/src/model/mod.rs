@@ -1,8 +1,11 @@
-//! Prediction models (§4.3): native GBT inference and the unified
-//! predictor over HLO/native backends.
+//! Prediction models (§4.3): native GBT inference (arena-flattened
+//! batched hot path + legacy walk as oracle) and the unified predictor
+//! over HLO/native backends.
 
+pub mod arena;
 pub mod gbt;
 pub mod predictor;
 
+pub use arena::{ArenaModelId, FeatureMatrix, GbtArena};
 pub use gbt::GbtModel;
 pub use predictor::{gear_norm_mem, gear_norm_sm, GearPredictions, NativeModels, Predictor};

@@ -5,8 +5,13 @@
 //!   kernels inside, Python nowhere).
 //! - **Native** — Rust GBT inference over the same trained trees
 //!   (`artifacts/gbt_*.json`). Twin/cross-check path and the fallback
-//!   when the compiled artifacts are absent.
+//!   when the compiled artifacts are absent. Since the arena rewrite
+//!   the native hot path is [`crate::model::GbtArena`]: one feature
+//!   matrix per call, all gear rows batched, bit-identical to the
+//!   legacy per-gear `Tree::eval` walk (kept below as the test oracle
+//!   and benchmark comparator).
 
+use crate::model::arena::{ArenaModelId, FeatureMatrix, GbtArena};
 use crate::model::gbt::GbtModel;
 use crate::runtime::{default_artifacts_dir, Runtime};
 use crate::sim::Spec;
@@ -21,15 +26,29 @@ pub struct GearPredictions {
 }
 
 impl GearPredictions {
-    /// Best gear under an objective.
-    pub fn best(&self, obj: crate::search::Objective) -> usize {
-        let scores: Vec<f64> = self
-            .energy_ratio
-            .iter()
-            .zip(&self.time_ratio)
-            .map(|(&e, &t)| obj.score(e, t))
-            .collect();
-        self.gears[crate::util::stats::argmin(&scores).unwrap()]
+    /// Best gear under an objective: fused score+argmin, no
+    /// intermediate allocation. First index wins ties; NaN scores
+    /// never win (matching `stats::argmin`'s total order). An empty or
+    /// ragged gear table is a caller bug surfaced as an error — a
+    /// fleet worker must not panic mid-session on a degenerate
+    /// prediction.
+    pub fn best(&self, obj: crate::search::Objective) -> anyhow::Result<usize> {
+        anyhow::ensure!(!self.gears.is_empty(), "empty gear prediction table");
+        anyhow::ensure!(
+            self.energy_ratio.len() == self.gears.len()
+                && self.time_ratio.len() == self.gears.len(),
+            "ragged gear prediction table"
+        );
+        let mut best_i = 0usize;
+        let mut best_s = f64::INFINITY;
+        for (i, (&e, &t)) in self.energy_ratio.iter().zip(&self.time_ratio).enumerate() {
+            let s = obj.score(e, t);
+            if s < best_s {
+                best_s = s;
+                best_i = i;
+            }
+        }
+        Ok(self.gears[best_i])
     }
 }
 
@@ -49,23 +68,125 @@ pub fn gear_norm_mem(spec: &Spec, gear: usize) -> f64 {
     spec.gears.mem_mhz_of(gear) / max
 }
 
-/// Native four-model bundle.
+/// Native four-model bundle: the trained trees plus their
+/// arena-flattened twin. The arena is built (and re-validated) at
+/// construction time, so the hot path never pays flattening or
+/// validation costs.
+#[derive(Clone)]
 pub struct NativeModels {
     pub sm_eng: GbtModel,
     pub sm_time: GbtModel,
     pub mem_eng: GbtModel,
     pub mem_time: GbtModel,
+    arena: GbtArena,
 }
 
 impl NativeModels {
+    pub fn new(
+        sm_eng: GbtModel,
+        sm_time: GbtModel,
+        mem_eng: GbtModel,
+        mem_time: GbtModel,
+    ) -> anyhow::Result<NativeModels> {
+        let arena = GbtArena::from_models(&sm_eng, &sm_time, &mem_eng, &mem_time)?;
+        Ok(NativeModels {
+            sm_eng,
+            sm_time,
+            mem_eng,
+            mem_time,
+            arena,
+        })
+    }
+
     pub fn load_default() -> anyhow::Result<NativeModels> {
         let dir = default_artifacts_dir();
-        Ok(NativeModels {
-            sm_eng: GbtModel::load(&dir.join("gbt_sm_eng.json"))?,
-            sm_time: GbtModel::load(&dir.join("gbt_sm_time.json"))?,
-            mem_eng: GbtModel::load(&dir.join("gbt_mem_eng.json"))?,
-            mem_time: GbtModel::load(&dir.join("gbt_mem_time.json"))?,
-        })
+        NativeModels::new(
+            GbtModel::load(&dir.join("gbt_sm_eng.json"))?,
+            GbtModel::load(&dir.join("gbt_sm_time.json"))?,
+            GbtModel::load(&dir.join("gbt_mem_eng.json"))?,
+            GbtModel::load(&dir.join("gbt_mem_time.json"))?,
+        )
+    }
+
+    /// Deterministic synthetic bundle with the trained artifacts'
+    /// shape (17 inputs, ~100 trees per model) — the benchmark/test
+    /// stand-in on machines without `make artifacts`.
+    pub fn synthetic(seed: u64) -> NativeModels {
+        NativeModels::new(
+            GbtModel::random_ensemble(seed ^ 0x51, 17, 100),
+            GbtModel::random_ensemble(seed ^ 0x52, 17, 100),
+            GbtModel::random_ensemble(seed ^ 0x53, 17, 100),
+            GbtModel::random_ensemble(seed ^ 0x54, 17, 100),
+        )
+        .expect("synthetic trees are valid by construction")
+    }
+
+    /// Trained bundle when the artifacts exist, synthetic when they are
+    /// *absent* — for consumers (benches, bit-identity tests) that only
+    /// care about the *paths*, not the weights. Artifacts that exist
+    /// but fail to load are an error, not a fallback: silently
+    /// downgrading to synthetic trees would let a corrupt bundle pass
+    /// every gate that claims to exercise the trained models.
+    pub fn load_default_or_synthetic() -> anyhow::Result<(NativeModels, &'static str)> {
+        let dir = default_artifacts_dir();
+        let any_present = [
+            "gbt_sm_eng.json",
+            "gbt_sm_time.json",
+            "gbt_mem_eng.json",
+            "gbt_mem_time.json",
+        ]
+        .iter()
+        .any(|f| dir.join(f).exists());
+        if any_present {
+            Ok((NativeModels::load_default()?, "native-trained"))
+        } else {
+            Ok((NativeModels::synthetic(0x9b7d), "native-synthetic"))
+        }
+    }
+
+    pub fn arena(&self) -> &GbtArena {
+        &self.arena
+    }
+
+    /// The pre-arena per-gear walk, verbatim: rebuilds the feature
+    /// vector per gear and chases `Vec`-of-`Vec` trees node by node.
+    /// Kept as the bit-identity oracle and the `predict-bench`
+    /// comparator — NOT a production path.
+    pub fn legacy_predict_sm(&self, spec: &Spec, features: &[f64]) -> GearPredictions {
+        let gears: Vec<usize> = spec.gears.sm_gears().collect();
+        let mut x = Vec::with_capacity(1 + features.len());
+        let mut eng = Vec::with_capacity(gears.len());
+        let mut tim = Vec::with_capacity(gears.len());
+        for &g in &gears {
+            x.clear();
+            x.push(gear_norm_sm(spec, g));
+            x.extend_from_slice(features);
+            eng.push(self.sm_eng.predict(&x));
+            tim.push(self.sm_time.predict(&x));
+        }
+        GearPredictions {
+            gears,
+            energy_ratio: eng,
+            time_ratio: tim,
+        }
+    }
+
+    /// Legacy memory-gear walk (see [`Self::legacy_predict_sm`]).
+    pub fn legacy_predict_mem(&self, spec: &Spec, features: &[f64]) -> GearPredictions {
+        let gears: Vec<usize> = (0..spec.gears.num_mem_gears()).collect();
+        let mut eng = Vec::new();
+        let mut tim = Vec::new();
+        for &g in &gears {
+            let mut x = vec![gear_norm_mem(spec, g)];
+            x.extend_from_slice(features);
+            eng.push(self.mem_eng.predict(&x));
+            tim.push(self.mem_time.predict(&x));
+        }
+        GearPredictions {
+            gears,
+            energy_ratio: eng,
+            time_ratio: tim,
+        }
     }
 }
 
@@ -91,7 +212,8 @@ impl Predictor {
         }
     }
 
-    /// SM-clock models: (energy, time) ratio per SM gear.
+    /// SM-clock models: (energy, time) ratio per SM gear, both models
+    /// batched over one feature matrix.
     pub fn predict_sm(&self, spec: &Spec, features: &[f64]) -> anyhow::Result<GearPredictions> {
         let gears: Vec<usize> = spec.gears.sm_gears().collect();
         match self {
@@ -105,16 +227,11 @@ impl Predictor {
                 })
             }
             Predictor::Native(m) => {
-                let mut x = Vec::with_capacity(1 + features.len());
-                let mut eng = Vec::with_capacity(gears.len());
-                let mut tim = Vec::with_capacity(gears.len());
-                for &g in &gears {
-                    x.clear();
-                    x.push(gear_norm_sm(spec, g));
-                    x.extend_from_slice(features);
-                    eng.push(m.sm_eng.predict(&x));
-                    tim.push(m.sm_time.predict(&x));
-                }
+                let norms: Vec<f64> = gears.iter().map(|&g| gear_norm_sm(spec, g)).collect();
+                let mat = FeatureMatrix::build(&norms, features);
+                let (eng, tim) =
+                    m.arena
+                        .predict_pair(ArenaModelId::SmEnergy, ArenaModelId::SmTime, &mat);
                 Ok(GearPredictions {
                     gears,
                     energy_ratio: eng,
@@ -138,14 +255,11 @@ impl Predictor {
                 })
             }
             Predictor::Native(m) => {
-                let mut eng = Vec::new();
-                let mut tim = Vec::new();
-                for &g in &gears {
-                    let mut x = vec![gear_norm_mem(spec, g)];
-                    x.extend_from_slice(features);
-                    eng.push(m.mem_eng.predict(&x));
-                    tim.push(m.mem_time.predict(&x));
-                }
+                let norms: Vec<f64> = gears.iter().map(|&g| gear_norm_mem(spec, g)).collect();
+                let mat = FeatureMatrix::build(&norms, features);
+                let (eng, tim) =
+                    m.arena
+                        .predict_pair(ArenaModelId::MemEnergy, ArenaModelId::MemTime, &mat);
                 Ok(GearPredictions {
                     gears,
                     energy_ratio: eng,
@@ -177,8 +291,65 @@ mod tests {
             time_ratio: vec![1.04, 1.20, 1.01],
         };
         // Min-energy-capped: gear 11 is infeasible, 10 beats 12 on energy.
-        assert_eq!(p.best(Objective::paper_default()), 10);
+        assert_eq!(p.best(Objective::paper_default()).unwrap(), 10);
         // Unconstrained energy: gear 11 wins.
-        assert_eq!(p.best(Objective::Energy), 11);
+        assert_eq!(p.best(Objective::Energy).unwrap(), 11);
+    }
+
+    #[test]
+    fn best_rejects_degenerate_tables() {
+        let empty = GearPredictions {
+            gears: vec![],
+            energy_ratio: vec![],
+            time_ratio: vec![],
+        };
+        assert!(empty.best(Objective::Energy).is_err());
+        let ragged = GearPredictions {
+            gears: vec![1, 2],
+            energy_ratio: vec![0.9],
+            time_ratio: vec![1.0, 1.0],
+        };
+        assert!(ragged.best(Objective::Energy).is_err());
+    }
+
+    #[test]
+    fn best_ignores_nan_scores() {
+        let p = GearPredictions {
+            gears: vec![5, 6, 7],
+            energy_ratio: vec![f64::NAN, 0.8, 0.9],
+            time_ratio: vec![1.0, 1.0, 1.0],
+        };
+        assert_eq!(p.best(Objective::Energy).unwrap(), 6);
+    }
+
+    #[test]
+    fn native_predictions_match_legacy_walk() {
+        let spec = Spec::load_default().unwrap();
+        let m = NativeModels::synthetic(0xabc);
+        let p = Predictor::Native(m.clone());
+        let feats: Vec<f64> = (0..16).map(|i| 0.1 + 0.05 * i as f64).collect();
+        let sm = p.predict_sm(&spec, &feats).unwrap();
+        let sm_legacy = m.legacy_predict_sm(&spec, &feats);
+        assert_eq!(sm.gears, sm_legacy.gears);
+        for i in 0..sm.gears.len() {
+            assert_eq!(
+                sm.energy_ratio[i].to_bits(),
+                sm_legacy.energy_ratio[i].to_bits()
+            );
+            assert_eq!(sm.time_ratio[i].to_bits(), sm_legacy.time_ratio[i].to_bits());
+        }
+        let mem = p.predict_mem(&spec, &feats).unwrap();
+        let mem_legacy = m.legacy_predict_mem(&spec, &feats);
+        assert_eq!(mem.gears, mem_legacy.gears);
+        for i in 0..mem.gears.len() {
+            assert_eq!(
+                mem.energy_ratio[i].to_bits(),
+                mem_legacy.energy_ratio[i].to_bits()
+            );
+            assert_eq!(
+                mem.time_ratio[i].to_bits(),
+                mem_legacy.time_ratio[i].to_bits()
+            );
+        }
     }
 }

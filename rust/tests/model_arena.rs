@@ -1,0 +1,138 @@
+//! Arena-flattened prediction: bit-identity against the legacy
+//! `Tree::eval` walk — property tests over random valid ensembles, and
+//! the full 71-app replay through both `Predictor` paths.
+
+use gpoeo::experiments::helpers::evaluation_apps;
+use gpoeo::model::gbt::Tree;
+use gpoeo::model::{ArenaModelId, FeatureMatrix, GbtArena, GbtModel, NativeModels, Predictor};
+use gpoeo::search::Objective;
+use gpoeo::sim::Spec;
+use gpoeo::util::rng::Pcg64;
+use std::sync::Arc;
+
+/// Property: for random valid tree bundles and random feature rows, the
+/// batched arena evaluation is bit-identical to the legacy per-row walk
+/// on every model of the bundle.
+#[test]
+fn prop_arena_bit_identical_on_random_ensembles() {
+    for case in 0..25u64 {
+        let mut rng = Pcg64::new(0xa12e4a ^ case.wrapping_mul(0x9e3779b97f4a7c15), case);
+        let models: [GbtModel; 4] = std::array::from_fn(|i| {
+            GbtModel::random_ensemble(rng.next_u64() ^ i as u64, 17, 8 + (case as usize % 40))
+        });
+        let arena =
+            GbtArena::from_models(&models[0], &models[1], &models[2], &models[3]).unwrap();
+        let n_rows = 1 + (case as usize % 99);
+        let shared: Vec<f64> = (0..16).map(|_| rng.uniform(0.0, 1.05)).collect();
+        let norms: Vec<f64> = (0..n_rows).map(|_| rng.uniform(0.1, 1.0)).collect();
+        let m = FeatureMatrix::build(&norms, &shared);
+        for (id, model) in [
+            (ArenaModelId::SmEnergy, &models[0]),
+            (ArenaModelId::SmTime, &models[1]),
+            (ArenaModelId::MemEnergy, &models[2]),
+            (ArenaModelId::MemTime, &models[3]),
+        ] {
+            let mut out = vec![0.0; n_rows];
+            arena.eval_into(id, &m, &mut out);
+            for (row, got) in m.iter_rows().zip(&out) {
+                let want = model.predict(row);
+                assert_eq!(
+                    want.to_bits(),
+                    got.to_bits(),
+                    "case {case} model {id:?}: {want} vs {got}"
+                );
+            }
+        }
+    }
+}
+
+/// A cyclic tree must be rejected before it can reach an arena or an
+/// `eval` walk (the walk would never terminate).
+#[test]
+fn cyclic_tree_cannot_enter_an_arena() {
+    let cyclic = Tree {
+        feat: vec![0, 1, -1],
+        thr: vec![0.5, 0.25, 1.0],
+        left: vec![1, 0, 2],
+        right: vec![2, 2, 2],
+    };
+    assert!(cyclic.validate().is_err());
+    let mut bad = GbtModel::random_ensemble(0x5eed, 17, 4);
+    bad.trees.push(cyclic);
+    let good = GbtModel::random_ensemble(0xbee, 17, 4);
+    assert!(GbtArena::from_models(&bad, &good, &good, &good).is_err());
+}
+
+/// Integration: replay every evaluation app's feature vectors — both
+/// the groundtruth features and the noisy measured recipe the online
+/// experiments use — through the arena-backed `Predictor` and the
+/// legacy walk. `GearPredictions` must be identical to the bit, and so
+/// must the downstream `best()` gears for the paper-default objective.
+#[test]
+fn all_71_apps_predict_identically_on_both_paths() {
+    let spec = Arc::new(Spec::load_default().unwrap());
+    let (models, backend) = NativeModels::load_default_or_synthetic().unwrap();
+    let predictor = Predictor::Native(models.clone());
+    let apps = evaluation_apps(&spec).unwrap();
+    assert_eq!(apps.len(), 71, "evaluation suite drifted");
+    println!("replaying 71 apps through {backend}");
+
+    let obj = Objective::paper_default();
+    for app in &apps {
+        let mut rng = Pcg64::new(app.trace_seed ^ 0x00fe_a7, 0x5eed);
+        let measured = app.measured_features(&spec, &mut rng);
+        for feats in [&app.features, &measured] {
+            let sm = predictor.predict_sm(&spec, feats).unwrap();
+            let sm_l = models.legacy_predict_sm(&spec, feats);
+            let mem = predictor.predict_mem(&spec, feats).unwrap();
+            let mem_l = models.legacy_predict_mem(&spec, feats);
+            for (got, want) in [(&sm, &sm_l), (&mem, &mem_l)] {
+                assert_eq!(got.gears, want.gears, "{}", app.name);
+                for i in 0..got.gears.len() {
+                    assert_eq!(
+                        got.energy_ratio[i].to_bits(),
+                        want.energy_ratio[i].to_bits(),
+                        "{} energy row {i}",
+                        app.name
+                    );
+                    assert_eq!(
+                        got.time_ratio[i].to_bits(),
+                        want.time_ratio[i].to_bits(),
+                        "{} time row {i}",
+                        app.name
+                    );
+                }
+                assert_eq!(
+                    got.best(obj).unwrap(),
+                    want.best(obj).unwrap(),
+                    "{} best gear",
+                    app.name
+                );
+            }
+        }
+    }
+}
+
+/// The four models of a stage share one feature matrix per call — a
+/// wider matrix than the bundle indexes is fine, a narrower one must
+/// fail loudly instead of reading a neighboring row.
+#[test]
+#[should_panic(expected = "feature matrix")]
+fn narrow_feature_matrix_panics_cleanly() {
+    // A split on feature 16 forces n_features = 17.
+    let t = Tree {
+        feat: vec![16, -1, -1],
+        thr: vec![0.5, 1.0, 2.0],
+        left: vec![1, 1, 2],
+        right: vec![2, 1, 2],
+    };
+    let m16 = GbtModel {
+        base: 0.0,
+        lr: 1.0,
+        trees: vec![t],
+    };
+    let arena = GbtArena::from_models(&m16, &m16, &m16, &m16).unwrap();
+    let m = FeatureMatrix::build(&[0.5], &[0.1; 4]); // 5 cols < 17
+    let mut out = vec![0.0; 1];
+    arena.eval_into(ArenaModelId::SmEnergy, &m, &mut out);
+}

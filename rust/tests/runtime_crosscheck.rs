@@ -90,7 +90,7 @@ fn predictor_backends_agree_end_to_end() {
     }
     // And both should pick the same gear under the paper objective.
     let obj = gpoeo::search::Objective::paper_default();
-    assert_eq!(a.best(obj), b.best(obj));
+    assert_eq!(a.best(obj).unwrap(), b.best(obj).unwrap());
 }
 
 #[test]
