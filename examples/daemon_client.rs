@@ -1,13 +1,14 @@
 //! Micro-intrusive Begin/End API demo: a "training script" talks to the
 //! GPOEO daemon over a Unix socket, exactly like the paper's two-call
-//! instrumentation (§2.2.2).
+//! instrumentation (§2.2.2) — through the control-plane v1 client
+//! (`GpoeoClient`, DESIGN.md §9). The legacy line protocol still works
+//! on the same socket (`LegacyClient`), shown at the end.
 //!
 //!     cargo run --release --example daemon_client
 
+use gpoeo::api::{GpoeoClient, LegacyClient};
 use gpoeo::coordinator::daemon::Daemon;
 use gpoeo::sim::Spec;
-use std::io::{BufRead, BufReader, Write};
-use std::os::unix::net::UnixStream;
 use std::sync::Arc;
 
 fn main() -> anyhow::Result<()> {
@@ -22,33 +23,35 @@ fn main() -> anyhow::Result<()> {
         std::thread::sleep(std::time::Duration::from_millis(10));
     }
 
-    // --- the "training script" side -----------------------------------
-    let stream = UnixStream::connect(&sock)?;
-    let mut w = stream.try_clone()?;
-    let mut r = BufReader::new(stream);
-    let mut line = String::new();
-
-    writeln!(w, "BEGIN AI_OBJ 300")?; // Begin API at the training region
-    r.read_line(&mut line)?;
-    print!("daemon: {line}");
+    // --- the "training script" side (protocol v1) ---------------------
+    let mut c = GpoeoClient::connect(&sock)?; // hello handshake inside
+    let id = c.begin("AI_OBJ", Some(300), None, None)?; // Begin API
+    println!("daemon: session {id} started");
 
     for i in 0..8 {
-        line.clear();
-        writeln!(w, "STATUS")?;
-        r.read_line(&mut line)?;
-        let f: Vec<&str> = line.split_whitespace().collect();
-        if f.len() >= 6 {
-            println!(
-                "poll {i}: iter {:>4}  t={:>7}s  E={:>9}J  clocks=({}, {})",
-                f[1], f[2], f[3], f[4], f[5]
-            );
-        }
+        let st = c.status(&id)?; // drives a slice, reports telemetry
+        println!(
+            "poll {i}: iter {:>4}/{}  t={:>8.3}s  E={:>10.1}J  clocks=({}, {})",
+            st.iterations, st.target_iters, st.time_s, st.energy_j, st.sm_gear, st.mem_gear
+        );
     }
 
-    line.clear();
-    writeln!(w, "END")?; // End API
-    r.read_line(&mut line)?;
-    print!("daemon: {line}");
-    writeln!(w, "QUIT")?;
+    let r = c.end(&id)?; // End API
+    println!(
+        "daemon: RESULT energy {:.1} J  time {:.3} s  {} iterations",
+        r.energy_j, r.time_s, r.iterations
+    );
+
+    // --- the same contract over the legacy line protocol --------------
+    let mut l = LegacyClient::connect(&sock)?;
+    l.begin("AI_OBJ", Some(300))?;
+    let r2 = l.end()?;
+    l.quit();
+    println!(
+        "legacy: RESULT energy {:.1} J  time {:.3} s  (bit-identical: {})",
+        r2.energy_j,
+        r2.time_s,
+        (r2.energy_j - r.energy_j).abs() < 0.05 && (r2.time_s - r.time_s).abs() < 0.0005
+    );
     Ok(())
 }

@@ -1,0 +1,372 @@
+//! `GpoeoClient` — the Rust client library for the control-plane API.
+//!
+//! This is the *only* supported way to talk to the daemon: the CLI
+//! (`gpoeo ctl`), the protocol tests and the CI smoke all go through it,
+//! so protocol strings exist in `api/` and nowhere else. The typed
+//! methods ([`begin`](GpoeoClient::begin), [`status`](GpoeoClient::status),
+//! [`end`](GpoeoClient::end), ...) map `Response::Error` onto
+//! `anyhow::Error`, so callers never match on error strings.
+//!
+//! [`LegacyClient`] speaks the pre-v1 whitespace-token line protocol
+//! (`POLICY`/`BEGIN`/`STATUS`/`END`) against the same daemon — the
+//! compat mode the parity tests and CI use to prove both protocols
+//! produce identical results.
+
+use super::protocol::{
+    read_frame, result_parity_key, Event, Frame, Request, Response, ServerMsg, SessionReport,
+    MAX_REPLY_BYTES, PROTOCOL_VERSION,
+};
+use super::{AppInfo, PolicyInfo};
+use crate::policy::PolicySpec;
+use std::io::{BufReader, Write};
+use std::os::unix::net::UnixStream;
+use std::path::Path;
+
+/// A v1 control-plane connection (handshake done, ready for requests).
+pub struct GpoeoClient {
+    reader: BufReader<UnixStream>,
+    writer: UnixStream,
+}
+
+impl GpoeoClient {
+    /// Connect and perform the `hello` version handshake.
+    pub fn connect(socket: &Path) -> anyhow::Result<GpoeoClient> {
+        let mut c = GpoeoClient::connect_raw(socket)?;
+        match c.request(&Request::Hello {
+            version: PROTOCOL_VERSION,
+        })? {
+            Response::Hello { protocol, .. } if protocol == PROTOCOL_VERSION => Ok(c),
+            Response::Hello { protocol, server } => anyhow::bail!(
+                "server '{server}' speaks protocol v{protocol}, this client v{PROTOCOL_VERSION}"
+            ),
+            Response::Error { message } => anyhow::bail!("handshake rejected: {message}"),
+            other => anyhow::bail!("unexpected handshake reply '{}'", other.kind()),
+        }
+    }
+
+    /// Connect *without* the handshake. Only protocol tests need this —
+    /// every typed request except `hello` will be refused by the server
+    /// until a `hello` goes through.
+    pub fn connect_raw(socket: &Path) -> anyhow::Result<GpoeoClient> {
+        let stream = UnixStream::connect(socket)
+            .map_err(|e| anyhow::anyhow!("connecting to {}: {e}", socket.display()))?;
+        let writer = stream.try_clone()?;
+        Ok(GpoeoClient {
+            reader: BufReader::new(stream),
+            writer,
+        })
+    }
+
+    fn send(&mut self, req: &Request) -> anyhow::Result<()> {
+        let mut line = req.to_json().to_string();
+        line.push('\n');
+        self.writer.write_all(line.as_bytes())?;
+        Ok(())
+    }
+
+    fn recv(&mut self) -> anyhow::Result<ServerMsg> {
+        match read_frame(&mut self.reader, MAX_REPLY_BYTES)? {
+            Frame::Eof => anyhow::bail!("server closed the connection"),
+            Frame::Oversized => anyhow::bail!("oversized server reply (> {MAX_REPLY_BYTES} bytes)"),
+            Frame::Line(l) => {
+                ServerMsg::parse_line(&l).map_err(|e| anyhow::anyhow!("bad server message: {e}"))
+            }
+        }
+    }
+
+    /// One request → one [`Response`]. Events arriving out of a
+    /// subscription context are skipped. `Response::Error` is returned
+    /// as a value here — the typed wrappers below turn it into `Err`.
+    pub fn request(&mut self, req: &Request) -> anyhow::Result<Response> {
+        self.send(req)?;
+        loop {
+            match self.recv()? {
+                ServerMsg::Response(r) => return Ok(r),
+                ServerMsg::Event(_) => continue,
+            }
+        }
+    }
+
+    /// Send one raw wire line and return the server's answer. This is
+    /// the escape hatch the framing fuzz tests use to deliver malformed
+    /// input; production code always goes through [`request`](Self::request).
+    pub fn raw_line(&mut self, line: &str) -> anyhow::Result<ServerMsg> {
+        self.writer.write_all(line.as_bytes())?;
+        self.writer.write_all(b"\n")?;
+        self.recv()
+    }
+
+    /// Start a session; returns its id. `iters: None` runs the app's
+    /// default workload size; `policy: None` runs the connection's
+    /// current default policy.
+    pub fn begin(
+        &mut self,
+        app: &str,
+        iters: Option<u64>,
+        name: Option<&str>,
+        policy: Option<PolicySpec>,
+    ) -> anyhow::Result<String> {
+        match self.request(&Request::Begin {
+            app: app.to_string(),
+            iters,
+            name: name.map(|s| s.to_string()),
+            policy,
+        })? {
+            Response::Begun { session } => Ok(session),
+            other => Err(unexpected("begin", other)),
+        }
+    }
+
+    /// Drive a slice of the session and return its telemetry.
+    pub fn status(&mut self, session: &str) -> anyhow::Result<SessionReport> {
+        match self.request(&Request::Status {
+            session: session.to_string(),
+        })? {
+            Response::Status(r) => Ok(r),
+            other => Err(unexpected("status", other)),
+        }
+    }
+
+    /// Drive the session to its target and return the final result.
+    pub fn end(&mut self, session: &str) -> anyhow::Result<SessionReport> {
+        match self.request(&Request::End {
+            session: session.to_string(),
+        })? {
+            Response::Result(r) => Ok(r),
+            other => Err(unexpected("end", other)),
+        }
+    }
+
+    pub fn abort(&mut self, session: &str) -> anyhow::Result<()> {
+        match self.request(&Request::Abort {
+            session: session.to_string(),
+        })? {
+            Response::Ok { .. } => Ok(()),
+            other => Err(unexpected("abort", other)),
+        }
+    }
+
+    /// Set this connection's default policy for subsequent `begin`s.
+    pub fn set_policy(&mut self, policy: PolicySpec) -> anyhow::Result<()> {
+        match self.request(&Request::SetPolicy { policy })? {
+            Response::Ok { .. } => Ok(()),
+            other => Err(unexpected("set_policy", other)),
+        }
+    }
+
+    pub fn list_apps(&mut self) -> anyhow::Result<Vec<AppInfo>> {
+        match self.request(&Request::ListApps)? {
+            Response::Apps(a) => Ok(a),
+            other => Err(unexpected("list_apps", other)),
+        }
+    }
+
+    pub fn list_policies(&mut self) -> anyhow::Result<Vec<PolicyInfo>> {
+        match self.request(&Request::ListPolicies)? {
+            Response::Policies(p) => Ok(p),
+            other => Err(unexpected("list_policies", other)),
+        }
+    }
+
+    /// Stream status telemetry while the server drives the session:
+    /// `on_event` fires per event; returns the final status snapshot
+    /// (the session still needs [`end`](Self::end) to be released).
+    pub fn subscribe(
+        &mut self,
+        session: &str,
+        every_ticks: u64,
+        max_events: u64,
+        mut on_event: impl FnMut(&SessionReport),
+    ) -> anyhow::Result<SessionReport> {
+        self.send(&Request::Subscribe {
+            session: session.to_string(),
+            every_ticks,
+            max_events,
+        })?;
+        loop {
+            match self.recv()? {
+                ServerMsg::Event(Event::Status(r)) => on_event(&r),
+                ServerMsg::Response(Response::Status(r)) => return Ok(r),
+                ServerMsg::Response(Response::Error { message }) => anyhow::bail!("{message}"),
+                ServerMsg::Response(other) => return Err(unexpected("subscribe", other)),
+            }
+        }
+    }
+
+    /// Ask the daemon to stop serving and remove its socket file.
+    pub fn shutdown(&mut self) -> anyhow::Result<()> {
+        match self.request(&Request::Shutdown)? {
+            Response::Ok { .. } => Ok(()),
+            other => Err(unexpected("shutdown", other)),
+        }
+    }
+}
+
+fn unexpected(what: &str, r: Response) -> anyhow::Error {
+    match r {
+        Response::Error { message } => anyhow::anyhow!("{message}"),
+        other => anyhow::anyhow!("unexpected reply '{}' to {what}", other.kind()),
+    }
+}
+
+/// Compat-mode client for the legacy whitespace-token protocol. One
+/// session per connection, `POLICY` takes a bare name — exactly the
+/// surface old clients had. Kept (and exercised in CI) so the
+/// legacy-compat guarantee stays a tested contract, not folklore.
+pub struct LegacyClient {
+    reader: BufReader<UnixStream>,
+    writer: UnixStream,
+}
+
+impl LegacyClient {
+    pub fn connect(socket: &Path) -> anyhow::Result<LegacyClient> {
+        let stream = UnixStream::connect(socket)
+            .map_err(|e| anyhow::anyhow!("connecting to {}: {e}", socket.display()))?;
+        let writer = stream.try_clone()?;
+        Ok(LegacyClient {
+            reader: BufReader::new(stream),
+            writer,
+        })
+    }
+
+    /// One command line out, one answer line back. `ERR ...` answers
+    /// become `Err`.
+    fn roundtrip(&mut self, cmd: &str) -> anyhow::Result<String> {
+        self.writer.write_all(cmd.as_bytes())?;
+        self.writer.write_all(b"\n")?;
+        match read_frame(&mut self.reader, MAX_REPLY_BYTES)? {
+            Frame::Line(l) => match l.strip_prefix("ERR ") {
+                Some(reason) => anyhow::bail!("{reason}"),
+                None => Ok(l),
+            },
+            _ => anyhow::bail!("server closed the legacy connection"),
+        }
+    }
+
+    /// `POLICY <name>` — selects the policy for the next `BEGIN`. The
+    /// legacy protocol cannot carry configuration; that is what v1's
+    /// `set_policy`/inline `begin` policy is for.
+    pub fn set_policy(&mut self, name: &str) -> anyhow::Result<()> {
+        self.roundtrip(&format!("POLICY {name}"))?;
+        Ok(())
+    }
+
+    /// `BEGIN <app> [iters]` — `iters: None` runs the app's default
+    /// workload size (same default as v1 and `gpoeo run`).
+    pub fn begin(&mut self, app: &str, iters: Option<u64>) -> anyhow::Result<()> {
+        let cmd = match iters {
+            Some(n) => format!("BEGIN {app} {n}"),
+            None => format!("BEGIN {app}"),
+        };
+        self.roundtrip(&cmd)?;
+        Ok(())
+    }
+
+    /// `STATUS` — parse `STATUS <iter> <time_s> <energy_j> <sm> <mem>`.
+    pub fn status(&mut self) -> anyhow::Result<SessionReport> {
+        let line = self.roundtrip("STATUS")?;
+        parse_report(&line, "STATUS", false)
+    }
+
+    /// `END` — parse `RESULT <energy_j> <time_s> <iters> <sm> <mem>`.
+    pub fn end(&mut self) -> anyhow::Result<SessionReport> {
+        let line = self.roundtrip("END")?;
+        let mut t = line.split_whitespace();
+        if t.next() != Some("RESULT") {
+            anyhow::bail!("expected a RESULT line, got '{line}'");
+        }
+        let mut num = || -> anyhow::Result<f64> {
+            t.next()
+                .and_then(|s| s.parse::<f64>().ok())
+                .ok_or_else(|| anyhow::anyhow!("malformed RESULT line '{line}'"))
+        };
+        let (energy_j, time_s, iters, sm, mem) = (num()?, num()?, num()?, num()?, num()?);
+        Ok(SessionReport {
+            session: String::new(),
+            iterations: iters as u64,
+            target_iters: 0,
+            time_s,
+            energy_j,
+            sm_gear: sm as usize,
+            mem_gear: mem as usize,
+            done: true,
+        })
+    }
+
+    pub fn quit(mut self) {
+        let _ = self.writer.write_all(b"QUIT\n");
+    }
+}
+
+fn parse_report(line: &str, tag: &str, done: bool) -> anyhow::Result<SessionReport> {
+    let mut t = line.split_whitespace();
+    if t.next() != Some(tag) {
+        anyhow::bail!("expected a {tag} line, got '{line}'");
+    }
+    let mut num = || -> anyhow::Result<f64> {
+        t.next()
+            .and_then(|s| s.parse::<f64>().ok())
+            .ok_or_else(|| anyhow::anyhow!("malformed {tag} line '{line}'"))
+    };
+    let (iters, time_s, energy_j, sm, mem) = (num()?, num()?, num()?, num()?, num()?);
+    Ok(SessionReport {
+        session: String::new(),
+        iterations: iters as u64,
+        target_iters: 0,
+        time_s,
+        energy_j,
+        sm_gear: sm as usize,
+        mem_gear: mem as usize,
+        done,
+    })
+}
+
+/// Run one complete (app, policy, iters) session over v1 and return the
+/// result report — the v1 half of the parity check.
+pub fn run_v1_session(
+    socket: &Path,
+    app: &str,
+    policy: PolicySpec,
+    iters: Option<u64>,
+) -> anyhow::Result<SessionReport> {
+    let mut c = GpoeoClient::connect(socket)?;
+    let id = c.begin(app, iters, None, Some(policy))?;
+    c.end(&id)
+}
+
+/// Run one complete (app, policy, iters) session over the legacy
+/// protocol — the compat half of the parity check. The policy crosses as
+/// a bare name, so only default-config policies are expressible.
+pub fn run_legacy_session(
+    socket: &Path,
+    app: &str,
+    policy_name: &str,
+    iters: Option<u64>,
+) -> anyhow::Result<SessionReport> {
+    let mut c = LegacyClient::connect(socket)?;
+    c.set_policy(policy_name)?;
+    c.begin(app, iters)?;
+    let r = c.end()?;
+    c.quit();
+    Ok(r)
+}
+
+/// Parity check: run the same (app, policy-name, iters) through both
+/// protocols and compare at legacy `RESULT` precision. Returns the two
+/// keys; `Err` when they differ.
+pub fn check_parity(
+    socket: &Path,
+    app: &str,
+    policy_name: &str,
+    iters: Option<u64>,
+) -> anyhow::Result<(String, String)> {
+    let v1 = run_v1_session(socket, app, PolicySpec::registered(policy_name), iters)?;
+    let legacy = run_legacy_session(socket, app, policy_name, iters)?;
+    let (kv, kl) = (result_parity_key(&v1), result_parity_key(&legacy));
+    if kv != kl {
+        anyhow::bail!(
+            "protocol parity violated for ({app}, {policy_name}): v1 [{kv}] != legacy [{kl}]"
+        );
+    }
+    Ok((kv, kl))
+}

@@ -1,0 +1,225 @@
+//! `gpoeo ctl` — command-line driver for the control-plane API.
+//!
+//! Every verb is a thin wrapper over [`GpoeoClient`]; no protocol
+//! strings appear here. Sessions live in the daemon's global table, so
+//! `ctl begin` from one invocation and `ctl status`/`ctl end` from later
+//! ones address the same session by id.
+//!
+//! ```text
+//! gpoeo ctl apps|policies           introspection listings
+//! gpoeo ctl begin --app A [--iters N] [--name S] [--policy P ...]
+//! gpoeo ctl status|end|abort --session ID
+//! gpoeo ctl watch --session ID [--every-ticks N] [--max-events N]
+//! gpoeo ctl run --app A [...]       begin + watch + end in one call
+//! gpoeo ctl parity --app A [...]    v1-vs-legacy RESULT parity check
+//! gpoeo ctl shutdown                stop the daemon, remove the socket
+//! ```
+//!
+//! All verbs take `--socket PATH` (default `/tmp/gpoeo.sock`).
+
+use super::client::{check_parity, GpoeoClient};
+use super::protocol::SessionReport;
+use crate::policy::{PolicyConfig, PolicySpec};
+use crate::util::cli::Args;
+use crate::util::table::{s, Cell, Table};
+use std::path::PathBuf;
+
+pub fn cli_ctl(args: &Args) -> anyhow::Result<()> {
+    let socket = PathBuf::from(args.opt_or("socket", "/tmp/gpoeo.sock"));
+    let verb = args.positional.first().map(|v| v.as_str()).unwrap_or("");
+    match verb {
+        "apps" => cmd_apps(&socket, args),
+        "policies" => cmd_policies(&socket, args),
+        "begin" => cmd_begin(&socket, args),
+        "status" => cmd_status(&socket, args),
+        "end" => cmd_end(&socket, args),
+        "abort" => cmd_abort(&socket, args),
+        "watch" => cmd_watch(&socket, args),
+        "run" => cmd_run(&socket, args),
+        "parity" => cmd_parity(&socket, args),
+        "shutdown" => cmd_shutdown(&socket),
+        "" => anyhow::bail!(
+            "ctl requires a verb: apps policies begin status end abort watch run parity shutdown"
+        ),
+        other => anyhow::bail!("unknown ctl verb '{other}'; see `gpoeo --help`"),
+    }
+}
+
+/// Options `ctl` itself consumes (transport/addressing/objective) —
+/// everything else is a policy knob and goes on the wire. Without this
+/// filter, `--socket`/`--app`/... would leak into the policy config's
+/// `opts` (harmless to today's builders, but client-local noise in the
+/// protocol).
+const CTL_OPTS: &[&str] = &[
+    "socket",
+    "app",
+    "iters",
+    "name",
+    "session",
+    "every-ticks",
+    "max-events",
+    "policy",
+    "format",
+    "objective",
+    "slowdown-cap",
+];
+
+/// The `--policy NAME` + forwarded policy options of this invocation,
+/// when a policy was named (absent: the daemon's per-connection
+/// default).
+fn policy_from_args(args: &Args) -> anyhow::Result<Option<PolicySpec>> {
+    match args.opt("policy") {
+        None => Ok(None),
+        Some(name) => {
+            let mut cfg = PolicyConfig::from_args(args)?;
+            cfg.opts.retain(|k, _| !CTL_OPTS.contains(&k.as_str()));
+            Ok(Some(PolicySpec::new(name, cfg)))
+        }
+    }
+}
+
+/// `--iters N`: absent means the app's default workload size; an
+/// explicit 0 is rejected here, exactly like both wire protocols do —
+/// never silently substituted.
+fn iters_from_args(args: &Args) -> anyhow::Result<Option<u64>> {
+    match args.opt("iters") {
+        None => Ok(None),
+        Some(_) => match args.opt_u64("iters", 0)? {
+            0 => anyhow::bail!("--iters must be a positive integer"),
+            n => Ok(Some(n)),
+        },
+    }
+}
+
+fn req_session(args: &Args) -> anyhow::Result<String> {
+    args.opt("session")
+        .map(|v| v.to_string())
+        .ok_or_else(|| anyhow::anyhow!("this verb requires --session ID (from `ctl begin`)"))
+}
+
+fn print_report(prefix: &str, r: &SessionReport) {
+    println!(
+        "{prefix} iter {}/{}  time {:.3} s  energy {:.1} J  sm gear {}  mem gear {}{}",
+        r.iterations,
+        r.target_iters,
+        r.time_s,
+        r.energy_j,
+        r.sm_gear,
+        r.mem_gear,
+        if r.done { "  [done]" } else { "" }
+    );
+}
+
+fn cmd_apps(socket: &std::path::Path, args: &Args) -> anyhow::Result<()> {
+    let apps = GpoeoClient::connect(socket)?.list_apps()?;
+    let mut t = Table::new(
+        "Applications served by the daemon (ctl begin --app NAME)",
+        &["app", "suite", "archetype", "aperiodic", "default iters"],
+    );
+    for a in &apps {
+        t.rowf(&[
+            s(&a.name),
+            s(&a.suite),
+            s(&a.archetype),
+            s(if a.aperiodic { "yes" } else { "" }),
+            Cell::U(a.default_iters as usize),
+        ]);
+    }
+    crate::cli::print_table(&t, args);
+    Ok(())
+}
+
+fn cmd_policies(socket: &std::path::Path, args: &Args) -> anyhow::Result<()> {
+    let ps = GpoeoClient::connect(socket)?.list_policies()?;
+    let mut t = Table::new(
+        "Policies served by the daemon (ctl begin --policy NAME)",
+        &["name", "description", "default config"],
+    );
+    for p in &ps {
+        t.rowf(&[s(&p.name), s(&p.description), s(&p.default_config)]);
+    }
+    crate::cli::print_table(&t, args);
+    Ok(())
+}
+
+fn cmd_begin(socket: &std::path::Path, args: &Args) -> anyhow::Result<()> {
+    let app = args
+        .opt("app")
+        .ok_or_else(|| anyhow::anyhow!("begin requires --app NAME (see `ctl apps`)"))?;
+    let iters = iters_from_args(args)?;
+    let mut c = GpoeoClient::connect(socket)?;
+    let id = c.begin(app, iters, args.opt("name"), policy_from_args(args)?)?;
+    // The session survives this connection: it lives in the daemon's
+    // session table until `ctl end`/`ctl abort`.
+    println!("{id}");
+    Ok(())
+}
+
+fn cmd_status(socket: &std::path::Path, args: &Args) -> anyhow::Result<()> {
+    let id = req_session(args)?;
+    let r = GpoeoClient::connect(socket)?.status(&id)?;
+    print_report(&format!("session {id}:"), &r);
+    Ok(())
+}
+
+fn cmd_end(socket: &std::path::Path, args: &Args) -> anyhow::Result<()> {
+    let id = req_session(args)?;
+    let r = GpoeoClient::connect(socket)?.end(&id)?;
+    print_report(&format!("session {id} result:"), &r);
+    Ok(())
+}
+
+fn cmd_abort(socket: &std::path::Path, args: &Args) -> anyhow::Result<()> {
+    let id = req_session(args)?;
+    GpoeoClient::connect(socket)?.abort(&id)?;
+    println!("session {id} aborted");
+    Ok(())
+}
+
+fn cmd_watch(socket: &std::path::Path, args: &Args) -> anyhow::Result<()> {
+    let id = req_session(args)?;
+    let every = args.opt_u64("every-ticks", 200)?;
+    let max = args.opt_u64("max-events", 0)?;
+    let fin = GpoeoClient::connect(socket)?.subscribe(&id, every, max, |r| {
+        print_report(&format!("[{id}]"), r);
+    })?;
+    print_report(&format!("session {id} now:"), &fin);
+    Ok(())
+}
+
+/// begin + watch + end over one connection — the one-shot session
+/// driver (and the CI round-trip smoke).
+fn cmd_run(socket: &std::path::Path, args: &Args) -> anyhow::Result<()> {
+    let app = args
+        .opt("app")
+        .ok_or_else(|| anyhow::anyhow!("run requires --app NAME (see `ctl apps`)"))?;
+    let iters = iters_from_args(args)?;
+    let every = args.opt_u64("every-ticks", 2000)?;
+    let mut c = GpoeoClient::connect(socket)?;
+    let id = c.begin(app, iters, args.opt("name"), policy_from_args(args)?)?;
+    c.subscribe(&id, every, 0, |r| print_report(&format!("[{id}]"), r))?;
+    let r = c.end(&id)?;
+    print_report(&format!("session {id} result:"), &r);
+    Ok(())
+}
+
+/// Drive the same (app, policy, iters) through protocol v1 and the
+/// legacy line protocol and require bit-identical RESULT numbers (at
+/// legacy print precision). Exits non-zero on divergence — the CI gate
+/// for the legacy-compat guarantee.
+fn cmd_parity(socket: &std::path::Path, args: &Args) -> anyhow::Result<()> {
+    let app = args
+        .opt("app")
+        .ok_or_else(|| anyhow::anyhow!("parity requires --app NAME"))?;
+    let policy = args.opt_or("policy", "gpoeo");
+    let iters = iters_from_args(args)?;
+    let (key, _) = check_parity(socket, app, policy, iters)?;
+    println!("parity OK for ({app}, {policy}): RESULT {key} via both protocols");
+    Ok(())
+}
+
+fn cmd_shutdown(socket: &std::path::Path) -> anyhow::Result<()> {
+    GpoeoClient::connect(socket)?.shutdown()?;
+    println!("daemon shutting down ({})", socket.display());
+    Ok(())
+}

@@ -1,0 +1,28 @@
+//! The control-plane API layer (DESIGN.md §9).
+//!
+//! Protocol v1 is the daemon's outward face: typed [`Request`] /
+//! [`Response`] / [`Event`] enums with line-delimited JSON framing and a
+//! `hello` version handshake, served alongside the legacy
+//! whitespace-token protocol behind a first-byte auto-detect (`{` → v1).
+//! Three pieces live here, and *all* protocol strings with them:
+//!
+//! - [`protocol`] — the message types, their wire codec, the framing
+//!   reader and the [`PROTOCOL_VERSION`] constant (defined once, here).
+//! - [`client`] — [`GpoeoClient`], the client library every consumer
+//!   (CLI `ctl`, tests, CI smoke) uses, plus [`LegacyClient`] compat
+//!   mode and the v1-vs-legacy parity check.
+//! - [`ctl`] — the `gpoeo ctl` subcommands built on [`GpoeoClient`].
+//!
+//! The daemon side of the protocol lives in
+//! [`crate::coordinator::daemon`], which imports these types.
+
+pub mod client;
+pub mod ctl;
+pub mod protocol;
+
+pub use client::{check_parity, run_legacy_session, run_v1_session, GpoeoClient, LegacyClient};
+pub use ctl::cli_ctl;
+pub use protocol::{
+    read_frame, result_parity_key, validate_session_name, AppInfo, Event, Frame, PolicyInfo,
+    Request, Response, ServerMsg, SessionReport, MAX_LINE_BYTES, MAX_REPLY_BYTES, PROTOCOL_VERSION,
+};

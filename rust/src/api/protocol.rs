@@ -1,0 +1,951 @@
+//! Control-plane protocol v1: the typed request/response/event enums and
+//! their line-delimited JSON wire codec (DESIGN.md §9).
+//!
+//! Every message is one JSON object on one `\n`-terminated line. The
+//! first byte of a v1 connection is therefore always `{` — which is how
+//! the daemon tells v1 apart from the legacy whitespace-token protocol.
+//! Requests carry a `"kind"` discriminator; server messages are either a
+//! [`Response`] (exactly one per request) or an [`Event`]
+//! (`"kind": "event"`, emitted only inside a `subscribe` stream).
+//!
+//! Decoding is strict: unknown request kinds, unknown fields and
+//! ill-typed values all produce an error *message* (which the daemon
+//! answers as [`Response::Error`]) — never a panic, never a dropped
+//! connection. This module is the single place protocol strings live;
+//! everything else (daemon, [`GpoeoClient`](crate::api::GpoeoClient),
+//! `gpoeo ctl`, tests) goes through these types.
+
+use crate::policy::PolicySpec;
+use crate::util::json::Json;
+use std::io::BufRead;
+
+/// The protocol version this build speaks — the one `hello` negotiates
+/// and the only place the constant is defined.
+pub const PROTOCOL_VERSION: u64 = 1;
+
+/// Hard cap on one request line. Longer lines are drained and answered
+/// with a typed error instead of buffering without bound.
+pub const MAX_LINE_BYTES: usize = 64 * 1024;
+
+/// Server replies may carry whole listings (71 apps); give clients a
+/// roomier cap than the request direction.
+pub const MAX_REPLY_BYTES: usize = 1024 * 1024;
+
+/// A client → server message.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Request {
+    /// Version handshake; must be the first request on a connection.
+    Hello { version: u64 },
+    /// Start a session. `iters: None` means the app's default workload
+    /// size ([`default_iters`](crate::coordinator::default_iters) — the
+    /// same default `gpoeo run` uses). `name` proposes a session id
+    /// (server-generated when absent); `policy` overrides the
+    /// connection's default policy for this session only.
+    Begin {
+        app: String,
+        iters: Option<u64>,
+        name: Option<String>,
+        policy: Option<PolicySpec>,
+    },
+    /// Drive a slice of the session and report telemetry.
+    Status { session: String },
+    /// Drive the session to its iteration target and return the result.
+    End { session: String },
+    /// Abandon the session without driving it to completion.
+    Abort { session: String },
+    /// Set the connection's default policy for subsequent `begin`s.
+    SetPolicy { policy: PolicySpec },
+    ListApps,
+    ListPolicies,
+    /// Stream `Event::Status` telemetry while driving the session:
+    /// one event per `every_ticks` controller ticks, until the session
+    /// reaches its target (or `max_events` events, when non-zero), then
+    /// a final `Response::Status` snapshot ends the stream.
+    Subscribe {
+        session: String,
+        every_ticks: u64,
+        max_events: u64,
+    },
+    /// Stop the daemon: the listener exits and removes its socket file.
+    Shutdown,
+}
+
+/// Telemetry snapshot of one session, used by `status`, `end` results
+/// and subscription events.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SessionReport {
+    pub session: String,
+    pub iterations: u64,
+    /// The session's iteration target (0 when unknown — e.g. reports
+    /// parsed from the legacy protocol, which does not carry it).
+    pub target_iters: u64,
+    pub time_s: f64,
+    pub energy_j: f64,
+    pub sm_gear: usize,
+    pub mem_gear: usize,
+    pub done: bool,
+}
+
+/// One row of `list_apps`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct AppInfo {
+    pub name: String,
+    pub suite: String,
+    pub archetype: String,
+    pub aperiodic: bool,
+    /// The iteration count a `begin` without `iters` would run.
+    pub default_iters: u64,
+}
+
+/// One row of `list_policies` (straight from the
+/// [`PolicyRegistry`](crate::policy::PolicyRegistry) metadata).
+#[derive(Debug, Clone, PartialEq)]
+pub struct PolicyInfo {
+    pub name: String,
+    pub description: String,
+    pub default_config: String,
+}
+
+/// A server → client answer (exactly one per request).
+#[derive(Debug, Clone, PartialEq)]
+pub enum Response {
+    Hello { protocol: u64, server: String },
+    Ok { detail: String },
+    Begun { session: String },
+    Status(SessionReport),
+    Result(SessionReport),
+    Apps(Vec<AppInfo>),
+    Policies(Vec<PolicyInfo>),
+    Error { message: String },
+}
+
+/// A server → client push, emitted only inside a `subscribe` stream.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Event {
+    Status(SessionReport),
+}
+
+/// Any server → client line: a response or an event.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ServerMsg {
+    Response(Response),
+    Event(Event),
+}
+
+impl Request {
+    /// Parse one wire line. The error string is what the daemon sends
+    /// back as `Response::Error` — keep it actionable.
+    pub fn parse_line(line: &str) -> Result<Request, String> {
+        let j = Json::parse(line).map_err(|e| format!("bad request json: {e}"))?;
+        Request::from_json(&j)
+    }
+
+    pub fn from_json(j: &Json) -> Result<Request, String> {
+        let obj = j
+            .as_obj()
+            .ok_or_else(|| "request must be a json object".to_string())?;
+        let kind = j
+            .get("kind")
+            .as_str()
+            .ok_or_else(|| "request needs a string 'kind' field".to_string())?;
+        let allow = |keys: &[&str]| -> Result<(), String> {
+            for k in obj.keys() {
+                if k != "kind" && !keys.contains(&k.as_str()) {
+                    return Err(format!("unknown field '{k}' for request kind '{kind}'"));
+                }
+            }
+            Ok(())
+        };
+        match kind {
+            "hello" => {
+                allow(&["v"])?;
+                let version = j
+                    .get("v")
+                    .as_u64()
+                    .ok_or_else(|| "hello needs an integer 'v' version field".to_string())?;
+                Ok(Request::Hello { version })
+            }
+            "begin" => {
+                allow(&["app", "iters", "name", "policy"])?;
+                let app = j
+                    .get("app")
+                    .as_str()
+                    .ok_or_else(|| "begin needs a string 'app' field".to_string())?
+                    .to_string();
+                let iters = match j.get("iters") {
+                    Json::Null => None,
+                    v => Some(
+                        v.as_u64()
+                            .filter(|&n| n > 0)
+                            .ok_or_else(|| "'iters' must be a positive integer".to_string())?,
+                    ),
+                };
+                let name = match j.get("name") {
+                    Json::Null => None,
+                    v => {
+                        let s = v
+                            .as_str()
+                            .ok_or_else(|| "'name' must be a string".to_string())?;
+                        validate_session_name(s)?;
+                        Some(s.to_string())
+                    }
+                };
+                let policy = match j.get("policy") {
+                    Json::Null => None,
+                    p => Some(PolicySpec::from_json(p).map_err(|e| format!("{e:#}"))?),
+                };
+                Ok(Request::Begin {
+                    app,
+                    iters,
+                    name,
+                    policy,
+                })
+            }
+            "status" | "end" | "abort" => {
+                allow(&["session"])?;
+                let session = req_session(j)?;
+                Ok(match kind {
+                    "status" => Request::Status { session },
+                    "end" => Request::End { session },
+                    _ => Request::Abort { session },
+                })
+            }
+            "set_policy" => {
+                allow(&["policy"])?;
+                match j.get("policy") {
+                    Json::Null => Err("set_policy needs a 'policy' field".to_string()),
+                    p => Ok(Request::SetPolicy {
+                        policy: PolicySpec::from_json(p).map_err(|e| format!("{e:#}"))?,
+                    }),
+                }
+            }
+            "list_apps" => {
+                allow(&[])?;
+                Ok(Request::ListApps)
+            }
+            "list_policies" => {
+                allow(&[])?;
+                Ok(Request::ListPolicies)
+            }
+            "subscribe" => {
+                allow(&["session", "every_ticks", "max_events"])?;
+                let session = req_session(j)?;
+                let every_ticks = match j.get("every_ticks") {
+                    Json::Null => 200,
+                    v => v
+                        .as_u64()
+                        .filter(|&n| n > 0)
+                        .ok_or_else(|| "'every_ticks' must be a positive integer".to_string())?,
+                };
+                let max_events = match j.get("max_events") {
+                    Json::Null => 0,
+                    v => v
+                        .as_u64()
+                        .ok_or_else(|| "'max_events' must be a non-negative integer".to_string())?,
+                };
+                Ok(Request::Subscribe {
+                    session,
+                    every_ticks,
+                    max_events,
+                })
+            }
+            "shutdown" => {
+                allow(&[])?;
+                Ok(Request::Shutdown)
+            }
+            other => Err(format!(
+                "unknown request kind '{other}' (hello begin status end abort set_policy \
+                 list_apps list_policies subscribe shutdown)"
+            )),
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        match self {
+            Request::Hello { version } => Json::obj(vec![
+                ("kind", Json::Str("hello".into())),
+                ("v", Json::Num(*version as f64)),
+            ]),
+            Request::Begin {
+                app,
+                iters,
+                name,
+                policy,
+            } => {
+                let mut f = vec![
+                    ("kind", Json::Str("begin".into())),
+                    ("app", Json::Str(app.clone())),
+                ];
+                if let Some(n) = iters {
+                    f.push(("iters", Json::Num(*n as f64)));
+                }
+                if let Some(n) = name {
+                    f.push(("name", Json::Str(n.clone())));
+                }
+                if let Some(p) = policy {
+                    f.push(("policy", p.to_json()));
+                }
+                Json::obj(f)
+            }
+            Request::Status { session } => kind_session("status", session),
+            Request::End { session } => kind_session("end", session),
+            Request::Abort { session } => kind_session("abort", session),
+            Request::SetPolicy { policy } => Json::obj(vec![
+                ("kind", Json::Str("set_policy".into())),
+                ("policy", policy.to_json()),
+            ]),
+            Request::ListApps => Json::obj(vec![("kind", Json::Str("list_apps".into()))]),
+            Request::ListPolicies => Json::obj(vec![("kind", Json::Str("list_policies".into()))]),
+            Request::Subscribe {
+                session,
+                every_ticks,
+                max_events,
+            } => Json::obj(vec![
+                ("kind", Json::Str("subscribe".into())),
+                ("session", Json::Str(session.clone())),
+                ("every_ticks", Json::Num(*every_ticks as f64)),
+                ("max_events", Json::Num(*max_events as f64)),
+            ]),
+            Request::Shutdown => Json::obj(vec![("kind", Json::Str("shutdown".into()))]),
+        }
+    }
+}
+
+fn kind_session(kind: &str, session: &str) -> Json {
+    Json::obj(vec![
+        ("kind", Json::Str(kind.to_string())),
+        ("session", Json::Str(session.to_string())),
+    ])
+}
+
+fn req_session(j: &Json) -> Result<String, String> {
+    j.get("session")
+        .as_str()
+        .ok_or_else(|| "missing string 'session' field".to_string())
+        .map(|s| s.to_string())
+}
+
+/// Session names share an id space with server-generated `s<N>` ids;
+/// keep them short, printable and shell-friendly.
+pub fn validate_session_name(s: &str) -> Result<(), String> {
+    let ok = !s.is_empty()
+        && s.len() <= 64
+        && s.chars()
+            .all(|c| c.is_ascii_alphanumeric() || matches!(c, '-' | '_' | '.'));
+    if ok {
+        Ok(())
+    } else {
+        Err(format!(
+            "invalid session name '{s}' (1-64 chars from [A-Za-z0-9._-])"
+        ))
+    }
+}
+
+impl Response {
+    /// Short discriminator, for "unexpected reply" diagnostics.
+    pub fn kind(&self) -> &'static str {
+        match self {
+            Response::Hello { .. } => "hello",
+            Response::Ok { .. } => "ok",
+            Response::Begun { .. } => "begun",
+            Response::Status(_) => "status",
+            Response::Result(_) => "result",
+            Response::Apps(_) => "apps",
+            Response::Policies(_) => "policies",
+            Response::Error { .. } => "error",
+        }
+    }
+
+    pub fn error(message: impl Into<String>) -> Response {
+        Response::Error {
+            message: message.into(),
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        match self {
+            Response::Hello { protocol, server } => Json::obj(vec![
+                ("kind", Json::Str("hello".into())),
+                ("protocol", Json::Num(*protocol as f64)),
+                ("server", Json::Str(server.clone())),
+            ]),
+            Response::Ok { detail } => Json::obj(vec![
+                ("kind", Json::Str("ok".into())),
+                ("detail", Json::Str(detail.clone())),
+            ]),
+            Response::Begun { session } => Json::obj(vec![
+                ("kind", Json::Str("begun".into())),
+                ("session", Json::Str(session.clone())),
+            ]),
+            Response::Status(r) => report_json("status", r),
+            Response::Result(r) => report_json("result", r),
+            Response::Apps(apps) => Json::obj(vec![
+                ("kind", Json::Str("apps".into())),
+                (
+                    "apps",
+                    Json::Arr(
+                        apps.iter()
+                            .map(|a| {
+                                Json::obj(vec![
+                                    ("name", Json::Str(a.name.clone())),
+                                    ("suite", Json::Str(a.suite.clone())),
+                                    ("archetype", Json::Str(a.archetype.clone())),
+                                    ("aperiodic", Json::Bool(a.aperiodic)),
+                                    ("default_iters", Json::Num(a.default_iters as f64)),
+                                ])
+                            })
+                            .collect(),
+                    ),
+                ),
+            ]),
+            Response::Policies(ps) => Json::obj(vec![
+                ("kind", Json::Str("policies".into())),
+                (
+                    "policies",
+                    Json::Arr(
+                        ps.iter()
+                            .map(|p| {
+                                Json::obj(vec![
+                                    ("name", Json::Str(p.name.clone())),
+                                    ("description", Json::Str(p.description.clone())),
+                                    ("default_config", Json::Str(p.default_config.clone())),
+                                ])
+                            })
+                            .collect(),
+                    ),
+                ),
+            ]),
+            Response::Error { message } => Json::obj(vec![
+                ("kind", Json::Str("error".into())),
+                ("message", Json::Str(message.clone())),
+            ]),
+        }
+    }
+
+    pub fn from_json(j: &Json) -> Result<Response, String> {
+        let kind = j
+            .get("kind")
+            .as_str()
+            .ok_or_else(|| "server message needs a string 'kind' field".to_string())?;
+        let bad = |what: &str| format!("malformed '{kind}' reply: {what}");
+        match kind {
+            "hello" => Ok(Response::Hello {
+                protocol: j
+                    .get("protocol")
+                    .as_u64()
+                    .ok_or_else(|| bad("missing 'protocol'"))?,
+                server: j
+                    .get("server")
+                    .as_str()
+                    .ok_or_else(|| bad("missing 'server'"))?
+                    .to_string(),
+            }),
+            "ok" => Ok(Response::Ok {
+                detail: j.get("detail").as_str().unwrap_or("").to_string(),
+            }),
+            "begun" => Ok(Response::Begun {
+                session: j
+                    .get("session")
+                    .as_str()
+                    .ok_or_else(|| bad("missing 'session'"))?
+                    .to_string(),
+            }),
+            "status" => Ok(Response::Status(report_from_json(j)?)),
+            "result" => Ok(Response::Result(report_from_json(j)?)),
+            "apps" => {
+                let arr = j.get("apps").as_arr().ok_or_else(|| bad("missing 'apps'"))?;
+                let apps = arr
+                    .iter()
+                    .map(|a| -> Result<AppInfo, String> {
+                        Ok(AppInfo {
+                            name: req_str(a, "name")?,
+                            suite: req_str(a, "suite")?,
+                            archetype: req_str(a, "archetype")?,
+                            aperiodic: a
+                                .get("aperiodic")
+                                .as_bool()
+                                .ok_or_else(|| "missing 'aperiodic'".to_string())?,
+                            default_iters: a
+                                .get("default_iters")
+                                .as_u64()
+                                .ok_or_else(|| "missing 'default_iters'".to_string())?,
+                        })
+                    })
+                    .collect::<Result<Vec<_>, _>>()
+                    .map_err(|e| bad(&e))?;
+                Ok(Response::Apps(apps))
+            }
+            "policies" => {
+                let arr = j
+                    .get("policies")
+                    .as_arr()
+                    .ok_or_else(|| bad("missing 'policies'"))?;
+                let ps = arr
+                    .iter()
+                    .map(|p| -> Result<PolicyInfo, String> {
+                        Ok(PolicyInfo {
+                            name: req_str(p, "name")?,
+                            description: req_str(p, "description")?,
+                            default_config: req_str(p, "default_config")?,
+                        })
+                    })
+                    .collect::<Result<Vec<_>, _>>()
+                    .map_err(|e| bad(&e))?;
+                Ok(Response::Policies(ps))
+            }
+            "error" => Ok(Response::Error {
+                message: j
+                    .get("message")
+                    .as_str()
+                    .ok_or_else(|| bad("missing 'message'"))?
+                    .to_string(),
+            }),
+            other => Err(format!("unknown server reply kind '{other}'")),
+        }
+    }
+}
+
+fn req_str(j: &Json, key: &str) -> Result<String, String> {
+    j.get(key)
+        .as_str()
+        .map(|s| s.to_string())
+        .ok_or_else(|| format!("missing '{key}'"))
+}
+
+fn report_json(kind: &str, r: &SessionReport) -> Json {
+    Json::obj(vec![
+        ("kind", Json::Str(kind.to_string())),
+        ("session", Json::Str(r.session.clone())),
+        ("iterations", Json::Num(r.iterations as f64)),
+        ("target_iters", Json::Num(r.target_iters as f64)),
+        ("time_s", Json::Num(r.time_s)),
+        ("energy_j", Json::Num(r.energy_j)),
+        ("sm_gear", Json::Num(r.sm_gear as f64)),
+        ("mem_gear", Json::Num(r.mem_gear as f64)),
+        ("done", Json::Bool(r.done)),
+    ])
+}
+
+fn report_from_json(j: &Json) -> Result<SessionReport, String> {
+    let num = |key: &str| -> Result<u64, String> {
+        j.get(key)
+            .as_u64()
+            .ok_or_else(|| format!("malformed report: missing '{key}'"))
+    };
+    let f = |key: &str| -> Result<f64, String> {
+        j.get(key)
+            .as_f64()
+            .ok_or_else(|| format!("malformed report: missing '{key}'"))
+    };
+    Ok(SessionReport {
+        session: j.get("session").as_str().unwrap_or("").to_string(),
+        iterations: num("iterations")?,
+        target_iters: num("target_iters")?,
+        time_s: f("time_s")?,
+        energy_j: f("energy_j")?,
+        sm_gear: num("sm_gear")? as usize,
+        mem_gear: num("mem_gear")? as usize,
+        done: j
+            .get("done")
+            .as_bool()
+            .ok_or_else(|| "malformed report: missing 'done'".to_string())?,
+    })
+}
+
+impl Event {
+    pub fn to_json(&self) -> Json {
+        match self {
+            Event::Status(r) => {
+                let mut j = report_json("event", r);
+                if let Json::Obj(o) = &mut j {
+                    o.insert("event".to_string(), Json::Str("status".into()));
+                }
+                j
+            }
+        }
+    }
+
+    pub fn from_json(j: &Json) -> Result<Event, String> {
+        match j.get("event").as_str() {
+            Some("status") => Ok(Event::Status(report_from_json(j)?)),
+            Some(other) => Err(format!("unknown event '{other}'")),
+            None => Err("event message needs a string 'event' field".to_string()),
+        }
+    }
+}
+
+impl ServerMsg {
+    pub fn parse_line(line: &str) -> Result<ServerMsg, String> {
+        let j = Json::parse(line).map_err(|e| format!("bad server json: {e}"))?;
+        if j.get("kind").as_str() == Some("event") {
+            Event::from_json(&j).map(ServerMsg::Event)
+        } else {
+            Response::from_json(&j).map(ServerMsg::Response)
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        match self {
+            ServerMsg::Response(r) => r.to_json(),
+            ServerMsg::Event(e) => e.to_json(),
+        }
+    }
+
+    /// Serialize as one wire line (newline included).
+    pub fn to_line(&self) -> String {
+        let mut s = self.to_json().to_string();
+        s.push('\n');
+        s
+    }
+}
+
+/// The legacy `RESULT`/comparison key: the five numbers of the legacy
+/// `RESULT` line at exactly its print precision. Two reports with equal
+/// keys produced the same result as far as the legacy protocol can
+/// express — the parity contract between v1 and legacy sessions.
+pub fn result_parity_key(r: &SessionReport) -> String {
+    format!(
+        "{:.1} {:.3} {} {} {}",
+        r.energy_j, r.time_s, r.iterations, r.sm_gear, r.mem_gear
+    )
+}
+
+/// One framed line read: the payload, or the reasons there isn't one.
+#[derive(Debug, PartialEq)]
+pub enum Frame {
+    Line(String),
+    /// The line exceeded the byte cap; it has been drained through the
+    /// trailing newline so the connection can keep going.
+    Oversized,
+    Eof,
+}
+
+/// Read one `\n`-terminated line of at most `max` bytes (newline
+/// excluded). Never allocates beyond `max`; an over-long line is drained
+/// to its newline and reported as [`Frame::Oversized`] so the caller can
+/// answer a typed error and continue the connection.
+pub fn read_frame(reader: &mut impl BufRead, max: usize) -> std::io::Result<Frame> {
+    let mut buf: Vec<u8> = Vec::new();
+    loop {
+        let chunk = reader.fill_buf()?;
+        if chunk.is_empty() {
+            return Ok(if buf.is_empty() {
+                Frame::Eof
+            } else {
+                Frame::Line(String::from_utf8_lossy(&buf).into_owned())
+            });
+        }
+        match chunk.iter().position(|&b| b == b'\n') {
+            Some(i) => {
+                if buf.len() + i > max {
+                    reader.consume(i + 1);
+                    return Ok(Frame::Oversized);
+                }
+                buf.extend_from_slice(&chunk[..i]);
+                reader.consume(i + 1);
+                return Ok(Frame::Line(String::from_utf8_lossy(&buf).into_owned()));
+            }
+            None => {
+                let len = chunk.len();
+                if buf.len() + len > max {
+                    reader.consume(len);
+                    drain_to_newline(reader)?;
+                    return Ok(Frame::Oversized);
+                }
+                buf.extend_from_slice(chunk);
+                reader.consume(len);
+            }
+        }
+    }
+}
+
+fn drain_to_newline(reader: &mut impl BufRead) -> std::io::Result<()> {
+    loop {
+        let chunk = reader.fill_buf()?;
+        if chunk.is_empty() {
+            return Ok(());
+        }
+        match chunk.iter().position(|&b| b == b'\n') {
+            Some(i) => {
+                reader.consume(i + 1);
+                return Ok(());
+            }
+            None => {
+                let len = chunk.len();
+                reader.consume(len);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::policy::PolicyConfig;
+    use crate::search::Objective;
+
+    fn sample_report() -> SessionReport {
+        SessionReport {
+            session: "s7".into(),
+            iterations: 123,
+            target_iters: 300,
+            time_s: 45.675,
+            energy_j: 10987.25,
+            sm_gear: 92,
+            mem_gear: 4,
+            done: false,
+        }
+    }
+
+    fn all_requests() -> Vec<Request> {
+        let mut cfg = PolicyConfig::new(Objective::Ed2p);
+        cfg.opts.insert("switch-cost".into(), "0.5".into());
+        vec![
+            Request::Hello {
+                version: PROTOCOL_VERSION,
+            },
+            Request::Begin {
+                app: "AI_TS".into(),
+                iters: Some(40),
+                name: Some("train-1".into()),
+                policy: Some(PolicySpec::new("bandit", cfg)),
+            },
+            Request::Begin {
+                app: "AI_FE".into(),
+                iters: None,
+                name: None,
+                policy: None,
+            },
+            Request::Status {
+                session: "s1".into(),
+            },
+            Request::End {
+                session: "s1".into(),
+            },
+            Request::Abort {
+                session: "train-1".into(),
+            },
+            Request::SetPolicy {
+                policy: PolicySpec::registered("powercap"),
+            },
+            Request::ListApps,
+            Request::ListPolicies,
+            Request::Subscribe {
+                session: "s1".into(),
+                every_ticks: 100,
+                max_events: 5,
+            },
+            Request::Shutdown,
+        ]
+    }
+
+    #[test]
+    fn requests_roundtrip_through_the_wire() {
+        for req in all_requests() {
+            let line = req.to_json().to_string();
+            assert!(line.starts_with('{'), "v1 frames must start with '{{'");
+            let back = Request::parse_line(&line).unwrap_or_else(|e| panic!("{line}: {e}"));
+            assert_eq!(back, req, "{line}");
+        }
+    }
+
+    #[test]
+    fn server_messages_roundtrip_through_the_wire() {
+        let msgs = vec![
+            ServerMsg::Response(Response::Hello {
+                protocol: PROTOCOL_VERSION,
+                server: "gpoeo 0.2.0".into(),
+            }),
+            ServerMsg::Response(Response::Ok {
+                detail: "policy bandit".into(),
+            }),
+            ServerMsg::Response(Response::Begun {
+                session: "s1".into(),
+            }),
+            ServerMsg::Response(Response::Status(sample_report())),
+            ServerMsg::Response(Response::Result(SessionReport {
+                done: true,
+                ..sample_report()
+            })),
+            ServerMsg::Response(Response::Apps(vec![AppInfo {
+                name: "AI_TS".into(),
+                suite: "aibench".into(),
+                archetype: "transformer".into(),
+                aperiodic: false,
+                default_iters: 300,
+            }])),
+            ServerMsg::Response(Response::Policies(vec![PolicyInfo {
+                name: "bandit".into(),
+                description: "switching-aware".into(),
+                default_config: "switch-cost=0".into(),
+            }])),
+            ServerMsg::Response(Response::error("no such session")),
+            ServerMsg::Event(Event::Status(sample_report())),
+        ];
+        for msg in msgs {
+            let line = msg.to_line();
+            let back = ServerMsg::parse_line(line.trim_end()).unwrap();
+            assert_eq!(back, msg, "{line}");
+        }
+    }
+
+    #[test]
+    fn float_telemetry_roundtrips_bit_exactly() {
+        let r = SessionReport {
+            time_s: 1.0 / 3.0,
+            energy_j: 98765.432109876,
+            ..sample_report()
+        };
+        let line = ServerMsg::Response(Response::Status(r.clone())).to_line();
+        match ServerMsg::parse_line(line.trim_end()).unwrap() {
+            ServerMsg::Response(Response::Status(back)) => {
+                assert_eq!(back.time_s.to_bits(), r.time_s.to_bits());
+                assert_eq!(back.energy_j.to_bits(), r.energy_j.to_bits());
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn malformed_requests_answer_typed_errors_not_panics() {
+        let cases: Vec<(String, &str)> = vec![
+            // Truncated json (every prefix of a valid request, below).
+            ("[1, 2]".into(), "must be a json object"),
+            ("null".into(), "must be a json object"),
+            ("{}".into(), "kind"),
+            (
+                Json::obj(vec![("kind", Json::Str("warp".into()))]).to_string(),
+                "unknown request kind 'warp'",
+            ),
+            (
+                Json::obj(vec![
+                    ("kind", Json::Str("status".into())),
+                    ("session", Json::Str("s1".into())),
+                    ("color", Json::Str("red".into())),
+                ])
+                .to_string(),
+                "unknown field 'color'",
+            ),
+            (
+                Json::obj(vec![("kind", Json::Str("status".into()))]).to_string(),
+                "session",
+            ),
+            (
+                Json::obj(vec![("kind", Json::Str("hello".into()))]).to_string(),
+                "'v'",
+            ),
+            (
+                Json::obj(vec![
+                    ("kind", Json::Str("begin".into())),
+                    ("app", Json::Str("AI_TS".into())),
+                    ("iters", Json::Num(0.0)),
+                ])
+                .to_string(),
+                "'iters'",
+            ),
+            (
+                Json::obj(vec![
+                    ("kind", Json::Str("begin".into())),
+                    ("app", Json::Str("AI_TS".into())),
+                    ("iters", Json::Num(2.5)),
+                ])
+                .to_string(),
+                "'iters'",
+            ),
+            (
+                Json::obj(vec![
+                    ("kind", Json::Str("begin".into())),
+                    ("app", Json::Str("AI_TS".into())),
+                    ("name", Json::Str("bad name!".into())),
+                ])
+                .to_string(),
+                "invalid session name",
+            ),
+            (
+                Json::obj(vec![
+                    ("kind", Json::Str("subscribe".into())),
+                    ("session", Json::Str("s1".into())),
+                    ("every_ticks", Json::Num(0.0)),
+                ])
+                .to_string(),
+                "every_ticks",
+            ),
+        ];
+        for (line, want) in cases {
+            let err = Request::parse_line(&line).unwrap_err();
+            assert!(err.contains(want), "{line} -> {err}");
+        }
+    }
+
+    #[test]
+    fn every_truncation_of_a_valid_request_is_a_clean_error() {
+        for req in all_requests() {
+            let line = req.to_json().to_string();
+            for cut in 0..line.len() {
+                if !line.is_char_boundary(cut) {
+                    continue;
+                }
+                // Must never panic; a prefix that still parses (e.g. cut
+                // at the very end) is fine, anything else is Err.
+                let _ = Request::parse_line(&line[..cut]);
+            }
+        }
+    }
+
+    #[test]
+    fn session_name_validation() {
+        for good in ["s1", "train-1", "a.b_c", "X"] {
+            assert!(validate_session_name(good).is_ok(), "{good}");
+        }
+        let long = "x".repeat(65);
+        for bad in ["", "has space", "semi;colon", "new\nline", long.as_str()] {
+            assert!(validate_session_name(bad).is_err(), "{bad:?}");
+        }
+    }
+
+    #[test]
+    fn read_frame_caps_and_recovers() {
+        use std::io::Cursor;
+        let mut data = Vec::new();
+        data.extend_from_slice(b"short line\n");
+        data.extend_from_slice(&vec![b'x'; 200]);
+        data.push(b'\n');
+        data.extend_from_slice(b"after\n");
+        data.extend_from_slice(b"no newline at eof");
+        let mut r = std::io::BufReader::with_capacity(16, Cursor::new(data));
+        assert_eq!(read_frame(&mut r, 100).unwrap(), Frame::Line("short line".into()));
+        assert_eq!(read_frame(&mut r, 100).unwrap(), Frame::Oversized);
+        assert_eq!(read_frame(&mut r, 100).unwrap(), Frame::Line("after".into()));
+        assert_eq!(
+            read_frame(&mut r, 100).unwrap(),
+            Frame::Line("no newline at eof".into())
+        );
+        assert_eq!(read_frame(&mut r, 100).unwrap(), Frame::Eof);
+    }
+
+    #[test]
+    fn read_frame_exact_boundary() {
+        use std::io::Cursor;
+        let line = "a".repeat(100);
+        let mut data = line.clone().into_bytes();
+        data.push(b'\n');
+        let mut r = std::io::BufReader::with_capacity(8, Cursor::new(data.clone()));
+        assert_eq!(read_frame(&mut r, 100).unwrap(), Frame::Line(line));
+        let mut r = std::io::BufReader::with_capacity(8, Cursor::new(data));
+        assert_eq!(read_frame(&mut r, 99).unwrap(), Frame::Oversized);
+        assert_eq!(read_frame(&mut r, 99).unwrap(), Frame::Eof);
+    }
+
+    #[test]
+    fn parity_key_matches_legacy_result_precision() {
+        let r = SessionReport {
+            energy_j: 10987.25,
+            time_s: 45.675,
+            iterations: 123,
+            sm_gear: 92,
+            mem_gear: 4,
+            ..sample_report()
+        };
+        assert_eq!(result_parity_key(&r), "10987.2 45.675 123 92 4");
+    }
+}

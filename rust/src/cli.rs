@@ -20,6 +20,7 @@ pub fn dispatch(args: &Args) -> anyhow::Result<()> {
         Some("sweep") => crate::coordinator::cli_sweep(args),
         Some("experiment") => crate::experiments::cli_experiment(args),
         Some("daemon") => crate::coordinator::cli_daemon(args),
+        Some("ctl") => crate::api::cli_ctl(args),
         Some(other) => anyhow::bail!("unknown subcommand '{other}'; see --help"),
         None => {
             print_help();
@@ -61,8 +62,24 @@ SUBCOMMANDS:
                                 --min-speedup X, fails on any
                                 arena↔legacy divergence)
   daemon [--socket PATH]       Begin/End API server (micro-intrusive
-                               mode; --workers N fleet threads;
-                               per-connection POLICY <name> selection)
+                               mode; --workers N fleet threads). Speaks
+                               control-plane protocol v1 (line-delimited
+                               JSON + hello handshake, named concurrent
+                               sessions, set_policy with inline config,
+                               list_apps/list_policies, subscribe
+                               streaming, shutdown) and the legacy line
+                               protocol behind a first-byte auto-detect
+  ctl <verb> [--socket PATH]   control-plane client (GpoeoClient):
+                                 apps | policies      introspection
+                                 begin --app A [--iters N] [--name S]
+                                       [--policy P ...]  -> session id
+                                 status|end|abort --session ID
+                                 watch --session ID [--every-ticks N]
+                                       [--max-events N]  streamed events
+                                 run --app A [...]    begin+watch+end
+                                 parity --app A [...] v1-vs-legacy
+                                                      RESULT parity gate
+                                 shutdown             stop the daemon
 
 COMMON OPTIONS:
   --artifacts DIR              AOT artifact directory (default: artifacts)

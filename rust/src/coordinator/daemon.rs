@@ -1,46 +1,71 @@
-//! Begin/End daemon — the micro-intrusive API of §2.2.2/§4.2.
+//! The daemon: control-plane API v1 + the legacy Begin/End line protocol
+//! (§2.2.2/§4.2 of the paper; DESIGN.md §6 and §9).
 //!
-//! The paper's deployment model: a training script links a two-call API
-//! (`Begin` at the start of the training region, `End` at the end); a
-//! separate optimizer process owns the GPU clocks. Here the daemon owns a
-//! simulated device per session and drives the GPOEO controller, so an
-//! external client can exercise the exact same contract over a Unix
-//! socket with a line protocol:
+//! The paper's deployment model is a two-call micro-intrusive API
+//! (`Begin` at the start of the training region, `End` at the end) with
+//! a separate optimizer process owning the GPU clocks. This daemon is
+//! that optimizer process over a Unix socket, serving two protocols on
+//! one listener with a per-connection auto-detect on the first byte:
 //!
-//! ```text
-//! -> POLICY <name>     (optional, before BEGIN; default: gpoeo)
-//! <- OK policy <name>
-//! -> BEGIN <app-name> [iters]
-//! <- OK session started
-//! -> STATUS            (any time)
-//! <- STATUS <iter> <time_s> <energy_j> <sm_gear> <mem_gear>
-//! -> END
-//! <- RESULT <energy_j> <time_s> <iterations> <sm_gear> <mem_gear>
-//! ```
+//! - `{` → **protocol v1** (line-delimited JSON, `hello` handshake):
+//!   typed requests from [`crate::api`], multiple concurrent *named*
+//!   sessions (daemon-global table — `begin` returns a session id,
+//!   `status`/`end`/`abort`/`subscribe` take one, any connection can
+//!   address any session), per-`begin` policy selection with inline
+//!   config resolved through [`PolicyRegistry`], introspection
+//!   (`list_apps`/`list_policies`), streamed `subscribe` telemetry, and
+//!   a `shutdown` request that exits the accept loop and removes the
+//!   socket file.
+//! - anything else → the **legacy protocol**, unchanged: one session per
+//!   connection, `POLICY <name>` / `BEGIN <app> [iters]` / `STATUS` /
+//!   `END` / `QUIT`, answers `OK`/`STATUS`/`RESULT`/`ERR` lines.
 //!
-//! One session at a time per connection. `POLICY` selects any policy
-//! registered in [`crate::policy::PolicyRegistry`] for the *next*
-//! session; an unregistered name answers `ERR unknown policy ...`. A
-//! malformed `BEGIN` iteration count (non-numeric, zero, overflow)
-//! answers `ERR bad iteration count ...` instead of silently running
-//! the default.
-//! Sessions from all connections are served by a shared [`Fleet`]: each
-//! fleet worker owns one [`Predictor`](crate::model::Predictor) (the
-//! PJRT HLO executables compile once per worker, not once per
-//! connection), and concurrent clients are spread across the pool.
-//! Every failure path answers with an `ERR <reason>` line — a client
-//! never hangs on a silent close.
+//! Both protocols resolve `BEGIN` without an iteration count to
+//! [`default_iters`] — the same default `gpoeo run` uses — and both are
+//! served by one shared [`Fleet`], so a v1 and a legacy session with the
+//! same (app, policy, iters) produce bit-identical results (the parity
+//! contract, tested in `tests/api_daemon.rs` and gated in CI).
+//!
+//! Every failure path answers a typed `Response::Error` (v1) or an
+//! `ERR <reason>` line (legacy) — a client never hangs on a silent
+//! close, and a malformed line never kills the connection loop. A failed
+//! `accept()` is logged and skipped, never fatal to the daemon.
 
-use crate::coordinator::{Fleet, SessionHandle};
+use crate::api::{
+    read_frame, AppInfo, Event, Frame, PolicyInfo, Request, Response, ServerMsg, SessionReport,
+    MAX_LINE_BYTES, PROTOCOL_VERSION,
+};
+use crate::coordinator::{default_iters, Fleet, SessionHandle, SessionStatus};
 use crate::policy::{PolicyRegistry, PolicySpec};
-use crate::sim::{find_app, Spec};
+use crate::sim::{find_app, make_app, AppParams, Spec};
+use std::collections::HashMap;
 use std::io::{BufRead, BufReader, Write};
 use std::os::unix::net::{UnixListener, UnixStream};
-use std::path::Path;
-use std::sync::Arc;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Controller ticks driven per `STATUS`/`status` poll.
+const STATUS_TICKS: u64 = 200;
 
 pub struct Daemon {
     fleet: Arc<Fleet>,
+    shared: Arc<Shared>,
+}
+
+/// Daemon-global state shared by every connection: the named-session
+/// table and the shutdown latch.
+struct Shared {
+    sessions: Mutex<HashMap<String, Arc<SessionEntry>>>,
+    next_id: AtomicU64,
+    shutdown: AtomicBool,
+}
+
+/// One v1 session. The handle moves out (`None`) exactly once, when an
+/// `end`/`abort` claims it — concurrent claims lose cleanly instead of
+/// double-ending.
+struct SessionEntry {
+    handle: Mutex<Option<SessionHandle>>,
 }
 
 impl Daemon {
@@ -48,44 +73,450 @@ impl Daemon {
     pub fn new(spec: Arc<Spec>, workers: usize) -> Daemon {
         Daemon {
             fleet: Arc::new(Fleet::new(spec, workers)),
+            shared: Arc::new(Shared {
+                sessions: Mutex::new(HashMap::new()),
+                next_id: AtomicU64::new(1),
+                shutdown: AtomicBool::new(false),
+            }),
         }
     }
 
-    /// Serve forever on a Unix socket (one lightweight thread per
-    /// connection; the heavy lifting happens on the fleet workers).
+    /// Serve on a Unix socket (one lightweight thread per connection;
+    /// the heavy lifting happens on the fleet workers) until a v1
+    /// `shutdown` request arrives. The socket file is removed on
+    /// graceful exit, so restarts never depend on stale-socket cleanup.
     pub fn serve(&self, socket_path: &Path) -> anyhow::Result<()> {
         let _ = std::fs::remove_file(socket_path);
         let listener = UnixListener::bind(socket_path)?;
         eprintln!(
-            "gpoeo daemon listening on {} ({} fleet workers)",
+            "gpoeo daemon listening on {} ({} fleet workers, protocol v{PROTOCOL_VERSION} + legacy)",
             socket_path.display(),
             self.fleet.num_workers()
         );
         for stream in listener.incoming() {
-            let stream = stream?;
+            if self.shared.shutdown.load(Ordering::SeqCst) {
+                break;
+            }
+            // A transient accept failure (EMFILE, ECONNABORTED, ...)
+            // must not take the whole daemon down with it.
+            let Some(stream) = accept_stream(stream) else {
+                continue;
+            };
             let fleet = self.fleet.clone();
+            let shared = self.shared.clone();
+            let path = socket_path.to_path_buf();
             std::thread::spawn(move || {
-                if let Err(e) = handle_connection(stream, fleet) {
+                if let Err(e) = handle_connection(stream, fleet, shared, path) {
                     eprintln!("daemon connection error: {e}");
                 }
             });
         }
+        let _ = std::fs::remove_file(socket_path);
         Ok(())
     }
 }
 
-/// The optional iteration-count argument of `BEGIN <app> [iters]`:
-/// absent means the default, anything present must parse as a positive
-/// `u64`. Non-numeric, zero, negative and overflowing counts all answer
-/// `ERR bad iteration count ...` — the old behavior silently ran 300
-/// iterations, so a client typo'ing `BEGIN app 1e6` got a result for a
-/// workload it never asked for.
-fn parse_iters(tok: Option<&str>) -> Result<u64, String> {
+/// The accept-loop body: a successful accept yields the stream; a failed
+/// one is logged and skipped (`None`) after a short sleep, so a
+/// *persistent* failure (EMFILE until fds free up) degrades to a bounded
+/// retry cadence instead of a 100%-CPU log-spam spin. Extracted so the
+/// never-kill-the-daemon contract is unit-testable without a listener.
+fn accept_stream(r: std::io::Result<UnixStream>) -> Option<UnixStream> {
+    match r {
+        Ok(s) => Some(s),
+        Err(e) => {
+            eprintln!("daemon accept error: {e} (continuing to serve)");
+            std::thread::sleep(std::time::Duration::from_millis(50));
+            None
+        }
+    }
+}
+
+/// The optional iteration count of a `begin`: explicit wins, absent
+/// means the app's default workload size — the *same* default `gpoeo
+/// run` uses, so daemon and CLI never disagree on what "run this app"
+/// means. (The legacy daemon hardcoded 300 here.)
+fn resolve_iters(requested: Option<u64>, app: &AppParams) -> u64 {
+    requested.unwrap_or_else(|| default_iters(app))
+}
+
+/// Sniff the first byte to pick the protocol: v1 frames are JSON objects
+/// so they always start with `{`; no legacy command does.
+fn handle_connection(
+    stream: UnixStream,
+    fleet: Arc<Fleet>,
+    shared: Arc<Shared>,
+    socket_path: PathBuf,
+) -> anyhow::Result<()> {
+    let writer = stream.try_clone()?;
+    let mut reader = BufReader::new(stream);
+    let first = reader.fill_buf()?.first().copied();
+    match first {
+        None => Ok(()), // connected and left without a byte
+        Some(b'{') => handle_v1(reader, writer, &fleet, &shared, &socket_path),
+        Some(_) => handle_legacy(reader, writer, &fleet),
+    }
+}
+
+// ---------------------------------------------------------------------
+// Protocol v1.
+// ---------------------------------------------------------------------
+
+fn send_msg(writer: &mut UnixStream, msg: &ServerMsg) -> std::io::Result<()> {
+    writer.write_all(msg.to_line().as_bytes())?;
+    writer.flush()
+}
+
+fn send_response(writer: &mut UnixStream, r: Response) -> std::io::Result<()> {
+    send_msg(writer, &ServerMsg::Response(r))
+}
+
+fn report(id: &str, st: SessionStatus) -> SessionReport {
+    SessionReport {
+        session: id.to_string(),
+        iterations: st.iterations,
+        target_iters: st.target_iters,
+        time_s: st.time_s,
+        energy_j: st.energy_j,
+        sm_gear: st.sm_gear,
+        mem_gear: st.mem_gear,
+        done: st.done,
+    }
+}
+
+fn handle_v1(
+    mut reader: BufReader<UnixStream>,
+    mut writer: UnixStream,
+    fleet: &Arc<Fleet>,
+    shared: &Arc<Shared>,
+    socket_path: &Path,
+) -> anyhow::Result<()> {
+    // The connection's default policy for `begin`s without an inline one.
+    let mut default_policy = PolicySpec::registered("gpoeo");
+    let mut hello_done = false;
+
+    loop {
+        let line = match read_frame(&mut reader, MAX_LINE_BYTES)? {
+            Frame::Eof => break,
+            Frame::Oversized => {
+                send_response(
+                    &mut writer,
+                    Response::error(format!("request line exceeds {MAX_LINE_BYTES} bytes")),
+                )?;
+                continue;
+            }
+            Frame::Line(l) => l,
+        };
+        if line.trim().is_empty() {
+            continue;
+        }
+        let req = match Request::parse_line(&line) {
+            Ok(r) => r,
+            Err(msg) => {
+                send_response(&mut writer, Response::error(msg))?;
+                continue;
+            }
+        };
+        if !hello_done && !matches!(req, Request::Hello { .. }) {
+            send_response(
+                &mut writer,
+                Response::error(format!(
+                    "handshake required: send {{\"kind\":\"hello\",\"v\":{PROTOCOL_VERSION}}} first"
+                )),
+            )?;
+            continue;
+        }
+        match req {
+            Request::Hello { version } => {
+                if version == 0 || version > PROTOCOL_VERSION {
+                    send_response(
+                        &mut writer,
+                        Response::error(format!(
+                            "unsupported protocol version {version} (this server speaks v{PROTOCOL_VERSION})"
+                        )),
+                    )?;
+                } else {
+                    hello_done = true;
+                    send_response(
+                        &mut writer,
+                        Response::Hello {
+                            protocol: PROTOCOL_VERSION,
+                            server: format!("gpoeo {}", env!("CARGO_PKG_VERSION")),
+                        },
+                    )?;
+                }
+            }
+            Request::Begin {
+                app,
+                iters,
+                name,
+                policy,
+            } => {
+                let spec = policy.unwrap_or_else(|| default_policy.clone());
+                let r = begin_session(fleet, shared, &app, iters, name, spec);
+                send_response(
+                    &mut writer,
+                    match r {
+                        Ok(session) => Response::Begun { session },
+                        Err(e) => Response::error(format!("{e:#}")),
+                    },
+                )?;
+            }
+            Request::Status { session } => {
+                let r = with_session(shared, &session, |h| h.step(STATUS_TICKS));
+                send_response(
+                    &mut writer,
+                    match r {
+                        Ok(st) => Response::Status(report(&session, st)),
+                        Err(e) => Response::error(format!("{e:#}")),
+                    },
+                )?;
+            }
+            Request::End { session } => {
+                // Claim the handle, then run to completion *outside* any
+                // lock: end() blocks until the target is reached, and
+                // other sessions (and other connections) must keep
+                // being served meanwhile.
+                let r = claim_session(shared, &session).and_then(|h| {
+                    let st = h.end();
+                    shared.sessions.lock().unwrap().remove(&session);
+                    st
+                });
+                send_response(
+                    &mut writer,
+                    match r {
+                        Ok(st) => Response::Result(report(&session, st)),
+                        Err(e) => Response::error(format!("{e:#}")),
+                    },
+                )?;
+            }
+            Request::Abort { session } => {
+                let r = claim_session(shared, &session).map(|h| {
+                    h.abort();
+                    shared.sessions.lock().unwrap().remove(&session);
+                });
+                send_response(
+                    &mut writer,
+                    match r {
+                        Ok(()) => Response::Ok {
+                            detail: format!("session {session} aborted"),
+                        },
+                        Err(e) => Response::error(format!("{e:#}")),
+                    },
+                )?;
+            }
+            Request::SetPolicy { policy } => {
+                match PolicyRegistry::global().get(&policy.name) {
+                    Ok(_) => {
+                        let detail = format!("policy {}", policy.name);
+                        default_policy = policy;
+                        send_response(&mut writer, Response::Ok { detail })?;
+                    }
+                    Err(e) => send_response(&mut writer, Response::error(format!("{e:#}")))?,
+                };
+            }
+            Request::ListApps => {
+                let r = list_apps(fleet.spec());
+                send_response(
+                    &mut writer,
+                    match r {
+                        Ok(apps) => Response::Apps(apps),
+                        Err(e) => Response::error(format!("{e:#}")),
+                    },
+                )?;
+            }
+            Request::ListPolicies => {
+                let ps = PolicyRegistry::global()
+                    .iter()
+                    .map(|b| PolicyInfo {
+                        name: b.name().to_string(),
+                        description: b.describe().to_string(),
+                        default_config: b.default_config(),
+                    })
+                    .collect();
+                send_response(&mut writer, Response::Policies(ps))?;
+            }
+            Request::Subscribe {
+                session,
+                every_ticks,
+                max_events,
+            } => subscribe(shared, &mut writer, &session, every_ticks, max_events)?,
+            Request::Shutdown => {
+                send_response(
+                    &mut writer,
+                    Response::Ok {
+                        detail: "daemon shutting down".to_string(),
+                    },
+                )?;
+                shared.shutdown.store(true, Ordering::SeqCst);
+                // Wake the accept loop so it observes the latch; the
+                // connect itself is inert (dropped before any byte).
+                let _ = UnixStream::connect(socket_path);
+                break;
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Start a session and register it in the daemon-global table under its
+/// (client-proposed or generated) id.
+fn begin_session(
+    fleet: &Arc<Fleet>,
+    shared: &Arc<Shared>,
+    app_name: &str,
+    iters: Option<u64>,
+    name: Option<String>,
+    policy: PolicySpec,
+) -> anyhow::Result<String> {
+    let app = find_app(fleet.spec(), app_name)?;
+    let n_iters = resolve_iters(iters, &app);
+    // Fail on unknown policy names here, with the registry's canonical
+    // error, before any fleet traffic.
+    PolicyRegistry::global().get(&policy.name)?;
+    // Reserve an id first (an empty entry), then begin outside the map
+    // lock: a Begin can trigger a worker's first predictor load, and the
+    // table must stay responsive to other connections meanwhile. A
+    // client-proposed name must be free; a generated `s<N>` skips any
+    // ids a client happened to claim (names share the id space).
+    let id = {
+        let mut map = shared.sessions.lock().unwrap();
+        let id = match name {
+            Some(n) => {
+                if map.contains_key(&n) {
+                    anyhow::bail!("session '{n}' already exists");
+                }
+                n
+            }
+            None => loop {
+                let candidate = format!("s{}", shared.next_id.fetch_add(1, Ordering::SeqCst));
+                if !map.contains_key(&candidate) {
+                    break candidate;
+                }
+            },
+        };
+        map.insert(
+            id.clone(),
+            Arc::new(SessionEntry {
+                handle: Mutex::new(None),
+            }),
+        );
+        id
+    };
+    match fleet.begin(app, policy, n_iters) {
+        Ok(h) => {
+            let map = shared.sessions.lock().unwrap();
+            // The reservation cannot have been claimed: end/abort on an
+            // empty entry answer "no longer active" without removing it.
+            *map[&id].handle.lock().unwrap() = Some(h);
+            Ok(id)
+        }
+        Err(e) => {
+            shared.sessions.lock().unwrap().remove(&id);
+            Err(e)
+        }
+    }
+}
+
+fn lookup(shared: &Shared, id: &str) -> anyhow::Result<Arc<SessionEntry>> {
+    shared
+        .sessions
+        .lock()
+        .unwrap()
+        .get(id)
+        .cloned()
+        .ok_or_else(|| anyhow::anyhow!("no such session '{id}'"))
+}
+
+/// Run `f` on the live handle of session `id` (held under the entry
+/// lock — concurrent polls of one session serialize; different sessions
+/// don't).
+fn with_session<T>(
+    shared: &Shared,
+    id: &str,
+    f: impl FnOnce(&SessionHandle) -> anyhow::Result<T>,
+) -> anyhow::Result<T> {
+    let entry = lookup(shared, id)?;
+    let guard = entry.handle.lock().unwrap();
+    match guard.as_ref() {
+        Some(h) => f(h),
+        None => anyhow::bail!("session '{id}' is no longer active"),
+    }
+}
+
+/// Move the handle out of session `id` (for `end`/`abort`). Exactly one
+/// claimer wins; the table entry itself is removed by the caller once
+/// the terminal operation finishes.
+fn claim_session(shared: &Shared, id: &str) -> anyhow::Result<SessionHandle> {
+    let entry = lookup(shared, id)?;
+    let mut guard = entry.handle.lock().unwrap();
+    guard
+        .take()
+        .ok_or_else(|| anyhow::anyhow!("session '{id}' is no longer active"))
+}
+
+/// Drive the session and stream `Event::Status` telemetry: one event per
+/// `every_ticks` ticks until the session reaches its target (or
+/// `max_events` events, when non-zero), then a final `Response::Status`
+/// snapshot ends the stream. The session stays registered — `end` still
+/// owns the result.
+fn subscribe(
+    shared: &Arc<Shared>,
+    writer: &mut UnixStream,
+    id: &str,
+    every_ticks: u64,
+    max_events: u64,
+) -> std::io::Result<()> {
+    let mut sent = 0u64;
+    let last = loop {
+        // Re-acquire per slice so ends/aborts/other subscribers of the
+        // same session interleave instead of starving.
+        let st = match with_session(shared, id, |h| h.step(every_ticks)) {
+            Ok(st) => st,
+            Err(e) => return send_response(writer, Response::error(format!("{e:#}"))),
+        };
+        send_msg(writer, &ServerMsg::Event(Event::Status(report(id, st))))?;
+        sent += 1;
+        if st.done || (max_events > 0 && sent >= max_events) {
+            break st;
+        }
+    };
+    send_response(writer, Response::Status(report(id, last)))
+}
+
+/// `list_apps`: every app the daemon can `begin`, with the workload
+/// size a default `begin` would run.
+fn list_apps(spec: &Arc<Spec>) -> anyhow::Result<Vec<AppInfo>> {
+    let mut out = Vec::new();
+    for (sname, suite) in &spec.suites {
+        for e in &suite.apps {
+            let app = make_app(spec, sname, &e.name)?;
+            out.push(AppInfo {
+                name: app.name.clone(),
+                suite: sname.clone(),
+                archetype: app.archetype.clone(),
+                aperiodic: app.aperiodic,
+                default_iters: default_iters(&app),
+            });
+        }
+    }
+    Ok(out)
+}
+
+// ---------------------------------------------------------------------
+// Legacy protocol (unchanged surface; see module docs).
+// ---------------------------------------------------------------------
+
+/// The optional iteration-count token of `BEGIN <app> [iters]`: absent
+/// means the app default (resolved later via [`resolve_iters`]), present
+/// must parse as a positive `u64`. Non-numeric, zero, negative and
+/// overflowing counts all answer `ERR bad iteration count ...`.
+fn parse_iters(tok: Option<&str>) -> Result<Option<u64>, String> {
     match tok {
-        None => Ok(300),
+        None => Ok(None),
         Some(t) => match t.parse::<u64>() {
             Ok(0) => Err(format!("bad iteration count '{t}' (must be positive)")),
-            Ok(n) => Ok(n),
+            Ok(n) => Ok(Some(n)),
             Err(_) => Err(format!(
                 "bad iteration count '{t}' (expected a positive integer)"
             )),
@@ -93,9 +524,11 @@ fn parse_iters(tok: Option<&str>) -> Result<u64, String> {
     }
 }
 
-fn handle_connection(stream: UnixStream, fleet: Arc<Fleet>) -> anyhow::Result<()> {
-    let mut writer = stream.try_clone()?;
-    let reader = BufReader::new(stream);
+fn handle_legacy(
+    reader: BufReader<UnixStream>,
+    mut writer: UnixStream,
+    fleet: &Arc<Fleet>,
+) -> anyhow::Result<()> {
     // The connection's active session, if any. Dropped (aborted) if the
     // client disconnects without END.
     let mut session: Option<SessionHandle> = None;
@@ -118,10 +551,11 @@ fn handle_connection(stream: UnixStream, fleet: Arc<Fleet>) -> anyhow::Result<()
                         // Reject trailing tokens instead of silently
                         // ignoring them — a client sending `POLICY bandit
                         // bandit-algo=exp3` must not quietly run defaults
-                        // (policy options are a CLI affair: run/sweep).
+                        // (configured policies are a v1 affair: the
+                        // `begin` request carries an inline config).
                         Some(_) if line.split_whitespace().count() > 2 => writeln!(
                             writer,
-                            "ERR POLICY takes a single name (options only via gpoeo run/sweep)"
+                            "ERR POLICY takes a single name (configs need protocol v1 / gpoeo ctl)"
                         )?,
                         Some(name) => match PolicyRegistry::global().get(name) {
                             Ok(_) => {
@@ -141,8 +575,10 @@ fn handle_connection(stream: UnixStream, fleet: Arc<Fleet>) -> anyhow::Result<()
                     match parse_iters(parts.next()) {
                         Err(msg) => writeln!(writer, "ERR {msg}")?,
                         Ok(iters) => {
-                            let started = find_app(fleet.spec(), name)
-                                .and_then(|app| fleet.begin(app, policy.clone(), iters));
+                            let started = find_app(fleet.spec(), name).and_then(|app| {
+                                let n = resolve_iters(iters, &app);
+                                fleet.begin(app, policy.clone(), n)
+                            });
                             match started {
                                 Ok(h) => {
                                     session = Some(h);
@@ -157,7 +593,7 @@ fn handle_connection(stream: UnixStream, fleet: Arc<Fleet>) -> anyhow::Result<()
             Some("STATUS") => {
                 let status = match session.as_ref() {
                     // Drive a slice of virtual time per STATUS poll.
-                    Some(h) => h.step(200),
+                    Some(h) => h.step(STATUS_TICKS),
                     None => Err(anyhow::anyhow!("no session")),
                 };
                 match status {
@@ -292,8 +728,10 @@ mod tests {
 
     #[test]
     fn parse_iters_contract() {
-        assert_eq!(parse_iters(None), Ok(300));
-        assert_eq!(parse_iters(Some("42")), Ok(42));
+        // Absent token → None: the daemon resolves it per app, exactly
+        // like `gpoeo run` (see resolve_iters_matches_cli_default).
+        assert_eq!(parse_iters(None), Ok(None));
+        assert_eq!(parse_iters(Some("42")), Ok(Some(42)));
         for bad in ["abc", "0", "-5", "12.5", "1e6", "18446744073709551616", ""] {
             let r = parse_iters(Some(bad));
             assert!(
@@ -301,6 +739,37 @@ mod tests {
                 "{bad:?} -> {r:?}"
             );
         }
+    }
+
+    #[test]
+    fn resolve_iters_matches_cli_default() {
+        // `BEGIN <app>` without a count must run the same workload size
+        // as `gpoeo run --app <app>` — default_iters, not a hardcoded
+        // 300 (they disagreed for every app whose t_base makes
+        // default_iters exceed the floor).
+        let spec = Arc::new(Spec::load_default().unwrap());
+        let mut checked_above_floor = false;
+        for suite in spec.suites.keys() {
+            for app in crate::sim::make_suite(&spec, suite).unwrap() {
+                assert_eq!(resolve_iters(None, &app), default_iters(&app), "{}", app.name);
+                assert_eq!(resolve_iters(Some(40), &app), 40);
+                checked_above_floor |= default_iters(&app) > 300;
+            }
+        }
+        assert!(
+            checked_above_floor,
+            "suite must contain an app where the old hardcoded 300 was wrong"
+        );
+    }
+
+    #[test]
+    fn accept_failure_is_skipped_not_fatal() {
+        // The accept-loop body: an Err must be swallowed (logged) and
+        // answered with None — never propagated to kill serve().
+        let err = std::io::Error::other("simulated EMFILE");
+        assert!(accept_stream(Err(err)).is_none());
+        let (a, _b) = UnixStream::pair().unwrap();
+        assert!(accept_stream(Ok(a)).is_some());
     }
 
     #[test]

@@ -58,6 +58,8 @@ pub struct JobOutcome {
 #[derive(Debug, Clone, Copy)]
 pub struct SessionStatus {
     pub iterations: u64,
+    /// The session's iteration target (what `done` is measured against).
+    pub target_iters: u64,
     pub time_s: f64,
     pub energy_j: f64,
     pub sm_gear: usize,
@@ -323,6 +325,13 @@ impl SessionHandle {
         })
     }
 
+    /// Abandon the session without driving it to its target (the
+    /// explicit spelling of what dropping the handle does; the daemon's
+    /// `abort` request uses it).
+    pub fn abort(self) {
+        drop(self);
+    }
+
     /// Drive the session to its iteration target and release it.
     pub fn end(mut self) -> anyhow::Result<SessionStatus> {
         self.open = false;
@@ -419,6 +428,7 @@ impl WorkerSession {
     fn status(&self) -> SessionStatus {
         SessionStatus {
             iterations: self.dev.iterations(),
+            target_iters: self.target_iters,
             time_s: self.dev.time_s(),
             energy_j: self.dev.true_energy_j(),
             sm_gear: self.dev.sm_gear(),
@@ -705,7 +715,9 @@ mod tests {
         let h = fleet
             .begin(app.clone(), PolicySpec::registered("bandit"), 25)
             .unwrap();
-        assert!(h.step(50).unwrap().time_s > 0.0);
+        let st = h.step(50).unwrap();
+        assert!(st.time_s > 0.0);
+        assert_eq!(st.target_iters, 25, "status must carry the session target");
         let fin = h.end().unwrap();
         assert!(fin.done && fin.iterations >= 25);
 

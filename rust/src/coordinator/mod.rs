@@ -1,11 +1,13 @@
 //! The GPOEO coordination layer: the online controller (Fig. 4 workflow),
 //! adaptive measurement (Algorithm 4), the aperiodic IPS path (§4.3.5),
 //! the ODPP baseline, the exhaustive oracle, the parallel fleet engine
-//! and the Begin/End daemon API. Everything here drives devices through
+//! and the Begin/End daemon. Everything here drives devices through
 //! [`crate::device::Device`] — nothing below this line names the
 //! concrete simulator — and constructs policies exclusively through
 //! [`crate::policy::PolicyRegistry`], so adding an optimizer never
-//! touches this module.
+//! touches this module. The daemon's wire surface (typed protocol v1,
+//! client library, `gpoeo ctl`) lives in [`crate::api`]; this module
+//! only implements the server side of it.
 
 pub mod controller;
 pub mod daemon;
@@ -35,17 +37,14 @@ use crate::util::json::Json;
 use crate::util::table::{s, Cell, Table};
 use std::sync::Arc;
 
-/// Parse `--objective` (energy-capped:X | edp | ed2p | energy).
+/// Parse `--objective` (capped | edp | ed2p | energy) + `--slowdown-cap`.
+/// Decodes through [`Objective::from_wire`] — the same single point the
+/// control-plane API uses, so CLI and wire accept the same names.
 pub fn parse_objective(args: &Args) -> anyhow::Result<Objective> {
-    Ok(match args.opt_or("objective", "capped") {
-        "edp" => Objective::Edp,
-        "ed2p" => Objective::Ed2p,
-        "energy" => Objective::Energy,
-        "capped" => Objective::EnergyCapped {
-            max_time_ratio: 1.0 + args.opt_f64("slowdown-cap", 0.05)?,
-        },
-        other => anyhow::bail!("unknown objective '{other}'"),
-    })
+    Objective::from_wire(
+        args.opt_or("objective", "capped"),
+        1.0 + args.opt_f64("slowdown-cap", 0.05)?,
+    )
 }
 
 /// `gpoeo run --app NAME [--policy NAME] [--iters N]` — any registered
@@ -281,7 +280,8 @@ fn write_bench(
 }
 
 /// `gpoeo daemon [--socket PATH] [--workers N]` — serve the Begin/End
-/// API on a shared fleet.
+/// API on a shared fleet: control-plane protocol v1 and the legacy line
+/// protocol behind a first-byte auto-detect (drive it with `gpoeo ctl`).
 pub fn cli_daemon(args: &Args) -> anyhow::Result<()> {
     let spec = Arc::new(Spec::load_default()?);
     let sock = args.opt_or("socket", "/tmp/gpoeo.sock").to_string();

@@ -18,12 +18,16 @@
 //! path.
 //!
 //! Layer map (see DESIGN.md):
+//! - L4: [`api`] — the control plane: protocol v1 (typed
+//!   request/response/event enums over line-delimited JSON),
+//!   `GpoeoClient`, legacy-compat client, `gpoeo ctl`
 //! - L3: `coordinator` (controller, fleet, daemon), `policy` (registry
 //!   + the bandit/power-cap families), `signal`, `search`,
 //!   `experiments` — all device-agnostic via [`device`]
 //! - Device backends: [`sim`] today; NVML tomorrow
 //! - L2/L1 artifacts: built by `make artifacts`, loaded by `runtime`
 
+pub mod api;
 pub mod cli;
 pub mod coordinator;
 pub mod device;

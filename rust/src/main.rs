@@ -9,8 +9,10 @@
 //! - `sweep [--parallel N]`      all-app sweep on a worker fleet (BENCH_sweep.json)
 //! - `experiment <id>`           regenerate a paper table/figure (fig1..fig15, table3,
 //!                               headline, policies)
-//! - `daemon [--socket P]`       Begin/End API server (micro-intrusive mode, fleet-backed,
-//!                               per-connection POLICY selection)
+//! - `daemon [--socket P]`       Begin/End API server (micro-intrusive mode, fleet-backed;
+//!                               control-plane protocol v1 + legacy line protocol)
+//! - `ctl <verb> [--socket P]`   control-plane client: apps/policies/begin/status/end/abort/
+//!                               watch/run/parity/shutdown over `GpoeoClient`
 
 use gpoeo::util::cli::Args;
 

@@ -37,13 +37,14 @@ use crate::model::Predictor;
 use crate::search::Objective;
 use crate::sim::Spec;
 use crate::util::cli::Args;
+use crate::util::json::Json;
 use std::collections::BTreeMap;
 use std::sync::{Arc, OnceLock};
 
 /// Thread-crossing policy configuration: the objective plus free-form
 /// `key=value` options (the CLI forwards all `--key value` options, so
 /// each builder picks up its own knobs and ignores the rest).
-#[derive(Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct PolicyConfig {
     pub objective: Objective,
     pub opts: BTreeMap<String, String>,
@@ -96,12 +97,77 @@ impl PolicyConfig {
                 .map_err(|_| anyhow::anyhow!("--{key} expects an integer, got '{s}'")),
         }
     }
+
+    /// Control-plane wire encoding (DESIGN.md §9):
+    /// `{"objective": "capped", "max_time_ratio": 1.05, "opts": {...}}`.
+    /// Fields with default values are omitted; `decode(encode(c)) == c`
+    /// bit-exactly.
+    pub fn to_json(&self) -> Json {
+        let mut fields = vec![(
+            "objective",
+            Json::Str(self.objective.wire_name().to_string()),
+        )];
+        if let Some(r) = self.objective.max_time_ratio() {
+            fields.push(("max_time_ratio", Json::Num(r)));
+        }
+        if !self.opts.is_empty() {
+            fields.push((
+                "opts",
+                Json::Obj(
+                    self.opts
+                        .iter()
+                        .map(|(k, v)| (k.clone(), Json::Str(v.clone())))
+                        .collect(),
+                ),
+            ));
+        }
+        Json::obj(fields)
+    }
+
+    /// Decode the wire encoding. Unknown fields are rejected (the
+    /// control plane answers a typed error instead of silently running a
+    /// config the client never asked for); option values may be strings,
+    /// numbers or bools — non-strings are stringified, since builders
+    /// parse options from text exactly as they do for CLI `--key value`.
+    pub fn from_json(j: &Json) -> anyhow::Result<PolicyConfig> {
+        let obj = j
+            .as_obj()
+            .ok_or_else(|| anyhow::anyhow!("policy config must be a json object"))?;
+        for k in obj.keys() {
+            if !matches!(k.as_str(), "objective" | "max_time_ratio" | "opts") {
+                anyhow::bail!("unknown policy config field '{k}'");
+            }
+        }
+        let name = match j.get("objective") {
+            Json::Null => "capped",
+            v => v
+                .as_str()
+                .ok_or_else(|| anyhow::anyhow!("'objective' must be a string"))?,
+        };
+        let objective = Objective::from_wire(name, j.opt_f64("max_time_ratio", 1.05))?;
+        let mut opts = BTreeMap::new();
+        match j.get("opts") {
+            Json::Null => {}
+            Json::Obj(o) => {
+                for (k, v) in o {
+                    let s = match v {
+                        Json::Str(s) => s.clone(),
+                        Json::Num(_) | Json::Bool(_) => v.to_string(),
+                        _ => anyhow::bail!("option '{k}' must be a string, number or bool"),
+                    };
+                    opts.insert(k.clone(), s);
+                }
+            }
+            _ => anyhow::bail!("'opts' must be a json object"),
+        }
+        Ok(PolicyConfig { objective, opts })
+    }
 }
 
 /// A named policy selection that can cross threads (fleet jobs, daemon
 /// sessions). Built into a live policy worker-side via
 /// [`PolicyRegistry::build_spec`].
-#[derive(Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct PolicySpec {
     pub name: String,
     pub cfg: PolicyConfig,
@@ -118,6 +184,38 @@ impl PolicySpec {
     /// Selection by name with the default (paper) configuration.
     pub fn registered(name: &str) -> PolicySpec {
         PolicySpec::new(name, PolicyConfig::default())
+    }
+
+    /// Control-plane wire encoding: `{"name": "bandit", "config": {...}}`
+    /// (the `config` field is omitted when it is all defaults).
+    pub fn to_json(&self) -> Json {
+        let mut fields = vec![("name", Json::Str(self.name.clone()))];
+        if self.cfg != PolicyConfig::default() {
+            fields.push(("config", self.cfg.to_json()));
+        }
+        Json::obj(fields)
+    }
+
+    /// Decode the wire encoding. A bare string is shorthand for a name
+    /// with the default config (`"policy": "bandit"`).
+    pub fn from_json(j: &Json) -> anyhow::Result<PolicySpec> {
+        if let Some(name) = j.as_str() {
+            return Ok(PolicySpec::registered(name));
+        }
+        let obj = j
+            .as_obj()
+            .ok_or_else(|| anyhow::anyhow!("policy must be a name string or a json object"))?;
+        for k in obj.keys() {
+            if !matches!(k.as_str(), "name" | "config") {
+                anyhow::bail!("unknown policy field '{k}'");
+            }
+        }
+        let name = j.req_str("name")?;
+        let cfg = match j.get("config") {
+            Json::Null => PolicyConfig::default(),
+            c => PolicyConfig::from_json(c)?,
+        };
+        Ok(PolicySpec::new(name, cfg))
     }
 }
 
@@ -365,5 +463,62 @@ mod tests {
         assert_eq!(cfg.opt_f64("absent", 1.5).unwrap(), 1.5);
         assert!(cfg.opt_f64("bad", 0.0).is_err());
         assert!(cfg.opt_usize("bad", 0).is_err());
+    }
+
+    #[test]
+    fn config_wire_roundtrip_is_exact() {
+        let mut cfg = PolicyConfig::new(Objective::Ed2p);
+        cfg.opts.insert("switch-cost".into(), "0.25".into());
+        cfg.opts.insert("bandit-algo".into(), "exp3".into());
+        for c in [PolicyConfig::default(), cfg] {
+            let back = PolicyConfig::from_json(&c.to_json()).unwrap();
+            assert_eq!(back, c);
+            // And through a serialize/parse cycle (the wire is text).
+            let text = c.to_json().to_string();
+            let back = PolicyConfig::from_json(&Json::parse(&text).unwrap()).unwrap();
+            assert_eq!(back, c);
+        }
+    }
+
+    #[test]
+    fn spec_wire_roundtrip_and_shorthand() {
+        let mut cfg = PolicyConfig::default();
+        cfg.opts.insert("switch-cost".into(), "2".into());
+        let spec = PolicySpec::new("bandit", cfg);
+        assert_eq!(PolicySpec::from_json(&spec.to_json()).unwrap(), spec);
+
+        let plain = PolicySpec::registered("odpp");
+        let j = plain.to_json();
+        assert_eq!(j.get("config"), &Json::Null, "default config is omitted");
+        assert_eq!(PolicySpec::from_json(&j).unwrap(), plain);
+        assert_eq!(
+            PolicySpec::from_json(&Json::Str("powercap".into())).unwrap(),
+            PolicySpec::registered("powercap")
+        );
+    }
+
+    #[test]
+    fn config_wire_rejects_malformed_input() {
+        for bad in [
+            r#"{"objective": "warp"}"#,
+            r#"{"objective": 3}"#,
+            r#"{"surprise": 1}"#,
+            r#"{"opts": [1]}"#,
+            r#"{"opts": {"k": [1]}}"#,
+            r#"{"objective": "capped", "max_time_ratio": 0.5}"#,
+            r#""s""#,
+        ] {
+            let j = Json::parse(bad).unwrap();
+            assert!(PolicyConfig::from_json(&j).is_err(), "{bad}");
+        }
+        // Numeric/bool option values are coerced to the text the CLI
+        // would have passed.
+        let j = Json::parse(r#"{"opts": {"switch-cost": 0.5, "flag": true}}"#).unwrap();
+        let cfg = PolicyConfig::from_json(&j).unwrap();
+        assert_eq!(cfg.opt("switch-cost"), Some("0.5"));
+        assert_eq!(cfg.opt("flag"), Some("true"));
+
+        assert!(PolicySpec::from_json(&Json::parse("{}").unwrap()).is_err());
+        assert!(PolicySpec::from_json(&Json::parse(r#"{"name":"x","zz":1}"#).unwrap()).is_err());
     }
 }

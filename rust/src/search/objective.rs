@@ -51,6 +51,45 @@ impl Objective {
             _ => true,
         }
     }
+
+    /// The objective's name as it appears on the CLI (`--objective`) and
+    /// the control-plane wire (`"objective"` field).
+    pub fn wire_name(&self) -> &'static str {
+        match self {
+            Objective::EnergyCapped { .. } => "capped",
+            Objective::Edp => "edp",
+            Objective::Ed2p => "ed2p",
+            Objective::Energy => "energy",
+        }
+    }
+
+    /// The cap parameter, present only for `capped` (serialized as
+    /// `max_time_ratio` so decode(encode(o)) is bit-exact).
+    pub fn max_time_ratio(&self) -> Option<f64> {
+        match *self {
+            Objective::EnergyCapped { max_time_ratio } => Some(max_time_ratio),
+            _ => None,
+        }
+    }
+
+    /// Inverse of [`wire_name`](Objective::wire_name)/
+    /// [`max_time_ratio`](Objective::max_time_ratio): the single decode
+    /// point shared by the CLI (`--objective`/`--slowdown-cap`) and the
+    /// control-plane wire. `max_time_ratio` only applies to `capped`.
+    pub fn from_wire(name: &str, max_time_ratio: f64) -> anyhow::Result<Objective> {
+        Ok(match name {
+            "edp" => Objective::Edp,
+            "ed2p" => Objective::Ed2p,
+            "energy" => Objective::Energy,
+            "capped" => {
+                if !max_time_ratio.is_finite() || max_time_ratio < 1.0 {
+                    anyhow::bail!("max_time_ratio must be finite and >= 1, got {max_time_ratio}");
+                }
+                Objective::EnergyCapped { max_time_ratio }
+            }
+            other => anyhow::bail!("unknown objective '{other}' (capped|edp|ed2p|energy)"),
+        })
+    }
 }
 
 #[cfg(test)]
@@ -88,5 +127,23 @@ mod tests {
         assert!(obj.is_feasible(1.05));
         assert!(!obj.is_feasible(1.0501));
         assert!(Objective::Ed2p.is_feasible(9.0));
+    }
+
+    #[test]
+    fn wire_roundtrip_is_exact() {
+        for o in [
+            Objective::paper_default(),
+            Objective::EnergyCapped { max_time_ratio: 1.125 },
+            Objective::Edp,
+            Objective::Ed2p,
+            Objective::Energy,
+        ] {
+            let back =
+                Objective::from_wire(o.wire_name(), o.max_time_ratio().unwrap_or(1.05)).unwrap();
+            assert_eq!(back, o, "{} must roundtrip bit-exactly", o.wire_name());
+        }
+        assert!(Objective::from_wire("warp", 1.05).is_err());
+        assert!(Objective::from_wire("capped", 0.9).is_err());
+        assert!(Objective::from_wire("capped", f64::NAN).is_err());
     }
 }

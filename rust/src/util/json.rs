@@ -60,6 +60,13 @@ impl Json {
         }
     }
 
+    pub fn as_u64(&self) -> Option<u64> {
+        match self {
+            Json::Num(n) if *n >= 0.0 && n.fract() == 0.0 && *n <= 9.0e15 => Some(*n as u64),
+            _ => None,
+        }
+    }
+
     pub fn as_bool(&self) -> Option<bool> {
         match self {
             Json::Bool(b) => Some(*b),
@@ -136,9 +143,25 @@ impl Json {
             .collect()
     }
 
+    pub fn req_u64(&self, key: &str) -> anyhow::Result<u64> {
+        self.get(key)
+            .as_u64()
+            .ok_or_else(|| anyhow::anyhow!("missing/invalid unsigned integer field '{key}'"))
+    }
+
+    pub fn req_bool(&self, key: &str) -> anyhow::Result<bool> {
+        self.get(key)
+            .as_bool()
+            .ok_or_else(|| anyhow::anyhow!("missing/invalid bool field '{key}'"))
+    }
+
     /// Optional f64 with default.
     pub fn opt_f64(&self, key: &str, default: f64) -> f64 {
         self.get(key).as_f64().unwrap_or(default)
+    }
+
+    pub fn opt_u64(&self, key: &str, default: u64) -> u64 {
+        self.get(key).as_u64().unwrap_or(default)
     }
 
     pub fn opt_bool(&self, key: &str, default: bool) -> bool {
@@ -558,5 +581,20 @@ mod tests {
         assert_eq!(v.req_f64("n").unwrap(), 2.0);
         assert!(v.req_f64("missing").is_err());
         assert_eq!(v.opt_f64("missing", 7.0), 7.0);
+    }
+
+    #[test]
+    fn unsigned_accessors() {
+        let v = Json::parse(r#"{"n": 42, "neg": -1, "frac": 2.5, "b": true}"#).unwrap();
+        assert_eq!(v.req_u64("n").unwrap(), 42);
+        assert!(v.req_u64("neg").is_err());
+        assert!(v.req_u64("frac").is_err());
+        assert!(v.req_u64("missing").is_err());
+        assert_eq!(v.opt_u64("missing", 9), 9);
+        assert_eq!(v.opt_u64("n", 9), 42);
+        assert!(v.req_bool("b").unwrap());
+        assert!(v.req_bool("n").is_err());
+        assert_eq!(Json::Num(-0.0).as_u64(), Some(0));
+        assert_eq!(Json::Num(1e16).as_u64(), None, "beyond exact f64 integers");
     }
 }

@@ -1,0 +1,285 @@
+//! Control-plane v1 end-to-end: named concurrent sessions, inline
+//! policy configs, subscribe streaming, v1↔legacy parity, and graceful
+//! shutdown — all through `GpoeoClient`/`LegacyClient` (no protocol
+//! strings in this file), all artifact-free (model-free policies only).
+
+use gpoeo::api::{
+    check_parity, result_parity_key, run_legacy_session, run_v1_session, GpoeoClient,
+};
+use gpoeo::coordinator::daemon::Daemon;
+use gpoeo::coordinator::default_iters;
+use gpoeo::policy::{PolicyConfig, PolicySpec};
+use gpoeo::sim::{find_app, Spec};
+use std::sync::Arc;
+
+fn spawn_daemon(tag: &str, workers: usize) -> std::path::PathBuf {
+    let spec = Arc::new(Spec::load_default().unwrap());
+    let daemon = Daemon::new(spec, workers);
+    let dir = std::env::temp_dir().join(format!("gpoeo-ctltest-{}-{tag}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let sock = dir.join("d.sock");
+    let sock2 = sock.clone();
+    std::thread::spawn(move || {
+        let _ = daemon.serve(&sock2);
+    });
+    for _ in 0..200 {
+        if sock.exists() {
+            break;
+        }
+        std::thread::sleep(std::time::Duration::from_millis(10));
+    }
+    sock
+}
+
+fn bandit_with_cost(cost: &str) -> PolicySpec {
+    let mut cfg = PolicyConfig::default();
+    cfg.opts.insert("switch-cost".into(), cost.into());
+    PolicySpec::new("bandit", cfg)
+}
+
+#[test]
+fn one_connection_runs_concurrent_sessions_with_independent_policies() {
+    // The acceptance-criteria scenario: ≥2 concurrent sessions on a
+    // single connection, each with its own policy + config, interleaved
+    // status polls, independent results.
+    let sock = spawn_daemon("multi", 2);
+    let mut c = GpoeoClient::connect(&sock).unwrap();
+
+    let a = c
+        .begin("AI_TS", Some(30), Some("train-a"), Some(bandit_with_cost("0.2")))
+        .unwrap();
+    let b = c
+        .begin("AI_FE", Some(40), Some("train-b"), Some(PolicySpec::registered("powercap")))
+        .unwrap();
+    assert_eq!(a, "train-a");
+    assert_eq!(b, "train-b");
+
+    // Interleaved polls: both sessions advance independently.
+    let sa1 = c.status(&a).unwrap();
+    let sb1 = c.status(&b).unwrap();
+    let sa2 = c.status(&a).unwrap();
+    assert_eq!(sa1.session, "train-a");
+    assert_eq!(sb1.session, "train-b");
+    assert!(sa2.iterations >= sa1.iterations);
+    assert_eq!(sa1.target_iters, 30);
+    assert_eq!(sb1.target_iters, 40);
+
+    // A duplicate name is refused while the session lives.
+    let err = c
+        .begin("AI_TS", Some(10), Some("train-a"), None)
+        .unwrap_err();
+    assert!(err.to_string().contains("already exists"), "{err}");
+
+    let ra = c.end(&a).unwrap();
+    let rb = c.end(&b).unwrap();
+    assert!(ra.done && ra.iterations >= 30);
+    assert!(rb.done && rb.iterations >= 40);
+    assert!(ra.energy_j > 0.0 && rb.energy_j > 0.0);
+
+    // Ended sessions are gone from the table.
+    assert!(c.status(&a).is_err());
+
+    // Auto-generated ids still work alongside named ones.
+    let s = c
+        .begin("AI_TS", Some(20), None, Some(PolicySpec::registered("odpp")))
+        .unwrap();
+    assert!(s.starts_with('s'), "{s}");
+    c.abort(&s).unwrap();
+    let err = c.status(&s).unwrap_err().to_string();
+    assert!(err.contains("no such session"), "{err}");
+}
+
+#[test]
+fn generated_ids_skip_client_claimed_names() {
+    // Names share the id space with generated `s<N>` ids: a client
+    // squatting on "s1"/"s2" must not make unnamed begins fail — the
+    // generator skips taken ids instead of bailing.
+    let sock = spawn_daemon("idspace", 1);
+    let mut c = GpoeoClient::connect(&sock).unwrap();
+    let p = || Some(PolicySpec::registered("powercap"));
+    c.begin("AI_TS", Some(10), Some("s1"), p()).unwrap();
+    c.begin("AI_TS", Some(10), Some("s2"), p()).unwrap();
+    let auto = c.begin("AI_FE", Some(10), None, p()).unwrap();
+    assert!(auto != "s1" && auto != "s2", "{auto}");
+    for id in ["s1", "s2", auto.as_str()] {
+        assert!(c.end(id).unwrap().done, "{id}");
+    }
+}
+
+#[test]
+fn sessions_are_daemon_global_across_connections() {
+    // `ctl begin` and a later `ctl end` run on different connections;
+    // the session table must be shared.
+    let sock = spawn_daemon("global", 1);
+    let id = GpoeoClient::connect(&sock)
+        .unwrap()
+        .begin("AI_TS", Some(25), Some("detached"), Some(PolicySpec::registered("powercap")))
+        .unwrap();
+    // First connection is gone; a fresh one picks the session up.
+    let mut c2 = GpoeoClient::connect(&sock).unwrap();
+    let st = c2.status(&id).unwrap();
+    assert_eq!(st.target_iters, 25);
+    let r = c2.end(&id).unwrap();
+    assert!(r.done && r.iterations >= 25);
+}
+
+#[test]
+fn inline_config_reaches_the_policy_builder() {
+    // A bad knob value must surface as the builder's typed error — the
+    // proof that begin's inline config flows through PolicyRegistry to
+    // the builder (the legacy protocol could never express this).
+    let sock = spawn_daemon("config", 1);
+    let mut c = GpoeoClient::connect(&sock).unwrap();
+    let err = c
+        .begin("AI_TS", Some(10), None, Some(bandit_with_cost("zzz")))
+        .unwrap_err();
+    assert!(err.to_string().contains("switch-cost"), "{err}");
+
+    // And a good value begins/ends cleanly.
+    let id = c
+        .begin("AI_TS", Some(20), None, Some(bandit_with_cost("0.5")))
+        .unwrap();
+    assert!(c.end(&id).unwrap().done);
+}
+
+#[test]
+fn set_policy_sets_the_connection_default() {
+    let sock = spawn_daemon("setpol", 1);
+    let mut c = GpoeoClient::connect(&sock).unwrap();
+
+    let err = c
+        .set_policy(PolicySpec::registered("warpdrive"))
+        .unwrap_err();
+    assert!(err.to_string().starts_with("unknown policy"), "{err}");
+
+    // set_policy validates the name; a bad *config* surfaces at begin
+    // time from the builder — which is exactly the proof that a begin
+    // without an inline policy runs the connection default we set.
+    c.set_policy(bandit_with_cost("zzz")).unwrap();
+    let err = c.begin("AI_FE", Some(20), None, None).unwrap_err();
+    assert!(err.to_string().contains("switch-cost"), "{err}");
+
+    // And a healthy default carries across begins until changed.
+    c.set_policy(PolicySpec::registered("powercap")).unwrap();
+    for _ in 0..2 {
+        let id = c.begin("AI_FE", Some(20), None, None).unwrap();
+        let r = c.end(&id).unwrap();
+        assert!(r.done && r.iterations >= 20);
+    }
+}
+
+#[test]
+fn begin_without_iters_runs_the_app_default_workload() {
+    // v1 `begin` with iters omitted must resolve to default_iters(app) —
+    // the same number `gpoeo run` uses (satellite: the old daemon
+    // hardcoded 300). Observable via target_iters in status.
+    let spec = Spec::load_default().unwrap();
+    let app = find_app(&spec, "AI_TS").unwrap();
+    let want = default_iters(&app);
+
+    let sock = spawn_daemon("defiters", 1);
+    let mut c = GpoeoClient::connect(&sock).unwrap();
+    let id = c
+        .begin("AI_TS", None, None, Some(PolicySpec::registered("powercap")))
+        .unwrap();
+    let st = c.status(&id).unwrap();
+    assert_eq!(
+        st.target_iters, want,
+        "daemon default must equal the CLI default_iters"
+    );
+    c.abort(&id).unwrap();
+}
+
+#[test]
+fn subscribe_streams_status_events_until_done() {
+    let sock = spawn_daemon("subscribe", 1);
+    let mut c = GpoeoClient::connect(&sock).unwrap();
+    let id = c
+        .begin("AI_TS", Some(40), None, Some(PolicySpec::registered("bandit")))
+        .unwrap();
+
+    let mut events = Vec::new();
+    let fin = c
+        .subscribe(&id, 50, 0, |r| events.push(r.clone()))
+        .unwrap();
+    assert!(!events.is_empty(), "subscribe must deliver streamed events");
+    for w in events.windows(2) {
+        assert!(w[1].iterations >= w[0].iterations, "monotone progress");
+        assert!(w[1].time_s >= w[0].time_s);
+    }
+    assert!(fin.done, "the final snapshot arrives once the target is hit");
+    assert_eq!(fin.session, id);
+    assert!(events.iter().all(|e| e.session == id && e.target_iters == 40));
+
+    // The session survives the subscription; end() owns the result.
+    let r = c.end(&id).unwrap();
+    assert!(r.done && r.iterations >= 40);
+
+    // A bounded subscription on a missing session errors (typed).
+    assert!(c.subscribe("ghost", 50, 2, |_| {}).is_err());
+}
+
+#[test]
+fn subscribe_respects_max_events() {
+    let sock = spawn_daemon("subcap", 1);
+    let mut c = GpoeoClient::connect(&sock).unwrap();
+    let id = c
+        .begin("AI_TS", Some(5000), None, Some(PolicySpec::registered("powercap")))
+        .unwrap();
+    let mut n = 0u64;
+    let fin = c.subscribe(&id, 10, 3, |_| n += 1).unwrap();
+    assert_eq!(n, 3, "stream must stop at max_events");
+    assert!(!fin.done, "a capped stream can end before the session does");
+    c.abort(&id).unwrap();
+}
+
+#[test]
+fn v1_and_legacy_protocols_produce_identical_results() {
+    // The parity acceptance criterion: same (app, policy, iters) through
+    // both protocols on the same daemon → identical RESULT numbers at
+    // legacy print precision. Deterministic simulator makes this exact.
+    let sock = spawn_daemon("parity", 2);
+    for (app, policy) in [("AI_TS", "powercap"), ("AI_FE", "bandit"), ("AI_TS", "odpp")] {
+        let (kv, kl) = check_parity(&sock, app, policy, Some(40)).unwrap();
+        assert_eq!(kv, kl, "{app}/{policy}");
+    }
+
+    // Cross-check the helper against the raw sessions: the key really
+    // is derived from the two independent runs.
+    let v1 =
+        run_v1_session(&sock, "AI_TS", PolicySpec::registered("powercap"), Some(40)).unwrap();
+    let legacy = run_legacy_session(&sock, "AI_TS", "powercap", Some(40)).unwrap();
+    assert_eq!(result_parity_key(&v1), result_parity_key(&legacy));
+    assert!(v1.done && legacy.done);
+
+    // And a default-workload-size run resolves to default_iters on the
+    // v1 side (the legacy side shares resolve_iters; one full run here
+    // bounds test time).
+    let spec = Spec::load_default().unwrap();
+    let n = default_iters(&find_app(&spec, "AI_TS").unwrap());
+    let v1 = run_v1_session(&sock, "AI_TS", PolicySpec::registered("powercap"), None).unwrap();
+    assert!(v1.iterations >= n, "default-iters run must hit the target");
+    assert_eq!(v1.target_iters, n);
+}
+
+#[test]
+fn shutdown_removes_the_socket_and_stops_accepting() {
+    let sock = spawn_daemon("shutdown", 1);
+    assert!(sock.exists());
+    GpoeoClient::connect(&sock).unwrap().shutdown().unwrap();
+    // serve() exits and removes its socket file — the graceful-shutdown
+    // satellite: repeated runs must not depend on stale-socket cleanup.
+    let mut gone = false;
+    for _ in 0..200 {
+        if !sock.exists() {
+            gone = true;
+            break;
+        }
+        std::thread::sleep(std::time::Duration::from_millis(10));
+    }
+    assert!(gone, "socket file must be removed on graceful shutdown");
+    assert!(
+        GpoeoClient::connect(&sock).is_err(),
+        "no listener after shutdown"
+    );
+}

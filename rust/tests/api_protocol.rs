@@ -1,0 +1,186 @@
+//! Protocol v1 framing robustness against a live daemon.
+//!
+//! Contract under test (ISSUE 5 satellite): truncated JSON, unknown
+//! request kinds, unknown fields, oversized lines and pre-handshake
+//! requests must all answer a typed `Response::Error` — the connection
+//! loop never hangs, never closes, and stays fully usable afterwards.
+//! Malformed payloads are delivered through `GpoeoClient::raw_line`,
+//! the api layer's test escape hatch, so no protocol strings leak into
+//! this file; the junk itself is built from typed requests (truncation,
+//! field injection) via the json layer.
+//!
+//! Everything here is artifact-free (no predictor needed).
+
+use gpoeo::api::{GpoeoClient, Request, Response, ServerMsg, MAX_LINE_BYTES, PROTOCOL_VERSION};
+use gpoeo::coordinator::daemon::Daemon;
+use gpoeo::sim::Spec;
+use gpoeo::util::json::Json;
+use std::sync::Arc;
+
+/// Start a daemon on a fresh socket; returns the socket path.
+fn spawn_daemon(tag: &str) -> std::path::PathBuf {
+    let spec = Arc::new(Spec::load_default().unwrap());
+    let daemon = Daemon::new(spec, 1);
+    let dir = std::env::temp_dir().join(format!("gpoeo-apitest-{}-{tag}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let sock = dir.join("d.sock");
+    let sock2 = sock.clone();
+    std::thread::spawn(move || {
+        let _ = daemon.serve(&sock2);
+    });
+    for _ in 0..200 {
+        if sock.exists() {
+            break;
+        }
+        std::thread::sleep(std::time::Duration::from_millis(10));
+    }
+    sock
+}
+
+fn expect_error(msg: anyhow::Result<ServerMsg>, context: &str) -> String {
+    match msg.expect(context) {
+        ServerMsg::Response(Response::Error { message }) => message,
+        other => panic!("{context}: expected a typed error, got {other:?}"),
+    }
+}
+
+#[test]
+fn handshake_negotiates_and_gates_requests() {
+    let sock = spawn_daemon("handshake");
+
+    // The typed connect performs the hello exchange.
+    let mut c = GpoeoClient::connect(&sock).unwrap();
+    assert!(!c.list_policies().unwrap().is_empty());
+
+    // Without hello, every other request is refused — but answered.
+    let mut raw = GpoeoClient::connect_raw(&sock).unwrap();
+    let line = Request::ListPolicies.to_json().to_string();
+    let err = expect_error(raw.raw_line(&line), "pre-handshake request");
+    assert!(err.contains("handshake required"), "{err}");
+
+    // A future protocol version is refused with the server's version.
+    let line = Request::Hello {
+        version: PROTOCOL_VERSION + 1,
+    }
+    .to_json()
+    .to_string();
+    let err = expect_error(raw.raw_line(&line), "future version");
+    assert!(err.contains("unsupported protocol version"), "{err}");
+
+    // The same connection can then hello correctly and proceed.
+    let line = Request::Hello {
+        version: PROTOCOL_VERSION,
+    }
+    .to_json()
+    .to_string();
+    match raw.raw_line(&line).unwrap() {
+        ServerMsg::Response(Response::Hello { protocol, .. }) => {
+            assert_eq!(protocol, PROTOCOL_VERSION)
+        }
+        other => panic!("{other:?}"),
+    }
+}
+
+#[test]
+fn malformed_lines_answer_typed_errors_and_never_kill_the_loop() {
+    let sock = spawn_daemon("fuzz");
+    let mut c = GpoeoClient::connect(&sock).unwrap();
+
+    // Truncated JSON: cut a valid request mid-flight.
+    let valid = Request::ListApps.to_json().to_string();
+    let truncated = &valid[..valid.len() - 2];
+    let err = expect_error(c.raw_line(truncated), "truncated json");
+    assert!(err.contains("bad request json"), "{err}");
+
+    // Unknown request kind.
+    let junk = Json::obj(vec![("kind", Json::Str("warpdrive".into()))]).to_string();
+    let err = expect_error(c.raw_line(&junk), "unknown kind");
+    assert!(err.contains("unknown request kind 'warpdrive'"), "{err}");
+
+    // Unknown field on a known kind.
+    let junk = Json::obj(vec![
+        ("kind", Json::Str("list_apps".into())),
+        ("flavor", Json::Str("spicy".into())),
+    ])
+    .to_string();
+    let err = expect_error(c.raw_line(&junk), "unknown field");
+    assert!(err.contains("unknown field 'flavor'"), "{err}");
+
+    // Non-object and wrong-typed payloads.
+    for junk in [
+        Json::Arr(vec![Json::Num(1.0)]).to_string(),
+        Json::Num(42.0).to_string(),
+        Json::obj(vec![("kind", Json::Num(7.0))]).to_string(),
+    ] {
+        let err = expect_error(c.raw_line(&junk), "non-object");
+        assert!(!err.is_empty());
+    }
+
+    // Oversized line: a single frame beyond MAX_LINE_BYTES.
+    let big = Json::obj(vec![
+        ("kind", Json::Str("status".into())),
+        ("session", Json::Str("x".repeat(MAX_LINE_BYTES))),
+    ])
+    .to_string();
+    let err = expect_error(c.raw_line(&big), "oversized line");
+    assert!(err.contains("exceeds"), "{err}");
+
+    // After all of that the connection still serves typed requests.
+    let policies = c.list_policies().unwrap();
+    assert!(policies.iter().any(|p| p.name == "bandit"));
+    let apps = c.list_apps().unwrap();
+    assert!(apps.iter().any(|a| a.name == "AI_TS"));
+}
+
+#[test]
+fn every_truncation_of_a_begin_is_survivable() {
+    // Property-flavored: every prefix of a real request either parses or
+    // errors — and the connection answers every single one.
+    let sock = spawn_daemon("trunc");
+    let mut c = GpoeoClient::connect(&sock).unwrap();
+    let line = Request::Status {
+        session: "nope".into(),
+    }
+    .to_json()
+    .to_string();
+    for cut in 1..line.len() {
+        if !line.is_char_boundary(cut) {
+            continue;
+        }
+        let reply = c.raw_line(&line[..cut]).expect("an answer must arrive");
+        match reply {
+            ServerMsg::Response(_) => {}
+            other => panic!("cut {cut}: {other:?}"),
+        }
+    }
+    // Intact line: a proper typed error (no such session), not a parse one.
+    let err = expect_error(c.raw_line(&line), "intact line");
+    assert!(err.contains("no such session"), "{err}");
+}
+
+#[test]
+fn unknown_app_policy_and_session_errors_are_typed() {
+    let sock = spawn_daemon("typed-errors");
+    let mut c = GpoeoClient::connect(&sock).unwrap();
+
+    let err = c.begin("NOT_AN_APP", Some(10), None, None).unwrap_err();
+    assert!(err.to_string().contains("NOT_AN_APP"), "{err}");
+
+    let err = c
+        .begin(
+            "AI_TS",
+            Some(10),
+            None,
+            Some(gpoeo::coordinator::PolicySpec::registered("warpdrive")),
+        )
+        .unwrap_err();
+    assert!(err.to_string().starts_with("unknown policy"), "{err}");
+
+    for r in [
+        c.status("ghost").unwrap_err(),
+        c.end("ghost").unwrap_err(),
+        c.abort("ghost").unwrap_err(),
+    ] {
+        assert!(r.to_string().contains("no such session 'ghost'"), "{r}");
+    }
+}
