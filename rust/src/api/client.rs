@@ -39,7 +39,7 @@ impl GpoeoClient {
             Response::Hello { protocol, server } => anyhow::bail!(
                 "server '{server}' speaks protocol v{protocol}, this client v{PROTOCOL_VERSION}"
             ),
-            Response::Error { message } => anyhow::bail!("handshake rejected: {message}"),
+            Response::Error { message, .. } => anyhow::bail!("handshake rejected: {message}"),
             other => anyhow::bail!("unexpected handshake reply '{}'", other.kind()),
         }
     }
@@ -187,7 +187,9 @@ impl GpoeoClient {
             match self.recv()? {
                 ServerMsg::Event(Event::Status(r)) => on_event(&r),
                 ServerMsg::Response(Response::Status(r)) => return Ok(r),
-                ServerMsg::Response(Response::Error { message }) => anyhow::bail!("{message}"),
+                ServerMsg::Response(Response::Error { message, .. }) => {
+                    anyhow::bail!("{message}")
+                }
                 ServerMsg::Response(other) => return Err(unexpected("subscribe", other)),
             }
         }
@@ -202,9 +204,30 @@ impl GpoeoClient {
     }
 }
 
+/// A server-side refusal (`Response::Error`) with its machine-readable
+/// category preserved: callers that must react to a specific refusal —
+/// `ctl` backing off on `"rate_limited"` — downcast to this instead of
+/// matching on message strings. `Display` is the bare message, so the
+/// errors existing callers see are unchanged.
+#[derive(Debug)]
+pub struct ApiError {
+    /// The wire `error_kind` (e.g. `"rate_limited"`); empty for plain
+    /// errors.
+    pub kind: String,
+    pub message: String,
+}
+
+impl std::fmt::Display for ApiError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(&self.message)
+    }
+}
+
+impl std::error::Error for ApiError {}
+
 fn unexpected(what: &str, r: Response) -> anyhow::Error {
     match r {
-        Response::Error { message } => anyhow::anyhow!("{message}"),
+        Response::Error { message, kind } => anyhow::Error::new(ApiError { kind, message }),
         other => anyhow::anyhow!("unexpected reply '{}' to {what}", other.kind()),
     }
 }

@@ -17,7 +17,7 @@
 //!
 //! All verbs take `--socket PATH` (default `/tmp/gpoeo.sock`).
 
-use super::client::{check_parity, GpoeoClient};
+use super::client::{check_parity, ApiError, GpoeoClient};
 use super::protocol::SessionReport;
 use crate::policy::{PolicyConfig, PolicySpec};
 use crate::util::cli::Args;
@@ -27,7 +27,7 @@ use std::path::PathBuf;
 pub fn cli_ctl(args: &Args) -> anyhow::Result<()> {
     let socket = PathBuf::from(args.opt_or("socket", "/tmp/gpoeo.sock"));
     let verb = args.positional.first().map(|v| v.as_str()).unwrap_or("");
-    match verb {
+    let r = match verb {
         "apps" => cmd_apps(&socket, args),
         "policies" => cmd_policies(&socket, args),
         "begin" => cmd_begin(&socket, args),
@@ -42,7 +42,24 @@ pub fn cli_ctl(args: &Args) -> anyhow::Result<()> {
             "ctl requires a verb: apps policies begin status end abort watch run parity shutdown"
         ),
         other => anyhow::bail!("unknown ctl verb '{other}'; see `gpoeo --help`"),
+    };
+    // Typed refusals get actionable advice; the daemon answered, so
+    // this is client pacing, not a broken control plane.
+    match r {
+        Err(e) if is_rate_limited(&e) => {
+            Err(e.context("the daemon rate-limited this connection; slow down and retry"))
+        }
+        r => r,
     }
+}
+
+/// Does this error chain bottom out in a `rate_limited` refusal from
+/// the daemon (ADR-009)? The typed kind survives the client's error
+/// mapping precisely so this check never matches message strings.
+fn is_rate_limited(e: &anyhow::Error) -> bool {
+    e.chain()
+        .filter_map(|c| c.downcast_ref::<ApiError>())
+        .any(|a| a.kind == "rate_limited")
 }
 
 /// Options `ctl` itself consumes (transport/addressing/objective) —

@@ -20,7 +20,9 @@ pub mod client;
 pub mod ctl;
 pub mod protocol;
 
-pub use client::{check_parity, run_legacy_session, run_v1_session, GpoeoClient, LegacyClient};
+pub use client::{
+    check_parity, run_legacy_session, run_v1_session, ApiError, GpoeoClient, LegacyClient,
+};
 pub use ctl::cli_ctl;
 pub use protocol::{
     read_frame, result_parity_key, validate_session_name, AppInfo, Event, Frame, PolicyInfo,

@@ -116,7 +116,14 @@ pub enum Response {
     Result(SessionReport),
     Apps(Vec<AppInfo>),
     Policies(Vec<PolicyInfo>),
-    Error { message: String },
+    Error {
+        message: String,
+        /// Machine-readable error category (e.g. `"rate_limited"`),
+        /// empty for plain errors. On the wire as `error_kind` (the
+        /// `kind` field is the message discriminator), omitted when
+        /// empty so pre-existing payloads are byte-identical.
+        kind: String,
+    },
 }
 
 /// A server → client push, emitted only inside a `subscribe` stream.
@@ -359,6 +366,17 @@ impl Response {
     pub fn error(message: impl Into<String>) -> Response {
         Response::Error {
             message: message.into(),
+            kind: String::new(),
+        }
+    }
+
+    /// A typed over-limit answer (ninelives ADR-009): the client can
+    /// match on `error_kind == "rate_limited"` and back off instead of
+    /// string-matching the message.
+    pub fn rate_limited(message: impl Into<String>) -> Response {
+        Response::Error {
+            message: message.into(),
+            kind: "rate_limited".to_string(),
         }
     }
 
@@ -415,10 +433,16 @@ impl Response {
                     ),
                 ),
             ]),
-            Response::Error { message } => Json::obj(vec![
-                ("kind", Json::Str("error".into())),
-                ("message", Json::Str(message.clone())),
-            ]),
+            Response::Error { message, kind } => {
+                let mut fields = vec![
+                    ("kind", Json::Str("error".into())),
+                    ("message", Json::Str(message.clone())),
+                ];
+                if !kind.is_empty() {
+                    fields.push(("error_kind", Json::Str(kind.clone())));
+                }
+                Json::obj(fields)
+            }
         }
     }
 
@@ -499,6 +523,7 @@ impl Response {
                     .as_str()
                     .ok_or_else(|| bad("missing 'message'"))?
                     .to_string(),
+                kind: j.get("error_kind").as_str().unwrap_or("").to_string(),
             }),
             other => Err(format!("unknown server reply kind '{other}'")),
         }
@@ -780,12 +805,30 @@ mod tests {
                 default_config: "switch-cost=0".into(),
             }])),
             ServerMsg::Response(Response::error("no such session")),
+            ServerMsg::Response(Response::rate_limited("rate limit exceeded (2 req/s)")),
             ServerMsg::Event(Event::Status(sample_report())),
         ];
         for msg in msgs {
             let line = msg.to_line();
             let back = ServerMsg::parse_line(line.trim_end()).unwrap();
             assert_eq!(back, msg, "{line}");
+        }
+    }
+
+    #[test]
+    fn error_kind_is_on_the_wire_only_when_set() {
+        // Plain errors must serialize byte-identically to the pre-kind
+        // wire format (old clients parse them untouched); typed errors
+        // carry `error_kind` and survive the roundtrip.
+        let plain = ServerMsg::Response(Response::error("boom")).to_line();
+        assert!(!plain.contains("error_kind"), "{plain}");
+        let typed = ServerMsg::Response(Response::rate_limited("slow down")).to_line();
+        assert!(typed.contains("\"error_kind\""), "{typed}");
+        match ServerMsg::parse_line(typed.trim_end()).unwrap() {
+            ServerMsg::Response(Response::Error { kind, .. }) => {
+                assert_eq!(kind, "rate_limited");
+            }
+            other => panic!("{other:?}"),
         }
     }
 

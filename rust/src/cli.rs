@@ -52,17 +52,26 @@ SUBCOMMANDS:
                                (fig1 fig2 fig3 fig5 fig6 fig7 fig8 fig9
                                 fig10 fig11 fig12 fig13 table3 fig14
                                 fig15 headline policies detect-bench
-                                predict-bench | all); detect-bench
-                                appends streaming-vs-batch detection
-                                cost to BENCH_detection.json (--poll-s F
-                                --min-speedup X fails below X×);
-                                predict-bench appends arena-vs-legacy
-                                all-gears prediction cost to
-                                BENCH_predict.json (--reps N
+                                predict-bench api-bench | all);
+                                detect-bench appends streaming-vs-batch
+                                detection cost to BENCH_detection.json
+                                (--poll-s F --min-speedup X fails below
+                                X×); predict-bench appends
+                                arena-vs-legacy all-gears prediction
+                                cost to BENCH_predict.json (--reps N
                                 --min-speedup X, fails on any
-                                arena↔legacy divergence)
+                                arena↔legacy divergence); api-bench
+                                appends control-plane conns/s, session
+                                churn/s and p50/p99 request latency to
+                                BENCH_api.json (--sessions N --quick
+                                --min-churn X --max-p99-ms F as the CI
+                                floor)
   daemon [--socket PATH]       Begin/End API server (micro-intrusive
-                               mode; --workers N fleet threads). Speaks
+                               mode; --workers N fleet threads, AIMD
+                               auto-scaled up to --max-workers N;
+                               --rate-limit RPS --rate-burst N
+                               per-connection token bucket). Single-
+                               threaded poll(2) reactor speaking
                                control-plane protocol v1 (line-delimited
                                JSON + hello handshake, named concurrent
                                sessions, set_policy with inline config,

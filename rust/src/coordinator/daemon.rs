@@ -1,5 +1,5 @@
 //! The daemon: control-plane API v1 + the legacy Begin/End line protocol
-//! (§2.2.2/§4.2 of the paper; DESIGN.md §6 and §9).
+//! (§2.2.2/§4.2 of the paper; DESIGN.md §6, §9 and §10).
 //!
 //! The paper's deployment model is a two-call micro-intrusive API
 //! (`Begin` at the start of the training region, `End` at the end) with
@@ -14,11 +14,20 @@
 //!   address any session), per-`begin` policy selection with inline
 //!   config resolved through [`PolicyRegistry`], introspection
 //!   (`list_apps`/`list_policies`), streamed `subscribe` telemetry, and
-//!   a `shutdown` request that exits the accept loop and removes the
+//!   a `shutdown` request that exits the event loop and removes the
 //!   socket file.
 //! - anything else → the **legacy protocol**, unchanged: one session per
 //!   connection, `POLICY <name>` / `BEGIN <app> [iters]` / `STATUS` /
 //!   `END` / `QUIT`, answers `OK`/`STATUS`/`RESULT`/`ERR` lines.
+//!
+//! Since the reactor rework, v1 connections are served by a
+//! single-threaded non-blocking `poll(2)` event loop
+//! ([`crate::coordinator::reactor`]) — no thread per connection, fleet
+//! commands dispatched through [`crate::coordinator::Reply`] callbacks.
+//! Legacy connections keep the old per-thread blocking path (the compat
+//! rule: that protocol's tests and clients are untouched). The session
+//! table is sharded by session-id hash so operations on different
+//! sessions never contend on one lock.
 //!
 //! Both protocols resolve `BEGIN` without an iteration count to
 //! [`default_iters`] — the same default `gpoeo run` uses — and both are
@@ -29,149 +38,327 @@
 //! Every failure path answers a typed `Response::Error` (v1) or an
 //! `ERR <reason>` line (legacy) — a client never hangs on a silent
 //! close, and a malformed line never kills the connection loop. A failed
-//! `accept()` is logged and skipped, never fatal to the daemon.
+//! `accept()` is logged (rate-limited) and skipped, never fatal to the
+//! daemon.
 
-use crate::api::{
-    read_frame, AppInfo, Event, Frame, PolicyInfo, Request, Response, ServerMsg, SessionReport,
-    MAX_LINE_BYTES, PROTOCOL_VERSION,
-};
-use crate::coordinator::{default_iters, Fleet, SessionHandle, SessionStatus};
+use crate::api::{AppInfo, SessionReport};
+use crate::coordinator::reactor::Reactor;
+use crate::coordinator::{default_iters, AimdCfg, Fleet, SessionHandle, SessionStatus};
 use crate::policy::{PolicyRegistry, PolicySpec};
 use crate::sim::{find_app, make_app, AppParams, Spec};
 use std::collections::HashMap;
-use std::io::{BufRead, BufReader, Write};
+use std::io::{BufRead, Write};
 use std::os::unix::net::{UnixListener, UnixStream};
-use std::path::{Path, PathBuf};
+use std::path::Path;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
 
 /// Controller ticks driven per `STATUS`/`status` poll.
-const STATUS_TICKS: u64 = 200;
+pub(crate) const STATUS_TICKS: u64 = 200;
+
+/// Control-plane tuning. [`DaemonCfg::fixed`] reproduces the historical
+/// behavior exactly: a fixed-size worker pool and no rate limiting.
+#[derive(Debug, Clone, Copy)]
+pub struct DaemonCfg {
+    /// AIMD worker-pool ceiling (ninelives P3.04). Equal to the initial
+    /// worker count → the pool never scales.
+    pub max_workers: usize,
+    /// Per-connection request budget, requests/second (ninelives
+    /// ADR-009). `0.0` disables rate limiting.
+    pub rate_limit_rps: f64,
+    /// Token-bucket burst capacity (clamped to ≥ 1 when limiting is on).
+    pub rate_burst: f64,
+}
+
+impl DaemonCfg {
+    pub fn fixed(workers: usize) -> DaemonCfg {
+        DaemonCfg {
+            max_workers: workers,
+            rate_limit_rps: 0.0,
+            rate_burst: 0.0,
+        }
+    }
+}
 
 pub struct Daemon {
     fleet: Arc<Fleet>,
     shared: Arc<Shared>,
+    cfg: DaemonCfg,
 }
 
-/// Daemon-global state shared by every connection: the named-session
-/// table and the shutdown latch.
-struct Shared {
-    sessions: Mutex<HashMap<String, Arc<SessionEntry>>>,
-    next_id: AtomicU64,
-    shutdown: AtomicBool,
+/// Daemon-global state shared by every connection: the sharded
+/// named-session table and the shutdown latch.
+pub(crate) struct Shared {
+    pub(crate) sessions: SessionTable,
+    pub(crate) shutdown: AtomicBool,
 }
 
 /// One v1 session. The handle moves out (`None`) exactly once, when an
 /// `end`/`abort` claims it — concurrent claims lose cleanly instead of
 /// double-ending.
-struct SessionEntry {
-    handle: Mutex<Option<SessionHandle>>,
+pub(crate) struct SessionEntry {
+    pub(crate) handle: Mutex<Option<SessionHandle>>,
 }
 
-impl Daemon {
-    /// Build a daemon backed by a fleet of `workers` threads.
-    pub fn new(spec: Arc<Spec>, workers: usize) -> Daemon {
-        Daemon {
-            fleet: Arc::new(Fleet::new(spec, workers)),
-            shared: Arc::new(Shared {
-                sessions: Mutex::new(HashMap::new()),
-                next_id: AtomicU64::new(1),
-                shutdown: AtomicBool::new(false),
-            }),
+/// The daemon-global session table, sharded by FNV-1a hash of the
+/// session id: `begin`/`status`/`end`/`subscribe` on different sessions
+/// lock different shards and never contend on one mutex. Generated ids
+/// and client names share one id space (a reservation in any shard
+/// claims the id everywhere, because lookups hash the same way).
+pub(crate) struct SessionTable {
+    shards: Vec<Mutex<HashMap<String, Arc<SessionEntry>>>>,
+    next_id: AtomicU64,
+}
+
+fn fnv1a(s: &str) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in s.as_bytes() {
+        h ^= u64::from(*b);
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+impl SessionTable {
+    /// `shards` is rounded up to a power of two so the hash maps onto a
+    /// shard with a mask instead of a modulo.
+    pub(crate) fn new(shards: usize) -> SessionTable {
+        let n = shards.max(1).next_power_of_two();
+        SessionTable {
+            shards: (0..n).map(|_| Mutex::new(HashMap::new())).collect(),
+            next_id: AtomicU64::new(1),
         }
     }
 
-    /// Serve on a Unix socket (one lightweight thread per connection;
-    /// the heavy lifting happens on the fleet workers) until a v1
-    /// `shutdown` request arrives. The socket file is removed on
+    fn shard(&self, id: &str) -> &Mutex<HashMap<String, Arc<SessionEntry>>> {
+        let mask = self.shards.len() as u64 - 1;
+        &self.shards[(fnv1a(id) & mask) as usize]
+    }
+
+    /// Reserve an id with an empty entry (the handle arrives via
+    /// [`SessionTable::fulfill`] as soon as the fleet begin is
+    /// dispatched — worker command queues are FIFO, so requests
+    /// pipelined behind the begin land after it). A client-proposed
+    /// name must be free; a generated `s<N>` skips any ids a client
+    /// happened to claim (names share the id space).
+    pub(crate) fn reserve(&self, name: Option<String>) -> anyhow::Result<String> {
+        let entry = || {
+            Arc::new(SessionEntry {
+                handle: Mutex::new(None),
+            })
+        };
+        match name {
+            Some(n) => {
+                let mut map = self.shard(&n).lock().expect("session shard poisoned");
+                if map.contains_key(&n) {
+                    anyhow::bail!("session '{n}' already exists");
+                }
+                map.insert(n.clone(), entry());
+                Ok(n)
+            }
+            None => loop {
+                let candidate = format!("s{}", self.next_id.fetch_add(1, Ordering::SeqCst));
+                let mut map = self
+                    .shard(&candidate)
+                    .lock()
+                    .expect("session shard poisoned");
+                if !map.contains_key(&candidate) {
+                    map.insert(candidate.clone(), entry());
+                    return Ok(candidate);
+                }
+            },
+        }
+    }
+
+    /// Install the live handle into a reserved entry. The reservation
+    /// cannot have been claimed meanwhile: end/abort on an empty entry
+    /// answer "no longer active" without removing it.
+    pub(crate) fn fulfill(&self, id: &str, h: SessionHandle) {
+        let entry = self.get(id).expect("reserved session entry vanished");
+        *entry.handle.lock().expect("session entry poisoned") = Some(h);
+    }
+
+    pub(crate) fn get(&self, id: &str) -> Option<Arc<SessionEntry>> {
+        self.shard(id)
+            .lock()
+            .expect("session shard poisoned")
+            .get(id)
+            .cloned()
+    }
+
+    pub(crate) fn remove(&self, id: &str) -> Option<Arc<SessionEntry>> {
+        self.shard(id)
+            .lock()
+            .expect("session shard poisoned")
+            .remove(id)
+    }
+
+    /// Remove `id` only while it still maps to `entry`. Deferred
+    /// cleanups (a failed begin, a finished end) use this so they can
+    /// never evict a successor session that reused the name after the
+    /// original entry was already gone.
+    pub(crate) fn remove_if(&self, id: &str, entry: &Arc<SessionEntry>) {
+        let mut map = self.shard(id).lock().expect("session shard poisoned");
+        if map.get(id).is_some_and(|e| Arc::ptr_eq(e, entry)) {
+            map.remove(id);
+        }
+    }
+
+    /// Total live sessions (reserved + fulfilled), across all shards.
+    pub(crate) fn len(&self) -> usize {
+        self.shards
+            .iter()
+            .map(|s| s.lock().expect("session shard poisoned").len())
+            .sum()
+    }
+}
+
+impl Daemon {
+    /// Build a daemon backed by a fixed fleet of `workers` threads.
+    pub fn new(spec: Arc<Spec>, workers: usize) -> Daemon {
+        Daemon::with_cfg(spec, workers, DaemonCfg::fixed(workers))
+    }
+
+    /// Build a daemon with explicit control-plane tuning: an AIMD
+    /// worker-pool band (`workers..=cfg.max_workers`) and optional
+    /// per-connection rate limiting.
+    pub fn with_cfg(spec: Arc<Spec>, workers: usize, cfg: DaemonCfg) -> Daemon {
+        let fleet = if cfg.max_workers > workers {
+            Fleet::with_scaling(spec, workers, AimdCfg::bounded(workers, cfg.max_workers))
+        } else {
+            Fleet::new(spec, workers)
+        };
+        Daemon {
+            fleet: Arc::new(fleet),
+            shared: Arc::new(Shared {
+                sessions: SessionTable::new(16),
+                shutdown: AtomicBool::new(false),
+            }),
+            cfg,
+        }
+    }
+
+    /// Current fleet pool size (moves over time under AIMD scaling).
+    pub fn num_workers(&self) -> usize {
+        self.fleet.num_workers()
+    }
+
+    /// Serve on a Unix socket until a v1 `shutdown` request arrives. v1
+    /// connections run on the non-blocking reactor; legacy connections
+    /// get the old thread-per-connection path; the heavy lifting happens
+    /// on the fleet workers either way. The socket file is removed on
     /// graceful exit, so restarts never depend on stale-socket cleanup.
     pub fn serve(&self, socket_path: &Path) -> anyhow::Result<()> {
         let _ = std::fs::remove_file(socket_path);
         let listener = UnixListener::bind(socket_path)?;
         eprintln!(
-            "gpoeo daemon listening on {} ({} fleet workers, protocol v{PROTOCOL_VERSION} + legacy)",
+            "gpoeo daemon listening on {} ({} fleet workers, reactor, protocol v1 + legacy)",
             socket_path.display(),
             self.fleet.num_workers()
         );
-        for stream in listener.incoming() {
-            if self.shared.shutdown.load(Ordering::SeqCst) {
-                break;
-            }
-            // A transient accept failure (EMFILE, ECONNABORTED, ...)
-            // must not take the whole daemon down with it.
-            let Some(stream) = accept_stream(stream) else {
-                continue;
-            };
-            let fleet = self.fleet.clone();
-            let shared = self.shared.clone();
-            let path = socket_path.to_path_buf();
-            std::thread::spawn(move || {
-                if let Err(e) = handle_connection(stream, fleet, shared, path) {
-                    eprintln!("daemon connection error: {e}");
-                }
-            });
-        }
+        let r = Reactor::new(self.fleet.clone(), self.shared.clone(), self.cfg)?.serve(listener);
         let _ = std::fs::remove_file(socket_path);
-        Ok(())
+        r
+    }
+}
+
+// ---------------------------------------------------------------------
+// Accept-failure rate limiting.
+// ---------------------------------------------------------------------
+
+/// Log throttle + retry backoff for failed `accept()`s. A persistent
+/// failure (EMFILE until fds free up) used to spam one log line per
+/// failed accept in a tight loop; the gate logs once per window with a
+/// suppressed-count summary and tells the reactor to stop re-polling the
+/// listener for a short backoff.
+pub(crate) struct AcceptGate {
+    /// Minimum spacing between log lines.
+    window: Duration,
+    /// How long to stop accepting after a failure.
+    backoff: Duration,
+    last_log: Option<Instant>,
+    suppressed: u64,
+    resume_at: Option<Instant>,
+}
+
+impl AcceptGate {
+    pub(crate) fn new() -> AcceptGate {
+        AcceptGate::with_timing(Duration::from_secs(1), Duration::from_millis(50))
+    }
+
+    pub(crate) fn with_timing(window: Duration, backoff: Duration) -> AcceptGate {
+        AcceptGate {
+            window,
+            backoff,
+            last_log: None,
+            suppressed: 0,
+            resume_at: None,
+        }
+    }
+
+    /// Record a failed accept at `now`. `Some(suppressed)` means "log
+    /// now" and carries how many failures were swallowed since the last
+    /// logged one; `None` means stay quiet.
+    pub(crate) fn on_failure(&mut self, now: Instant) -> Option<u64> {
+        self.resume_at = Some(now + self.backoff);
+        match self.last_log {
+            Some(t) if now.duration_since(t) < self.window => {
+                self.suppressed += 1;
+                None
+            }
+            _ => {
+                self.last_log = Some(now);
+                Some(std::mem::take(&mut self.suppressed))
+            }
+        }
+    }
+
+    /// Should the accept loop hold off (skip polling the listener)?
+    pub(crate) fn in_backoff(&self, now: Instant) -> bool {
+        self.resume_at.is_some_and(|t| now < t)
     }
 }
 
 /// The accept-loop body: a successful accept yields the stream; a failed
-/// one is logged and skipped (`None`) after a short sleep, so a
-/// *persistent* failure (EMFILE until fds free up) degrades to a bounded
-/// retry cadence instead of a 100%-CPU log-spam spin. Extracted so the
-/// never-kill-the-daemon contract is unit-testable without a listener.
-fn accept_stream(r: std::io::Result<UnixStream>) -> Option<UnixStream> {
+/// one is logged through the gate and skipped (`None`), so a *persistent*
+/// failure degrades to one log line per gate window (with a suppressed
+/// count) and a bounded retry cadence instead of a 100%-CPU log-spam
+/// spin. Extracted so the never-kill-the-daemon contract is unit-testable
+/// without a listener.
+pub(crate) fn accept_stream(
+    r: std::io::Result<UnixStream>,
+    gate: &mut AcceptGate,
+    now: Instant,
+) -> Option<UnixStream> {
     match r {
         Ok(s) => Some(s),
         Err(e) => {
-            eprintln!("daemon accept error: {e} (continuing to serve)");
-            std::thread::sleep(std::time::Duration::from_millis(50));
+            match gate.on_failure(now) {
+                Some(0) => eprintln!("daemon accept error: {e} (continuing to serve)"),
+                Some(n) => eprintln!(
+                    "daemon accept error: {e} (continuing to serve; {n} similar suppressed)"
+                ),
+                None => {}
+            }
             None
         }
     }
 }
 
+// ---------------------------------------------------------------------
+// Shared v1 helpers (used by the reactor).
+// ---------------------------------------------------------------------
+
 /// The optional iteration count of a `begin`: explicit wins, absent
 /// means the app's default workload size — the *same* default `gpoeo
 /// run` uses, so daemon and CLI never disagree on what "run this app"
 /// means. (The legacy daemon hardcoded 300 here.)
-fn resolve_iters(requested: Option<u64>, app: &AppParams) -> u64 {
+pub(crate) fn resolve_iters(requested: Option<u64>, app: &AppParams) -> u64 {
     requested.unwrap_or_else(|| default_iters(app))
 }
 
-/// Sniff the first byte to pick the protocol: v1 frames are JSON objects
-/// so they always start with `{`; no legacy command does.
-fn handle_connection(
-    stream: UnixStream,
-    fleet: Arc<Fleet>,
-    shared: Arc<Shared>,
-    socket_path: PathBuf,
-) -> anyhow::Result<()> {
-    let writer = stream.try_clone()?;
-    let mut reader = BufReader::new(stream);
-    let first = reader.fill_buf()?.first().copied();
-    match first {
-        None => Ok(()), // connected and left without a byte
-        Some(b'{') => handle_v1(reader, writer, &fleet, &shared, &socket_path),
-        Some(_) => handle_legacy(reader, writer, &fleet),
-    }
-}
-
-// ---------------------------------------------------------------------
-// Protocol v1.
-// ---------------------------------------------------------------------
-
-fn send_msg(writer: &mut UnixStream, msg: &ServerMsg) -> std::io::Result<()> {
-    writer.write_all(msg.to_line().as_bytes())?;
-    writer.flush()
-}
-
-fn send_response(writer: &mut UnixStream, r: Response) -> std::io::Result<()> {
-    send_msg(writer, &ServerMsg::Response(r))
-}
-
-fn report(id: &str, st: SessionStatus) -> SessionReport {
+pub(crate) fn report(id: &str, st: SessionStatus) -> SessionReport {
     SessionReport {
         session: id.to_string(),
         iterations: st.iterations,
@@ -184,260 +371,49 @@ fn report(id: &str, st: SessionStatus) -> SessionReport {
     }
 }
 
-fn handle_v1(
-    mut reader: BufReader<UnixStream>,
-    mut writer: UnixStream,
-    fleet: &Arc<Fleet>,
-    shared: &Arc<Shared>,
-    socket_path: &Path,
-) -> anyhow::Result<()> {
-    // The connection's default policy for `begin`s without an inline one.
-    let mut default_policy = PolicySpec::registered("gpoeo");
-    let mut hello_done = false;
-
-    loop {
-        let line = match read_frame(&mut reader, MAX_LINE_BYTES)? {
-            Frame::Eof => break,
-            Frame::Oversized => {
-                send_response(
-                    &mut writer,
-                    Response::error(format!("request line exceeds {MAX_LINE_BYTES} bytes")),
-                )?;
-                continue;
-            }
-            Frame::Line(l) => l,
-        };
-        if line.trim().is_empty() {
-            continue;
-        }
-        let req = match Request::parse_line(&line) {
-            Ok(r) => r,
-            Err(msg) => {
-                send_response(&mut writer, Response::error(msg))?;
-                continue;
-            }
-        };
-        if !hello_done && !matches!(req, Request::Hello { .. }) {
-            send_response(
-                &mut writer,
-                Response::error(format!(
-                    "handshake required: send {{\"kind\":\"hello\",\"v\":{PROTOCOL_VERSION}}} first"
-                )),
-            )?;
-            continue;
-        }
-        match req {
-            Request::Hello { version } => {
-                if version == 0 || version > PROTOCOL_VERSION {
-                    send_response(
-                        &mut writer,
-                        Response::error(format!(
-                            "unsupported protocol version {version} (this server speaks v{PROTOCOL_VERSION})"
-                        )),
-                    )?;
-                } else {
-                    hello_done = true;
-                    send_response(
-                        &mut writer,
-                        Response::Hello {
-                            protocol: PROTOCOL_VERSION,
-                            server: format!("gpoeo {}", env!("CARGO_PKG_VERSION")),
-                        },
-                    )?;
-                }
-            }
-            Request::Begin {
-                app,
-                iters,
-                name,
-                policy,
-            } => {
-                let spec = policy.unwrap_or_else(|| default_policy.clone());
-                let r = begin_session(fleet, shared, &app, iters, name, spec);
-                send_response(
-                    &mut writer,
-                    match r {
-                        Ok(session) => Response::Begun { session },
-                        Err(e) => Response::error(format!("{e:#}")),
-                    },
-                )?;
-            }
-            Request::Status { session } => {
-                let r = with_session(shared, &session, |h| h.step(STATUS_TICKS));
-                send_response(
-                    &mut writer,
-                    match r {
-                        Ok(st) => Response::Status(report(&session, st)),
-                        Err(e) => Response::error(format!("{e:#}")),
-                    },
-                )?;
-            }
-            Request::End { session } => {
-                // Claim the handle, then run to completion *outside* any
-                // lock: end() blocks until the target is reached, and
-                // other sessions (and other connections) must keep
-                // being served meanwhile.
-                let r = claim_session(shared, &session).and_then(|h| {
-                    let st = h.end();
-                    shared.sessions.lock().unwrap().remove(&session);
-                    st
-                });
-                send_response(
-                    &mut writer,
-                    match r {
-                        Ok(st) => Response::Result(report(&session, st)),
-                        Err(e) => Response::error(format!("{e:#}")),
-                    },
-                )?;
-            }
-            Request::Abort { session } => {
-                let r = claim_session(shared, &session).map(|h| {
-                    h.abort();
-                    shared.sessions.lock().unwrap().remove(&session);
-                });
-                send_response(
-                    &mut writer,
-                    match r {
-                        Ok(()) => Response::Ok {
-                            detail: format!("session {session} aborted"),
-                        },
-                        Err(e) => Response::error(format!("{e:#}")),
-                    },
-                )?;
-            }
-            Request::SetPolicy { policy } => {
-                match PolicyRegistry::global().get(&policy.name) {
-                    Ok(_) => {
-                        let detail = format!("policy {}", policy.name);
-                        default_policy = policy;
-                        send_response(&mut writer, Response::Ok { detail })?;
-                    }
-                    Err(e) => send_response(&mut writer, Response::error(format!("{e:#}")))?,
-                };
-            }
-            Request::ListApps => {
-                let r = list_apps(fleet.spec());
-                send_response(
-                    &mut writer,
-                    match r {
-                        Ok(apps) => Response::Apps(apps),
-                        Err(e) => Response::error(format!("{e:#}")),
-                    },
-                )?;
-            }
-            Request::ListPolicies => {
-                let ps = PolicyRegistry::global()
-                    .iter()
-                    .map(|b| PolicyInfo {
-                        name: b.name().to_string(),
-                        description: b.describe().to_string(),
-                        default_config: b.default_config(),
-                    })
-                    .collect();
-                send_response(&mut writer, Response::Policies(ps))?;
-            }
-            Request::Subscribe {
-                session,
-                every_ticks,
-                max_events,
-            } => subscribe(shared, &mut writer, &session, every_ticks, max_events)?,
-            Request::Shutdown => {
-                send_response(
-                    &mut writer,
-                    Response::Ok {
-                        detail: "daemon shutting down".to_string(),
-                    },
-                )?;
-                shared.shutdown.store(true, Ordering::SeqCst);
-                // Wake the accept loop so it observes the latch; the
-                // connect itself is inert (dropped before any byte).
-                let _ = UnixStream::connect(socket_path);
-                break;
-            }
-        }
-    }
-    Ok(())
+/// Everything a `begin` resolves *before* any fleet traffic: the app,
+/// the iteration target, and a reserved table slot. Failing here (bad
+/// app, unknown policy, taken name) costs no worker round-trip.
+pub(crate) struct PreparedBegin {
+    pub(crate) id: String,
+    pub(crate) app: AppParams,
+    pub(crate) n_iters: u64,
 }
 
-/// Start a session and register it in the daemon-global table under its
-/// (client-proposed or generated) id.
-fn begin_session(
+pub(crate) fn prepare_begin(
     fleet: &Arc<Fleet>,
-    shared: &Arc<Shared>,
+    shared: &Shared,
     app_name: &str,
     iters: Option<u64>,
     name: Option<String>,
-    policy: PolicySpec,
-) -> anyhow::Result<String> {
+    policy: &PolicySpec,
+) -> anyhow::Result<PreparedBegin> {
     let app = find_app(fleet.spec(), app_name)?;
     let n_iters = resolve_iters(iters, &app);
     // Fail on unknown policy names here, with the registry's canonical
     // error, before any fleet traffic.
     PolicyRegistry::global().get(&policy.name)?;
-    // Reserve an id first (an empty entry), then begin outside the map
-    // lock: a Begin can trigger a worker's first predictor load, and the
-    // table must stay responsive to other connections meanwhile. A
-    // client-proposed name must be free; a generated `s<N>` skips any
-    // ids a client happened to claim (names share the id space).
-    let id = {
-        let mut map = shared.sessions.lock().unwrap();
-        let id = match name {
-            Some(n) => {
-                if map.contains_key(&n) {
-                    anyhow::bail!("session '{n}' already exists");
-                }
-                n
-            }
-            None => loop {
-                let candidate = format!("s{}", shared.next_id.fetch_add(1, Ordering::SeqCst));
-                if !map.contains_key(&candidate) {
-                    break candidate;
-                }
-            },
-        };
-        map.insert(
-            id.clone(),
-            Arc::new(SessionEntry {
-                handle: Mutex::new(None),
-            }),
-        );
-        id
-    };
-    match fleet.begin(app, policy, n_iters) {
-        Ok(h) => {
-            let map = shared.sessions.lock().unwrap();
-            // The reservation cannot have been claimed: end/abort on an
-            // empty entry answer "no longer active" without removing it.
-            *map[&id].handle.lock().unwrap() = Some(h);
-            Ok(id)
-        }
-        Err(e) => {
-            shared.sessions.lock().unwrap().remove(&id);
-            Err(e)
-        }
-    }
+    let id = shared.sessions.reserve(name)?;
+    Ok(PreparedBegin { id, app, n_iters })
 }
 
 fn lookup(shared: &Shared, id: &str) -> anyhow::Result<Arc<SessionEntry>> {
     shared
         .sessions
-        .lock()
-        .unwrap()
         .get(id)
-        .cloned()
         .ok_or_else(|| anyhow::anyhow!("no such session '{id}'"))
 }
 
 /// Run `f` on the live handle of session `id` (held under the entry
 /// lock — concurrent polls of one session serialize; different sessions
 /// don't).
-fn with_session<T>(
+pub(crate) fn with_session<T>(
     shared: &Shared,
     id: &str,
     f: impl FnOnce(&SessionHandle) -> anyhow::Result<T>,
 ) -> anyhow::Result<T> {
     let entry = lookup(shared, id)?;
-    let guard = entry.handle.lock().unwrap();
+    let guard = entry.handle.lock().expect("session entry poisoned");
     match guard.as_ref() {
         Some(h) => f(h),
         None => anyhow::bail!("session '{id}' is no longer active"),
@@ -446,47 +422,26 @@ fn with_session<T>(
 
 /// Move the handle out of session `id` (for `end`/`abort`). Exactly one
 /// claimer wins; the table entry itself is removed by the caller once
-/// the terminal operation finishes.
-fn claim_session(shared: &Shared, id: &str) -> anyhow::Result<SessionHandle> {
-    let entry = lookup(shared, id)?;
-    let mut guard = entry.handle.lock().unwrap();
-    guard
-        .take()
-        .ok_or_else(|| anyhow::anyhow!("session '{id}' is no longer active"))
-}
-
-/// Drive the session and stream `Event::Status` telemetry: one event per
-/// `every_ticks` ticks until the session reaches its target (or
-/// `max_events` events, when non-zero), then a final `Response::Status`
-/// snapshot ends the stream. The session stays registered — `end` still
-/// owns the result.
-fn subscribe(
-    shared: &Arc<Shared>,
-    writer: &mut UnixStream,
+/// the terminal operation finishes — via [`SessionTable::remove_if`]
+/// with the returned entry, so a deferred cleanup cannot evict a
+/// successor session that reused the name.
+pub(crate) fn claim_session(
+    shared: &Shared,
     id: &str,
-    every_ticks: u64,
-    max_events: u64,
-) -> std::io::Result<()> {
-    let mut sent = 0u64;
-    let last = loop {
-        // Re-acquire per slice so ends/aborts/other subscribers of the
-        // same session interleave instead of starving.
-        let st = match with_session(shared, id, |h| h.step(every_ticks)) {
-            Ok(st) => st,
-            Err(e) => return send_response(writer, Response::error(format!("{e:#}"))),
-        };
-        send_msg(writer, &ServerMsg::Event(Event::Status(report(id, st))))?;
-        sent += 1;
-        if st.done || (max_events > 0 && sent >= max_events) {
-            break st;
-        }
-    };
-    send_response(writer, Response::Status(report(id, last)))
+) -> anyhow::Result<(Arc<SessionEntry>, SessionHandle)> {
+    let entry = lookup(shared, id)?;
+    let h = entry
+        .handle
+        .lock()
+        .expect("session entry poisoned")
+        .take()
+        .ok_or_else(|| anyhow::anyhow!("session '{id}' is no longer active"))?;
+    Ok((entry, h))
 }
 
 /// `list_apps`: every app the daemon can `begin`, with the workload
 /// size a default `begin` would run.
-fn list_apps(spec: &Arc<Spec>) -> anyhow::Result<Vec<AppInfo>> {
+pub(crate) fn list_apps(spec: &Arc<Spec>) -> anyhow::Result<Vec<AppInfo>> {
     let mut out = Vec::new();
     for (sname, suite) in &spec.suites {
         for e in &suite.apps {
@@ -524,9 +479,12 @@ fn parse_iters(tok: Option<&str>) -> Result<Option<u64>, String> {
     }
 }
 
-fn handle_legacy(
-    reader: BufReader<UnixStream>,
-    mut writer: UnixStream,
+/// The blocking legacy-protocol loop. Generic over reader/writer so the
+/// reactor can hand a sniffed connection over with its first bytes
+/// re-attached (a `Chain` of the buffered prefix and the raw stream).
+pub(crate) fn handle_legacy<R: BufRead, W: Write>(
+    reader: R,
+    mut writer: W,
     fleet: &Arc<Fleet>,
 ) -> anyhow::Result<()> {
     // The connection's active session, if any. Dropped (aborted) if the
@@ -631,7 +589,7 @@ fn handle_legacy(
 mod tests {
     use super::*;
     use crate::model::Predictor;
-    use std::io::BufRead;
+    use std::io::{BufRead, BufReader};
 
     /// Start a daemon on a fresh socket; returns the socket path.
     fn spawn_daemon(tag: &str, workers: usize) -> std::path::PathBuf {
@@ -764,12 +722,94 @@ mod tests {
 
     #[test]
     fn accept_failure_is_skipped_not_fatal() {
-        // The accept-loop body: an Err must be swallowed (logged) and
-        // answered with None — never propagated to kill serve().
+        // The accept-loop body: an Err must be swallowed (logged through
+        // the gate) and answered with None — never propagated to kill
+        // serve().
+        let mut gate = AcceptGate::new();
+        let now = Instant::now();
         let err = std::io::Error::other("simulated EMFILE");
-        assert!(accept_stream(Err(err)).is_none());
+        assert!(accept_stream(Err(err), &mut gate, now).is_none());
         let (a, _b) = UnixStream::pair().unwrap();
-        assert!(accept_stream(Ok(a)).is_some());
+        assert!(accept_stream(Ok(a), &mut gate, now).is_some());
+    }
+
+    #[test]
+    fn accept_gate_logs_once_per_window_with_a_suppressed_count() {
+        // A persistent EMFILE used to log one line per failed accept in
+        // a tight loop. The gate: first failure logs immediately, the
+        // storm inside the window stays silent, and the next window's
+        // line carries the suppressed count.
+        let window = Duration::from_secs(1);
+        let backoff = Duration::from_millis(50);
+        let mut gate = AcceptGate::with_timing(window, backoff);
+        let t0 = Instant::now();
+
+        assert_eq!(gate.on_failure(t0), Some(0), "first failure logs");
+        // 100 more failures inside the window: all suppressed.
+        for i in 1..=100u64 {
+            let t = t0 + Duration::from_millis(i);
+            assert_eq!(gate.on_failure(t), None, "failure {i} must be quiet");
+        }
+        // Past the window: one line, carrying the 100 suppressed.
+        let t = t0 + window + Duration::from_millis(1);
+        assert_eq!(gate.on_failure(t), Some(100));
+        // The counter reset with that summary.
+        let t = t0 + window + Duration::from_millis(2);
+        assert_eq!(gate.on_failure(t), None);
+
+        // Backoff: active right after a failure, expired after the pause.
+        assert!(gate.in_backoff(t));
+        assert!(!gate.in_backoff(t + backoff));
+
+        // The whole storm still answers None (skip), never an abort —
+        // and a healthy accept goes straight through mid-storm.
+        let err = std::io::Error::other("simulated EMFILE");
+        assert!(accept_stream(Err(err), &mut gate, t).is_none());
+        let (a, _b) = UnixStream::pair().unwrap();
+        assert!(accept_stream(Ok(a), &mut gate, t).is_some());
+    }
+
+    #[test]
+    fn session_table_shards_ids_and_reserves_uniquely() {
+        let t = SessionTable::new(16);
+        // Named reservation: once, then refused while live.
+        assert_eq!(t.reserve(Some("train-a".into())).unwrap(), "train-a");
+        let err = t.reserve(Some("train-a".into())).unwrap_err().to_string();
+        assert!(err.contains("already exists"), "{err}");
+
+        // Generated ids skip squatted names (shared id space), stay
+        // unique, and land in whatever shard their hash picks.
+        assert_eq!(t.reserve(Some("s1".into())).unwrap(), "s1");
+        assert_eq!(t.reserve(Some("s2".into())).unwrap(), "s2");
+        let mut seen = std::collections::HashSet::new();
+        seen.extend(["train-a".to_string(), "s1".into(), "s2".into()]);
+        for _ in 0..200 {
+            let id = t.reserve(None).unwrap();
+            assert!(seen.insert(id.clone()), "duplicate id {id}");
+        }
+        assert_eq!(t.len(), 203);
+
+        // Remove frees the name for re-reservation.
+        assert!(t.remove("train-a").is_some());
+        assert!(t.get("train-a").is_none());
+        assert!(t.reserve(Some("train-a".into())).is_ok());
+        assert!(t.remove("nope").is_none());
+    }
+
+    #[test]
+    fn session_table_shard_count_rounds_to_power_of_two() {
+        // The mask-based shard pick requires a power-of-two count; odd
+        // requests round up rather than biasing the distribution.
+        for n in [1, 3, 16, 17] {
+            let t = SessionTable::new(n);
+            assert!(t.shards.len().is_power_of_two(), "{n}");
+            assert!(t.shards.len() >= n.max(1), "{n}");
+            // Every id maps to a valid shard (the mask can't overflow).
+            for i in 0..64 {
+                let id = format!("s{i}");
+                let _ = t.shard(&id);
+            }
+        }
     }
 
     #[test]

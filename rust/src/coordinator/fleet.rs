@@ -32,8 +32,9 @@ use std::cell::OnceCell;
 use std::collections::{HashMap, VecDeque};
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex, RwLock};
 use std::thread::JoinHandle;
+use std::time::Instant;
 
 /// One unit of sweep work: run `policy` on `app` for `n_iters` work
 /// units, scored against a fresh NVIDIA-default baseline. The policy is
@@ -74,6 +75,71 @@ struct BeginReq {
     target_iters: u64,
 }
 
+/// One-shot completion callback for a fleet command.
+///
+/// The old fleet answered every command over a dedicated mpsc channel,
+/// which forces the caller to block on `recv()` — a dead end for the
+/// single-threaded reactor. A `Reply` is the generalization: the worker
+/// invokes it with `Some(value)` when the command completes, and if the
+/// worker dies (or shuts down) with the reply still pending, dropping it
+/// invokes the callback with `None` so the caller can observe the loss
+/// instead of hanging. Blocking callers are recovered by pointing the
+/// callback at a channel ([`Reply::channel_pair`], used by
+/// `Fleet::begin` and `SessionHandle::step`/`end`); the reactor points
+/// it at its completion queue plus a wake-pipe byte.
+pub struct Reply<T> {
+    f: Option<Box<dyn FnOnce(Option<T>) + Send>>,
+}
+
+impl<T: Send + 'static> Reply<T> {
+    pub fn new(f: impl FnOnce(Option<T>) + Send + 'static) -> Reply<T> {
+        Reply {
+            f: Some(Box::new(f)),
+        }
+    }
+
+    /// Deliver the value. Consumes the reply; each reply fires exactly
+    /// once (here, or with `None` on drop).
+    pub fn send(mut self, v: T) {
+        if let Some(f) = self.f.take() {
+            f(Some(v));
+        }
+    }
+
+    /// Wrap with a pre-hook that runs right before the callback fires —
+    /// on success *and* on the dropped-reply path, so bookkeeping (like
+    /// a load-counter decrement) happens exactly once either way.
+    pub fn before(mut self, pre: impl FnOnce() + Send + 'static) -> Reply<T> {
+        let f = self.f.take().expect("reply already consumed");
+        Reply {
+            f: Some(Box::new(move |v| {
+                pre();
+                f(v)
+            })),
+        }
+    }
+
+    /// A reply wired to a channel, for blocking callers: `recv()` yields
+    /// `Some(value)` on completion and `None` if the worker vanished.
+    fn channel_pair() -> (Reply<T>, Receiver<Option<T>>) {
+        let (tx, rx) = channel();
+        (
+            Reply::new(move |v| {
+                let _ = tx.send(v);
+            }),
+            rx,
+        )
+    }
+}
+
+impl<T> Drop for Reply<T> {
+    fn drop(&mut self) {
+        if let Some(f) = self.f.take() {
+            f(None);
+        }
+    }
+}
+
 // Large payloads are boxed so the enum stays small for the frequent
 // Step/End/Drop traffic.
 enum Cmd {
@@ -88,19 +154,19 @@ enum Cmd {
     Begin {
         id: u64,
         req: Box<BeginReq>,
-        reply: Sender<anyhow::Result<()>>,
+        reply: Reply<anyhow::Result<()>>,
     },
     Step {
         id: u64,
         max_ticks: u64,
-        reply: Sender<anyhow::Result<SessionStatus>>,
+        reply: Reply<anyhow::Result<SessionStatus>>,
     },
     End {
         id: u64,
         /// Errant-policy virtual-time cap, computed on the first slice
         /// and carried through the re-enqueued slices.
         budget_s: Option<f64>,
-        reply: Sender<anyhow::Result<SessionStatus>>,
+        reply: Reply<anyhow::Result<SessionStatus>>,
     },
     Drop {
         id: u64,
@@ -128,12 +194,108 @@ impl WorkerHandle {
     }
 }
 
+/// AIMD worker-pool scaling knobs (ninelives P3.04): additive growth
+/// under sustained backlog, multiplicative (halving) back-off once the
+/// queue has stayed empty for a while.
+#[derive(Debug, Clone, Copy)]
+pub struct AimdCfg {
+    /// Never shrink below this many workers.
+    pub min_workers: usize,
+    /// Never grow beyond this many workers.
+    pub max_workers: usize,
+    /// Queue depth above `live_workers × backlog_per_worker` counts as
+    /// backlogged.
+    pub backlog_per_worker: usize,
+    /// Backlog sustained for this long → grow by one worker.
+    pub grow_after_s: f64,
+    /// Empty queue sustained for this long → halve toward `min_workers`.
+    pub shrink_after_s: f64,
+}
+
+impl AimdCfg {
+    /// Sensible defaults around a fixed floor/ceiling.
+    pub fn bounded(min_workers: usize, max_workers: usize) -> AimdCfg {
+        AimdCfg {
+            min_workers: min_workers.max(1),
+            max_workers: max_workers.max(min_workers.max(1)),
+            backlog_per_worker: 2,
+            grow_after_s: 0.05,
+            shrink_after_s: 1.0,
+        }
+    }
+}
+
+/// What [`AimdState::observe`] wants done to the pool.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ScaleDecision {
+    Hold,
+    /// Add one worker (additive increase).
+    Grow,
+    /// Retire idle workers down toward this target (multiplicative
+    /// decrease; the pool may stop early if tail workers are busy).
+    Shrink(usize),
+}
+
+/// Pure AIMD window tracker. Time is injected (seconds on any
+/// monotonically increasing clock) so the unit tests replay exact
+/// timelines instead of sleeping.
+#[derive(Debug)]
+pub struct AimdState {
+    cfg: AimdCfg,
+    busy_since: Option<f64>,
+    idle_since: Option<f64>,
+}
+
+impl AimdState {
+    pub fn new(cfg: AimdCfg) -> AimdState {
+        AimdState {
+            cfg,
+            busy_since: None,
+            idle_since: None,
+        }
+    }
+
+    /// Feed one (queue depth, live worker count) observation at `now_s`.
+    pub fn observe(&mut self, now_s: f64, depth: usize, live: usize) -> ScaleDecision {
+        let backlogged = depth > live.saturating_mul(self.cfg.backlog_per_worker);
+        if backlogged {
+            self.idle_since = None;
+            let since = *self.busy_since.get_or_insert(now_s);
+            if now_s - since >= self.cfg.grow_after_s && live < self.cfg.max_workers {
+                // Restart the window: each grow step must be earned by a
+                // full further interval of sustained backlog.
+                self.busy_since = Some(now_s);
+                return ScaleDecision::Grow;
+            }
+        } else {
+            self.busy_since = None;
+            if depth == 0 {
+                let since = *self.idle_since.get_or_insert(now_s);
+                if now_s - since >= self.cfg.shrink_after_s && live > self.cfg.min_workers {
+                    self.idle_since = Some(now_s);
+                    return ScaleDecision::Shrink((live / 2).max(self.cfg.min_workers));
+                }
+            } else {
+                // A non-empty (but not backlogged) queue is neither busy
+                // nor idle: both windows reset.
+                self.idle_since = None;
+            }
+        }
+        ScaleDecision::Hold
+    }
+}
+
 /// A pool of worker threads, each owning one predictor, serving sweep
-/// jobs and interactive sessions.
+/// jobs and interactive sessions. The pool is fixed-size under
+/// [`Fleet::new`]; [`Fleet::with_scaling`] adds AIMD auto-scaling driven
+/// by [`Fleet::autoscale`] observations.
 pub struct Fleet {
     spec: Arc<Spec>,
-    workers: Vec<WorkerHandle>,
+    workers: RwLock<Vec<WorkerHandle>>,
     next_session: AtomicU64,
+    next_worker: AtomicUsize,
+    scaler: Option<Mutex<AimdState>>,
+    started: Instant,
 }
 
 impl Fleet {
@@ -142,29 +304,33 @@ impl Fleet {
     /// workload never pays the HLO compile, and a failed load only
     /// surfaces when a job or session actually needs prediction.
     pub fn new(spec: Arc<Spec>, workers: usize) -> Fleet {
+        Fleet::build(spec, workers, None)
+    }
+
+    /// Like [`Fleet::new`], but the pool auto-scales between
+    /// `cfg.min_workers` and `cfg.max_workers` as [`Fleet::autoscale`]
+    /// feeds it queue-depth observations. The initial size is clamped
+    /// into the configured band.
+    pub fn with_scaling(spec: Arc<Spec>, workers: usize, mut cfg: AimdCfg) -> Fleet {
+        cfg.min_workers = cfg.min_workers.max(1);
+        cfg.max_workers = cfg.max_workers.max(cfg.min_workers);
+        let initial = workers.clamp(cfg.min_workers, cfg.max_workers);
+        Fleet::build(spec, initial, Some(cfg))
+    }
+
+    fn build(spec: Arc<Spec>, workers: usize, cfg: Option<AimdCfg>) -> Fleet {
         let n = workers.max(1);
+        let next_worker = AtomicUsize::new(0);
         let workers = (0..n)
-            .map(|i| {
-                let (tx, rx) = channel();
-                let spec = spec.clone();
-                // The worker keeps a sender to its own queue so a long
-                // END can re-enqueue itself in slices (see worker_loop).
-                let self_tx = tx.clone();
-                let join = std::thread::Builder::new()
-                    .name(format!("fleet-worker-{i}"))
-                    .spawn(move || worker_loop(spec, rx, self_tx))
-                    .expect("failed to spawn fleet worker");
-                WorkerHandle {
-                    tx: Some(tx),
-                    active: Arc::new(AtomicUsize::new(0)),
-                    join: Some(join),
-                }
-            })
+            .map(|_| spawn_worker(&spec, next_worker.fetch_add(1, Ordering::SeqCst)))
             .collect();
         Fleet {
             spec,
-            workers,
+            workers: RwLock::new(workers),
             next_session: AtomicU64::new(1),
+            next_worker,
+            scaler: cfg.map(|c| Mutex::new(AimdState::new(c))),
+            started: Instant::now(),
         }
     }
 
@@ -173,7 +339,56 @@ impl Fleet {
     }
 
     pub fn num_workers(&self) -> usize {
-        self.workers.len()
+        self.workers.read().expect("fleet lock poisoned").len()
+    }
+
+    /// Feed the scaler one queue-depth observation and apply whatever it
+    /// decides. Returns the new pool size when it changed. A fleet built
+    /// without scaling ([`Fleet::new`]) always holds.
+    ///
+    /// Shrinking retires only workers with zero pinned sessions, from
+    /// the tail of the pool — a busy tail stops the shrink early rather
+    /// than stalling behind a long-running session.
+    pub fn autoscale(&self, depth: usize) -> Option<usize> {
+        let scaler = self.scaler.as_ref()?;
+        let now_s = self.started.elapsed().as_secs_f64();
+        let live = self.num_workers();
+        let decision = scaler
+            .lock()
+            .expect("scaler lock poisoned")
+            .observe(now_s, depth, live);
+        match decision {
+            ScaleDecision::Hold => None,
+            ScaleDecision::Grow => {
+                let mut ws = self.workers.write().expect("fleet lock poisoned");
+                ws.push(spawn_worker(
+                    &self.spec,
+                    self.next_worker.fetch_add(1, Ordering::SeqCst),
+                ));
+                Some(ws.len())
+            }
+            ScaleDecision::Shrink(target) => {
+                let mut ws = self.workers.write().expect("fleet lock poisoned");
+                let before = ws.len();
+                while ws.len() > target {
+                    let idle = ws
+                        .last()
+                        .map(|w| w.active.load(Ordering::SeqCst) == 0)
+                        .unwrap_or(false);
+                    if !idle {
+                        break;
+                    }
+                    let mut w = ws.pop().expect("checked non-empty");
+                    if let Some(tx) = w.tx.take() {
+                        let _ = tx.send(Cmd::Shutdown);
+                    }
+                    if let Some(j) = w.join.take() {
+                        let _ = j.join();
+                    }
+                }
+                (ws.len() != before).then(|| ws.len())
+            }
+        }
     }
 
     /// Run a batch of jobs across the pool. Blocks until every job
@@ -185,14 +400,17 @@ impl Fleet {
     /// wall-clock tracks total-work / workers even when job costs are
     /// wildly uneven (they are: `default_iters` varies per app).
     pub fn run_jobs(&self, jobs: Vec<SweepJob>) -> Vec<anyhow::Result<JobOutcome>> {
+        // The read guard is held for the whole batch: autoscale's write
+        // lock can never retire a worker out from under an in-flight job.
+        let workers = self.workers.read().expect("fleet lock poisoned");
         let n = jobs.len();
         let mut out: Vec<Option<anyhow::Result<JobOutcome>>> = (0..n).map(|_| None).collect();
         let (tx, rx) = channel();
         let mut queue: VecDeque<(usize, SweepJob)> = jobs.into_iter().enumerate().collect();
         let mut inflight = 0usize;
-        let mut per_worker: Vec<usize> = vec![0; self.workers.len()];
+        let mut per_worker: Vec<usize> = vec![0; workers.len()];
 
-        for (wi, w) in self.workers.iter().enumerate() {
+        for (wi, w) in workers.iter().enumerate() {
             if feed_worker(w, wi, &mut queue, &tx, &mut out) {
                 inflight += 1;
                 per_worker[wi] += 1;
@@ -204,7 +422,7 @@ impl Fleet {
                     inflight -= 1;
                     per_worker[wi] -= 1;
                     out[idx] = Some(outcome);
-                    if feed_worker(&self.workers[wi], wi, &mut queue, &tx, &mut out) {
+                    if feed_worker(&workers[wi], wi, &mut queue, &tx, &mut out) {
                         inflight += 1;
                         per_worker[wi] += 1;
                     }
@@ -214,11 +432,7 @@ impl Fleet {
                     // worker dying mid-job never disconnects it — detect
                     // that case explicitly instead of blocking forever.
                     let stalled = per_worker.iter().enumerate().all(|(wi, &c)| {
-                        c == 0
-                            || self.workers[wi]
-                                .join
-                                .as_ref()
-                                .map_or(true, |j| j.is_finished())
+                        c == 0 || workers[wi].join.as_ref().map_or(true, |j| j.is_finished())
                     });
                     if stalled {
                         break;
@@ -242,14 +456,41 @@ impl Fleet {
         policy: PolicySpec,
         target_iters: u64,
     ) -> anyhow::Result<SessionHandle> {
-        let w = self
-            .workers
+        let (reply, rx) = Reply::channel_pair();
+        let handle = self.begin_async(app, policy, target_iters, reply)?;
+        match rx.recv() {
+            Ok(Some(Ok(()))) => Ok(handle),
+            // Dropping `handle` here sends Cmd::Drop (a no-op remove on
+            // the worker, which never registered the session) and undoes
+            // the eager active-count increment.
+            Ok(Some(Err(e))) => Err(e),
+            _ => Err(anyhow::anyhow!("fleet worker thread is gone")),
+        }
+    }
+
+    /// Non-blocking [`Fleet::begin`]: the session handle comes back
+    /// immediately; `reply` fires once the worker has built the policy
+    /// (or failed to). The caller must treat the handle as live only
+    /// after a successful reply — on failure, dropping it cleans up.
+    ///
+    /// The worker's load count is incremented *eagerly*, before the
+    /// Begin is even queued, so least-loaded placement and idle-worker
+    /// retirement both see the session the moment it exists.
+    pub fn begin_async(
+        &self,
+        app: AppParams,
+        policy: PolicySpec,
+        target_iters: u64,
+        reply: Reply<anyhow::Result<()>>,
+    ) -> anyhow::Result<SessionHandle> {
+        let workers = self.workers.read().expect("fleet lock poisoned");
+        let w = workers
             .iter()
             .min_by_key(|w| w.active.load(Ordering::SeqCst))
             .expect("fleet has at least one worker");
         let id = self.next_session.fetch_add(1, Ordering::SeqCst);
-        let (reply, rx) = channel();
-        w.send(Cmd::Begin {
+        w.active.fetch_add(1, Ordering::SeqCst);
+        let sent = w.send(Cmd::Begin {
             id,
             req: Box::new(BeginReq {
                 app,
@@ -257,10 +498,11 @@ impl Fleet {
                 target_iters,
             }),
             reply,
-        })?;
-        rx.recv()
-            .map_err(|_| anyhow::anyhow!("fleet worker thread is gone"))??;
-        w.active.fetch_add(1, Ordering::SeqCst);
+        });
+        if let Err(e) = sent {
+            w.active.fetch_sub(1, Ordering::SeqCst);
+            return Err(e);
+        }
         Ok(SessionHandle {
             id,
             tx: w.tx.as_ref().expect("worker is live").clone(),
@@ -278,13 +520,14 @@ impl Drop for Fleet {
         // alone would leave the worker loops — and this join — blocked
         // forever. After shutdown, surviving handles get an error from
         // their next call instead of an answer.
-        for w in &mut self.workers {
+        let workers = self.workers.get_mut().expect("fleet lock poisoned");
+        for w in workers.iter_mut() {
             if let Some(tx) = &w.tx {
                 let _ = tx.send(Cmd::Shutdown);
             }
             w.tx.take();
         }
-        for w in &mut self.workers {
+        for w in workers.iter_mut() {
             if let Some(j) = w.join.take() {
                 let _ = j.join();
             }
@@ -304,14 +547,16 @@ pub struct SessionHandle {
 impl SessionHandle {
     fn roundtrip(
         &self,
-        make: impl FnOnce(Sender<anyhow::Result<SessionStatus>>) -> Cmd,
+        make: impl FnOnce(Reply<anyhow::Result<SessionStatus>>) -> Cmd,
     ) -> anyhow::Result<SessionStatus> {
-        let (reply, rx) = channel();
+        let (reply, rx) = Reply::channel_pair();
         self.tx
             .send(make(reply))
             .map_err(|_| anyhow::anyhow!("fleet worker thread is gone"))?;
-        rx.recv()
-            .map_err(|_| anyhow::anyhow!("fleet worker thread is gone"))?
+        match rx.recv() {
+            Ok(Some(r)) => r,
+            _ => Err(anyhow::anyhow!("fleet worker thread is gone")),
+        }
     }
 
     /// Advance the session by at most `max_ticks` controller ticks
@@ -325,6 +570,18 @@ impl SessionHandle {
         })
     }
 
+    /// Non-blocking [`SessionHandle::step`]: queue the step and fire
+    /// `reply` when the worker answers.
+    pub fn dispatch_step(&self, max_ticks: u64, reply: Reply<anyhow::Result<SessionStatus>>) {
+        let _ = self.tx.send(Cmd::Step {
+            id: self.id,
+            max_ticks,
+            reply,
+        });
+        // A failed send drops the reply, which fires it with None — the
+        // caller observes the dead worker through its callback.
+    }
+
     /// Abandon the session without driving it to its target (the
     /// explicit spelling of what dropping the handle does; the daemon's
     /// `abort` request uses it).
@@ -336,15 +593,42 @@ impl SessionHandle {
     pub fn end(mut self) -> anyhow::Result<SessionStatus> {
         self.open = false;
         let id = self.id;
-        let r = self.roundtrip(|reply| Cmd::End {
+        let active = self.active.clone();
+        let (reply, rx) = Reply::channel_pair();
+        // Only decrement once the run has actually finished — a worker
+        // mid-END must keep looking loaded to least-loaded placement.
+        let reply = reply.before(move || {
+            active.fetch_sub(1, Ordering::SeqCst);
+        });
+        let sent = self.tx.send(Cmd::End {
             id,
             budget_s: None,
             reply,
         });
-        // Only decrement once the run has actually finished — a worker
-        // mid-END must keep looking loaded to least-loaded placement.
-        self.active.fetch_sub(1, Ordering::SeqCst);
-        r
+        if sent.is_err() {
+            return Err(anyhow::anyhow!("fleet worker thread is gone"));
+        }
+        match rx.recv() {
+            Ok(Some(r)) => r,
+            _ => Err(anyhow::anyhow!("fleet worker thread is gone")),
+        }
+    }
+
+    /// Non-blocking [`SessionHandle::end`]: consumes the handle, fires
+    /// `reply` with the final status once the run completes. The
+    /// worker's load count is released exactly when the reply fires
+    /// (success or worker death), same as the blocking path.
+    pub fn dispatch_end(mut self, reply: Reply<anyhow::Result<SessionStatus>>) {
+        self.open = false;
+        let active = self.active.clone();
+        let reply = reply.before(move || {
+            active.fetch_sub(1, Ordering::SeqCst);
+        });
+        let _ = self.tx.send(Cmd::End {
+            id: self.id,
+            budget_s: None,
+            reply,
+        });
     }
 }
 
@@ -381,6 +665,26 @@ fn feed_worker(
             out[idx] = Some(Err(e));
             false
         }
+    }
+}
+
+/// Spawn one worker thread with its command queue. `i` is a process-wide
+/// worker ordinal (monotonic across autoscale grow events) so thread
+/// names stay unique for the life of the fleet.
+fn spawn_worker(spec: &Arc<Spec>, i: usize) -> WorkerHandle {
+    let (tx, rx) = channel();
+    let spec = spec.clone();
+    // The worker keeps a sender to its own queue so a long END can
+    // re-enqueue itself in slices (see worker_loop).
+    let self_tx = tx.clone();
+    let join = std::thread::Builder::new()
+        .name(format!("fleet-worker-{i}"))
+        .spawn(move || worker_loop(spec, rx, self_tx))
+        .expect("failed to spawn fleet worker");
+    WorkerHandle {
+        tx: Some(tx),
+        active: Arc::new(AtomicUsize::new(0)),
+        join: Some(join),
     }
 }
 
@@ -488,7 +792,7 @@ fn worker_loop(spec: Arc<Spec>, rx: Receiver<Cmd>, self_tx: Sender<Cmd>) {
                             },
                         );
                     });
-                let _ = reply.send(r);
+                reply.send(r);
             }
             Cmd::Step {
                 id,
@@ -502,7 +806,7 @@ fn worker_loop(spec: Arc<Spec>, rx: Receiver<Cmd>, self_tx: Sender<Cmd>) {
                     }
                     None => Err(anyhow::anyhow!("no such session")),
                 };
-                let _ = reply.send(r);
+                reply.send(r);
             }
             Cmd::End {
                 id,
@@ -520,14 +824,14 @@ fn worker_loop(spec: Arc<Spec>, rx: Receiver<Cmd>, self_tx: Sender<Cmd>) {
                         (s.slice(END_SLICE_TICKS, b).then(|| s.status()), b)
                     }
                     None => {
-                        let _ = reply.send(Err(anyhow::anyhow!("no such session")));
+                        reply.send(Err(anyhow::anyhow!("no such session")));
                         continue;
                     }
                 };
                 match finished {
                     Some(st) => {
                         sessions.remove(&id);
-                        let _ = reply.send(Ok(st));
+                        reply.send(Ok(st));
                     }
                     None => {
                         let requeued = self_tx.send(Cmd::End {
@@ -537,7 +841,8 @@ fn worker_loop(spec: Arc<Spec>, rx: Receiver<Cmd>, self_tx: Sender<Cmd>) {
                         });
                         if requeued.is_err() {
                             // Shutting down mid-run: release the session;
-                            // the client's end() observes the hangup.
+                            // the requeued Cmd (and its reply) died with
+                            // the send, so the client observes the loss.
                             sessions.remove(&id);
                         }
                     }
@@ -745,5 +1050,201 @@ mod tests {
         // The worker is still alive and still serves the other session.
         assert!(h2.step(10).is_ok());
         assert!(h2.end().unwrap().done);
+    }
+
+    fn aimd_cfg() -> AimdCfg {
+        AimdCfg {
+            min_workers: 1,
+            max_workers: 4,
+            backlog_per_worker: 2,
+            grow_after_s: 1.0,
+            shrink_after_s: 5.0,
+        }
+    }
+
+    #[test]
+    fn aimd_grows_only_after_a_sustained_backlog_window() {
+        let mut s = AimdState::new(aimd_cfg());
+        // Backlog threshold is live × per-worker = 2: depth 2 is "fine".
+        assert_eq!(s.observe(0.0, 2, 1), ScaleDecision::Hold);
+        // Backlogged, but the window hasn't elapsed yet.
+        assert_eq!(s.observe(0.1, 9, 1), ScaleDecision::Hold);
+        assert_eq!(s.observe(0.9, 9, 1), ScaleDecision::Hold);
+        // 1.0s of sustained backlog → one additive step.
+        assert_eq!(s.observe(1.1, 9, 1), ScaleDecision::Grow);
+        // The window restarts: the next grow needs another full second.
+        assert_eq!(s.observe(1.2, 9, 2), ScaleDecision::Hold);
+        assert_eq!(s.observe(2.2, 9, 2), ScaleDecision::Grow);
+        // A dip below the backlog line resets the busy window entirely.
+        assert_eq!(s.observe(2.3, 1, 3), ScaleDecision::Hold);
+        assert_eq!(s.observe(3.4, 9, 3), ScaleDecision::Hold);
+        assert_eq!(s.observe(4.5, 9, 3), ScaleDecision::Grow);
+        // At the ceiling, sustained backlog holds instead of growing.
+        assert_eq!(s.observe(9.0, 99, 4), ScaleDecision::Hold);
+        assert_eq!(s.observe(99.0, 99, 4), ScaleDecision::Hold);
+    }
+
+    #[test]
+    fn aimd_shrinks_multiplicatively_after_sustained_idle() {
+        let mut s = AimdState::new(aimd_cfg());
+        assert_eq!(s.observe(0.0, 0, 4), ScaleDecision::Hold);
+        assert_eq!(s.observe(4.9, 0, 4), ScaleDecision::Hold);
+        // 5s empty → halve. A trickle of work (depth 1, not backlogged)
+        // is neither busy nor idle: it resets the idle window.
+        assert_eq!(s.observe(5.0, 0, 4), ScaleDecision::Shrink(2));
+        assert_eq!(s.observe(7.0, 1, 2), ScaleDecision::Hold);
+        assert_eq!(s.observe(11.9, 0, 2), ScaleDecision::Hold);
+        assert_eq!(s.observe(12.1, 0, 2), ScaleDecision::Hold);
+        assert_eq!(s.observe(17.2, 0, 2), ScaleDecision::Shrink(1));
+        // At the floor, idleness holds.
+        assert_eq!(s.observe(99.0, 0, 1), ScaleDecision::Hold);
+    }
+
+    #[test]
+    fn fleet_autoscale_grows_and_retires_idle_workers() {
+        let spec = Arc::new(Spec::load_default().unwrap());
+        // Zero-length windows make every decision fire on the first
+        // qualifying observation — no sleeping in the test.
+        let cfg = AimdCfg {
+            min_workers: 1,
+            max_workers: 3,
+            backlog_per_worker: 1,
+            grow_after_s: 0.0,
+            shrink_after_s: 0.0,
+        };
+        let fleet = Fleet::with_scaling(spec.clone(), 1, cfg);
+        assert_eq!(fleet.num_workers(), 1);
+        assert_eq!(fleet.autoscale(5), Some(2));
+        assert_eq!(fleet.autoscale(5), Some(3));
+        // At the ceiling: hold.
+        assert_eq!(fleet.autoscale(5), None);
+        assert_eq!(fleet.num_workers(), 3);
+
+        // A session pins the tail-most... any worker; all are idle except
+        // the one it lands on, so a shrink stops at that worker if it's
+        // at the tail. End it first to make the full shrink observable.
+        let app = crate::sim::find_app(&spec, "AI_TS").unwrap();
+        let h = fleet
+            .begin(app.clone(), PolicySpec::registered("powercap"), 15)
+            .unwrap();
+        assert!(h.end().unwrap().done);
+
+        // Idle with an empty queue → halve, then floor.
+        assert_eq!(fleet.autoscale(0), Some(1));
+        assert_eq!(fleet.num_workers(), 1);
+        assert_eq!(fleet.autoscale(0), None);
+
+        // The survivor still serves sessions after the churn.
+        let h = fleet
+            .begin(app, PolicySpec::registered("powercap"), 15)
+            .unwrap();
+        let fin = h.end().unwrap();
+        assert!(fin.done && fin.iterations >= 15);
+    }
+
+    #[test]
+    fn fixed_fleet_never_scales() {
+        let spec = Arc::new(Spec::load_default().unwrap());
+        let fleet = Fleet::new(spec, 2);
+        assert_eq!(fleet.autoscale(1_000), None);
+        assert_eq!(fleet.autoscale(0), None);
+        assert_eq!(fleet.num_workers(), 2);
+    }
+
+    #[test]
+    fn shrink_spares_workers_with_pinned_sessions() {
+        let spec = Arc::new(Spec::load_default().unwrap());
+        let cfg = AimdCfg {
+            min_workers: 1,
+            max_workers: 2,
+            backlog_per_worker: 1,
+            grow_after_s: 0.0,
+            shrink_after_s: 0.0,
+        };
+        let fleet = Fleet::with_scaling(spec.clone(), 2, cfg);
+        let app = crate::sim::find_app(&spec, "AI_TS").unwrap();
+        // Two sessions: least-loaded placement puts one on each worker,
+        // so the tail worker is busy and the shrink must stop early.
+        let h1 = fleet
+            .begin(app.clone(), PolicySpec::registered("powercap"), 10)
+            .unwrap();
+        let h2 = fleet
+            .begin(app, PolicySpec::registered("powercap"), 10)
+            .unwrap();
+        assert_eq!(fleet.autoscale(0), None);
+        assert_eq!(fleet.num_workers(), 2);
+        // Sessions still answer — nobody's worker was retired.
+        assert!(h1.step(5).is_ok());
+        assert!(h1.end().unwrap().done);
+        assert!(h2.end().unwrap().done);
+        // With both released, the same observation now shrinks.
+        assert_eq!(fleet.autoscale(0), Some(1));
+    }
+
+    #[test]
+    fn dispatch_calls_fire_their_replies() {
+        use std::sync::mpsc::channel;
+        // The reactor-facing async path: begin_async → dispatch_step →
+        // dispatch_end, all through Reply callbacks, no blocking recv on
+        // the session side until the assertion points.
+        let spec = Arc::new(Spec::load_default().unwrap());
+        let fleet = Fleet::new(spec.clone(), 1);
+        let app = crate::sim::find_app(&spec, "AI_TS").unwrap();
+
+        let (btx, brx) = channel();
+        let h = fleet
+            .begin_async(
+                app,
+                PolicySpec::registered("powercap"),
+                20,
+                Reply::new(move |r| {
+                    let _ = btx.send(r);
+                }),
+            )
+            .unwrap();
+        assert!(brx.recv().unwrap().unwrap().is_ok());
+
+        let (stx, srx) = channel();
+        h.dispatch_step(
+            5,
+            Reply::new(move |r| {
+                let _ = stx.send(r);
+            }),
+        );
+        let st = srx.recv().unwrap().unwrap().unwrap();
+        assert!(st.time_s > 0.0);
+        assert_eq!(st.target_iters, 20);
+
+        let (etx, erx) = channel();
+        h.dispatch_end(Reply::new(move |r| {
+            let _ = etx.send(r);
+        }));
+        let fin = erx.recv().unwrap().unwrap().unwrap();
+        assert!(fin.done && fin.iterations >= 20);
+    }
+
+    #[test]
+    fn dropped_reply_reports_loss_not_hang() {
+        use std::sync::mpsc::channel;
+        // Killing the fleet with an End in flight must fire the pending
+        // reply with None (loss), never strand it.
+        let spec = Arc::new(Spec::load_default().unwrap());
+        let (tx, rx) = channel();
+        {
+            let fleet = Fleet::new(spec.clone(), 1);
+            let app = crate::sim::find_app(&spec, "AI_TS").unwrap();
+            let h = fleet
+                .begin(app, PolicySpec::registered("powercap"), 1_000_000)
+                .unwrap();
+            h.dispatch_end(Reply::new(move |r| {
+                let _ = tx.send(r.is_some());
+            }));
+            // Fleet drops here: Shutdown beats the (long) End's requeued
+            // slices, so the worker exits and drops the pending reply.
+        }
+        // Either the run finished in time (Some → true) or the reply
+        // was dropped on shutdown (None → false) — both mean the
+        // callback fired; a hang here is the failure mode.
+        rx.recv().expect("pending reply must fire on shutdown");
     }
 }

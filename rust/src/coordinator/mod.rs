@@ -14,10 +14,14 @@ pub mod daemon;
 pub mod fleet;
 pub mod odpp;
 pub mod oracle;
+pub mod reactor;
 pub mod runner;
 
 pub use controller::{Gpoeo, GpoeoCfg, GpoeoStats};
-pub use fleet::{Fleet, JobOutcome, SessionHandle, SessionStatus, SweepJob};
+pub use fleet::{
+    AimdCfg, AimdState, Fleet, JobOutcome, Reply, ScaleDecision, SessionHandle, SessionStatus,
+    SweepJob,
+};
 pub use odpp::{Odpp, OdppCfg};
 pub use oracle::{oracle_full, oracle_ordered, OracleResult};
 pub use runner::{
@@ -279,9 +283,14 @@ fn write_bench(
     Ok(())
 }
 
-/// `gpoeo daemon [--socket PATH] [--workers N]` — serve the Begin/End
-/// API on a shared fleet: control-plane protocol v1 and the legacy line
-/// protocol behind a first-byte auto-detect (drive it with `gpoeo ctl`).
+/// `gpoeo daemon [--socket PATH] [--workers N] [--max-workers N]
+///               [--rate-limit RPS] [--rate-burst N]`
+///
+/// Serve the Begin/End API on a shared fleet: control-plane protocol v1
+/// (on the non-blocking reactor) and the legacy line protocol behind a
+/// first-byte auto-detect (drive it with `gpoeo ctl`). `--max-workers`
+/// above `--workers` turns on AIMD pool scaling between the two;
+/// `--rate-limit` enables per-connection token-bucket limiting.
 pub fn cli_daemon(args: &Args) -> anyhow::Result<()> {
     let spec = Arc::new(Spec::load_default()?);
     let sock = args.opt_or("socket", "/tmp/gpoeo.sock").to_string();
@@ -289,5 +298,10 @@ pub fn cli_daemon(args: &Args) -> anyhow::Result<()> {
         .map(|n| n.get().min(4))
         .unwrap_or(2);
     let workers = args.opt_usize("workers", default_workers)?;
-    daemon::Daemon::new(spec, workers).serve(std::path::Path::new(&sock))
+    let cfg = daemon::DaemonCfg {
+        max_workers: args.opt_usize("max-workers", workers)?.max(workers),
+        rate_limit_rps: args.opt_f64("rate-limit", 0.0)?,
+        rate_burst: args.opt_f64("rate-burst", 0.0)?,
+    };
+    daemon::Daemon::with_cfg(spec, workers, cfg).serve(std::path::Path::new(&sock))
 }

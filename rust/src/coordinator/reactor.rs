@@ -1,0 +1,1267 @@
+//! The non-blocking control-plane reactor (DESIGN.md §10).
+//!
+//! PR 5's daemon spent one OS thread per connection, parked in blocking
+//! `read_frame`/`recv()` calls. At api-bench scale (10k sessions over
+//! hundreds of connections) that is 10k stacks and a thundering herd of
+//! wakeups for work the fleet serializes anyway. This module replaces
+//! the per-connection threads for protocol v1 with a single-threaded
+//! event loop over a hand-rolled `poll(2)` shim (`vendor/pollshim` — no
+//! crates.io dependencies, same offline rule as `vendor/anyhow`):
+//!
+//! - **Connection state machines.** Every accepted socket starts in
+//!   `Sniff`; its first byte picks the protocol. `{` promotes it to a
+//!   `V1` machine: an incremental [`LineFramer`] (byte-for-byte the
+//!   semantics of [`read_frame`](crate::api::read_frame), including the
+//!   oversized-line cap/drain behavior), a response-ordering queue of
+//!   [`Slot`]s so pipelined requests answer in request order even when
+//!   their fleet commands complete out of order, and an output buffer
+//!   flushed as `POLLOUT` allows (a consumer that stops reading past
+//!   [`MAX_OUTBUF`] is dropped, not buffered forever). Any other first
+//!   byte falls back to the old blocking thread running the unchanged
+//!   legacy protocol — the compat rule: legacy clients and tests see
+//!   the PR 5 daemon exactly.
+//! - **Completion plumbing.** Fleet commands are dispatched with
+//!   [`Reply`] callbacks that push a [`Done`] onto an mpsc queue and
+//!   write one byte into a socketpair wake pipe, so `poll` wakes the
+//!   moment a worker finishes. The reactor never blocks on the fleet.
+//! - **`status` coalescing** (ninelives ADR-010): while a tick-drive
+//!   for session S is in flight, further `status S` requests attach to
+//!   it and share its answer — N concurrent pollers cost one drive.
+//! - **Per-connection rate limiting** (ninelives ADR-009): an optional
+//!   [`TokenBucket`] charges every request line; over budget answers a
+//!   typed `Response::Error { kind: "rate_limited" }` and keeps the
+//!   connection alive.
+//! - **AIMD autoscaling hook**: each loop iteration reports the
+//!   in-flight op count to [`Fleet::autoscale`] — sustained backlog
+//!   grows the worker pool additively, sustained idle halves it.
+//!
+//! Failed `accept()`s go through the daemon's [`AcceptGate`]: one log
+//! line per window (with a suppressed count) and a short backoff during
+//! which the listener is dropped from the poll set, so a persistent
+//! EMFILE can neither spam the log nor spin the loop.
+
+use crate::api::{
+    Event, PolicyInfo, Request, Response, ServerMsg, MAX_LINE_BYTES, PROTOCOL_VERSION,
+};
+use crate::coordinator::daemon::{
+    accept_stream, claim_session, handle_legacy, list_apps, prepare_begin, report, with_session,
+    AcceptGate, DaemonCfg, SessionEntry, Shared, STATUS_TICKS,
+};
+use crate::coordinator::fleet::{Fleet, Reply, SessionStatus};
+use crate::policy::{PolicyRegistry, PolicySpec};
+use pollshim::{poll_fds, PollFd, POLLIN, POLLOUT};
+use std::collections::{HashMap, VecDeque};
+use std::io::{self, BufReader, Cursor, Read, Write};
+use std::os::unix::io::AsRawFd;
+use std::os::unix::net::{UnixListener, UnixStream};
+use std::sync::atomic::Ordering;
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Kill a connection whose peer stops reading once this much output is
+/// queued — a slow consumer must not grow the buffer without bound.
+const MAX_OUTBUF: usize = 4 * 1024 * 1024;
+
+/// Poll timeout: completions arrive via the wake pipe, so this only
+/// bounds how stale the AIMD/backoff clocks can get.
+const POLL_TIMEOUT_MS: i32 = 100;
+
+/// After a `shutdown` request: how long to keep flushing response bytes
+/// before exiting anyway.
+const SHUTDOWN_GRACE: Duration = Duration::from_secs(1);
+
+// ---------------------------------------------------------------------
+// Incremental line framing.
+// ---------------------------------------------------------------------
+
+/// A framed line, or the reason there isn't one. The non-blocking twin
+/// of [`crate::api::Frame`] (EOF is a connection-level event here).
+#[derive(Debug, PartialEq)]
+pub(crate) enum FrameEvent {
+    Line(String),
+    /// The line exceeded the byte cap; the remainder through its
+    /// newline is swallowed so the connection can keep going.
+    Oversized,
+}
+
+/// Incremental, non-blocking version of
+/// [`read_frame`](crate::api::read_frame), fed whatever byte chunks the
+/// socket yields. Byte-for-byte the same outcomes: a line is `Oversized`
+/// exactly when its content (newline excluded) exceeds `max`, detection
+/// happens as soon as the cap is crossed, and the rest of an oversized
+/// line is drained silently. Parity is pinned by a test that runs both
+/// over the same corpus at every chunking.
+pub(crate) struct LineFramer {
+    buf: Vec<u8>,
+    /// Inside an oversized line, swallowing bytes up to its newline.
+    draining: bool,
+    max: usize,
+}
+
+impl LineFramer {
+    pub(crate) fn new(max: usize) -> LineFramer {
+        LineFramer {
+            buf: Vec::new(),
+            draining: false,
+            max,
+        }
+    }
+
+    /// Feed one chunk; completed frames are appended to `out`.
+    pub(crate) fn push(&mut self, data: &[u8], out: &mut VecDeque<FrameEvent>) {
+        let mut rest = data;
+        while !rest.is_empty() {
+            if self.draining {
+                match rest.iter().position(|b| *b == b'\n') {
+                    Some(i) => {
+                        self.draining = false;
+                        rest = &rest[i + 1..];
+                    }
+                    None => return,
+                }
+                continue;
+            }
+            match rest.iter().position(|b| *b == b'\n') {
+                Some(i) => {
+                    if self.buf.len() + i > self.max {
+                        out.push_back(FrameEvent::Oversized);
+                    } else {
+                        self.buf.extend_from_slice(&rest[..i]);
+                        out.push_back(FrameEvent::Line(
+                            String::from_utf8_lossy(&self.buf).into_owned(),
+                        ));
+                    }
+                    self.buf.clear();
+                    rest = &rest[i + 1..];
+                }
+                None => {
+                    if self.buf.len() + rest.len() > self.max {
+                        self.buf.clear();
+                        self.draining = true;
+                        out.push_back(FrameEvent::Oversized);
+                        return;
+                    }
+                    self.buf.extend_from_slice(rest);
+                    return;
+                }
+            }
+        }
+    }
+
+    /// EOF: a trailing line without its newline is still a line
+    /// (`read_frame` parity).
+    pub(crate) fn take_trailing(&mut self) -> Option<FrameEvent> {
+        if self.buf.is_empty() {
+            return None;
+        }
+        let s = String::from_utf8_lossy(&self.buf).into_owned();
+        self.buf.clear();
+        Some(FrameEvent::Line(s))
+    }
+}
+
+// ---------------------------------------------------------------------
+// Per-connection rate limiting (ninelives ADR-009).
+// ---------------------------------------------------------------------
+
+/// Classic token bucket over an injected monotonic clock (f64 seconds):
+/// `rate` tokens/second refill, capacity `burst`, one token per request.
+pub(crate) struct TokenBucket {
+    rate: f64,
+    burst: f64,
+    tokens: f64,
+    last_s: f64,
+}
+
+impl TokenBucket {
+    pub(crate) fn new(rate: f64, burst: f64) -> TokenBucket {
+        let burst = burst.max(1.0);
+        TokenBucket {
+            rate,
+            burst,
+            tokens: burst,
+            last_s: 0.0,
+        }
+    }
+
+    /// Charge one request at `now_s`. `false` means over budget — the
+    /// caller answers a typed `rate_limited` error and moves on.
+    pub(crate) fn admit(&mut self, now_s: f64) -> bool {
+        let dt = (now_s - self.last_s).max(0.0);
+        self.last_s = now_s;
+        self.tokens = (self.tokens + dt * self.rate).min(self.burst);
+        if self.tokens >= 1.0 {
+            self.tokens -= 1.0;
+            true
+        } else {
+            false
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Connection state machines.
+// ---------------------------------------------------------------------
+
+/// One queued answer position. Responses must leave in request order,
+/// but fleet commands complete in any order — so each request takes a
+/// slot, and only the contiguous `Ready` prefix is flushed.
+enum Slot {
+    /// Serialized wire line, ready to flush.
+    Ready(String),
+    /// Waiting on the op with this id.
+    Pending(u64),
+}
+
+/// An active `subscribe` stream: events flow until the session is done
+/// (or `max_events` is reached), then a final status snapshot.
+struct Sub {
+    every_ticks: u64,
+    max_events: u64,
+    sent: u64,
+}
+
+/// A `subscribe` request parked until earlier responses drain (events
+/// must not jump ahead of pipelined responses).
+struct SubReq {
+    sid: String,
+    every_ticks: u64,
+    max_events: u64,
+}
+
+/// Protocol v1 connection state.
+struct V1 {
+    hello_done: bool,
+    /// Default policy for `begin`s without an inline one (`set_policy`).
+    default_policy: PolicySpec,
+    bucket: Option<TokenBucket>,
+    slots: VecDeque<Slot>,
+    sub: Option<Sub>,
+    pending_sub: Option<SubReq>,
+    /// A `shutdown` was answered: flush and close, process nothing more.
+    closing: bool,
+}
+
+impl V1 {
+    fn new(bucket: Option<TokenBucket>) -> V1 {
+        V1 {
+            hello_done: false,
+            default_policy: PolicySpec::registered("gpoeo"),
+            bucket,
+            slots: VecDeque::new(),
+            sub: None,
+            pending_sub: None,
+            closing: false,
+        }
+    }
+}
+
+enum ConnState {
+    /// Waiting for the first byte to pick a protocol.
+    Sniff,
+    V1(V1),
+}
+
+struct Conn {
+    stream: UnixStream,
+    framer: LineFramer,
+    /// Framed but not yet processed (requests queue here while a
+    /// subscribe stream owns the connection).
+    events: VecDeque<FrameEvent>,
+    out: Vec<u8>,
+    out_pos: usize,
+    state: ConnState,
+    dead: bool,
+    eof: bool,
+}
+
+impl Conn {
+    fn new(stream: UnixStream) -> Conn {
+        Conn {
+            stream,
+            framer: LineFramer::new(MAX_LINE_BYTES),
+            events: VecDeque::new(),
+            out: Vec::new(),
+            out_pos: 0,
+            state: ConnState::Sniff,
+            dead: false,
+            eof: false,
+        }
+    }
+
+    /// Read interest. Paused while a subscribe stream owns the
+    /// connection (the blocking daemon didn't read mid-stream either)
+    /// and after a shutdown answer.
+    fn wants_read(&self) -> bool {
+        if self.dead || self.eof {
+            return false;
+        }
+        match &self.state {
+            ConnState::Sniff => true,
+            ConnState::V1(v) => v.sub.is_none() && v.pending_sub.is_none() && !v.closing,
+        }
+    }
+
+    fn wants_write(&self) -> bool {
+        !self.dead && self.out_pos < self.out.len()
+    }
+
+    fn flushed(&self) -> bool {
+        self.out_pos >= self.out.len()
+    }
+}
+
+// ---------------------------------------------------------------------
+// In-flight fleet operations.
+// ---------------------------------------------------------------------
+
+/// What a completed fleet command should turn into. `Begin`/`End`
+/// carry their session-table entry so the deferred cleanup can use
+/// [`SessionTable::remove_if`](crate::coordinator::daemon::SessionTable::remove_if)
+/// — removal by name alone could evict a successor session that reused
+/// the name in the meantime.
+enum Op {
+    Begin {
+        conn: u64,
+        id: String,
+        entry: Arc<SessionEntry>,
+    },
+    /// One tick-drive serving every coalesced `status` poller of `sid`
+    /// (each entry in `targets` fills one slot on that connection).
+    Status { sid: String, targets: Vec<u64> },
+    End {
+        conn: u64,
+        sid: String,
+        entry: Arc<SessionEntry>,
+    },
+    /// One slice of a subscribe stream.
+    SubStep { conn: u64, sid: String },
+}
+
+/// A completion, queued from a fleet worker thread alongside a wake
+/// byte. `None` payloads mean the worker died with the reply pending.
+enum Done {
+    Begin(u64, Option<anyhow::Result<()>>),
+    Session(u64, Option<anyhow::Result<SessionStatus>>),
+}
+
+const WORKER_GONE: &str = "fleet worker thread is gone";
+
+// ---------------------------------------------------------------------
+// The reactor.
+// ---------------------------------------------------------------------
+
+pub(crate) struct Reactor {
+    fleet: Arc<Fleet>,
+    shared: Arc<Shared>,
+    cfg: DaemonCfg,
+    conns: HashMap<u64, Conn>,
+    /// Monotonic connection tokens — never reused, so a late completion
+    /// can never address a recycled connection.
+    next_tok: u64,
+    ops: HashMap<u64, Op>,
+    next_op: u64,
+    /// Coalescing map (ADR-010): session id → in-flight `Op::Status`.
+    driving: HashMap<String, u64>,
+    done_tx: Sender<Done>,
+    done_rx: Receiver<Done>,
+    /// Write end of the wake pipe, cloned into every `Reply`.
+    wake_w: Arc<UnixStream>,
+    wake_r: UnixStream,
+    started: Instant,
+}
+
+impl Reactor {
+    pub(crate) fn new(
+        fleet: Arc<Fleet>,
+        shared: Arc<Shared>,
+        cfg: DaemonCfg,
+    ) -> io::Result<Reactor> {
+        let (done_tx, done_rx) = channel();
+        let (wake_r, wake_w) = UnixStream::pair()?;
+        wake_r.set_nonblocking(true)?;
+        wake_w.set_nonblocking(true)?;
+        Ok(Reactor {
+            fleet,
+            shared,
+            cfg,
+            conns: HashMap::new(),
+            next_tok: 0,
+            ops: HashMap::new(),
+            next_op: 0,
+            driving: HashMap::new(),
+            done_tx,
+            done_rx,
+            wake_w: Arc::new(wake_w),
+            wake_r,
+            started: Instant::now(),
+        })
+    }
+
+    /// The event loop. Runs until a v1 `shutdown` request is answered
+    /// and flushed (or the grace period expires).
+    pub(crate) fn serve(mut self, listener: UnixListener) -> anyhow::Result<()> {
+        listener.set_nonblocking(true)?;
+        let mut gate = AcceptGate::new();
+        let mut shutdown_at: Option<Instant> = None;
+        loop {
+            // Harvest worker completions first: they fill slots and
+            // produce output for this iteration's flush.
+            self.drain_wakes();
+            while let Ok(d) = self.done_rx.try_recv() {
+                self.on_done(d);
+            }
+            // AIMD (ninelives P3.04): every in-flight op is queue depth
+            // the worker pool hasn't absorbed yet.
+            self.fleet.autoscale(self.ops.len());
+            self.flush_all();
+            self.reap();
+
+            let now = Instant::now();
+            if self.shared.shutdown.load(Ordering::SeqCst) {
+                let deadline = *shutdown_at.get_or_insert(now + SHUTDOWN_GRACE);
+                if self.conns.values().all(Conn::flushed) || now >= deadline {
+                    break;
+                }
+            }
+
+            // Build the poll set: wake pipe always; listener unless
+            // shutting down or in accept backoff; connections by
+            // read/write interest.
+            let mut fds = vec![PollFd::new(self.wake_r.as_raw_fd(), POLLIN)];
+            let accept_open = shutdown_at.is_none() && !gate.in_backoff(now);
+            if accept_open {
+                fds.push(PollFd::new(listener.as_raw_fd(), POLLIN));
+            }
+            let conn_base = fds.len();
+            let mut toks = Vec::with_capacity(self.conns.len());
+            for (tok, c) in &self.conns {
+                let mut ev = 0i16;
+                if c.wants_read() {
+                    ev |= POLLIN;
+                }
+                if c.wants_write() {
+                    ev |= POLLOUT;
+                }
+                if ev != 0 {
+                    toks.push(*tok);
+                    fds.push(PollFd::new(c.stream.as_raw_fd(), ev));
+                }
+            }
+            poll_fds(&mut fds, POLL_TIMEOUT_MS)?;
+
+            if accept_open && fds[1].readable() {
+                self.accept_burst(&listener, &mut gate);
+            }
+            for (i, tok) in toks.iter().enumerate() {
+                if fds[conn_base + i].readable() {
+                    self.read_conn(*tok);
+                }
+                // Write-ready connections are served by the next
+                // iteration's flush_all.
+            }
+        }
+        Ok(())
+    }
+
+    // -- completions ---------------------------------------------------
+
+    fn drain_wakes(&mut self) {
+        let mut buf = [0u8; 256];
+        loop {
+            match (&self.wake_r).read(&mut buf) {
+                Ok(0) => return,
+                Ok(_) => continue,
+                Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+                Err(_) => return,
+            }
+        }
+    }
+
+    /// A `Reply` that queues `wrap(result)` and pokes the wake pipe.
+    fn make_reply<T: Send + 'static>(
+        &self,
+        wrap: impl FnOnce(Option<T>) -> Done + Send + 'static,
+    ) -> Reply<T> {
+        let tx = self.done_tx.clone();
+        let wake = self.wake_w.clone();
+        Reply::new(move |r| {
+            let _ = tx.send(wrap(r));
+            let _ = (&*wake).write(&[1u8]);
+        })
+    }
+
+    fn next_op(&mut self) -> u64 {
+        self.next_op += 1;
+        self.next_op
+    }
+
+    fn on_done(&mut self, d: Done) {
+        match d {
+            Done::Begin(op, r) => {
+                // Unknown ops are fine: a reply dropped on a failed
+                // dispatch fires before its op was ever registered.
+                let Some(Op::Begin { conn, id, entry }) = self.ops.remove(&op) else {
+                    return;
+                };
+                let resp = match r {
+                    // The handle is already in the table (fulfilled
+                    // eagerly at dispatch): this reply only confirms
+                    // the worker built the policy.
+                    Some(Ok(())) => Response::Begun { session: id },
+                    fail => {
+                        // Reclaim the eagerly-installed handle (unless
+                        // a pipelined end/abort already took it) and
+                        // drop the reservation — ours only, never a
+                        // successor's.
+                        drop(entry.handle.lock().expect("session entry poisoned").take());
+                        self.shared.sessions.remove_if(&id, &entry);
+                        match fail {
+                            Some(Err(e)) => Response::error(format!("{e:#}")),
+                            _ => Response::error(WORKER_GONE.to_string()),
+                        }
+                    }
+                };
+                self.fill_slot(conn, op, ServerMsg::Response(resp).to_line());
+            }
+            Done::Session(op, r) => match self.ops.remove(&op) {
+                Some(Op::Status { sid, targets }) => {
+                    // Late joiners can no longer attach to this drive.
+                    if self.driving.get(&sid) == Some(&op) {
+                        self.driving.remove(&sid);
+                    }
+                    let resp = match r {
+                        Some(Ok(st)) => Response::Status(report(&sid, st)),
+                        Some(Err(e)) => Response::error(format!("{e:#}")),
+                        None => Response::error(WORKER_GONE.to_string()),
+                    };
+                    let line = ServerMsg::Response(resp).to_line();
+                    for t in targets {
+                        self.fill_slot(t, op, line.clone());
+                    }
+                }
+                Some(Op::End { conn, sid, entry }) => {
+                    self.shared.sessions.remove_if(&sid, &entry);
+                    let resp = match r {
+                        Some(Ok(st)) => Response::Result(report(&sid, st)),
+                        Some(Err(e)) => Response::error(format!("{e:#}")),
+                        None => Response::error(WORKER_GONE.to_string()),
+                    };
+                    self.fill_slot(conn, op, ServerMsg::Response(resp).to_line());
+                }
+                Some(Op::SubStep { conn, sid }) => self.on_sub_step(conn, &sid, r),
+                Some(Op::Begin { .. }) | None => {}
+            },
+        }
+    }
+
+    // -- accept / read / write ----------------------------------------
+
+    fn accept_burst(&mut self, listener: &UnixListener, gate: &mut AcceptGate) {
+        loop {
+            match listener.accept() {
+                Ok((stream, _)) => self.add_conn(stream),
+                Err(e) if e.kind() == io::ErrorKind::WouldBlock => return,
+                Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+                Err(e) => {
+                    // Logs through the gate; the backoff drops the
+                    // listener from the poll set for a beat.
+                    let _ = accept_stream(Err(e), gate, Instant::now());
+                    return;
+                }
+            }
+        }
+    }
+
+    fn add_conn(&mut self, stream: UnixStream) {
+        if stream.set_nonblocking(true).is_err() {
+            return;
+        }
+        let tok = self.next_tok;
+        self.next_tok += 1;
+        self.conns.insert(tok, Conn::new(stream));
+        // The client's first bytes are often already queued.
+        self.read_conn(tok);
+    }
+
+    fn read_conn(&mut self, tok: u64) {
+        enum Action {
+            Eof,
+            Feed(usize),
+            Legacy(usize),
+            Drop,
+        }
+        let mut buf = [0u8; 8192];
+        loop {
+            let action = {
+                let Some(c) = self.conns.get_mut(&tok) else { return };
+                if !c.wants_read() {
+                    return;
+                }
+                match (&c.stream).read(&mut buf) {
+                    Ok(0) => Action::Eof,
+                    Ok(n) => {
+                        if matches!(c.state, ConnState::Sniff) {
+                            if buf[0] == b'{' {
+                                let bucket = (self.cfg.rate_limit_rps > 0.0).then(|| {
+                                    TokenBucket::new(self.cfg.rate_limit_rps, self.cfg.rate_burst)
+                                });
+                                c.state = ConnState::V1(V1::new(bucket));
+                                Action::Feed(n)
+                            } else {
+                                Action::Legacy(n)
+                            }
+                        } else {
+                            Action::Feed(n)
+                        }
+                    }
+                    Err(e) if e.kind() == io::ErrorKind::WouldBlock => return,
+                    Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+                    Err(_) => Action::Drop,
+                }
+            };
+            match action {
+                Action::Eof => {
+                    self.on_eof(tok);
+                    return;
+                }
+                Action::Feed(n) => {
+                    if let Some(c) = self.conns.get_mut(&tok) {
+                        let Conn { framer, events, .. } = c;
+                        framer.push(&buf[..n], events);
+                    }
+                    self.pump(tok);
+                }
+                Action::Legacy(n) => {
+                    self.legacy_handoff(tok, &buf[..n]);
+                    return;
+                }
+                Action::Drop => {
+                    self.conns.remove(&tok);
+                    return;
+                }
+            }
+        }
+    }
+
+    fn on_eof(&mut self, tok: u64) {
+        let Some(c) = self.conns.get_mut(&tok) else { return };
+        c.eof = true;
+        if let ConnState::V1(_) = c.state {
+            if let Some(ev) = c.framer.take_trailing() {
+                c.events.push_back(ev);
+            }
+        }
+        self.pump(tok);
+    }
+
+    /// Non-`{` first byte: hand the connection (with its already-read
+    /// bytes re-attached) to a blocking thread running the unchanged
+    /// legacy protocol.
+    fn legacy_handoff(&mut self, tok: u64, first: &[u8]) {
+        let Some(c) = self.conns.remove(&tok) else { return };
+        let stream = c.stream;
+        if stream.set_nonblocking(false).is_err() {
+            return;
+        }
+        let Ok(writer) = stream.try_clone() else { return };
+        let fleet = self.fleet.clone();
+        let buffered = first.to_vec();
+        std::thread::spawn(move || {
+            let reader = BufReader::new(Cursor::new(buffered).chain(stream));
+            let _ = handle_legacy(reader, writer, &fleet);
+        });
+    }
+
+    fn flush_all(&mut self) {
+        for c in self.conns.values_mut() {
+            while !c.dead && !c.flushed() {
+                match (&c.stream).write(&c.out[c.out_pos..]) {
+                    Ok(0) => c.dead = true,
+                    Ok(n) => c.out_pos += n,
+                    Err(e) if e.kind() == io::ErrorKind::WouldBlock => break,
+                    Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+                    Err(_) => c.dead = true,
+                }
+            }
+            if c.flushed() {
+                c.out.clear();
+                c.out_pos = 0;
+            } else if c.out.len() - c.out_pos > MAX_OUTBUF {
+                c.dead = true;
+            }
+        }
+    }
+
+    fn reap(&mut self) {
+        self.conns.retain(|_, c| !Reactor::spent(c));
+    }
+
+    fn spent(c: &Conn) -> bool {
+        if c.dead {
+            return true;
+        }
+        match &c.state {
+            ConnState::Sniff => c.eof,
+            ConnState::V1(v) => {
+                let idle = c.events.is_empty()
+                    && v.slots.is_empty()
+                    && v.sub.is_none()
+                    && v.pending_sub.is_none();
+                (c.eof && idle && c.flushed()) || (v.closing && c.flushed())
+            }
+        }
+    }
+
+    // -- v1 request processing ----------------------------------------
+
+    fn v1_mut(&mut self, tok: u64) -> Option<&mut V1> {
+        match self.conns.get_mut(&tok).map(|c| &mut c.state) {
+            Some(ConnState::V1(v)) => Some(v),
+            _ => None,
+        }
+    }
+
+    /// Process framed events until the connection blocks (subscribe in
+    /// progress, shutdown answered) or the backlog drains.
+    fn pump(&mut self, tok: u64) {
+        loop {
+            let ev = {
+                let Some(c) = self.conns.get_mut(&tok) else { return };
+                let ConnState::V1(v) = &c.state else { return };
+                if v.sub.is_some() || v.pending_sub.is_some() || v.closing {
+                    break;
+                }
+                match c.events.pop_front() {
+                    Some(e) => e,
+                    None => break,
+                }
+            };
+            self.handle_event(tok, ev);
+        }
+        self.maybe_start_sub(tok);
+    }
+
+    /// Queue a response for `tok`, preserving request order.
+    fn answer(&mut self, tok: u64, r: Response) {
+        self.answer_line(tok, ServerMsg::Response(r).to_line());
+    }
+
+    fn answer_line(&mut self, tok: u64, line: String) {
+        let Some(c) = self.conns.get_mut(&tok) else { return };
+        if let ConnState::V1(v) = &mut c.state {
+            v.slots.push_back(Slot::Ready(line));
+        }
+        Self::drain_ready(c);
+    }
+
+    fn push_pending(&mut self, tok: u64, op: u64) {
+        if let Some(v) = self.v1_mut(tok) {
+            v.slots.push_back(Slot::Pending(op));
+        }
+    }
+
+    /// Resolve one `Pending(op)` slot and flush the contiguous `Ready`
+    /// prefix into the output buffer.
+    fn fill_slot(&mut self, tok: u64, op: u64, line: String) {
+        let Some(c) = self.conns.get_mut(&tok) else { return };
+        if let ConnState::V1(v) = &mut c.state {
+            if let Some(slot) = v
+                .slots
+                .iter_mut()
+                .find(|s| matches!(s, Slot::Pending(o) if *o == op))
+            {
+                *slot = Slot::Ready(line);
+            }
+        }
+        Self::drain_ready(c);
+        self.maybe_start_sub(tok);
+    }
+
+    fn drain_ready(c: &mut Conn) {
+        let Conn { state, out, .. } = c;
+        let ConnState::V1(v) = state else { return };
+        while matches!(v.slots.front(), Some(Slot::Ready(_))) {
+            if let Some(Slot::Ready(l)) = v.slots.pop_front() {
+                out.extend_from_slice(l.as_bytes());
+            }
+        }
+    }
+
+    /// Bytes appended outside the slot queue — subscribe events and the
+    /// stream's final response (legal only while the stream owns the
+    /// connection, i.e. the slot queue is empty).
+    fn append_out(&mut self, tok: u64, line: &str) {
+        if let Some(c) = self.conns.get_mut(&tok) {
+            c.out.extend_from_slice(line.as_bytes());
+        }
+    }
+
+    fn handle_event(&mut self, tok: u64, ev: FrameEvent) {
+        let line = match ev {
+            FrameEvent::Oversized => {
+                self.answer(
+                    tok,
+                    Response::error(format!("request line exceeds {MAX_LINE_BYTES} bytes")),
+                );
+                return;
+            }
+            FrameEvent::Line(l) => l,
+        };
+        if line.trim().is_empty() {
+            return;
+        }
+        // Rate limit before parsing: a flood of malformed lines is
+        // still a flood.
+        let (rate, burst) = (self.cfg.rate_limit_rps, self.cfg.rate_burst.max(1.0));
+        let now_s = self.started.elapsed().as_secs_f64();
+        let over = match self.v1_mut(tok) {
+            Some(v) => match v.bucket.as_mut() {
+                Some(b) => !b.admit(now_s),
+                None => false,
+            },
+            None => return,
+        };
+        if over {
+            self.answer(
+                tok,
+                Response::rate_limited(format!(
+                    "rate limit exceeded ({rate} req/s, burst {burst})"
+                )),
+            );
+            return;
+        }
+        let req = match Request::parse_line(&line) {
+            Ok(r) => r,
+            Err(msg) => {
+                self.answer(tok, Response::error(msg));
+                return;
+            }
+        };
+        let hello_done = self.v1_mut(tok).is_some_and(|v| v.hello_done);
+        if !hello_done && !matches!(req, Request::Hello { .. }) {
+            self.answer(
+                tok,
+                Response::error(format!(
+                    "handshake required: send {{\"kind\":\"hello\",\"v\":{PROTOCOL_VERSION}}} first"
+                )),
+            );
+            return;
+        }
+        match req {
+            Request::Hello { version } => {
+                if version == 0 || version > PROTOCOL_VERSION {
+                    self.answer(
+                        tok,
+                        Response::error(format!(
+                            "unsupported protocol version {version} (this server speaks v{PROTOCOL_VERSION})"
+                        )),
+                    );
+                } else {
+                    if let Some(v) = self.v1_mut(tok) {
+                        v.hello_done = true;
+                    }
+                    self.answer(
+                        tok,
+                        Response::Hello {
+                            protocol: PROTOCOL_VERSION,
+                            server: format!("gpoeo {}", env!("CARGO_PKG_VERSION")),
+                        },
+                    );
+                }
+            }
+            Request::Begin {
+                app,
+                iters,
+                name,
+                policy,
+            } => self.start_begin(tok, &app, iters, name, policy),
+            Request::Status { session } => self.start_status(tok, session),
+            Request::End { session } => match claim_session(&self.shared, &session) {
+                Ok((entry, h)) => {
+                    let op = self.next_op();
+                    let reply = self.make_reply(move |r| Done::Session(op, r));
+                    h.dispatch_end(reply);
+                    self.ops.insert(
+                        op,
+                        Op::End {
+                            conn: tok,
+                            sid: session,
+                            entry,
+                        },
+                    );
+                    self.push_pending(tok, op);
+                }
+                Err(e) => self.answer(tok, Response::error(format!("{e:#}"))),
+            },
+            Request::Abort { session } => {
+                let r = claim_session(&self.shared, &session).map(|(entry, h)| {
+                    h.abort();
+                    self.shared.sessions.remove_if(&session, &entry);
+                });
+                let resp = match r {
+                    Ok(()) => Response::Ok {
+                        detail: format!("session {session} aborted"),
+                    },
+                    Err(e) => Response::error(format!("{e:#}")),
+                };
+                self.answer(tok, resp);
+            }
+            Request::SetPolicy { policy } => match PolicyRegistry::global().get(&policy.name) {
+                Ok(_) => {
+                    let detail = format!("policy {}", policy.name);
+                    if let Some(v) = self.v1_mut(tok) {
+                        v.default_policy = policy;
+                    }
+                    self.answer(tok, Response::Ok { detail });
+                }
+                Err(e) => self.answer(tok, Response::error(format!("{e:#}"))),
+            },
+            Request::ListApps => {
+                let resp = match list_apps(self.fleet.spec()) {
+                    Ok(apps) => Response::Apps(apps),
+                    Err(e) => Response::error(format!("{e:#}")),
+                };
+                self.answer(tok, resp);
+            }
+            Request::ListPolicies => {
+                let ps = PolicyRegistry::global()
+                    .iter()
+                    .map(|b| PolicyInfo {
+                        name: b.name().to_string(),
+                        description: b.describe().to_string(),
+                        default_config: b.default_config(),
+                    })
+                    .collect();
+                self.answer(tok, Response::Policies(ps));
+            }
+            Request::Subscribe {
+                session,
+                every_ticks,
+                max_events,
+            } => {
+                if let Some(v) = self.v1_mut(tok) {
+                    v.pending_sub = Some(SubReq {
+                        sid: session,
+                        every_ticks,
+                        max_events,
+                    });
+                }
+                // Started by maybe_start_sub once earlier slots drain.
+            }
+            Request::Shutdown => {
+                self.answer(
+                    tok,
+                    Response::Ok {
+                        detail: "daemon shutting down".to_string(),
+                    },
+                );
+                if let Some(v) = self.v1_mut(tok) {
+                    v.closing = true;
+                }
+                self.shared.shutdown.store(true, Ordering::SeqCst);
+            }
+        }
+    }
+
+    fn start_begin(
+        &mut self,
+        tok: u64,
+        app: &str,
+        iters: Option<u64>,
+        name: Option<String>,
+        policy: Option<PolicySpec>,
+    ) {
+        let spec = match policy {
+            Some(p) => p,
+            None => match self.v1_mut(tok) {
+                Some(v) => v.default_policy.clone(),
+                None => return,
+            },
+        };
+        let prepared = match prepare_begin(&self.fleet, &self.shared, app, iters, name, &spec) {
+            Ok(p) => p,
+            Err(e) => {
+                self.answer(tok, Response::error(format!("{e:#}")));
+                return;
+            }
+        };
+        let op = self.next_op();
+        let reply = self.make_reply(move |r| Done::Begin(op, r));
+        match self.fleet.begin_async(prepared.app, spec, prepared.n_iters, reply) {
+            Ok(handle) => {
+                // Fulfill the table *now*, not when the worker confirms:
+                // worker command queues are FIFO, so a status/end
+                // pipelined right behind this begin queues after it on
+                // the same worker — exactly the old blocking-path
+                // ordering. If the begin then fails, the queued command
+                // answers "no such session" and `on_done` reclaims the
+                // entry.
+                self.shared.sessions.fulfill(&prepared.id, handle);
+                let entry = self
+                    .shared
+                    .sessions
+                    .get(&prepared.id)
+                    .expect("just-fulfilled session entry vanished");
+                self.ops.insert(
+                    op,
+                    Op::Begin {
+                        conn: tok,
+                        id: prepared.id,
+                        entry,
+                    },
+                );
+                self.push_pending(tok, op);
+            }
+            Err(e) => {
+                self.shared.sessions.remove(&prepared.id);
+                self.answer(tok, Response::error(format!("{e:#}")));
+            }
+        }
+    }
+
+    /// `status` with coalescing (ADR-010): if a tick-drive for this
+    /// session is already in flight, join it instead of driving again.
+    fn start_status(&mut self, tok: u64, session: String) {
+        if let Some(&op) = self.driving.get(&session) {
+            if let Some(Op::Status { targets, .. }) = self.ops.get_mut(&op) {
+                targets.push(tok);
+                self.push_pending(tok, op);
+                return;
+            }
+        }
+        let op = self.next_op();
+        let reply = self.make_reply(move |r| Done::Session(op, r));
+        let dispatched = with_session(&self.shared, &session, |h| {
+            h.dispatch_step(STATUS_TICKS, reply);
+            Ok(())
+        });
+        match dispatched {
+            Ok(()) => {
+                self.driving.insert(session.clone(), op);
+                self.ops.insert(
+                    op,
+                    Op::Status {
+                        sid: session,
+                        targets: vec![tok],
+                    },
+                );
+                self.push_pending(tok, op);
+            }
+            Err(e) => self.answer(tok, Response::error(format!("{e:#}"))),
+        }
+    }
+
+    // -- subscribe streams --------------------------------------------
+
+    fn maybe_start_sub(&mut self, tok: u64) {
+        let ready = match self.v1_mut(tok) {
+            Some(v) => {
+                v.sub.is_none() && v.pending_sub.is_some() && v.slots.is_empty() && !v.closing
+            }
+            None => return,
+        };
+        if !ready {
+            return;
+        }
+        let Some(req) = self.v1_mut(tok).and_then(|v| v.pending_sub.take()) else {
+            return;
+        };
+        match self.dispatch_sub_step(tok, &req.sid, req.every_ticks) {
+            Ok(()) => {
+                if let Some(v) = self.v1_mut(tok) {
+                    v.sub = Some(Sub {
+                        every_ticks: req.every_ticks,
+                        max_events: req.max_events,
+                        sent: 0,
+                    });
+                }
+            }
+            // A dead session answers a single typed error, no events.
+            Err(e) => self.answer(tok, Response::error(format!("{e:#}"))),
+        }
+    }
+
+    fn dispatch_sub_step(&mut self, tok: u64, sid: &str, every_ticks: u64) -> anyhow::Result<()> {
+        let op = self.next_op();
+        let reply = self.make_reply(move |r| Done::Session(op, r));
+        with_session(&self.shared, sid, |h| {
+            h.dispatch_step(every_ticks, reply);
+            Ok(())
+        })?;
+        self.ops.insert(
+            op,
+            Op::SubStep {
+                conn: tok,
+                sid: sid.to_string(),
+            },
+        );
+        Ok(())
+    }
+
+    fn on_sub_step(&mut self, tok: u64, sid: &str, r: Option<anyhow::Result<SessionStatus>>) {
+        if !self.conns.contains_key(&tok) {
+            // Subscriber vanished: the stream dies, the session stays
+            // registered (end still owns the result).
+            return;
+        }
+        let st = match r {
+            Some(Ok(st)) => st,
+            Some(Err(e)) => {
+                let line = ServerMsg::Response(Response::error(format!("{e:#}"))).to_line();
+                self.append_out(tok, &line);
+                self.end_sub(tok);
+                return;
+            }
+            None => {
+                let line = ServerMsg::Response(Response::error(WORKER_GONE.to_string())).to_line();
+                self.append_out(tok, &line);
+                self.end_sub(tok);
+                return;
+            }
+        };
+        let finished = {
+            let Some(v) = self.v1_mut(tok) else { return };
+            let Some(sub) = v.sub.as_mut() else { return };
+            sub.sent += 1;
+            st.done || (sub.max_events > 0 && sub.sent >= sub.max_events)
+        };
+        let ev = ServerMsg::Event(Event::Status(report(sid, st))).to_line();
+        self.append_out(tok, &ev);
+        if finished {
+            let fin = ServerMsg::Response(Response::Status(report(sid, st))).to_line();
+            self.append_out(tok, &fin);
+            self.end_sub(tok);
+            return;
+        }
+        let every = self.v1_mut(tok).and_then(|v| v.sub.as_ref().map(|s| s.every_ticks));
+        let Some(every) = every else { return };
+        if let Err(e) = self.dispatch_sub_step(tok, sid, every) {
+            let line = ServerMsg::Response(Response::error(format!("{e:#}"))).to_line();
+            self.append_out(tok, &line);
+            self.end_sub(tok);
+        }
+    }
+
+    fn end_sub(&mut self, tok: u64) {
+        if let Some(v) = self.v1_mut(tok) {
+            v.sub = None;
+        }
+        // Resume whatever queued behind the stream.
+        self.pump(tok);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::api::{read_frame, Frame};
+
+    /// Frame a byte stream through the blocking `read_frame`.
+    fn via_read_frame(data: &[u8], max: usize) -> Vec<Frame> {
+        let mut r = std::io::BufReader::new(Cursor::new(data.to_vec()));
+        let mut out = Vec::new();
+        loop {
+            match read_frame(&mut r, max).unwrap() {
+                Frame::Eof => return out,
+                f => out.push(f),
+            }
+        }
+    }
+
+    /// Frame the same stream through the incremental framer, fed in
+    /// `chunk`-sized pieces.
+    fn via_framer(data: &[u8], chunk: usize, max: usize) -> Vec<Frame> {
+        let mut framer = LineFramer::new(max);
+        let mut events = VecDeque::new();
+        for piece in data.chunks(chunk.max(1)) {
+            framer.push(piece, &mut events);
+        }
+        if let Some(ev) = framer.take_trailing() {
+            events.push_back(ev);
+        }
+        events
+            .into_iter()
+            .map(|e| match e {
+                FrameEvent::Line(l) => Frame::Line(l),
+                FrameEvent::Oversized => Frame::Oversized,
+            })
+            .collect()
+    }
+
+    #[test]
+    fn framer_matches_read_frame_at_every_chunking() {
+        let max = 8;
+        let corpus: &[&[u8]] = &[
+            b"ab\ncd\n",
+            b"exactly8\n",
+            b"123456789\n",
+            b"123456789\nok\n",
+            b"\n\n",
+            b"tail",
+            b"over-the-cap-line\nx",
+            b"aaaaaaaaaaaaaaaaaaaaaaaa",
+            b"first\naaaaaaaaaaaaaaaaaaaa\nlast\n",
+            b"caf\xc3\xa9\nbad\xffbyte\n",
+            b"",
+        ];
+        for data in corpus {
+            let expect = via_read_frame(data, max);
+            for chunk in [1, 2, 3, 5, 7, 64] {
+                let got = via_framer(data, chunk, max);
+                assert_eq!(got, expect, "data {data:?} chunk {chunk}");
+            }
+        }
+    }
+
+    #[test]
+    fn framer_emits_oversized_at_detection_and_swallows_the_rest() {
+        // The cap trips mid-line, before the newline ever arrives — the
+        // event must not wait for the line to finish (the blocking
+        // read_frame drains first, but it has the luxury of blocking).
+        let mut f = LineFramer::new(4);
+        let mut out = VecDeque::new();
+        f.push(b"123456", &mut out);
+        assert_eq!(out.pop_front(), Some(FrameEvent::Oversized));
+        // Everything up to the newline is swallowed silently...
+        f.push(b"789", &mut out);
+        assert!(out.is_empty());
+        f.push(b"\nok\n", &mut out);
+        // ...and the next line comes through clean.
+        assert_eq!(out.pop_front(), Some(FrameEvent::Line("ok".into())));
+        assert!(out.is_empty());
+        assert_eq!(f.take_trailing(), None);
+    }
+
+    #[test]
+    fn token_bucket_refills_at_rate_and_caps_at_burst() {
+        let mut b = TokenBucket::new(2.0, 4.0);
+        // The burst is available immediately...
+        for i in 0..4 {
+            assert!(b.admit(0.0), "burst token {i}");
+        }
+        // ...then the bucket is dry.
+        assert!(!b.admit(0.0));
+        // 0.4s at 2 tokens/s refills 0.8 — still short of one token.
+        assert!(!b.admit(0.4));
+        // 0.1s more crosses 1.0.
+        assert!(b.admit(0.5));
+        assert!(!b.admit(0.5));
+        // A long idle refills to the burst cap, not beyond.
+        for i in 0..4 {
+            assert!(b.admit(100.0), "refilled token {i}");
+        }
+        assert!(!b.admit(100.0));
+    }
+
+    #[test]
+    fn token_bucket_burst_floor_is_one_request() {
+        // burst 0 would deadlock every connection; it clamps to 1.
+        let mut b = TokenBucket::new(5.0, 0.0);
+        assert!(b.admit(0.0));
+        assert!(!b.admit(0.0));
+        // Time running backwards (clock hiccup) must not mint tokens.
+        assert!(!b.admit(-50.0));
+    }
+}

@@ -1,0 +1,291 @@
+//! `gpoeo experiment api-bench` — control-plane scale benchmark for the
+//! reactor daemon (DESIGN.md §10).
+//!
+//! Spins an in-process daemon (AIMD-scaled fleet) on a temp socket per
+//! tier, then measures what the event loop actually delivers:
+//!
+//! - **connections/sec** — serial `connect` + `hello` handshakes;
+//! - **session churn/sec** — `begin` → `status` → `end` cycles driven
+//!   by concurrent [`GpoeoClient`]s across many connections;
+//! - **p50/p99 request latency** — per-request wall clock over every
+//!   typed request in the churn phase.
+//!
+//! Default tiers are 100, 1000 and 10000 sessions (`--quick` runs only
+//! 100; `--sessions N` pins a single tier). Every tier is appended to
+//! `BENCH_api.json` whether it passed or not — a failed 10k attempt is
+//! a recorded data point, not a silent hole. CI gates the quick tier
+//! with `--min-churn` / `--max-p99-ms` (see `cli_experiment`).
+
+use crate::api::GpoeoClient;
+use crate::coordinator::daemon::{Daemon, DaemonCfg};
+use crate::coordinator::PolicySpec;
+use crate::sim::Spec;
+use crate::util::cli::Args;
+use crate::util::json::Json;
+use crate::util::stats::percentile;
+use crate::util::table::{s, Cell, Table};
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+/// Fleet band for the bench daemon: start small, let AIMD grow.
+const BENCH_WORKERS: usize = 2;
+const BENCH_MAX_WORKERS: usize = 8;
+
+/// Concurrent client connections driving the churn phase.
+const CHURN_THREADS: usize = 32;
+
+/// Serial connect+hello probes for the connections/sec figure.
+const CONN_PROBES: usize = 100;
+
+/// Workload per session: tiny on purpose — the bench measures the
+/// control plane, not the simulator (`status` drives the session to
+/// completion in one slice, so `end` returns immediately).
+const BENCH_APP: &str = "AI_TS";
+const BENCH_ITERS: u64 = 6;
+
+/// One tier's outcome. `ok: false` tiers carry the first error instead
+/// of aborting the whole bench — a failed 10k attempt is still data.
+pub struct ApiBenchTier {
+    pub sessions: usize,
+    pub threads: usize,
+    pub ok: bool,
+    pub error: String,
+    pub conns_per_s: f64,
+    pub churn_per_s: f64,
+    pub p50_ms: f64,
+    pub p99_ms: f64,
+    pub workers_start: usize,
+    pub workers_end: usize,
+    pub wall_s: f64,
+}
+
+pub struct ApiBench {
+    pub table: Table,
+    pub tiers: Vec<ApiBenchTier>,
+}
+
+impl ApiBench {
+    pub fn print_summary(&self) {
+        for t in &self.tiers {
+            if t.ok {
+                println!(
+                    "api-bench {:>6} sessions: {:.0} conns/s  {:.0} churn/s  p50 {:.2}ms  p99 {:.2}ms  workers {}->{}  ({:.2}s)",
+                    t.sessions,
+                    t.conns_per_s,
+                    t.churn_per_s,
+                    t.p50_ms,
+                    t.p99_ms,
+                    t.workers_start,
+                    t.workers_end,
+                    t.wall_s
+                );
+            } else {
+                println!("api-bench {:>6} sessions: FAILED: {}", t.sessions, t.error);
+            }
+        }
+    }
+}
+
+pub fn run(spec: &Arc<Spec>, args: &Args, quick: bool) -> anyhow::Result<ApiBench> {
+    let pinned = args.opt_usize("sessions", 0)?;
+    let tiers: Vec<usize> = if pinned > 0 {
+        vec![pinned]
+    } else if quick {
+        vec![100]
+    } else {
+        vec![100, 1000, 10000]
+    };
+
+    let dir = std::env::temp_dir().join(format!("gpoeo-apibench-{}", std::process::id()));
+    std::fs::create_dir_all(&dir)?;
+
+    let mut table = Table::new(
+        "api-bench — reactor control-plane throughput",
+        &[
+            "sessions", "conns", "conn/s", "churn/s", "p50 ms", "p99 ms", "workers", "wall s",
+            "ok",
+        ],
+    );
+    let mut out = Vec::new();
+    for sessions in tiers {
+        let tier = run_tier(spec, &dir, sessions);
+        table.rowf(&[
+            Cell::U(tier.sessions),
+            Cell::U(tier.threads),
+            Cell::F(tier.conns_per_s, 0),
+            Cell::F(tier.churn_per_s, 0),
+            Cell::F(tier.p50_ms, 2),
+            Cell::F(tier.p99_ms, 2),
+            s(format!("{}->{}", tier.workers_start, tier.workers_end)),
+            Cell::F(tier.wall_s, 2),
+            s(if tier.ok { "yes" } else { "FAIL" }),
+        ]);
+        out.push(tier);
+    }
+    Ok(ApiBench { table, tiers: out })
+}
+
+/// One tier: fresh daemon, connect probe, concurrent churn, shutdown.
+fn run_tier(spec: &Arc<Spec>, dir: &Path, sessions: usize) -> ApiBenchTier {
+    let threads = sessions.min(CHURN_THREADS).max(1);
+    let mut tier = ApiBenchTier {
+        sessions,
+        threads,
+        ok: false,
+        error: String::new(),
+        conns_per_s: 0.0,
+        churn_per_s: 0.0,
+        p50_ms: 0.0,
+        p99_ms: 0.0,
+        workers_start: 0,
+        workers_end: 0,
+        wall_s: 0.0,
+    };
+    match bench_tier(spec, dir, sessions, threads, &mut tier) {
+        Ok(()) => tier.ok = true,
+        Err(e) => tier.error = format!("{e:#}"),
+    }
+    tier
+}
+
+fn bench_tier(
+    spec: &Arc<Spec>,
+    dir: &Path,
+    sessions: usize,
+    threads: usize,
+    tier: &mut ApiBenchTier,
+) -> anyhow::Result<()> {
+    let sock = dir.join(format!("bench-{sessions}.sock"));
+    let daemon = Arc::new(Daemon::with_cfg(
+        spec.clone(),
+        BENCH_WORKERS,
+        DaemonCfg {
+            max_workers: BENCH_MAX_WORKERS,
+            rate_limit_rps: 0.0,
+            rate_burst: 0.0,
+        },
+    ));
+    let serve = {
+        let daemon = daemon.clone();
+        let sock = sock.clone();
+        std::thread::spawn(move || daemon.serve(&sock))
+    };
+    wait_for_socket(&sock)?;
+    tier.workers_start = daemon.num_workers();
+
+    // Phase 1: serial connect+hello throughput.
+    let t0 = Instant::now();
+    for _ in 0..CONN_PROBES {
+        GpoeoClient::connect(&sock)?;
+    }
+    tier.conns_per_s = CONN_PROBES as f64 / t0.elapsed().as_secs_f64().max(1e-9);
+
+    // Phase 2: concurrent session churn with per-request latencies.
+    let latencies: Mutex<Vec<f64>> = Mutex::new(Vec::with_capacity(sessions * 3));
+    let errors: Mutex<Vec<String>> = Mutex::new(Vec::new());
+    let t1 = Instant::now();
+    std::thread::scope(|scope| {
+        for t in 0..threads {
+            let my_sessions = sessions / threads + usize::from(t < sessions % threads);
+            let (sock, latencies, errors) = (&sock, &latencies, &errors);
+            scope.spawn(move || {
+                let mut local = Vec::with_capacity(my_sessions * 3);
+                let r = churn(sock, my_sessions, &mut local);
+                latencies.lock().expect("latency lock").extend(local);
+                if let Err(e) = r {
+                    errors.lock().expect("error lock").push(format!("{e:#}"));
+                }
+            });
+        }
+    });
+    tier.wall_s = t1.elapsed().as_secs_f64();
+    tier.workers_end = daemon.num_workers();
+
+    let lat = latencies.into_inner().expect("latency lock");
+    let completed = lat.len() / 3;
+    tier.churn_per_s = completed as f64 / tier.wall_s.max(1e-9);
+    tier.p50_ms = percentile(&lat, 50.0);
+    tier.p99_ms = percentile(&lat, 99.0);
+
+    // Tear the daemon down (best-effort) before reporting churn errors.
+    let down = GpoeoClient::connect(&sock).and_then(|mut c| c.shutdown());
+    let served = serve.join();
+    if let Some(e) = errors.into_inner().expect("error lock").into_iter().next() {
+        anyhow::bail!("{}/{} sessions completed; first error: {e}", completed, sessions);
+    }
+    down?;
+    match served {
+        Ok(r) => r?,
+        Err(_) => anyhow::bail!("daemon serve thread panicked"),
+    }
+    anyhow::ensure!(
+        completed == sessions,
+        "only {completed}/{sessions} sessions completed"
+    );
+    Ok(())
+}
+
+/// One churn worker: short-lived sessions over one connection, every
+/// request timed individually.
+fn churn(sock: &Path, n: usize, lat_ms: &mut Vec<f64>) -> anyhow::Result<()> {
+    let mut c = GpoeoClient::connect(sock)?;
+    for _ in 0..n {
+        let q = Instant::now();
+        let sid = c.begin(
+            BENCH_APP,
+            Some(BENCH_ITERS),
+            None,
+            Some(PolicySpec::registered("powercap")),
+        )?;
+        lat_ms.push(q.elapsed().as_secs_f64() * 1e3);
+        let q = Instant::now();
+        c.status(&sid)?;
+        lat_ms.push(q.elapsed().as_secs_f64() * 1e3);
+        let q = Instant::now();
+        c.end(&sid)?;
+        lat_ms.push(q.elapsed().as_secs_f64() * 1e3);
+    }
+    Ok(())
+}
+
+fn wait_for_socket(sock: &PathBuf) -> anyhow::Result<()> {
+    for _ in 0..200 {
+        if sock.exists() {
+            return Ok(());
+        }
+        std::thread::sleep(std::time::Duration::from_millis(10));
+    }
+    anyhow::bail!("daemon socket {} never appeared", sock.display())
+}
+
+/// Append every tier to the bench file (`runs` array, one record per
+/// tier per invocation — the cross-run trajectory, same shape idiom as
+/// `BENCH_sweep.json` / `BENCH_detect.json`).
+pub fn append_bench(path: &str, r: &ApiBench, quick: bool) -> anyhow::Result<()> {
+    let unix_s = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_secs() as f64)
+        .unwrap_or(0.0);
+    let mut runs = Json::bench_runs(path);
+    for t in &r.tiers {
+        runs.push(Json::obj(vec![
+            ("sessions", Json::Num(t.sessions as f64)),
+            ("threads", Json::Num(t.threads as f64)),
+            ("ok", Json::Bool(t.ok)),
+            ("error", Json::Str(t.error.clone())),
+            ("conns_per_s", Json::Num(t.conns_per_s)),
+            ("churn_per_s", Json::Num(t.churn_per_s)),
+            ("p50_ms", Json::Num(t.p50_ms)),
+            ("p99_ms", Json::Num(t.p99_ms)),
+            ("workers_start", Json::Num(t.workers_start as f64)),
+            ("workers_end", Json::Num(t.workers_end as f64)),
+            ("wall_clock_s", Json::Num(t.wall_s)),
+            ("quick", Json::Bool(quick)),
+            ("unix_time_s", Json::Num(unix_s)),
+        ]));
+    }
+    let doc = Json::obj(vec![("runs", Json::Arr(runs))]);
+    std::fs::write(path, doc.to_pretty())?;
+    Ok(())
+}

@@ -6,6 +6,7 @@
 //! writes each table as markdown.
 
 pub mod ablation;
+pub mod apibench;
 pub mod detection;
 pub mod helpers;
 pub mod motivation;
@@ -22,7 +23,7 @@ use std::sync::Arc;
 pub const EXPERIMENTS: &[&str] = &[
     "fig1", "fig2", "fig3", "fig5", "fig6", "fig7", "fig8", "fig9", "fig10", "fig11", "fig12",
     "fig13", "table3", "fig14", "fig15", "headline", "ablation", "policies", "detect-bench",
-    "predict-bench",
+    "predict-bench", "api-bench",
 ];
 
 fn emit(t: &Table, args: &Args) -> anyhow::Result<()> {
@@ -163,6 +164,47 @@ pub fn cli_experiment(args: &Args) -> anyhow::Result<()> {
                         "predict-bench: arena speedup {:.2}x below the required {min}x",
                         r.speedup
                     );
+                }
+            }
+            "api-bench" => {
+                // Control-plane scale: artifact-free (powercap policy),
+                // so it gates CI alongside detect/predict-bench. Every
+                // tier is appended to BENCH_api.json before any gate can
+                // fail — a failed 10k attempt is recorded, not lost.
+                let r = apibench::run(&spec, args, quick)?;
+                emit(&r.table, args)?;
+                r.print_summary();
+                let bench_path = args.opt_or("bench", "BENCH_api.json");
+                apibench::append_bench(bench_path, &r, quick)?;
+                println!("bench record appended to {bench_path}");
+                let min_churn = args.opt_f64("min-churn", 0.0)?;
+                let max_p99 = args.opt_f64("max-p99-ms", 0.0)?;
+                for t in &r.tiers {
+                    if !t.ok {
+                        // The 10k tier may fail on small machines (fd
+                        // limits); the gated tiers must not.
+                        anyhow::ensure!(
+                            t.sessions > 1000,
+                            "api-bench: {} sessions tier failed: {}",
+                            t.sessions,
+                            t.error
+                        );
+                        continue;
+                    }
+                    if min_churn > 0.0 && t.churn_per_s < min_churn {
+                        anyhow::bail!(
+                            "api-bench: {} sessions churned {:.0}/s, below the required {min_churn}/s",
+                            t.sessions,
+                            t.churn_per_s
+                        );
+                    }
+                    if max_p99 > 0.0 && t.p99_ms > max_p99 {
+                        anyhow::bail!(
+                            "api-bench: {} sessions p99 {:.2}ms, above the allowed {max_p99}ms",
+                            t.sessions,
+                            t.p99_ms
+                        );
+                    }
                 }
             }
             "headline" => {

@@ -39,7 +39,7 @@ fn spawn_daemon(tag: &str) -> std::path::PathBuf {
 
 fn expect_error(msg: anyhow::Result<ServerMsg>, context: &str) -> String {
     match msg.expect(context) {
-        ServerMsg::Response(Response::Error { message }) => message,
+        ServerMsg::Response(Response::Error { message, .. }) => message,
         other => panic!("{context}: expected a typed error, got {other:?}"),
     }
 }

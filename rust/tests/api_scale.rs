@@ -1,0 +1,272 @@
+//! Control-plane scale and reactor-semantics tests (ISSUE 6).
+//!
+//! Contract under test: the reactor daemon keeps v1 semantics under
+//! churn — hundreds of short-lived named sessions across many
+//! concurrent connections produce no id collisions and no orphaned
+//! table entries; shutdown still removes the socket while clients are
+//! mid-churn; N pipelined `status` polls of one session coalesce into
+//! one tick-drive (ADR-010); and a rate-limited connection answers
+//! typed `rate_limited` errors, then recovers once the bucket refills
+//! (ADR-009).
+//!
+//! Everything here is artifact-free (model-free policies only).
+
+use gpoeo::api::{GpoeoClient, Request, Response, ServerMsg, PROTOCOL_VERSION};
+use gpoeo::coordinator::daemon::{Daemon, DaemonCfg};
+use gpoeo::policy::PolicySpec;
+use gpoeo::sim::Spec;
+use std::io::{BufRead, BufReader, Write};
+use std::os::unix::net::UnixStream;
+use std::sync::Arc;
+
+fn spawn_daemon_cfg(
+    tag: &str,
+    workers: usize,
+    cfg: DaemonCfg,
+) -> (std::path::PathBuf, std::thread::JoinHandle<anyhow::Result<()>>) {
+    let spec = Arc::new(Spec::load_default().unwrap());
+    let daemon = Daemon::with_cfg(spec, workers, cfg);
+    let dir = std::env::temp_dir().join(format!("gpoeo-scaletest-{}-{tag}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let sock = dir.join("d.sock");
+    let sock2 = sock.clone();
+    let serve = std::thread::spawn(move || daemon.serve(&sock2));
+    for _ in 0..200 {
+        if sock.exists() {
+            break;
+        }
+        std::thread::sleep(std::time::Duration::from_millis(10));
+    }
+    (sock, serve)
+}
+
+fn spawn_daemon(tag: &str, workers: usize) -> std::path::PathBuf {
+    spawn_daemon_cfg(tag, workers, DaemonCfg::fixed(workers)).0
+}
+
+fn powercap() -> Option<PolicySpec> {
+    Some(PolicySpec::registered("powercap"))
+}
+
+#[test]
+fn named_session_churn_leaves_no_orphans_and_no_collisions() {
+    let sock = spawn_daemon("churn", 2);
+    const THREADS: usize = 16;
+    const PER_THREAD: usize = 25;
+
+    // Each thread churns short-lived sessions over its own connection:
+    // named ones (ending via `end` or `abort` alternately) plus one
+    // server-generated id, collected for a uniqueness check.
+    let generated: Vec<String> = std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..THREADS)
+            .map(|t| {
+                let sock = &sock;
+                scope.spawn(move || {
+                    let mut c = GpoeoClient::connect(sock).unwrap();
+                    for i in 0..PER_THREAD {
+                        let name = format!("churn-t{t}-{i}");
+                        let id = c
+                            .begin("AI_TS", Some(4), Some(&name), powercap())
+                            .unwrap_or_else(|e| panic!("begin {name}: {e:#}"));
+                        // A collision would have answered "already
+                        // exists" — the daemon honors proposed names.
+                        assert_eq!(id, name);
+                        c.status(&id).unwrap();
+                        if i % 2 == 0 {
+                            let r = c.end(&id).unwrap();
+                            assert!(r.done, "{id} ended before its target");
+                            assert!(r.iterations >= r.target_iters);
+                        } else {
+                            c.abort(&id).unwrap();
+                        }
+                    }
+                    let id = c.begin("AI_TS", Some(4), None, powercap()).unwrap();
+                    c.abort(&id).unwrap();
+                    id
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+
+    // Server-generated ids never collide, even handed out concurrently.
+    let unique: std::collections::HashSet<&String> = generated.iter().collect();
+    assert_eq!(unique.len(), THREADS, "generated ids collided: {generated:?}");
+
+    // No orphans: every churned name (ended or aborted) is gone from
+    // the session table — a fresh poll answers "no such session".
+    let mut c = GpoeoClient::connect(&sock).unwrap();
+    for t in 0..THREADS {
+        for i in 0..PER_THREAD {
+            let name = format!("churn-t{t}-{i}");
+            let err = c.status(&name).expect_err("orphaned session survived churn");
+            assert!(err.to_string().contains("no such session"), "{err:#}");
+        }
+    }
+
+    // Freed names are immediately reusable.
+    let id = c.begin("AI_TS", Some(4), Some("churn-t0-0"), powercap()).unwrap();
+    c.end(&id).unwrap();
+}
+
+#[test]
+fn shutdown_removes_the_socket_under_churn_load() {
+    let (sock, serve) = spawn_daemon_cfg("shutload", 2, DaemonCfg::fixed(2));
+
+    // Churn in the background while the daemon is told to shut down;
+    // workers stop at the first refusal instead of asserting, because
+    // "daemon shutting down" / a dropped connection is the expected
+    // tail here.
+    std::thread::scope(|scope| {
+        for t in 0..8 {
+            let sock = &sock;
+            scope.spawn(move || {
+                let Ok(mut c) = GpoeoClient::connect(sock) else {
+                    return;
+                };
+                for i in 0..50 {
+                    let name = format!("shut-t{t}-{i}");
+                    match c.begin("AI_TS", Some(4), Some(&name), powercap()) {
+                        Ok(id) => {
+                            if c.end(&id).is_err() {
+                                return;
+                            }
+                        }
+                        Err(_) => return,
+                    }
+                }
+            });
+        }
+        std::thread::sleep(std::time::Duration::from_millis(30));
+        let mut c = GpoeoClient::connect(&sock).expect("daemon vanished before shutdown");
+        c.shutdown().expect("shutdown refused");
+    });
+
+    serve.join().expect("serve thread panicked").expect("serve returned an error");
+    assert!(!sock.exists(), "shutdown left the socket file behind");
+}
+
+/// Drive one raw v1 connection: write every line in a single syscall
+/// (true pipelining), then read the same number of reply lines back.
+fn pipelined(sock: &std::path::Path, requests: &[Request]) -> Vec<ServerMsg> {
+    let mut s = UnixStream::connect(sock).unwrap();
+    let batch: String = requests.iter().map(|r| r.to_json().to_string() + "\n").collect();
+    s.write_all(batch.as_bytes()).unwrap();
+    let mut reader = BufReader::new(s);
+    let mut out = Vec::with_capacity(requests.len());
+    for i in 0..requests.len() {
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        assert!(!line.is_empty(), "connection closed after {i} replies");
+        out.push(ServerMsg::parse_line(line.trim_end()).expect("unparsable server line"));
+    }
+    out
+}
+
+#[test]
+fn pipelined_status_polls_coalesce_to_one_tick_drive() {
+    let sock = spawn_daemon("coalesce", 1);
+    const POLLERS: usize = 8;
+    // Big enough that one status slice cannot finish the session.
+    const ITERS: u64 = 100_000;
+
+    // Control: the same app/policy/iters with a single status poll —
+    // the iteration count one tick-drive produces (the sim is
+    // deterministic; `ctl parity` already relies on that).
+    let mut c = GpoeoClient::connect(&sock).unwrap();
+    let ctl = c.begin("AI_TS", Some(ITERS), Some("ctl"), powercap()).unwrap();
+    let one_drive = c.status(&ctl).unwrap().iterations;
+    c.abort(&ctl).unwrap();
+    assert!(one_drive > 0, "control drive made no progress");
+
+    // N status polls pipelined in one write behind the begin: the
+    // reactor handles them in one batch, so pollers 2..N must join
+    // poller 1's in-flight drive (ADR-010) instead of stacking N
+    // drives. Every reply is the same snapshot, and the session has
+    // advanced by exactly one drive — same as the control.
+    let mut reqs = vec![
+        Request::Hello {
+            version: PROTOCOL_VERSION,
+        },
+        Request::Begin {
+            app: "AI_TS".into(),
+            iters: Some(ITERS),
+            name: Some("coal".into()),
+            policy: powercap(),
+        },
+    ];
+    for _ in 0..POLLERS {
+        reqs.push(Request::Status {
+            session: "coal".into(),
+        });
+    }
+    reqs.push(Request::Abort {
+        session: "coal".into(),
+    });
+    let replies = pipelined(&sock, &reqs);
+
+    assert!(matches!(replies[0], ServerMsg::Response(Response::Hello { .. })), "{replies:?}");
+    match &replies[1] {
+        ServerMsg::Response(Response::Begun { session }) => assert_eq!(session, "coal"),
+        other => panic!("expected begun, got {other:?}"),
+    }
+    let mut snapshots = Vec::new();
+    for msg in &replies[2..2 + POLLERS] {
+        match msg {
+            ServerMsg::Response(Response::Status(r)) => snapshots.push(r),
+            other => panic!("expected status, got {other:?}"),
+        }
+    }
+    for r in &snapshots {
+        assert_eq!(
+            r.iterations, one_drive,
+            "coalesced polls drove more than one slice: {snapshots:?}"
+        );
+        assert_eq!((r.time_s, r.energy_j), (snapshots[0].time_s, snapshots[0].energy_j));
+    }
+    assert!(
+        matches!(&replies[2 + POLLERS], ServerMsg::Response(Response::Ok { .. })),
+        "pipelined abort failed: {:?}",
+        replies[2 + POLLERS]
+    );
+}
+
+#[test]
+fn rate_limited_connections_answer_typed_errors_and_recover() {
+    let cfg = DaemonCfg {
+        max_workers: 1,
+        rate_limit_rps: 20.0,
+        rate_burst: 2.0,
+    };
+    let (sock, _serve) = spawn_daemon_cfg("ratelimit", 1, cfg);
+
+    // connect() spends one token on hello; the rest of the burst goes
+    // to the first list_apps calls, after which the bucket is dry.
+    let mut c = GpoeoClient::connect(&sock).unwrap();
+    let line = Request::ListApps.to_json().to_string();
+    let (mut admitted, mut limited) = (0, 0);
+    for _ in 0..10 {
+        match c.raw_line(&line).unwrap() {
+            ServerMsg::Response(Response::Apps(_)) => admitted += 1,
+            ServerMsg::Response(Response::Error { message, kind }) => {
+                assert_eq!(kind, "rate_limited", "{message}");
+                assert!(message.contains("rate limit exceeded"), "{message}");
+                limited += 1;
+            }
+            other => panic!("unexpected reply {other:?}"),
+        }
+    }
+    assert!(admitted >= 1, "the burst admitted nothing");
+    assert!(limited >= 1, "ten rapid requests never tripped the limiter");
+
+    // Refused requests don't kill the connection, and the bucket
+    // refills with time: after a pause the same connection works again.
+    std::thread::sleep(std::time::Duration::from_millis(250));
+    match c.raw_line(&line).unwrap() {
+        ServerMsg::Response(Response::Apps(apps)) => assert!(!apps.is_empty()),
+        other => panic!("limiter never recovered: {other:?}"),
+    }
+
+    // A fresh connection has its own bucket — unaffected by this one.
+    assert!(!GpoeoClient::connect(&sock).unwrap().list_apps().unwrap().is_empty());
+}

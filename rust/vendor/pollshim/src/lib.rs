@@ -1,0 +1,128 @@
+//! Minimal offline binding for `poll(2)`.
+//!
+//! The build environment has no crates.io access (the same constraint
+//! that produced the vendored `anyhow` shim), so the daemon's reactor
+//! cannot pull in `libc`, `mio`, or `polling`. This crate declares the
+//! one syscall it needs directly. `poll(2)` is in POSIX.1-2001 with an
+//! identical ABI on every libc this code could link against (glibc and
+//! musl both define `struct pollfd` as `{int fd; short events; short
+//! revents}` and `nfds_t` as `unsigned long`), which makes the raw
+//! `extern "C"` declaration safe to hand-roll.
+//!
+//! Surface: [`PollFd`], the `POLL*` event bits the reactor uses, and
+//! [`poll_fds`] — a safe wrapper that retries nothing but maps `EINTR`
+//! to "zero fds ready" so callers can treat a signal like a timeout.
+
+use std::io;
+use std::os::raw::{c_int, c_ulong};
+
+/// Wait for input (readability / incoming connection / peer close).
+pub const POLLIN: i16 = 0x001;
+/// Wait for output (writability without blocking).
+pub const POLLOUT: i16 = 0x004;
+/// Error condition (revents only).
+pub const POLLERR: i16 = 0x008;
+/// Peer hung up (revents only).
+pub const POLLHUP: i16 = 0x010;
+/// Fd not open (revents only).
+pub const POLLNVAL: i16 = 0x020;
+
+/// Mirror of `struct pollfd`. `#[repr(C)]` with the POSIX field order
+/// makes it layout-compatible with what the libc symbol expects.
+#[repr(C)]
+#[derive(Debug, Clone, Copy)]
+pub struct PollFd {
+    pub fd: i32,
+    pub events: i16,
+    pub revents: i16,
+}
+
+impl PollFd {
+    /// An entry watching `fd` for the given interest bits.
+    pub fn new(fd: i32, events: i16) -> PollFd {
+        PollFd {
+            fd,
+            events,
+            revents: 0,
+        }
+    }
+
+    /// Did the last poll report input (or a hangup/error, which also
+    /// surfaces through a read attempt)?
+    pub fn readable(&self) -> bool {
+        self.revents & (POLLIN | POLLHUP | POLLERR | POLLNVAL) != 0
+    }
+
+    /// Did the last poll report the fd writable (or errored, which a
+    /// write attempt will surface)?
+    pub fn writable(&self) -> bool {
+        self.revents & (POLLOUT | POLLHUP | POLLERR | POLLNVAL) != 0
+    }
+}
+
+extern "C" {
+    fn poll(fds: *mut PollFd, nfds: c_ulong, timeout: c_int) -> c_int;
+}
+
+/// Poll `fds` for up to `timeout_ms` milliseconds (negative blocks
+/// forever). Returns the number of entries with non-zero `revents`.
+/// `EINTR` is reported as `Ok(0)` — to a reactor a signal wakeup and a
+/// timeout are the same thing: re-check state and poll again.
+pub fn poll_fds(fds: &mut [PollFd], timeout_ms: i32) -> io::Result<usize> {
+    let rc = unsafe { poll(fds.as_mut_ptr(), fds.len() as c_ulong, timeout_ms) };
+    if rc < 0 {
+        let err = io::Error::last_os_error();
+        if err.kind() == io::ErrorKind::Interrupted {
+            return Ok(0);
+        }
+        return Err(err);
+    }
+    Ok(rc as usize)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write;
+    use std::os::unix::io::AsRawFd;
+    use std::os::unix::net::UnixStream;
+
+    #[test]
+    fn timeout_reports_nothing_ready() {
+        let (a, _b) = UnixStream::pair().unwrap();
+        let mut fds = [PollFd::new(a.as_raw_fd(), POLLIN)];
+        let n = poll_fds(&mut fds, 10).unwrap();
+        assert_eq!(n, 0);
+        assert!(!fds[0].readable());
+    }
+
+    #[test]
+    fn written_byte_makes_peer_readable() {
+        let (a, mut b) = UnixStream::pair().unwrap();
+        b.write_all(&[1]).unwrap();
+        let mut fds = [PollFd::new(a.as_raw_fd(), POLLIN)];
+        let n = poll_fds(&mut fds, 1000).unwrap();
+        assert_eq!(n, 1);
+        assert!(fds[0].readable());
+        assert!(!fds[0].writable());
+    }
+
+    #[test]
+    fn idle_socket_is_writable() {
+        let (a, _b) = UnixStream::pair().unwrap();
+        let mut fds = [PollFd::new(a.as_raw_fd(), POLLOUT)];
+        let n = poll_fds(&mut fds, 1000).unwrap();
+        assert_eq!(n, 1);
+        assert!(fds[0].writable());
+    }
+
+    #[test]
+    fn hangup_counts_as_readable() {
+        let (a, b) = UnixStream::pair().unwrap();
+        drop(b);
+        let mut fds = [PollFd::new(a.as_raw_fd(), POLLIN)];
+        let n = poll_fds(&mut fds, 1000).unwrap();
+        assert_eq!(n, 1);
+        assert!(fds[0].readable(), "revents {:#x}", fds[0].revents);
+    }
+}
