@@ -195,6 +195,15 @@ impl GpoeoClient {
         }
     }
 
+    /// Fetch the daemon's metrics registry in Prometheus text
+    /// exposition format.
+    pub fn metrics(&mut self) -> anyhow::Result<String> {
+        match self.request(&Request::Metrics)? {
+            Response::Metrics { text } => Ok(text),
+            other => Err(unexpected("metrics", other)),
+        }
+    }
+
     /// Ask the daemon to stop serving and remove its socket file.
     pub fn shutdown(&mut self) -> anyhow::Result<()> {
         match self.request(&Request::Shutdown)? {

@@ -10,8 +10,10 @@
 //! gpoeo ctl begin --app A [--iters N] [--name S] [--policy P ...]
 //! gpoeo ctl status|end|abort --session ID
 //! gpoeo ctl watch --session ID [--every-ticks N] [--max-events N]
+//! gpoeo ctl watch --replay FILE     replay a session journal offline
 //! gpoeo ctl run --app A [...]       begin + watch + end in one call
 //! gpoeo ctl parity --app A [...]    v1-vs-legacy RESULT parity check
+//! gpoeo ctl metrics                 Prometheus text exposition scrape
 //! gpoeo ctl shutdown                stop the daemon, remove the socket
 //! ```
 //!
@@ -20,9 +22,10 @@
 use super::client::{check_parity, ApiError, GpoeoClient};
 use super::protocol::SessionReport;
 use crate::policy::{PolicyConfig, PolicySpec};
+use crate::telemetry::{read_journal, TelemetryEvent};
 use crate::util::cli::Args;
 use crate::util::table::{s, Cell, Table};
-use std::path::PathBuf;
+use std::path::{Path, PathBuf};
 
 pub fn cli_ctl(args: &Args) -> anyhow::Result<()> {
     let socket = PathBuf::from(args.opt_or("socket", "/tmp/gpoeo.sock"));
@@ -37,9 +40,11 @@ pub fn cli_ctl(args: &Args) -> anyhow::Result<()> {
         "watch" => cmd_watch(&socket, args),
         "run" => cmd_run(&socket, args),
         "parity" => cmd_parity(&socket, args),
+        "metrics" => cmd_metrics(&socket),
         "shutdown" => cmd_shutdown(&socket),
         "" => anyhow::bail!(
-            "ctl requires a verb: apps policies begin status end abort watch run parity shutdown"
+            "ctl requires a verb: apps policies begin status end abort watch run parity metrics \
+             shutdown"
         ),
         other => anyhow::bail!("unknown ctl verb '{other}'; see `gpoeo --help`"),
     };
@@ -75,6 +80,7 @@ const CTL_OPTS: &[&str] = &[
     "session",
     "every-ticks",
     "max-events",
+    "replay",
     "policy",
     "format",
     "objective",
@@ -194,13 +200,111 @@ fn cmd_abort(socket: &std::path::Path, args: &Args) -> anyhow::Result<()> {
 }
 
 fn cmd_watch(socket: &std::path::Path, args: &Args) -> anyhow::Result<()> {
+    if let Some(path) = args.opt("replay") {
+        return cmd_replay(Path::new(path));
+    }
     let id = req_session(args)?;
     let every = args.opt_u64("every-ticks", 200)?;
     let max = args.opt_u64("max-events", 0)?;
     let fin = GpoeoClient::connect(socket)?.subscribe(&id, every, max, |r| {
         print_report(&format!("[{id}]"), r);
-    })?;
-    print_report(&format!("session {id} now:"), &fin);
+    });
+    // Always say *why* the stream stopped: scripts and humans both need
+    // to distinguish a clean finish from a daemon that went away.
+    match fin {
+        Ok(fin) => {
+            print_report(&format!("session {id} now:"), &fin);
+            if fin.done {
+                println!("stream ended: session completed");
+            } else {
+                println!("stream ended: event budget reached");
+            }
+            Ok(())
+        }
+        Err(e) if format!("{e:#}").contains("server closed the connection") => {
+            println!("stream ended: connection lost");
+            Err(e)
+        }
+        Err(e) => {
+            println!("stream ended: aborted: {e:#}");
+            Err(e)
+        }
+    }
+}
+
+/// Offline journal replay: render a session journal (DESIGN.md §11)
+/// without a daemon. Strict — [`read_journal`] rejects the first
+/// malformed or schema-violating line with its line number, which makes
+/// this verb double as CI's journal validator.
+fn cmd_replay(path: &Path) -> anyhow::Result<()> {
+    let events = read_journal(path)?;
+    for ev in &events {
+        print_event(ev);
+    }
+    println!("replayed {} events from {}", events.len(), path.display());
+    Ok(())
+}
+
+fn print_event(ev: &TelemetryEvent) {
+    match ev {
+        TelemetryEvent::Begin {
+            session,
+            app,
+            policy,
+            target_iters,
+        } => println!("[{session}] begin  app {app}  policy {policy}  target {target_iters} iters"),
+        TelemetryEvent::Tick {
+            session,
+            iterations,
+            time_s,
+            energy_j,
+            sm_gear,
+            mem_gear,
+            done,
+        } => println!(
+            "[{session}] tick   iter {iterations}  time {time_s:.3} s  energy {energy_j:.1} J  \
+             sm gear {sm_gear}  mem gear {mem_gear}{}",
+            if *done { "  [done]" } else { "" }
+        ),
+        TelemetryEvent::Detect {
+            session,
+            period_s,
+            aperiodic,
+            round,
+        } => println!(
+            "[{session}] detect round {round}: {}",
+            if *aperiodic {
+                "aperiodic".to_string()
+            } else {
+                format!("period {period_s:.4} s")
+            }
+        ),
+        TelemetryEvent::GearSwitch {
+            session,
+            policy,
+            sm_gear,
+            mem_gear,
+            time_s,
+        } => println!(
+            "[{session}] gear   sm {sm_gear}  mem {mem_gear}  by {policy}  at {time_s:.3} s"
+        ),
+        TelemetryEvent::End {
+            session,
+            iterations,
+            time_s,
+            energy_j,
+            done,
+        } => println!(
+            "[{session}] end    iter {iterations}  time {time_s:.3} s  energy {energy_j:.1} J{}",
+            if *done { "  [done]" } else { "  [aborted]" }
+        ),
+    }
+}
+
+/// Scrape the daemon's metrics registry as Prometheus text exposition
+/// (DESIGN.md §11). Rendering happens off the reactor thread.
+fn cmd_metrics(socket: &std::path::Path) -> anyhow::Result<()> {
+    print!("{}", GpoeoClient::connect(socket)?.metrics()?);
     Ok(())
 }
 

@@ -66,6 +66,9 @@ pub enum Request {
         every_ticks: u64,
         max_events: u64,
     },
+    /// Fetch the daemon's metrics registry rendered in Prometheus text
+    /// exposition format (DESIGN.md §11).
+    Metrics,
     /// Stop the daemon: the listener exits and removes its socket file.
     Shutdown,
 }
@@ -116,6 +119,8 @@ pub enum Response {
     Result(SessionReport),
     Apps(Vec<AppInfo>),
     Policies(Vec<PolicyInfo>),
+    /// Prometheus text exposition of the daemon's metrics registry.
+    Metrics { text: String },
     Error {
         message: String,
         /// Machine-readable error category (e.g. `"rate_limited"`),
@@ -256,13 +261,17 @@ impl Request {
                     max_events,
                 })
             }
+            "metrics" => {
+                allow(&[])?;
+                Ok(Request::Metrics)
+            }
             "shutdown" => {
                 allow(&[])?;
                 Ok(Request::Shutdown)
             }
             other => Err(format!(
                 "unknown request kind '{other}' (hello begin status end abort set_policy \
-                 list_apps list_policies subscribe shutdown)"
+                 list_apps list_policies subscribe metrics shutdown)"
             )),
         }
     }
@@ -313,6 +322,7 @@ impl Request {
                 ("every_ticks", Json::Num(*every_ticks as f64)),
                 ("max_events", Json::Num(*max_events as f64)),
             ]),
+            Request::Metrics => Json::obj(vec![("kind", Json::Str("metrics".into()))]),
             Request::Shutdown => Json::obj(vec![("kind", Json::Str("shutdown".into()))]),
         }
     }
@@ -359,6 +369,7 @@ impl Response {
             Response::Result(_) => "result",
             Response::Apps(_) => "apps",
             Response::Policies(_) => "policies",
+            Response::Metrics { .. } => "metrics",
             Response::Error { .. } => "error",
         }
     }
@@ -432,6 +443,10 @@ impl Response {
                             .collect(),
                     ),
                 ),
+            ]),
+            Response::Metrics { text } => Json::obj(vec![
+                ("kind", Json::Str("metrics".into())),
+                ("text", Json::Str(text.clone())),
             ]),
             Response::Error { message, kind } => {
                 let mut fields = vec![
@@ -517,6 +532,13 @@ impl Response {
                     .map_err(|e| bad(&e))?;
                 Ok(Response::Policies(ps))
             }
+            "metrics" => Ok(Response::Metrics {
+                text: j
+                    .get("text")
+                    .as_str()
+                    .ok_or_else(|| bad("missing 'text'"))?
+                    .to_string(),
+            }),
             "error" => Ok(Response::Error {
                 message: j
                     .get("message")
@@ -760,6 +782,7 @@ mod tests {
                 every_ticks: 100,
                 max_events: 5,
             },
+            Request::Metrics,
             Request::Shutdown,
         ]
     }
@@ -804,6 +827,12 @@ mod tests {
                 description: "switching-aware".into(),
                 default_config: "switch-cost=0".into(),
             }])),
+            ServerMsg::Response(Response::Metrics {
+                text: "# HELP gpoeo_sessions_begun_total Sessions registered.\n\
+                       # TYPE gpoeo_sessions_begun_total counter\n\
+                       gpoeo_sessions_begun_total 3\n"
+                    .into(),
+            }),
             ServerMsg::Response(Response::error("no such session")),
             ServerMsg::Response(Response::rate_limited("rate limit exceeded (2 req/s)")),
             ServerMsg::Event(Event::Status(sample_report())),

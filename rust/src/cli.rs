@@ -65,12 +65,16 @@ SUBCOMMANDS:
                                 churn/s and p50/p99 request latency to
                                 BENCH_api.json (--sessions N --quick
                                 --min-churn X --max-p99-ms F as the CI
-                                floor)
+                                floor; --max-overhead-pct P fails when
+                                the attached telemetry plane costs >P%
+                                p99 at the top tier)
   daemon [--socket PATH]       Begin/End API server (micro-intrusive
                                mode; --workers N fleet threads, AIMD
                                auto-scaled up to --max-workers N;
                                --rate-limit RPS --rate-burst N
-                               per-connection token bucket). Single-
+                               per-connection token bucket;
+                               --journal-dir DIR writes one replayable
+                               JSONL journal per session). Single-
                                threaded poll(2) reactor speaking
                                control-plane protocol v1 (line-delimited
                                JSON + hello handshake, named concurrent
@@ -85,9 +89,14 @@ SUBCOMMANDS:
                                  status|end|abort --session ID
                                  watch --session ID [--every-ticks N]
                                        [--max-events N]  streamed events
+                                       (ends with a reason line)
+                                 watch --replay FILE  replay + validate
+                                                      a session journal
                                  run --app A [...]    begin+watch+end
                                  parity --app A [...] v1-vs-legacy
                                                       RESULT parity gate
+                                 metrics              Prometheus text
+                                                      exposition scrape
                                  shutdown             stop the daemon
 
 COMMON OPTIONS:

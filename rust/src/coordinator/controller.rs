@@ -25,6 +25,7 @@ use crate::device::Device;
 use crate::model::Predictor;
 use crate::search::{local_search, Objective, SearchResult};
 use crate::signal::{PeriodCfg, StreamCfg, StreamingDetector};
+use crate::telemetry::{Gauge, Hist, Telemetry, TelemetryEvent};
 use crate::util::stats::mean;
 use std::sync::Arc;
 
@@ -127,6 +128,10 @@ pub struct Gpoeo {
     mon_acc: Vec<f64>,
     period_s: f64,
     aperiodic: bool,
+    /// Telemetry plane + fleet session id (DESIGN.md §11). Pure
+    /// observation: never consulted by any control decision, so runs
+    /// with and without it are bit-identical.
+    tel: Option<(Arc<Telemetry>, u64)>,
 }
 
 impl Gpoeo {
@@ -152,6 +157,7 @@ impl Gpoeo {
             mon_acc: Vec::new(),
             period_s: 0.0,
             aperiodic: false,
+            tel: None,
         }
     }
 }
@@ -268,8 +274,16 @@ impl Gpoeo {
         let (p_base, ips_base) = self.probe_measure(gpu, (2.0 * self.period_s).max(1.0));
 
         // --- Predict the optimal gears (⑤⑥).
+        let predict_t0 = match &self.tel {
+            Some((tel, _)) if tel.enabled() => Some(std::time::Instant::now()),
+            _ => None,
+        };
         let pred_sm = self.predictor.predict_sm(&spec, &features)?;
         let pred_mem = self.predictor.predict_mem(&spec, &features)?;
+        if let (Some(t0), Some((tel, _))) = (predict_t0, &self.tel) {
+            tel.metrics()
+                .observe(Hist::PredictSeconds, t0.elapsed().as_secs_f64());
+        }
         let (g_sm_pred, g_mem_pred) = if self.cfg.ignore_prediction {
             (gpu.sm_gear(), gpu.mem_gear())
         } else {
@@ -408,12 +422,32 @@ impl Gpoeo {
             }
         }
 
+        // --- Telemetry: one gear-switch record per optimization pass,
+        // reporting the clocks the pass settled on (the entry clocks in
+        // non-actuating overhead mode — still a pass worth recording).
+        if let Some((tel, session)) = &self.tel {
+            tel.metrics().gear_switch("gpoeo");
+            tel.metrics().set_gauge(Gauge::SmGear, gpu.sm_gear() as f64);
+            tel.metrics().set_gauge(Gauge::MemGear, gpu.mem_gear() as f64);
+            tel.emit(TelemetryEvent::GearSwitch {
+                session: *session,
+                policy: "gpoeo".into(),
+                sm_gear: gpu.sm_gear(),
+                mem_gear: gpu.mem_gear(),
+                time_s: gpu.time_s(),
+            });
+        }
+
         // --- Establish the monitor reference at the final configuration.
         let p_ref = self.plain_power(gpu, (self.period_s).clamp(0.5, 4.0));
         Ok(p_ref)
     }
 
     fn restart_sampling(&mut self, gpu: &mut dyn Device) {
+        if let Some((tel, _)) = &self.tel {
+            // Verdict gauge back to 0 ("none") while re-detecting.
+            tel.metrics().set_gauge(Gauge::DetectorVerdict, 0.0);
+        }
         self.det.reset();
         self.window_start_s = gpu.time_s();
         self.stats.detect_rounds = 0;
@@ -442,6 +476,16 @@ impl Gpoeo {
 
     fn finish_detection(&mut self, gpu: &mut dyn Device) {
         self.stats.true_period_s = gpu.true_period();
+        if let Some((tel, session)) = &self.tel {
+            let verdict = if self.aperiodic { 2.0 } else { 1.0 };
+            tel.metrics().set_gauge(Gauge::DetectorVerdict, verdict);
+            tel.emit(TelemetryEvent::Detect {
+                session: *session,
+                period_s: self.period_s,
+                aperiodic: self.aperiodic,
+                round: self.det.rounds() as u64,
+            });
+        }
         match self.measure_and_optimize(gpu) {
             Ok(p_ref) => self.enter_monitor(gpu, p_ref),
             Err(e) => {
@@ -460,6 +504,11 @@ impl crate::coordinator::Policy for Gpoeo {
 
     fn gpoeo_stats(&self) -> Option<GpoeoStats> {
         Some(self.stats.clone())
+    }
+
+    fn attach_telemetry(&mut self, tel: Arc<Telemetry>, session: u64) {
+        self.det.attach_metrics(tel.metrics().clone());
+        self.tel = Some((tel, session));
     }
 
     fn tick(&mut self, gpu: &mut dyn Device) {

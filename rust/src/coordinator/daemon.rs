@@ -46,10 +46,11 @@ use crate::coordinator::reactor::Reactor;
 use crate::coordinator::{default_iters, AimdCfg, Fleet, SessionHandle, SessionStatus};
 use crate::policy::{PolicyRegistry, PolicySpec};
 use crate::sim::{find_app, make_app, AppParams, Spec};
+use crate::telemetry::{Telemetry, TelemetryCfg};
 use std::collections::HashMap;
 use std::io::{BufRead, Write};
 use std::os::unix::net::{UnixListener, UnixStream};
-use std::path::Path;
+use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
@@ -59,7 +60,7 @@ pub(crate) const STATUS_TICKS: u64 = 200;
 
 /// Control-plane tuning. [`DaemonCfg::fixed`] reproduces the historical
 /// behavior exactly: a fixed-size worker pool and no rate limiting.
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone)]
 pub struct DaemonCfg {
     /// AIMD worker-pool ceiling (ninelives P3.04). Equal to the initial
     /// worker count → the pool never scales.
@@ -69,6 +70,13 @@ pub struct DaemonCfg {
     pub rate_limit_rps: f64,
     /// Token-bucket burst capacity (clamped to ≥ 1 when limiting is on).
     pub rate_burst: f64,
+    /// Write one JSONL journal per session under this directory
+    /// (DESIGN.md §11; replay with `gpoeo ctl watch --replay`).
+    pub journal_dir: Option<PathBuf>,
+    /// Attach the telemetry plane (metrics + events). Off = the
+    /// [`Telemetry::disabled`] plane: `metrics` still answers, but with
+    /// an all-zero registry, and no consumer thread runs.
+    pub telemetry: bool,
 }
 
 impl DaemonCfg {
@@ -77,6 +85,8 @@ impl DaemonCfg {
             max_workers: workers,
             rate_limit_rps: 0.0,
             rate_burst: 0.0,
+            journal_dir: None,
+            telemetry: true,
         }
     }
 }
@@ -224,11 +234,17 @@ impl Daemon {
     /// worker-pool band (`workers..=cfg.max_workers`) and optional
     /// per-connection rate limiting.
     pub fn with_cfg(spec: Arc<Spec>, workers: usize, cfg: DaemonCfg) -> Daemon {
-        let fleet = if cfg.max_workers > workers {
-            Fleet::with_scaling(spec, workers, AimdCfg::bounded(workers, cfg.max_workers))
+        let tel = if cfg.telemetry {
+            Arc::new(Telemetry::new(TelemetryCfg {
+                queue_capacity: 0,
+                journal_dir: cfg.journal_dir.clone(),
+            }))
         } else {
-            Fleet::new(spec, workers)
+            Arc::new(Telemetry::disabled())
         };
+        let scaling =
+            (cfg.max_workers > workers).then(|| AimdCfg::bounded(workers, cfg.max_workers));
+        let fleet = Fleet::with_telemetry(spec, workers, scaling, tel);
         Daemon {
             fleet: Arc::new(fleet),
             shared: Arc::new(Shared {
@@ -257,7 +273,11 @@ impl Daemon {
             socket_path.display(),
             self.fleet.num_workers()
         );
-        let r = Reactor::new(self.fleet.clone(), self.shared.clone(), self.cfg)?.serve(listener);
+        let r = Reactor::new(self.fleet.clone(), self.shared.clone(), self.cfg.clone())?
+            .serve(listener);
+        // Give the consumer thread a beat to land trailing journal
+        // lines before the process (or test) moves on.
+        self.fleet.telemetry().flush(Duration::from_millis(250));
         let _ = std::fs::remove_file(socket_path);
         r
     }

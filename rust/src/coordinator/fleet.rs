@@ -28,6 +28,7 @@ use crate::device::{boxed_sim_device, Device};
 use crate::model::Predictor;
 use crate::policy::{PolicyCtx, PolicyRegistry, PolicySpec};
 use crate::sim::{AppParams, Spec};
+use crate::telemetry::{Counter, Hist, Telemetry, TelemetryEvent};
 use std::cell::OnceCell;
 use std::collections::{HashMap, VecDeque};
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
@@ -296,6 +297,9 @@ pub struct Fleet {
     next_worker: AtomicUsize,
     scaler: Option<Mutex<AimdState>>,
     started: Instant,
+    /// Telemetry plane shared by every worker (DESIGN.md §11).
+    /// [`Telemetry::disabled`] unless wired via [`Fleet::with_telemetry`].
+    tel: Arc<Telemetry>,
 }
 
 impl Fleet {
@@ -304,25 +308,43 @@ impl Fleet {
     /// workload never pays the HLO compile, and a failed load only
     /// surfaces when a job or session actually needs prediction.
     pub fn new(spec: Arc<Spec>, workers: usize) -> Fleet {
-        Fleet::build(spec, workers, None)
+        Fleet::build(spec, workers, None, Arc::new(Telemetry::disabled()))
     }
 
     /// Like [`Fleet::new`], but the pool auto-scales between
     /// `cfg.min_workers` and `cfg.max_workers` as [`Fleet::autoscale`]
     /// feeds it queue-depth observations. The initial size is clamped
     /// into the configured band.
-    pub fn with_scaling(spec: Arc<Spec>, workers: usize, mut cfg: AimdCfg) -> Fleet {
-        cfg.min_workers = cfg.min_workers.max(1);
-        cfg.max_workers = cfg.max_workers.max(cfg.min_workers);
-        let initial = workers.clamp(cfg.min_workers, cfg.max_workers);
-        Fleet::build(spec, initial, Some(cfg))
+    pub fn with_scaling(spec: Arc<Spec>, workers: usize, cfg: AimdCfg) -> Fleet {
+        Fleet::with_telemetry(spec, workers, Some(cfg), Arc::new(Telemetry::disabled()))
     }
 
-    fn build(spec: Arc<Spec>, workers: usize, cfg: Option<AimdCfg>) -> Fleet {
+    /// The fully-wired constructor: optional AIMD scaling plus a shared
+    /// telemetry plane. Workers attach the plane to every session's
+    /// policy and emit begin/tick/end events for it — pure observation,
+    /// so outcomes are bit-identical with [`Telemetry::disabled`].
+    pub fn with_telemetry(
+        spec: Arc<Spec>,
+        workers: usize,
+        scaling: Option<AimdCfg>,
+        tel: Arc<Telemetry>,
+    ) -> Fleet {
+        match scaling {
+            Some(mut cfg) => {
+                cfg.min_workers = cfg.min_workers.max(1);
+                cfg.max_workers = cfg.max_workers.max(cfg.min_workers);
+                let initial = workers.clamp(cfg.min_workers, cfg.max_workers);
+                Fleet::build(spec, initial, Some(cfg), tel)
+            }
+            None => Fleet::build(spec, workers, None, tel),
+        }
+    }
+
+    fn build(spec: Arc<Spec>, workers: usize, cfg: Option<AimdCfg>, tel: Arc<Telemetry>) -> Fleet {
         let n = workers.max(1);
         let next_worker = AtomicUsize::new(0);
         let workers = (0..n)
-            .map(|_| spawn_worker(&spec, next_worker.fetch_add(1, Ordering::SeqCst)))
+            .map(|_| spawn_worker(&spec, next_worker.fetch_add(1, Ordering::SeqCst), &tel))
             .collect();
         Fleet {
             spec,
@@ -331,11 +353,17 @@ impl Fleet {
             next_worker,
             scaler: cfg.map(|c| Mutex::new(AimdState::new(c))),
             started: Instant::now(),
+            tel,
         }
     }
 
     pub fn spec(&self) -> &Arc<Spec> {
         &self.spec
+    }
+
+    /// The telemetry plane the fleet's workers emit into.
+    pub fn telemetry(&self) -> &Arc<Telemetry> {
+        &self.tel
     }
 
     pub fn num_workers(&self) -> usize {
@@ -364,6 +392,7 @@ impl Fleet {
                 ws.push(spawn_worker(
                     &self.spec,
                     self.next_worker.fetch_add(1, Ordering::SeqCst),
+                    &self.tel,
                 ));
                 Some(ws.len())
             }
@@ -505,6 +534,7 @@ impl Fleet {
         }
         Ok(SessionHandle {
             id,
+            target_iters,
             tx: w.tx.as_ref().expect("worker is live").clone(),
             active: w.active.clone(),
             open: true,
@@ -539,12 +569,26 @@ impl Drop for Fleet {
 /// the handle without [`end`](SessionHandle::end) aborts the session.
 pub struct SessionHandle {
     id: u64,
+    target_iters: u64,
     tx: Sender<Cmd>,
     active: Arc<AtomicUsize>,
     open: bool,
 }
 
 impl SessionHandle {
+    /// The fleet-wide session id — the `session` field of every
+    /// telemetry event this session emits, and its journal file name.
+    pub fn id(&self) -> u64 {
+        self.id
+    }
+
+    /// The iteration target the session was begun with. Telemetry
+    /// `tick` events carry progress but not the target; stream
+    /// consumers (the reactor's `subscribe` path) read it here.
+    pub fn target_iters(&self) -> u64 {
+        self.target_iters
+    }
+
     fn roundtrip(
         &self,
         make: impl FnOnce(Reply<anyhow::Result<SessionStatus>>) -> Cmd,
@@ -671,15 +715,16 @@ fn feed_worker(
 /// Spawn one worker thread with its command queue. `i` is a process-wide
 /// worker ordinal (monotonic across autoscale grow events) so thread
 /// names stay unique for the life of the fleet.
-fn spawn_worker(spec: &Arc<Spec>, i: usize) -> WorkerHandle {
+fn spawn_worker(spec: &Arc<Spec>, i: usize, tel: &Arc<Telemetry>) -> WorkerHandle {
     let (tx, rx) = channel();
     let spec = spec.clone();
+    let tel = tel.clone();
     // The worker keeps a sender to its own queue so a long END can
     // re-enqueue itself in slices (see worker_loop).
     let self_tx = tx.clone();
     let join = std::thread::Builder::new()
         .name(format!("fleet-worker-{i}"))
-        .spawn(move || worker_loop(spec, rx, self_tx))
+        .spawn(move || worker_loop(spec, rx, self_tx, tel))
         .expect("failed to spawn fleet worker");
     WorkerHandle {
         tx: Some(tx),
@@ -708,25 +753,33 @@ impl WorkerSession {
         self.dev.iterations() >= self.target_iters
     }
 
-    fn step(&mut self, max_ticks: u64) {
+    /// Advance by at most `max_ticks`; returns the ticks executed (the
+    /// telemetry layer divides wall time by it for per-tick latency).
+    fn step(&mut self, max_ticks: u64) -> u64 {
+        let mut n = 0;
         for _ in 0..max_ticks {
             if self.done() {
                 break;
             }
             self.policy.tick(self.dev.as_mut());
+            n += 1;
         }
+        n
     }
 
-    /// One bounded slice of the run; true once the session is finished
-    /// (target reached, or the errant-policy budget exhausted).
-    fn slice(&mut self, max_ticks: u64, budget_s: f64) -> bool {
+    /// One bounded slice of the run; `.0` is true once the session is
+    /// finished (target reached, or the errant-policy budget exhausted),
+    /// `.1` the ticks executed.
+    fn slice(&mut self, max_ticks: u64, budget_s: f64) -> (bool, u64) {
+        let mut n = 0;
         for _ in 0..max_ticks {
             if self.done() || self.dev.time_s() >= budget_s {
                 break;
             }
             self.policy.tick(self.dev.as_mut());
+            n += 1;
         }
-        self.done() || self.dev.time_s() >= budget_s
+        (self.done() || self.dev.time_s() >= budget_s, n)
     }
 
     fn status(&self) -> SessionStatus {
@@ -748,7 +801,32 @@ fn load_predictor() -> Result<Arc<Predictor>, String> {
         .map_err(|e| format!("{e:#}"))
 }
 
-fn worker_loop(spec: Arc<Spec>, rx: Receiver<Cmd>, self_tx: Sender<Cmd>) {
+/// The progress snapshot a drive slice emits (always *before* the
+/// command's reply, so a flushed telemetry plane has forwarded every
+/// event of a session by the time its final reply is on the wire).
+fn tick_event(id: u64, st: &SessionStatus) -> TelemetryEvent {
+    TelemetryEvent::Tick {
+        session: id,
+        iterations: st.iterations,
+        time_s: st.time_s,
+        energy_j: st.energy_j,
+        sm_gear: st.sm_gear,
+        mem_gear: st.mem_gear,
+        done: st.done,
+    }
+}
+
+fn end_event(id: u64, st: &SessionStatus) -> TelemetryEvent {
+    TelemetryEvent::End {
+        session: id,
+        iterations: st.iterations,
+        time_s: st.time_s,
+        energy_j: st.energy_j,
+        done: st.done,
+    }
+}
+
+fn worker_loop(spec: Arc<Spec>, rx: Receiver<Cmd>, self_tx: Sender<Cmd>, tel: Arc<Telemetry>) {
     // One predictor per worker thread — compiled on first use (never,
     // for an ODPP/default-only workload), then reused by every job and
     // session this worker runs. Built here (not in the Fleet) because
@@ -782,7 +860,17 @@ fn worker_loop(spec: Arc<Spec>, rx: Receiver<Cmd>, self_tx: Sender<Cmd>) {
                 };
                 let r = PolicyRegistry::global()
                     .build_spec(&req.policy, &ctx)
-                    .map(|policy| {
+                    .map(|mut policy| {
+                        if tel.enabled() {
+                            policy.attach_telemetry(tel.clone(), id);
+                            tel.metrics().inc(Counter::SessionsBegun);
+                            tel.emit(TelemetryEvent::Begin {
+                                session: id,
+                                app: req.app.name.clone(),
+                                policy: req.policy.name.clone(),
+                                target_iters: req.target_iters,
+                            });
+                        }
                         sessions.insert(
                             id,
                             WorkerSession {
@@ -801,8 +889,17 @@ fn worker_loop(spec: Arc<Spec>, rx: Receiver<Cmd>, self_tx: Sender<Cmd>) {
             } => {
                 let r = match sessions.get_mut(&id) {
                     Some(s) => {
-                        s.step(max_ticks);
-                        Ok(s.status())
+                        let t0 = tel.enabled().then(Instant::now);
+                        let n = s.step(max_ticks);
+                        let st = s.status();
+                        if let Some(t0) = t0 {
+                            if n > 0 {
+                                let per_tick = t0.elapsed().as_secs_f64() / n as f64;
+                                tel.metrics().observe(Hist::TickSeconds, per_tick);
+                            }
+                            tel.emit(tick_event(id, &st));
+                        }
+                        Ok(st)
                     }
                     None => Err(anyhow::anyhow!("no such session")),
                 };
@@ -821,7 +918,16 @@ fn worker_loop(spec: Arc<Spec>, rx: Receiver<Cmd>, self_tx: Sender<Cmd>) {
                         let b = budget_s.unwrap_or_else(|| {
                             run_budget_s(s.dev.time_s(), s.target_iters, s.dev.nominal_iter_s())
                         });
-                        (s.slice(END_SLICE_TICKS, b).then(|| s.status()), b)
+                        let t0 = tel.enabled().then(Instant::now);
+                        let (fin, n) = s.slice(END_SLICE_TICKS, b);
+                        if let Some(t0) = t0 {
+                            if n > 0 {
+                                let per_tick = t0.elapsed().as_secs_f64() / n as f64;
+                                tel.metrics().observe(Hist::TickSeconds, per_tick);
+                            }
+                            tel.emit(tick_event(id, &s.status()));
+                        }
+                        (fin.then(|| s.status()), b)
                     }
                     None => {
                         reply.send(Err(anyhow::anyhow!("no such session")));
@@ -831,6 +937,10 @@ fn worker_loop(spec: Arc<Spec>, rx: Receiver<Cmd>, self_tx: Sender<Cmd>) {
                 match finished {
                     Some(st) => {
                         sessions.remove(&id);
+                        if tel.enabled() {
+                            tel.metrics().inc(Counter::SessionsEnded);
+                            tel.emit(end_event(id, &st));
+                        }
                         reply.send(Ok(st));
                     }
                     None => {
@@ -849,7 +959,12 @@ fn worker_loop(spec: Arc<Spec>, rx: Receiver<Cmd>, self_tx: Sender<Cmd>) {
                 }
             }
             Cmd::Drop { id } => {
-                sessions.remove(&id);
+                if let Some(s) = sessions.remove(&id) {
+                    if tel.enabled() {
+                        tel.metrics().inc(Counter::SessionsEnded);
+                        tel.emit(end_event(id, &s.status()));
+                    }
+                }
             }
             Cmd::Shutdown => break,
         }

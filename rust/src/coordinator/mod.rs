@@ -284,13 +284,15 @@ fn write_bench(
 }
 
 /// `gpoeo daemon [--socket PATH] [--workers N] [--max-workers N]
-///               [--rate-limit RPS] [--rate-burst N]`
+///               [--rate-limit RPS] [--rate-burst N] [--journal-dir DIR]`
 ///
 /// Serve the Begin/End API on a shared fleet: control-plane protocol v1
 /// (on the non-blocking reactor) and the legacy line protocol behind a
 /// first-byte auto-detect (drive it with `gpoeo ctl`). `--max-workers`
 /// above `--workers` turns on AIMD pool scaling between the two;
-/// `--rate-limit` enables per-connection token-bucket limiting.
+/// `--rate-limit` enables per-connection token-bucket limiting;
+/// `--journal-dir` writes one replayable JSONL journal per session
+/// (DESIGN.md §11, `ctl watch --replay`).
 pub fn cli_daemon(args: &Args) -> anyhow::Result<()> {
     let spec = Arc::new(Spec::load_default()?);
     let sock = args.opt_or("socket", "/tmp/gpoeo.sock").to_string();
@@ -302,6 +304,8 @@ pub fn cli_daemon(args: &Args) -> anyhow::Result<()> {
         max_workers: args.opt_usize("max-workers", workers)?.max(workers),
         rate_limit_rps: args.opt_f64("rate-limit", 0.0)?,
         rate_burst: args.opt_f64("rate-burst", 0.0)?,
+        journal_dir: args.opt("journal-dir").map(std::path::PathBuf::from),
+        telemetry: true,
     };
     daemon::Daemon::with_cfg(spec, workers, cfg).serve(std::path::Path::new(&sock))
 }

@@ -41,7 +41,8 @@
 //! EMFILE can neither spam the log nor spin the loop.
 
 use crate::api::{
-    Event, PolicyInfo, Request, Response, ServerMsg, MAX_LINE_BYTES, PROTOCOL_VERSION,
+    Event, PolicyInfo, Request, Response, ServerMsg, SessionReport, MAX_LINE_BYTES,
+    PROTOCOL_VERSION,
 };
 use crate::coordinator::daemon::{
     accept_stream, claim_session, handle_legacy, list_apps, prepare_begin, report, with_session,
@@ -49,6 +50,7 @@ use crate::coordinator::daemon::{
 };
 use crate::coordinator::fleet::{Fleet, Reply, SessionStatus};
 use crate::policy::{PolicyRegistry, PolicySpec};
+use crate::telemetry::{Counter, Ewma, Gauge, Hist, TelemetryEvent, WindowedRate};
 use pollshim::{poll_fds, PollFd, POLLIN, POLLOUT};
 use std::collections::{HashMap, VecDeque};
 use std::io::{self, BufReader, Cursor, Read, Write};
@@ -210,16 +212,28 @@ impl TokenBucket {
 enum Slot {
     /// Serialized wire line, ready to flush.
     Ready(String),
-    /// Waiting on the op with this id.
-    Pending(u64),
+    /// Waiting on the op with this id. The `Instant` feeds the
+    /// request-latency histogram when the slot fills (`None` with the
+    /// telemetry plane detached — no clock reads for nobody).
+    Pending(u64, Option<Instant>),
 }
 
 /// An active `subscribe` stream: events flow until the session is done
 /// (or `max_events` is reached), then a final status snapshot.
+///
+/// With the telemetry plane attached, the event lines are *forwarded
+/// sink output*: a tap on the session's telemetry `tick` events
+/// (subscribe is just another sink consumer — DESIGN.md §11). `sent`
+/// counts driven slices (termination), `events_sent` counts forwarded
+/// event lines (the `max_events` cap). With the plane detached, the
+/// drive replies themselves become the events, as before.
 struct Sub {
+    sid: String,
     every_ticks: u64,
     max_events: u64,
     sent: u64,
+    events_sent: u64,
+    target_iters: u64,
 }
 
 /// A `subscribe` request parked until earlier responses drain (events
@@ -337,6 +351,8 @@ enum Op {
     },
     /// One slice of a subscribe stream.
     SubStep { conn: u64, sid: String },
+    /// Prometheus rendering in flight on its one-shot thread.
+    Metrics { conn: u64 },
 }
 
 /// A completion, queued from a fleet worker thread alongside a wake
@@ -344,6 +360,8 @@ enum Op {
 enum Done {
     Begin(u64, Option<anyhow::Result<()>>),
     Session(u64, Option<anyhow::Result<SessionStatus>>),
+    /// Rendered Prometheus exposition text.
+    Metrics(u64, String),
 }
 
 const WORKER_GONE: &str = "fleet worker thread is gone";
@@ -370,6 +388,20 @@ pub(crate) struct Reactor {
     wake_w: Arc<UnixStream>,
     wake_r: UnixStream,
     started: Instant,
+    /// Telemetry taps backing subscribe streams: conn token → tap id.
+    taps: HashMap<u64, u64>,
+    /// Tap forwarding channel — `(conn token, event)` pairs sent by the
+    /// telemetry consumer thread, drained every loop iteration.
+    sub_tx: Sender<(u64, TelemetryEvent)>,
+    sub_rx: Receiver<(u64, TelemetryEvent)>,
+    /// Cached `fleet.telemetry().enabled()` — hot paths branch on this
+    /// instead of chasing the Arc.
+    tel_enabled: bool,
+    /// EWMA-smoothed in-flight op depth (ninelives P3.01): what the
+    /// AIMD scaler sees instead of the raw per-iteration count.
+    depth: Ewma,
+    /// Request arrival rate over a trailing window (gauge only).
+    req_rate: WindowedRate,
 }
 
 impl Reactor {
@@ -379,9 +411,11 @@ impl Reactor {
         cfg: DaemonCfg,
     ) -> io::Result<Reactor> {
         let (done_tx, done_rx) = channel();
+        let (sub_tx, sub_rx) = channel();
         let (wake_r, wake_w) = UnixStream::pair()?;
         wake_r.set_nonblocking(true)?;
         wake_w.set_nonblocking(true)?;
+        let tel_enabled = fleet.telemetry().enabled();
         Ok(Reactor {
             fleet,
             shared,
@@ -396,6 +430,12 @@ impl Reactor {
             wake_w: Arc::new(wake_w),
             wake_r,
             started: Instant::now(),
+            taps: HashMap::new(),
+            sub_tx,
+            sub_rx,
+            tel_enabled,
+            depth: Ewma::new(0.3),
+            req_rate: WindowedRate::new(1.0),
         })
     }
 
@@ -407,14 +447,21 @@ impl Reactor {
         let mut shutdown_at: Option<Instant> = None;
         loop {
             // Harvest worker completions first: they fill slots and
-            // produce output for this iteration's flush.
+            // produce output for this iteration's flush. Forwarded
+            // subscribe events drain before completions so a stream's
+            // tick never trails the drive reply that finishes it.
             self.drain_wakes();
+            self.drain_sub_events();
             while let Ok(d) = self.done_rx.try_recv() {
                 self.on_done(d);
             }
-            // AIMD (ninelives P3.04): every in-flight op is queue depth
-            // the worker pool hasn't absorbed yet.
-            self.fleet.autoscale(self.ops.len());
+            // AIMD (ninelives P3.04) over the EWMA-smoothed in-flight
+            // depth (P3.01): every pending op is queue depth the worker
+            // pool hasn't absorbed yet, but only the sustained signal
+            // may move the pool.
+            let depth = self.depth.observe(self.ops.len() as f64);
+            self.fleet.autoscale(depth.round() as usize);
+            self.observe_gauges(depth);
             self.flush_all();
             self.reap();
 
@@ -551,9 +598,30 @@ impl Reactor {
                     self.fill_slot(conn, op, ServerMsg::Response(resp).to_line());
                 }
                 Some(Op::SubStep { conn, sid }) => self.on_sub_step(conn, &sid, r),
-                Some(Op::Begin { .. }) | None => {}
+                Some(Op::Begin { .. }) | Some(Op::Metrics { .. }) | None => {}
             },
+            Done::Metrics(op, text) => {
+                let Some(Op::Metrics { conn }) = self.ops.remove(&op) else {
+                    return;
+                };
+                let line = ServerMsg::Response(Response::Metrics { text }).to_line();
+                self.fill_slot(conn, op, line);
+            }
         }
+    }
+
+    /// Per-iteration gauge refresh: plain atomic stores, skipped
+    /// entirely when the plane is detached.
+    fn observe_gauges(&mut self, depth: f64) {
+        if !self.tel_enabled {
+            return;
+        }
+        let rate = self.req_rate.rate(self.started.elapsed().as_secs_f64());
+        let m = self.fleet.telemetry().metrics();
+        m.set_gauge(Gauge::Workers, self.fleet.num_workers() as f64);
+        m.set_gauge(Gauge::SessionsLive, self.shared.sessions.len() as f64);
+        m.set_gauge(Gauge::AimdDepthEwma, depth);
+        m.set_gauge(Gauge::RequestRateHz, rate);
     }
 
     // -- accept / read / write ----------------------------------------
@@ -566,7 +634,13 @@ impl Reactor {
                 Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
                 Err(e) => {
                     // Logs through the gate; the backoff drops the
-                    // listener from the poll set for a beat.
+                    // listener from the poll set for a beat. The
+                    // counter sees every failure, including the ones
+                    // the gate's log throttle swallows.
+                    self.fleet
+                        .telemetry()
+                        .metrics()
+                        .inc(Counter::AcceptErrorsSuppressed);
                     let _ = accept_stream(Err(e), gate, Instant::now());
                     return;
                 }
@@ -757,25 +831,37 @@ impl Reactor {
     }
 
     fn push_pending(&mut self, tok: u64, op: u64) {
+        let t0 = self.tel_enabled.then(Instant::now);
         if let Some(v) = self.v1_mut(tok) {
-            v.slots.push_back(Slot::Pending(op));
+            v.slots.push_back(Slot::Pending(op, t0));
         }
     }
 
     /// Resolve one `Pending(op)` slot and flush the contiguous `Ready`
-    /// prefix into the output buffer.
+    /// prefix into the output buffer. Queued-to-answered time feeds the
+    /// request-latency histogram.
     fn fill_slot(&mut self, tok: u64, op: u64, line: String) {
+        let mut latency = None;
         let Some(c) = self.conns.get_mut(&tok) else { return };
         if let ConnState::V1(v) = &mut c.state {
             if let Some(slot) = v
                 .slots
                 .iter_mut()
-                .find(|s| matches!(s, Slot::Pending(o) if *o == op))
+                .find(|s| matches!(s, Slot::Pending(o, _) if *o == op))
             {
+                if let Slot::Pending(_, Some(t0)) = slot {
+                    latency = Some(t0.elapsed());
+                }
                 *slot = Slot::Ready(line);
             }
         }
         Self::drain_ready(c);
+        if let Some(d) = latency {
+            self.fleet
+                .telemetry()
+                .metrics()
+                .observe(Hist::RequestSeconds, d.as_secs_f64());
+        }
         self.maybe_start_sub(tok);
     }
 
@@ -816,6 +902,9 @@ impl Reactor {
         // still a flood.
         let (rate, burst) = (self.cfg.rate_limit_rps, self.cfg.rate_burst.max(1.0));
         let now_s = self.started.elapsed().as_secs_f64();
+        if self.tel_enabled {
+            self.req_rate.record(now_s);
+        }
         let over = match self.v1_mut(tok) {
             Some(v) => match v.bucket.as_mut() {
                 Some(b) => !b.admit(now_s),
@@ -824,6 +913,10 @@ impl Reactor {
             None => return,
         };
         if over {
+            self.fleet
+                .telemetry()
+                .metrics()
+                .inc(Counter::RequestsRateLimited);
             self.answer(
                 tok,
                 Response::rate_limited(format!(
@@ -950,6 +1043,21 @@ impl Reactor {
                 }
                 // Started by maybe_start_sub once earlier slots drain.
             }
+            Request::Metrics => {
+                let op = self.next_op();
+                self.push_pending(tok, op);
+                self.ops.insert(op, Op::Metrics { conn: tok });
+                let tel = self.fleet.telemetry().clone();
+                let tx = self.done_tx.clone();
+                let wake = self.wake_w.clone();
+                // Rendering walks every family (histogram buckets, the
+                // per-policy label map): off the reactor thread.
+                std::thread::spawn(move || {
+                    let text = tel.metrics().render_prometheus();
+                    let _ = tx.send(Done::Metrics(op, text));
+                    let _ = (&*wake).write(&[1u8]);
+                });
+            }
             Request::Shutdown => {
                 self.answer(
                     tok,
@@ -1027,6 +1135,10 @@ impl Reactor {
         if let Some(&op) = self.driving.get(&session) {
             if let Some(Op::Status { targets, .. }) = self.ops.get_mut(&op) {
                 targets.push(tok);
+                self.fleet
+                    .telemetry()
+                    .metrics()
+                    .inc(Counter::RequestsCoalesced);
                 self.push_pending(tok, op);
                 return;
             }
@@ -1068,18 +1180,49 @@ impl Reactor {
         let Some(req) = self.v1_mut(tok).and_then(|v| v.pending_sub.take()) else {
             return;
         };
+        // Resolve the fleet-level identity first: the telemetry tap
+        // keys on the numeric session id, not the table name.
+        let ids = with_session(&self.shared, &req.sid, |h| Ok((h.id(), h.target_iters())));
+        let (fleet_id, target_iters) = match ids {
+            Ok(pair) => pair,
+            // A dead session answers a single typed error, no events.
+            Err(e) => {
+                self.answer(tok, Response::error(format!("{e:#}")));
+                return;
+            }
+        };
+        // Register the tap *before* the first drive: the worker emits
+        // the slice's tick ahead of its reply, and an unregistered tap
+        // would lose it.
+        if self.tel_enabled {
+            let wake = self.wake_w.clone();
+            let tap = self.fleet.telemetry().subscribe_session(
+                fleet_id,
+                tok,
+                self.sub_tx.clone(),
+                Box::new(move || {
+                    let _ = (&*wake).write(&[1u8]);
+                }),
+            );
+            self.taps.insert(tok, tap);
+        }
         match self.dispatch_sub_step(tok, &req.sid, req.every_ticks) {
             Ok(()) => {
                 if let Some(v) = self.v1_mut(tok) {
                     v.sub = Some(Sub {
+                        sid: req.sid,
                         every_ticks: req.every_ticks,
                         max_events: req.max_events,
                         sent: 0,
+                        events_sent: 0,
+                        target_iters,
                     });
                 }
             }
-            // A dead session answers a single typed error, no events.
-            Err(e) => self.answer(tok, Response::error(format!("{e:#}"))),
+            Err(e) => {
+                self.drop_tap(tok);
+                self.answer(tok, Response::error(format!("{e:#}")));
+            }
         }
     }
 
@@ -1104,20 +1247,19 @@ impl Reactor {
         if !self.conns.contains_key(&tok) {
             // Subscriber vanished: the stream dies, the session stays
             // registered (end still owns the result).
+            self.drop_tap(tok);
             return;
         }
         let st = match r {
             Some(Ok(st)) => st,
             Some(Err(e)) => {
                 let line = ServerMsg::Response(Response::error(format!("{e:#}"))).to_line();
-                self.append_out(tok, &line);
-                self.end_sub(tok);
+                self.finish_sub(tok, line);
                 return;
             }
             None => {
                 let line = ServerMsg::Response(Response::error(WORKER_GONE.to_string())).to_line();
-                self.append_out(tok, &line);
-                self.end_sub(tok);
+                self.finish_sub(tok, line);
                 return;
             }
         };
@@ -1127,21 +1269,89 @@ impl Reactor {
             sub.sent += 1;
             st.done || (sub.max_events > 0 && sub.sent >= sub.max_events)
         };
-        let ev = ServerMsg::Event(Event::Status(report(sid, st))).to_line();
-        self.append_out(tok, &ev);
+        if !self.taps.contains_key(&tok) {
+            // Plane detached: the drive reply itself is the event.
+            let ev = ServerMsg::Event(Event::Status(report(sid, st))).to_line();
+            self.append_out(tok, &ev);
+        }
         if finished {
             let fin = ServerMsg::Response(Response::Status(report(sid, st))).to_line();
-            self.append_out(tok, &fin);
-            self.end_sub(tok);
+            self.finish_sub(tok, fin);
             return;
         }
         let every = self.v1_mut(tok).and_then(|v| v.sub.as_ref().map(|s| s.every_ticks));
         let Some(every) = every else { return };
         if let Err(e) = self.dispatch_sub_step(tok, sid, every) {
             let line = ServerMsg::Response(Response::error(format!("{e:#}"))).to_line();
-            self.append_out(tok, &line);
-            self.end_sub(tok);
+            self.finish_sub(tok, line);
         }
+    }
+
+    /// Terminal path of a subscribe stream: make sure every event the
+    /// fleet emitted for it has been forwarded (bounded flush → drain),
+    /// close the tap, then append the final line — the stream's last
+    /// event never trails its final response.
+    fn finish_sub(&mut self, tok: u64, final_line: String) {
+        if self.taps.contains_key(&tok) {
+            // Bounded: a stalled consumer thread costs ≤ 50 ms once per
+            // stream end, never a reactor stall per event (the tick it
+            // held back is simply missing — lossy-tap semantics).
+            self.fleet.telemetry().flush(Duration::from_millis(50));
+            self.drop_tap(tok);
+            self.drain_sub_events();
+        }
+        self.append_out(tok, &final_line);
+        self.end_sub(tok);
+    }
+
+    fn drop_tap(&mut self, tok: u64) {
+        if let Some(tap) = self.taps.remove(&tok) {
+            self.fleet.telemetry().unsubscribe(tap);
+        }
+    }
+
+    /// Forward queued telemetry events to their subscribe streams.
+    fn drain_sub_events(&mut self) {
+        while let Ok((tok, ev)) = self.sub_rx.try_recv() {
+            self.route_sub_event(tok, ev);
+        }
+    }
+
+    fn route_sub_event(&mut self, tok: u64, ev: TelemetryEvent) {
+        // Only progress ticks become wire events; begin/detect/
+        // gear-switch/end stay journal- and metrics-side.
+        let TelemetryEvent::Tick {
+            iterations,
+            time_s,
+            energy_j,
+            sm_gear,
+            mem_gear,
+            done,
+            ..
+        } = ev
+        else {
+            return;
+        };
+        let line = {
+            let Some(v) = self.v1_mut(tok) else { return };
+            let Some(sub) = v.sub.as_mut() else { return };
+            if sub.max_events > 0 && sub.events_sent >= sub.max_events {
+                return;
+            }
+            sub.events_sent += 1;
+            ServerMsg::Event(Event::Status(SessionReport {
+                session: sub.sid.clone(),
+                iterations,
+                target_iters: sub.target_iters,
+                time_s,
+                energy_j,
+                sm_gear,
+                mem_gear,
+                done,
+            }))
+            .to_line()
+        };
+        self.append_out(tok, &line);
     }
 
     fn end_sub(&mut self, tok: u64) {

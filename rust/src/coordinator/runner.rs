@@ -27,6 +27,14 @@ pub trait Policy {
     fn gpoeo_stats(&self) -> Option<GpoeoStats> {
         None
     }
+
+    /// Attach the telemetry plane (DESIGN.md §11). Fleet workers call
+    /// this once per session, right after construction; policies that
+    /// emit (gear switches, detection events, predict latencies) store
+    /// the handle + session id, everything else ignores it. Telemetry
+    /// is pure observation — attaching must never change a policy's
+    /// decisions (the parallel==serial and parity gates run both ways).
+    fn attach_telemetry(&mut self, _tel: Arc<crate::telemetry::Telemetry>, _session: u64) {}
 }
 
 /// The NVIDIA default scheduling strategy: no controller at all (the

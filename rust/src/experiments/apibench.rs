@@ -10,6 +10,13 @@
 //! - **p50/p99 request latency** — per-request wall clock over every
 //!   typed request in the churn phase.
 //!
+//! Each tier runs **twice**: once with the telemetry plane attached
+//! (the primary numbers) and once with it detached
+//! ([`Telemetry::disabled`](crate::telemetry::Telemetry::disabled) —
+//! the control arm). The detached p99 is recorded alongside, so the
+//! bench file prices what observability costs the hot path; CI gates
+//! the regression with `--max-overhead-pct`.
+//!
 //! Default tiers are 100, 1000 and 10000 sessions (`--quick` runs only
 //! 100; `--sessions N` pins a single tier). Every tier is appended to
 //! `BENCH_api.json` whether it passed or not — a failed 10k attempt is
@@ -55,9 +62,31 @@ pub struct ApiBenchTier {
     pub churn_per_s: f64,
     pub p50_ms: f64,
     pub p99_ms: f64,
+    /// p99 of the control arm (telemetry plane detached) — the baseline
+    /// the `--max-overhead-pct` gate compares [`Self::p99_ms`] against.
+    pub p99_detached_ms: f64,
     pub workers_start: usize,
     pub workers_end: usize,
     pub wall_s: f64,
+}
+
+impl ApiBenchTier {
+    fn zeroed(sessions: usize, threads: usize) -> ApiBenchTier {
+        ApiBenchTier {
+            sessions,
+            threads,
+            ok: false,
+            error: String::new(),
+            conns_per_s: 0.0,
+            churn_per_s: 0.0,
+            p50_ms: 0.0,
+            p99_ms: 0.0,
+            p99_detached_ms: 0.0,
+            workers_start: 0,
+            workers_end: 0,
+            wall_s: 0.0,
+        }
+    }
 }
 
 pub struct ApiBench {
@@ -70,12 +99,13 @@ impl ApiBench {
         for t in &self.tiers {
             if t.ok {
                 println!(
-                    "api-bench {:>6} sessions: {:.0} conns/s  {:.0} churn/s  p50 {:.2}ms  p99 {:.2}ms  workers {}->{}  ({:.2}s)",
+                    "api-bench {:>6} sessions: {:.0} conns/s  {:.0} churn/s  p50 {:.2}ms  p99 {:.2}ms (detached {:.2}ms)  workers {}->{}  ({:.2}s)",
                     t.sessions,
                     t.conns_per_s,
                     t.churn_per_s,
                     t.p50_ms,
                     t.p99_ms,
+                    t.p99_detached_ms,
                     t.workers_start,
                     t.workers_end,
                     t.wall_s
@@ -103,8 +133,8 @@ pub fn run(spec: &Arc<Spec>, args: &Args, quick: bool) -> anyhow::Result<ApiBenc
     let mut table = Table::new(
         "api-bench — reactor control-plane throughput",
         &[
-            "sessions", "conns", "conn/s", "churn/s", "p50 ms", "p99 ms", "workers", "wall s",
-            "ok",
+            "sessions", "conns", "conn/s", "churn/s", "p50 ms", "p99 ms", "p99 det", "workers",
+            "wall s", "ok",
         ],
     );
     let mut out = Vec::new();
@@ -117,6 +147,7 @@ pub fn run(spec: &Arc<Spec>, args: &Args, quick: bool) -> anyhow::Result<ApiBenc
             Cell::F(tier.churn_per_s, 0),
             Cell::F(tier.p50_ms, 2),
             Cell::F(tier.p99_ms, 2),
+            Cell::F(tier.p99_detached_ms, 2),
             s(format!("{}->{}", tier.workers_start, tier.workers_end)),
             Cell::F(tier.wall_s, 2),
             s(if tier.ok { "yes" } else { "FAIL" }),
@@ -126,23 +157,20 @@ pub fn run(spec: &Arc<Spec>, args: &Args, quick: bool) -> anyhow::Result<ApiBenc
     Ok(ApiBench { table, tiers: out })
 }
 
-/// One tier: fresh daemon, connect probe, concurrent churn, shutdown.
+/// One tier: the attached pass (primary numbers), then the detached
+/// control pass whose p99 prices the telemetry plane.
 fn run_tier(spec: &Arc<Spec>, dir: &Path, sessions: usize) -> ApiBenchTier {
     let threads = sessions.min(CHURN_THREADS).max(1);
-    let mut tier = ApiBenchTier {
-        sessions,
-        threads,
-        ok: false,
-        error: String::new(),
-        conns_per_s: 0.0,
-        churn_per_s: 0.0,
-        p50_ms: 0.0,
-        p99_ms: 0.0,
-        workers_start: 0,
-        workers_end: 0,
-        wall_s: 0.0,
-    };
-    match bench_tier(spec, dir, sessions, threads, &mut tier) {
+    let mut tier = ApiBenchTier::zeroed(sessions, threads);
+    let r = bench_tier(spec, dir, sessions, threads, true, &mut tier).and_then(|()| {
+        // Control arm: same churn against a daemon whose telemetry
+        // plane is [`Telemetry::disabled`]. Only its p99 is kept.
+        let mut detached = ApiBenchTier::zeroed(sessions, threads);
+        bench_tier(spec, dir, sessions, threads, false, &mut detached)?;
+        tier.p99_detached_ms = detached.p99_ms;
+        Ok(())
+    });
+    match r {
         Ok(()) => tier.ok = true,
         Err(e) => tier.error = format!("{e:#}"),
     }
@@ -154,9 +182,11 @@ fn bench_tier(
     dir: &Path,
     sessions: usize,
     threads: usize,
+    telemetry: bool,
     tier: &mut ApiBenchTier,
 ) -> anyhow::Result<()> {
-    let sock = dir.join(format!("bench-{sessions}.sock"));
+    let arm = if telemetry { "attached" } else { "detached" };
+    let sock = dir.join(format!("bench-{sessions}-{arm}.sock"));
     let daemon = Arc::new(Daemon::with_cfg(
         spec.clone(),
         BENCH_WORKERS,
@@ -164,6 +194,8 @@ fn bench_tier(
             max_workers: BENCH_MAX_WORKERS,
             rate_limit_rps: 0.0,
             rate_burst: 0.0,
+            journal_dir: None,
+            telemetry,
         },
     ));
     let serve = {
@@ -278,6 +310,7 @@ pub fn append_bench(path: &str, r: &ApiBench, quick: bool) -> anyhow::Result<()>
             ("churn_per_s", Json::Num(t.churn_per_s)),
             ("p50_ms", Json::Num(t.p50_ms)),
             ("p99_ms", Json::Num(t.p99_ms)),
+            ("p99_detached_ms", Json::Num(t.p99_detached_ms)),
             ("workers_start", Json::Num(t.workers_start as f64)),
             ("workers_end", Json::Num(t.workers_end as f64)),
             ("wall_clock_s", Json::Num(t.wall_s)),

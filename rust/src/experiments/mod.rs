@@ -179,6 +179,7 @@ pub fn cli_experiment(args: &Args) -> anyhow::Result<()> {
                 println!("bench record appended to {bench_path}");
                 let min_churn = args.opt_f64("min-churn", 0.0)?;
                 let max_p99 = args.opt_f64("max-p99-ms", 0.0)?;
+                let max_overhead = args.opt_f64("max-overhead-pct", 0.0)?;
                 for t in &r.tiers {
                     if !t.ok {
                         // The 10k tier may fail on small machines (fd
@@ -203,6 +204,21 @@ pub fn cli_experiment(args: &Args) -> anyhow::Result<()> {
                             "api-bench: {} sessions p99 {:.2}ms, above the allowed {max_p99}ms",
                             t.sessions,
                             t.p99_ms
+                        );
+                    }
+                    // Telemetry must be near-free on the request path:
+                    // attached p99 may exceed detached p99 by at most
+                    // --max-overhead-pct, with a 1ms absolute floor so
+                    // sub-ms noise can't fail the gate.
+                    if max_overhead > 0.0
+                        && t.p99_ms > t.p99_detached_ms * (1.0 + max_overhead / 100.0)
+                        && t.p99_ms - t.p99_detached_ms > 1.0
+                    {
+                        anyhow::bail!(
+                            "api-bench: {} sessions p99 {:.2}ms with telemetry vs {:.2}ms detached — over the {max_overhead}% overhead budget",
+                            t.sessions,
+                            t.p99_ms,
+                            t.p99_detached_ms
                         );
                     }
                 }

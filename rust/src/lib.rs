@@ -38,4 +38,5 @@ pub mod search;
 pub mod runtime;
 pub mod signal;
 pub mod sim;
+pub mod telemetry;
 pub mod util;

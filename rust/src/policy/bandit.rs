@@ -30,7 +30,9 @@ use super::{MeterWindow, PolicyBuilder, PolicyConfig, PolicyCtx};
 use crate::coordinator::Policy;
 use crate::device::Device;
 use crate::search::Objective;
+use crate::telemetry::{Gauge, Telemetry, TelemetryEvent};
 use crate::util::rng::Pcg64;
+use std::sync::Arc;
 
 #[derive(Clone, Copy, PartialEq, Eq, Debug)]
 pub enum BanditAlgo {
@@ -139,6 +141,8 @@ pub struct Bandit {
     rng: Pcg64,
     /// Total switch events (telemetry; exercised by tests).
     pub switches: u64,
+    /// Telemetry plane + fleet session id; pure observation.
+    tel: Option<(Arc<Telemetry>, u64)>,
 }
 
 impl Bandit {
@@ -161,6 +165,7 @@ impl Bandit {
             // parallel fleet sweeps stay bit-identical to serial ones.
             rng: Pcg64::new(0xbad_d17 ^ 0x5eed, 0x0b5e55),
             switches: 0,
+            tel: None,
         }
     }
 
@@ -294,6 +299,18 @@ impl Bandit {
         if switched {
             self.switches += 1;
             dev.set_sm_gear(self.arms[next]);
+            if let Some((tel, session)) = &self.tel {
+                tel.metrics().gear_switch("bandit");
+                tel.metrics().set_gauge(Gauge::SmGear, dev.sm_gear() as f64);
+                tel.metrics().set_gauge(Gauge::MemGear, dev.mem_gear() as f64);
+                tel.emit(TelemetryEvent::GearSwitch {
+                    session: *session,
+                    policy: "bandit".into(),
+                    sm_gear: dev.sm_gear(),
+                    mem_gear: dev.mem_gear(),
+                    time_s: dev.time_s(),
+                });
+            }
         }
         self.current = next;
         self.phase = Phase::Pull {
@@ -308,6 +325,10 @@ impl Bandit {
 impl Policy for Bandit {
     fn name(&self) -> &'static str {
         "bandit"
+    }
+
+    fn attach_telemetry(&mut self, tel: Arc<Telemetry>, session: u64) {
+        self.tel = Some((tel, session));
     }
 
     fn tick(&mut self, dev: &mut dyn Device) {

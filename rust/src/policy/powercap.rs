@@ -24,6 +24,8 @@ use super::{MeterWindow, PolicyBuilder, PolicyConfig, PolicyCtx};
 use crate::coordinator::Policy;
 use crate::device::Device;
 use crate::search::Objective;
+use crate::telemetry::{Gauge, Telemetry, TelemetryEvent};
+use std::sync::Arc;
 
 #[derive(Clone)]
 pub struct PowerCapCfg {
@@ -92,6 +94,8 @@ pub struct PowerCap {
     pub chosen_cap_w: f64,
     /// Rungs measured (telemetry).
     pub rungs: usize,
+    /// Telemetry plane + fleet session id; pure observation.
+    tel: Option<(Arc<Telemetry>, u64)>,
 }
 
 impl PowerCap {
@@ -107,6 +111,17 @@ impl PowerCap {
             best: (f64::INFINITY, f64::INFINITY),
             chosen_cap_w: f64::INFINITY,
             rungs: 0,
+            tel: None,
+        }
+    }
+
+    /// Apply a cap and mirror it to the power-limit gauge. An uncapped
+    /// cap reports the measured baseline power (gauges stay finite).
+    fn apply_cap(&mut self, dev: &mut dyn Device, cap_w: f64) {
+        dev.set_power_limit_w(cap_w);
+        if let Some((tel, _)) = &self.tel {
+            let shown = if cap_w.is_finite() { cap_w } else { self.p_base };
+            tel.metrics().set_gauge(Gauge::PowerLimitW, shown);
         }
     }
 
@@ -126,7 +141,17 @@ impl PowerCap {
 
     fn settle(&mut self, dev: &mut dyn Device) {
         self.chosen_cap_w = self.best.1;
-        dev.set_power_limit_w(self.chosen_cap_w);
+        self.apply_cap(dev, self.chosen_cap_w);
+        if let Some((tel, session)) = &self.tel {
+            tel.metrics().gear_switch("powercap");
+            tel.emit(TelemetryEvent::GearSwitch {
+                session: *session,
+                policy: "powercap".into(),
+                sm_gear: dev.sm_gear(),
+                mem_gear: dev.mem_gear(),
+                time_s: dev.time_s(),
+            });
+        }
         self.phase = Phase::Hold;
     }
 }
@@ -134,6 +159,10 @@ impl PowerCap {
 impl Policy for PowerCap {
     fn name(&self) -> &'static str {
         "powercap"
+    }
+
+    fn attach_telemetry(&mut self, tel: Arc<Telemetry>, session: u64) {
+        self.tel = Some((tel, session));
     }
 
     fn tick(&mut self, dev: &mut dyn Device) {
@@ -175,7 +204,8 @@ impl Policy for PowerCap {
                     self.settle(dev);
                     return;
                 }
-                dev.set_power_limit_w(self.cap_w);
+                let cap = self.cap_w;
+                self.apply_cap(dev, cap);
                 self.phase = Phase::Descend { worse_streak: 0 };
                 self.open_window(dev);
             }
@@ -198,7 +228,7 @@ impl Policy for PowerCap {
                     return;
                 }
                 self.cap_w = next;
-                dev.set_power_limit_w(self.cap_w);
+                self.apply_cap(dev, next);
                 self.phase = Phase::Descend {
                     worse_streak: streak,
                 };

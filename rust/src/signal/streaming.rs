@@ -31,7 +31,9 @@
 use crate::signal::fft::{periodogram_with, FftScratch};
 use crate::signal::online::{composite_feature_into, online_detect_loop, OnlineDetection};
 use crate::signal::period::{calc_period_scratch, PeriodCfg, PeriodEstimate, PeriodScratch};
+use crate::telemetry::{Counter, Metrics};
 use std::collections::HashMap;
+use std::sync::Arc;
 
 /// Per-sub-window Algorithm-1 results, keyed by `(istart, len)` relative
 /// to the current feature window.
@@ -137,6 +139,11 @@ pub struct StreamingDetector {
     /// `usize::MAX` once the period is stable.
     next_eval_at: usize,
     max_retained: usize,
+    /// Telemetry tap (DESIGN.md §11): counts evaluations and
+    /// re-detections. Pure observation — never consulted by the
+    /// detection math, so the streaming↔batch bit-identity holds with
+    /// or without it.
+    metrics: Option<Arc<Metrics>>,
 }
 
 impl StreamingDetector {
@@ -163,7 +170,13 @@ impl StreamingDetector {
             last: None,
             next_eval_at: first_due,
             max_retained,
+            metrics: None,
         }
+    }
+
+    /// Route evaluation/re-detection counters to a metrics registry.
+    pub fn attach_metrics(&mut self, metrics: Arc<Metrics>) {
+        self.metrics = Some(metrics);
     }
 
     /// Push one NVML sampling tick (the three Feature_dect channels).
@@ -250,6 +263,9 @@ impl StreamingDetector {
     /// Forget everything and restart the detection phase (workload
     /// change). Cache hit/miss counters are cumulative across resets.
     pub fn reset(&mut self) {
+        if let Some(m) = &self.metrics {
+            m.inc(Counter::DetectorRedetections);
+        }
         self.power.clear();
         self.util_sm.clear();
         self.util_mem.clear();
@@ -390,6 +406,9 @@ impl StreamingDetector {
     /// Record the verdict and schedule the next evaluation per the
     /// Algorithm-3 contract.
     fn finish_evaluation(&mut self, det: Option<OnlineDetection>) -> StreamVerdict {
+        if let Some(m) = &self.metrics {
+            m.inc(Counter::DetectorEvaluations);
+        }
         self.rounds += 1;
         let verdict = StreamVerdict {
             detection: det,

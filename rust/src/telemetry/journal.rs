@@ -1,0 +1,214 @@
+//! Replayable session journals: line-delimited JSON, one file per
+//! session (DESIGN.md §11).
+//!
+//! The writer runs on the telemetry consumer thread — never on a
+//! controller tick or the reactor — and degrades instead of failing:
+//! any I/O error (ENOSPC, a journal directory that vanished or turns
+//! out to be a file, a closed descriptor) poisons the affected file and
+//! every subsequent line for it is dropped-and-counted
+//! (`gpoeo_journal_lines_dropped_total`), keeping the event pipeline
+//! alive. `gpoeo ctl watch --replay FILE` and post-hoc analysis read
+//! the files back through [`read_journal`].
+
+use crate::telemetry::metrics::{Counter, Metrics};
+use crate::telemetry::TelemetryEvent;
+use std::collections::HashMap;
+use std::io::Write;
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+/// Journal file name for a fleet session id.
+pub fn journal_file(dir: &Path, session: u64) -> PathBuf {
+    dir.join(format!("session-{session}.jsonl"))
+}
+
+pub struct JournalWriter {
+    dir: PathBuf,
+    metrics: Arc<Metrics>,
+    /// `None` marks a poisoned session: its file failed to open or a
+    /// write errored, and all further lines for it are drop-and-count.
+    files: HashMap<u64, Option<std::fs::File>>,
+    /// Directory-level failure: everything is drop-and-count.
+    broken: bool,
+}
+
+impl JournalWriter {
+    /// A writer rooted at `dir` (created if missing). A directory that
+    /// cannot be created does not error — the writer starts degraded
+    /// and counts every line it would have written.
+    pub fn new(dir: &Path, metrics: Arc<Metrics>) -> JournalWriter {
+        let broken = std::fs::create_dir_all(dir).is_err();
+        JournalWriter {
+            dir: dir.to_path_buf(),
+            metrics,
+            files: HashMap::new(),
+            broken,
+        }
+    }
+
+    /// Append one event to its session's journal. Never fails: errors
+    /// degrade to drop-and-count.
+    pub fn write(&mut self, ev: &TelemetryEvent) {
+        if self.broken {
+            self.metrics.inc(Counter::JournalLinesDropped);
+            return;
+        }
+        let sid = ev.session();
+        let slot = self.files.entry(sid).or_insert_with(|| {
+            std::fs::OpenOptions::new()
+                .create(true)
+                .append(true)
+                .open(journal_file(&self.dir, sid))
+                .ok()
+        });
+        let ok = match slot.as_mut() {
+            // One line per event, flushed immediately: journals are
+            // low-rate (slice cadence), and a flushed line is a line a
+            // crash can't lose.
+            Some(f) => writeln!(f, "{}", ev.to_json().to_string())
+                .and_then(|()| f.flush())
+                .is_ok(),
+            None => false,
+        };
+        if !ok {
+            *slot = None;
+            self.metrics.inc(Counter::JournalLinesDropped);
+        }
+        if matches!(ev, TelemetryEvent::End { .. }) {
+            self.files.remove(&sid);
+        }
+    }
+
+    /// Drop all open files (flushes happened per line).
+    pub fn close_all(&mut self) {
+        self.files.clear();
+    }
+}
+
+/// Read a journal file back as schema-validated events. Fails on the
+/// first unparsable or schema-violating line, naming its line number —
+/// this is the validator `ctl watch --replay` and CI both use.
+pub fn read_journal(path: &Path) -> anyhow::Result<Vec<TelemetryEvent>> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| anyhow::anyhow!("reading {}: {e}", path.display()))?;
+    let mut out = Vec::new();
+    for (i, line) in text.lines().enumerate() {
+        if line.is_empty() {
+            continue;
+        }
+        let j = crate::util::json::Json::parse(line)
+            .map_err(|e| anyhow::anyhow!("{}:{}: {e}", path.display(), i + 1))?;
+        let ev = TelemetryEvent::from_json(&j)
+            .map_err(|e| anyhow::anyhow!("{}:{}: {e}", path.display(), i + 1))?;
+        out.push(ev);
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn temp_dir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("gpoeo-journal-{}-{tag}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        d
+    }
+
+    fn sample_events(session: u64) -> Vec<TelemetryEvent> {
+        vec![
+            TelemetryEvent::Begin {
+                session,
+                app: "AI_TS".into(),
+                policy: "bandit".into(),
+                target_iters: 30,
+            },
+            TelemetryEvent::Tick {
+                session,
+                iterations: 10,
+                time_s: 1.5,
+                energy_j: 120.0,
+                sm_gear: 3,
+                mem_gear: 1,
+                done: false,
+            },
+            TelemetryEvent::End {
+                session,
+                iterations: 30,
+                time_s: 4.5,
+                energy_j: 360.0,
+                done: true,
+            },
+        ]
+    }
+
+    #[test]
+    fn writes_one_file_per_session_and_replays_bitwise() {
+        let dir = temp_dir("roundtrip");
+        let m = Arc::new(Metrics::new());
+        let mut w = JournalWriter::new(&dir, m.clone());
+        let evs = sample_events(7);
+        for ev in &evs {
+            w.write(ev);
+        }
+        w.write(&TelemetryEvent::Begin {
+            session: 8,
+            app: "AI_FE".into(),
+            policy: "powercap".into(),
+            target_iters: 5,
+        });
+        assert_eq!(m.counter(Counter::JournalLinesDropped), 0);
+
+        let got = read_journal(&journal_file(&dir, 7)).unwrap();
+        assert_eq!(got, evs);
+        assert!(journal_file(&dir, 8).exists());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn unwritable_journal_dir_degrades_to_drop_and_count() {
+        // The journal "directory" is a regular file: create_dir_all
+        // fails, and every line must be counted, none written, no error.
+        let path = temp_dir("brokendir");
+        std::fs::write(&path, b"occupied").unwrap();
+        let m = Arc::new(Metrics::new());
+        let mut w = JournalWriter::new(&path, m.clone());
+        for ev in sample_events(1) {
+            w.write(&ev);
+        }
+        assert_eq!(m.counter(Counter::JournalLinesDropped), 3, "exact count");
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn per_session_open_failure_poisons_only_that_session() {
+        let dir = temp_dir("poison");
+        let m = Arc::new(Metrics::new());
+        let mut w = JournalWriter::new(&dir, m.clone());
+        // Occupy session 3's journal path with a *directory* so the
+        // file open fails; session 4 must still journal cleanly.
+        std::fs::create_dir_all(journal_file(&dir, 3)).unwrap();
+        for ev in sample_events(3) {
+            w.write(&ev);
+        }
+        for ev in sample_events(4) {
+            w.write(&ev);
+        }
+        assert_eq!(m.counter(Counter::JournalLinesDropped), 3);
+        assert_eq!(read_journal(&journal_file(&dir, 4)).unwrap().len(), 3);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn replay_rejects_schema_violations_with_line_numbers() {
+        let dir = temp_dir("badlines");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("bad.jsonl");
+        std::fs::write(&p, "{\"event\":\"begin\"}\n").unwrap();
+        let err = read_journal(&p).unwrap_err().to_string();
+        assert!(err.contains(":1:"), "{err}");
+        std::fs::write(&p, "not json\n").unwrap();
+        assert!(read_journal(&p).is_err());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -1,0 +1,413 @@
+//! Metrics registry + Prometheus text exposition (DESIGN.md §11).
+//!
+//! Fixed enum ids, not string lookups: every hot-path emission
+//! (controller tick, reactor request, detector round) indexes straight
+//! into an atomic slot — no allocation, no hashing, no locks. The one
+//! labeled family, per-policy gear switches, is rare enough (a handful
+//! per session) to go through a mutexed map. Rendering walks the same
+//! enums in declaration order, so the exposition text is deterministic
+//! — HELP/TYPE once per family, families never duplicated.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+/// Monotonic counters. `*_total` in the exposition.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Counter {
+    /// Streaming-detector evaluation rounds.
+    DetectorEvaluations,
+    /// Detector resets after a fluctuation-triggered re-optimization.
+    DetectorRedetections,
+    /// Requests refused by the per-connection token bucket.
+    RequestsRateLimited,
+    /// Status requests joined onto an already-driving op (ADR-010).
+    RequestsCoalesced,
+    /// Accept errors swallowed by the `AcceptGate` backoff window.
+    AcceptErrorsSuppressed,
+    /// Events accepted into the telemetry queue.
+    EventsEmitted,
+    /// Events dropped because the telemetry queue was full.
+    EventsDropped,
+    /// Events processed by the telemetry consumer.
+    EventsConsumed,
+    /// Journal lines dropped after an I/O failure (degrade, don't stall).
+    JournalLinesDropped,
+    /// Sessions begun on the fleet.
+    SessionsBegun,
+    /// Sessions driven to completion on the fleet.
+    SessionsEnded,
+}
+
+const COUNTERS: &[(Counter, &str, &str)] = &[
+    (
+        Counter::DetectorEvaluations,
+        "gpoeo_detector_evaluations_total",
+        "Streaming period-detector evaluation rounds",
+    ),
+    (
+        Counter::DetectorRedetections,
+        "gpoeo_detector_redetections_total",
+        "Detector resets (fluctuation-triggered re-optimizations)",
+    ),
+    (
+        Counter::RequestsRateLimited,
+        "gpoeo_requests_rate_limited_total",
+        "Requests refused by the per-connection token bucket",
+    ),
+    (
+        Counter::RequestsCoalesced,
+        "gpoeo_requests_coalesced_total",
+        "Status requests coalesced onto an in-flight op",
+    ),
+    (
+        Counter::AcceptErrorsSuppressed,
+        "gpoeo_accept_errors_suppressed_total",
+        "Accept errors suppressed by the backoff gate",
+    ),
+    (
+        Counter::EventsEmitted,
+        "gpoeo_telemetry_events_total",
+        "Events accepted into the telemetry queue",
+    ),
+    (
+        Counter::EventsDropped,
+        "gpoeo_telemetry_events_dropped_total",
+        "Events dropped on telemetry queue overflow",
+    ),
+    (
+        Counter::EventsConsumed,
+        "gpoeo_telemetry_events_consumed_total",
+        "Events processed by the telemetry consumer",
+    ),
+    (
+        Counter::JournalLinesDropped,
+        "gpoeo_journal_lines_dropped_total",
+        "Journal lines dropped after an I/O failure",
+    ),
+    (
+        Counter::SessionsBegun,
+        "gpoeo_sessions_begun_total",
+        "Sessions begun on the fleet",
+    ),
+    (
+        Counter::SessionsEnded,
+        "gpoeo_sessions_ended_total",
+        "Sessions driven to completion on the fleet",
+    ),
+];
+
+/// Last-observed-value gauges.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Gauge {
+    /// Live fleet worker threads.
+    Workers,
+    /// Sessions currently in the daemon's session table.
+    SessionsLive,
+    /// SM gear most recently applied by any policy.
+    SmGear,
+    /// Memory gear most recently applied by any policy.
+    MemGear,
+    /// Power limit most recently applied (watts).
+    PowerLimitW,
+    /// Detector verdict: 0 = none yet, 1 = periodic, 2 = aperiodic.
+    DetectorVerdict,
+    /// EWMA-smoothed reactor op-queue depth (what AIMD actually reads).
+    AimdDepthEwma,
+    /// Request arrival rate over the trailing window (req/s).
+    RequestRateHz,
+}
+
+const GAUGES: &[(Gauge, &str, &str)] = &[
+    (Gauge::Workers, "gpoeo_workers", "Live fleet worker threads"),
+    (
+        Gauge::SessionsLive,
+        "gpoeo_sessions_live",
+        "Sessions currently registered in the session table",
+    ),
+    (
+        Gauge::SmGear,
+        "gpoeo_sm_gear",
+        "SM gear most recently applied by any policy",
+    ),
+    (
+        Gauge::MemGear,
+        "gpoeo_mem_gear",
+        "Memory gear most recently applied by any policy",
+    ),
+    (
+        Gauge::PowerLimitW,
+        "gpoeo_power_limit_watts",
+        "Power limit most recently applied (watts)",
+    ),
+    (
+        Gauge::DetectorVerdict,
+        "gpoeo_detector_verdict",
+        "Detector verdict: 0 none, 1 periodic, 2 aperiodic",
+    ),
+    (
+        Gauge::AimdDepthEwma,
+        "gpoeo_aimd_depth_ewma",
+        "EWMA-smoothed reactor op-queue depth fed to the AIMD scaler",
+    ),
+    (
+        Gauge::RequestRateHz,
+        "gpoeo_request_rate_hz",
+        "Request arrival rate over the trailing window",
+    ),
+];
+
+/// Fixed-bucket latency histograms (seconds).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Hist {
+    /// Controller tick latency (sampled as per-slice mean on workers).
+    TickSeconds,
+    /// Control-plane request latency (receipt to response fill).
+    RequestSeconds,
+    /// GBT predict-call latency inside the controller.
+    PredictSeconds,
+}
+
+const HISTS: &[(Hist, &str, &str, &[f64])] = &[
+    (
+        Hist::TickSeconds,
+        "gpoeo_tick_seconds",
+        "Controller tick latency",
+        &[1e-7, 1e-6, 1e-5, 1e-4, 1e-3, 1e-2, 0.1],
+    ),
+    (
+        Hist::RequestSeconds,
+        "gpoeo_request_seconds",
+        "Control-plane request latency",
+        &[1e-4, 1e-3, 5e-3, 0.025, 0.1, 0.25, 1.0, 5.0],
+    ),
+    (
+        Hist::PredictSeconds,
+        "gpoeo_predict_seconds",
+        "GBT gear-prediction call latency",
+        &[1e-5, 1e-4, 1e-3, 1e-2, 0.1],
+    ),
+];
+
+struct HistSlot {
+    /// One count per bound, plus the +Inf overflow bucket at the end.
+    buckets: Vec<AtomicU64>,
+    count: AtomicU64,
+    sum_ns: AtomicU64,
+}
+
+/// The process-wide registry. Cheap to share (`Arc<Metrics>`), safe to
+/// hammer from every worker thread — all slots are atomics.
+pub struct Metrics {
+    counters: Vec<AtomicU64>,
+    gauges: Vec<AtomicU64>,
+    hists: Vec<HistSlot>,
+    /// Per-policy gear-switch counts; rare events, so a mutexed map is
+    /// fine (and keeps label cardinality = registered policy names).
+    gear_switches: Mutex<BTreeMap<String, u64>>,
+}
+
+impl Default for Metrics {
+    fn default() -> Metrics {
+        Metrics::new()
+    }
+}
+
+impl Metrics {
+    pub fn new() -> Metrics {
+        Metrics {
+            counters: (0..COUNTERS.len()).map(|_| AtomicU64::new(0)).collect(),
+            gauges: (0..GAUGES.len())
+                .map(|_| AtomicU64::new(0.0f64.to_bits()))
+                .collect(),
+            hists: HISTS
+                .iter()
+                .map(|(_, _, _, bounds)| HistSlot {
+                    buckets: (0..bounds.len() + 1).map(|_| AtomicU64::new(0)).collect(),
+                    count: AtomicU64::new(0),
+                    sum_ns: AtomicU64::new(0),
+                })
+                .collect(),
+            gear_switches: Mutex::new(BTreeMap::new()),
+        }
+    }
+
+    fn counter_idx(c: Counter) -> usize {
+        COUNTERS
+            .iter()
+            .position(|(id, _, _)| *id == c)
+            .expect("counter registered")
+    }
+
+    fn gauge_idx(g: Gauge) -> usize {
+        GAUGES
+            .iter()
+            .position(|(id, _, _)| *id == g)
+            .expect("gauge registered")
+    }
+
+    fn hist_idx(h: Hist) -> usize {
+        HISTS
+            .iter()
+            .position(|(id, _, _, _)| *id == h)
+            .expect("histogram registered")
+    }
+
+    pub fn inc(&self, c: Counter) {
+        self.add(c, 1);
+    }
+
+    pub fn add(&self, c: Counter, n: u64) {
+        self.counters[Metrics::counter_idx(c)].fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn counter(&self, c: Counter) -> u64 {
+        self.counters[Metrics::counter_idx(c)].load(Ordering::Relaxed)
+    }
+
+    pub fn set_gauge(&self, g: Gauge, v: f64) {
+        self.gauges[Metrics::gauge_idx(g)].store(v.to_bits(), Ordering::Relaxed);
+    }
+
+    pub fn gauge(&self, g: Gauge) -> f64 {
+        f64::from_bits(self.gauges[Metrics::gauge_idx(g)].load(Ordering::Relaxed))
+    }
+
+    /// Record one latency observation (seconds).
+    pub fn observe(&self, h: Hist, seconds: f64) {
+        let i = Metrics::hist_idx(h);
+        let bounds = HISTS[i].3;
+        let slot = &self.hists[i];
+        let b = bounds
+            .iter()
+            .position(|&ub| seconds <= ub)
+            .unwrap_or(bounds.len());
+        slot.buckets[b].fetch_add(1, Ordering::Relaxed);
+        slot.count.fetch_add(1, Ordering::Relaxed);
+        let ns = (seconds.max(0.0) * 1e9) as u64;
+        slot.sum_ns.fetch_add(ns, Ordering::Relaxed);
+    }
+
+    pub fn hist_count(&self, h: Hist) -> u64 {
+        self.hists[Metrics::hist_idx(h)].count.load(Ordering::Relaxed)
+    }
+
+    /// Count one gear switch for `policy`.
+    pub fn gear_switch(&self, policy: &str) {
+        let mut m = self.gear_switches.lock().expect("gear-switch lock");
+        *m.entry(policy.to_string()).or_insert(0) += 1;
+    }
+
+    pub fn gear_switches(&self, policy: &str) -> u64 {
+        let m = self.gear_switches.lock().expect("gear-switch lock");
+        m.get(policy).copied().unwrap_or(0)
+    }
+
+    /// Render the whole registry in Prometheus text exposition format.
+    /// Deterministic: declaration order for families, BTreeMap order for
+    /// labels.
+    pub fn render_prometheus(&self) -> String {
+        let mut out = String::with_capacity(4096);
+        for (i, (_, name, help)) in COUNTERS.iter().enumerate() {
+            let v = self.counters[i].load(Ordering::Relaxed);
+            out.push_str(&format!("# HELP {name} {help}\n"));
+            out.push_str(&format!("# TYPE {name} counter\n"));
+            out.push_str(&format!("{name} {v}\n"));
+        }
+        {
+            let name = "gpoeo_gear_switches_total";
+            out.push_str(&format!("# HELP {name} Gear switches applied, by policy\n"));
+            out.push_str(&format!("# TYPE {name} counter\n"));
+            let m = self.gear_switches.lock().expect("gear-switch lock");
+            for (policy, v) in m.iter() {
+                out.push_str(&format!("{name}{{policy=\"{policy}\"}} {v}\n"));
+            }
+        }
+        for (i, (_, name, help)) in GAUGES.iter().enumerate() {
+            let v = f64::from_bits(self.gauges[i].load(Ordering::Relaxed));
+            out.push_str(&format!("# HELP {name} {help}\n"));
+            out.push_str(&format!("# TYPE {name} gauge\n"));
+            out.push_str(&format!("{name} {v}\n"));
+        }
+        for (i, (_, name, help, bounds)) in HISTS.iter().enumerate() {
+            let slot = &self.hists[i];
+            out.push_str(&format!("# HELP {name} {help}\n"));
+            out.push_str(&format!("# TYPE {name} histogram\n"));
+            let mut cum = 0u64;
+            for (b, &ub) in bounds.iter().enumerate() {
+                cum += slot.buckets[b].load(Ordering::Relaxed);
+                out.push_str(&format!("{name}_bucket{{le=\"{ub}\"}} {cum}\n"));
+            }
+            cum += slot.buckets[bounds.len()].load(Ordering::Relaxed);
+            out.push_str(&format!("{name}_bucket{{le=\"+Inf\"}} {cum}\n"));
+            let sum_s = slot.sum_ns.load(Ordering::Relaxed) as f64 / 1e9;
+            out.push_str(&format!("{name}_sum {sum_s}\n"));
+            out.push_str(&format!("{name}_count {cum}\n"));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_and_gauges_roundtrip() {
+        let m = Metrics::new();
+        assert_eq!(m.counter(Counter::EventsDropped), 0);
+        m.inc(Counter::EventsDropped);
+        m.add(Counter::EventsDropped, 4);
+        assert_eq!(m.counter(Counter::EventsDropped), 5);
+        m.set_gauge(Gauge::Workers, 3.0);
+        assert_eq!(m.gauge(Gauge::Workers), 3.0);
+    }
+
+    #[test]
+    fn histogram_buckets_are_cumulative_in_exposition() {
+        let m = Metrics::new();
+        m.observe(Hist::RequestSeconds, 0.0005); // le=1e-3
+        m.observe(Hist::RequestSeconds, 0.0005);
+        m.observe(Hist::RequestSeconds, 0.2); // le=0.25
+        m.observe(Hist::RequestSeconds, 99.0); // +Inf
+        assert_eq!(m.hist_count(Hist::RequestSeconds), 4);
+        let text = m.render_prometheus();
+        assert!(text.contains("gpoeo_request_seconds_bucket{le=\"0.001\"} 2"));
+        assert!(text.contains("gpoeo_request_seconds_bucket{le=\"0.25\"} 3"));
+        assert!(text.contains("gpoeo_request_seconds_bucket{le=\"+Inf\"} 4"));
+        assert!(text.contains("gpoeo_request_seconds_count 4"));
+    }
+
+    #[test]
+    fn gear_switches_render_with_policy_labels() {
+        let m = Metrics::new();
+        m.gear_switch("bandit");
+        m.gear_switch("bandit");
+        m.gear_switch("gpoeo");
+        assert_eq!(m.gear_switches("bandit"), 2);
+        let text = m.render_prometheus();
+        assert!(text.contains("gpoeo_gear_switches_total{policy=\"bandit\"} 2"));
+        assert!(text.contains("gpoeo_gear_switches_total{policy=\"gpoeo\"} 1"));
+    }
+
+    #[test]
+    fn exposition_has_no_duplicate_families() {
+        let m = Metrics::new();
+        m.gear_switch("bandit");
+        let text = m.render_prometheus();
+        let mut families: Vec<&str> = text
+            .lines()
+            .filter_map(|l| l.strip_prefix("# TYPE "))
+            .collect();
+        let n = families.len();
+        families.sort_unstable();
+        families.dedup();
+        assert_eq!(n, families.len(), "duplicate TYPE families");
+        // Every TYPE has a HELP and every family appears in both.
+        let helps = text
+            .lines()
+            .filter(|l| l.starts_with("# HELP "))
+            .count();
+        assert_eq!(helps, n);
+    }
+}

@@ -1,0 +1,571 @@
+//! The telemetry plane (DESIGN.md §11): a non-blocking sink fed from
+//! the controller tick path, the streaming detector, the policy layer
+//! and the reactor/fleet, backed by a bounded MPSC queue that
+//! drops-and-counts on overflow — telemetry can *never* stall a
+//! controller tick or the poll(2) reactor.
+//!
+//! Three consumers sit behind the queue, all on one consumer thread:
+//! the metrics registry ([`metrics`], Prometheus text over the v1
+//! `metrics` request), per-session JSONL journals ([`journal`],
+//! `--journal-dir`), and live `subscribe` streams (the reactor
+//! registers a session tap and forwards events to its connection —
+//! subscribe is just another sink consumer, not a reactor special
+//! case). Decision-makers read the windowed primitives in [`window`]
+//! (ninelives P3.01) instead of raw counts.
+//!
+//! Emission rules, enforced by construction:
+//! - hot paths call [`Metrics`] atomics directly (no queue, no locks);
+//! - schema'd events go through [`Telemetry::emit`] → `try_send`; a
+//!   full queue increments `gpoeo_telemetry_events_dropped_total` and
+//!   returns immediately;
+//! - the consumer thread owns all I/O (journal writes, subscriber
+//!   forwarding); its failures degrade to drop-and-count.
+
+pub mod journal;
+pub mod metrics;
+pub mod window;
+
+pub use journal::{journal_file, read_journal, JournalWriter};
+pub use metrics::{Counter, Gauge, Hist, Metrics};
+pub use window::{Ewma, WindowedRate};
+
+use crate::util::json::Json;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{sync_channel, Receiver, Sender, SyncSender};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// One schema'd journal/stream event. The JSONL journal schema is the
+/// `to_json` encoding of these variants, keyed by `"event"`; `session`
+/// is the fleet session id everywhere.
+#[derive(Debug, Clone, PartialEq)]
+pub enum TelemetryEvent {
+    /// Session registered on a fleet worker.
+    Begin {
+        session: u64,
+        app: String,
+        policy: String,
+        target_iters: u64,
+    },
+    /// Progress snapshot, emitted once per driven slice (not per
+    /// controller tick — cadence-limited at the source).
+    Tick {
+        session: u64,
+        iterations: u64,
+        time_s: f64,
+        energy_j: f64,
+        sm_gear: usize,
+        mem_gear: usize,
+        done: bool,
+    },
+    /// Period detection concluded (or re-concluded).
+    Detect {
+        session: u64,
+        period_s: f64,
+        aperiodic: bool,
+        round: u64,
+    },
+    /// A policy applied new gears.
+    GearSwitch {
+        session: u64,
+        policy: String,
+        sm_gear: usize,
+        mem_gear: usize,
+        time_s: f64,
+    },
+    /// Session left the fleet (completed or aborted).
+    End {
+        session: u64,
+        iterations: u64,
+        time_s: f64,
+        energy_j: f64,
+        done: bool,
+    },
+}
+
+impl TelemetryEvent {
+    /// Fleet session id the event belongs to.
+    pub fn session(&self) -> u64 {
+        match self {
+            TelemetryEvent::Begin { session, .. }
+            | TelemetryEvent::Tick { session, .. }
+            | TelemetryEvent::Detect { session, .. }
+            | TelemetryEvent::GearSwitch { session, .. }
+            | TelemetryEvent::End { session, .. } => *session,
+        }
+    }
+
+    pub fn kind(&self) -> &'static str {
+        match self {
+            TelemetryEvent::Begin { .. } => "begin",
+            TelemetryEvent::Tick { .. } => "tick",
+            TelemetryEvent::Detect { .. } => "detect",
+            TelemetryEvent::GearSwitch { .. } => "gear_switch",
+            TelemetryEvent::End { .. } => "end",
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        match self {
+            TelemetryEvent::Begin {
+                session,
+                app,
+                policy,
+                target_iters,
+            } => Json::obj(vec![
+                ("event", Json::Str("begin".into())),
+                ("session", Json::Num(*session as f64)),
+                ("app", Json::Str(app.clone())),
+                ("policy", Json::Str(policy.clone())),
+                ("target_iters", Json::Num(*target_iters as f64)),
+            ]),
+            TelemetryEvent::Tick {
+                session,
+                iterations,
+                time_s,
+                energy_j,
+                sm_gear,
+                mem_gear,
+                done,
+            } => Json::obj(vec![
+                ("event", Json::Str("tick".into())),
+                ("session", Json::Num(*session as f64)),
+                ("iterations", Json::Num(*iterations as f64)),
+                ("time_s", Json::Num(*time_s)),
+                ("energy_j", Json::Num(*energy_j)),
+                ("sm_gear", Json::Num(*sm_gear as f64)),
+                ("mem_gear", Json::Num(*mem_gear as f64)),
+                ("done", Json::Bool(*done)),
+            ]),
+            TelemetryEvent::Detect {
+                session,
+                period_s,
+                aperiodic,
+                round,
+            } => Json::obj(vec![
+                ("event", Json::Str("detect".into())),
+                ("session", Json::Num(*session as f64)),
+                ("period_s", Json::Num(*period_s)),
+                ("aperiodic", Json::Bool(*aperiodic)),
+                ("round", Json::Num(*round as f64)),
+            ]),
+            TelemetryEvent::GearSwitch {
+                session,
+                policy,
+                sm_gear,
+                mem_gear,
+                time_s,
+            } => Json::obj(vec![
+                ("event", Json::Str("gear_switch".into())),
+                ("session", Json::Num(*session as f64)),
+                ("policy", Json::Str(policy.clone())),
+                ("sm_gear", Json::Num(*sm_gear as f64)),
+                ("mem_gear", Json::Num(*mem_gear as f64)),
+                ("time_s", Json::Num(*time_s)),
+            ]),
+            TelemetryEvent::End {
+                session,
+                iterations,
+                time_s,
+                energy_j,
+                done,
+            } => Json::obj(vec![
+                ("event", Json::Str("end".into())),
+                ("session", Json::Num(*session as f64)),
+                ("iterations", Json::Num(*iterations as f64)),
+                ("time_s", Json::Num(*time_s)),
+                ("energy_j", Json::Num(*energy_j)),
+                ("done", Json::Bool(*done)),
+            ]),
+        }
+    }
+
+    /// Strict decode — the journal-replay validator. Unknown kinds and
+    /// missing fields are errors.
+    pub fn from_json(j: &Json) -> anyhow::Result<TelemetryEvent> {
+        let kind = j.req_str("event")?;
+        match kind {
+            "begin" => Ok(TelemetryEvent::Begin {
+                session: j.req_u64("session")?,
+                app: j.req_str("app")?.to_string(),
+                policy: j.req_str("policy")?.to_string(),
+                target_iters: j.req_u64("target_iters")?,
+            }),
+            "tick" => Ok(TelemetryEvent::Tick {
+                session: j.req_u64("session")?,
+                iterations: j.req_u64("iterations")?,
+                time_s: j.req_f64("time_s")?,
+                energy_j: j.req_f64("energy_j")?,
+                sm_gear: j.req_u64("sm_gear")? as usize,
+                mem_gear: j.req_u64("mem_gear")? as usize,
+                done: j.req_bool("done")?,
+            }),
+            "detect" => Ok(TelemetryEvent::Detect {
+                session: j.req_u64("session")?,
+                period_s: j.req_f64("period_s")?,
+                aperiodic: j.req_bool("aperiodic")?,
+                round: j.req_u64("round")?,
+            }),
+            "gear_switch" => Ok(TelemetryEvent::GearSwitch {
+                session: j.req_u64("session")?,
+                policy: j.req_str("policy")?.to_string(),
+                sm_gear: j.req_u64("sm_gear")? as usize,
+                mem_gear: j.req_u64("mem_gear")? as usize,
+                time_s: j.req_f64("time_s")?,
+            }),
+            "end" => Ok(TelemetryEvent::End {
+                session: j.req_u64("session")?,
+                iterations: j.req_u64("iterations")?,
+                time_s: j.req_f64("time_s")?,
+                energy_j: j.req_f64("energy_j")?,
+                done: j.req_bool("done")?,
+            }),
+            other => anyhow::bail!(
+                "unknown journal event kind '{other}' (begin tick detect gear_switch end)"
+            ),
+        }
+    }
+}
+
+/// Where producers hand events off. Implementations must be
+/// non-blocking: an `emit` that can stall would put telemetry back on
+/// the control path, which is the one thing this plane exists to avoid.
+pub trait TelemetrySink: Send + Sync {
+    fn emit(&self, ev: TelemetryEvent);
+}
+
+/// Discards everything. The sink behind [`Telemetry::disabled`], and
+/// the reason standalone `run_sim` paths pay nothing.
+pub struct NullSink;
+
+impl TelemetrySink for NullSink {
+    fn emit(&self, _ev: TelemetryEvent) {}
+}
+
+/// The production sink: `try_send` into a bounded queue. A full queue
+/// (stalled or slow consumer) drops the event and increments the exact
+/// `gpoeo_telemetry_events_dropped_total` counter — the producer
+/// returns immediately either way.
+pub struct QueueSink {
+    tx: SyncSender<TelemetryEvent>,
+    metrics: Arc<Metrics>,
+}
+
+impl QueueSink {
+    /// A sink plus the receiver its consumer drains. Exposed (rather
+    /// than buried in [`Telemetry`]) so overflow-semantics tests can
+    /// hold the receiver without draining it.
+    pub fn pair(capacity: usize, metrics: Arc<Metrics>) -> (QueueSink, Receiver<TelemetryEvent>) {
+        let (tx, rx) = sync_channel(capacity.max(1));
+        (QueueSink { tx, metrics }, rx)
+    }
+}
+
+impl TelemetrySink for QueueSink {
+    fn emit(&self, ev: TelemetryEvent) {
+        match self.tx.try_send(ev) {
+            Ok(()) => self.metrics.inc(Counter::EventsEmitted),
+            Err(_) => self.metrics.inc(Counter::EventsDropped),
+        }
+    }
+}
+
+/// One registered `subscribe` tap: events for `session` are forwarded
+/// as `(tag, event)` and `notify` is invoked so a sleeping consumer
+/// (the poll(2) reactor) wakes up.
+struct SubEntry {
+    id: u64,
+    session: u64,
+    tag: u64,
+    tx: Sender<(u64, TelemetryEvent)>,
+    notify: Box<dyn Fn() + Send>,
+}
+
+type Hook = Box<dyn Fn(&TelemetryEvent) + Send>;
+
+/// Telemetry plane construction knobs.
+#[derive(Debug, Clone, Default)]
+pub struct TelemetryCfg {
+    /// Bounded queue capacity; 0 means the default (1024).
+    pub queue_capacity: usize,
+    /// Write per-session JSONL journals under this directory.
+    pub journal_dir: Option<PathBuf>,
+}
+
+const DEFAULT_QUEUE_CAPACITY: usize = 1024;
+
+/// The assembled plane: metrics registry + queue sink + consumer
+/// thread (journal writer and subscriber hub). Share it with
+/// `Arc<Telemetry>`; every handle emits into the same queue.
+pub struct Telemetry {
+    metrics: Arc<Metrics>,
+    sink: Arc<dyn TelemetrySink>,
+    enabled: bool,
+    subs: Arc<Mutex<Vec<SubEntry>>>,
+    next_sub: AtomicU64,
+}
+
+impl Telemetry {
+    pub fn new(cfg: TelemetryCfg) -> Telemetry {
+        Telemetry::build(cfg, None)
+    }
+
+    /// Like [`Telemetry::new`] with a per-event hook that runs on the
+    /// consumer thread *before* any processing — tests stall it to
+    /// prove producers never block.
+    pub fn with_hook(
+        cfg: TelemetryCfg,
+        hook: impl Fn(&TelemetryEvent) + Send + 'static,
+    ) -> Telemetry {
+        Telemetry::build(cfg, Some(Box::new(hook)))
+    }
+
+    /// A plane with no queue, no consumer and no journal — `emit` is a
+    /// no-op and instrumented code skips its measurements (see
+    /// [`Telemetry::enabled`]). Used by standalone runs and the
+    /// api-bench "sink detached" control arm.
+    pub fn disabled() -> Telemetry {
+        Telemetry {
+            metrics: Arc::new(Metrics::new()),
+            sink: Arc::new(NullSink),
+            enabled: false,
+            subs: Arc::new(Mutex::new(Vec::new())),
+            next_sub: AtomicU64::new(1),
+        }
+    }
+
+    fn build(cfg: TelemetryCfg, hook: Option<Hook>) -> Telemetry {
+        let capacity = if cfg.queue_capacity == 0 {
+            DEFAULT_QUEUE_CAPACITY
+        } else {
+            cfg.queue_capacity
+        };
+        let metrics = Arc::new(Metrics::new());
+        let subs: Arc<Mutex<Vec<SubEntry>>> = Arc::new(Mutex::new(Vec::new()));
+        let (sink, rx) = QueueSink::pair(capacity, metrics.clone());
+        let journal = cfg
+            .journal_dir
+            .as_deref()
+            .map(|d| JournalWriter::new(d, metrics.clone()));
+        {
+            let metrics = metrics.clone();
+            let subs = subs.clone();
+            std::thread::Builder::new()
+                .name("telemetry-consumer".into())
+                .spawn(move || consumer_loop(rx, metrics, subs, journal, hook))
+                .expect("failed to spawn telemetry consumer");
+        }
+        Telemetry {
+            metrics,
+            sink: Arc::new(sink),
+            enabled: true,
+            subs,
+            next_sub: AtomicU64::new(1),
+        }
+    }
+
+    /// False for [`Telemetry::disabled`]: instrumented hot paths use
+    /// this to skip even their clock reads when nobody is listening.
+    pub fn enabled(&self) -> bool {
+        self.enabled
+    }
+
+    pub fn metrics(&self) -> &Arc<Metrics> {
+        &self.metrics
+    }
+
+    /// Non-blocking event emission (drop-and-count on overflow).
+    pub fn emit(&self, ev: TelemetryEvent) {
+        self.sink.emit(ev);
+    }
+
+    /// Register a tap on `session`: matching events arrive on `tx` as
+    /// `(tag, event)` and `notify` fires after each forward. Returns
+    /// the tap id for [`Telemetry::unsubscribe`].
+    pub fn subscribe_session(
+        &self,
+        session: u64,
+        tag: u64,
+        tx: Sender<(u64, TelemetryEvent)>,
+        notify: Box<dyn Fn() + Send>,
+    ) -> u64 {
+        let id = self.next_sub.fetch_add(1, Ordering::SeqCst);
+        self.subs.lock().expect("subs lock").push(SubEntry {
+            id,
+            session,
+            tag,
+            tx,
+            notify,
+        });
+        id
+    }
+
+    /// Remove a tap. The consumer forwards while holding the same
+    /// lock, so once this returns no further events can arrive on the
+    /// tap's channel — callers drain it afterwards for a clean close.
+    pub fn unsubscribe(&self, id: u64) {
+        self.subs.lock().expect("subs lock").retain(|s| s.id != id);
+    }
+
+    /// Best-effort barrier: wait (up to `timeout`) until the consumer
+    /// has processed everything enqueued before the call. Returns false
+    /// on timeout. Events *dropped* at enqueue time are not waited for
+    /// — they are gone by design.
+    pub fn flush(&self, timeout: Duration) -> bool {
+        if !self.enabled {
+            return true;
+        }
+        let target = self.metrics.counter(Counter::EventsEmitted);
+        let t0 = Instant::now();
+        while self.metrics.counter(Counter::EventsConsumed) < target {
+            if t0.elapsed() > timeout {
+                return false;
+            }
+            std::thread::sleep(Duration::from_micros(200));
+        }
+        true
+    }
+}
+
+fn consumer_loop(
+    rx: Receiver<TelemetryEvent>,
+    metrics: Arc<Metrics>,
+    subs: Arc<Mutex<Vec<SubEntry>>>,
+    mut journal: Option<JournalWriter>,
+    hook: Option<Hook>,
+) {
+    // Exits when every QueueSink handle (Telemetry + fleet workers) is
+    // gone and the channel disconnects.
+    for ev in rx {
+        if let Some(h) = &hook {
+            h(&ev);
+        }
+        if let Some(j) = journal.as_mut() {
+            j.write(&ev);
+        }
+        {
+            let subs = subs.lock().expect("subs lock");
+            for s in subs.iter().filter(|s| s.session == ev.session()) {
+                if s.tx.send((s.tag, ev.clone())).is_ok() {
+                    (s.notify)();
+                }
+            }
+        }
+        metrics.inc(Counter::EventsConsumed);
+    }
+    if let Some(j) = journal.as_mut() {
+        j.close_all();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc::channel;
+
+    fn tick(session: u64, iterations: u64) -> TelemetryEvent {
+        TelemetryEvent::Tick {
+            session,
+            iterations,
+            time_s: iterations as f64,
+            energy_j: 10.0 * iterations as f64,
+            sm_gear: 2,
+            mem_gear: 1,
+            done: false,
+        }
+    }
+
+    #[test]
+    fn events_roundtrip_through_json() {
+        let evs = vec![
+            TelemetryEvent::Begin {
+                session: 1,
+                app: "AI_TS".into(),
+                policy: "gpoeo".into(),
+                target_iters: 300,
+            },
+            tick(1, 5),
+            TelemetryEvent::Detect {
+                session: 1,
+                period_s: 0.93,
+                aperiodic: false,
+                round: 3,
+            },
+            TelemetryEvent::GearSwitch {
+                session: 1,
+                policy: "gpoeo".into(),
+                sm_gear: 5,
+                mem_gear: 1,
+                time_s: 12.5,
+            },
+            TelemetryEvent::End {
+                session: 1,
+                iterations: 300,
+                time_s: 99.0,
+                energy_j: 1234.5,
+                done: true,
+            },
+        ];
+        for ev in evs {
+            let j = Json::parse(&ev.to_json().to_string()).unwrap();
+            assert_eq!(TelemetryEvent::from_json(&j).unwrap(), ev);
+        }
+        assert!(TelemetryEvent::from_json(&Json::parse("{\"event\":\"warp\"}").unwrap()).is_err());
+    }
+
+    #[test]
+    fn overflow_drops_and_counts_exactly_without_blocking() {
+        // Nobody drains the receiver: capacity C fills, the next K
+        // emits must all return (non-blocking) and count exactly K.
+        let m = Arc::new(Metrics::new());
+        let (sink, _rx) = QueueSink::pair(8, m.clone());
+        for i in 0..13 {
+            sink.emit(tick(1, i));
+        }
+        assert_eq!(m.counter(Counter::EventsEmitted), 8);
+        assert_eq!(m.counter(Counter::EventsDropped), 5, "exact drop count");
+    }
+
+    #[test]
+    fn subscribers_receive_only_their_session_until_unsubscribed() {
+        let tel = Telemetry::new(TelemetryCfg::default());
+        let (tx, rx) = channel();
+        let woken = Arc::new(AtomicU64::new(0));
+        let w = woken.clone();
+        let id = tel.subscribe_session(
+            5,
+            42,
+            tx,
+            Box::new(move || {
+                w.fetch_add(1, Ordering::SeqCst);
+            }),
+        );
+
+        tel.emit(tick(5, 1));
+        tel.emit(tick(6, 1)); // other session: must not be forwarded
+        tel.emit(tick(5, 2));
+        assert!(tel.flush(Duration::from_secs(5)), "consumer must drain");
+
+        let got: Vec<(u64, TelemetryEvent)> = rx.try_iter().collect();
+        assert_eq!(got.len(), 2);
+        assert!(got.iter().all(|(tag, ev)| *tag == 42 && ev.session() == 5));
+        assert_eq!(got[0].1, tick(5, 1), "forwarding preserves order");
+        assert_eq!(woken.load(Ordering::SeqCst), 2);
+
+        tel.unsubscribe(id);
+        tel.emit(tick(5, 3));
+        assert!(tel.flush(Duration::from_secs(5)));
+        assert_eq!(rx.try_iter().count(), 0, "no forwards after unsubscribe");
+    }
+
+    #[test]
+    fn disabled_plane_is_inert() {
+        let tel = Telemetry::disabled();
+        assert!(!tel.enabled());
+        tel.emit(tick(1, 1));
+        assert!(tel.flush(Duration::from_millis(1)));
+        assert_eq!(tel.metrics().counter(Counter::EventsEmitted), 0);
+        assert_eq!(tel.metrics().counter(Counter::EventsDropped), 0);
+    }
+}

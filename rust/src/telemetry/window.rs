@@ -1,0 +1,137 @@
+//! Windowed rate / EWMA primitives (ninelives P3.01, DESIGN.md §11).
+//!
+//! Consumers that make *decisions* from telemetry — the AIMD pool scaler
+//! today, the `BudgetArbiter` on the roadmap — must not react to raw
+//! instantaneous counts: a single poll-loop iteration that happens to see
+//! ten queued ops is noise, ten queued ops sustained over a window is
+//! load. These two primitives are the smoothing layer. Time is injected
+//! (seconds on any monotonically increasing clock) so unit tests replay
+//! exact timelines instead of sleeping, exactly like
+//! [`crate::coordinator::AimdState`].
+
+use std::collections::VecDeque;
+
+/// Exponentially weighted moving average: `v ← α·x + (1-α)·v`.
+///
+/// The first observation seeds the average directly (no zero-bias
+/// warm-up), so a freshly started reactor does not spend its first
+/// seconds believing the queue is empty.
+#[derive(Debug, Clone)]
+pub struct Ewma {
+    alpha: f64,
+    value: Option<f64>,
+}
+
+impl Ewma {
+    /// `alpha` in (0, 1]: higher reacts faster, lower smooths harder.
+    pub fn new(alpha: f64) -> Ewma {
+        Ewma {
+            alpha: alpha.clamp(1e-6, 1.0),
+            value: None,
+        }
+    }
+
+    /// Feed one observation; returns the updated average.
+    pub fn observe(&mut self, x: f64) -> f64 {
+        let v = match self.value {
+            None => x,
+            Some(v) => self.alpha * x + (1.0 - self.alpha) * v,
+        };
+        self.value = Some(v);
+        v
+    }
+
+    /// Current average (0.0 before any observation).
+    pub fn value(&self) -> f64 {
+        self.value.unwrap_or(0.0)
+    }
+}
+
+/// Sliding-window event rate: `record` timestamps, `rate` counts the
+/// events inside the trailing window and divides by its length.
+///
+/// Bounded: timestamps older than the window are discarded on every
+/// call, so memory tracks the rate × window product, not total history.
+#[derive(Debug, Clone)]
+pub struct WindowedRate {
+    window_s: f64,
+    events: VecDeque<f64>,
+}
+
+impl WindowedRate {
+    pub fn new(window_s: f64) -> WindowedRate {
+        WindowedRate {
+            window_s: window_s.max(1e-9),
+            events: VecDeque::new(),
+        }
+    }
+
+    fn evict(&mut self, now_s: f64) {
+        while self
+            .events
+            .front()
+            .map(|&t| now_s - t > self.window_s)
+            .unwrap_or(false)
+        {
+            self.events.pop_front();
+        }
+    }
+
+    /// Record one event at `now_s`.
+    pub fn record(&mut self, now_s: f64) {
+        self.evict(now_s);
+        self.events.push_back(now_s);
+    }
+
+    /// Events per second over the trailing window.
+    pub fn rate(&mut self, now_s: f64) -> f64 {
+        self.evict(now_s);
+        self.events.len() as f64 / self.window_s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ewma_seeds_on_first_observation_then_smooths() {
+        let mut e = Ewma::new(0.5);
+        assert_eq!(e.value(), 0.0);
+        assert_eq!(e.observe(8.0), 8.0, "first sample seeds directly");
+        assert_eq!(e.observe(0.0), 4.0);
+        assert_eq!(e.observe(0.0), 2.0);
+        assert_eq!(e.value(), 2.0);
+    }
+
+    #[test]
+    fn ewma_alpha_one_tracks_the_input() {
+        let mut e = Ewma::new(1.0);
+        for x in [3.0, 9.0, 1.0] {
+            assert_eq!(e.observe(x), x);
+        }
+    }
+
+    #[test]
+    fn windowed_rate_counts_only_the_trailing_window() {
+        let mut r = WindowedRate::new(10.0);
+        for t in 0..5 {
+            r.record(t as f64);
+        }
+        assert_eq!(r.rate(4.0), 0.5, "5 events over a 10s window");
+        // 11s later everything has aged out.
+        assert_eq!(r.rate(15.1), 0.0);
+        r.record(16.0);
+        assert_eq!(r.rate(16.0), 0.1);
+    }
+
+    #[test]
+    fn windowed_rate_is_bounded_by_eviction() {
+        let mut r = WindowedRate::new(1.0);
+        for i in 0..10_000 {
+            r.record(i as f64 * 0.5);
+        }
+        // Only events within the trailing 1s window are retained.
+        assert!(r.events.len() <= 3, "{} retained", r.events.len());
+    }
+}

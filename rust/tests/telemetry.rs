@@ -1,0 +1,319 @@
+//! Telemetry plane end-to-end (DESIGN.md §11): a stalled consumer never
+//! blocks fleet work, overflow drops are counted exactly, the daemon's
+//! `metrics` request returns valid Prometheus exposition covering all
+//! three instrumented layers, per-session journals replay after a run,
+//! and a broken journal directory degrades without touching sessions.
+//! Artifact-free throughout (model-free policies only).
+
+use gpoeo::api::GpoeoClient;
+use gpoeo::coordinator::daemon::{Daemon, DaemonCfg};
+use gpoeo::coordinator::Fleet;
+use gpoeo::policy::PolicySpec;
+use gpoeo::sim::{find_app, Spec};
+use gpoeo::telemetry::{read_journal, Counter, Telemetry, TelemetryCfg, TelemetryEvent};
+use std::path::PathBuf;
+use std::sync::mpsc::channel;
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Duration;
+
+/// A consumer-thread gate: the telemetry hook blocks on it until
+/// `open()` — simulating a wedged/slow consumer — while producers must
+/// keep running.
+struct Gate(Mutex<bool>, Condvar);
+
+impl Gate {
+    fn new() -> Arc<Gate> {
+        Arc::new(Gate(Mutex::new(false), Condvar::new()))
+    }
+
+    fn wait(&self) {
+        let mut open = self.0.lock().unwrap();
+        while !*open {
+            open = self.1.wait(open).unwrap();
+        }
+    }
+
+    fn open(&self) {
+        *self.0.lock().unwrap() = true;
+        self.1.notify_all();
+    }
+}
+
+fn temp_dir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("gpoeo-teltest-{}-{tag}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+fn spawn_daemon(
+    tag: &str,
+    cfg: DaemonCfg,
+) -> (PathBuf, std::thread::JoinHandle<anyhow::Result<()>>) {
+    let spec = Arc::new(Spec::load_default().unwrap());
+    let daemon = Daemon::with_cfg(spec, 1, cfg);
+    let sock = temp_dir(tag).join("d.sock");
+    let sock2 = sock.clone();
+    let join = std::thread::spawn(move || daemon.serve(&sock2));
+    for _ in 0..200 {
+        if sock.exists() {
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    (sock, join)
+}
+
+#[test]
+fn stalled_consumer_never_blocks_a_fleet_session() {
+    // The consumer thread wedges on its very first event; a session on
+    // a fleet sharing that plane must still run to completion — every
+    // emit is try_send, never a wait.
+    let gate = Gate::new();
+    let g = gate.clone();
+    let tel = Arc::new(Telemetry::with_hook(
+        TelemetryCfg {
+            queue_capacity: 2,
+            journal_dir: None,
+        },
+        move |_| g.wait(),
+    ));
+
+    let spec = Arc::new(Spec::load_default().unwrap());
+    let fleet = Fleet::with_telemetry(spec.clone(), 1, None, tel.clone());
+    let app = find_app(&spec, "AI_TS").unwrap();
+    let h = fleet
+        .begin(app, PolicySpec::registered("powercap"), 60)
+        .unwrap();
+    let st = h.end().unwrap();
+    assert!(st.done && st.iterations >= 60, "session must complete");
+
+    // With capacity 2 and a wedged consumer, the begin/tick/end stream
+    // overflowed — and overflow shows up as counted drops, not stalls.
+    let m = tel.metrics();
+    assert!(
+        m.counter(Counter::EventsDropped) > 0,
+        "a wedged consumer must surface as dropped events"
+    );
+    gate.open();
+    assert!(tel.flush(Duration::from_secs(5)), "consumer drains after the gate opens");
+}
+
+#[test]
+fn overflow_drop_counter_is_exact_under_a_wedged_consumer() {
+    // Handshake for determinism: the first event enters the hook (and
+    // blocks there), leaving the queue empty. Then exactly `capacity`
+    // emits fit and every emit beyond that must drop-and-count, 1:1.
+    let gate = Gate::new();
+    let g = gate.clone();
+    let (entered_tx, entered_rx) = channel();
+    let capacity = 4usize;
+    let tel = Telemetry::with_hook(
+        TelemetryCfg {
+            queue_capacity: capacity,
+            journal_dir: None,
+        },
+        move |_| {
+            let _ = entered_tx.send(());
+            g.wait();
+        },
+    );
+
+    let tick = |i: u64| TelemetryEvent::Tick {
+        session: 1,
+        iterations: i,
+        time_s: i as f64,
+        energy_j: 1.0,
+        sm_gear: 2,
+        mem_gear: 1,
+        done: false,
+    };
+    tel.emit(tick(0));
+    entered_rx
+        .recv_timeout(Duration::from_secs(5))
+        .expect("consumer must pick up the first event");
+    for i in 0..capacity as u64 {
+        tel.emit(tick(1 + i));
+    }
+    for i in 0..3u64 {
+        tel.emit(tick(100 + i));
+    }
+    let m = tel.metrics();
+    assert_eq!(m.counter(Counter::EventsDropped), 3, "exact drop count");
+    assert_eq!(m.counter(Counter::EventsEmitted), 1 + capacity as u64);
+
+    gate.open();
+    assert!(tel.flush(Duration::from_secs(5)));
+    assert_eq!(m.counter(Counter::EventsConsumed), 1 + capacity as u64);
+}
+
+/// Value of a bare (unlabeled) metric in an exposition text.
+fn metric_value(text: &str, name: &str) -> f64 {
+    text.lines()
+        .find_map(|l| l.strip_prefix(name).and_then(|r| r.strip_prefix(' ')))
+        .unwrap_or_else(|| panic!("metric {name} missing from exposition"))
+        .parse()
+        .unwrap()
+}
+
+#[test]
+fn daemon_metrics_scrape_is_valid_prometheus_across_layers() {
+    let (sock, _join) = spawn_daemon("metrics", DaemonCfg::fixed(1));
+    let mut c = GpoeoClient::connect(&sock).unwrap();
+
+    // One bandit and one powercap session: policy-layer instrumentation
+    // from two different policies, fleet-layer ticks, reactor-layer
+    // request latencies.
+    for policy in ["bandit", "powercap"] {
+        let id = c
+            .begin("AI_TS", Some(60), None, Some(PolicySpec::registered(policy)))
+            .unwrap();
+        assert!(c.end(&id).unwrap().done);
+    }
+    let text = c.metrics().unwrap();
+
+    // Reactor/fleet layer.
+    assert!(metric_value(&text, "gpoeo_sessions_begun_total") >= 2.0);
+    assert!(metric_value(&text, "gpoeo_sessions_ended_total") >= 2.0);
+    assert!(metric_value(&text, "gpoeo_tick_seconds_count") > 0.0);
+    assert!(metric_value(&text, "gpoeo_request_seconds_count") > 0.0);
+    assert!(metric_value(&text, "gpoeo_workers") >= 1.0);
+    // Policy layer: the bandit explored at least one non-default arm.
+    assert!(
+        text.contains("gpoeo_gear_switches_total{policy=\"bandit\"}"),
+        "per-policy gear-switch counter missing:\n{text}"
+    );
+    // Controller layer: families are always exposed, even when the GBT
+    // policies (which need AOT artifacts) never ran.
+    assert!(text.contains("# TYPE gpoeo_detector_evaluations_total counter"));
+    assert!(text.contains("# TYPE gpoeo_predict_seconds histogram"));
+
+    // Exposition validity: every family has exactly one HELP and one
+    // TYPE, and no family is emitted twice (the `sort | uniq -d` check
+    // CI runs against the live daemon).
+    let mut families: Vec<&str> = text
+        .lines()
+        .filter_map(|l| l.strip_prefix("# TYPE ").and_then(|r| r.split(' ').next()))
+        .collect();
+    let n = families.len();
+    families.sort_unstable();
+    families.dedup();
+    assert_eq!(n, families.len(), "duplicate metric families");
+    let helps = text.lines().filter(|l| l.starts_with("# HELP ")).count();
+    assert_eq!(helps, n, "every family carries HELP + TYPE");
+
+    c.shutdown().unwrap();
+}
+
+#[test]
+fn journals_are_written_per_session_and_replay_after_shutdown() {
+    let dir = temp_dir("journal");
+    let mut cfg = DaemonCfg::fixed(1);
+    cfg.journal_dir = Some(dir.clone());
+    let (sock, join) = spawn_daemon("journal-daemon", cfg);
+
+    let mut c = GpoeoClient::connect(&sock).unwrap();
+    let id = c
+        .begin("AI_TS", Some(30), None, Some(PolicySpec::registered("powercap")))
+        .unwrap();
+    assert!(c.end(&id).unwrap().done);
+    // Graceful shutdown flushes the consumer before serve() returns, so
+    // after join the journal is complete on disk.
+    c.shutdown().unwrap();
+    join.join().unwrap().unwrap();
+
+    let files: Vec<PathBuf> = std::fs::read_dir(&dir)
+        .unwrap()
+        .map(|e| e.unwrap().path())
+        .filter(|p| p.extension().is_some_and(|x| x == "jsonl"))
+        .collect();
+    assert_eq!(files.len(), 1, "one journal per session: {files:?}");
+
+    // Every line parses strictly, and the event sequence brackets the
+    // session: begin(app, policy, target) … tick+ … end(done).
+    let evs = read_journal(&files[0]).unwrap();
+    match &evs[0] {
+        TelemetryEvent::Begin {
+            app,
+            policy,
+            target_iters,
+            ..
+        } => {
+            assert_eq!(app, "AI_TS");
+            assert_eq!(policy, "powercap");
+            assert_eq!(*target_iters, 30);
+        }
+        other => panic!("journal must open with begin, got {other:?}"),
+    }
+    match evs.last().unwrap() {
+        TelemetryEvent::End {
+            iterations, done, ..
+        } => {
+            assert!(*done && *iterations >= 30);
+        }
+        other => panic!("journal must close with end, got {other:?}"),
+    }
+    assert!(
+        evs.iter().any(|e| matches!(e, TelemetryEvent::Tick { .. })),
+        "progress ticks are journaled"
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn broken_journal_dir_degrades_without_touching_sessions() {
+    // The "journal directory" is a regular file: every journal line
+    // fails. Sessions must be unaffected and the failure must be
+    // visible as the journal-drop counter, not as an error.
+    let dir = temp_dir("badjournal");
+    let occupied = dir.join("not-a-dir");
+    std::fs::write(&occupied, b"occupied").unwrap();
+    let mut cfg = DaemonCfg::fixed(1);
+    cfg.journal_dir = Some(occupied);
+    let (sock, _join) = spawn_daemon("badjournal-daemon", cfg);
+
+    let mut c = GpoeoClient::connect(&sock).unwrap();
+    let id = c
+        .begin("AI_TS", Some(20), None, Some(PolicySpec::registered("powercap")))
+        .unwrap();
+    assert!(c.end(&id).unwrap().done, "session unaffected by journal failure");
+
+    // Journal writes happen on the consumer thread; poll the scrape
+    // until the drops land (bounded).
+    let mut dropped = 0.0;
+    for _ in 0..100 {
+        dropped = metric_value(&c.metrics().unwrap(), "gpoeo_journal_lines_dropped_total");
+        if dropped > 0.0 {
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(20));
+    }
+    assert!(dropped > 0.0, "journal failures must be counted");
+    c.shutdown().unwrap();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn detached_plane_still_answers_metrics_and_streams_subscribe() {
+    // telemetry: false — the reactor falls back to rendering subscribe
+    // events from drive replies, and `metrics` answers with the all-zero
+    // registry instead of erroring.
+    let mut cfg = DaemonCfg::fixed(1);
+    cfg.telemetry = false;
+    let (sock, _join) = spawn_daemon("detached", cfg);
+
+    let mut c = GpoeoClient::connect(&sock).unwrap();
+    let id = c
+        .begin("AI_TS", Some(40), None, Some(PolicySpec::registered("powercap")))
+        .unwrap();
+    let mut events = 0u64;
+    let fin = c.subscribe(&id, 10, 0, |_| events += 1).unwrap();
+    assert!(fin.done);
+    assert!(events > 0, "detached plane must not silence subscribe");
+    assert!(c.end(&id).unwrap().done);
+
+    let text = c.metrics().unwrap();
+    assert_eq!(metric_value(&text, "gpoeo_sessions_begun_total"), 0.0);
+    assert!(text.contains("# TYPE gpoeo_request_seconds histogram"));
+    c.shutdown().unwrap();
+}
