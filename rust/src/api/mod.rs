@@ -25,6 +25,7 @@ pub use client::{
 };
 pub use ctl::cli_ctl;
 pub use protocol::{
-    read_frame, result_parity_key, validate_session_name, AppInfo, Event, Frame, PolicyInfo,
-    Request, Response, ServerMsg, SessionReport, MAX_LINE_BYTES, MAX_REPLY_BYTES, PROTOCOL_VERSION,
+    negotiate_hello, read_frame, result_parity_key, validate_session_name, AppInfo, Event, Frame,
+    PolicyInfo, Request, Response, ServerMsg, SessionReport, MAX_LINE_BYTES, MAX_REPLY_BYTES,
+    PROTOCOL_VERSION,
 };

@@ -23,6 +23,23 @@ use std::io::BufRead;
 /// and the only place the constant is defined.
 pub const PROTOCOL_VERSION: u64 = 1;
 
+/// Negotiate a client hello against this server's protocol version.
+/// Returns the reply to send either way — `Ok` on acceptance, `Err`
+/// with the typed rejection — so transports (the reactor) never
+/// compare version numbers themselves (§9).
+pub fn negotiate_hello(version: u64, server: String) -> Result<Response, Response> {
+    if version == 0 || version > PROTOCOL_VERSION {
+        Err(Response::error(format!(
+            "unsupported protocol version {version} (this server speaks v{PROTOCOL_VERSION})"
+        )))
+    } else {
+        Ok(Response::Hello {
+            protocol: PROTOCOL_VERSION,
+            server,
+        })
+    }
+}
+
 /// Hard cap on one request line. Longer lines are drained and answered
 /// with a typed error instead of buffering without bound.
 pub const MAX_LINE_BYTES: usize = 64 * 1024;
@@ -389,6 +406,15 @@ impl Response {
             message: message.into(),
             kind: "rate_limited".to_string(),
         }
+    }
+
+    /// The answer for any request arriving before a successful hello.
+    /// Lives here (not in the reactor) so version numbers and wire
+    /// hints never leave the protocol layer (§9).
+    pub fn handshake_required() -> Response {
+        Response::error(format!(
+            "handshake required: send {{\"kind\":\"hello\",\"v\":{PROTOCOL_VERSION}}} first"
+        ))
     }
 
     pub fn to_json(&self) -> Json {

@@ -21,6 +21,7 @@ pub fn dispatch(args: &Args) -> anyhow::Result<()> {
         Some("experiment") => crate::experiments::cli_experiment(args),
         Some("daemon") => crate::coordinator::cli_daemon(args),
         Some("ctl") => crate::api::cli_ctl(args),
+        Some("lint") => crate::lint::cli_lint(args),
         Some(other) => anyhow::bail!("unknown subcommand '{other}'; see --help"),
         None => {
             print_help();
@@ -98,6 +99,18 @@ SUBCOMMANDS:
                                  metrics              Prometheus text
                                                       exposition scrape
                                  shutdown             stop the daemon
+  lint [--format text|json]    machine-check the DESIGN.md §12 contracts
+                               over this repo's own sources: §0 layer
+                               DAG + forbidden symbols (LB-*), panic-
+                               free hot paths (PF-*), non-blocking
+                               zones + lock discipline (NB-*), and
+                               simulator determinism (DT-*). Contracts
+                               live in rust/lint.toml; inline
+                               `gpoeo-lint: allow(RULE) reason` waives
+                               exactly one finding and is reported.
+                               (--rule ID single rule/family,
+                                --manifest PATH, --out PATH writes the
+                                report; exits non-zero on findings)
 
 COMMON OPTIONS:
   --artifacts DIR              AOT artifact directory (default: artifacts)

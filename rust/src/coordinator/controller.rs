@@ -21,6 +21,8 @@
 //!    power); on fluctuation beyond the threshold, reset to default
 //!    clocks and restart from step 1.
 
+#![warn(clippy::unwrap_used, clippy::expect_used)]
+
 use crate::device::Device;
 use crate::model::Predictor;
 use crate::search::{local_search, Objective, SearchResult};
@@ -132,6 +134,13 @@ pub struct Gpoeo {
     /// observation: never consulted by any control decision, so runs
     /// with and without it are bit-identical.
     tel: Option<(Arc<Telemetry>, u64)>,
+    /// Once-per-session guards for the overhead-mode clamp warning in
+    /// [`nearest_gear_index`]. Session-scoped on purpose: a session
+    /// that clamps on every optimization round logs a single line, and
+    /// `restart_sampling` (a new detection round within the same
+    /// session) must not rearm them.
+    clamp_warned_mem: bool,
+    clamp_warned_sm: bool,
 }
 
 impl Gpoeo {
@@ -158,6 +167,8 @@ impl Gpoeo {
             period_s: 0.0,
             aperiodic: false,
             tel: None,
+            clamp_warned_mem: false,
+            clamp_warned_sm: false,
         }
     }
 }
@@ -176,12 +187,14 @@ fn spectrum_for(predictor: &Predictor, smp: &[f64], ts: f64) -> (Vec<f64>, Vec<f
                 let x = i as f64 * ts2 / ts;
                 let j = (x.floor() as usize).min(smp.len() - 2);
                 let frac = x - j as f64;
+                // gpoeo-lint: allow(PF-INDEX) j <= smp.len()-2 by the min() above (smp.len() >= 64 here)
                 resampled.push((smp[j] * (1.0 - frac) + smp[j + 1] * frac) as f32);
             }
             if let Ok(ampls) = rt.periodogram_1024(&resampled) {
                 // Bin k of the output is spectral bin k+1; drop the
                 // Nyquist bin to match the native periodogram exactly.
                 let freqs: Vec<f64> = (1..n / 2).map(|k| k as f64 / (n as f64 * ts2)).collect();
+                // gpoeo-lint: allow(PF-INDEX) periodogram_1024 returns n/2 = 512 amplitudes; the slice takes 511
                 let ampls: Vec<f64> = ampls[..n / 2 - 1].iter().map(|&a| a as f64).collect();
                 return (freqs, ampls);
             }
@@ -196,12 +209,14 @@ fn spectrum_for(predictor: &Predictor, smp: &[f64], ts: f64) -> (Vec<f64>, Vec<f
 /// must degrade here, not panic mid-session; the clamp is logged once
 /// per search stage.
 fn nearest_gear_index(gears: &[usize], g: usize, warned: &mut bool, which: &str) -> usize {
+    // gpoeo-lint: allow(PF-ASSERT) load-time contract: Predictor::predict always yields a non-empty gear table; an empty one here is a build bug worth dying on, even mid-session
     assert!(!gears.is_empty(), "empty predicted gear table");
     if let Some(i) = gears.iter().position(|&x| x == g) {
         return i;
     }
     let mut best = 0usize;
     for (i, &x) in gears.iter().enumerate() {
+        // gpoeo-lint: allow(PF-INDEX) best is always a previously-visited enumerate index
         if x.abs_diff(g) < gears[best].abs_diff(g) {
             best = i;
         }
@@ -209,6 +224,7 @@ fn nearest_gear_index(gears: &[usize], g: usize, warned: &mut bool, which: &str)
     if !*warned {
         eprintln!(
             "gpoeo: {which} gear {g} outside the predicted table; using nearest gear {}",
+            // gpoeo-lint: allow(PF-INDEX) best indexes the non-empty table scanned above
             gears[best]
         );
         *warned = true;
@@ -322,7 +338,10 @@ impl Gpoeo {
                 probes: vec![],
             }
         } else if self.cfg.optimize_mem {
-            let mut warned = false;
+            // Seed from (and store back to) the session-scoped guard:
+            // the closure can't borrow the field while it captures
+            // `self`, so the round works on a copy.
+            let mut warned = self.clamp_warned_mem;
             let mut eval = |g: usize| -> f64 {
                 if self.cfg.actuate {
                     gpu.set_mem_gear(g);
@@ -333,10 +352,12 @@ impl Gpoeo {
                     let i = nearest_gear_index(&pred_mem.gears, g, &mut warned, "mem");
                     self.cfg
                         .objective
+                        // gpoeo-lint: allow(PF-INDEX) i is a position inside pred_mem.gears; the ratio vectors share its length by Predictor construction
                         .score(pred_mem.energy_ratio[i], pred_mem.time_ratio[i])
                 }
             };
             let r = local_search(g_mem_pred, 0, spec.gears.num_mem_gears() - 1, &mut eval);
+            self.clamp_warned_mem = warned;
             if self.cfg.actuate {
                 gpu.set_mem_gear(r.best_gear);
             }
@@ -362,7 +383,7 @@ impl Gpoeo {
                 probes: vec![],
             }
         } else if self.cfg.optimize_sm {
-            let mut warned = false;
+            let mut warned = self.clamp_warned_sm;
             let mut eval = |g: usize| -> f64 {
                 if self.cfg.actuate {
                     gpu.set_sm_gear(g);
@@ -372,6 +393,7 @@ impl Gpoeo {
                     let i = nearest_gear_index(&pred_sm.gears, g, &mut warned, "sm");
                     self.cfg
                         .objective
+                        // gpoeo-lint: allow(PF-INDEX) i is a position inside pred_sm.gears; the ratio vectors share its length by Predictor construction
                         .score(pred_sm.energy_ratio[i], pred_sm.time_ratio[i])
                 }
             };
@@ -381,6 +403,7 @@ impl Gpoeo {
                 spec.gears.sm_gear_max,
                 &mut eval,
             );
+            self.clamp_warned_sm = warned;
             if self.cfg.actuate {
                 gpu.set_sm_gear(r.best_gear);
             }
@@ -604,6 +627,7 @@ impl crate::coordinator::Policy for Gpoeo {
     }
 }
 
+#[allow(clippy::unwrap_used, clippy::expect_used)]
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -624,5 +648,39 @@ mod tests {
         // Between entries: nearest wins; exact ties keep the first.
         assert_eq!(nearest_gear_index(&gears, 73, &mut warned, "sm"), 2);
         assert_eq!(nearest_gear_index(&gears, 70, &mut warned, "sm"), 1);
+    }
+
+    #[test]
+    fn clamp_warning_is_once_per_session_and_survives_restart() {
+        use crate::model::NativeModels;
+        use crate::sim::{find_app, SimGpu, Spec};
+
+        let spec = Arc::new(Spec::load_default().unwrap());
+        let app = find_app(&spec, "AI_I2T").unwrap();
+        let mut gpu = SimGpu::new(spec, app);
+        let p = Arc::new(Predictor::Native(NativeModels::synthetic(7)));
+        let mut g = Gpoeo::new(GpoeoCfg::default(), p);
+        assert!(!g.clamp_warned_mem && !g.clamp_warned_sm);
+
+        // Round 1 clamps: the round-local copy comes back set and the
+        // round stores it on the session (the copy-in/copy-out pattern
+        // in measure_and_optimize).
+        let mut warned = g.clamp_warned_mem;
+        nearest_gear_index(&[40, 60, 80], 200, &mut warned, "mem");
+        g.clamp_warned_mem = warned;
+        assert!(g.clamp_warned_mem);
+
+        // Round 2 seeds from the session flag: it enters already-set,
+        // so nearest_gear_index stays silent for the session's rest.
+        let mut warned = g.clamp_warned_mem;
+        assert!(warned, "second round must inherit the warned state");
+        nearest_gear_index(&[40, 60, 80], 200, &mut warned, "mem");
+        assert!(warned);
+
+        // A workload swap re-detects (restart_sampling) but must NOT
+        // rearm the warning: it is per-session, not per-detection-round.
+        g.restart_sampling(&mut gpu);
+        assert!(g.clamp_warned_mem, "restart_sampling must not rearm");
+        assert!(!g.clamp_warned_sm, "sm flag is tracked independently");
     }
 }

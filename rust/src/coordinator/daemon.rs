@@ -41,6 +41,8 @@
 //! `accept()` is logged (rate-limited) and skipped, never fatal to the
 //! daemon.
 
+#![warn(clippy::unwrap_used, clippy::expect_used)]
+
 use crate::api::{AppInfo, SessionReport};
 use crate::coordinator::reactor::Reactor;
 use crate::coordinator::{default_iters, AimdCfg, Fleet, SessionHandle, SessionStatus};
@@ -160,7 +162,12 @@ impl SessionTable {
         };
         match name {
             Some(n) => {
-                let mut map = self.shard(&n).lock().expect("session shard poisoned");
+                // Shard (and entry) locks recover from poisoning
+                // throughout this table: every guard is statement-local
+                // and the maps stay structurally valid mid-panic, so
+                // inheriting the value beats cascading the panic into
+                // every later control-plane request.
+                let mut map = self.shard(&n).lock().unwrap_or_else(|e| e.into_inner());
                 if map.contains_key(&n) {
                     anyhow::bail!("session '{n}' already exists");
                 }
@@ -172,7 +179,7 @@ impl SessionTable {
                 let mut map = self
                     .shard(&candidate)
                     .lock()
-                    .expect("session shard poisoned");
+                    .unwrap_or_else(|e| e.into_inner());
                 if !map.contains_key(&candidate) {
                     map.insert(candidate.clone(), entry());
                     return Ok(candidate);
@@ -181,18 +188,23 @@ impl SessionTable {
         }
     }
 
-    /// Install the live handle into a reserved entry. The reservation
-    /// cannot have been claimed meanwhile: end/abort on an empty entry
-    /// answer "no longer active" without removing it.
-    pub(crate) fn fulfill(&self, id: &str, h: SessionHandle) {
-        let entry = self.get(id).expect("reserved session entry vanished");
-        *entry.handle.lock().expect("session entry poisoned") = Some(h);
+    /// Install the live handle into a reserved entry, returning that
+    /// entry — `None` if the reservation is gone. A reservation cannot
+    /// be *claimed* meanwhile (end/abort on an empty entry answer "no
+    /// longer active" without removing it), so `None` only happens if
+    /// the id was never reserved; callers surface that as an error
+    /// instead of panicking.
+    #[must_use]
+    pub(crate) fn fulfill(&self, id: &str, h: SessionHandle) -> Option<Arc<SessionEntry>> {
+        let entry = self.get(id)?;
+        *entry.handle.lock().unwrap_or_else(|e| e.into_inner()) = Some(h);
+        Some(entry)
     }
 
     pub(crate) fn get(&self, id: &str) -> Option<Arc<SessionEntry>> {
         self.shard(id)
             .lock()
-            .expect("session shard poisoned")
+            .unwrap_or_else(|e| e.into_inner())
             .get(id)
             .cloned()
     }
@@ -200,7 +212,7 @@ impl SessionTable {
     pub(crate) fn remove(&self, id: &str) -> Option<Arc<SessionEntry>> {
         self.shard(id)
             .lock()
-            .expect("session shard poisoned")
+            .unwrap_or_else(|e| e.into_inner())
             .remove(id)
     }
 
@@ -209,7 +221,7 @@ impl SessionTable {
     /// never evict a successor session that reused the name after the
     /// original entry was already gone.
     pub(crate) fn remove_if(&self, id: &str, entry: &Arc<SessionEntry>) {
-        let mut map = self.shard(id).lock().expect("session shard poisoned");
+        let mut map = self.shard(id).lock().unwrap_or_else(|e| e.into_inner());
         if map.get(id).is_some_and(|e| Arc::ptr_eq(e, entry)) {
             map.remove(id);
         }
@@ -219,7 +231,7 @@ impl SessionTable {
     pub(crate) fn len(&self) -> usize {
         self.shards
             .iter()
-            .map(|s| s.lock().expect("session shard poisoned").len())
+            .map(|s| s.lock().unwrap_or_else(|e| e.into_inner()).len())
             .sum()
     }
 }
@@ -433,7 +445,7 @@ pub(crate) fn with_session<T>(
     f: impl FnOnce(&SessionHandle) -> anyhow::Result<T>,
 ) -> anyhow::Result<T> {
     let entry = lookup(shared, id)?;
-    let guard = entry.handle.lock().expect("session entry poisoned");
+    let guard = entry.handle.lock().unwrap_or_else(|e| e.into_inner());
     match guard.as_ref() {
         Some(h) => f(h),
         None => anyhow::bail!("session '{id}' is no longer active"),
@@ -453,7 +465,7 @@ pub(crate) fn claim_session(
     let h = entry
         .handle
         .lock()
-        .expect("session entry poisoned")
+        .unwrap_or_else(|e| e.into_inner())
         .take()
         .ok_or_else(|| anyhow::anyhow!("session '{id}' is no longer active"))?;
     Ok((entry, h))
@@ -605,6 +617,7 @@ pub(crate) fn handle_legacy<R: BufRead, W: Write>(
     Ok(())
 }
 
+#[allow(clippy::unwrap_used, clippy::expect_used)]
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -23,6 +23,8 @@
 //!   sessions pinned to a worker, driven incrementally (the daemon's
 //!   Begin/Status/End protocol).
 
+#![warn(clippy::unwrap_used, clippy::expect_used)]
+
 use crate::coordinator::{run_budget_s, run_sim, savings, GpoeoStats, Policy, RunResult, Savings};
 use crate::device::{boxed_sim_device, Device};
 use crate::model::Predictor;
@@ -111,6 +113,10 @@ impl<T: Send + 'static> Reply<T> {
     /// on success *and* on the dropped-reply path, so bookkeeping (like
     /// a load-counter decrement) happens exactly once either way.
     pub fn before(mut self, pre: impl FnOnce() + Send + 'static) -> Reply<T> {
+        // Invariant expect: `f` is Some from construction until the
+        // one-shot send/drop consumes self — `before` takes self by
+        // value, so it cannot run after either.
+        #[allow(clippy::expect_used)]
         let f = self.f.take().expect("reply already consumed");
         Reply {
             f: Some(Box::new(move |v| {
@@ -187,11 +193,12 @@ struct WorkerHandle {
 
 impl WorkerHandle {
     fn send(&self, cmd: Cmd) -> anyhow::Result<()> {
-        self.tx
-            .as_ref()
-            .expect("fleet worker already shut down")
-            .send(cmd)
-            .map_err(|_| anyhow::anyhow!("fleet worker thread is gone"))
+        match self.tx.as_ref() {
+            Some(tx) => tx
+                .send(cmd)
+                .map_err(|_| anyhow::anyhow!("fleet worker thread is gone")),
+            None => anyhow::bail!("fleet worker already shut down"),
+        }
     }
 }
 
@@ -367,7 +374,10 @@ impl Fleet {
     }
 
     pub fn num_workers(&self) -> usize {
-        self.workers.read().expect("fleet lock poisoned").len()
+        // The workers RwLock (and the scaler mutex below) recover from
+        // poisoning: the Vec/scaler state stays structurally valid, and
+        // serving control-plane traffic beats cascading a worker panic.
+        self.workers.read().unwrap_or_else(|e| e.into_inner()).len()
     }
 
     /// Feed the scaler one queue-depth observation and apply whatever it
@@ -383,12 +393,12 @@ impl Fleet {
         let live = self.num_workers();
         let decision = scaler
             .lock()
-            .expect("scaler lock poisoned")
+            .unwrap_or_else(|e| e.into_inner())
             .observe(now_s, depth, live);
         match decision {
             ScaleDecision::Hold => None,
             ScaleDecision::Grow => {
-                let mut ws = self.workers.write().expect("fleet lock poisoned");
+                let mut ws = self.workers.write().unwrap_or_else(|e| e.into_inner());
                 ws.push(spawn_worker(
                     &self.spec,
                     self.next_worker.fetch_add(1, Ordering::SeqCst),
@@ -397,7 +407,7 @@ impl Fleet {
                 Some(ws.len())
             }
             ScaleDecision::Shrink(target) => {
-                let mut ws = self.workers.write().expect("fleet lock poisoned");
+                let mut ws = self.workers.write().unwrap_or_else(|e| e.into_inner());
                 let before = ws.len();
                 while ws.len() > target {
                     let idle = ws
@@ -407,7 +417,7 @@ impl Fleet {
                     if !idle {
                         break;
                     }
-                    let mut w = ws.pop().expect("checked non-empty");
+                    let Some(mut w) = ws.pop() else { break };
                     if let Some(tx) = w.tx.take() {
                         let _ = tx.send(Cmd::Shutdown);
                     }
@@ -431,7 +441,7 @@ impl Fleet {
     pub fn run_jobs(&self, jobs: Vec<SweepJob>) -> Vec<anyhow::Result<JobOutcome>> {
         // The read guard is held for the whole batch: autoscale's write
         // lock can never retire a worker out from under an in-flight job.
-        let workers = self.workers.read().expect("fleet lock poisoned");
+        let workers = self.workers.read().unwrap_or_else(|e| e.into_inner());
         let n = jobs.len();
         let mut out: Vec<Option<anyhow::Result<JobOutcome>>> = (0..n).map(|_| None).collect();
         let (tx, rx) = channel();
@@ -512,14 +522,17 @@ impl Fleet {
         target_iters: u64,
         reply: Reply<anyhow::Result<()>>,
     ) -> anyhow::Result<SessionHandle> {
-        let workers = self.workers.read().expect("fleet lock poisoned");
+        let workers = self.workers.read().unwrap_or_else(|e| e.into_inner());
         let w = workers
             .iter()
             .min_by_key(|w| w.active.load(Ordering::SeqCst))
-            .expect("fleet has at least one worker");
+            .ok_or_else(|| anyhow::anyhow!("fleet has no workers"))?;
+        let Some(tx) = w.tx.as_ref() else {
+            anyhow::bail!("fleet worker already shut down");
+        };
         let id = self.next_session.fetch_add(1, Ordering::SeqCst);
         w.active.fetch_add(1, Ordering::SeqCst);
-        let sent = w.send(Cmd::Begin {
+        let sent = tx.send(Cmd::Begin {
             id,
             req: Box::new(BeginReq {
                 app,
@@ -528,14 +541,14 @@ impl Fleet {
             }),
             reply,
         });
-        if let Err(e) = sent {
+        if sent.is_err() {
             w.active.fetch_sub(1, Ordering::SeqCst);
-            return Err(e);
+            anyhow::bail!("fleet worker thread is gone");
         }
         Ok(SessionHandle {
             id,
             target_iters,
-            tx: w.tx.as_ref().expect("worker is live").clone(),
+            tx: tx.clone(),
             active: w.active.clone(),
             open: true,
         })
@@ -550,7 +563,7 @@ impl Drop for Fleet {
         // alone would leave the worker loops — and this join — blocked
         // forever. After shutdown, surviving handles get an error from
         // their next call instead of an answer.
-        let workers = self.workers.get_mut().expect("fleet lock poisoned");
+        let workers = self.workers.get_mut().unwrap_or_else(|e| e.into_inner());
         for w in workers.iter_mut() {
             if let Some(tx) = &w.tx {
                 let _ = tx.send(Cmd::Shutdown);
@@ -722,6 +735,9 @@ fn spawn_worker(spec: &Arc<Spec>, i: usize, tel: &Arc<Telemetry>) -> WorkerHandl
     // The worker keeps a sender to its own queue so a long END can
     // re-enqueue itself in slices (see worker_loop).
     let self_tx = tx.clone();
+    // Invariant expect: spawn fails only on OS thread exhaustion; a
+    // fleet that cannot start workers has no degraded mode to offer.
+    #[allow(clippy::expect_used)]
     let join = std::thread::Builder::new()
         .name(format!("fleet-worker-{i}"))
         .spawn(move || worker_loop(spec, rx, self_tx, tel))
@@ -1007,6 +1023,7 @@ fn run_job(
     })
 }
 
+#[allow(clippy::unwrap_used, clippy::expect_used)]
 #[cfg(test)]
 mod tests {
     use super::*;

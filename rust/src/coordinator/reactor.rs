@@ -40,9 +40,11 @@
 //! which the listener is dropped from the poll set, so a persistent
 //! EMFILE can neither spam the log nor spin the loop.
 
+#![warn(clippy::unwrap_used, clippy::expect_used)]
+
 use crate::api::{
-    Event, PolicyInfo, Request, Response, ServerMsg, SessionReport, MAX_LINE_BYTES,
-    PROTOCOL_VERSION,
+    negotiate_hello, Event, PolicyInfo, Request, Response, ServerMsg, SessionReport,
+    MAX_LINE_BYTES,
 };
 use crate::coordinator::daemon::{
     accept_stream, claim_session, handle_legacy, list_apps, prepare_begin, report, with_session,
@@ -561,8 +563,12 @@ impl Reactor {
                         // Reclaim the eagerly-installed handle (unless
                         // a pipelined end/abort already took it) and
                         // drop the reservation — ours only, never a
-                        // successor's.
-                        drop(entry.handle.lock().expect("session entry poisoned").take());
+                        // successor's. The entry mutex is a leaf held
+                        // for single statements, so a poisoned lock
+                        // still carries a usable value — recover it
+                        // rather than poison-cascade the reactor.
+                        // gpoeo-lint: allow(blocking) leaf mutex, held only for single statements by spawn/end/abort — bounded wait, no I/O under it
+                        drop(entry.handle.lock().unwrap_or_else(|e| e.into_inner()).take());
                         self.shared.sessions.remove_if(&id, &entry);
                         match fail {
                             Some(Err(e)) => Response::error(format!("{e:#}")),
@@ -934,34 +940,20 @@ impl Reactor {
         };
         let hello_done = self.v1_mut(tok).is_some_and(|v| v.hello_done);
         if !hello_done && !matches!(req, Request::Hello { .. }) {
-            self.answer(
-                tok,
-                Response::error(format!(
-                    "handshake required: send {{\"kind\":\"hello\",\"v\":{PROTOCOL_VERSION}}} first"
-                )),
-            );
+            self.answer(tok, Response::handshake_required());
             return;
         }
         match req {
             Request::Hello { version } => {
-                if version == 0 || version > PROTOCOL_VERSION {
-                    self.answer(
-                        tok,
-                        Response::error(format!(
-                            "unsupported protocol version {version} (this server speaks v{PROTOCOL_VERSION})"
-                        )),
-                    );
-                } else {
-                    if let Some(v) = self.v1_mut(tok) {
-                        v.hello_done = true;
+                let server = format!("gpoeo {}", env!("CARGO_PKG_VERSION"));
+                match negotiate_hello(version, server) {
+                    Ok(resp) => {
+                        if let Some(v) = self.v1_mut(tok) {
+                            v.hello_done = true;
+                        }
+                        self.answer(tok, resp);
                     }
-                    self.answer(
-                        tok,
-                        Response::Hello {
-                            protocol: PROTOCOL_VERSION,
-                            server: format!("gpoeo {}", env!("CARGO_PKG_VERSION")),
-                        },
-                    );
+                    Err(resp) => self.answer(tok, resp),
                 }
             }
             Request::Begin {
@@ -1106,12 +1098,16 @@ impl Reactor {
                 // ordering. If the begin then fails, the queued command
                 // answers "no such session" and `on_done` reclaims the
                 // entry.
-                self.shared.sessions.fulfill(&prepared.id, handle);
-                let entry = self
-                    .shared
-                    .sessions
-                    .get(&prepared.id)
-                    .expect("just-fulfilled session entry vanished");
+                let Some(entry) = self.shared.sessions.fulfill(&prepared.id, handle) else {
+                    // prepare_begin reserved this id moments ago on
+                    // this same thread; a missing entry means the
+                    // table was torn down — answer instead of panic.
+                    self.answer(
+                        tok,
+                        Response::error(format!("session '{}' reservation vanished", prepared.id)),
+                    );
+                    return;
+                };
                 self.ops.insert(
                     op,
                     Op::Begin {
@@ -1363,6 +1359,7 @@ impl Reactor {
     }
 }
 
+#[allow(clippy::unwrap_used, clippy::expect_used)]
 #[cfg(test)]
 mod tests {
     use super::*;

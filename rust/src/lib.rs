@@ -32,6 +32,7 @@ pub mod cli;
 pub mod coordinator;
 pub mod device;
 pub mod experiments;
+pub mod lint;
 pub mod model;
 pub mod policy;
 pub mod search;

@@ -1,0 +1,433 @@
+//! Hand-rolled Rust lexer for the lint pass (DESIGN.md §12).
+//!
+//! The rule engines need exactly three things a grep cannot give them:
+//! comments and string literals must not produce identifier matches
+//! (`// calls unwrap()` is not a panic site), string literal *contents*
+//! must survive as data (the policy-name and wire-literal rules match
+//! on them), and every token must carry its source line. So this is a
+//! token stream, not an AST: identifiers, string literals, numbers,
+//! lifetimes and single-character punctuation, in source order, with
+//! comments stripped but mined for `gpoeo-lint: allow(...)` waivers.
+//!
+//! Handled Rust lexical edge cases, because the tree uses them:
+//! nested block comments, raw strings (`r"…"`, `r#"…"#`), byte and raw
+//! byte strings, char literals vs lifetimes (`'a'` vs `'a`), raw
+//! identifiers (`r#type`), and float literals vs method calls on
+//! integers (`1.max(2)` lexes as number, dot, ident).
+
+/// Token classes the rules distinguish.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TokKind {
+    Ident,
+    /// String literal; `text` is the *content* (delimiters stripped,
+    /// escapes left as written — rules match exact simple literals).
+    Str,
+    Num,
+    Lifetime,
+    /// Single-character punctuation (`::` is two consecutive `:`).
+    Punct,
+}
+
+#[derive(Debug, Clone)]
+pub struct Tok {
+    pub kind: TokKind,
+    pub text: String,
+    /// 1-based source line of the token's first character.
+    pub line: u32,
+}
+
+impl Tok {
+    pub fn is_ident(&self, s: &str) -> bool {
+        self.kind == TokKind::Ident && self.text == s
+    }
+    pub fn is_punct(&self, c: char) -> bool {
+        self.kind == TokKind::Punct && self.text.len() == 1 && self.text.starts_with(c)
+    }
+}
+
+/// One `// gpoeo-lint: allow(RULE) reason` comment. Suppresses exactly
+/// one finding of the named rule (or rule family) on the waiver's own
+/// line or the line directly below it — so both trailing comments and
+/// a standalone comment above the offending line work.
+#[derive(Debug, Clone)]
+pub struct Waiver {
+    pub line: u32,
+    /// Rule id (`PF-INDEX`) or family keyword (`panic`, `layers`,
+    /// `blocking`, `determinism`).
+    pub rule: String,
+    pub reason: String,
+}
+
+/// Lexed view of one source file.
+#[derive(Debug)]
+pub struct Lexed {
+    pub toks: Vec<Tok>,
+    pub waivers: Vec<Waiver>,
+}
+
+const WAIVER_TAG: &str = "gpoeo-lint:";
+
+/// Parse a waiver out of one comment's text, if present. Doc comments
+/// (`///`, `//!`, `/**`, `/*!`) never carry waivers — they are prose
+/// *about* the syntax (this module documents it), not directives.
+fn parse_waiver(comment: &str, line: u32) -> Option<Waiver> {
+    let doc = ["///", "//!", "/**", "/*!"]
+        .iter()
+        .any(|p| comment.starts_with(p));
+    if doc {
+        return None;
+    }
+    let at = comment.find(WAIVER_TAG)?;
+    let rest = comment[at + WAIVER_TAG.len()..].trim_start();
+    let rest = rest.strip_prefix("allow(")?;
+    let close = rest.find(')')?;
+    let rule = rest[..close].trim().to_string();
+    if rule.is_empty() {
+        return None;
+    }
+    let reason = rest[close + 1..].trim().to_string();
+    Some(Waiver { line, rule, reason })
+}
+
+/// Tokenize `src`, stripping comments (mining them for waivers) and
+/// converting string/char literals into single tokens.
+pub fn lex(src: &str) -> Lexed {
+    let b: Vec<char> = src.chars().collect();
+    let n = b.len();
+    let mut toks = Vec::new();
+    let mut waivers = Vec::new();
+    let mut i = 0usize;
+    let mut line = 1u32;
+
+    // Consume a quoted run starting at the opening `"` (index `i`),
+    // returning (content, next index, lines crossed).
+    fn take_string(b: &[char], mut i: usize, raw_hashes: Option<usize>) -> (String, usize, u32) {
+        let n = b.len();
+        let mut out = String::new();
+        let mut crossed = 0u32;
+        i += 1; // opening quote
+        while i < n {
+            let c = b[i];
+            if c == '\n' {
+                crossed += 1;
+            }
+            match raw_hashes {
+                None => {
+                    if c == '\\' && i + 1 < n {
+                        out.push(c);
+                        out.push(b[i + 1]);
+                        if b[i + 1] == '\n' {
+                            crossed += 1;
+                        }
+                        i += 2;
+                        continue;
+                    }
+                    if c == '"' {
+                        return (out, i + 1, crossed);
+                    }
+                }
+                Some(h) => {
+                    if c == '"' && b[i + 1..].iter().take(h).filter(|&&x| x == '#').count() == h {
+                        return (out, i + 1 + h, crossed);
+                    }
+                }
+            }
+            out.push(c);
+            i += 1;
+        }
+        (out, n, crossed)
+    }
+
+    while i < n {
+        let c = b[i];
+        match c {
+            '\n' => {
+                line += 1;
+                i += 1;
+            }
+            c if c.is_whitespace() => i += 1,
+            '/' if i + 1 < n && b[i + 1] == '/' => {
+                let start = i;
+                while i < n && b[i] != '\n' {
+                    i += 1;
+                }
+                let text: String = b[start..i].iter().collect();
+                if let Some(w) = parse_waiver(&text, line) {
+                    waivers.push(w);
+                }
+            }
+            '/' if i + 1 < n && b[i + 1] == '*' => {
+                let start_line = line;
+                let start = i;
+                let mut depth = 1usize;
+                i += 2;
+                while i < n && depth > 0 {
+                    if b[i] == '\n' {
+                        line += 1;
+                        i += 1;
+                    } else if b[i] == '/' && i + 1 < n && b[i + 1] == '*' {
+                        depth += 1;
+                        i += 2;
+                    } else if b[i] == '*' && i + 1 < n && b[i + 1] == '/' {
+                        depth -= 1;
+                        i += 2;
+                    } else {
+                        i += 1;
+                    }
+                }
+                let text: String = b[start..i.min(n)].iter().collect();
+                if let Some(w) = parse_waiver(&text, start_line) {
+                    waivers.push(w);
+                }
+            }
+            '"' => {
+                let (s, j, crossed) = take_string(&b, i, None);
+                toks.push(Tok { kind: TokKind::Str, text: s, line });
+                line += crossed;
+                i = j;
+            }
+            '\'' => {
+                // Lifetime (`'a`, `'static`) vs char literal (`'a'`,
+                // `'\n'`, `'\''`): an identifier run NOT followed by a
+                // closing quote is a lifetime.
+                let id_start = i + 1;
+                let mut j = id_start;
+                while j < n && (b[j].is_alphanumeric() || b[j] == '_') {
+                    j += 1;
+                }
+                let is_lifetime = j > id_start && (j >= n || b[j] != '\'');
+                if is_lifetime {
+                    toks.push(Tok {
+                        kind: TokKind::Lifetime,
+                        text: b[id_start..j].iter().collect(),
+                        line,
+                    });
+                    i = j;
+                } else {
+                    // Char literal: consume to the closing quote,
+                    // honoring `\'` and `\\`.
+                    let mut j = i + 1;
+                    while j < n {
+                        if b[j] == '\\' {
+                            j += 2;
+                            continue;
+                        }
+                        if b[j] == '\'' {
+                            j += 1;
+                            break;
+                        }
+                        j += 1;
+                    }
+                    let end = j.saturating_sub(1).clamp(i + 1, n);
+                    toks.push(Tok {
+                        kind: TokKind::Str,
+                        text: b[i + 1..end].iter().collect(),
+                        line,
+                    });
+                    i = j.min(n);
+                }
+            }
+            c if c.is_ascii_digit() => {
+                let start = i;
+                i += 1;
+                while i < n {
+                    let d = b[i];
+                    if d.is_alphanumeric() || d == '_' {
+                        i += 1;
+                    } else if d == '.' && i + 1 < n && b[i + 1].is_ascii_digit() {
+                        // `1.5` continues the number; `1.max(2)` and
+                        // `0..n` do not.
+                        i += 2;
+                    } else {
+                        break;
+                    }
+                }
+                toks.push(Tok {
+                    kind: TokKind::Num,
+                    text: b[start..i].iter().collect(),
+                    line,
+                });
+            }
+            c if c.is_alphabetic() || c == '_' => {
+                let start = i;
+                while i < n && (b[i].is_alphanumeric() || b[i] == '_') {
+                    i += 1;
+                }
+                let word: String = b[start..i].iter().collect();
+                // Raw / byte string prefixes and raw identifiers.
+                let mut hashes = 0usize;
+                let mut j = i;
+                while j < n && b[j] == '#' {
+                    hashes += 1;
+                    j += 1;
+                }
+                let raw_str = matches!(word.as_str(), "r" | "br" | "rb")
+                    && j < n
+                    && b[j] == '"';
+                let byte_str = word == "b" && hashes == 0 && i < n && b[i] == '"';
+                if raw_str {
+                    let (s, k, crossed) = take_string(&b, j, Some(hashes));
+                    toks.push(Tok { kind: TokKind::Str, text: s, line });
+                    line += crossed;
+                    i = k;
+                } else if byte_str {
+                    let (s, k, crossed) = take_string(&b, i, None);
+                    toks.push(Tok { kind: TokKind::Str, text: s, line });
+                    line += crossed;
+                    i = k;
+                } else if word == "r" && hashes == 1 && j < n && (b[j].is_alphabetic() || b[j] == '_')
+                {
+                    // Raw identifier r#type → ident "type".
+                    let start = j;
+                    let mut k = j;
+                    while k < n && (b[k].is_alphanumeric() || b[k] == '_') {
+                        k += 1;
+                    }
+                    toks.push(Tok {
+                        kind: TokKind::Ident,
+                        text: b[start..k].iter().collect(),
+                        line,
+                    });
+                    i = k;
+                } else {
+                    toks.push(Tok { kind: TokKind::Ident, text: word, line });
+                }
+            }
+            other => {
+                toks.push(Tok {
+                    kind: TokKind::Punct,
+                    text: other.to_string(),
+                    line,
+                });
+                i += 1;
+            }
+        }
+    }
+    Lexed { toks, waivers }
+}
+
+/// Line ranges (inclusive) covered by `#[cfg(test)] mod … { … }`
+/// blocks. Layer, panic and determinism contracts govern production
+/// code; in-file test modules are exempt by construction (the
+/// integration-test allowance of DESIGN.md §9).
+pub fn test_mod_ranges(toks: &[Tok]) -> Vec<(u32, u32)> {
+    let mut out = Vec::new();
+    let mut i = 0usize;
+    while i + 6 < toks.len() {
+        // #[cfg(test)]
+        let is_cfg_test = toks[i].is_punct('#')
+            && toks[i + 1].is_punct('[')
+            && toks[i + 2].is_ident("cfg")
+            && toks[i + 3].is_punct('(')
+            && toks[i + 4].is_ident("test")
+            && toks[i + 5].is_punct(')')
+            && toks[i + 6].is_punct(']');
+        if !is_cfg_test {
+            i += 1;
+            continue;
+        }
+        // Skip any further attributes, then expect `mod name {`.
+        let mut j = i + 7;
+        while j + 1 < toks.len() && toks[j].is_punct('#') && toks[j + 1].is_punct('[') {
+            let mut depth = 0usize;
+            j += 1;
+            while j < toks.len() {
+                if toks[j].is_punct('[') {
+                    depth += 1;
+                } else if toks[j].is_punct(']') {
+                    depth -= 1;
+                    if depth == 0 {
+                        j += 1;
+                        break;
+                    }
+                }
+                j += 1;
+            }
+        }
+        if j < toks.len() && toks[j].is_ident("mod") {
+            // `mod name {` — find the opening brace, then match it.
+            let mut k = j + 1;
+            while k < toks.len() && !toks[k].is_punct('{') && !toks[k].is_punct(';') {
+                k += 1;
+            }
+            if k < toks.len() && toks[k].is_punct('{') {
+                if let Some(end) = match_brace(toks, k) {
+                    out.push((toks[i].line, toks[end].line));
+                    i = end + 1;
+                    continue;
+                }
+            }
+        }
+        i += 1;
+    }
+    out
+}
+
+/// Index of the `}` matching the `{` at `open`.
+pub fn match_brace(toks: &[Tok], open: usize) -> Option<usize> {
+    let mut depth = 0usize;
+    for (k, t) in toks.iter().enumerate().skip(open) {
+        if t.is_punct('{') {
+            depth += 1;
+        } else if t.is_punct('}') {
+            depth -= 1;
+            if depth == 0 {
+                return Some(k);
+            }
+        }
+    }
+    None
+}
+
+/// Token index ranges `(body_start, body_end)` (inclusive of braces)
+/// for every `fn <name>` in `fns` (an empty list matches every fn).
+/// Matches methods on any impl — a zone naming `emit` covers each
+/// `fn emit` in the file.
+pub fn fn_bodies(toks: &[Tok], fns: &[String]) -> Vec<(String, usize, usize)> {
+    let mut out = Vec::new();
+    let mut i = 0usize;
+    while i + 1 < toks.len() {
+        if toks[i].is_ident("fn")
+            && toks[i + 1].kind == TokKind::Ident
+            && (fns.is_empty() || fns.iter().any(|f| f == &toks[i + 1].text))
+        {
+            // Scan forward to the body's opening brace. Signatures
+            // contain no braces; a `;` first means a trait declaration.
+            let mut k = i + 2;
+            while k < toks.len() && !toks[k].is_punct('{') && !toks[k].is_punct(';') {
+                k += 1;
+            }
+            if k < toks.len() && toks[k].is_punct('{') {
+                if let Some(end) = match_brace(toks, k) {
+                    out.push((toks[i + 1].text.clone(), k, end));
+                    i = end + 1;
+                    continue;
+                }
+            }
+        }
+        i += 1;
+    }
+    out
+}
+
+/// Body token range of `impl <name> { … }` blocks (no generics walk:
+/// matches `impl Name` and `impl Name for …` forms used in this tree).
+pub fn impl_bodies(toks: &[Tok], name: &str) -> Vec<(usize, usize)> {
+    let mut out = Vec::new();
+    let mut i = 0usize;
+    while i + 1 < toks.len() {
+        if toks[i].is_ident("impl") && toks[i + 1].is_ident(name) {
+            let mut k = i + 2;
+            while k < toks.len() && !toks[k].is_punct('{') {
+                k += 1;
+            }
+            if let Some(end) = match_brace(toks, k) {
+                out.push((k, end));
+                i = end + 1;
+                continue;
+            }
+        }
+        i += 1;
+    }
+    out
+}

@@ -1,0 +1,321 @@
+//! `lint.toml` — the DESIGN.md contracts as checked-in data.
+//!
+//! The rule engines are generic; *what* they enforce (the §0 layer DAG,
+//! forbidden symbols, hot-path zones, determinism modules) lives in a
+//! manifest next to `Cargo.toml`, so tightening a contract is a data
+//! diff reviewers can read, not a code change. The parser covers the
+//! TOML subset the manifest uses — `[section]` / `[[array-of-tables]]`
+//! headers, `key = "string"`, `key = number`, and (possibly multi-line)
+//! string arrays — and rejects anything else loudly rather than
+//! guessing.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// One panic-freedom zone: the named fns of `file` must not contain the
+/// listed panic classes (`unwrap`, `expect`, `panic`, `assert`,
+/// `index`).
+#[derive(Debug, Clone)]
+pub struct PanicZone {
+    pub file: String,
+    pub fns: Vec<String>,
+    pub checks: Vec<String>,
+    /// Why this zone exists — carried into finding messages.
+    pub contract: String,
+}
+
+/// One non-blocking zone: the named fns of `file` must not call any of
+/// the banned identifiers (blocking I/O, lock acquisition, unbounded
+/// sends, thread joins).
+#[derive(Debug, Clone)]
+pub struct NonblockZone {
+    pub file: String,
+    pub fns: Vec<String>,
+    pub ban: Vec<String>,
+    pub contract: String,
+}
+
+/// Lock-ordering check: inside `impl <imp>` in `file`, no single
+/// statement may acquire two locks (the static shape of "holding one
+/// shard while taking another").
+#[derive(Debug, Clone)]
+pub struct LockOrderZone {
+    pub file: String,
+    pub imp: String,
+    pub contract: String,
+}
+
+#[derive(Debug, Clone, Default)]
+pub struct Manifest {
+    /// Directory the manifest was loaded from; file paths are relative
+    /// to it.
+    pub base: PathBuf,
+    /// Source roots to scan, relative to `base`.
+    pub roots: Vec<String>,
+    /// §0 layer DAG: module → modules it may reference (itself always
+    /// allowed).
+    pub deps: BTreeMap<String, Vec<String>>,
+    /// Modules allowed to name `SimGpu` (§0: the concrete simulator
+    /// never leaks past the device boundary).
+    pub simgpu_modules: Vec<String>,
+    /// Registered policy names (§8: nothing outside `policy/` may match
+    /// on them).
+    pub policy_names: Vec<String>,
+    /// Wire-protocol literals (§9: live in `api/` only).
+    pub wire_literals: Vec<String>,
+    /// Path prefixes where protocol symbols are allowed.
+    pub proto_allowed: Vec<String>,
+    /// `Telemetry::<ctor>` calls checked by LB-TEL…
+    pub telemetry_ctors: Vec<String>,
+    /// …and the files allowed to make them (§11: daemon/CLI edges).
+    pub telemetry_allowed: Vec<String>,
+    pub panic_zones: Vec<PanicZone>,
+    pub nonblock_zones: Vec<NonblockZone>,
+    pub lock_orders: Vec<LockOrderZone>,
+    /// Determinism (§1): module path prefixes…
+    pub det_modules: Vec<String>,
+    /// …banned `A::b` clock calls (`Instant::now` — the bare ident
+    /// `Instant` cannot be banned because `sim::Instant` is the
+    /// simulator's own virtual-time sample)…
+    pub det_clock_calls: Vec<String>,
+    /// …banned bare clock identifiers (`SystemTime`, `UNIX_EPOCH`)…
+    pub det_clock_idents: Vec<String>,
+    /// …and banned OS-randomness identifiers (`thread_rng`,
+    /// `RandomState`).
+    pub det_random_idents: Vec<String>,
+}
+
+#[derive(Debug, Clone)]
+enum Val {
+    Str(String),
+    Arr(Vec<String>),
+}
+
+fn parse_string(s: &str) -> Result<(String, &str), String> {
+    let s = s.trim_start();
+    let rest = s
+        .strip_prefix('"')
+        .ok_or_else(|| format!("expected string, got '{s}'"))?;
+    let end = rest.find('"').ok_or("unterminated string")?;
+    Ok((rest[..end].to_string(), &rest[end + 1..]))
+}
+
+fn parse_value(s: &str) -> Result<Val, String> {
+    let s = s.trim();
+    if let Some(inner) = s.strip_prefix('[') {
+        let inner = inner
+            .strip_suffix(']')
+            .ok_or("unterminated array")?
+            .trim();
+        let mut out = Vec::new();
+        let mut rest = inner;
+        while !rest.trim().is_empty() {
+            let (v, r) = parse_string(rest)?;
+            out.push(v);
+            rest = r.trim_start();
+            rest = rest.strip_prefix(',').unwrap_or(rest);
+        }
+        return Ok(Val::Arr(out));
+    }
+    if s.starts_with('"') {
+        let (v, rest) = parse_string(s)?;
+        if !rest.trim().is_empty() {
+            return Err(format!("trailing input after string: '{rest}'"));
+        }
+        return Ok(Val::Str(v));
+    }
+    Err(format!("unsupported value '{s}' (string or string array)"))
+}
+
+impl Manifest {
+    pub fn load(path: &Path) -> anyhow::Result<Manifest> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow::anyhow!("reading lint manifest {}: {e}", path.display()))?;
+        let base = path.parent().unwrap_or(Path::new(".")).to_path_buf();
+        Manifest::parse(&text, base)
+            .map_err(|e| anyhow::anyhow!("parsing lint manifest {}: {e}", path.display()))
+    }
+
+    pub fn parse(text: &str, base: PathBuf) -> Result<Manifest, String> {
+        let mut m = Manifest {
+            base,
+            ..Manifest::default()
+        };
+        let mut section = String::new();
+
+        // Join multi-line arrays: buffer physical lines until brackets
+        // balance outside strings.
+        let mut logical: Vec<(usize, String)> = Vec::new();
+        let mut buf = String::new();
+        let mut buf_line = 0usize;
+        let mut depth = 0i32;
+        for (ln, raw) in text.lines().enumerate() {
+            let stripped = strip_comment(raw);
+            if buf.is_empty() {
+                if stripped.trim().is_empty() {
+                    continue;
+                }
+                buf_line = ln + 1;
+            }
+            depth += bracket_delta(&stripped);
+            buf.push_str(&stripped);
+            buf.push(' ');
+            if depth <= 0 {
+                logical.push((buf_line, std::mem::take(&mut buf)));
+                depth = 0;
+            }
+        }
+        if !buf.trim().is_empty() {
+            return Err(format!("unterminated array starting at line {buf_line}"));
+        }
+
+        for (ln, line) in logical {
+            let line = line.trim();
+            let err = |msg: String| format!("line {ln}: {msg}");
+            if let Some(h) = line.strip_prefix("[[") {
+                let name = h
+                    .strip_suffix("]]")
+                    .ok_or_else(|| err("bad table header".into()))?
+                    .trim();
+                section = name.to_string();
+                match name {
+                    "zone.panic" => m.panic_zones.push(PanicZone {
+                        file: String::new(),
+                        fns: vec![],
+                        checks: vec![],
+                        contract: String::new(),
+                    }),
+                    "zone.nonblocking" => m.nonblock_zones.push(NonblockZone {
+                        file: String::new(),
+                        fns: vec![],
+                        ban: vec![],
+                        contract: String::new(),
+                    }),
+                    "zone.lock_order" => m.lock_orders.push(LockOrderZone {
+                        file: String::new(),
+                        imp: String::new(),
+                        contract: String::new(),
+                    }),
+                    other => return Err(err(format!("unknown table '{other}'"))),
+                }
+                continue;
+            }
+            if let Some(h) = line.strip_prefix('[') {
+                section = h
+                    .strip_suffix(']')
+                    .ok_or_else(|| err("bad section header".into()))?
+                    .trim()
+                    .to_string();
+                continue;
+            }
+            let (key, val) = line
+                .split_once('=')
+                .ok_or_else(|| err(format!("expected key = value, got '{line}'")))?;
+            let key = key.trim();
+            let val = parse_value(val).map_err(err)?;
+            let str_of = |v: &Val| -> Result<String, String> {
+                match v {
+                    Val::Str(s) => Ok(s.clone()),
+                    Val::Arr(_) => Err(err(format!("'{key}' expects a string"))),
+                }
+            };
+            let arr_of = |v: &Val| -> Result<Vec<String>, String> {
+                match v {
+                    Val::Arr(a) => Ok(a.clone()),
+                    Val::Str(_) => Err(err(format!("'{key}' expects an array"))),
+                }
+            };
+            match (section.as_str(), key) {
+                ("files", "roots") => m.roots = arr_of(&val)?,
+                ("layers.deps", module) => {
+                    m.deps.insert(module.to_string(), arr_of(&val)?);
+                }
+                ("layers.symbols", "simgpu_modules") => m.simgpu_modules = arr_of(&val)?,
+                ("layers.symbols", "policy_names") => m.policy_names = arr_of(&val)?,
+                ("layers.symbols", "wire_literals") => m.wire_literals = arr_of(&val)?,
+                ("layers.symbols", "proto_allowed") => m.proto_allowed = arr_of(&val)?,
+                ("layers.symbols", "telemetry_ctors") => m.telemetry_ctors = arr_of(&val)?,
+                ("layers.symbols", "telemetry_allowed") => m.telemetry_allowed = arr_of(&val)?,
+                ("determinism", "modules") => m.det_modules = arr_of(&val)?,
+                ("determinism", "clock_calls") => m.det_clock_calls = arr_of(&val)?,
+                ("determinism", "clock_idents") => m.det_clock_idents = arr_of(&val)?,
+                ("determinism", "random_idents") => m.det_random_idents = arr_of(&val)?,
+                ("zone.panic", k) => {
+                    let z = m
+                        .panic_zones
+                        .last_mut()
+                        .ok_or_else(|| err("key outside [[zone.panic]]".into()))?;
+                    match k {
+                        "file" => z.file = str_of(&val)?,
+                        "fns" => z.fns = arr_of(&val)?,
+                        "checks" => z.checks = arr_of(&val)?,
+                        "contract" => z.contract = str_of(&val)?,
+                        other => return Err(err(format!("unknown zone.panic key '{other}'"))),
+                    }
+                }
+                ("zone.nonblocking", k) => {
+                    let z = m
+                        .nonblock_zones
+                        .last_mut()
+                        .ok_or_else(|| err("key outside [[zone.nonblocking]]".into()))?;
+                    match k {
+                        "file" => z.file = str_of(&val)?,
+                        "fns" => z.fns = arr_of(&val)?,
+                        "ban" => z.ban = arr_of(&val)?,
+                        "contract" => z.contract = str_of(&val)?,
+                        other => {
+                            return Err(err(format!("unknown zone.nonblocking key '{other}'")))
+                        }
+                    }
+                }
+                ("zone.lock_order", k) => {
+                    let z = m
+                        .lock_orders
+                        .last_mut()
+                        .ok_or_else(|| err("key outside [[zone.lock_order]]".into()))?;
+                    match k {
+                        "file" => z.file = str_of(&val)?,
+                        "impl" => z.imp = str_of(&val)?,
+                        "contract" => z.contract = str_of(&val)?,
+                        other => return Err(err(format!("unknown zone.lock_order key '{other}'"))),
+                    }
+                }
+                (sec, k) => return Err(err(format!("unknown key '{k}' in section '[{sec}]'"))),
+            }
+        }
+        if m.roots.is_empty() {
+            m.roots.push("src".to_string());
+        }
+        Ok(m)
+    }
+}
+
+/// Strip a `#` comment, respecting string literals.
+fn strip_comment(line: &str) -> String {
+    let mut out = String::new();
+    let mut in_str = false;
+    for c in line.chars() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => break,
+            _ => {}
+        }
+        out.push(c);
+    }
+    out
+}
+
+/// Net `[`/`]` nesting delta outside string literals.
+fn bracket_delta(line: &str) -> i32 {
+    let mut d = 0i32;
+    let mut in_str = false;
+    for c in line.chars() {
+        match c {
+            '"' => in_str = !in_str,
+            '[' if !in_str => d += 1,
+            ']' if !in_str => d -= 1,
+            _ => {}
+        }
+    }
+    d
+}

@@ -1,0 +1,293 @@
+//! `gpoeo lint` — machine-checked DESIGN.md contracts (§12).
+//!
+//! PRs 1–7 accumulated prose invariants: the §0 layer DAG, §1 simulator
+//! determinism, §2/§3 bit-identity hot paths, §8 registry-only policy
+//! dispatch, §9 protocol-string containment, §10 reactor-never-blocks,
+//! §11 non-blocking-or-nothing telemetry. The api-bench gate catches a
+//! blocking call only *after* it regresses p99; this pass catches the
+//! code shape itself, before it ships. It is dependency-free by
+//! construction (hand-rolled [`lexer`], no crates.io parsers — the
+//! vendored-shim policy applies to the linter too) and data-driven: the
+//! contracts live in `rust/lint.toml` ([`manifest`]), so tightening a
+//! zone is a reviewable data diff.
+//!
+//! Waivers are explicit and budgeted: an inline
+//! `// gpoeo-lint: allow(RULE) reason` suppresses exactly one finding
+//! on its own or the following line, and every waiver is counted and
+//! echoed in the report — silence is never free.
+
+pub mod lexer;
+pub mod manifest;
+pub mod rules;
+
+pub use manifest::Manifest;
+pub use rules::Finding;
+
+use crate::util::cli::Args;
+use crate::util::json::Json;
+use rules::FileCtx;
+use std::path::{Path, PathBuf};
+
+/// A finding suppressed by an inline waiver, with the written reason.
+#[derive(Debug, Clone)]
+pub struct Waived {
+    pub finding: Finding,
+    pub reason: String,
+}
+
+/// A waiver comment that suppressed nothing (stale or mistargeted).
+#[derive(Debug, Clone)]
+pub struct UnusedWaiver {
+    pub file: String,
+    pub line: u32,
+    pub rule: String,
+}
+
+#[derive(Debug, Default)]
+pub struct Report {
+    pub findings: Vec<Finding>,
+    pub waived: Vec<Waived>,
+    pub unused_waivers: Vec<UnusedWaiver>,
+    pub files_scanned: usize,
+}
+
+impl Report {
+    pub fn ok(&self) -> bool {
+        self.findings.is_empty()
+    }
+
+    pub fn to_json(&self) -> Json {
+        let fjson = |f: &Finding| {
+            Json::obj(vec![
+                ("rule", Json::Str(f.rule.clone())),
+                ("file", Json::Str(f.file.clone())),
+                ("line", Json::Num(f.line as f64)),
+                ("message", Json::Str(f.message.clone())),
+            ])
+        };
+        Json::obj(vec![
+            ("ok", Json::Bool(self.ok())),
+            ("files_scanned", Json::Num(self.files_scanned as f64)),
+            (
+                "findings",
+                Json::Arr(self.findings.iter().map(fjson).collect()),
+            ),
+            (
+                "waived",
+                Json::Arr(
+                    self.waived
+                        .iter()
+                        .map(|w| {
+                            let mut j = fjson(&w.finding);
+                            if let Json::Obj(map) = &mut j {
+                                map.insert("reason".into(), Json::Str(w.reason.clone()));
+                            }
+                            j
+                        })
+                        .collect(),
+                ),
+            ),
+            (
+                "unused_waivers",
+                Json::Arr(
+                    self.unused_waivers
+                        .iter()
+                        .map(|u| {
+                            Json::obj(vec![
+                                ("file", Json::Str(u.file.clone())),
+                                ("line", Json::Num(u.line as f64)),
+                                ("rule", Json::Str(u.rule.clone())),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    pub fn to_text(&self) -> String {
+        let mut out = String::new();
+        for f in &self.findings {
+            out.push_str(&format!("{} {}:{}  {}\n", f.rule, f.file, f.line, f.message));
+        }
+        if !self.waived.is_empty() {
+            out.push_str("waived:\n");
+            for w in &self.waived {
+                out.push_str(&format!(
+                    "  {} {}:{}  {}\n",
+                    w.finding.rule,
+                    w.finding.file,
+                    w.finding.line,
+                    if w.reason.is_empty() { "(no reason)" } else { &w.reason }
+                ));
+            }
+        }
+        for u in &self.unused_waivers {
+            out.push_str(&format!(
+                "unused waiver: {}:{} allow({})\n",
+                u.file, u.line, u.rule
+            ));
+        }
+        out.push_str(&format!(
+            "gpoeo lint: {} finding(s), {} waived, {} unused waiver(s), {} file(s) scanned\n",
+            self.findings.len(),
+            self.waived.len(),
+            self.unused_waivers.len(),
+            self.files_scanned
+        ));
+        out
+    }
+}
+
+/// Does a waiver naming `rule` cover a finding of `finding_rule`? Exact
+/// rule ids match themselves; the four family keywords match their
+/// prefix.
+fn waiver_covers(rule: &str, finding_rule: &str) -> bool {
+    rule == finding_rule
+        || match rule {
+            "panic" => finding_rule.starts_with("PF-"),
+            "layers" => finding_rule.starts_with("LB-"),
+            "blocking" => finding_rule.starts_with("NB-"),
+            "determinism" => finding_rule.starts_with("DT-"),
+            _ => false,
+        }
+}
+
+fn rule_selected(filter: Option<&str>, rule: &str) -> bool {
+    match filter {
+        None => true,
+        Some(f) => f == rule || waiver_covers(f, rule),
+    }
+}
+
+fn walk(dir: &Path, out: &mut Vec<PathBuf>) -> anyhow::Result<()> {
+    for entry in std::fs::read_dir(dir)
+        .map_err(|e| anyhow::anyhow!("reading {}: {e}", dir.display()))?
+    {
+        let path = entry?.path();
+        if path.is_dir() {
+            walk(&path, out)?;
+        } else if path.extension().is_some_and(|x| x == "rs") {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+/// Run every rule over every source file under the manifest's roots.
+/// `rule_filter` restricts reporting to one rule id or family keyword.
+pub fn run(m: &Manifest, rule_filter: Option<&str>) -> anyhow::Result<Report> {
+    let mut files = Vec::new();
+    for root in &m.roots {
+        walk(&m.base.join(root), &mut files)?;
+    }
+    files.sort();
+
+    let mut report = Report::default();
+    for path in &files {
+        let rel = path
+            .strip_prefix(&m.base)
+            .unwrap_or(path)
+            .to_string_lossy()
+            .replace('\\', "/");
+        let src = std::fs::read_to_string(path)
+            .map_err(|e| anyhow::anyhow!("reading {}: {e}", path.display()))?;
+        let lexed = lexer::lex(&src);
+        let ctx = FileCtx {
+            path: &rel,
+            module: FileCtx::module_of(&rel),
+            test_ranges: lexer::test_mod_ranges(&lexed.toks),
+            lexed: &lexed,
+        };
+
+        let mut findings = Vec::new();
+        rules::layer_rules(&ctx, m, &mut findings);
+        rules::panic_rules(&ctx, m, &mut findings);
+        rules::blocking_rules(&ctx, m, &mut findings);
+        rules::determinism_rules(&ctx, m, &mut findings);
+        findings.sort_by(|a, b| (a.line, &a.rule).cmp(&(b.line, &b.rule)));
+
+        // Waiver application: each waiver suppresses the first
+        // uncovered finding of its rule on the waiver's line or the
+        // line below — exactly one, so waivers can't blanket a file.
+        let mut suppressed = vec![false; findings.len()];
+        for w in &lexed.waivers {
+            let hit = findings.iter().enumerate().position(|(k, f)| {
+                !suppressed[k]
+                    && waiver_covers(&w.rule, &f.rule)
+                    && (f.line == w.line || f.line == w.line + 1)
+            });
+            match hit {
+                Some(k) => {
+                    suppressed[k] = true;
+                    if rule_selected(rule_filter, &findings[k].rule) {
+                        report.waived.push(Waived {
+                            finding: findings[k].clone(),
+                            reason: w.reason.clone(),
+                        });
+                    }
+                }
+                None => report.unused_waivers.push(UnusedWaiver {
+                    file: rel.clone(),
+                    line: w.line,
+                    rule: w.rule.clone(),
+                }),
+            }
+        }
+        for (k, f) in findings.into_iter().enumerate() {
+            if !suppressed[k] && rule_selected(rule_filter, &f.rule) {
+                report.findings.push(f);
+            }
+        }
+        report.files_scanned += 1;
+    }
+    Ok(report)
+}
+
+/// Load the manifest at `path` and run the full pass.
+pub fn run_manifest(path: &Path, rule_filter: Option<&str>) -> anyhow::Result<Report> {
+    let m = Manifest::load(path)?;
+    run(&m, rule_filter)
+}
+
+/// Locate `lint.toml`: `--manifest PATH`, else the working directory,
+/// else `rust/` below it, else next to this crate's `Cargo.toml`.
+fn find_manifest(args: &Args) -> anyhow::Result<PathBuf> {
+    if let Some(p) = args.opt("manifest") {
+        return Ok(PathBuf::from(p));
+    }
+    for cand in ["lint.toml", "rust/lint.toml"] {
+        let p = PathBuf::from(cand);
+        if p.exists() {
+            return Ok(p);
+        }
+    }
+    let baked = Path::new(env!("CARGO_MANIFEST_DIR")).join("lint.toml");
+    if baked.exists() {
+        return Ok(baked);
+    }
+    anyhow::bail!("no lint.toml found (pass --manifest PATH)")
+}
+
+/// `gpoeo lint [--format text|json] [--rule ID] [--manifest PATH]
+/// [--out PATH]` — non-zero exit on any non-waived finding.
+pub fn cli_lint(args: &Args) -> anyhow::Result<()> {
+    let manifest = find_manifest(args)?;
+    let report = run_manifest(&manifest, args.opt("rule"))?;
+    let rendered = match args.opt_or("format", "text") {
+        "json" => report.to_json().to_pretty(),
+        _ => report.to_text(),
+    };
+    println!("{rendered}");
+    if let Some(out) = args.opt("out") {
+        std::fs::write(out, &rendered)
+            .map_err(|e| anyhow::anyhow!("writing report to {out}: {e}"))?;
+    }
+    if !report.ok() {
+        anyhow::bail!(
+            "{} contract violation(s) — see report above (DESIGN.md §12)",
+            report.findings.len()
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,461 @@
+//! The four rule families (DESIGN.md §12), each a pure function from a
+//! lexed file + manifest to findings.
+//!
+//! | family | rules | contract |
+//! |---|---|---|
+//! | layers | LB-DAG LB-SIMGPU LB-POLICY-MATCH LB-PROTO LB-TEL | §0 §8 §9 §11 |
+//! | panic | PF-UNWRAP PF-EXPECT PF-PANIC PF-ASSERT PF-INDEX | §2 §3 §10 |
+//! | blocking | NB-BLOCKING NB-LOCK-NEST | §10 §11 |
+//! | determinism | DT-CLOCK DT-RANDOM | §1 |
+//!
+//! All layer/panic/determinism rules skip `#[cfg(test)]` modules —
+//! production contracts govern production code; tests exercise the
+//! forbidden shapes on purpose.
+
+use crate::lint::lexer::{fn_bodies, impl_bodies, Lexed, Tok, TokKind};
+use crate::lint::manifest::Manifest;
+use std::collections::BTreeSet;
+
+/// One rule violation at a source location.
+#[derive(Debug, Clone)]
+pub struct Finding {
+    pub rule: String,
+    /// Manifest-relative path (`src/coordinator/fleet.rs`).
+    pub file: String,
+    pub line: u32,
+    pub message: String,
+}
+
+/// Per-file context shared by the rule engines.
+pub struct FileCtx<'a> {
+    pub path: &'a str,
+    /// Top-level module: `src/coordinator/fleet.rs` → `coordinator`.
+    pub module: String,
+    pub lexed: &'a Lexed,
+    pub test_ranges: Vec<(u32, u32)>,
+}
+
+impl<'a> FileCtx<'a> {
+    pub fn module_of(path: &str) -> String {
+        let rel = path.strip_prefix("src/").unwrap_or(path);
+        match rel.split_once('/') {
+            Some((dir, _)) => dir.to_string(),
+            None => rel.trim_end_matches(".rs").to_string(),
+        }
+    }
+
+    fn in_test(&self, line: u32) -> bool {
+        self.test_ranges.iter().any(|&(a, b)| a <= line && line <= b)
+    }
+
+    fn toks(&self) -> &[Tok] {
+        &self.lexed.toks
+    }
+}
+
+fn finding(rule: &str, ctx: &FileCtx, line: u32, message: String) -> Finding {
+    Finding {
+        rule: rule.to_string(),
+        file: ctx.path.to_string(),
+        line,
+        message,
+    }
+}
+
+/// `toks[i..]` starts the path `root :: <ident>`; return that ident
+/// index.
+fn path_member(toks: &[Tok], i: usize) -> Option<usize> {
+    if i + 3 < toks.len()
+        && toks[i + 1].is_punct(':')
+        && toks[i + 2].is_punct(':')
+        && toks[i + 3].kind == TokKind::Ident
+    {
+        Some(i + 3)
+    } else {
+        None
+    }
+}
+
+/// Collect the top-level member idents of a `root::{a, b::c, d}` group
+/// starting at the `{` at index `open`.
+fn group_members(toks: &[Tok], open: usize) -> Vec<usize> {
+    let mut out = Vec::new();
+    let mut depth = 0usize;
+    let mut expect_member = true;
+    for (k, t) in toks.iter().enumerate().skip(open) {
+        if t.is_punct('{') {
+            depth += 1;
+            expect_member = depth == 1;
+        } else if t.is_punct('}') {
+            if depth == 0 {
+                break;
+            }
+            depth -= 1;
+            if depth == 0 {
+                break;
+            }
+        } else if t.is_punct(',') && depth == 1 {
+            expect_member = true;
+        } else if expect_member && depth == 1 && t.kind == TokKind::Ident {
+            out.push(k);
+            expect_member = false;
+        }
+    }
+    out
+}
+
+// ----------------------------------------------------------------------
+// Family 1: layer boundaries (§0, §8, §9, §11)
+// ----------------------------------------------------------------------
+
+pub fn layer_rules(ctx: &FileCtx, m: &Manifest, out: &mut Vec<Finding>) {
+    let toks = ctx.toks();
+    let empty: Vec<String> = Vec::new();
+    let allowed = m.deps.get(&ctx.module).unwrap_or(&empty);
+    let check_dep = |out: &mut Vec<Finding>, k: usize| {
+        let dep = &toks[k].text;
+        // Self-references and root items (`crate::VERSION` — uppercase,
+        // defined in lib.rs) are not layer edges.
+        if dep == &ctx.module
+            || dep == "self"
+            || dep.chars().next().is_some_and(|c| c.is_uppercase())
+        {
+            return;
+        }
+        if !allowed.iter().any(|d| d == dep) {
+            out.push(finding(
+                "LB-DAG",
+                ctx,
+                toks[k].line,
+                format!(
+                    "module '{}' references 'crate::{dep}' — not an allowed \
+                     §0 layer edge (allowed: {})",
+                    ctx.module,
+                    allowed.join(", ")
+                ),
+            ));
+        }
+    };
+
+    for i in 0..toks.len() {
+        let t = &toks[i];
+        if ctx.in_test(t.line) {
+            continue;
+        }
+        // --- LB-DAG: crate-path references against the layer DAG.
+        if t.kind == TokKind::Ident
+            && matches!(t.text.as_str(), "crate" | "gpoeo")
+            && (i == 0 || !toks[i - 1].is_punct(':'))
+        {
+            if let Some(k) = path_member(toks, i) {
+                check_dep(out, k);
+            } else if i + 3 < toks.len()
+                && toks[i + 1].is_punct(':')
+                && toks[i + 2].is_punct(':')
+                && toks[i + 3].is_punct('{')
+            {
+                for k in group_members(toks, i + 3) {
+                    check_dep(out, k);
+                }
+            }
+        }
+        // --- LB-SIMGPU (§0): the concrete simulator type never leaks
+        // past the device boundary.
+        if t.is_ident("SimGpu") && !m.simgpu_modules.iter().any(|x| x == &ctx.module) {
+            out.push(finding(
+                "LB-SIMGPU",
+                ctx,
+                t.line,
+                format!(
+                    "'SimGpu' named in module '{}' — only {} may see the \
+                     concrete simulator (everything else goes through dyn Device)",
+                    ctx.module,
+                    m.simgpu_modules.join("/")
+                ),
+            ));
+        }
+        // --- LB-POLICY-MATCH (§8): no policy-name string matching
+        // outside the registry. Construction (`registered("gpoeo")`)
+        // and labels are fine; comparison/match-arm adjacency is not.
+        if t.kind == TokKind::Str
+            && ctx.module != "policy"
+            && m.policy_names.iter().any(|p| p == &t.text)
+        {
+            let two = |a: usize, b: usize, x: char, y: char| {
+                a < toks.len() && b < toks.len() && toks[a].is_punct(x) && toks[b].is_punct(y)
+            };
+            let cmp_before = i >= 2
+                && (two(i - 2, i - 1, '=', '=') || two(i - 2, i - 1, '!', '='));
+            let cmp_after = two(i + 1, i + 2, '=', '=')
+                || two(i + 1, i + 2, '!', '=')
+                || two(i + 1, i + 2, '=', '>');
+            if cmp_before || cmp_after {
+                out.push(finding(
+                    "LB-POLICY-MATCH",
+                    ctx,
+                    t.line,
+                    format!(
+                        "policy name \"{}\" matched outside policy/ — dispatch \
+                         belongs to the PolicyRegistry (§8)",
+                        t.text
+                    ),
+                ));
+            }
+        }
+        // --- LB-PROTO (§9): protocol symbols live in api/ only.
+        let proto_ok = m.proto_allowed.iter().any(|p| ctx.path.starts_with(p.as_str()));
+        if !proto_ok {
+            if t.is_ident("PROTOCOL_VERSION") {
+                out.push(finding(
+                    "LB-PROTO",
+                    ctx,
+                    t.line,
+                    "'PROTOCOL_VERSION' referenced outside api/ — version logic \
+                     belongs to the protocol layer (§9)"
+                        .to_string(),
+                ));
+            }
+            if t.kind == TokKind::Str && m.wire_literals.iter().any(|w| w == &t.text) {
+                out.push(finding(
+                    "LB-PROTO",
+                    ctx,
+                    t.line,
+                    format!(
+                        "wire literal \"{}\" outside api/ — all protocol strings \
+                         live in the protocol layer (§9)",
+                        t.text
+                    ),
+                ));
+            }
+        }
+        // --- LB-TEL (§11): the real telemetry plane (queue + consumer
+        // thread) is constructed at daemon/CLI edges only.
+        if t.is_ident("Telemetry") {
+            if let Some(k) = path_member(toks, i) {
+                if m.telemetry_ctors.iter().any(|c| c == &toks[k].text)
+                    && !m
+                        .telemetry_allowed
+                        .iter()
+                        .any(|p| ctx.path.starts_with(p.as_str()))
+                {
+                    out.push(finding(
+                        "LB-TEL",
+                        ctx,
+                        toks[k].line,
+                        format!(
+                            "'Telemetry::{}' called in {} — the plane is \
+                             constructed at the daemon/CLI edges only (§11)",
+                            toks[k].text, ctx.path
+                        ),
+                    ));
+                }
+            }
+        }
+    }
+}
+
+// ----------------------------------------------------------------------
+// Family 2: panic-freedom in designated hot paths (§2, §3, §10)
+// ----------------------------------------------------------------------
+
+const PANIC_MACROS: &[&str] = &["panic", "unreachable", "todo", "unimplemented"];
+const ASSERT_MACROS: &[&str] = &[
+    "assert",
+    "assert_eq",
+    "assert_ne",
+    "debug_assert",
+    "debug_assert_eq",
+    "debug_assert_ne",
+];
+
+pub fn panic_rules(ctx: &FileCtx, m: &Manifest, out: &mut Vec<Finding>) {
+    let toks = ctx.toks();
+    for zone in m.panic_zones.iter().filter(|z| z.file == ctx.path) {
+        // One finding per (rule, line): an expression like `x[i] +
+        // y[j]` is one reviewable site, not two.
+        let mut seen: BTreeSet<(String, u32)> = BTreeSet::new();
+        for (fn_name, start, end) in fn_bodies(toks, &zone.fns) {
+            for i in start..=end {
+                let t = &toks[i];
+                if ctx.in_test(t.line) {
+                    continue;
+                }
+                let prev = i.checked_sub(1).map(|p| &toks[p]);
+                let next = toks.get(i + 1);
+                let hit: Option<(&str, String)> = if zone.checks.iter().any(|c| c == "unwrap")
+                    && t.is_ident("unwrap")
+                    && prev.is_some_and(|p| p.is_punct('.'))
+                {
+                    Some(("PF-UNWRAP", ".unwrap()".into()))
+                } else if zone.checks.iter().any(|c| c == "expect")
+                    && t.is_ident("expect")
+                    && prev.is_some_and(|p| p.is_punct('.'))
+                {
+                    Some(("PF-EXPECT", ".expect()".into()))
+                } else if zone.checks.iter().any(|c| c == "panic")
+                    && t.kind == TokKind::Ident
+                    && PANIC_MACROS.contains(&t.text.as_str())
+                    && next.is_some_and(|x| x.is_punct('!'))
+                {
+                    Some(("PF-PANIC", format!("{}!", t.text)))
+                } else if zone.checks.iter().any(|c| c == "assert")
+                    && t.kind == TokKind::Ident
+                    && ASSERT_MACROS.contains(&t.text.as_str())
+                    && next.is_some_and(|x| x.is_punct('!'))
+                {
+                    Some(("PF-ASSERT", format!("{}!", t.text)))
+                } else if zone.checks.iter().any(|c| c == "index")
+                    && t.is_punct('[')
+                    && prev.is_some_and(|p| {
+                        // `expr[i]` — but `&mut [f64]` / `return [..]`
+                        // start a slice type or array literal, not an
+                        // index.
+                        (p.kind == TokKind::Ident
+                            && !matches!(
+                                p.text.as_str(),
+                                "mut" | "ref" | "dyn" | "return" | "break" | "in" | "else"
+                                    | "match" | "if" | "move" | "box"
+                            ))
+                            || p.is_punct(')')
+                            || p.is_punct(']')
+                    })
+                {
+                    Some(("PF-INDEX", "slice/array indexing".into()))
+                } else {
+                    None
+                };
+                if let Some((rule, what)) = hit {
+                    if seen.insert((rule.to_string(), t.line)) {
+                        out.push(finding(
+                            rule,
+                            ctx,
+                            t.line,
+                            format!(
+                                "{what} in panic-free zone fn '{fn_name}' ({})",
+                                zone.contract
+                            ),
+                        ));
+                    }
+                }
+            }
+        }
+    }
+}
+
+// ----------------------------------------------------------------------
+// Family 3: blocking calls + lock discipline (§10, §11)
+// ----------------------------------------------------------------------
+
+pub fn blocking_rules(ctx: &FileCtx, m: &Manifest, out: &mut Vec<Finding>) {
+    let toks = ctx.toks();
+    for zone in m.nonblock_zones.iter().filter(|z| z.file == ctx.path) {
+        let mut seen: BTreeSet<(String, u32)> = BTreeSet::new();
+        for (fn_name, start, end) in fn_bodies(toks, &zone.fns) {
+            for i in start..=end {
+                let t = &toks[i];
+                if t.kind != TokKind::Ident || !zone.ban.iter().any(|b| b == &t.text) {
+                    continue;
+                }
+                // Type names (uppercase: `File`, `OpenOptions`) match
+                // bare; method/fn names only in call position, so a
+                // local named `send` doesn't trip the rule.
+                let is_type = t.text.chars().next().is_some_and(|c| c.is_uppercase());
+                let callish = (i > 0 && (toks[i - 1].is_punct('.') || toks[i - 1].is_punct(':')))
+                    || toks.get(i + 1).is_some_and(|x| x.is_punct('('));
+                if (is_type || callish) && seen.insert((t.text.clone(), t.line)) {
+                    out.push(finding(
+                        "NB-BLOCKING",
+                        ctx,
+                        t.line,
+                        format!(
+                            "'{}' in non-blocking zone fn '{fn_name}' ({})",
+                            t.text, zone.contract
+                        ),
+                    ));
+                }
+            }
+        }
+    }
+    // Lock discipline: inside the named impl, no single statement may
+    // acquire two locks (the static shape of shard-over-shard). Guards
+    // in this impl are statement-local temporaries by §6 convention,
+    // so per-statement counting is exact for the code it governs.
+    for zone in m.lock_orders.iter().filter(|z| z.file == ctx.path) {
+        for (start, end) in impl_bodies(toks, &zone.imp) {
+            for (fn_name, fstart, fend) in fn_bodies(&toks[start..=end], &[]) {
+                let body = &toks[start + fstart..=start + fend];
+                let mut locks_in_stmt = 0usize;
+                for (k, t) in body.iter().enumerate() {
+                    if t.is_punct(';') {
+                        locks_in_stmt = 0;
+                    } else if t.is_ident("lock") && k > 0 && body[k - 1].is_punct('.') {
+                        locks_in_stmt += 1;
+                        if locks_in_stmt == 2 {
+                            out.push(finding(
+                                "NB-LOCK-NEST",
+                                ctx,
+                                t.line,
+                                format!(
+                                    "second lock acquired in one statement in \
+                                     {}::{fn_name} ({})",
+                                    zone.imp, zone.contract
+                                ),
+                            ));
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+// ----------------------------------------------------------------------
+// Family 4: determinism (§1)
+// ----------------------------------------------------------------------
+
+pub fn determinism_rules(ctx: &FileCtx, m: &Manifest, out: &mut Vec<Finding>) {
+    if !m.det_modules.iter().any(|p| ctx.path.starts_with(p.as_str())) {
+        return;
+    }
+    let toks = ctx.toks();
+    for i in 0..toks.len() {
+        let t = &toks[i];
+        if t.kind != TokKind::Ident || ctx.in_test(t.line) {
+            continue;
+        }
+        if let Some(k) = path_member(toks, i) {
+            let pair = format!("{}::{}", t.text, toks[k].text);
+            if m.det_clock_calls.iter().any(|c| c == &pair) {
+                out.push(finding(
+                    "DT-CLOCK",
+                    ctx,
+                    t.line,
+                    format!(
+                        "'{pair}' in deterministic module — §1 promises \
+                         parallel==serial bit-identity; wall clocks break replay"
+                    ),
+                ));
+                continue;
+            }
+        }
+        if m.det_clock_idents.iter().any(|c| c == &t.text) {
+            out.push(finding(
+                "DT-CLOCK",
+                ctx,
+                t.line,
+                format!("'{}' (wall clock) in deterministic module (§1)", t.text),
+            ));
+        } else if m.det_random_idents.iter().any(|c| c == &t.text) {
+            out.push(finding(
+                "DT-RANDOM",
+                ctx,
+                t.line,
+                format!(
+                    "'{}' (OS randomness) in deterministic module — use the \
+                     seeded Pcg64 (§1)",
+                    t.text
+                ),
+            ));
+        }
+    }
+}

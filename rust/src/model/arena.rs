@@ -17,6 +17,8 @@
 //! stays in the tree as the test oracle (`rust/tests/model_arena.rs`
 //! asserts bit-identity on random ensembles and on all 71 apps).
 
+#![warn(clippy::unwrap_used, clippy::expect_used)]
+
 use crate::model::gbt::GbtModel;
 
 /// Which of the four bundled models to evaluate.
@@ -163,7 +165,9 @@ impl GbtArena {
     /// into `out` (`out.len() == m.rows()`). Accumulation order per row
     /// is tree-index order — bit-identical to `GbtModel::predict`.
     pub fn eval_into(&self, id: ArenaModelId, m: &FeatureMatrix, out: &mut [f64]) {
+        // gpoeo-lint: allow(PF-ASSERT) caller-contract check: a mis-sized output buffer is a build bug, not a runtime state
         assert_eq!(out.len(), m.rows(), "output/rows mismatch");
+        // gpoeo-lint: allow(PF-ASSERT) caller-contract check: matrix narrower than the bundle's max feature id cannot be scored
         assert!(
             m.cols() >= self.n_features,
             "feature matrix has {} columns, bundle indexes {}",
@@ -171,19 +175,26 @@ impl GbtArena {
             self.n_features
         );
         out.fill(0.0);
+        // gpoeo-lint: allow(PF-INDEX) ArenaModelId has exactly 4 variants; meta is [ModelMeta; 4]
         let meta = &self.meta[id as usize];
+        // gpoeo-lint: allow(PF-INDEX) tree_start..tree_end recorded by from_models against this roots vec
         for &root in &self.roots[meta.tree_start..meta.tree_end] {
             for (acc, x) in out.iter_mut().zip(m.iter_rows()) {
                 let mut i = root as usize;
                 loop {
+                    // gpoeo-lint: allow(PF-INDEX) node ids validated < len at load time (GbtModel::validate, DESIGN.md §3)
                     let f = self.feat[i];
                     if f < 0 {
+                        // gpoeo-lint: allow(PF-INDEX) same validated node id as feat[i] above
                         *acc += self.thr[i];
                         break;
                     }
+                    // gpoeo-lint: allow(PF-INDEX) f >= 0 here and f < n_features <= m.cols() by the assert above
                     i = if x[f as usize] <= self.thr[i] {
+                        // gpoeo-lint: allow(PF-INDEX) child ids range-checked against node count at load time
                         self.left[i] as usize
                     } else {
+                        // gpoeo-lint: allow(PF-INDEX) child ids range-checked against node count at load time
                         self.right[i] as usize
                     };
                 }
@@ -211,6 +222,7 @@ impl GbtArena {
     }
 }
 
+#[allow(clippy::unwrap_used, clippy::expect_used)]
 #[cfg(test)]
 mod tests {
     use super::*;

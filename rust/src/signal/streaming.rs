@@ -28,6 +28,8 @@
 //! bit-identical to `online_detect_with` on the same samples, which
 //! `rust/tests/detection_streaming.rs` enforces across all 71 apps.
 
+#![warn(clippy::unwrap_used, clippy::expect_used)]
+
 use crate::signal::fft::{periodogram_with, FftScratch};
 use crate::signal::online::{composite_feature_into, online_detect_loop, OnlineDetection};
 use crate::signal::period::{calc_period_scratch, PeriodCfg, PeriodEstimate, PeriodScratch};
@@ -396,6 +398,7 @@ impl StreamingDetector {
                 return est;
             }
             *misses += 1;
+            // gpoeo-lint: allow(PF-INDEX) online_detect_loop only probes istart < n = feat.len(), so the range start is always in bounds
             let est = calc_period_scratch(&feat[istart..], ts, cfg, &mut *spectrum, &mut *scratch);
             cache.insert(key, est);
             est
@@ -435,6 +438,7 @@ impl StreamingDetector {
     }
 }
 
+#[allow(clippy::unwrap_used, clippy::expect_used)]
 #[cfg(test)]
 mod tests {
     use super::*;

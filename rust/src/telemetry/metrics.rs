@@ -8,6 +8,8 @@
 //! enums in declaration order, so the exposition text is deterministic
 //! — HELP/TYPE once per family, families never duplicated.
 
+#![warn(clippy::unwrap_used, clippy::expect_used)]
+
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
@@ -232,6 +234,10 @@ impl Metrics {
         }
     }
 
+    // Invariant expects: COUNTERS/GAUGES/HISTS are compile-time static
+    // tables that enumerate every variant; a miss is a table/enum edit
+    // gone wrong, caught by any test that touches metrics.
+    #[allow(clippy::expect_used)]
     fn counter_idx(c: Counter) -> usize {
         COUNTERS
             .iter()
@@ -239,6 +245,7 @@ impl Metrics {
             .expect("counter registered")
     }
 
+    #[allow(clippy::expect_used)]
     fn gauge_idx(g: Gauge) -> usize {
         GAUGES
             .iter()
@@ -246,6 +253,7 @@ impl Metrics {
             .expect("gauge registered")
     }
 
+    #[allow(clippy::expect_used)]
     fn hist_idx(h: Hist) -> usize {
         HISTS
             .iter()
@@ -294,12 +302,14 @@ impl Metrics {
 
     /// Count one gear switch for `policy`.
     pub fn gear_switch(&self, policy: &str) {
-        let mut m = self.gear_switches.lock().expect("gear-switch lock");
+        // Poison recovery: the map is always structurally valid, and a
+        // lost increment from a panicked peer beats killing the scrape.
+        let mut m = self.gear_switches.lock().unwrap_or_else(|e| e.into_inner());
         *m.entry(policy.to_string()).or_insert(0) += 1;
     }
 
     pub fn gear_switches(&self, policy: &str) -> u64 {
-        let m = self.gear_switches.lock().expect("gear-switch lock");
+        let m = self.gear_switches.lock().unwrap_or_else(|e| e.into_inner());
         m.get(policy).copied().unwrap_or(0)
     }
 
@@ -318,7 +328,7 @@ impl Metrics {
             let name = "gpoeo_gear_switches_total";
             out.push_str(&format!("# HELP {name} Gear switches applied, by policy\n"));
             out.push_str(&format!("# TYPE {name} counter\n"));
-            let m = self.gear_switches.lock().expect("gear-switch lock");
+            let m = self.gear_switches.lock().unwrap_or_else(|e| e.into_inner());
             for (policy, v) in m.iter() {
                 out.push_str(&format!("{name}{{policy=\"{policy}\"}} {v}\n"));
             }
@@ -348,6 +358,7 @@ impl Metrics {
     }
 }
 
+#[allow(clippy::unwrap_used, clippy::expect_used)]
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -21,6 +21,8 @@
 //! - the consumer thread owns all I/O (journal writes, subscriber
 //!   forwarding); its failures degrade to drop-and-count.
 
+#![warn(clippy::unwrap_used, clippy::expect_used)]
+
 pub mod journal;
 pub mod metrics;
 pub mod window;
@@ -351,6 +353,10 @@ impl Telemetry {
         {
             let metrics = metrics.clone();
             let subs = subs.clone();
+            // Invariant expect: spawn fails only on OS thread
+            // exhaustion at daemon startup, before any session exists
+            // — there is no meaningful degraded mode to fall back to.
+            #[allow(clippy::expect_used)]
             std::thread::Builder::new()
                 .name("telemetry-consumer".into())
                 .spawn(move || consumer_loop(rx, metrics, subs, journal, hook))
@@ -391,7 +397,10 @@ impl Telemetry {
         notify: Box<dyn Fn() + Send>,
     ) -> u64 {
         let id = self.next_sub.fetch_add(1, Ordering::SeqCst);
-        self.subs.lock().expect("subs lock").push(SubEntry {
+        // Subs-lock poisoning is recoverable everywhere it is taken:
+        // the Vec stays valid, and a dead tap only means a dropped
+        // receiver that retain()/send() already tolerate.
+        self.subs.lock().unwrap_or_else(|e| e.into_inner()).push(SubEntry {
             id,
             session,
             tag,
@@ -405,7 +414,10 @@ impl Telemetry {
     /// lock, so once this returns no further events can arrive on the
     /// tap's channel — callers drain it afterwards for a clean close.
     pub fn unsubscribe(&self, id: u64) {
-        self.subs.lock().expect("subs lock").retain(|s| s.id != id);
+        self.subs
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .retain(|s| s.id != id);
     }
 
     /// Best-effort barrier: wait (up to `timeout`) until the consumer
@@ -445,7 +457,7 @@ fn consumer_loop(
             j.write(&ev);
         }
         {
-            let subs = subs.lock().expect("subs lock");
+            let subs = subs.lock().unwrap_or_else(|e| e.into_inner());
             for s in subs.iter().filter(|s| s.session == ev.session()) {
                 if s.tx.send((s.tag, ev.clone())).is_ok() {
                     (s.notify)();
@@ -459,6 +471,7 @@ fn consumer_loop(
     }
 }
 
+#[allow(clippy::unwrap_used, clippy::expect_used)]
 #[cfg(test)]
 mod tests {
     use super::*;

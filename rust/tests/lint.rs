@@ -1,0 +1,138 @@
+//! The lint engine against its seeded-violation fixture tree
+//! (`tests/lint_fixtures/`), plus the self-check that the real source
+//! tree is clean under the checked-in `rust/lint.toml`.
+
+use gpoeo::lint::{run_manifest, Report};
+use std::path::Path;
+
+fn fixture_report() -> Report {
+    let m = Path::new(env!("CARGO_MANIFEST_DIR")).join("tests/lint_fixtures/lint.toml");
+    run_manifest(&m, None).expect("fixture lint run")
+}
+
+/// Exactly-one finding of `rule` at `file:line`.
+fn assert_fires(r: &Report, rule: &str, file: &str, line: u32) {
+    let hits = r
+        .findings
+        .iter()
+        .filter(|f| f.rule == rule && f.file == file && f.line == line)
+        .count();
+    assert_eq!(
+        hits, 1,
+        "{rule} at {file}:{line}: expected exactly 1 finding, got {hits}\n{}",
+        r.to_text()
+    );
+}
+
+#[test]
+fn layer_rules_fire_on_seeded_fixtures() {
+    let r = fixture_report();
+    let f = "src/util/layering.rs";
+    assert_fires(&r, "LB-DAG", f, 5);
+    assert_fires(&r, "LB-SIMGPU", f, 6);
+    assert_fires(&r, "LB-POLICY-MATCH", f, 8);
+    assert_fires(&r, "LB-PROTO", f, 9);
+    assert_fires(&r, "LB-PROTO", f, 10);
+    assert_fires(&r, "LB-TEL", f, 11);
+    // A grouped import is one line, two layer edges.
+    let grouped = r
+        .findings
+        .iter()
+        .filter(|x| x.rule == "LB-DAG" && x.file == f && x.line == 14)
+        .count();
+    assert_eq!(grouped, 2, "use crate::{{a, b}} must yield one finding per member");
+    // The sanctioned sim → util edge stays silent.
+    assert!(
+        !r.findings
+            .iter()
+            .any(|x| x.rule == "LB-DAG" && x.file == "src/sim/clockful.rs"),
+        "allowed layer edge flagged"
+    );
+}
+
+#[test]
+fn panic_rules_fire_only_inside_the_zone() {
+    let r = fixture_report();
+    let f = "src/hot.rs";
+    assert_fires(&r, "PF-UNWRAP", f, 5);
+    assert_fires(&r, "PF-EXPECT", f, 6);
+    assert_fires(&r, "PF-PANIC", f, 8);
+    assert_fires(&r, "PF-ASSERT", f, 10);
+    assert_fires(&r, "PF-INDEX", f, 11);
+    // cold_fn does the same things outside the zone fn list.
+    assert!(
+        !r.findings.iter().any(|x| x.file == f && x.line >= 14),
+        "finding outside the declared panic zone:\n{}",
+        r.to_text()
+    );
+}
+
+#[test]
+fn blocking_and_lock_rules_fire() {
+    let r = fixture_report();
+    let f = "src/reactor.rs";
+    assert_fires(&r, "NB-BLOCKING", f, 8); // .send(
+    assert_fires(&r, "NB-BLOCKING", f, 9); // .recv(
+    assert_fires(&r, "NB-BLOCKING", f, 10); // thread::sleep
+    assert_fires(&r, "NB-BLOCKING", f, 11); // File (bare type)
+    assert_fires(&r, "NB-LOCK-NEST", f, 21); // second .lock() in one stmt
+}
+
+#[test]
+fn determinism_rules_fire() {
+    let r = fixture_report();
+    let f = "src/sim/clockful.rs";
+    assert_fires(&r, "DT-CLOCK", f, 6); // Instant::now
+    assert_fires(&r, "DT-CLOCK", f, 7); // UNIX_EPOCH
+    assert_fires(&r, "DT-RANDOM", f, 8); // thread_rng
+}
+
+#[test]
+fn waiver_suppresses_exactly_one_finding() {
+    let r = fixture_report();
+    let f = "src/sim/waived.rs";
+    // Two identical violations, one waiver: line 7 waived, line 11 not.
+    assert!(
+        r.waived
+            .iter()
+            .any(|w| w.finding.rule == "DT-RANDOM" && w.finding.file == f && w.finding.line == 7),
+        "waiver on the preceding line must cover line 7:\n{}",
+        r.to_text()
+    );
+    assert_fires(&r, "DT-RANDOM", f, 11);
+    // The stale trailing waiver surfaces as unused, informationally.
+    assert!(
+        r.unused_waivers
+            .iter()
+            .any(|u| u.file == f && u.line == 14 && u.rule == "PF-UNWRAP"),
+        "stale waiver must be reported unused:\n{}",
+        r.to_text()
+    );
+}
+
+#[test]
+fn rule_filter_restricts_reporting() {
+    let m = Path::new(env!("CARGO_MANIFEST_DIR")).join("tests/lint_fixtures/lint.toml");
+    let r = run_manifest(&m, Some("PF-UNWRAP")).expect("filtered lint run");
+    assert!(r.findings.iter().all(|f| f.rule == "PF-UNWRAP"));
+    assert_eq!(r.findings.len(), 1, "{}", r.to_text());
+    // Family keyword selects the whole family.
+    let r = run_manifest(&m, Some("panic")).expect("family-filtered run");
+    assert!(!r.findings.is_empty());
+    assert!(r.findings.iter().all(|f| f.rule.starts_with("PF-")));
+}
+
+#[test]
+fn real_tree_is_clean() {
+    // The gate CI enforces: the shipped tree has zero non-waived
+    // findings and zero stale waivers under the checked-in manifest.
+    let m = Path::new(env!("CARGO_MANIFEST_DIR")).join("lint.toml");
+    let r = run_manifest(&m, None).expect("lint run over src/");
+    assert!(r.ok(), "real tree has lint findings:\n{}", r.to_text());
+    assert!(
+        r.unused_waivers.is_empty(),
+        "stale waivers in the real tree:\n{}",
+        r.to_text()
+    );
+    assert!(r.files_scanned > 40, "suspiciously few files scanned");
+}

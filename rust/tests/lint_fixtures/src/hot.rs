@@ -1,0 +1,16 @@
+//! Fixture: seeded panic-zone violations in `hot_fn` only — `cold_fn`
+//! does the same things outside the zone and must stay silent.
+
+pub fn hot_fn(v: &[f64], o: Option<f64>, r: Result<f64, ()>) -> f64 {
+    let a = o.unwrap();
+    let b = r.expect("boom");
+    if v.is_empty() {
+        panic!("no data");
+    }
+    assert!(a > 0.0);
+    a + b + v[0]
+}
+
+pub fn cold_fn(v: &[f64]) -> f64 {
+    v[17]
+}

@@ -1,0 +1,24 @@
+//! Fixture: blocking calls in `serve` (the non-blocking zone) and a
+//! nested shard-lock statement inside `impl Table` (the lock-order
+//! zone).
+
+use std::sync::{mpsc, Mutex};
+
+pub fn serve(tx: &mpsc::Sender<u32>, rx: &mpsc::Receiver<u32>) {
+    tx.send(1).ok();
+    let _ = rx.recv();
+    std::thread::sleep(std::time::Duration::from_millis(1));
+    let _f = std::fs::File::open("x");
+}
+
+pub struct Table {
+    a: Mutex<u32>,
+    b: Mutex<u32>,
+}
+
+impl Table {
+    pub fn sum(&self) -> u32 {
+        let x = *self.a.lock().unwrap() + *self.b.lock().unwrap();
+        x
+    }
+}

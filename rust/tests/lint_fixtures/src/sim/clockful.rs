@@ -1,0 +1,14 @@
+//! Fixture: wall clocks and OS randomness inside a deterministic
+//! module. `helper` exercises the one *allowed* layer edge (sim →
+//! util) and must not fire LB-DAG.
+
+pub fn sample() -> u64 {
+    let _t = std::time::Instant::now();
+    let _e = std::time::UNIX_EPOCH;
+    let _r = thread_rng();
+    0
+}
+
+pub fn helper() -> f64 {
+    crate::util::mean()
+}

@@ -1,0 +1,14 @@
+//! Fixture: two identical violations, one waiver — exactly one may be
+//! suppressed. The trailing waiver matches nothing and must surface as
+//! unused (informational, never a failure).
+
+pub fn a() -> u64 {
+    // gpoeo-lint: allow(DT-RANDOM) fixture: covers exactly the next line
+    thread_rng()
+}
+
+pub fn b() -> u64 {
+    thread_rng()
+}
+
+// gpoeo-lint: allow(PF-UNWRAP) fixture: stale waiver, matches nothing

@@ -1,0 +1,14 @@
+//! Fixture: one seeded violation per layer rule (`util` may depend on
+//! nothing, so any crate-path reference is an LB-DAG hit).
+
+pub fn layering() {
+    let _ = crate::sim::step();
+    let _g = SimGpu::new();
+    let name = "x";
+    if name == "gpoeo" {}
+    let _v = PROTOCOL_VERSION;
+    let _w = "hello";
+    let _t = Telemetry::new();
+}
+
+use crate::{signal, telemetry};
