@@ -156,7 +156,7 @@ fn main() {
             let base = run_sim(&spec, &app, &mut DefaultPolicy { ts }, 150);
             let mut g = Gpoeo::new(GpoeoCfg::default(), predictor.clone());
             let run = run_sim(&spec, &app, &mut g, 150);
-            let s = gpoeo::coordinator::savings(&base, &run);
+            let s = gpoeo::coordinator::savings(&base, &run).unwrap();
             println!(
                 "e2e: optimize {name:<12} 150 iters: {:>6.2}s wall ({:>7.1}s virtual, saving {:+.1}%)",
                 t0.elapsed().as_secs_f64(),

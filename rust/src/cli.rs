@@ -53,7 +53,7 @@ SUBCOMMANDS:
                                (fig1 fig2 fig3 fig5 fig6 fig7 fig8 fig9
                                 fig10 fig11 fig12 fig13 table3 fig14
                                 fig15 headline policies detect-bench
-                                predict-bench api-bench | all);
+                                predict-bench api-bench sim-bench | all);
                                 detect-bench appends streaming-vs-batch
                                 detection cost to BENCH_detection.json
                                 (--poll-s F --min-speedup X fails below
@@ -68,7 +68,11 @@ SUBCOMMANDS:
                                 --min-churn X --max-p99-ms F as the CI
                                 floor; --max-overhead-pct P fails when
                                 the attached telemetry plane costs >P%
-                                p99 at the top tier)
+                                p99 at the top tier); sim-bench appends
+                                stepped-vs-fast-forward simulation cost
+                                and divergence to BENCH_sim.json
+                                (--reps N --min-speedup X fails below
+                                X×; any divergence >1e-9 fails)
   daemon [--socket PATH]       Begin/End API server (micro-intrusive
                                mode; --workers N fleet threads, AIMD
                                auto-scaled up to --max-workers N;

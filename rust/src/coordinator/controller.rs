@@ -281,7 +281,7 @@ impl Gpoeo {
         gpu.advance(self.cfg.settle_s);
         gpu.start_counter_session();
         gpu.advance(feat_window);
-        let features = gpu.read_counters();
+        let features = gpu.read_counters()?;
         gpu.stop_counter_session();
 
         // --- Baseline (power, IPS) at the entry clocks: a longer window

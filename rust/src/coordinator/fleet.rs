@@ -58,6 +58,87 @@ pub struct JobOutcome {
     pub stats: Option<GpoeoStats>,
 }
 
+/// Everything a default-policy baseline run depends on (DESIGN.md §13).
+/// Two jobs with equal keys have bit-identical baselines: the simulator
+/// is deterministic in (spec, app, ts, n_iters), the app is pinned by
+/// (suite, name, trace_seed), the spec by its groundtruth digest, and
+/// the default policy's only knob is its tick `ts`.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct BaselineKey {
+    pub suite: String,
+    pub app: String,
+    pub trace_seed: u64,
+    pub n_iters: u64,
+    /// `ts.to_bits()` — the tick is part of the trajectory (it sets the
+    /// RNG draw count), so baselines at different ticks never unify.
+    pub ts_bits: u64,
+    pub spec_digest: u64,
+}
+
+/// Sweep-wide cache of default-policy baseline runs, shared by every
+/// worker of a [`Fleet`]. A sweep scores each (app × policy) job against
+/// the same NVIDIA-default baseline; without the cache that baseline is
+/// re-simulated once per *policy*, which is pure waste — with it, once
+/// per (app, iters, tick, spec).
+///
+/// Races are benign: workers compute outside the lock, so two workers
+/// may both miss on the same key and compute duplicate (bit-identical —
+/// deterministic simulator) baselines; the first insert wins and the
+/// `misses` counter records the duplicate work honestly.
+pub struct BaselineCache {
+    map: Mutex<HashMap<BaselineKey, Arc<RunResult>>>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+impl BaselineCache {
+    pub fn new() -> BaselineCache {
+        BaselineCache {
+            map: Mutex::new(HashMap::new()),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+        }
+    }
+
+    /// The cached baseline for `key`, or `compute()` stored under it.
+    pub fn get_or_compute(
+        &self,
+        key: BaselineKey,
+        compute: impl FnOnce() -> RunResult,
+    ) -> Arc<RunResult> {
+        if let Some(hit) = self
+            .map
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .get(&key)
+        {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            return Arc::clone(hit);
+        }
+        // Compute outside the lock: a baseline run takes real time, and
+        // holding the map across it would serialize the whole pool.
+        let v = Arc::new(compute());
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        let mut map = self.map.lock().unwrap_or_else(|e| e.into_inner());
+        Arc::clone(map.entry(key).or_insert(v))
+    }
+
+    /// (hits, misses) so far. Misses count computes, including duplicate
+    /// races, so `hits + misses` equals the number of lookups.
+    pub fn stats(&self) -> (u64, u64) {
+        (
+            self.hits.load(Ordering::Relaxed),
+            self.misses.load(Ordering::Relaxed),
+        )
+    }
+}
+
+impl Default for BaselineCache {
+    fn default() -> BaselineCache {
+        BaselineCache::new()
+    }
+}
+
 /// Telemetry snapshot of an interactive session.
 #[derive(Debug, Clone, Copy)]
 pub struct SessionStatus {
@@ -307,6 +388,9 @@ pub struct Fleet {
     /// Telemetry plane shared by every worker (DESIGN.md §11).
     /// [`Telemetry::disabled`] unless wired via [`Fleet::with_telemetry`].
     tel: Arc<Telemetry>,
+    /// Sweep-wide default-policy baseline cache shared by every worker
+    /// (DESIGN.md §13).
+    baseline: Arc<BaselineCache>,
 }
 
 impl Fleet {
@@ -350,8 +434,16 @@ impl Fleet {
     fn build(spec: Arc<Spec>, workers: usize, cfg: Option<AimdCfg>, tel: Arc<Telemetry>) -> Fleet {
         let n = workers.max(1);
         let next_worker = AtomicUsize::new(0);
+        let baseline = Arc::new(BaselineCache::new());
         let workers = (0..n)
-            .map(|_| spawn_worker(&spec, next_worker.fetch_add(1, Ordering::SeqCst), &tel))
+            .map(|_| {
+                spawn_worker(
+                    &spec,
+                    next_worker.fetch_add(1, Ordering::SeqCst),
+                    &tel,
+                    &baseline,
+                )
+            })
             .collect();
         Fleet {
             spec,
@@ -361,11 +453,17 @@ impl Fleet {
             scaler: cfg.map(|c| Mutex::new(AimdState::new(c))),
             started: Instant::now(),
             tel,
+            baseline,
         }
     }
 
     pub fn spec(&self) -> &Arc<Spec> {
         &self.spec
+    }
+
+    /// The sweep-wide baseline cache (hit/miss counters for reporting).
+    pub fn baseline_cache(&self) -> &Arc<BaselineCache> {
+        &self.baseline
     }
 
     /// The telemetry plane the fleet's workers emit into.
@@ -403,6 +501,7 @@ impl Fleet {
                     &self.spec,
                     self.next_worker.fetch_add(1, Ordering::SeqCst),
                     &self.tel,
+                    &self.baseline,
                 ));
                 Some(ws.len())
             }
@@ -728,10 +827,16 @@ fn feed_worker(
 /// Spawn one worker thread with its command queue. `i` is a process-wide
 /// worker ordinal (monotonic across autoscale grow events) so thread
 /// names stay unique for the life of the fleet.
-fn spawn_worker(spec: &Arc<Spec>, i: usize, tel: &Arc<Telemetry>) -> WorkerHandle {
+fn spawn_worker(
+    spec: &Arc<Spec>,
+    i: usize,
+    tel: &Arc<Telemetry>,
+    baseline: &Arc<BaselineCache>,
+) -> WorkerHandle {
     let (tx, rx) = channel();
     let spec = spec.clone();
     let tel = tel.clone();
+    let baseline = baseline.clone();
     // The worker keeps a sender to its own queue so a long END can
     // re-enqueue itself in slices (see worker_loop).
     let self_tx = tx.clone();
@@ -740,7 +845,7 @@ fn spawn_worker(spec: &Arc<Spec>, i: usize, tel: &Arc<Telemetry>) -> WorkerHandl
     #[allow(clippy::expect_used)]
     let join = std::thread::Builder::new()
         .name(format!("fleet-worker-{i}"))
-        .spawn(move || worker_loop(spec, rx, self_tx, tel))
+        .spawn(move || worker_loop(spec, rx, self_tx, tel, baseline))
         .expect("failed to spawn fleet worker");
     WorkerHandle {
         tx: Some(tx),
@@ -771,30 +876,20 @@ impl WorkerSession {
 
     /// Advance by at most `max_ticks`; returns the ticks executed (the
     /// telemetry layer divides wall time by it for per-tick latency).
+    /// Routed through [`Policy::drive`] so tick-less policies (the
+    /// default baseline) fast-forward instead of looping here.
     fn step(&mut self, max_ticks: u64) -> u64 {
-        let mut n = 0;
-        for _ in 0..max_ticks {
-            if self.done() {
-                break;
-            }
-            self.policy.tick(self.dev.as_mut());
-            n += 1;
-        }
-        n
+        self.policy
+            .drive(self.dev.as_mut(), self.target_iters, f64::INFINITY, max_ticks)
     }
 
     /// One bounded slice of the run; `.0` is true once the session is
     /// finished (target reached, or the errant-policy budget exhausted),
     /// `.1` the ticks executed.
     fn slice(&mut self, max_ticks: u64, budget_s: f64) -> (bool, u64) {
-        let mut n = 0;
-        for _ in 0..max_ticks {
-            if self.done() || self.dev.time_s() >= budget_s {
-                break;
-            }
-            self.policy.tick(self.dev.as_mut());
-            n += 1;
-        }
+        let n = self
+            .policy
+            .drive(self.dev.as_mut(), self.target_iters, budget_s, max_ticks);
         (self.done() || self.dev.time_s() >= budget_s, n)
     }
 
@@ -842,7 +937,13 @@ fn end_event(id: u64, st: &SessionStatus) -> TelemetryEvent {
     }
 }
 
-fn worker_loop(spec: Arc<Spec>, rx: Receiver<Cmd>, self_tx: Sender<Cmd>, tel: Arc<Telemetry>) {
+fn worker_loop(
+    spec: Arc<Spec>,
+    rx: Receiver<Cmd>,
+    self_tx: Sender<Cmd>,
+    tel: Arc<Telemetry>,
+    baseline: Arc<BaselineCache>,
+) {
     // One predictor per worker thread — compiled on first use (never,
     // for an ODPP/default-only workload), then reused by every job and
     // session this worker runs. Built here (not in the Fleet) because
@@ -858,7 +959,7 @@ fn worker_loop(spec: Arc<Spec>, rx: Receiver<Cmd>, self_tx: Sender<Cmd>, tel: Ar
                 job,
                 reply,
             } => {
-                let _ = reply.send((worker, idx, run_job(&spec, &predictor, &job)));
+                let _ = reply.send((worker, idx, run_job(&spec, &predictor, &job, &baseline)));
             }
             Cmd::Begin { id, req, reply } => {
                 // Build the policy here, on the worker thread: a policy
@@ -991,6 +1092,7 @@ fn run_job(
     spec: &Arc<Spec>,
     predictor: &OnceCell<Result<Arc<Predictor>, String>>,
     job: &SweepJob,
+    baseline: &BaselineCache,
 ) -> anyhow::Result<JobOutcome> {
     let provider = || {
         predictor
@@ -1004,19 +1106,32 @@ fn run_job(
     };
     let reg = PolicyRegistry::global();
 
-    // The baseline is itself a registered policy; running it fresh (even
-    // for `default` jobs) keeps this loop free of name matching, and the
-    // deterministic simulator makes the re-run bit-identical anyway.
+    // The baseline is itself a registered policy, fetched through the
+    // sweep-wide cache: a sweep scores P policies against one baseline
+    // per app, so only the first (app, iters, tick) job per fleet pays
+    // the simulation. The `ts` knob mirrors the default builder's
+    // (policy/mod.rs) — it is the only config the baseline run reads.
+    let ts = job.policy.cfg.opt_f64("ts", 0.025)?;
     let mut base_policy = reg.build("default", &ctx, &job.policy.cfg)?;
-    let base = run_sim(spec, &job.app, base_policy.as_mut(), job.n_iters);
+    let key = BaselineKey {
+        suite: job.app.suite.clone(),
+        app: job.app.name.clone(),
+        trace_seed: job.app.trace_seed,
+        n_iters: job.n_iters,
+        ts_bits: ts.to_bits(),
+        spec_digest: spec.digest,
+    };
+    let base = baseline.get_or_compute(key, || {
+        run_sim(spec, &job.app, base_policy.as_mut(), job.n_iters)
+    });
 
     let mut policy = reg.build_spec(&job.policy, &ctx)?;
     let run = run_sim(spec, &job.app, policy.as_mut(), job.n_iters);
     let stats = policy.gpoeo_stats();
 
-    let sv = savings(&base, &run);
+    let sv = savings(&base, &run)?;
     Ok(JobOutcome {
-        base,
+        base: (*base).clone(),
         run,
         savings: sv,
         stats,
@@ -1101,6 +1216,47 @@ mod tests {
             let parallel = Fleet::new(spec.clone(), 2).run_jobs(jobs);
             assert_same_outcomes(&serial, &parallel);
         }
+    }
+
+    #[test]
+    fn baseline_cache_hits_are_bit_identical_to_uncached() {
+        let spec = Arc::new(Spec::load_default().unwrap());
+        let apps: Vec<AppParams> = make_suite(&spec, "aibench")
+            .unwrap()
+            .into_iter()
+            .take(4)
+            .collect();
+        // Two model-free policies over the same 4 apps through ONE
+        // fleet: the first policy's jobs compute the baselines, the
+        // second policy's jobs must hit the cache.
+        let mut jobs = Vec::new();
+        for name in ["odpp", "bandit"] {
+            for app in &apps {
+                jobs.push(SweepJob {
+                    app: app.clone(),
+                    policy: PolicySpec::registered(name),
+                    n_iters: 40,
+                });
+            }
+        }
+        let fleet = Fleet::new(spec.clone(), 1);
+        let cached = fleet.run_jobs(jobs.clone());
+        let (hits, misses) = fleet.baseline_cache().stats();
+        assert_eq!(misses, 4, "one baseline compute per app");
+        assert_eq!(hits, 4, "the second policy reuses every baseline");
+
+        // Every job re-run through its own fresh fleet (nothing shared,
+        // every baseline computed from scratch) must match bit-for-bit —
+        // including the baseline fields and the derived savings.
+        let uncached: Vec<anyhow::Result<JobOutcome>> = jobs
+            .iter()
+            .map(|j| {
+                Fleet::new(spec.clone(), 1)
+                    .run_jobs(vec![j.clone()])
+                    .remove(0)
+            })
+            .collect();
+        assert_same_outcomes(&cached, &uncached);
     }
 
     #[test]

@@ -19,14 +19,14 @@ pub mod runner;
 
 pub use controller::{Gpoeo, GpoeoCfg, GpoeoStats};
 pub use fleet::{
-    AimdCfg, AimdState, Fleet, JobOutcome, Reply, ScaleDecision, SessionHandle, SessionStatus,
-    SweepJob,
+    AimdCfg, AimdState, BaselineCache, BaselineKey, Fleet, JobOutcome, Reply, ScaleDecision,
+    SessionHandle, SessionStatus, SweepJob,
 };
 pub use odpp::{Odpp, OdppCfg};
 pub use oracle::{oracle_full, oracle_ordered, OracleResult};
 pub use runner::{
     default_iters, run_budget_s, run_policy, run_sim, savings, DefaultPolicy, Policy, RunResult,
-    Savings,
+    Savings, ZeroWorkError,
 };
 // Re-exported for continuity: the policy-selection type moved into the
 // policy subsystem when construction was centralized there.
@@ -79,7 +79,7 @@ pub fn cli_run(args: &Args) -> anyhow::Result<()> {
     let result = run_sim(&spec, &app, policy.as_mut(), n_iters);
     let stats = policy.gpoeo_stats();
 
-    let s = savings(&base, &result);
+    let s = savings(&base, &result)?;
     println!("app {name} ({} iterations)", n_iters);
     println!(
         "  baseline : {:>10.1} J  {:>8.1} s  (sm gear {}, mem gear {})",

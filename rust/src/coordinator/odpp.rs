@@ -310,7 +310,7 @@ mod tests {
         fn profiling_active(&self) -> bool {
             self.inner.profiling_active()
         }
-        fn read_counters(&mut self) -> Vec<f64> {
+        fn read_counters(&mut self) -> Result<Vec<f64>, crate::sim::CounterSessionError> {
             self.inner.read_counters()
         }
         fn advance(&mut self, dt: f64) {

@@ -21,6 +21,29 @@ pub trait Policy {
     fn name(&self) -> &'static str;
     fn tick(&mut self, dev: &mut dyn Device);
 
+    /// Drive the device toward `target_iters` total iterations, stopping
+    /// early when device time reaches `budget_s` or after `max_ticks`
+    /// ticks. Returns the number of ticks executed. The default is the
+    /// plain tick loop every driver historically ran; policies whose
+    /// tick is a pure `advance` (no per-tick decisions) override it with
+    /// the device's segment fast-forward — with bit-identical results
+    /// (DESIGN.md §13). `run_policy` and the fleet's session drive both
+    /// route through this single method.
+    fn drive(
+        &mut self,
+        dev: &mut dyn Device,
+        target_iters: u64,
+        budget_s: f64,
+        max_ticks: u64,
+    ) -> u64 {
+        let mut n = 0;
+        while n < max_ticks && dev.iterations() < target_iters && dev.time_s() < budget_s {
+            self.tick(dev);
+            n += 1;
+        }
+        n
+    }
+
     /// The GPOEO optimization trace, when this policy is the GPOEO
     /// controller — the reporting hook the fleet and CLI use on boxed
     /// policies. Everything else reports `None`.
@@ -52,6 +75,24 @@ impl Policy for DefaultPolicy {
     fn tick(&mut self, dev: &mut dyn Device) {
         dev.advance(self.ts);
     }
+
+    /// The default policy makes no per-tick decisions, so driving it is
+    /// pure advancing — hand the whole span to the device's segment
+    /// fast-forward. The tick count is recovered from elapsed device
+    /// time; the half-tick margin on the tick bound keeps accumulated
+    /// floating-point error from ever executing `max_ticks + 1` ticks.
+    fn drive(
+        &mut self,
+        dev: &mut dyn Device,
+        target_iters: u64,
+        budget_s: f64,
+        max_ticks: u64,
+    ) -> u64 {
+        let t0 = dev.time_s();
+        let t_slice = t0 + (max_ticks as f64 - 0.5) * self.ts;
+        dev.advance_until(target_iters, budget_s.min(t_slice), self.ts);
+        ((dev.time_s() - t0) / self.ts).round() as u64
+    }
 }
 
 /// Outcome of running one policy on one app for a fixed work amount.
@@ -66,21 +107,17 @@ pub struct RunResult {
     pub final_mem_gear: usize,
 }
 
-/// Virtual-time budget for driving `n_iters` work units starting at
-/// `now_s`: generous for any sane policy, finite for errant ones. The
-/// single source of truth for every drive loop (here and in the fleet).
-pub fn run_budget_s(now_s: f64, n_iters: u64, nominal_iter_s: f64) -> f64 {
-    now_s + 50.0 * n_iters as f64 * nominal_iter_s + 3600.0
-}
+/// Virtual-time budget for driving `n_iters` work units (re-exported
+/// from `sim`, where `SimGpu::run_iterations` shares it — the single
+/// source of truth for every drive loop).
+pub use crate::sim::run_budget_s;
 
 /// Run `policy` on an already-attached device until `n_iters` iterations
-/// (work units) finish.
+/// (work units) finish, with a hard stop at the shared `run_budget_s`
+/// cutoff (errant policies).
 pub fn run_policy(dev: &mut dyn Device, policy: &mut dyn Policy, n_iters: u64) -> RunResult {
-    // Hard stop at a generous virtual-time budget (errant policies).
     let budget_s = run_budget_s(dev.time_s(), n_iters, dev.nominal_iter_s());
-    while dev.iterations() < n_iters && dev.time_s() < budget_s {
-        policy.tick(dev);
-    }
+    policy.drive(dev, n_iters, budget_s, u64::MAX);
     RunResult {
         app: dev.workload().to_string(),
         policy: policy.name().to_string(),
@@ -112,17 +149,44 @@ pub struct Savings {
     pub ed2p_saving: f64,
 }
 
-pub fn savings(base: &RunResult, run: &RunResult) -> Savings {
+/// A run finished with zero completed iterations (budget-exhausted
+/// before any work), so per-work-unit savings are undefined. Typed so
+/// callers log-and-skip instead of letting NaN poison `BENCH_*.json`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ZeroWorkError {
+    pub base_iterations: u64,
+    pub run_iterations: u64,
+}
+
+impl std::fmt::Display for ZeroWorkError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "savings undefined on a zero-iteration run (base {} iters, run {} iters)",
+            self.base_iterations, self.run_iterations
+        )
+    }
+}
+
+impl std::error::Error for ZeroWorkError {}
+
+pub fn savings(base: &RunResult, run: &RunResult) -> Result<Savings, ZeroWorkError> {
+    if base.iterations == 0 || run.iterations == 0 {
+        return Err(ZeroWorkError {
+            base_iterations: base.iterations,
+            run_iterations: run.iterations,
+        });
+    }
     // Normalize per work unit: policies overshoot the iteration target by
     // different amounts (a probe window can span several iterations), so
     // raw totals would compare different amounts of work.
     let e = (run.energy_j / run.iterations as f64) / (base.energy_j / base.iterations as f64);
     let t = (run.time_s / run.iterations as f64) / (base.time_s / base.iterations as f64);
-    Savings {
+    Ok(Savings {
         energy_saving: 1.0 - e,
         slowdown: t - 1.0,
         ed2p_saving: 1.0 - e * t * t,
-    }
+    })
 }
 
 /// Work-unit budget for one app: enough iterations that the optimization
@@ -167,9 +231,158 @@ mod tests {
             time_s: 104.0,
             ..base.clone()
         }; // same iteration count => plain ratios
-        let s = savings(&base, &run);
+        let s = savings(&base, &run).unwrap();
         assert!((s.energy_saving - 0.15).abs() < 1e-12);
         assert!((s.slowdown - 0.04).abs() < 1e-12);
+    }
+
+    #[test]
+    fn savings_rejects_zero_iteration_runs() {
+        let base = RunResult {
+            app: "x".into(),
+            policy: "a".into(),
+            energy_j: 1000.0,
+            time_s: 100.0,
+            iterations: 10,
+            final_sm_gear: 114,
+            final_mem_gear: 4,
+        };
+        let stalled = RunResult {
+            iterations: 0,
+            ..base.clone()
+        };
+        assert_eq!(
+            savings(&base, &stalled),
+            Err(ZeroWorkError {
+                base_iterations: 10,
+                run_iterations: 0
+            })
+        );
+        assert!(savings(&stalled, &base).is_err());
+        // The error formats without NaN leaking anywhere.
+        let msg = savings(&base, &stalled).unwrap_err().to_string();
+        assert!(msg.contains("zero-iteration"));
+    }
+
+    /// A device whose workload never progresses — the shape of an errant
+    /// run that must be stopped by the `run_budget_s` cutoff rather than
+    /// hanging the sweep (a healthy `SimGpu` always progresses, so the
+    /// cutoff can only be exercised through a wrapper like this).
+    struct StalledDevice(crate::sim::SimGpu);
+
+    impl Device for StalledDevice {
+        fn spec(&self) -> &Arc<Spec> {
+            self.0.spec()
+        }
+        fn workload(&self) -> &str {
+            self.0.workload()
+        }
+        fn nominal_iter_s(&self) -> f64 {
+            self.0.nominal_iter_s()
+        }
+        fn set_sm_gear(&mut self, gear: usize) {
+            self.0.set_sm_gear(gear);
+        }
+        fn set_mem_gear(&mut self, gear: usize) {
+            self.0.set_mem_gear(gear);
+        }
+        fn set_default_clocks(&mut self) {
+            self.0.set_default_clocks();
+        }
+        fn sm_gear(&self) -> usize {
+            self.0.sm_gear()
+        }
+        fn mem_gear(&self) -> usize {
+            self.0.mem_gear()
+        }
+        fn set_power_limit_w(&mut self, limit_w: f64) {
+            self.0.set_power_limit_w(limit_w);
+        }
+        fn power_limit_w(&self) -> f64 {
+            Device::power_limit_w(&self.0)
+        }
+        fn sample(&mut self, dt: f64) -> crate::sim::Instant {
+            self.0.sample(dt)
+        }
+        fn energy_j(&mut self) -> f64 {
+            Device::energy_j(&mut self.0)
+        }
+        fn ips(&mut self) -> f64 {
+            self.0.ips()
+        }
+        fn start_counter_session(&mut self) {
+            self.0.start_counter_session();
+        }
+        fn stop_counter_session(&mut self) {
+            self.0.stop_counter_session();
+        }
+        fn profiling_active(&self) -> bool {
+            self.0.profiling_active()
+        }
+        fn read_counters(&mut self) -> Result<Vec<f64>, crate::sim::CounterSessionError> {
+            self.0.read_counters()
+        }
+        fn advance(&mut self, dt: f64) {
+            self.0.advance(dt);
+        }
+        fn iterations(&self) -> u64 {
+            0 // never makes progress
+        }
+        fn time_s(&self) -> f64 {
+            Device::time_s(&self.0)
+        }
+        fn true_energy_j(&self) -> f64 {
+            Device::true_energy_j(&self.0)
+        }
+        fn true_period(&self) -> f64 {
+            self.0.true_period()
+        }
+    }
+
+    #[test]
+    fn errant_runs_stop_at_the_shared_budget_cutoff() {
+        // With a stalled workload the iteration target is unreachable:
+        // run_policy must terminate at run_budget_s, not hang, and the
+        // zero-iteration result must surface as a typed savings error.
+        let spec = Arc::new(Spec::load_default().unwrap());
+        let app = find_app(&spec, "AI_TS").unwrap();
+        let mut dev = StalledDevice(sim_device(&spec, &app));
+        let n_iters = 5;
+        let budget = run_budget_s(0.0, n_iters, dev.nominal_iter_s());
+        let mut p = DefaultPolicy { ts: 1.0 };
+        let r = run_policy(&mut dev, &mut p, n_iters);
+        assert_eq!(r.iterations, 0);
+        assert!(r.time_s >= budget && r.time_s < budget + 1.1, "stopped at the cutoff");
+        assert!(savings(&r, &r).is_err());
+    }
+
+    #[test]
+    fn default_policy_fast_drive_matches_tick_loop() {
+        let spec = Arc::new(Spec::load_default().unwrap());
+        let app = find_app(&spec, "AI_FE").unwrap();
+        let mut a = sim_device(&spec, &app);
+        let mut b = sim_device(&spec, &app);
+        let mut pa = DefaultPolicy { ts: 0.025 };
+        let mut pb = DefaultPolicy { ts: 0.025 };
+        let budget = run_budget_s(0.0, 40, app.t_base);
+
+        // Override vs the documented default tick-loop semantics.
+        let na = pa.drive(&mut a, 40, budget, 1000);
+        let mut nb = 0u64;
+        while nb < 1000 && b.iterations() < 40 && Device::time_s(&b) < budget {
+            pb.tick(&mut b);
+            nb += 1;
+        }
+        assert_eq!(na, nb);
+        assert_eq!(a.true_energy_j(), b.true_energy_j());
+        assert_eq!(a.iterations(), b.iterations());
+        assert_eq!(a.time_s(), b.time_s());
+
+        // A tick-bounded slice executes exactly max_ticks ticks.
+        let t0 = a.time_s();
+        let n = pa.drive(&mut a, u64::MAX, f64::INFINITY, 137);
+        assert_eq!(n, 137);
+        assert_eq!(((a.time_s() - t0) / 0.025).round() as u64, 137);
     }
 
     #[test]

@@ -20,7 +20,7 @@
 
 mod sim;
 
-use crate::sim::{AppParams, Instant, SimGpu, Spec};
+use crate::sim::{AppParams, CounterSessionError, Instant, SimGpu, Spec};
 use std::sync::Arc;
 
 /// The clock/telemetry surface the controller drives.
@@ -90,13 +90,30 @@ pub trait Device {
     fn profiling_active(&self) -> bool;
 
     /// Collect the Table-2 feature vector measured over the session
-    /// window. Requires an active session.
-    fn read_counters(&mut self) -> Vec<f64>;
+    /// window. Errors without an active session.
+    fn read_counters(&mut self) -> Result<Vec<f64>, CounterSessionError>;
 
     // ---------------------------------------------------------- clock --
 
     /// Move the device forward by `dt` seconds.
     fn advance(&mut self, dt: f64);
+
+    /// Fast-forward in `tick` increments until `target_iters` total
+    /// iterations complete or device time reaches `t_limit_s`, whichever
+    /// comes first. Contract (DESIGN.md §13): semantically exactly
+    /// `while iterations() < target && time_s() < limit { advance(tick) }`
+    /// — same tick quantization, same overshoot — and implementations
+    /// must produce results bit-identical to that loop. The default does
+    /// literally that; the simulator overrides it with the segment
+    /// fast-forward.
+    fn advance_until(&mut self, target_iters: u64, t_limit_s: f64, tick: f64) {
+        if !(tick > 0.0) {
+            return; // zero/negative/NaN tick would never terminate
+        }
+        while self.iterations() < target_iters && self.time_s() < t_limit_s {
+            self.advance(tick);
+        }
+    }
 
     /// Completed workload iterations since attach.
     fn iterations(&self) -> u64;
@@ -159,7 +176,7 @@ mod tests {
         assert!(!dev.profiling_active());
         dev.start_counter_session();
         assert!(dev.profiling_active());
-        let feats = dev.read_counters();
+        let feats = dev.read_counters().unwrap();
         assert!(!feats.is_empty());
         dev.stop_counter_session();
 
@@ -182,5 +199,16 @@ mod tests {
         assert_eq!(a.true_energy_j(), b.true_energy_j());
         assert_eq!(a.iterations(), b.iterations());
         assert_eq!(a.true_period(), b.true_period());
+
+        // The trait's default advance_until (stepped loop) and the
+        // simulator's fast-forward override must agree bit-for-bit.
+        let target = a.iterations() + 25;
+        a.advance_until(target, 1e9, 0.05); // SimGpu override
+        while b.iterations() < target && b.time_s() < 1e9 {
+            b.advance(0.05); // the documented default-loop semantics
+        }
+        assert_eq!(a.true_energy_j(), b.true_energy_j());
+        assert_eq!(a.iterations(), b.iterations());
+        assert_eq!(a.time_s(), b.time_s());
     }
 }

@@ -6,7 +6,7 @@
 //! it stay backend-agnostic.
 
 use super::Device;
-use crate::sim::{Instant, SimGpu, Spec};
+use crate::sim::{CounterSessionError, Instant, SimGpu, Spec};
 use std::sync::Arc;
 
 impl Device for SimGpu {
@@ -74,12 +74,16 @@ impl Device for SimGpu {
         SimGpu::profiling_active(self)
     }
 
-    fn read_counters(&mut self) -> Vec<f64> {
+    fn read_counters(&mut self) -> Result<Vec<f64>, CounterSessionError> {
         SimGpu::read_counters(self)
     }
 
     fn advance(&mut self, dt: f64) {
         SimGpu::advance(self, dt);
+    }
+
+    fn advance_until(&mut self, target_iters: u64, t_limit_s: f64, tick: f64) {
+        SimGpu::advance_until(self, target_iters, t_limit_s, tick);
     }
 
     fn iterations(&self) -> u64 {

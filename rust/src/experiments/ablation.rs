@@ -45,7 +45,7 @@ pub fn run(spec: &Arc<Spec>, predictor: &Arc<Predictor>) -> (Table, Vec<(String,
             let base = run_sim(spec, app, &mut DefaultPolicy { ts: 0.025 }, n);
             let mut g = Gpoeo::new(variant(v), predictor.clone());
             let r = run_sim(spec, app, &mut g, n);
-            let s = savings(&base, &r);
+            let s = savings(&base, &r).expect("ablation run completed zero iterations");
             sv.push(s.energy_saving);
             sl.push(s.slowdown);
             ed.push(s.ed2p_saving);

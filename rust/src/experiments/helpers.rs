@@ -99,7 +99,11 @@ pub fn compare_policies(
     let mut o = Odpp::new(OdppCfg::default());
     let ro = run_sim(spec, app, &mut o, n);
 
-    (savings(&base, &rg), savings(&base, &ro), g.stats.clone())
+    // A simulated run under a sane policy always completes iterations,
+    // so a zero-work error here means the harness itself is broken.
+    let sg = savings(&base, &rg).expect("gpoeo run completed zero iterations");
+    let so = savings(&base, &ro).expect("odpp run completed zero iterations");
+    (sg, so, g.stats.clone())
 }
 
 /// The paper's 71 evaluation apps (AIBench 14 + classical 2 + gnns 55)

@@ -13,6 +13,7 @@ pub mod motivation;
 pub mod online;
 pub mod policies;
 pub mod prediction;
+pub mod simbench;
 
 use crate::model::Predictor;
 use crate::sim::Spec;
@@ -23,7 +24,7 @@ use std::sync::Arc;
 pub const EXPERIMENTS: &[&str] = &[
     "fig1", "fig2", "fig3", "fig5", "fig6", "fig7", "fig8", "fig9", "fig10", "fig11", "fig12",
     "fig13", "table3", "fig14", "fig15", "headline", "ablation", "policies", "detect-bench",
-    "predict-bench", "api-bench",
+    "predict-bench", "api-bench", "sim-bench",
 ];
 
 fn emit(t: &Table, args: &Args) -> anyhow::Result<()> {
@@ -221,6 +222,26 @@ pub fn cli_experiment(args: &Args) -> anyhow::Result<()> {
                             t.p99_detached_ms
                         );
                     }
+                }
+            }
+            "sim-bench" => {
+                // Model-free like detect-bench: the stepped-vs-fast-forward
+                // comparison runs on the simulator alone, so it gates CI.
+                // The bench record is appended before any gate can fail.
+                let r = simbench::run(&spec, args, quick)?;
+                emit(&r.table, args)?;
+                r.print_summary();
+                anyhow::ensure!(
+                    r.max_divergence <= 1e-9,
+                    "sim-bench: stepped and fast-forward paths diverge (max relative divergence {:e}, expected 0; see DESIGN.md §13)",
+                    r.max_divergence
+                );
+                let min = args.opt_f64("min-speedup", 0.0)?;
+                if min > 0.0 && r.speedup < min {
+                    anyhow::bail!(
+                        "sim-bench: fast-forward speedup {:.2}x below the required {min}x",
+                        r.speedup
+                    );
                 }
             }
             "headline" => {

@@ -205,7 +205,7 @@ pub fn fig15(spec: &Arc<Spec>, predictor: &Arc<Predictor>) -> (Table, f64, f64) 
             predictor.clone(),
         );
         let r = run_sim(spec, app, &mut g, n);
-        let s = savings(&base, &r);
+        let s = savings(&base, &r).expect("online run completed zero iterations");
         eo.push(-s.energy_saving); // overhead = negative saving
         to.push(s.slowdown);
         t.rowf(&[
@@ -247,7 +247,7 @@ pub fn headline(spec: &Arc<Spec>, predictor: &Arc<Predictor>, quick: bool) -> He
             let base = run_sim(spec, app, &mut DefaultPolicy { ts: 0.025 }, n);
             let mut p = Gpoeo::new(GpoeoCfg::default(), predictor.clone());
             let r = run_sim(spec, app, &mut p, n);
-            (savings(&base, &r), (), ())
+            (savings(&base, &r).expect("policy run completed zero iterations"), (), ())
         };
         savings_all.push(g.energy_saving);
         slow_all.push(g.slowdown);

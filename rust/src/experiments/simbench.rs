@@ -1,0 +1,262 @@
+//! Sim-bench: stepped vs fast-forward simulation cost (DESIGN.md §13).
+//!
+//! For every evaluation app this drives two fresh simulated devices over
+//! the same iteration target under the default policy's tick:
+//!
+//! - **reference** — the pre-segment-cache per-tick body
+//!   (`advance_reference`), which recomputes the operating point, time
+//!   factor and phase mix on every tick;
+//! - **fast** — the segment fast-forward (`advance_until`), which
+//!   revalidates one cached segment key per tick and integrates from
+//!   cached constants.
+//!
+//! The two paths draw identical RNG streams in identical order, so the
+//! end states must agree *bit for bit* — the reported divergence is
+//! expected to be exactly 0.0 and is gated at ≤1e-9 in CI. Results are
+//! appended to `BENCH_sim.json` (`runs[]` history + latest `per_app`,
+//! the `BENCH_detection.json` pattern).
+
+use crate::device::sim_device;
+use crate::experiments::helpers::evaluation_apps;
+use crate::sim::{run_budget_s, Spec};
+use crate::util::cli::Args;
+use crate::util::json::Json;
+use crate::util::table::{s, Cell, Table};
+use std::sync::Arc;
+
+/// Default-policy tick (matches `DefaultPolicy { ts: 0.025 }` everywhere).
+const TS: f64 = 0.025;
+
+#[derive(Debug, Clone)]
+pub struct SimBenchRow {
+    pub app: String,
+    pub aperiodic: bool,
+    pub iters: u64,
+    /// Virtual seconds simulated (identical across both passes).
+    pub sim_s: f64,
+    pub ref_wall_s: f64,
+    pub fast_wall_s: f64,
+    /// Max relative end-state divergence (energy, time, iterations)
+    /// between the two passes. Expected exactly 0.0.
+    pub divergence: f64,
+}
+
+pub struct SimBench {
+    pub table: Table,
+    pub rows: Vec<SimBenchRow>,
+    pub ref_wall_s: f64,
+    pub fast_wall_s: f64,
+    pub speedup: f64,
+    /// Virtual sim seconds advanced per wall second on the fast path.
+    pub sim_s_per_wall_s: f64,
+    pub max_divergence: f64,
+}
+
+impl SimBench {
+    pub fn print_summary(&self) {
+        println!(
+            "sim-bench over {} apps: stepped {:.3}s, fast-forward {:.3}s — {:.1}x speedup, {:.0} sim-s/s, max divergence {:e}",
+            self.rows.len(),
+            self.ref_wall_s,
+            self.fast_wall_s,
+            self.speedup,
+            self.sim_s_per_wall_s,
+            self.max_divergence
+        );
+    }
+}
+
+fn rel_div(a: f64, b: f64) -> f64 {
+    if a == b {
+        return 0.0; // bit-equal (covers 0==0 without the denominator guard)
+    }
+    (a - b).abs() / b.abs().max(1e-30)
+}
+
+/// Run the benchmark. `--quick` trims the suite and the per-app target;
+/// `--reps N` takes best-of-N wall times (divergence is checked on every
+/// rep); `--min-speedup` is gated by the caller, not here.
+pub fn run(spec: &Arc<Spec>, args: &Args, quick: bool) -> anyhow::Result<SimBench> {
+    let reps = args.opt_f64("reps", 1.0)?.max(1.0) as usize;
+    let all = evaluation_apps(spec)?;
+    let apps: Vec<_> = if quick {
+        // Every 9th app keeps all three suites represented.
+        all.into_iter().step_by(9).collect()
+    } else {
+        all
+    };
+    let iters: u64 = if quick { 80 } else { 400 };
+
+    let mut rows: Vec<SimBenchRow> = Vec::with_capacity(apps.len());
+    for app in &apps {
+        let mut ref_wall = f64::INFINITY;
+        let mut fast_wall = f64::INFINITY;
+        let mut divergence: f64 = 0.0;
+        let mut sim_s = 0.0;
+        for _ in 0..reps {
+            // Reference pass: the historical per-tick body, stepped.
+            let mut r = sim_device(spec, app);
+            let budget = run_budget_s(r.time_s(), iters, app.t_base);
+            let t0 = std::time::Instant::now();
+            while r.iterations() < iters && r.time_s() < budget {
+                r.advance_reference(TS);
+            }
+            ref_wall = ref_wall.min(t0.elapsed().as_secs_f64());
+
+            // Fast pass: segment fast-forward over the same target.
+            let mut f = sim_device(spec, app);
+            let t1 = std::time::Instant::now();
+            f.advance_until(iters, budget, TS);
+            fast_wall = fast_wall.min(t1.elapsed().as_secs_f64());
+
+            divergence = divergence
+                .max(rel_div(f.true_energy_j(), r.true_energy_j()))
+                .max(rel_div(f.time_s(), r.time_s()))
+                .max(rel_div(f.iterations() as f64, r.iterations() as f64));
+            sim_s = r.time_s();
+        }
+        rows.push(SimBenchRow {
+            app: app.name.clone(),
+            aperiodic: app.aperiodic,
+            iters,
+            sim_s,
+            ref_wall_s: ref_wall,
+            fast_wall_s: fast_wall,
+            divergence,
+        });
+    }
+
+    let ref_total: f64 = rows.iter().map(|r| r.ref_wall_s).sum();
+    let fast_total: f64 = rows.iter().map(|r| r.fast_wall_s).sum();
+    let sim_total: f64 = rows.iter().map(|r| r.sim_s).sum();
+    let speedup = ref_total / fast_total.max(1e-12);
+    let sim_s_per_wall_s = sim_total / fast_total.max(1e-12);
+    let max_divergence = rows.iter().map(|r| r.divergence).fold(0.0, f64::max);
+
+    let mut table = Table::new(
+        &format!(
+            "Sim-bench — stepped vs segment fast-forward, {} apps x {iters} iters{}",
+            rows.len(),
+            if quick { ", --quick" } else { "" }
+        ),
+        &["app", "sim s", "stepped ms", "fast ms", "speedup", "sim-s/s", "divergence"],
+    );
+    for r in &rows {
+        table.rowf(&[
+            s(&r.app),
+            Cell::F(r.sim_s, 1),
+            Cell::F(r.ref_wall_s * 1e3, 2),
+            Cell::F(r.fast_wall_s * 1e3, 2),
+            Cell::F(r.ref_wall_s / r.fast_wall_s.max(1e-12), 1),
+            Cell::F(r.sim_s / r.fast_wall_s.max(1e-12), 0),
+            s(&format!("{:e}", r.divergence)),
+        ]);
+    }
+
+    let bench_path = args.opt_or("bench", "BENCH_sim.json");
+    write_bench(
+        bench_path,
+        quick,
+        reps,
+        ref_total,
+        fast_total,
+        speedup,
+        sim_s_per_wall_s,
+        max_divergence,
+        &rows,
+    )?;
+    println!("bench record appended to {bench_path}");
+
+    Ok(SimBench {
+        table,
+        rows,
+        ref_wall_s: ref_total,
+        fast_wall_s: fast_total,
+        speedup,
+        sim_s_per_wall_s,
+        max_divergence,
+    })
+}
+
+/// Append one sim-bench record (`runs[]` keeps the history; `per_app`
+/// holds the latest per-app numbers — the `BENCH_detection.json` pattern).
+#[allow(clippy::too_many_arguments)]
+fn write_bench(
+    path: &str,
+    quick: bool,
+    reps: usize,
+    ref_total: f64,
+    fast_total: f64,
+    speedup: f64,
+    sim_s_per_wall_s: f64,
+    max_divergence: f64,
+    rows: &[SimBenchRow],
+) -> anyhow::Result<()> {
+    let num = |x: f64| Json::Num(if x.is_finite() { x } else { -1.0 });
+    let per_app: Vec<Json> = rows
+        .iter()
+        .map(|r| {
+            Json::obj(vec![
+                ("app", Json::Str(r.app.clone())),
+                ("aperiodic", Json::Bool(r.aperiodic)),
+                ("iters", Json::Num(r.iters as f64)),
+                ("sim_s", num(r.sim_s)),
+                ("stepped_wall_s", num(r.ref_wall_s)),
+                ("fast_wall_s", num(r.fast_wall_s)),
+                ("speedup", num(r.ref_wall_s / r.fast_wall_s.max(1e-12))),
+                ("divergence", num(r.divergence)),
+            ])
+        })
+        .collect();
+
+    let unix_s = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_secs() as f64)
+        .unwrap_or(0.0);
+    let run = Json::obj(vec![
+        ("unix_time_s", Json::Num(unix_s)),
+        ("quick", Json::Bool(quick)),
+        ("reps", Json::Num(reps as f64)),
+        ("apps", Json::Num(rows.len() as f64)),
+        ("stepped_wall_s", num(ref_total)),
+        ("fast_wall_s", num(fast_total)),
+        ("speedup", num(speedup)),
+        ("sim_s_per_wall_s", num(sim_s_per_wall_s)),
+        ("max_divergence", num(max_divergence)),
+    ]);
+
+    let mut runs = Json::bench_runs(path);
+    runs.push(run);
+    let doc = Json::obj(vec![
+        ("runs", Json::Arr(runs)),
+        ("per_app", Json::Arr(per_app)),
+    ]);
+    std::fs::write(path, doc.to_pretty())?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The bench's own correctness invariant, cheap enough for tier-1:
+    /// the two passes it compares must be bit-identical on a small run.
+    #[test]
+    fn bench_passes_agree_bitwise() {
+        let spec = Arc::new(Spec::load_default().unwrap());
+        for name in ["AI_I2T", "TSVM"] {
+            let app = crate::sim::find_app(&spec, name).unwrap();
+            let iters = 30;
+            let mut r = sim_device(&spec, &app);
+            let budget = run_budget_s(r.time_s(), iters, app.t_base);
+            while r.iterations() < iters && r.time_s() < budget {
+                r.advance_reference(TS);
+            }
+            let mut f = sim_device(&spec, &app);
+            f.advance_until(iters, budget, TS);
+            assert_eq!(f.true_energy_j(), r.true_energy_j(), "{name}: energy");
+            assert_eq!(f.iterations(), r.iterations(), "{name}: iterations");
+            assert_eq!(f.time_s(), r.time_s(), "{name}: time");
+        }
+    }
+}

@@ -8,7 +8,8 @@
 //! - `run --app A [--policy P]`  online optimization on one app (any registered policy)
 //! - `sweep [--parallel N]`      all-app sweep on a worker fleet (BENCH_sweep.json)
 //! - `experiment <id>`           regenerate a paper table/figure (fig1..fig15, table3,
-//!                               headline, policies)
+//!                               headline, policies) or run a bench gate (detect-bench,
+//!                               predict-bench, api-bench, sim-bench)
 //! - `daemon [--socket P]`       Begin/End API server (micro-intrusive mode, fleet-backed;
 //!                               control-plane protocol v1 + legacy line protocol)
 //! - `ctl <verb> [--socket P]`   control-plane client: apps/policies/begin/status/end/abort/

@@ -447,7 +447,7 @@ mod tests {
         let base = run_sim(&spec, &app, &mut DefaultPolicy { ts: 0.025 }, n);
         let mut b = Bandit::new(BanditCfg::default());
         let run = run_sim(&spec, &app, &mut b, n);
-        let s = savings(&base, &run);
+        let s = savings(&base, &run).unwrap();
         assert!(b.switches > 0, "bandit never explored");
         assert!(
             s.energy_saving > -0.02,

@@ -283,7 +283,7 @@ mod tests {
             p.chosen_cap_w.is_finite(),
             "a capped rung should beat the uncapped baseline here"
         );
-        let s = savings(&base, &run);
+        let s = savings(&base, &run).unwrap();
         assert!(
             s.energy_saving > 0.0,
             "power capping must save energy on AI_I2T: {:.3}",

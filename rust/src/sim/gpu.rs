@@ -15,10 +15,35 @@
 //! milliseconds of wall time.
 
 use crate::sim::app::AppParams;
+use crate::sim::segment::{SegmentCache, SegmentKey};
 use crate::sim::spec::Spec;
 use crate::sim::trace::{Instant, TraceState};
 use crate::util::rng::Pcg64;
 use std::sync::Arc;
+
+/// `read_counters()` was called without an active counter session — on
+/// real hardware the CUPTI read would fail the same way. Typed (not a
+/// panic) so the fast-forward hot zone stays panic-free (DESIGN.md §13).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CounterSessionError;
+
+impl std::fmt::Display for CounterSessionError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "read_counters() requires an active counter session")
+    }
+}
+
+impl std::error::Error for CounterSessionError {}
+
+/// Virtual-time cutoff for driving a device toward `n_iters` further
+/// iterations: generous (50× the nominal run length plus an hour of
+/// virtual slack) so it never binds on a healthy run, but finite so an
+/// errant policy that stops making progress cannot hang a sweep. The
+/// single source of truth for every driver — `run_policy`, the fleet's
+/// session budgets, and `SimGpu::run_iterations` all call this.
+pub fn run_budget_s(now_s: f64, n_iters: u64, nominal_iter_s: f64) -> f64 {
+    now_s + 50.0 * n_iters as f64 * nominal_iter_s + 3600.0
+}
 
 #[derive(Debug, Clone)]
 pub struct SimGpu {
@@ -40,6 +65,13 @@ pub struct SimGpu {
     energy_j: f64,
     trace: TraceState,
     meas_rng: Pcg64,
+    /// Constant-op segment constants (DESIGN.md §13): revalidated by key
+    /// compare on every advance/sample, recomputed only when the
+    /// (eff_sm_gear, mem_gear, profiling, app_epoch) tuple changes.
+    seg: SegmentCache,
+    /// Bumped by `swap_app` so segment keys from the old workload can
+    /// never validate against the new one.
+    app_epoch: u64,
     /// Counts of control actions, for overhead accounting / debugging.
     pub clock_sets: u64,
     pub counter_sessions: u64,
@@ -65,9 +97,27 @@ impl SimGpu {
             energy_j: 0.0,
             trace,
             meas_rng,
+            seg: SegmentCache::new(),
+            app_epoch: 0,
             clock_sets: 0,
             counter_sessions: 0,
         }
+    }
+
+    fn segment_key(&self) -> SegmentKey {
+        SegmentKey {
+            eff_sm_gear: self.eff_sm_gear,
+            mem_gear: self.mem_gear,
+            profiling: self.profiling,
+            app_epoch: self.app_epoch,
+        }
+    }
+
+    /// Revalidate the segment cache against the current device tuple
+    /// (one key compare in the steady state).
+    fn refresh_segment(&mut self) {
+        let key = self.segment_key();
+        self.seg.ensure(&self.app, &self.spec, key);
     }
 
     // ------------------------------------------------------- NVML-like --
@@ -147,8 +197,37 @@ impl SimGpu {
     }
 
     /// Instantaneous (power, SM util, mem util) with measurement noise —
-    /// the NVML sampling channel used for period detection.
+    /// the NVML sampling channel used for period detection. Hot path:
+    /// the op point and phase-duration constants come from the segment
+    /// cache; results are bit-identical to [`SimGpu::sample_reference`].
     pub fn sample(&mut self, dt_since_last: f64) -> Instant {
+        self.refresh_segment();
+        let inst = self.trace.sample_with(
+            &self.app,
+            &self.spec,
+            dt_since_last,
+            &self.seg.op,
+            &self.seg.durs,
+            self.seg.weight_norm,
+            self.seg.cw_mean,
+            self.seg.mw_mean,
+        );
+        let pmul = self.seg.pmul;
+        let noise = self
+            .meas_rng
+            .normal(0.0, self.spec.noise.power_meas_std);
+        Instant {
+            power_w: inst.power_w * pmul * (1.0 + noise),
+            util_sm: inst.util_sm,
+            util_mem: inst.util_mem,
+        }
+    }
+
+    /// Recomputing twin of [`SimGpu::sample`]: the historical per-call
+    /// body, kept as the parity oracle and `sim-bench` comparator
+    /// (DESIGN.md §13). Must stay operand-for-operand in sync with the
+    /// constants `SegmentCache::refresh` caches.
+    pub fn sample_reference(&mut self, dt_since_last: f64) -> Instant {
         let inst = self.trace.sample(
             &self.app,
             &self.spec,
@@ -225,13 +304,13 @@ impl SimGpu {
     }
 
     /// Collect the Table-2 feature vector measured over the session window.
-    /// Requires an active session (panics otherwise — programming error).
-    pub fn read_counters(&mut self) -> Vec<f64> {
-        assert!(
-            self.profiling,
-            "read_counters() requires an active counter session"
-        );
-        self.app.measured_features(&self.spec, &mut self.meas_rng)
+    /// Errors without an active session (on hardware the CUPTI read
+    /// would fail the same way).
+    pub fn read_counters(&mut self) -> Result<Vec<f64>, CounterSessionError> {
+        if !self.profiling {
+            return Err(CounterSessionError);
+        }
+        Ok(self.app.measured_features(&self.spec, &mut self.meas_rng))
     }
 
     /// Replace the running workload mid-flight (a new training job takes
@@ -240,6 +319,9 @@ impl SimGpu {
     pub fn swap_app(&mut self, app: AppParams) {
         self.trace = TraceState::new(&app);
         self.app = app;
+        // Old-workload segment keys must never validate against the new
+        // app, even at identical gears (DESIGN.md §13).
+        self.app_epoch += 1;
         // A new workload draws different power at the same clocks, so the
         // throttle point moves.
         self.recompute_throttle();
@@ -248,8 +330,28 @@ impl SimGpu {
     // ------------------------------------------------------- simulation --
 
     /// Advance virtual time by `dt` seconds: progress the workload and
-    /// integrate energy at the current operating point.
+    /// integrate energy at the current operating point. Hot path: the
+    /// operating point, profiling tax and time factor come from the
+    /// segment cache — bit-identical to [`SimGpu::advance_reference`].
     pub fn advance(&mut self, dt: f64) {
+        self.refresh_segment();
+        self.energy_j += self.seg.power_eff_w * dt;
+        self.trace.advance_with(
+            &self.app,
+            dt,
+            self.seg.speed,
+            self.seg.time_factor,
+            self.seg.micro_rate0,
+        );
+        self.vtime_s += dt;
+    }
+
+    /// Recomputing twin of [`SimGpu::advance`]: the historical per-tick
+    /// body that re-derives the op point and time factor on every call.
+    /// Kept as the parity oracle and the `sim-bench` baseline
+    /// (DESIGN.md §13) — must stay operand-for-operand in sync with
+    /// `SegmentCache::refresh`.
+    pub fn advance_reference(&mut self, dt: f64) {
         let (speed, pmul) = if self.profiling {
             (
                 1.0 / self.spec.profiling_tax.counter_time_mult,
@@ -265,15 +367,39 @@ impl SimGpu {
         self.vtime_s += dt;
     }
 
+    /// Fast-forward in `tick` increments until `target_iters` total
+    /// iterations complete or virtual time reaches `t_limit_s`,
+    /// whichever comes first. Semantically exactly
+    /// `while iterations < target && time < limit { advance(tick) }` —
+    /// same tick quantization, same overshoot — but with the segment
+    /// revalidated once and the per-tick body run as a tight
+    /// monomorphic loop, which is where the sim-bench speedup lives.
+    pub fn advance_until(&mut self, target_iters: u64, t_limit_s: f64, tick: f64) {
+        if !(tick > 0.0) {
+            return; // zero/negative/NaN tick would never terminate
+        }
+        self.refresh_segment();
+        while self.trace.iterations < target_iters && self.vtime_s < t_limit_s {
+            self.energy_j += self.seg.power_eff_w * tick;
+            self.trace.advance_with(
+                &self.app,
+                tick,
+                self.seg.speed,
+                self.seg.time_factor,
+                self.seg.micro_rate0,
+            );
+            self.vtime_s += tick;
+        }
+    }
+
     /// Run until `n` further iterations complete (convenience for tests
-    /// and the oracle; steps in `tick` increments).
+    /// and the oracle; steps in `tick` increments). The cutoff is the
+    /// shared `run_budget_s` — the same errant-policy guard every other
+    /// driver uses.
     pub fn run_iterations(&mut self, n: u64, tick: f64) {
         let target = self.trace.iterations + n;
-        // Guard: cap at a generous virtual-time budget to avoid hangs.
-        let budget = self.vtime_s + 1e5;
-        while self.trace.iterations < target && self.vtime_s < budget {
-            self.advance(tick);
-        }
+        let budget = run_budget_s(self.vtime_s, n, self.app.t_base);
+        self.advance_until(target, budget, tick);
     }
 
     /// Ground-truth current iteration period (virtual seconds), including
@@ -389,21 +515,120 @@ mod tests {
     }
 
     #[test]
-    #[should_panic]
     fn counters_require_session() {
         let mut g = gpu("AI_OBJ");
-        let _ = g.read_counters();
+        assert_eq!(g.read_counters(), Err(CounterSessionError));
+        // The failed read must not perturb the measurement RNG stream:
+        // a session opened afterwards reads the same features as one
+        // opened on a fresh device.
+        let mut fresh = gpu("AI_OBJ");
+        g.start_counter_session();
+        fresh.start_counter_session();
+        assert_eq!(g.read_counters().unwrap(), fresh.read_counters().unwrap());
     }
 
     #[test]
     fn counters_noisy_copy_of_truth() {
         let mut g = gpu("AI_OBJ");
         g.start_counter_session();
-        let m = g.read_counters();
+        let m = g.read_counters().unwrap();
         g.stop_counter_session();
         for (t, m) in g.app.features.clone().iter().zip(&m) {
             assert!((m / t - 1.0).abs() < 0.15);
         }
+    }
+
+    #[test]
+    fn cached_advance_is_bit_identical_to_reference() {
+        // Drive two clones of the same device through an adversarial
+        // schedule of gear switches, profiling toggles and a power cap —
+        // one through the segment-cached hot path, one through the
+        // recomputing reference twin. Every observable must match to the
+        // last bit (DESIGN.md §13).
+        for name in ["AI_I2T", "AI_TS", "TSVM", "SBM_GIN"] {
+            let mut fast = gpu(name);
+            let mut refr = gpu(name);
+            for step in 0..3000u32 {
+                if step % 400 == 0 {
+                    let gear = 40 + ((step / 400) * 17 % 75) as usize;
+                    fast.set_sm_gear(gear);
+                    refr.set_sm_gear(gear);
+                }
+                if step % 700 == 0 {
+                    fast.start_counter_session();
+                    refr.start_counter_session();
+                } else if step % 700 == 350 {
+                    fast.stop_counter_session();
+                    refr.stop_counter_session();
+                }
+                if step == 1500 {
+                    fast.set_power_limit_w(200.0);
+                    refr.set_power_limit_w(200.0);
+                }
+                fast.advance(0.01);
+                refr.advance_reference(0.01);
+                let (sf, sr) = (fast.sample(0.01), refr.sample_reference(0.01));
+                assert_eq!(sf.power_w, sr.power_w, "{name} step {step}");
+                assert_eq!(sf.util_sm, sr.util_sm, "{name} step {step}");
+                assert_eq!(sf.util_mem, sr.util_mem, "{name} step {step}");
+            }
+            assert_eq!(fast.true_energy_j(), refr.true_energy_j(), "{name}");
+            assert_eq!(fast.iterations(), refr.iterations(), "{name}");
+            assert_eq!(fast.time_s(), refr.time_s(), "{name}");
+        }
+    }
+
+    #[test]
+    fn advance_until_matches_stepped_loop_bitwise() {
+        for name in ["AI_FE", "TSVM"] {
+            let mut fast = gpu(name);
+            let mut stepped = gpu(name);
+            let target = 40;
+            let limit = 1e6;
+            fast.advance_until(target, limit, 0.025);
+            while stepped.iterations() < target && stepped.time_s() < limit {
+                stepped.advance_reference(0.025);
+            }
+            assert_eq!(fast.iterations(), stepped.iterations(), "{name}");
+            assert_eq!(fast.true_energy_j(), stepped.true_energy_j(), "{name}");
+            assert_eq!(fast.time_s(), stepped.time_s(), "{name}");
+        }
+    }
+
+    #[test]
+    fn advance_until_honors_the_time_limit() {
+        let mut g = gpu("AI_I2T");
+        g.advance_until(u64::MAX, 1.0, 0.01);
+        // Tick-quantized: stops on the first tick at or past the limit.
+        assert!(g.time_s() >= 1.0 && g.time_s() < 1.0 + 0.011);
+        // Degenerate ticks must return rather than spin.
+        g.advance_until(u64::MAX, 2.0, 0.0);
+        g.advance_until(u64::MAX, 2.0, -1.0);
+        g.advance_until(u64::MAX, 2.0, f64::NAN);
+        assert!(g.time_s() < 1.0 + 0.011);
+    }
+
+    #[test]
+    fn swap_app_invalidates_the_segment_cache() {
+        // Warm the cache on app A, swap to app B *without* touching the
+        // gears (so only the epoch bump separates the segment keys), and
+        // compare against the recomputing twin. A stale cache would keep
+        // integrating app A's power and diverge immediately.
+        let spec = Arc::new(Spec::load_default().unwrap());
+        let a = find_app(&spec, "AI_I2T").unwrap();
+        let b = find_app(&spec, "AI_FE").unwrap();
+        let mut fast = SimGpu::new(spec.clone(), a.clone());
+        let mut refr = SimGpu::new(spec, a);
+        fast.advance(0.01);
+        refr.advance_reference(0.01);
+        fast.swap_app(b.clone());
+        refr.swap_app(b);
+        for _ in 0..500 {
+            fast.advance(0.01);
+            refr.advance_reference(0.01);
+        }
+        assert_eq!(fast.true_energy_j(), refr.true_energy_j());
+        assert_eq!(fast.iterations(), refr.iterations());
     }
 
     #[test]

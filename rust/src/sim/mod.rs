@@ -4,10 +4,12 @@
 
 pub mod app;
 pub mod gpu;
+pub mod segment;
 pub mod spec;
 pub mod trace;
 
 pub use app::{AppParams, OpPoint};
-pub use gpu::{find_app, make_app, make_suite, SimGpu};
+pub use gpu::{find_app, make_app, make_suite, run_budget_s, CounterSessionError, SimGpu};
+pub use segment::{SegmentCache, SegmentKey};
 pub use spec::{Spec, NUM_FEATURES};
 pub use trace::{Instant, TraceState};

@@ -1,0 +1,204 @@
+//! Constant-op segment cache — the fast-forward core of the simulator
+//! (DESIGN.md §13).
+//!
+//! Between control actions, a simulated device runs a *constant-op
+//! segment*: the (effective SM gear, mem gear, profiling, workload)
+//! tuple is fixed, so the operating point, the time factor, and every
+//! sample-path constant are fixed too. The old hot path recomputed all
+//! of them — several `powf` calls and a `Vec` allocation — on **every**
+//! 25–50 ms tick. [`SegmentCache`] computes them once per segment and
+//! revalidates with a single key compare, which is what makes
+//! `SimGpu::advance_until` a fast-forward rather than a re-simulation.
+//!
+//! Bit-identity contract: the cache stores the *results* of the exact
+//! expressions the per-tick path used to evaluate (same operand order,
+//! same operations), so a cached tick produces bit-identical state to a
+//! recomputing tick (`SimGpu::advance_reference`). Per-tick work that
+//! feeds the shared RNG stream (the micro-oscillation draw, iteration
+//! jitter, segment walks) is *never* folded across ticks — the draw
+//! count per tick is part of the contract.
+
+use crate::sim::app::{AppParams, OpPoint};
+use crate::sim::spec::Spec;
+use crate::sim::trace::phase_durations;
+
+/// Everything the per-tick constants depend on. A segment is valid
+/// exactly as long as its key matches the device's current tuple.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SegmentKey {
+    /// The gear the hardware actually runs at (post power-limit
+    /// throttle) — the requested gear never reaches the trace.
+    pub eff_sm_gear: usize,
+    pub mem_gear: usize,
+    /// Counter-session state (profiling tax dilates time, raises power).
+    pub profiling: bool,
+    /// Bumped by `SimGpu::swap_app`: a new workload invalidates every
+    /// cached constant even if the gear tuple happens to match.
+    pub app_epoch: u64,
+}
+
+/// Per-segment constants, valid while [`SegmentCache::key`] matches the
+/// device state. Values are garbage until the first `refresh` — callers
+/// go through `ensure`, which refreshes before any read.
+#[derive(Debug, Clone)]
+pub struct SegmentCache {
+    key: Option<SegmentKey>,
+    /// Analytic operating point at (eff_sm_gear, mem_gear).
+    pub op: OpPoint,
+    /// App-progress rate multiplier (< 1 while profiling).
+    pub speed: f64,
+    /// Power multiplier (> 1 while profiling).
+    pub pmul: f64,
+    /// `op.power_w * pmul` — the per-tick energy integrand.
+    pub power_eff_w: f64,
+    /// `app.time_factor(spec, eff_sm_gear, mem_gear)`.
+    pub time_factor: f64,
+    /// `2π / micro_period_s`, or 0.0 for apps without micro-oscillation.
+    pub micro_rate0: f64,
+    /// Periodic per-phase durations at this op point (empty when
+    /// aperiodic — the segment walk carries its own phase index).
+    pub durs: Vec<f64>,
+    /// Phase-power normalizer: duration-weighted `Σ durs·pw` (periodic)
+    /// or the plain mean of `pw` (aperiodic).
+    pub weight_norm: f64,
+    /// `Σ frac·cw` / `Σ frac·mw` — utilization normalizers.
+    pub cw_mean: f64,
+    pub mw_mean: f64,
+}
+
+impl SegmentCache {
+    pub fn new() -> SegmentCache {
+        SegmentCache {
+            key: None,
+            op: OpPoint {
+                t_iter_s: 0.0,
+                power_w: 0.0,
+                energy_j: 0.0,
+                util_sm: 0.0,
+                util_mem: 0.0,
+            },
+            speed: 1.0,
+            pmul: 1.0,
+            power_eff_w: 0.0,
+            time_factor: 1.0,
+            micro_rate0: 0.0,
+            durs: Vec::new(),
+            weight_norm: 1.0,
+            cw_mean: 0.0,
+            mw_mean: 0.0,
+        }
+    }
+
+    /// Revalidate against `key`; recompute everything on a mismatch.
+    /// The steady-state cost is one `Option<SegmentKey>` compare.
+    pub fn ensure(&mut self, app: &AppParams, spec: &Spec, key: SegmentKey) {
+        if self.key != Some(key) {
+            self.refresh(app, spec, key);
+        }
+    }
+
+    /// Recompute every cached constant for `key`. Each expression below
+    /// mirrors its per-tick original verbatim (same operand order), so
+    /// consuming a cached value is bit-identical to recomputing it.
+    fn refresh(&mut self, app: &AppParams, spec: &Spec, key: SegmentKey) {
+        let (speed, pmul) = if key.profiling {
+            (
+                1.0 / spec.profiling_tax.counter_time_mult,
+                spec.profiling_tax.counter_power_mult,
+            )
+        } else {
+            (1.0, 1.0)
+        };
+        let op = app.op_point(spec, key.eff_sm_gear, key.mem_gear);
+        self.power_eff_w = op.power_w * pmul;
+        self.time_factor = app.time_factor(spec, key.eff_sm_gear, key.mem_gear);
+        self.micro_rate0 = if app.micro_period_s > 0.0 {
+            2.0 * std::f64::consts::PI / app.micro_period_s
+        } else {
+            0.0
+        };
+        if app.aperiodic {
+            self.durs.clear();
+            self.weight_norm =
+                app.phases.iter().map(|p| p.pw).sum::<f64>() / app.phases.len() as f64;
+        } else {
+            self.durs = phase_durations(app, spec, key.eff_sm_gear, key.mem_gear);
+            self.weight_norm = self
+                .durs
+                .iter()
+                .zip(&app.phases)
+                .map(|(d, p)| d * p.pw)
+                .sum();
+        }
+        self.cw_mean = app.phases.iter().map(|p| p.frac * p.cw).sum();
+        self.mw_mean = app.phases.iter().map(|p| p.frac * p.mw).sum();
+        self.op = op;
+        self.speed = speed;
+        self.pmul = pmul;
+        self.key = Some(key);
+    }
+}
+
+impl Default for SegmentCache {
+    fn default() -> SegmentCache {
+        SegmentCache::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::spec::Spec;
+
+    fn setup(name: &str) -> (Spec, AppParams) {
+        let spec = Spec::load_default().unwrap();
+        let app = crate::sim::gpu::find_app(&spec, name).unwrap();
+        (spec, app)
+    }
+
+    #[test]
+    fn cached_constants_match_direct_recomputation_bitwise() {
+        let (spec, app) = setup("AI_I2T");
+        let mut seg = SegmentCache::new();
+        for (sm, mem, prof) in [(114, 4, false), (60, 3, false), (114, 4, true)] {
+            let key = SegmentKey {
+                eff_sm_gear: sm,
+                mem_gear: mem,
+                profiling: prof,
+                app_epoch: 0,
+            };
+            seg.ensure(&app, &spec, key);
+            let op = app.op_point(&spec, sm, mem);
+            assert_eq!(seg.op.power_w, op.power_w);
+            assert_eq!(seg.time_factor, app.time_factor(&spec, sm, mem));
+            let pmul = if prof {
+                spec.profiling_tax.counter_power_mult
+            } else {
+                1.0
+            };
+            assert_eq!(seg.power_eff_w, op.power_w * pmul);
+            assert_eq!(seg.durs, phase_durations(&app, &spec, sm, mem));
+        }
+    }
+
+    #[test]
+    fn epoch_bump_invalidates_an_otherwise_equal_key() {
+        let (spec, app) = setup("AI_FE");
+        let mut seg = SegmentCache::new();
+        let k0 = SegmentKey {
+            eff_sm_gear: 114,
+            mem_gear: 4,
+            profiling: false,
+            app_epoch: 0,
+        };
+        seg.ensure(&app, &spec, k0);
+        let before = seg.power_eff_w;
+        // Same gears, new epoch: must recompute (here against the same
+        // app, so values match — the test is that the key mismatch is
+        // honored, which `ensure` proves by not panicking on stale data
+        // and by keeping values coherent).
+        seg.ensure(&app, &spec, SegmentKey { app_epoch: 1, ..k0 });
+        assert_eq!(seg.power_eff_w, before);
+        assert_eq!(seg.key, Some(SegmentKey { app_epoch: 1, ..k0 }));
+    }
+}

@@ -205,6 +205,11 @@ pub struct Spec {
     pub coeff_maps: CoeffMaps,
     pub archetypes: BTreeMap<String, Archetype>,
     pub suites: BTreeMap<String, SuiteSpec>,
+    /// FNV-1a digest of the raw groundtruth bytes this spec was loaded
+    /// from (0 when built from an in-memory JSON value). Keys the fleet's
+    /// sweep-wide baseline cache: two specs with the same digest produce
+    /// bit-identical baseline runs.
+    pub digest: u64,
 }
 
 /// Locate `data/groundtruth.json` relative to the crate root. Honors the
@@ -238,8 +243,17 @@ impl Spec {
     }
 
     pub fn load(path: &Path) -> anyhow::Result<Spec> {
-        let j = Json::parse_file(path)?;
-        Spec::from_json(&j)
+        let bytes = std::fs::read(path)
+            .map_err(|e| anyhow::anyhow!("reading {}: {e}", path.display()))?;
+        let text = std::str::from_utf8(&bytes)
+            .map_err(|e| anyhow::anyhow!("{} is not UTF-8: {e}", path.display()))?;
+        let j = Json::parse(text)?;
+        let mut spec = Spec::from_json(&j)?;
+        // Digest the raw bytes (not the parsed form): any groundtruth
+        // edit — even a whitespace change — invalidates cached baselines,
+        // which errs on the side of recomputing.
+        spec.digest = crate::util::rng::fnv1a64(&bytes);
+        Ok(spec)
     }
 
     pub fn from_json(j: &Json) -> anyhow::Result<Spec> {
@@ -407,6 +421,7 @@ impl Spec {
             coeff_maps,
             archetypes,
             suites,
+            digest: 0,
         })
     }
 }

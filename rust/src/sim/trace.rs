@@ -10,9 +10,36 @@
 //! abnormal (eval/checkpoint) iterations, measurement noise, and a
 //! thermal-inertia EMA on power. Aperiodic apps emit a random segment walk.
 
-use crate::sim::app::AppParams;
+use crate::sim::app::{AppParams, OpPoint};
 use crate::sim::spec::Spec;
 use crate::util::rng::Pcg64;
+
+/// Per-phase relative durations at the given clock config, normalized
+/// to sum to 1. Phases with more compute weight stretch when the SM
+/// clock drops; memory-weighted phases stretch with the mem clock.
+///
+/// Free function (no trace state involved) so `SegmentCache` can
+/// precompute it once per constant-op segment (DESIGN.md §13).
+pub(crate) fn phase_durations(app: &AppParams, spec: &Spec, sm: usize, mem: usize) -> Vec<f64> {
+    let f_ref_s = spec.gears.sm_mhz(spec.gears.reference_sm_gear);
+    let f_ref_m = spec.gears.mem_mhz_of(spec.gears.reference_mem_gear);
+    let r_s = (f_ref_s / spec.gears.sm_mhz(sm)).powf(app.gamma);
+    let r_m = (f_ref_m / spec.gears.mem_mhz_of(mem)).powf(spec.time_model.mem_exponent);
+    let rme = (1.0 - app.s_m) + app.s_m * r_m;
+    let mut durs: Vec<f64> = app
+        .phases
+        .iter()
+        .map(|p| {
+            let rest = (1.0 - p.cw - p.mw).max(0.0);
+            p.frac * (p.cw * r_s + p.mw * rme + rest)
+        })
+        .collect();
+    let s: f64 = durs.iter().sum();
+    for d in &mut durs {
+        *d /= s;
+    }
+    durs
+}
 
 /// Evolving trace state. Time is *virtual* seconds; callers advance it
 /// monotonically via `advance` and read instantaneous values via `sample`.
@@ -84,30 +111,6 @@ impl TraceState {
         }
     }
 
-    /// Per-phase relative durations at the given clock config, normalized
-    /// to sum to 1. Phases with more compute weight stretch when the SM
-    /// clock drops; memory-weighted phases stretch with the mem clock.
-    fn phase_durations(&self, app: &AppParams, spec: &Spec, sm: usize, mem: usize) -> Vec<f64> {
-        let f_ref_s = spec.gears.sm_mhz(spec.gears.reference_sm_gear);
-        let f_ref_m = spec.gears.mem_mhz_of(spec.gears.reference_mem_gear);
-        let r_s = (f_ref_s / spec.gears.sm_mhz(sm)).powf(app.gamma);
-        let r_m = (f_ref_m / spec.gears.mem_mhz_of(mem)).powf(spec.time_model.mem_exponent);
-        let rme = (1.0 - app.s_m) + app.s_m * r_m;
-        let mut durs: Vec<f64> = app
-            .phases
-            .iter()
-            .map(|p| {
-                let rest = (1.0 - p.cw - p.mw).max(0.0);
-                p.frac * (p.cw * r_s + p.mw * rme + rest)
-            })
-            .collect();
-        let s: f64 = durs.iter().sum();
-        for d in &mut durs {
-            *d /= s;
-        }
-        durs
-    }
-
     fn phase_at_progress(&self, durs: &[f64], p: f64) -> usize {
         let mut acc = 0.0;
         for (i, d) in durs.iter().enumerate() {
@@ -131,11 +134,33 @@ impl TraceState {
         dt: f64,
         speed: f64,
     ) -> u64 {
+        let time_factor = app.time_factor(spec, sm, mem);
+        let micro_rate0 = if app.micro_period_s > 0.0 {
+            2.0 * std::f64::consts::PI / app.micro_period_s
+        } else {
+            0.0
+        };
+        self.advance_with(app, dt, speed, time_factor, micro_rate0)
+    }
+
+    /// The `advance` core with the per-segment constants hoisted out
+    /// (`time_factor`, `micro_rate0 = 2π/micro_period_s`). Arithmetic is
+    /// operand-for-operand identical to the historical per-tick body —
+    /// including one `gauss` draw per call for micro apps and the same
+    /// segment/iteration draws — so cached and recomputing callers are
+    /// bit-identical (DESIGN.md §13).
+    pub(crate) fn advance_with(
+        &mut self,
+        app: &AppParams,
+        dt: f64,
+        speed: f64,
+        time_factor: f64,
+        micro_rate0: f64,
+    ) -> u64 {
         // Micro-oscillation phase advances in wall time with jittered rate.
         if app.micro_period_s > 0.0 {
             let g = self.rng.gauss();
-            let rate = 2.0 * std::f64::consts::PI / app.micro_period_s
-                * (1.0 + app.micro_jitter * g).max(0.05);
+            let rate = micro_rate0 * (1.0 + app.micro_jitter * g).max(0.05);
             self.micro_phase += rate * dt;
         }
 
@@ -143,7 +168,7 @@ impl TraceState {
             // Segments are *work units*: progress scales with the clock
             // config (and profiling dilation) exactly like iterations do,
             // so a fixed segment count is a fixed amount of work.
-            let mut remaining = dt * speed / app.time_factor(spec, sm, mem);
+            let mut remaining = dt * speed / time_factor;
             let mut iters = 0;
             while remaining > 0.0 {
                 if self.seg_remaining <= remaining {
@@ -162,7 +187,7 @@ impl TraceState {
             return iters;
         }
 
-        let t_iter = app.t_base * app.time_factor(spec, sm, mem);
+        let t_iter = app.t_base * time_factor;
         let mut iters = 0;
         let mut remaining = dt * speed; // app-progress seconds
         while remaining > 0.0 {
@@ -195,24 +220,49 @@ impl TraceState {
         dt_since_last: f64,
     ) -> Instant {
         let op = app.op_point(spec, sm, mem);
-        let p_dyn = op.power_w - spec.power.p_idle_w;
-
-        let (phase_idx, weight_norm) = if app.aperiodic {
-            (self.seg_phase, {
-                // normalize pw over phases with equal occupancy
-                let s: f64 =
-                    app.phases.iter().map(|p| p.pw).sum::<f64>() / app.phases.len() as f64;
-                s
-            })
+        let (durs, weight_norm) = if app.aperiodic {
+            // normalize pw over phases with equal occupancy
+            (
+                Vec::new(),
+                app.phases.iter().map(|p| p.pw).sum::<f64>() / app.phases.len() as f64,
+            )
         } else {
-            let durs = self.phase_durations(app, spec, sm, mem);
-            let idx = self.phase_at_progress(&durs, self.progress);
+            let durs = phase_durations(app, spec, sm, mem);
             let wsum: f64 = durs
                 .iter()
                 .zip(&app.phases)
                 .map(|(d, p)| d * p.pw)
                 .sum();
-            (idx, wsum)
+            (durs, wsum)
+        };
+        let cw_mean: f64 = app.phases.iter().map(|p| p.frac * p.cw).sum();
+        let mw_mean: f64 = app.phases.iter().map(|p| p.frac * p.mw).sum();
+        self.sample_with(app, spec, dt_since_last, &op, &durs, weight_norm, cw_mean, mw_mean)
+    }
+
+    /// The `sample` core with the per-segment constants hoisted out (op
+    /// point, phase durations, power/util normalizers). RNG contract: one
+    /// `normal(0, trace_noise)` draw per call, exactly as the historical
+    /// body — bit-identical for cached and recomputing callers
+    /// (DESIGN.md §13).
+    #[allow(clippy::too_many_arguments)]
+    pub(crate) fn sample_with(
+        &mut self,
+        app: &AppParams,
+        spec: &Spec,
+        dt_since_last: f64,
+        op: &OpPoint,
+        durs: &[f64],
+        weight_norm: f64,
+        cw_mean: f64,
+        mw_mean: f64,
+    ) -> Instant {
+        let p_dyn = op.power_w - spec.power.p_idle_w;
+
+        let phase_idx = if app.aperiodic {
+            self.seg_phase
+        } else {
+            self.phase_at_progress(durs, self.progress)
         };
         let ph = &app.phases[phase_idx];
 
@@ -241,8 +291,6 @@ impl TraceState {
 
         // Utilization channels follow the phase weights (cosmetic but
         // phase-correlated, which is what Feature_dect needs).
-        let cw_mean: f64 = app.phases.iter().map(|p| p.frac * p.cw).sum();
-        let mw_mean: f64 = app.phases.iter().map(|p| p.frac * p.mw).sum();
         // Utilization is sampled instantaneously by NVML (no thermal
         // filtering), so the micro-oscillation rides it at full strength —
         // this is the high-frequency interference of §2.2.3.

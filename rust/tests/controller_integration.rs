@@ -37,7 +37,7 @@ fn gpoeo_saves_energy_on_representative_apps() {
         let base = run_sim(&spec, &app, &mut DefaultPolicy { ts: 0.025 }, n);
         let mut g = Gpoeo::new(GpoeoCfg::default(), p.clone());
         let run = run_sim(&spec, &app, &mut g, n);
-        let s = savings(&base, &run);
+        let s = savings(&base, &run).unwrap();
         assert!(
             s.energy_saving > 0.04,
             "{name}: expected real savings, got {:.1}%",
@@ -111,7 +111,7 @@ fn odpp_struggles_on_aperiodic_apps() {
     let base = run_sim(&spec, &app, &mut DefaultPolicy { ts: 0.025 }, n);
     let mut o = Odpp::new(OdppCfg::default());
     let run = run_sim(&spec, &app, &mut o, n);
-    let s = savings(&base, &run);
+    let s = savings(&base, &run).unwrap();
     // Either the cap is blown or the objective score is poor — it must
     // not quietly match GPOEO's constrained result.
     let score = gpoeo::search::Objective::paper_default()

@@ -1,0 +1,102 @@
+//! Stepped ↔ fast-forward parity across the full evaluation suite
+//! (DESIGN.md §13).
+//!
+//! The segment fast-forward core (`SegmentCache` + `advance_until`)
+//! promises *bit-identical* results to the historical per-tick body: the
+//! cached path executes the same arithmetic on the same operands and
+//! draws the same RNG stream in the same order, so divergence is
+//! expected to be exactly zero — these tests assert `==` on f64s, not
+//! approximate tolerances. The recomputing originals survive as
+//! `advance_reference`/`sample_reference` precisely so this property is
+//! checkable forever.
+
+use gpoeo::device::sim_device;
+use gpoeo::experiments::helpers::evaluation_apps;
+use gpoeo::sim::{run_budget_s, Spec};
+use std::sync::Arc;
+
+const TS: f64 = 0.025;
+
+/// All 71 evaluation apps (periodic and aperiodic) × profiling on/off:
+/// `advance_until` must land on the bit-exact state of the stepped
+/// reference loop it is defined to equal.
+#[test]
+fn fast_forward_matches_stepped_reference_on_every_app() {
+    let spec = Arc::new(Spec::load_default().unwrap());
+    let apps = evaluation_apps(&spec).unwrap();
+    assert!(apps.len() >= 71, "evaluation suite shrank: {}", apps.len());
+    for app in &apps {
+        for profiling in [false, true] {
+            let target = 20;
+            let mut fast = sim_device(&spec, app);
+            let mut reference = sim_device(&spec, app);
+            if profiling {
+                fast.start_counter_session();
+                reference.start_counter_session();
+            }
+            let budget = run_budget_s(0.0, target, app.t_base);
+            fast.advance_until(target, budget, TS);
+            while reference.iterations() < target && reference.time_s() < budget {
+                reference.advance_reference(TS);
+            }
+            let tag = format!("{} (profiling={profiling})", app.name);
+            assert_eq!(fast.true_energy_j(), reference.true_energy_j(), "{tag}: energy");
+            assert_eq!(fast.iterations(), reference.iterations(), "{tag}: iterations");
+            assert_eq!(fast.time_s(), reference.time_s(), "{tag}: time");
+        }
+    }
+}
+
+/// A gear-switching, profiling-toggling, power-capping drive — the worst
+/// case for the segment cache (constant invalidation) — stays bit-equal
+/// to the reference twin, including the noisy sampling channel.
+#[test]
+fn cached_stepping_survives_gear_and_profiling_churn_on_every_app() {
+    let spec = Arc::new(Spec::load_default().unwrap());
+    let apps = evaluation_apps(&spec).unwrap();
+    for (i, app) in apps.iter().enumerate() {
+        let mut fast = sim_device(&spec, app);
+        let mut reference = sim_device(&spec, app);
+        let ticks: usize = 600;
+        for step in 0..ticks {
+            // Deterministic churn schedule, offset per app so the suite
+            // covers many (gear, profiling, cap) interleavings.
+            if step % 97 == 0 {
+                let sm = 30 + ((step / 97 + i) * 13) % 80;
+                let mem = 1 + ((step / 97 + i) * 7) % 10;
+                fast.set_sm_gear(sm);
+                fast.set_mem_gear(mem);
+                reference.set_sm_gear(sm);
+                reference.set_mem_gear(mem);
+            }
+            if step % 180 == 0 {
+                fast.start_counter_session();
+                reference.start_counter_session();
+            } else if step % 180 == 90 {
+                fast.stop_counter_session();
+                reference.stop_counter_session();
+            }
+            if step == ticks / 2 {
+                fast.set_power_limit_w(190.0);
+                reference.set_power_limit_w(190.0);
+            }
+            fast.advance(TS);
+            reference.advance_reference(TS);
+            if step % 50 == 7 {
+                let sf = fast.sample(TS);
+                let sr = reference.sample_reference(TS);
+                assert_eq!(sf.power_w, sr.power_w, "{}: sampled power", app.name);
+                assert_eq!(sf.util_sm, sr.util_sm, "{}: sampled sm util", app.name);
+                assert_eq!(sf.util_mem, sr.util_mem, "{}: sampled mem util", app.name);
+            }
+        }
+        assert_eq!(
+            fast.true_energy_j(),
+            reference.true_energy_j(),
+            "{}: energy after churn",
+            app.name
+        );
+        assert_eq!(fast.iterations(), reference.iterations(), "{}: iterations", app.name);
+        assert_eq!(fast.time_s(), reference.time_s(), "{}: time", app.name);
+    }
+}
