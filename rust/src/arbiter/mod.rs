@@ -1,0 +1,528 @@
+//! Fleet power-budget arbiter (DESIGN.md §14).
+//!
+//! A [`BudgetArbiter`] owns one global power budget (watts) for every
+//! enrolled session and periodically re-allocates per-session power
+//! caps. Sessions in throughput-insensitive phases — classified
+//! aperiodic by the streaming detector, or whose smoothed iteration
+//! rate has collapsed relative to their own peak — *donate* headroom;
+//! latency-critical (periodic, training-rate) sessions receive it
+//! through a water-filling loop bounded by per-session `[min, max]`
+//! cap floors. A hysteresis band suppresses cap thrashing, and when no
+//! session has any telemetry signal at all (detached telemetry plane)
+//! the arbiter degrades to a fairness fallback: an equal split of the
+//! budget.
+//!
+//! The arbiter is pure bookkeeping: it never touches a device and never
+//! blocks. The reactor drives [`BudgetArbiter::tick`] from its poll
+//! loop and applies the returned caps via `SessionHandle` dispatch so
+//! worker-owned (non-`Send`) devices stay worker-side — see
+//! DESIGN.md §14 and §8.
+//!
+//! Invariant (checked by `rust/tests/arbiter.rs` against journal
+//! replay): the sum of caps in any emitted [`Reallocation`] never
+//! exceeds the budget in force at that epoch — the budget invariant
+//! outranks hysteresis.
+
+#![warn(clippy::unwrap_used, clippy::expect_used)]
+
+use crate::telemetry::Ewma;
+use std::collections::BTreeMap;
+
+/// Arbiter knobs, settable over the v1 wire via
+/// `set_policy {name: "arbiter", config: {...}}` (DESIGN.md §10).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ArbiterCfg {
+    /// Global fleet power budget in watts.
+    pub budget_w: f64,
+    /// Re-allocation period in seconds (reactor wall clock).
+    pub period_s: f64,
+    /// Per-session cap floor: water-filling never starves a session
+    /// below this (unless the budget itself cannot cover the floors).
+    pub min_cap_w: f64,
+    /// Per-session cap ceiling: water-filling saturates here.
+    pub max_cap_w: f64,
+    /// Hysteresis band: a proposed cap within this distance of the
+    /// session's applied cap keeps the applied cap (no thrash).
+    pub hysteresis_w: f64,
+    /// EWMA smoothing factor for the per-session iteration rate.
+    pub rate_alpha: f64,
+    /// A session donates when its smoothed rate drops below
+    /// `donor_ratio` × its own peak smoothed rate.
+    pub donor_ratio: f64,
+}
+
+impl Default for ArbiterCfg {
+    fn default() -> ArbiterCfg {
+        ArbiterCfg {
+            budget_w: 1000.0,
+            period_s: 1.0,
+            min_cap_w: 80.0,
+            max_cap_w: 350.0,
+            hysteresis_w: 10.0,
+            rate_alpha: 0.3,
+            donor_ratio: 0.5,
+        }
+    }
+}
+
+/// Per-session telemetry digest. Rates come from the PR 7 windowed
+/// primitives ([`Ewma`]) over journal `Tick` events — never raw tick
+/// counters — and the periodic/aperiodic verdict from the PR 3
+/// streaming detector's `Detect` event.
+#[derive(Debug)]
+struct SessionState {
+    rate: Ewma,
+    peak_rate: f64,
+    /// Streaming-verdict classification, once one arrived.
+    aperiodic: Option<bool>,
+    /// Last observed (iterations, time_s) pair, for rate deltas.
+    last_obs: Option<(u64, f64)>,
+    has_rate: bool,
+    /// Cap currently applied to the session (None before first epoch).
+    applied_cap_w: Option<f64>,
+}
+
+impl SessionState {
+    fn new(alpha: f64) -> SessionState {
+        SessionState {
+            rate: Ewma::new(alpha),
+            peak_rate: 0.0,
+            aperiodic: None,
+            last_obs: None,
+            has_rate: false,
+            applied_cap_w: None,
+        }
+    }
+
+    /// Any telemetry signal at all? When no enrolled session has one,
+    /// the arbiter uses the fairness fallback.
+    fn has_signal(&self) -> bool {
+        self.aperiodic.is_some() || self.has_rate
+    }
+
+    /// Throughput-insensitive right now: classified aperiodic, or the
+    /// smoothed rate collapsed relative to this session's own peak.
+    fn donor(&self, ratio: f64) -> bool {
+        self.aperiodic == Some(true)
+            || (self.has_rate && self.peak_rate > 0.0 && self.rate.value() < ratio * self.peak_rate)
+    }
+}
+
+/// One emitted re-allocation epoch: a *full snapshot* of every enrolled
+/// session's cap, so each epoch in the journal is self-contained and
+/// the budget invariant can be checked per-epoch without carry-forward.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Reallocation {
+    /// Monotone epoch counter; increments only when caps are emitted.
+    pub epoch: u64,
+    /// Budget in force for this epoch.
+    pub budget_w: f64,
+    /// `(session, cap_w)` for every enrolled session, ascending id.
+    pub caps: Vec<(u64, f64)>,
+    /// How many of those caps differ from the previously applied ones.
+    pub changed: usize,
+}
+
+/// The fleet-level budget owner. See the module docs for the model.
+pub struct BudgetArbiter {
+    cfg: ArbiterCfg,
+    sessions: BTreeMap<u64, SessionState>,
+    last_tick_s: Option<f64>,
+    epoch: u64,
+}
+
+impl BudgetArbiter {
+    pub fn new(cfg: ArbiterCfg) -> BudgetArbiter {
+        BudgetArbiter {
+            cfg,
+            sessions: BTreeMap::new(),
+            last_tick_s: None,
+            epoch: 0,
+        }
+    }
+
+    pub fn cfg(&self) -> &ArbiterCfg {
+        &self.cfg
+    }
+
+    /// Replace the configuration (e.g. a budget shrink over the wire)
+    /// and re-arm the period gate so the next [`Self::tick`] fires
+    /// immediately — a shrunk budget must not wait out a stale period.
+    pub fn set_cfg(&mut self, cfg: ArbiterCfg) {
+        self.cfg = cfg;
+        self.last_tick_s = None;
+    }
+
+    /// Enroll a session under the budget (idempotent).
+    pub fn enroll(&mut self, id: u64) {
+        self.sessions
+            .entry(id)
+            .or_insert_with(|| SessionState::new(self.cfg.rate_alpha));
+    }
+
+    /// Remove a session; its headroom returns to the pool next tick.
+    pub fn unenroll(&mut self, id: u64) {
+        self.sessions.remove(&id);
+    }
+
+    pub fn len(&self) -> usize {
+        self.sessions.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.sessions.is_empty()
+    }
+
+    /// Feed one journal `Tick` observation: cumulative iteration count
+    /// at device time `time_s`. The arbiter differentiates to a rate
+    /// and smooths it — raw ticks are never compared across sessions.
+    pub fn observe_tick(&mut self, id: u64, iterations: u64, time_s: f64) {
+        if let Some(s) = self.sessions.get_mut(&id) {
+            if let Some((i0, t0)) = s.last_obs {
+                let dt = time_s - t0;
+                if dt > 1e-9 && iterations >= i0 {
+                    let smoothed = s.rate.observe((iterations - i0) as f64 / dt);
+                    if smoothed > s.peak_rate {
+                        s.peak_rate = smoothed;
+                    }
+                    s.has_rate = true;
+                }
+            }
+            s.last_obs = Some((iterations, time_s));
+        }
+    }
+
+    /// Feed a streaming-detector verdict (journal `Detect` event).
+    pub fn observe_detect(&mut self, id: u64, aperiodic: bool) {
+        if let Some(s) = self.sessions.get_mut(&id) {
+            s.aperiodic = Some(aperiodic);
+        }
+    }
+
+    /// Pure allocation: the cap each enrolled session *should* have
+    /// under the current budget and telemetry digest. Deterministic in
+    /// the observation history (BTreeMap order, no randomness).
+    ///
+    /// Σ caps ≤ budget always holds on the result.
+    pub fn allocate(&self) -> BTreeMap<u64, f64> {
+        let mut caps = BTreeMap::new();
+        let n = self.sessions.len();
+        if n == 0 {
+            return caps;
+        }
+        let nf = n as f64;
+        let b = self.cfg.budget_w;
+
+        if !self.sessions.values().any(SessionState::has_signal) {
+            // Fairness fallback: telemetry detached (or no signal yet)
+            // — equal split, ceiling-clamped. If the equal share is
+            // below the floor the budget cannot cover the floors, so
+            // degrade to the plain equal split rather than overshoot.
+            let mut share = (b / nf).min(self.cfg.max_cap_w);
+            if share < self.cfg.min_cap_w {
+                share = b / nf;
+            }
+            for id in self.sessions.keys() {
+                caps.insert(*id, share);
+            }
+            return caps;
+        }
+
+        // Water-filling: everyone starts at the floor (or the equal
+        // split when the budget cannot cover the floors), then the
+        // spare pours into critical sessions first, donors last.
+        let base = (b / nf).min(self.cfg.min_cap_w);
+        let mut spare = (b - base * nf).max(0.0);
+        let mut donors = Vec::new();
+        let mut critical = Vec::new();
+        for (id, s) in &self.sessions {
+            caps.insert(*id, base);
+            if s.donor(self.cfg.donor_ratio) {
+                donors.push(*id);
+            } else {
+                critical.push(*id);
+            }
+        }
+        water_fill(&mut caps, &critical, self.cfg.max_cap_w, &mut spare);
+        water_fill(&mut caps, &donors, self.cfg.max_cap_w, &mut spare);
+        caps
+    }
+
+    /// Period-gated re-allocation. Returns `Some` only when at least
+    /// one cap actually changes; the caller applies every cap in the
+    /// snapshot. Hysteresis keeps applied caps inside the band — but
+    /// the budget invariant outranks it: if the kept caps would exceed
+    /// the (possibly shrunk) budget, the raw proposal is applied.
+    pub fn tick(&mut self, now_s: f64) -> Option<Reallocation> {
+        let due = match self.last_tick_s {
+            None => true,
+            Some(t) => now_s - t >= self.cfg.period_s,
+        };
+        if !due || self.sessions.is_empty() {
+            if due {
+                self.last_tick_s = Some(now_s);
+            }
+            return None;
+        }
+        self.last_tick_s = Some(now_s);
+
+        let proposal = self.allocate();
+        let mut kept: Vec<(u64, f64)> = Vec::with_capacity(proposal.len());
+        let mut kept_sum = 0.0;
+        let mut changed = 0usize;
+        for (id, prop) in &proposal {
+            let applied = self.sessions.get(id).and_then(|s| s.applied_cap_w);
+            let cap = match applied {
+                Some(c) if (prop - c).abs() <= self.cfg.hysteresis_w => c,
+                _ => {
+                    changed += 1;
+                    *prop
+                }
+            };
+            kept_sum += cap;
+            kept.push((*id, cap));
+        }
+        let caps = if kept_sum > self.cfg.budget_w + 1e-9 {
+            changed = proposal
+                .iter()
+                .filter(|(id, p)| {
+                    self.sessions
+                        .get(id)
+                        .and_then(|s| s.applied_cap_w)
+                        .map_or(true, |c| (*p - c).abs() > 1e-12)
+                })
+                .count();
+            proposal.into_iter().collect::<Vec<(u64, f64)>>()
+        } else {
+            kept
+        };
+        if changed == 0 {
+            return None;
+        }
+        self.epoch += 1;
+        for (id, cap) in &caps {
+            if let Some(s) = self.sessions.get_mut(id) {
+                s.applied_cap_w = Some(*cap);
+            }
+        }
+        Some(Reallocation {
+            epoch: self.epoch,
+            budget_w: self.cfg.budget_w,
+            caps,
+            changed,
+        })
+    }
+}
+
+/// Pour `spare` watts into `ids` by iterative equal shares, saturating
+/// each at `max_cap_w`. Terminates: every round either consumes the
+/// spare (nobody saturated) or strictly shrinks the open set.
+fn water_fill(caps: &mut BTreeMap<u64, f64>, ids: &[u64], max_cap_w: f64, spare: &mut f64) {
+    let mut open: Vec<u64> = ids
+        .iter()
+        .copied()
+        .filter(|id| caps.get(id).copied().unwrap_or(max_cap_w) < max_cap_w)
+        .collect();
+    while *spare > 1e-9 && !open.is_empty() {
+        let share = *spare / open.len() as f64;
+        let mut still_open = Vec::with_capacity(open.len());
+        let mut saturated = false;
+        for id in &open {
+            let cur = caps.get(id).copied().unwrap_or(0.0);
+            let room = max_cap_w - cur;
+            let add = share.min(room);
+            caps.insert(*id, cur + add);
+            *spare -= add;
+            if add < room - 1e-12 {
+                still_open.push(*id);
+            } else {
+                saturated = true;
+            }
+        }
+        open = still_open;
+        if !saturated {
+            break;
+        }
+    }
+}
+
+#[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
+mod tests {
+    use super::*;
+
+    fn cap_sum(caps: &BTreeMap<u64, f64>) -> f64 {
+        caps.values().sum()
+    }
+
+    fn cfg(budget_w: f64) -> ArbiterCfg {
+        ArbiterCfg {
+            budget_w,
+            period_s: 1.0,
+            min_cap_w: 80.0,
+            max_cap_w: 350.0,
+            hysteresis_w: 10.0,
+            ..ArbiterCfg::default()
+        }
+    }
+
+    /// Drive a training-like session: steady high rate.
+    fn feed_training(a: &mut BudgetArbiter, id: u64, n: usize) {
+        for k in 0..n {
+            a.observe_tick(id, (k as u64) * 10, k as f64 * 0.5);
+        }
+    }
+
+    /// Drive an idle-phase session: the rate collapses after a start.
+    fn feed_idle(a: &mut BudgetArbiter, id: u64, n: usize) {
+        for k in 0..n {
+            let iters = if k < 3 { (k as u64) * 10 } else { 30 + k as u64 };
+            a.observe_tick(id, iters, k as f64 * 0.5);
+        }
+    }
+
+    #[test]
+    fn fairness_fallback_splits_budget_equally() {
+        let mut a = BudgetArbiter::new(cfg(400.0));
+        for id in 1..=4 {
+            a.enroll(id);
+        }
+        let caps = a.allocate();
+        assert_eq!(caps.len(), 4);
+        for cap in caps.values() {
+            assert!((cap - 100.0).abs() < 1e-12);
+        }
+        // Budget below the floors: degrade to the equal split rather
+        // than overshoot the budget.
+        let mut tight = BudgetArbiter::new(cfg(100.0));
+        for id in 1..=4 {
+            tight.enroll(id);
+        }
+        let caps = tight.allocate();
+        for cap in caps.values() {
+            assert!((cap - 25.0).abs() < 1e-12);
+        }
+        assert!(cap_sum(&caps) <= 100.0 + 1e-9);
+    }
+
+    #[test]
+    fn allocations_never_exceed_budget() {
+        for budget in [90.0, 200.0, 333.0, 600.0, 1500.0, 5000.0] {
+            let mut a = BudgetArbiter::new(cfg(budget));
+            for id in 1..=5 {
+                a.enroll(id);
+            }
+            feed_training(&mut a, 1, 8);
+            feed_training(&mut a, 2, 8);
+            feed_idle(&mut a, 3, 8);
+            a.observe_detect(4, true);
+            a.observe_detect(5, false);
+            let caps = a.allocate();
+            assert!(
+                cap_sum(&caps) <= budget + 1e-9,
+                "sum {} over budget {budget}",
+                cap_sum(&caps)
+            );
+        }
+    }
+
+    #[test]
+    fn donors_yield_headroom_to_critical_sessions() {
+        let mut a = BudgetArbiter::new(cfg(400.0));
+        a.enroll(1);
+        a.enroll(2);
+        feed_training(&mut a, 1, 8); // critical: steady training rate
+        feed_idle(&mut a, 2, 8); // donor: rate collapsed vs. its peak
+        let caps = a.allocate();
+        let c1 = caps[&1];
+        let c2 = caps[&2];
+        assert!(c1 > c2, "critical {c1} should out-rank donor {c2}");
+        // Donor holds the floor; critical takes the spare up to max.
+        assert!((c2 - 80.0).abs() < 1e-9, "donor at floor, got {c2}");
+        assert!((c1 - 320.0).abs() < 1e-9, "critical takes spare, got {c1}");
+
+        // An aperiodic verdict alone also marks a donor.
+        let mut b = BudgetArbiter::new(cfg(400.0));
+        b.enroll(1);
+        b.enroll(2);
+        b.observe_detect(1, false);
+        b.observe_detect(2, true);
+        let caps = b.allocate();
+        assert!(caps[&1] > caps[&2]);
+    }
+
+    #[test]
+    fn water_filling_saturates_at_max_cap() {
+        let mut a = BudgetArbiter::new(cfg(10_000.0));
+        for id in 1..=3 {
+            a.enroll(id);
+            a.observe_detect(id, false);
+        }
+        let caps = a.allocate();
+        for cap in caps.values() {
+            assert!((cap - 350.0).abs() < 1e-9, "saturate at max, got {cap}");
+        }
+    }
+
+    #[test]
+    fn hysteresis_keeps_caps_but_budget_shrink_overrides() {
+        let mut a = BudgetArbiter::new(cfg(400.0));
+        a.enroll(1);
+        a.enroll(2);
+        a.observe_detect(1, false);
+        a.observe_detect(2, true);
+        let first = a.tick(0.0).expect("first tick allocates");
+        assert_eq!(first.epoch, 1);
+        assert_eq!(first.caps.len(), 2);
+
+        // Same state one period later: proposal identical, all caps
+        // inside the band — no re-allocation, no epoch bump.
+        assert!(a.tick(1.0).is_none(), "no thrash under hysteresis");
+
+        // Shrink the budget: the kept caps would overshoot, so the
+        // budget invariant forces the raw proposal through.
+        let mut shrunk = cfg(200.0);
+        shrunk.hysteresis_w = 1e9; // hysteresis alone would keep everything
+        a.set_cfg(shrunk);
+        let re = a.tick(1.5).expect("shrink re-allocates immediately");
+        assert_eq!(re.epoch, 2);
+        let sum: f64 = re.caps.iter().map(|(_, c)| c).sum();
+        assert!(sum <= 200.0 + 1e-9, "kept caps must not outlive the budget");
+    }
+
+    #[test]
+    fn allocation_is_deterministic_in_the_observation_history() {
+        let build = || {
+            let mut a = BudgetArbiter::new(cfg(555.0));
+            for id in [9, 3, 7, 1] {
+                a.enroll(id);
+            }
+            feed_training(&mut a, 3, 6);
+            feed_idle(&mut a, 7, 6);
+            a.observe_detect(9, true);
+            a
+        };
+        let mut a = build();
+        let mut b = build();
+        assert_eq!(a.allocate(), b.allocate());
+        assert_eq!(a.tick(0.0), b.tick(0.0));
+        assert_eq!(a.tick(2.0), b.tick(2.0));
+    }
+
+    #[test]
+    fn period_gates_and_unenroll_returns_headroom() {
+        let mut a = BudgetArbiter::new(cfg(400.0));
+        a.enroll(1);
+        a.enroll(2);
+        a.observe_detect(1, false);
+        a.observe_detect(2, true);
+        assert!(a.tick(0.0).is_some());
+        assert!(a.tick(0.5).is_none(), "inside the period");
+        // Donor leaves: its headroom flows back to the critical session.
+        a.unenroll(2);
+        let re = a.tick(1.0).expect("membership change re-allocates");
+        assert_eq!(re.caps.len(), 1);
+        let (_, cap) = re.caps[0];
+        assert!((cap - 350.0).abs() < 1e-9, "sole session takes up to max");
+    }
+}

@@ -53,7 +53,8 @@ SUBCOMMANDS:
                                (fig1 fig2 fig3 fig5 fig6 fig7 fig8 fig9
                                 fig10 fig11 fig12 fig13 table3 fig14
                                 fig15 headline policies detect-bench
-                                predict-bench api-bench sim-bench | all);
+                                predict-bench api-bench sim-bench
+                                arbiter-bench | all);
                                 detect-bench appends streaming-vs-batch
                                 detection cost to BENCH_detection.json
                                 (--poll-s F --min-speedup X fails below
@@ -72,7 +73,19 @@ SUBCOMMANDS:
                                 stepped-vs-fast-forward simulation cost
                                 and divergence to BENCH_sim.json
                                 (--reps N --min-speedup X fails below
-                                X×; any divergence >1e-9 fails)
+                                X×; any divergence >1e-9 fails);
+                                arbiter-bench runs N concurrent sessions
+                                under a shrinking fleet power budget,
+                                coordinated (set_policy arbiter with
+                                budget_w/period_s/min_cap_w/max_cap_w/
+                                hysteresis_w knobs) vs uncoordinated
+                                powercap, and appends total energy,
+                                slowdown p50/p99, journaled cap
+                                violations and reallocation epochs to
+                                BENCH_arbiter.json (--sessions N
+                                --quick; fails on any epoch over
+                                budget, <3 epochs, or coordinated
+                                energy not below uncoordinated)
   daemon [--socket PATH]       Begin/End API server (micro-intrusive
                                mode; --workers N fleet threads, AIMD
                                auto-scaled up to --max-workers N;

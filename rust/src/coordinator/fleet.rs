@@ -256,6 +256,19 @@ enum Cmd {
         budget_s: Option<f64>,
         reply: Reply<anyhow::Result<SessionStatus>>,
     },
+    /// Fire-and-forget power-cap application from the budget arbiter
+    /// (DESIGN.md §14). Applied on the worker thread that owns the
+    /// (non-`Send`) device; the *applied* (range-clamped) value is what
+    /// gets journaled.
+    SetCap {
+        id: u64,
+        cap_w: f64,
+        /// The fleet budget this cap was allocated under (journaled so
+        /// replay can check the per-epoch budget invariant).
+        budget_w: f64,
+        /// Arbiter re-allocation epoch the cap belongs to.
+        epoch: u64,
+    },
     Drop {
         id: u64,
     },
@@ -738,6 +751,19 @@ impl SessionHandle {
         // caller observes the dead worker through its callback.
     }
 
+    /// Fire-and-forget cap application from the fleet budget arbiter
+    /// (DESIGN.md §14). No reply: the arbiter observes the applied cap
+    /// through the telemetry plane (`CapChange` events), and a dead
+    /// worker surfaces through the next Step/End on this handle.
+    pub fn dispatch_set_cap(&self, cap_w: f64, budget_w: f64, epoch: u64) {
+        let _ = self.tx.send(Cmd::SetCap {
+            id: self.id,
+            cap_w,
+            budget_w,
+            epoch,
+        });
+    }
+
     /// Abandon the session without driving it to its target (the
     /// explicit spelling of what dropping the handle does; the daemon's
     /// `abort` request uses it).
@@ -1056,6 +1082,7 @@ fn worker_loop(
                         sessions.remove(&id);
                         if tel.enabled() {
                             tel.metrics().inc(Counter::SessionsEnded);
+                            tel.metrics().remove_session_cap(id);
                             tel.emit(end_event(id, &st));
                         }
                         reply.send(Ok(st));
@@ -1075,10 +1102,33 @@ fn worker_loop(
                     }
                 }
             }
+            Cmd::SetCap {
+                id,
+                cap_w,
+                budget_w,
+                epoch,
+            } => {
+                // Unknown ids are dropped silently: the arbiter may race
+                // an End, and a cap for a finished session is moot.
+                if let Some(s) = sessions.get_mut(&id) {
+                    let applied = s.dev.set_power_limit_w(cap_w);
+                    if tel.enabled() {
+                        tel.metrics().set_session_cap(id, applied);
+                        tel.emit(TelemetryEvent::CapChange {
+                            session: id,
+                            cap_w: applied,
+                            budget_w,
+                            epoch,
+                            time_s: s.dev.time_s(),
+                        });
+                    }
+                }
+            }
             Cmd::Drop { id } => {
                 if let Some(s) = sessions.remove(&id) {
                     if tel.enabled() {
                         tel.metrics().inc(Counter::SessionsEnded);
+                        tel.metrics().remove_session_cap(id);
                         tel.emit(end_event(id, &s.status()));
                     }
                 }

@@ -278,7 +278,7 @@ mod tests {
         fn mem_gear(&self) -> usize {
             self.inner.mem_gear()
         }
-        fn set_power_limit_w(&mut self, limit_w: f64) {
+        fn set_power_limit_w(&mut self, limit_w: f64) -> f64 {
             self.inner.set_power_limit_w(limit_w)
         }
         fn power_limit_w(&self) -> f64 {

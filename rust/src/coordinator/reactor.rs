@@ -46,6 +46,7 @@ use crate::api::{
     negotiate_hello, Event, PolicyInfo, Request, Response, ServerMsg, SessionReport,
     MAX_LINE_BYTES,
 };
+use crate::arbiter::{ArbiterCfg, BudgetArbiter};
 use crate::coordinator::daemon::{
     accept_stream, claim_session, handle_legacy, list_apps, prepare_begin, report, with_session,
     AcceptGate, DaemonCfg, SessionEntry, Shared, STATUS_TICKS,
@@ -74,6 +75,12 @@ const POLL_TIMEOUT_MS: i32 = 100;
 /// After a `shutdown` request: how long to keep flushing response bytes
 /// before exiting anyway.
 const SHUTDOWN_GRACE: Duration = Duration::from_secs(1);
+
+/// High-bit namespace for budget-arbiter telemetry taps on the shared
+/// `sub_rx` channel: tap tokens are `ARB_TAG | fleet_id`, disjoint from
+/// connection tokens (which count up from zero) for the life of any
+/// realistic daemon.
+const ARB_TAG: u64 = 1 << 63;
 
 // ---------------------------------------------------------------------
 // Incremental line framing.
@@ -368,6 +375,18 @@ enum Done {
 
 const WORKER_GONE: &str = "fleet worker thread is gone";
 
+/// Daemon-side state of the fleet power-budget arbiter (DESIGN.md §14),
+/// installed by the first `set_policy` selecting the arbiter family.
+/// The arbiter itself is pure bookkeeping; everything effectful — cap
+/// application, journaling — happens worker-side via `Cmd::SetCap`.
+struct ArbiterState {
+    arb: BudgetArbiter,
+    /// fleet session id → session-table name (for cap dispatch).
+    enrolled: HashMap<u64, String>,
+    /// fleet session id → telemetry tap id feeding `arbiter_observe`.
+    taps: HashMap<u64, u64>,
+}
+
 // ---------------------------------------------------------------------
 // The reactor.
 // ---------------------------------------------------------------------
@@ -404,6 +423,9 @@ pub(crate) struct Reactor {
     depth: Ewma,
     /// Request arrival rate over a trailing window (gauge only).
     req_rate: WindowedRate,
+    /// Fleet power-budget arbiter, `None` until a `set_policy` selects
+    /// the arbiter family (DESIGN.md §14).
+    arbiter: Option<ArbiterState>,
 }
 
 impl Reactor {
@@ -438,6 +460,7 @@ impl Reactor {
             tel_enabled,
             depth: Ewma::new(0.3),
             req_rate: WindowedRate::new(1.0),
+            arbiter: None,
         })
     }
 
@@ -463,6 +486,7 @@ impl Reactor {
             // may move the pool.
             let depth = self.depth.observe(self.ops.len() as f64);
             self.fleet.autoscale(depth.round() as usize);
+            self.arbiter_tick();
             self.observe_gauges(depth);
             self.flush_all();
             self.reap();
@@ -965,6 +989,10 @@ impl Reactor {
             Request::Status { session } => self.start_status(tok, session),
             Request::End { session } => match claim_session(&self.shared, &session) {
                 Ok((entry, h)) => {
+                    // Leave the arbiter before the (possibly long) final
+                    // drive: the departing session's headroom goes back
+                    // into the pool at the next reallocation.
+                    self.arbiter_unenroll(h.id());
                     let op = self.next_op();
                     let reply = self.make_reply(move |r| Done::Session(op, r));
                     h.dispatch_end(reply);
@@ -982,6 +1010,7 @@ impl Reactor {
             },
             Request::Abort { session } => {
                 let r = claim_session(&self.shared, &session).map(|(entry, h)| {
+                    self.arbiter_unenroll(h.id());
                     h.abort();
                     self.shared.sessions.remove_if(&session, &entry);
                 });
@@ -995,6 +1024,18 @@ impl Reactor {
             }
             Request::SetPolicy { policy } => match PolicyRegistry::global().get(&policy.name) {
                 Ok(_) => {
+                    // Selecting the arbiter family also (re)configures
+                    // the daemon-wide budget arbiter — re-issuing
+                    // `set_policy` with a smaller `budget_w` is how an
+                    // operator shrinks the fleet budget live.
+                    match crate::policy::arbiter::arbiter_config(&policy) {
+                        Some(Err(e)) => {
+                            self.answer(tok, Response::error(format!("{e:#}")));
+                            return;
+                        }
+                        Some(Ok(acfg)) => self.install_arbiter(acfg),
+                        None => {}
+                    }
                     let detail = format!("policy {}", policy.name);
                     if let Some(v) = self.v1_mut(tok) {
                         v.default_policy = policy;
@@ -1089,8 +1130,12 @@ impl Reactor {
         };
         let op = self.next_op();
         let reply = self.make_reply(move |r| Done::Begin(op, r));
+        // Decided before `spec` moves into the fleet: arbiter-family
+        // sessions enroll in the budget arbiter (if one is installed).
+        let enroll = self.arbiter.is_some() && crate::policy::arbiter::is_arbiter(&spec);
         match self.fleet.begin_async(prepared.app, spec, prepared.n_iters, reply) {
             Ok(handle) => {
+                let fleet_id = handle.id();
                 // Fulfill the table *now*, not when the worker confirms:
                 // worker command queues are FIFO, so a status/end
                 // pipelined right behind this begin queues after it on
@@ -1108,6 +1153,9 @@ impl Reactor {
                     );
                     return;
                 };
+                if enroll {
+                    self.arbiter_enroll(fleet_id, &prepared.id);
+                }
                 self.ops.insert(
                     op,
                     Op::Begin {
@@ -1122,6 +1170,131 @@ impl Reactor {
                 self.shared.sessions.remove(&prepared.id);
                 self.answer(tok, Response::error(format!("{e:#}")));
             }
+        }
+    }
+
+    // -- budget arbiter (DESIGN.md §14) -------------------------------
+
+    /// Install the arbiter, or retune a live one. `set_cfg` re-arms an
+    /// immediate reallocation, so a budget change takes effect on the
+    /// very next loop iteration rather than a full period later.
+    fn install_arbiter(&mut self, cfg: ArbiterCfg) {
+        match self.arbiter.as_mut() {
+            Some(st) => st.arb.set_cfg(cfg),
+            None => {
+                self.arbiter = Some(ArbiterState {
+                    arb: BudgetArbiter::new(cfg),
+                    enrolled: HashMap::new(),
+                    taps: HashMap::new(),
+                });
+            }
+        }
+        self.arbiter_tick();
+    }
+
+    /// Enroll a just-begun arbiter-family session: bookkeeping plus a
+    /// telemetry tap (tagged `ARB_TAG | fleet_id`) feeding its tick and
+    /// detect events to [`Reactor::arbiter_observe`]. With the plane
+    /// detached there is no tap — no signal ever arrives and the
+    /// arbiter stays on its fairness fallback, by design.
+    fn arbiter_enroll(&mut self, fleet_id: u64, sid: &str) {
+        if self.arbiter.is_none() {
+            return;
+        }
+        let tap = self.tel_enabled.then(|| {
+            let wake = self.wake_w.clone();
+            self.fleet.telemetry().subscribe_session(
+                fleet_id,
+                ARB_TAG | fleet_id,
+                self.sub_tx.clone(),
+                Box::new(move || {
+                    let _ = (&*wake).write(&[1u8]);
+                }),
+            )
+        });
+        if let Some(st) = self.arbiter.as_mut() {
+            st.arb.enroll(fleet_id);
+            st.enrolled.insert(fleet_id, sid.to_string());
+            if let Some(tap) = tap {
+                st.taps.insert(fleet_id, tap);
+            }
+        }
+    }
+
+    /// Remove a session from arbitration (end/abort/observed End).
+    /// Unknown ids are a no-op, so the explicit end-path call and the
+    /// telemetry-observed End may both fire.
+    fn arbiter_unenroll(&mut self, fleet_id: u64) {
+        let tap = match self.arbiter.as_mut() {
+            Some(st) => {
+                st.arb.unenroll(fleet_id);
+                st.enrolled.remove(&fleet_id);
+                st.taps.remove(&fleet_id)
+            }
+            None => return,
+        };
+        if let Some(tap) = tap {
+            self.fleet.telemetry().unsubscribe(tap);
+        }
+    }
+
+    /// Feed one tapped telemetry event to the arbiter's observers. Only
+    /// iteration progress (never raw ticks — the smoothing contract in
+    /// DESIGN.md §14), streaming-detector verdicts, and session End.
+    fn arbiter_observe(&mut self, ev: TelemetryEvent) {
+        match ev {
+            TelemetryEvent::Tick {
+                session,
+                iterations,
+                time_s,
+                ..
+            } => {
+                if let Some(st) = self.arbiter.as_mut() {
+                    st.arb.observe_tick(session, iterations, time_s);
+                }
+            }
+            TelemetryEvent::Detect {
+                session, aperiodic, ..
+            } => {
+                if let Some(st) = self.arbiter.as_mut() {
+                    st.arb.observe_detect(session, aperiodic);
+                }
+            }
+            TelemetryEvent::End { session, .. } => self.arbiter_unenroll(session),
+            _ => {}
+        }
+    }
+
+    /// One arbiter step per loop iteration. Period-gating lives inside
+    /// [`BudgetArbiter::tick`], so the idle cost is one clock read and a
+    /// compare. Cap dispatch is fire-and-forget through each owning
+    /// worker's FIFO (`Cmd::SetCap`) — the reactor never blocks on it.
+    fn arbiter_tick(&mut self) {
+        let now_s = self.started.elapsed().as_secs_f64();
+        let Some(st) = self.arbiter.as_mut() else { return };
+        let Some(re) = st.arb.tick(now_s) else { return };
+        let mut gone: Vec<u64> = Vec::new();
+        for (fid, cap_w) in &re.caps {
+            let Some(sid) = st.enrolled.get(fid) else {
+                continue;
+            };
+            let sent = with_session(&self.shared, sid, |h| {
+                h.dispatch_set_cap(*cap_w, re.budget_w, re.epoch);
+                Ok(())
+            });
+            if sent.is_err() {
+                // The session left the table (end/abort raced the
+                // reallocation): retire it from arbitration.
+                gone.push(*fid);
+            }
+        }
+        if self.tel_enabled {
+            let m = self.fleet.telemetry().metrics();
+            m.set_gauge(Gauge::ArbiterBudgetW, re.budget_w);
+            m.add(Counter::ArbiterReallocations, re.changed as u64);
+        }
+        for fid in gone {
+            self.arbiter_unenroll(fid);
         }
     }
 
@@ -1306,10 +1479,15 @@ impl Reactor {
         }
     }
 
-    /// Forward queued telemetry events to their subscribe streams.
+    /// Forward queued telemetry events to their subscribe streams, and
+    /// arbiter-tagged taps to the budget arbiter's observers.
     fn drain_sub_events(&mut self) {
         while let Ok((tok, ev)) = self.sub_rx.try_recv() {
-            self.route_sub_event(tok, ev);
+            if tok & ARB_TAG != 0 {
+                self.arbiter_observe(ev);
+            } else {
+                self.route_sub_event(tok, ev);
+            }
         }
     }
 

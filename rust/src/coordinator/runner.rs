@@ -295,8 +295,8 @@ mod tests {
         fn mem_gear(&self) -> usize {
             self.0.mem_gear()
         }
-        fn set_power_limit_w(&mut self, limit_w: f64) {
-            self.0.set_power_limit_w(limit_w);
+        fn set_power_limit_w(&mut self, limit_w: f64) -> f64 {
+            self.0.set_power_limit_w(limit_w)
         }
         fn power_limit_w(&self) -> f64 {
             Device::power_limit_w(&self.0)

@@ -58,12 +58,15 @@ pub trait Device {
     fn mem_gear(&self) -> usize;
 
     /// Set the board power limit in watts (`f64::INFINITY` = uncapped) —
-    /// mirrors `nvmlDeviceSetPowerManagementLimit`. The device throttles
+    /// mirrors `nvmlDeviceSetPowerManagementLimit`. Finite requests are
+    /// clamped to the device's supported cap range and the *applied*
+    /// value is returned (callers that report or journal the cap must
+    /// use the return value, not the request). The device throttles
     /// its *effective* SM clock down to the highest gear at or below the
     /// requested one whose steady power fits under the limit; the
     /// requested gear (`sm_gear()`) is preserved and restored when the
     /// limit is lifted.
-    fn set_power_limit_w(&mut self, limit_w: f64);
+    fn set_power_limit_w(&mut self, limit_w: f64) -> f64;
 
     /// Current board power limit (`f64::INFINITY` when uncapped).
     fn power_limit_w(&self) -> f64;
@@ -166,11 +169,13 @@ mod tests {
         let s = dev.sample(0.025);
         assert!(s.power_w > 0.0);
 
-        // Power-limit surface: capping throttles, lifting restores.
+        // Power-limit surface: capping throttles (and reports what was
+        // actually applied after range clamping), lifting restores.
         assert_eq!(dev.power_limit_w(), f64::INFINITY);
-        dev.set_power_limit_w(180.0);
-        assert_eq!(dev.power_limit_w(), 180.0);
-        dev.set_power_limit_w(f64::INFINITY);
+        let applied = dev.set_power_limit_w(180.0);
+        assert!(applied.is_finite() && applied > 0.0);
+        assert_eq!(dev.power_limit_w(), applied);
+        assert_eq!(dev.set_power_limit_w(f64::INFINITY), f64::INFINITY);
         assert_eq!(dev.power_limit_w(), f64::INFINITY);
 
         assert!(!dev.profiling_active());

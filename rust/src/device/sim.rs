@@ -42,8 +42,8 @@ impl Device for SimGpu {
         SimGpu::mem_gear(self)
     }
 
-    fn set_power_limit_w(&mut self, limit_w: f64) {
-        SimGpu::set_power_limit_w(self, limit_w);
+    fn set_power_limit_w(&mut self, limit_w: f64) -> f64 {
+        SimGpu::set_power_limit_w(self, limit_w)
     }
 
     fn power_limit_w(&self) -> f64 {

@@ -1,0 +1,397 @@
+//! `gpoeo experiment arbiter-bench` — fleet power-budget arbiter
+//! benchmark (DESIGN.md §14).
+//!
+//! Two arms, same workload mix (periodic trainers plus an aperiodic
+//! donor every third slot), same virtual-time horizon per session:
+//!
+//! - **coordinated** — one in-process daemon whose default policy is
+//!   the `arbiter` family. All sessions enroll under a single global
+//!   power budget that *shrinks twice* mid-run (re-issued over the wire
+//!   via `set_policy`), forcing the water-filling allocator to squeeze
+//!   donors to the floor so latency-critical sessions keep headroom.
+//!   Journals are enabled: the budget invariant is checked afterwards
+//!   by replaying every session's `cap_change` events and summing each
+//!   epoch's full cap snapshot against the budget in force.
+//! - **uncoordinated** — the same sessions under per-session `powercap`
+//!   ladders: each one optimizes alone, nobody observes the fleet, no
+//!   global budget exists.
+//!
+//! Both arms drive each session for `rounds × STATUS_TICKS` controller
+//! ticks (equal virtual seconds), so total energy is comparable at
+//! fixed duration and "slowdown" is the per-slot ratio of uncoordinated
+//! to coordinated iterations completed. CI gates on zero cap-budget
+//! violations and coordinated total energy strictly below uncoordinated
+//! (see `cli_experiment`); every run is appended to `BENCH_arbiter.json`
+//! either way.
+//!
+//! Budgets are derived from the simulated boards' own
+//! `power_limit_range_w` so the floors always remain satisfiable: caps
+//! the arbiter requests never clamp *upwards* at the device, which
+//! would otherwise let applied power exceed a too-tight budget.
+
+use crate::api::GpoeoClient;
+use crate::coordinator::daemon::{Daemon, DaemonCfg};
+use crate::coordinator::PolicySpec;
+use crate::device::sim_device;
+use crate::policy::PolicyConfig;
+use crate::sim::{find_app, Spec};
+use crate::telemetry::{read_journal, TelemetryEvent};
+use crate::util::cli::Args;
+use crate::util::json::Json;
+use crate::util::stats::percentile;
+use crate::util::table::{s, Cell, Table};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+use std::time::Instant;
+
+/// Session app mix: two periodic trainers, then an aperiodic donor.
+const BENCH_APPS: [&str; 3] = ["AI_TS", "AI_I2T", "TSVM"];
+
+/// A target no session reaches inside the bench horizon — sessions are
+/// duration-bounded (aborted after the last round), not work-bounded.
+const ENDLESS_ITERS: u64 = 1_000_000_000;
+
+/// Arbiter re-allocation period (wall seconds). Short on purpose: the
+/// bench drives virtual time much faster than the wall clock.
+const ARB_PERIOD_S: f64 = 0.05;
+
+/// Hysteresis band for the bench arbiter (watts).
+const ARB_HYST_W: f64 = 5.0;
+
+/// One arm's raw outcome.
+struct ArmOut {
+    energy_j: f64,
+    iters: Vec<u64>,
+    reallocations: u64,
+}
+
+pub struct ArbiterBench {
+    pub table: Table,
+    pub sessions: usize,
+    pub rounds: usize,
+    pub coord_energy_j: f64,
+    pub uncoord_energy_j: f64,
+    /// coordinated / uncoordinated total energy (< 1 is a win).
+    pub energy_ratio: f64,
+    pub slowdown_p50: f64,
+    pub slowdown_p99: f64,
+    /// Epochs whose cap snapshot summed over the budget in force.
+    pub cap_violations: u64,
+    /// Distinct re-allocation epochs replayed from the journals.
+    pub epochs: u64,
+    /// `gpoeo_arbiter_reallocations_total` scraped from the daemon.
+    pub reallocations: u64,
+    pub budget_start_w: f64,
+    pub budget_final_w: f64,
+    pub wall_s: f64,
+}
+
+impl ArbiterBench {
+    pub fn print_summary(&self) {
+        println!(
+            "arbiter-bench {} sessions x {} rounds: energy {:.0} J coordinated vs {:.0} J uncoordinated (ratio {:.3})  slowdown p50 {:.2} p99 {:.2}  {} epochs  {} reallocations  {} violations  budget {:.0}->{:.0} W  ({:.2}s)",
+            self.sessions,
+            self.rounds,
+            self.coord_energy_j,
+            self.uncoord_energy_j,
+            self.energy_ratio,
+            self.slowdown_p50,
+            self.slowdown_p99,
+            self.epochs,
+            self.reallocations,
+            self.cap_violations,
+            self.budget_start_w,
+            self.budget_final_w,
+            self.wall_s
+        );
+    }
+}
+
+pub fn run(spec: &Arc<Spec>, args: &Args, quick: bool) -> anyhow::Result<ArbiterBench> {
+    let sessions = {
+        let n = args.opt_usize("sessions", 0)?;
+        if n > 0 {
+            n
+        } else if quick {
+            8
+        } else {
+            12
+        }
+    };
+    anyhow::ensure!(sessions >= 2, "arbiter-bench needs at least 2 sessions");
+    let rounds = if quick { 18 } else { 30 };
+
+    let dir = std::env::temp_dir().join(format!("gpoeo-arbiterbench-{}", std::process::id()));
+    let jdir = dir.join("journal");
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir)?;
+
+    // Budgets from the boards' own cap ranges: the floor sits just above
+    // the highest per-board minimum so requested caps never clamp up.
+    let mut lo_max = 0.0f64;
+    let mut hi_max = 0.0f64;
+    for i in 0..sessions {
+        let app = find_app(spec, BENCH_APPS[i % BENCH_APPS.len()])?;
+        let (lo, hi) = sim_device(spec, &app).power_limit_range_w();
+        lo_max = lo_max.max(lo);
+        hi_max = hi_max.max(hi);
+    }
+    let min_cap = lo_max + 1.0;
+    let max_cap = hi_max.max(min_cap);
+    let span = (max_cap - min_cap).max(0.0);
+    let nf = sessions as f64;
+    let budgets = [
+        nf * (min_cap + 0.40 * span),
+        nf * (min_cap + 0.20 * span),
+        nf * (min_cap * 1.08),
+    ];
+
+    let t0 = Instant::now();
+    let coord = run_arm(spec, &dir, sessions, rounds, &budgets, min_cap, max_cap, Some(&jdir))?;
+    let uncoord = run_arm(spec, &dir, sessions, rounds, &budgets, min_cap, max_cap, None)?;
+    let wall_s = t0.elapsed().as_secs_f64();
+
+    let (cap_violations, epochs) = replay_cap_epochs(&jdir)?;
+
+    let slowdowns: Vec<f64> = coord
+        .iters
+        .iter()
+        .zip(&uncoord.iters)
+        .map(|(c, u)| *u as f64 / (*c).max(1) as f64)
+        .collect();
+
+    let energy_ratio = coord.energy_j / uncoord.energy_j.max(1e-9);
+    let mut table = Table::new(
+        "arbiter-bench — fleet budget arbiter vs uncoordinated powercap",
+        &[
+            "arm", "sessions", "energy J", "iters", "realloc", "epochs", "violations",
+        ],
+    );
+    table.rowf(&[
+        s("coordinated"),
+        Cell::U(sessions),
+        Cell::F(coord.energy_j, 0),
+        Cell::U(coord.iters.iter().sum::<u64>() as usize),
+        Cell::U(coord.reallocations as usize),
+        Cell::U(epochs as usize),
+        Cell::U(cap_violations as usize),
+    ]);
+    table.rowf(&[
+        s("uncoordinated"),
+        Cell::U(sessions),
+        Cell::F(uncoord.energy_j, 0),
+        Cell::U(uncoord.iters.iter().sum::<u64>() as usize),
+        Cell::U(0),
+        Cell::U(0),
+        Cell::U(0),
+    ]);
+
+    let _ = std::fs::remove_dir_all(&dir);
+    Ok(ArbiterBench {
+        table,
+        sessions,
+        rounds,
+        coord_energy_j: coord.energy_j,
+        uncoord_energy_j: uncoord.energy_j,
+        energy_ratio,
+        slowdown_p50: percentile(&slowdowns, 50.0),
+        slowdown_p99: percentile(&slowdowns, 99.0),
+        cap_violations,
+        epochs,
+        reallocations: coord.reallocations,
+        budget_start_w: budgets[0],
+        budget_final_w: budgets[2],
+        wall_s,
+    })
+}
+
+/// The arbiter policy spec carrying the daemon-level knobs on the wire.
+fn arbiter_spec(budget_w: f64, min_cap_w: f64, max_cap_w: f64) -> PolicySpec {
+    let mut cfg = PolicyConfig::default();
+    cfg.opts.insert("budget_w".into(), format!("{budget_w}"));
+    cfg.opts.insert("period_s".into(), format!("{ARB_PERIOD_S}"));
+    cfg.opts.insert("min_cap_w".into(), format!("{min_cap_w}"));
+    cfg.opts.insert("max_cap_w".into(), format!("{max_cap_w}"));
+    cfg.opts.insert("hysteresis_w".into(), format!("{ARB_HYST_W}"));
+    PolicySpec::new("arbiter", cfg)
+}
+
+#[allow(clippy::too_many_arguments)]
+fn run_arm(
+    spec: &Arc<Spec>,
+    dir: &Path,
+    sessions: usize,
+    rounds: usize,
+    budgets: &[f64; 3],
+    min_cap: f64,
+    max_cap: f64,
+    jdir: Option<&PathBuf>,
+) -> anyhow::Result<ArmOut> {
+    let coordinated = jdir.is_some();
+    let arm = if coordinated { "coord" } else { "uncoord" };
+    let sock = dir.join(format!("arbiter-{arm}.sock"));
+    let daemon = Arc::new(Daemon::with_cfg(
+        spec.clone(),
+        2,
+        DaemonCfg {
+            max_workers: 4,
+            rate_limit_rps: 0.0,
+            rate_burst: 0.0,
+            journal_dir: jdir.cloned(),
+            telemetry: true,
+        },
+    ));
+    let serve = {
+        let daemon = daemon.clone();
+        let sock = sock.clone();
+        std::thread::spawn(move || daemon.serve(&sock))
+    };
+    wait_for_socket(&sock)?;
+
+    let run = || -> anyhow::Result<ArmOut> {
+        let mut c = GpoeoClient::connect(&sock)?;
+        // Default policy first, so every begin below inherits it (and,
+        // coordinated, installs the fleet arbiter in the reactor).
+        if coordinated {
+            c.set_policy(arbiter_spec(budgets[0], min_cap, max_cap))?;
+        } else {
+            c.set_policy(PolicySpec::registered("powercap"))?;
+        }
+        let mut sids = Vec::with_capacity(sessions);
+        for i in 0..sessions {
+            let app = BENCH_APPS[i % BENCH_APPS.len()];
+            sids.push(c.begin(app, Some(ENDLESS_ITERS), None, None)?);
+        }
+
+        // Equal virtual time per session and per arm: each status poll
+        // drives one STATUS_TICKS slice. The global budget shrinks at
+        // 1/3 and 2/3 of the horizon (coordinated arm only).
+        let mut iters = vec![0u64; sessions];
+        let mut energy_j = 0.0;
+        for round in 0..rounds {
+            if coordinated && round == rounds / 3 {
+                c.set_policy(arbiter_spec(budgets[1], min_cap, max_cap))?;
+            }
+            if coordinated && round == 2 * rounds / 3 {
+                c.set_policy(arbiter_spec(budgets[2], min_cap, max_cap))?;
+            }
+            for (i, sid) in sids.iter().enumerate() {
+                let r = c.status(sid)?;
+                if round == rounds - 1 {
+                    iters[i] = r.iterations;
+                    energy_j += r.energy_j;
+                }
+            }
+        }
+
+        let reallocations = if coordinated {
+            scrape_counter(&c.metrics()?, "gpoeo_arbiter_reallocations_total")
+        } else {
+            0
+        };
+        for sid in &sids {
+            c.abort(sid)?;
+        }
+        Ok(ArmOut {
+            energy_j,
+            iters,
+            reallocations,
+        })
+    };
+    let out = run();
+
+    let down = GpoeoClient::connect(&sock).and_then(|mut c| c.shutdown());
+    let served = serve.join();
+    let out = out?;
+    down?;
+    match served {
+        Ok(r) => r?,
+        Err(_) => anyhow::bail!("daemon serve thread panicked"),
+    }
+    Ok(out)
+}
+
+/// Replay every session journal and check the budget invariant: each
+/// epoch's `cap_change` events are a full snapshot of the enrolled
+/// fleet, so Σ cap_w per epoch must stay within that epoch's budget.
+/// Returns `(violations, epochs)`.
+fn replay_cap_epochs(jdir: &Path) -> anyhow::Result<(u64, u64)> {
+    let mut by_epoch: BTreeMap<u64, (f64, f64)> = BTreeMap::new();
+    for entry in std::fs::read_dir(jdir)
+        .map_err(|e| anyhow::anyhow!("journal dir {}: {e}", jdir.display()))?
+    {
+        let p = entry?.path();
+        if p.extension().map_or(true, |e| e != "jsonl") {
+            continue;
+        }
+        for ev in read_journal(&p)? {
+            if let TelemetryEvent::CapChange {
+                cap_w,
+                budget_w,
+                epoch,
+                ..
+            } = ev
+            {
+                let slot = by_epoch.entry(epoch).or_insert((0.0, budget_w));
+                slot.0 += cap_w;
+                slot.1 = budget_w;
+            }
+        }
+    }
+    let epochs = by_epoch.len() as u64;
+    let violations = by_epoch
+        .values()
+        .filter(|(sum, budget)| *sum > *budget + 1e-6)
+        .count() as u64;
+    Ok((violations, epochs))
+}
+
+/// Pull one counter's value out of Prometheus exposition text.
+fn scrape_counter(text: &str, name: &str) -> u64 {
+    text.lines()
+        .filter(|l| !l.starts_with('#'))
+        .find_map(|l| l.strip_prefix(name).and_then(|v| v.trim().parse::<f64>().ok()))
+        .map(|v| v as u64)
+        .unwrap_or(0)
+}
+
+fn wait_for_socket(sock: &PathBuf) -> anyhow::Result<()> {
+    for _ in 0..200 {
+        if sock.exists() {
+            return Ok(());
+        }
+        std::thread::sleep(std::time::Duration::from_millis(10));
+    }
+    anyhow::bail!("daemon socket {} never appeared", sock.display())
+}
+
+/// Append the run to the bench file (`runs` array — the cross-run
+/// trajectory, same shape idiom as `BENCH_api.json`).
+pub fn append_bench(path: &str, r: &ArbiterBench, quick: bool) -> anyhow::Result<()> {
+    let unix_s = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_secs() as f64)
+        .unwrap_or(0.0);
+    let mut runs = Json::bench_runs(path);
+    runs.push(Json::obj(vec![
+        ("sessions", Json::Num(r.sessions as f64)),
+        ("rounds", Json::Num(r.rounds as f64)),
+        ("coord_energy_j", Json::Num(r.coord_energy_j)),
+        ("uncoord_energy_j", Json::Num(r.uncoord_energy_j)),
+        ("energy_ratio", Json::Num(r.energy_ratio)),
+        ("slowdown_p50", Json::Num(r.slowdown_p50)),
+        ("slowdown_p99", Json::Num(r.slowdown_p99)),
+        ("cap_violations", Json::Num(r.cap_violations as f64)),
+        ("epochs", Json::Num(r.epochs as f64)),
+        ("reallocations", Json::Num(r.reallocations as f64)),
+        ("budget_start_w", Json::Num(r.budget_start_w)),
+        ("budget_final_w", Json::Num(r.budget_final_w)),
+        ("wall_clock_s", Json::Num(r.wall_s)),
+        ("quick", Json::Bool(quick)),
+        ("unix_time_s", Json::Num(unix_s)),
+    ]));
+    let doc = Json::obj(vec![("runs", Json::Arr(runs))]);
+    std::fs::write(path, doc.to_pretty())?;
+    Ok(())
+}

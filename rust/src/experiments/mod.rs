@@ -7,6 +7,7 @@
 
 pub mod ablation;
 pub mod apibench;
+pub mod arbiterbench;
 pub mod detection;
 pub mod helpers;
 pub mod motivation;
@@ -24,7 +25,7 @@ use std::sync::Arc;
 pub const EXPERIMENTS: &[&str] = &[
     "fig1", "fig2", "fig3", "fig5", "fig6", "fig7", "fig8", "fig9", "fig10", "fig11", "fig12",
     "fig13", "table3", "fig14", "fig15", "headline", "ablation", "policies", "detect-bench",
-    "predict-bench", "api-bench", "sim-bench",
+    "predict-bench", "api-bench", "sim-bench", "arbiter-bench",
 ];
 
 fn emit(t: &Table, args: &Args) -> anyhow::Result<()> {
@@ -223,6 +224,34 @@ pub fn cli_experiment(args: &Args) -> anyhow::Result<()> {
                         );
                     }
                 }
+            }
+            "arbiter-bench" => {
+                // Fleet budget arbiter vs uncoordinated powercap
+                // (DESIGN.md §14). Artifact-free (simulator + daemon), so
+                // it gates CI. The bench record is appended before any
+                // gate can fail.
+                let r = arbiterbench::run(&spec, args, quick)?;
+                emit(&r.table, args)?;
+                r.print_summary();
+                let bench_path = args.opt_or("bench", "BENCH_arbiter.json");
+                arbiterbench::append_bench(bench_path, &r, quick)?;
+                println!("bench record appended to {bench_path}");
+                anyhow::ensure!(
+                    r.cap_violations == 0,
+                    "arbiter-bench: {} epochs exceeded the budget in force (invariant: Σ caps ≤ budget, DESIGN.md §14)",
+                    r.cap_violations
+                );
+                anyhow::ensure!(
+                    r.epochs >= 3,
+                    "arbiter-bench: only {} re-allocation epochs journaled; the shrinking-budget schedule must produce at least 3",
+                    r.epochs
+                );
+                anyhow::ensure!(
+                    r.coord_energy_j < r.uncoord_energy_j,
+                    "arbiter-bench: coordinated arm used {:.0} J, not below the uncoordinated {:.0} J",
+                    r.coord_energy_j,
+                    r.uncoord_energy_j
+                );
             }
             "sim-bench" => {
                 // Model-free like detect-bench: the stepped-vs-fast-forward

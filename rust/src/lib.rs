@@ -22,12 +22,14 @@
 //!   request/response/event enums over line-delimited JSON),
 //!   `GpoeoClient`, legacy-compat client, `gpoeo ctl`
 //! - L3: `coordinator` (controller, fleet, daemon), `policy` (registry
-//!   + the bandit/power-cap families), `signal`, `search`,
-//!   `experiments` — all device-agnostic via [`device`]
+//!   + the bandit/power-cap families), [`arbiter`] (fleet power-budget
+//!   allocation), `signal`, `search`, `experiments` — all
+//!   device-agnostic via [`device`]
 //! - Device backends: [`sim`] today; NVML tomorrow
 //! - L2/L1 artifacts: built by `make artifacts`, loaded by `runtime`
 
 pub mod api;
+pub mod arbiter;
 pub mod cli;
 pub mod coordinator;
 pub mod device;

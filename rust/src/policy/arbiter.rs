@@ -1,0 +1,244 @@
+//! The `arbiter` policy family — the session-side member of the fleet
+//! power-budget arbiter (DESIGN.md §14).
+//!
+//! The policy itself makes no clock decisions: caps arrive from the
+//! daemon's [`crate::arbiter::BudgetArbiter`] through worker-side
+//! `SessionHandle` dispatch, not from this tick loop. What the member
+//! contributes is the *telemetry signal* the arbiter allocates on: it
+//! runs the model-free streaming detector over the device's sampling
+//! channel and emits one `Detect` event once the workload classifies as
+//! periodic (latency-critical) or aperiodic (throughput-insensitive,
+//! i.e. a cap donor). Iteration-rate signals need no help here — the
+//! fleet's slice-cadence `Tick` events already carry them.
+//!
+//! The daemon-level knobs (`budget_w`, `period_s`, `min_cap_w`,
+//! `max_cap_w`, `hysteresis_w`) ride in the same `set_policy {name,
+//! config}` wire message; [`arbiter_config`] is how the reactor reads
+//! them, keeping every policy-name match inside this module (§8).
+
+use super::{PolicyBuilder, PolicyConfig, PolicyCtx, PolicySpec};
+use crate::arbiter::ArbiterCfg;
+use crate::coordinator::Policy;
+use crate::device::Device;
+use crate::signal::{PeriodCfg, StreamCfg, StreamVerdict, StreamingDetector};
+use crate::telemetry::{Telemetry, TelemetryEvent};
+use std::sync::Arc;
+
+/// The registry key. Matching on this string anywhere outside the
+/// policy module violates the §8 single-construction-point contract —
+/// use [`is_arbiter`]/[`arbiter_config`] instead.
+const ARBITER_NAME: &str = "arbiter";
+
+/// Detection gives up and classifies aperiodic past these limits —
+/// mirroring the controller's `max_detect_rounds`/`max_window_s`/
+/// `aperiodic_err` defaults so both stacks agree on what "periodic"
+/// means.
+const APERIODIC_ERR: f64 = 0.35;
+const MAX_DETECT_ROUNDS: usize = 6;
+const MAX_WINDOW_S: f64 = 45.0;
+const FALLBACK_PERIOD_S: f64 = 2.5;
+
+/// Does this spec select the arbiter family? (The reactor uses this to
+/// decide enrollment without touching the name string.)
+pub fn is_arbiter(spec: &PolicySpec) -> bool {
+    spec.name == ARBITER_NAME
+}
+
+/// The daemon-level [`ArbiterCfg`] carried by an arbiter spec: `None`
+/// for any other family, `Some(Err)` when the knobs are malformed (the
+/// control plane answers a typed error before the session runs).
+pub fn arbiter_config(spec: &PolicySpec) -> Option<anyhow::Result<ArbiterCfg>> {
+    is_arbiter(spec).then(|| cfg_from(&spec.cfg))
+}
+
+/// Parse the wire knobs into an [`ArbiterCfg`]. Underscore-named per
+/// the v1 wire convention for daemon-level options.
+pub fn cfg_from(cfg: &PolicyConfig) -> anyhow::Result<ArbiterCfg> {
+    let d = ArbiterCfg::default();
+    let budget_w = cfg.opt_f64("budget_w", d.budget_w)?;
+    anyhow::ensure!(
+        budget_w.is_finite() && budget_w > 0.0,
+        "budget_w must be a positive number of watts, got {budget_w}"
+    );
+    let min_cap_w = cfg.opt_f64("min_cap_w", d.min_cap_w)?.max(0.0);
+    let max_cap_w = cfg.opt_f64("max_cap_w", d.max_cap_w)?;
+    anyhow::ensure!(
+        max_cap_w >= min_cap_w,
+        "max_cap_w ({max_cap_w}) must be >= min_cap_w ({min_cap_w})"
+    );
+    Ok(ArbiterCfg {
+        budget_w,
+        period_s: cfg.opt_f64("period_s", d.period_s)?.max(0.0),
+        min_cap_w,
+        max_cap_w,
+        hysteresis_w: cfg.opt_f64("hysteresis_w", d.hysteresis_w)?.max(0.0),
+        rate_alpha: cfg.opt_f64("rate_alpha", d.rate_alpha)?,
+        donor_ratio: cfg.opt_f64("donor_ratio", d.donor_ratio)?.clamp(0.0, 1.0),
+    })
+}
+
+/// Session-side arbiter member. Implements
+/// [`crate::coordinator::Policy`]; registered as `arbiter`.
+pub struct ArbiterPolicy {
+    ts: f64,
+    det: StreamingDetector,
+    /// `Some(aperiodic)` once the workload classified.
+    classified: Option<bool>,
+    tel: Option<(Arc<Telemetry>, u64)>,
+}
+
+impl ArbiterPolicy {
+    pub fn new(ts: f64) -> ArbiterPolicy {
+        ArbiterPolicy {
+            ts,
+            det: StreamingDetector::new(ts, PeriodCfg::default(), StreamCfg::default()),
+            classified: None,
+            tel: None,
+        }
+    }
+
+    /// `Some(true)` = aperiodic (donor), `Some(false)` = periodic,
+    /// `None` = still detecting.
+    pub fn classification(&self) -> Option<bool> {
+        self.classified
+    }
+}
+
+/// Turn a streaming verdict into a final classification, or `None` to
+/// keep listening. Same thresholds as the GPOEO controller.
+fn classify(v: &StreamVerdict) -> Option<(f64, bool)> {
+    match &v.detection {
+        Some(d) if d.next_sampling_s.is_none() && d.estimate.err <= APERIODIC_ERR => {
+            Some((d.estimate.t_iter, false))
+        }
+        det => {
+            let stable_high_err = matches!(det, Some(d) if d.next_sampling_s.is_none());
+            if v.round >= MAX_DETECT_ROUNDS || v.window_s >= MAX_WINDOW_S || stable_high_err {
+                Some((FALLBACK_PERIOD_S, true))
+            } else {
+                None
+            }
+        }
+    }
+}
+
+impl Policy for ArbiterPolicy {
+    fn name(&self) -> &'static str {
+        "arbiter"
+    }
+
+    fn attach_telemetry(&mut self, tel: Arc<Telemetry>, session: u64) {
+        self.det.attach_metrics(tel.metrics().clone());
+        self.tel = Some((tel, session));
+    }
+
+    fn tick(&mut self, dev: &mut dyn Device) {
+        dev.advance(self.ts);
+        if self.classified.is_some() {
+            return;
+        }
+        let inst = dev.sample(self.ts);
+        self.det.push(inst.power_w, inst.util_sm, inst.util_mem);
+        let Some(v) = self.det.poll() else {
+            return;
+        };
+        let Some((period_s, aperiodic)) = classify(&v) else {
+            return;
+        };
+        self.classified = Some(aperiodic);
+        if let Some((tel, session)) = &self.tel {
+            if tel.enabled() {
+                tel.emit(TelemetryEvent::Detect {
+                    session: *session,
+                    period_s,
+                    aperiodic,
+                    round: v.round as u64,
+                });
+            }
+        }
+    }
+}
+
+pub struct ArbiterBuilder;
+
+impl PolicyBuilder for ArbiterBuilder {
+    fn name(&self) -> &'static str {
+        ARBITER_NAME
+    }
+
+    fn describe(&self) -> &'static str {
+        "fleet budget-arbiter member: streaming periodic/aperiodic classification; caps arrive from the daemon's BudgetArbiter"
+    }
+
+    fn default_config(&self) -> String {
+        let c = ArbiterCfg::default();
+        format!(
+            "budget_w={} period_s={} min_cap_w={} max_cap_w={} hysteresis_w={} (daemon-level) ts=0.025",
+            c.budget_w, c.period_s, c.min_cap_w, c.max_cap_w, c.hysteresis_w
+        )
+    }
+
+    fn build(&self, _ctx: &PolicyCtx, cfg: &PolicyConfig) -> anyhow::Result<Box<dyn Policy>> {
+        // Validate the daemon-level knobs even worker-side, so a bad
+        // config fails the begin/set_policy instead of running silently
+        // with defaults.
+        let _ = cfg_from(cfg)?;
+        Ok(Box::new(ArbiterPolicy::new(cfg.opt_f64("ts", 0.025)?)))
+    }
+}
+
+#[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
+mod tests {
+    use super::*;
+    use crate::device::sim_device;
+    use crate::sim::{find_app, Spec};
+
+    fn classify_app(name: &str) -> Option<bool> {
+        let spec = Arc::new(Spec::load_default().unwrap());
+        let app = find_app(&spec, name).unwrap();
+        let mut dev = sim_device(&spec, &app);
+        let mut pol = ArbiterPolicy::new(0.025);
+        // 60 virtual seconds: past the detector's give-up window, so
+        // every workload classifies one way or the other.
+        for _ in 0..2400 {
+            pol.tick(&mut dev);
+            if pol.classification().is_some() {
+                break;
+            }
+        }
+        pol.classification()
+    }
+
+    #[test]
+    fn periodic_and_aperiodic_workloads_classify() {
+        assert_eq!(classify_app("AI_TS"), Some(false), "AI_TS is periodic");
+        assert_eq!(classify_app("TSVM"), Some(true), "TSVM is aperiodic");
+    }
+
+    #[test]
+    fn wire_knobs_parse_and_validate() {
+        let spec = PolicySpec::registered("arbiter");
+        assert!(is_arbiter(&spec));
+        let cfg = arbiter_config(&spec).unwrap().unwrap();
+        assert_eq!(cfg, ArbiterCfg::default());
+        assert!(arbiter_config(&PolicySpec::registered("powercap")).is_none());
+
+        let mut pc = PolicyConfig::default();
+        pc.opts.insert("budget_w".into(), "600".into());
+        pc.opts.insert("period_s".into(), "0.05".into());
+        pc.opts.insert("min_cap_w".into(), "60".into());
+        pc.opts.insert("hysteresis_w".into(), "5".into());
+        let c = cfg_from(&pc).unwrap();
+        assert_eq!(c.budget_w, 600.0);
+        assert_eq!(c.period_s, 0.05);
+        assert_eq!(c.min_cap_w, 60.0);
+        assert_eq!(c.hysteresis_w, 5.0);
+
+        pc.opts.insert("budget_w".into(), "-5".into());
+        assert!(cfg_from(&pc).is_err(), "negative budget rejected");
+        pc.opts.insert("budget_w".into(), "600".into());
+        pc.opts.insert("max_cap_w".into(), "10".into());
+        assert!(cfg_from(&pc).is_err(), "max below min rejected");
+    }
+}

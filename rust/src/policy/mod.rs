@@ -16,6 +16,7 @@
 //! | `odpp`     | the ODPP baseline                                      |
 //! | `bandit`   | switching-aware UCB/EXP3 over a pruned gear ladder     |
 //! | `powercap` | Zeus-style power-cap ladder over `Device` power limits |
+//! | `arbiter`  | fleet budget-arbiter member (caps arrive daemon-side)  |
 //!
 //! Construction is split in two so non-`Send` predictors stay worker-
 //! local: a [`PolicySpec`] (name + [`PolicyConfig`]) is `Send + Clone`
@@ -25,9 +26,11 @@
 //! policy actually needs one (the bandit and power-cap families are
 //! model-free).
 
+pub mod arbiter;
 pub mod bandit;
 pub mod powercap;
 
+pub use arbiter::ArbiterPolicy;
 pub use bandit::{Bandit, BanditAlgo, BanditCfg};
 pub use powercap::{PowerCap, PowerCapCfg};
 
@@ -291,6 +294,7 @@ impl PolicyRegistry {
                 Box::new(OdppBuilder),
                 Box::new(bandit::BanditBuilder),
                 Box::new(powercap::PowerCapBuilder),
+                Box::new(arbiter::ArbiterBuilder),
             ],
         }
     }
@@ -437,7 +441,7 @@ mod tests {
     fn registry_names_are_unique_and_complete() {
         let reg = PolicyRegistry::standard();
         let names = reg.names();
-        for expect in ["default", "gpoeo", "odpp", "bandit", "powercap"] {
+        for expect in ["default", "gpoeo", "odpp", "bandit", "powercap", "arbiter"] {
             assert!(names.contains(&expect), "missing {expect}");
         }
         let mut dedup = names.clone();

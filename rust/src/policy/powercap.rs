@@ -115,12 +115,13 @@ impl PowerCap {
         }
     }
 
-    /// Apply a cap and mirror it to the power-limit gauge. An uncapped
-    /// cap reports the measured baseline power (gauges stay finite).
+    /// Apply a cap and mirror the *applied* (range-clamped) value to
+    /// the power-limit gauge. An uncapped cap reports the measured
+    /// baseline power (gauges stay finite).
     fn apply_cap(&mut self, dev: &mut dyn Device, cap_w: f64) {
-        dev.set_power_limit_w(cap_w);
+        let applied = dev.set_power_limit_w(cap_w);
         if let Some((tel, _)) = &self.tel {
-            let shown = if cap_w.is_finite() { cap_w } else { self.p_base };
+            let shown = if applied.is_finite() { applied } else { self.p_base };
             tel.metrics().set_gauge(Gauge::PowerLimitW, shown);
         }
     }

@@ -142,22 +142,54 @@ impl SimGpu {
         self.recompute_throttle();
     }
 
-    /// Set the board power limit (watts). `f64::INFINITY` (or NaN, or
-    /// any non-positive value) lifts the cap. The effective SM clock
-    /// throttles immediately; the requested gear is kept and restored
-    /// when the limit allows.
-    pub fn set_power_limit_w(&mut self, limit_w: f64) {
-        self.power_limit_w = if limit_w.is_nan() || limit_w <= 0.0 {
+    /// Set the board power limit (watts), clamped to the device's
+    /// supported [`SimGpu::power_limit_range_w`] and returning the
+    /// applied value — mirroring `nvmlDeviceSetPowerManagementLimit`,
+    /// which bounds requests by the board's management-limit
+    /// constraints (we clamp instead of erroring). `f64::INFINITY` (or
+    /// NaN, or any non-positive value) lifts the cap and is stored as
+    /// `f64::INFINITY` unclamped, keeping the uncapped path bit-
+    /// identical to a device that never touched this API. The
+    /// effective SM clock throttles immediately; the requested gear is
+    /// kept and restored when the limit allows.
+    pub fn set_power_limit_w(&mut self, limit_w: f64) -> f64 {
+        self.power_limit_w = if !limit_w.is_finite() || limit_w <= 0.0 {
             f64::INFINITY
         } else {
-            limit_w
+            let (lo, hi) = self.power_limit_range_w();
+            limit_w.clamp(lo, hi)
         };
         self.recompute_throttle();
+        self.power_limit_w
     }
 
     /// Current board power limit (`f64::INFINITY` when uncapped).
     pub fn power_limit_w(&self) -> f64 {
         self.power_limit_w
+    }
+
+    /// The meaningful cap range `[lo, hi]` for this device+workload:
+    /// `lo` is the lowest steady power any operating point can reach
+    /// (floor SM gear, best memory gear) and `hi` the highest (top SM
+    /// gear, worst memory gear). Caps below `lo` cannot throttle any
+    /// deeper than the floor gear already does, and caps above `hi`
+    /// never throttle at all — so clamping to this range preserves the
+    /// throttle walk bit-for-bit (see the property test).
+    pub fn power_limit_range_w(&self) -> (f64, f64) {
+        let gears = &self.spec.gears;
+        let mut lo = f64::INFINITY;
+        let mut hi = 0.0f64;
+        for mem in 0..gears.num_mem_gears() {
+            let floor = self.app.op_point(&self.spec, gears.sm_gear_min, mem).power_w;
+            let top = self.app.op_point(&self.spec, gears.sm_gear_max, mem).power_w;
+            if floor < lo {
+                lo = floor;
+            }
+            if top > hi {
+                hi = top;
+            }
+        }
+        (lo, hi)
     }
 
     /// The SM gear the hardware actually runs at: the requested gear,
@@ -698,6 +730,51 @@ mod tests {
         // The integral form of the cap: E ≤ limit × time.
         assert!(capped.true_energy_j() <= cap * capped.time_s() + 1e-6);
         assert!(capped.true_period() > free.true_period());
+    }
+
+    #[test]
+    fn clamped_caps_apply_and_preserve_the_throttle_walk() {
+        // Property (DESIGN.md §14): set_power_limit_w clamps to the
+        // device's supported range and returns the applied value, and
+        // the clamp never changes the effective SM gear a raw
+        // (unclamped) throttle walk would pick — out-of-range requests
+        // were already saturated at the floor/top gear, so clamping
+        // preserves the PR 2 capped/uncapped behavior bit-for-bit.
+        for name in ["AI_I2T", "AI_TS", "TSVM", "SBM_GIN"] {
+            let mut g = gpu(name);
+            let (lo, hi) = g.power_limit_range_w();
+            assert!(lo > 0.0 && lo <= hi, "{name}: range ({lo}, {hi})");
+            for mem in 0..g.spec.gears.num_mem_gears() {
+                g.set_mem_gear(mem);
+                for sm in [114usize, 96, 70, 40, 16] {
+                    g.set_sm_gear(sm);
+                    for req in [1.0, lo * 0.5, lo, 0.5 * (lo + hi), hi, hi * 2.0, 1e6] {
+                        let applied = g.set_power_limit_w(req);
+                        assert_eq!(applied, req.clamp(lo, hi), "{name} req {req}");
+                        assert_eq!(g.power_limit_w(), applied);
+                        // The raw-request reference walk (the PR 2
+                        // contract, pre-clamping).
+                        let mut eff = g.sm_gear();
+                        while eff > g.spec.gears.sm_gear_min
+                            && g.app.op_point(&g.spec, eff, mem).power_w > req
+                        {
+                            eff -= 1;
+                        }
+                        assert_eq!(
+                            g.effective_sm_gear(),
+                            eff,
+                            "{name} mem {mem} sm {sm} req {req}"
+                        );
+                    }
+                }
+            }
+            // Lifting requests store INFINITY unclamped — bit-identical
+            // to never capping (uncapped_behavior_is_bit_identical).
+            for req in [f64::INFINITY, f64::NAN, 0.0, -5.0, f64::NEG_INFINITY] {
+                assert_eq!(g.set_power_limit_w(req), f64::INFINITY);
+            }
+            assert_eq!(g.power_limit_w(), f64::INFINITY);
+        }
     }
 
     #[test]

@@ -39,6 +39,8 @@ pub enum Counter {
     SessionsBegun,
     /// Sessions driven to completion on the fleet.
     SessionsEnded,
+    /// Budget-arbiter cap re-allocations applied to sessions.
+    ArbiterReallocations,
 }
 
 const COUNTERS: &[(Counter, &str, &str)] = &[
@@ -97,6 +99,11 @@ const COUNTERS: &[(Counter, &str, &str)] = &[
         "gpoeo_sessions_ended_total",
         "Sessions driven to completion on the fleet",
     ),
+    (
+        Counter::ArbiterReallocations,
+        "gpoeo_arbiter_reallocations_total",
+        "Budget-arbiter cap re-allocations applied to sessions",
+    ),
 ];
 
 /// Last-observed-value gauges.
@@ -118,6 +125,8 @@ pub enum Gauge {
     AimdDepthEwma,
     /// Request arrival rate over the trailing window (req/s).
     RequestRateHz,
+    /// Fleet power budget under arbitration (watts).
+    ArbiterBudgetW,
 }
 
 const GAUGES: &[(Gauge, &str, &str)] = &[
@@ -156,6 +165,11 @@ const GAUGES: &[(Gauge, &str, &str)] = &[
         Gauge::RequestRateHz,
         "gpoeo_request_rate_hz",
         "Request arrival rate over the trailing window",
+    ),
+    (
+        Gauge::ArbiterBudgetW,
+        "gpoeo_arbiter_budget_w",
+        "Fleet power budget under arbitration (watts)",
     ),
 ];
 
@@ -207,6 +221,10 @@ pub struct Metrics {
     /// Per-policy gear-switch counts; rare events, so a mutexed map is
     /// fine (and keeps label cardinality = registered policy names).
     gear_switches: Mutex<BTreeMap<String, u64>>,
+    /// Per-session arbiter cap (watts); cap changes are arbiter-period
+    /// events and entries die with their session, so the mutexed map
+    /// holds only live-session cardinality.
+    session_caps: Mutex<BTreeMap<u64, f64>>,
 }
 
 impl Default for Metrics {
@@ -231,6 +249,7 @@ impl Metrics {
                 })
                 .collect(),
             gear_switches: Mutex::new(BTreeMap::new()),
+            session_caps: Mutex::new(BTreeMap::new()),
         }
     }
 
@@ -313,6 +332,24 @@ impl Metrics {
         m.get(policy).copied().unwrap_or(0)
     }
 
+    /// Record the arbiter cap currently applied to `session` (watts).
+    pub fn set_session_cap(&self, session: u64, cap_w: f64) {
+        let mut m = self.session_caps.lock().unwrap_or_else(|e| e.into_inner());
+        m.insert(session, cap_w);
+    }
+
+    /// Drop a session's cap gauge when it leaves the fleet, keeping the
+    /// label set bounded by live sessions.
+    pub fn remove_session_cap(&self, session: u64) {
+        let mut m = self.session_caps.lock().unwrap_or_else(|e| e.into_inner());
+        m.remove(&session);
+    }
+
+    pub fn session_cap(&self, session: u64) -> Option<f64> {
+        let m = self.session_caps.lock().unwrap_or_else(|e| e.into_inner());
+        m.get(&session).copied()
+    }
+
     /// Render the whole registry in Prometheus text exposition format.
     /// Deterministic: declaration order for families, BTreeMap order for
     /// labels.
@@ -338,6 +375,17 @@ impl Metrics {
             out.push_str(&format!("# HELP {name} {help}\n"));
             out.push_str(&format!("# TYPE {name} gauge\n"));
             out.push_str(&format!("{name} {v}\n"));
+        }
+        {
+            let name = "gpoeo_session_cap_w";
+            out.push_str(&format!(
+                "# HELP {name} Arbiter power cap currently applied, by session (watts)\n"
+            ));
+            out.push_str(&format!("# TYPE {name} gauge\n"));
+            let m = self.session_caps.lock().unwrap_or_else(|e| e.into_inner());
+            for (session, v) in m.iter() {
+                out.push_str(&format!("{name}{{session=\"{session}\"}} {v}\n"));
+            }
         }
         for (i, (_, name, help, bounds)) in HISTS.iter().enumerate() {
             let slot = &self.hists[i];
@@ -399,6 +447,23 @@ mod tests {
         let text = m.render_prometheus();
         assert!(text.contains("gpoeo_gear_switches_total{policy=\"bandit\"} 2"));
         assert!(text.contains("gpoeo_gear_switches_total{policy=\"gpoeo\"} 1"));
+    }
+
+    #[test]
+    fn session_caps_render_with_session_labels_until_removed() {
+        let m = Metrics::new();
+        m.set_session_cap(3, 180.0);
+        m.set_session_cap(11, 92.5);
+        assert_eq!(m.session_cap(3), Some(180.0));
+        let text = m.render_prometheus();
+        assert!(text.contains("gpoeo_session_cap_w{session=\"3\"} 180"));
+        assert!(text.contains("gpoeo_session_cap_w{session=\"11\"} 92.5"));
+        m.remove_session_cap(3);
+        assert_eq!(m.session_cap(3), None);
+        let text = m.render_prometheus();
+        assert!(!text.contains("session=\"3\""));
+        assert!(text.contains("gpoeo_arbiter_budget_w"));
+        assert!(text.contains("gpoeo_arbiter_reallocations_total"));
     }
 
     #[test]

@@ -76,6 +76,18 @@ pub enum TelemetryEvent {
         mem_gear: usize,
         time_s: f64,
     },
+    /// The budget arbiter applied a new power cap to the session
+    /// (worker-side, DESIGN.md §14). `budget_w` and `epoch` identify
+    /// the fleet-wide re-allocation this cap belongs to: every cap of
+    /// one epoch is journaled, so replay can check
+    /// Σ cap_w ≤ budget_w per epoch.
+    CapChange {
+        session: u64,
+        cap_w: f64,
+        budget_w: f64,
+        epoch: u64,
+        time_s: f64,
+    },
     /// Session left the fleet (completed or aborted).
     End {
         session: u64,
@@ -94,6 +106,7 @@ impl TelemetryEvent {
             | TelemetryEvent::Tick { session, .. }
             | TelemetryEvent::Detect { session, .. }
             | TelemetryEvent::GearSwitch { session, .. }
+            | TelemetryEvent::CapChange { session, .. }
             | TelemetryEvent::End { session, .. } => *session,
         }
     }
@@ -104,6 +117,7 @@ impl TelemetryEvent {
             TelemetryEvent::Tick { .. } => "tick",
             TelemetryEvent::Detect { .. } => "detect",
             TelemetryEvent::GearSwitch { .. } => "gear_switch",
+            TelemetryEvent::CapChange { .. } => "cap_change",
             TelemetryEvent::End { .. } => "end",
         }
     }
@@ -166,6 +180,20 @@ impl TelemetryEvent {
                 ("mem_gear", Json::Num(*mem_gear as f64)),
                 ("time_s", Json::Num(*time_s)),
             ]),
+            TelemetryEvent::CapChange {
+                session,
+                cap_w,
+                budget_w,
+                epoch,
+                time_s,
+            } => Json::obj(vec![
+                ("event", Json::Str("cap_change".into())),
+                ("session", Json::Num(*session as f64)),
+                ("cap_w", Json::Num(*cap_w)),
+                ("budget_w", Json::Num(*budget_w)),
+                ("epoch", Json::Num(*epoch as f64)),
+                ("time_s", Json::Num(*time_s)),
+            ]),
             TelemetryEvent::End {
                 session,
                 iterations,
@@ -216,6 +244,13 @@ impl TelemetryEvent {
                 mem_gear: j.req_u64("mem_gear")? as usize,
                 time_s: j.req_f64("time_s")?,
             }),
+            "cap_change" => Ok(TelemetryEvent::CapChange {
+                session: j.req_u64("session")?,
+                cap_w: j.req_f64("cap_w")?,
+                budget_w: j.req_f64("budget_w")?,
+                epoch: j.req_u64("epoch")?,
+                time_s: j.req_f64("time_s")?,
+            }),
             "end" => Ok(TelemetryEvent::End {
                 session: j.req_u64("session")?,
                 iterations: j.req_u64("iterations")?,
@@ -224,7 +259,7 @@ impl TelemetryEvent {
                 done: j.req_bool("done")?,
             }),
             other => anyhow::bail!(
-                "unknown journal event kind '{other}' (begin tick detect gear_switch end)"
+                "unknown journal event kind '{other}' (begin tick detect gear_switch cap_change end)"
             ),
         }
     }
@@ -511,6 +546,13 @@ mod tests {
                 sm_gear: 5,
                 mem_gear: 1,
                 time_s: 12.5,
+            },
+            TelemetryEvent::CapChange {
+                session: 1,
+                cap_w: 212.5,
+                budget_w: 600.0,
+                epoch: 4,
+                time_s: 13.25,
             },
             TelemetryEvent::End {
                 session: 1,
